@@ -1,0 +1,74 @@
+//! Error analysis walkthrough (E2/E3/E6): exhaustive metrics, closed-form
+//! MAE comparison, and the Sec. V-B probability-propagation estimator.
+//!
+//! Run: `cargo run --release --example error_analysis`
+
+use segmul::error::closed_form;
+use segmul::error::exhaustive::exhaustive_stats;
+use segmul::error::montecarlo::{mc_stats, McConfig};
+use segmul::error::probprop;
+
+fn main() {
+    // --- exhaustive sweep over t at n = 10 ------------------------------
+    let n = 10u32;
+    println!("exhaustive error metrics, n = {n} (2^20 input pairs per row):");
+    println!(
+        "{:>3} {:>5} {:>10} {:>12} {:>9} {:>11} {:>11}",
+        "t", "fix", "ER", "MED|ED|", "MAE", "NMED", "MRED"
+    );
+    for t in 1..=n / 2 {
+        for fix in [false, true] {
+            let m = exhaustive_stats(n, t, fix).metrics();
+            println!(
+                "{:>3} {:>5} {:>10.6} {:>12.3} {:>9} {:>11.3e} {:>11.3e}",
+                t, fix, m.er, m.med_abs, m.mae, m.nmed, m.mred
+            );
+        }
+    }
+
+    // --- Eq. 11 vs measurement (the E3 finding) -------------------------
+    println!("\nEq. 11 closed-form MAE vs exhaustive measurement (fix off):");
+    println!("{:>3} {:>3} {:>10} {:>12} {:>12}", "n", "t", "Eq.11", "measured", "2^(n+t-1)");
+    for n in [6u32, 8, 10] {
+        for t in [n / 4, n / 2] {
+            let meas = exhaustive_stats(n, t, false).max_abs_ed;
+            println!(
+                "{:>3} {:>3} {:>10} {:>12} {:>12}",
+                n,
+                t,
+                closed_form::mae_eq11(n, t),
+                meas,
+                closed_form::mae_measured_nofix(n, t)
+            );
+        }
+    }
+    println!("-> the dropped final LSP carry alone reaches 2^(n+t-1); Eq. 11's");
+    println!("   -2^(t+1) rebate does not apply to that event (EXPERIMENTS.md E3).");
+
+    // --- estimator vs ground truth (E6) ----------------------------------
+    println!("\nSec. V-B probability propagation vs exhaustive ER:");
+    println!("{:>3} {:>3} {:>12} {:>12} {:>9}", "n", "t", "ER exact", "ER est", "rel err");
+    for n in [6u32, 8, 10] {
+        for t in 1..=n / 2 {
+            let exact = exhaustive_stats(n, t, false).metrics().er;
+            let est = probprop::propagate(n, t).er_estimate();
+            println!(
+                "{:>3} {:>3} {:>12.6} {:>12.6} {:>8.1}%",
+                n,
+                t,
+                exact,
+                est,
+                100.0 * (est - exact).abs() / exact
+            );
+        }
+    }
+
+    // --- MC vs exhaustive sanity -----------------------------------------
+    let (n, t) = (12u32, 6u32);
+    let exact = exhaustive_stats(n, t, true).metrics();
+    let mc = mc_stats(n, t, true, &McConfig::uniform(1 << 20, 0xF00D)).metrics();
+    println!("\nMC (2^20 samples) vs exhaustive at n={n}, t={t}, fix:");
+    println!("  ER  : {:.6} vs {:.6}", mc.er, exact.er);
+    println!("  MED : {:.2} vs {:.2}", mc.med_abs, exact.med_abs);
+    println!("  MRED: {:.4e} vs {:.4e}", mc.mred, exact.mred);
+}

@@ -1,0 +1,35 @@
+//! Hardware trade-off sweep (Fig. 3a / Fig. 3b / headline claims) on the
+//! FPGA and ASIC technology models.
+//!
+//! Run: `cargo run --release --example hardware_tradeoffs`
+//! (reduced vector count; `segmul figures fig3a --hw-vectors 65536` for
+//! the paper-scale run)
+
+use segmul::config::Config;
+use segmul::report;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.hw_bitwidths = vec![4, 8, 16, 32, 64, 128];
+    cfg.hw_vectors = 1 << 10;
+    cfg.results_dir = "results".into();
+
+    println!("== Fig. 3a: FPGA (LUT6 + carry-chain model) ==");
+    let t = report::fig3a(&cfg)?;
+    println!("{}", t.to_text());
+
+    println!("== Fig. 3b: ASIC (45nm-class cell model) ==");
+    let t = report::fig3b(&cfg)?;
+    println!("{}", t.to_text());
+
+    println!("== Sec. V-D headline claims vs paper ==");
+    let t = report::headline(&cfg)?;
+    println!("{}", t.to_text());
+
+    println!("== Sec. III: sequential vs combinational crossover ==");
+    let t = report::seqcomb(&cfg)?;
+    println!("{}", t.to_text());
+
+    println!("CSVs in ./results/");
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the segmented-carry sequential multiplier in five minutes.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use segmul::error::closed_form;
+use segmul::error::exhaustive::exhaustive_stats;
+use segmul::error::probprop;
+use segmul::multiplier::{Multiplier, SegmentedSeqMul};
+
+fn main() {
+    // --- 1. A single approximate multiply -------------------------------
+    // The paper's Table IIb example: 11 x 6 at n = 4 with the carry chain
+    // split at t = 2. The LSP carry of cycle 2 is deferred one cycle by
+    // the D flip-flop and lands one position high: 82 instead of 66.
+    let m = SegmentedSeqMul::new(4, 2, false);
+    println!(
+        "{}: 11 x 6 = {} (exact 66, ED = {})",
+        m.name(),
+        m.mul(11, 6),
+        66i64 - m.mul(11, 6) as i64
+    );
+
+    // --- 2. Accuracy is configurable via t ------------------------------
+    println!("\nexhaustive metrics at n = 8 (all 65 536 input pairs):");
+    println!("{:>3} {:>10} {:>12} {:>8} {:>12}", "t", "ER", "MED|ED|", "MAE", "MRED");
+    for t in 0..=4u32 {
+        let s = exhaustive_stats(8, t, t >= 1).metrics();
+        println!("{:>3} {:>10.6} {:>12.4} {:>8} {:>12.3e}", t, s.er, s.med_abs, s.mae, s.mred);
+    }
+    println!("(t = 0 is the fully accurate sequential multiplier)");
+
+    // --- 3. Closed forms & estimates ------------------------------------
+    let (n, t) = (8u32, 4u32);
+    println!("\nclosed forms at n={n}, t={t}:");
+    println!("  Eq. 11 MAE             = {}", closed_form::mae_eq11(n, t));
+    println!(
+        "  measured closed form   = {} (= 2^(n+t-1))",
+        closed_form::mae_measured_nofix(n, t)
+    );
+    println!("  exhaustive MAE (nofix) = {}", exhaustive_stats(n, t, false).max_abs_ed);
+    let lat = probprop::propagate(n, t);
+    println!("  ER estimate (Sec V-B)  = {:.4}", lat.er_estimate());
+    println!("  ER exhaustive          = {:.4}", exhaustive_stats(n, t, false).metrics().er);
+
+    // --- 4. Why bother: the hardware win --------------------------------
+    println!("\ncarry-chain length (the critical path driver):");
+    for n in [8u32, 16, 32, 64] {
+        println!(
+            "  n={n:>3}: accurate {} bits -> segmented (t=n/2) {} bits",
+            closed_form::accurate_chain_bits(n),
+            closed_form::segmented_chain_bits(n, n / 2)
+        );
+    }
+    println!("\nsee `cargo run --release --example hardware_tradeoffs` for the full Fig. 3 sweep");
+}

@@ -1,0 +1,100 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the Rust PJRT runtime.
+
+Run once by `make artifacts`; python never executes on the request path.
+
+Interchange format is HLO text, NOT `.serialize()` / serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The
+text parser reassigns ids and round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Emits, per bit-width n in {4, 8, 16, 32}:
+  artifacts/seqmul_stats_n{n}.hlo.txt — eval_stats  (the service hot path)
+  artifacts/seqmul_prod_n{n}.hlo.txt  — eval_products (value-returning path)
+plus artifacts/manifest.json describing shapes/dtypes for the Rust loader.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import eval_products, eval_stats, stats_len  # noqa: E402
+
+BITWIDTHS = (4, 8, 16, 32)
+BATCH = 65536
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_module(fn, n: int, batch: int) -> str:
+    vec = jax.ShapeDtypeStruct((batch,), jnp.uint64)
+    scalar = jax.ShapeDtypeStruct((), jnp.uint64)
+    lowered = jax.jit(functools.partial(fn, n=n)).lower(vec, vec, scalar, scalar)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    ap.add_argument(
+        "--bitwidths", type=int, nargs="*", default=list(BITWIDTHS)
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest = {"batch": args.batch, "modules": []}
+    for n in args.bitwidths:
+        for kind, fn in (("stats", eval_stats), ("prod", eval_products)):
+            name = f"seqmul_{kind}_n{n}"
+            path = os.path.join(args.outdir, f"{name}.hlo.txt")
+            text = lower_module(fn, n, args.batch)
+            with open(path, "w") as f:
+                f.write(text)
+            out = (
+                {"dtype": "f64", "shape": [stats_len(n)]}
+                if kind == "stats"
+                else {"dtype": "u64", "shape": [args.batch]}
+            )
+            manifest["modules"].append(
+                {
+                    "name": name,
+                    "kind": kind,
+                    "n": n,
+                    "file": os.path.basename(path),
+                    "inputs": [
+                        {"name": "a", "dtype": "u64", "shape": [args.batch]},
+                        {"name": "b", "dtype": "u64", "shape": [args.batch]},
+                        {"name": "t", "dtype": "u64", "shape": []},
+                        {"name": "fix", "dtype": "u64", "shape": []},
+                    ],
+                    "output": out,
+                }
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.outdir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

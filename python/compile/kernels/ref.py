@@ -1,0 +1,94 @@
+"""Correctness oracles for the segmented-carry sequential multiplier.
+
+Two independent references:
+
+* `seqmul_ref` — the pure-jnp word-level recurrence (no Pallas), used by
+  pytest to check the kernel's lowering.
+* `seqmul_bitlevel` — a literal, bit-by-bit transcription of the paper's
+  `Ŝ_i^j` / `Ĉ_i^j` equations (§IV-A) over python ints. This is the ground
+  truth the word-level model must match; it is deliberately written from the
+  equations (not from the word-level algorithm) so the two can disagree if
+  either mis-reads the paper.
+"""
+
+from __future__ import annotations
+
+from .seqmul import seqmul_word
+
+
+def seqmul_ref(a, b, t, fix, *, n):
+    """Pure-jnp oracle (identical math to the kernel, no pallas_call)."""
+    return seqmul_word(a, b, t, fix, n=n)
+
+
+def seqmul_bitlevel(a: int, b: int, n: int, t: int, fix: bool) -> int:
+    """Paper's Boolean recurrences, evaluated literally bit by bit.
+
+    S[j][i] for i in [0, n] is the j-th accumulated sum (S[j][n] is the
+    carry-out C_{n-1}^j per the paper); C[j][i] for i in [0, n) is the j-th
+    carry chain. The approximate cases:
+      * i = t (t >= 1): carry-in is the D-FF'd previous-cycle LSP carry-out
+        C[j-1][t-1]  (the paper's `Ĉ_{i-1}^{j-1}` case),
+      * all other i in (0, n): same-cycle ripple carry C[j][i-1].
+    t = 0 yields the fully accurate multiplier.
+    """
+    if not (1 <= n):
+        raise ValueError("n must be >= 1")
+    if not (0 <= t <= n):
+        raise ValueError("t must be in [0, n]")
+    abit = [(a >> i) & 1 for i in range(n)]
+    bbit = [(b >> j) & 1 for j in range(n)]
+
+    S = [[0] * (n + 1) for _ in range(n)]
+    C = [[0] * n for _ in range(n)]
+
+    # j = 0: S^0 = a & -b_0, no carries (paper: C_i^0 = 0).
+    for i in range(n):
+        S[0][i] = abit[i] & bbit[0]
+    S[0][n] = 0
+
+    for j in range(1, n):
+        pp0 = abit[0] & bbit[j]
+        S[j][0] = S[j - 1][1] ^ pp0
+        C[j][0] = S[j - 1][1] & pp0
+        for i in range(1, n):
+            pp = abit[i] & bbit[j]
+            if i == t:
+                cin = C[j - 1][t - 1]  # D flip-flop: previous cycle's carry
+            else:
+                cin = C[j][i - 1]  # same-cycle ripple
+            S[j][i] = S[j - 1][i + 1] ^ cin ^ pp
+            C[j][i] = ((S[j - 1][i + 1] ^ pp) & cin) | (S[j - 1][i + 1] & pp)
+        S[j][n] = C[j][n - 1]
+
+    # Product construction (paper's p̂_r cases).
+    p = 0
+    for r in range(0, n - 1):
+        p |= S[r][0] << r
+    for r in range(n - 1, 2 * n):
+        p |= S[n - 1][r - n + 1] << r
+
+    if fix and t >= 1 and n >= 2 and C[n - 1][t - 1] == 1:
+        p |= (1 << (n + t)) - 1
+    return p
+
+
+def seqmul_py(a: int, b: int, n: int, t: int, fix: bool) -> int:
+    """Word-level algorithm over python ints (third, independent check)."""
+    mt = (1 << t) - 1
+    s = a if (b & 1) else 0
+    cff = 0
+    low = 0
+    for j in range(1, n):
+        low |= (s & 1) << (j - 1)
+        x = s >> 1
+        pp = a if ((b >> j) & 1) else 0
+        lsum = (x & mt) + (pp & mt)
+        clsp = (lsum >> t) & 1
+        msum = (x >> t) + (pp >> t) + cff
+        s = (msum << t) | (lsum & mt)
+        cff = clsp
+    phat = (s << (n - 1)) | low
+    if fix and cff == 1:
+        phat |= (1 << (n + t)) - 1
+    return phat

@@ -1,0 +1,136 @@
+"""L1 — Pallas kernel: batched segmented-carry sequential multiplier.
+
+Implements the paper's approximate sequential multiplier (Echavarria et al.,
+"On the Approximation of Accuracy-configurable Sequential Multipliers via
+Segmented Carry Chains", 2021) as a word-level recurrence that is bit-exact
+to the paper's `Ŝ_i^j` / `Ĉ_i^j` equations (§IV-A):
+
+  per clock cycle j = 1 .. n-1 (cycle 0 loads `a & -b_0`):
+    x    = s >> 1                         # previous sum, shifted right once
+    pp   = b_j ? a : 0                    # partial product
+    lsum = (x & M_t) + (pp & M_t)         # t-bit LSP adder (carry-in 0)
+    msum = (x >> t) + (pp >> t) + cff     # (n-t)-bit MSP adder; carry-in is
+                                          #   the D-FF'd LSP carry-out of the
+                                          #   PREVIOUS cycle (the paper's
+                                          #   i = t case using Ĉ_{t-1}^{j-1})
+    s'   = (msum << t) | (lsum & M_t)     # (n+1)-bit accumulated sum
+    cff' = (lsum >> t) & 1                # LSP carry-out into the D-FF
+  and product bit p_{j-1} = s & 1 is shifted out into register B each cycle.
+
+After the last cycle `p̂[2n-1 .. n-1] = s` and, when the final LSP carry-out
+is 1 and fix-to-1 is enabled, the n+t LSBs of `p̂` are forced to 1
+(the paper's `fix-to-1` instrumentation, §IV-A).
+
+`t = 0` degenerates to the fully accurate sequential multiplier (the LSP
+adder is empty, so the D-FF never captures a carry) — this is tested.
+
+The kernel is a VPU-style elementwise kernel: the recurrence is sequential
+in j but embarrassingly parallel across input pairs, so the batch dimension
+is tiled into VMEM-sized blocks (`TILE` lanes) via BlockSpec and the n-cycle
+`fori_loop` runs per lane. `interpret=True` — the CPU PJRT client cannot run
+Mosaic custom-calls (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Lanes per grid step. 8*128-friendly; at n=32 the live state is
+# ~6 u64 vectors * TILE = 768 KiB per tile, still well under VMEM.
+# (16384 measured ~9% faster than 4096 on the CPU backend; see
+# EXPERIMENTS.md §Perf.)
+TILE = 16384
+
+_U64 = jnp.uint64
+
+
+def _u64(x) -> jnp.ndarray:
+    return jnp.asarray(x, _U64)
+
+
+def _mask_lo(nbits):
+    """(1 << nbits) - 1 as u64, correct for nbits >= 64 (all-ones)."""
+    one = _u64(1)
+    wide = nbits >= _u64(64)
+    safe = jnp.where(wide, _u64(0), nbits)
+    return jnp.where(wide, ~_u64(0), (one << safe) - one)
+
+
+def seqmul_word(a, b, t, fix, *, n):
+    """Pure-jnp word-level recurrence (shared by the kernel and `ref.py`).
+
+    Args:
+      a, b: u64 arrays (any broadcastable shape), values < 2**n.
+      t:    u64 scalar splitting point, 0 <= t <= n. t = 0 is accurate.
+      fix:  u64 scalar; nonzero enables fix-to-1.
+      n:    static python int bit-width, 1 <= n <= 32.
+
+    Returns: u64 array of approximate products `p̂`.
+    """
+    a = _u64(a)
+    b = _u64(b)
+    t = _u64(t)
+    fix = _u64(fix)
+    one = _u64(1)
+    zero = _u64(0)
+    mt = _mask_lo(t)
+
+    s0 = jnp.where((b & one) != zero, a, zero)
+    cff0 = jnp.zeros_like(s0)
+    low0 = jnp.zeros_like(s0)
+
+    def body(j, state):
+        s, cff, low = state
+        ju = _u64(j)
+        low = low | ((s & one) << (ju - one))  # p_{j-1} = S_0^{j-1}
+        x = s >> one
+        pp = jnp.where(((b >> ju) & one) != zero, a, zero)
+        lsum = (x & mt) + (pp & mt)
+        clsp = (lsum >> t) & one
+        msum = (x >> t) + (pp >> t) + cff
+        s = (msum << t) | (lsum & mt)
+        return s, clsp, low
+
+    s, cff, low = jax.lax.fori_loop(1, n, body, (s0, cff0, low0))
+    phat = (s << _u64(n - 1)) | low
+    fixmask = _mask_lo(_u64(n) + t)
+    do_fix = jnp.logical_and(fix != zero, cff == one)
+    return jnp.where(do_fix, phat | fixmask, phat)
+
+
+def _seqmul_kernel(n, a_ref, b_ref, t_ref, fix_ref, o_ref):
+    o_ref[...] = seqmul_word(a_ref[...], b_ref[...], t_ref[0], fix_ref[0], n=n)
+
+
+def seqmul_phat(a, b, t, fix, *, n, tile=None):
+    """Batched approximate product via the Pallas kernel.
+
+    `a`, `b` are u64[B] with B a multiple of `tile`; `t`/`fix` are scalars
+    (python ints or traced u64) — they are runtime operands, so one lowered
+    artifact serves every accuracy configuration of a given bit-width n.
+    """
+    batch = a.shape[0]
+    if tile is None:
+        tile = min(TILE, batch)
+    if batch % tile != 0:
+        raise ValueError(f"batch {batch} not a multiple of tile {tile}")
+    t_arr = jnp.reshape(_u64(t), (1,))
+    fix_arr = jnp.reshape(_u64(fix), (1,))
+    kernel = functools.partial(_seqmul_kernel, n)
+    return pl.pallas_call(
+        kernel,
+        grid=(batch // tile,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((batch,), _U64),
+        interpret=True,
+    )(_u64(a), _u64(b), t_arr, fix_arr)

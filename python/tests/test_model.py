@@ -1,0 +1,62 @@
+"""L2 model tests: the on-device statistics vector vs numpy brute force."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.ref import seqmul_py
+from compile.model import STATS_FIXED, eval_stats, eval_stats_ref, stats_len
+
+
+def _brute_stats(a, b, n, t, fix):
+    """Independent numpy/python-int computation of the stats vector."""
+    phat = np.array([seqmul_py(int(x), int(y), n, t, bool(fix)) for x, y in zip(a, b)], dtype=object)
+    p = np.array([int(x) * int(y) for x, y in zip(a, b)], dtype=object)
+    ed = np.array([int(pi) - int(qi) for pi, qi in zip(p, phat)], dtype=object)
+    stats = np.zeros(stats_len(n))
+    stats[0] = len(a)
+    stats[1] = sum(1 for e in ed if e != 0)
+    stats[2] = float(sum(ed))
+    stats[3] = float(sum(abs(e) for e in ed))
+    stats[4] = float(max(abs(e) for e in ed))
+    stats[5] = float(sum(abs(e) / max(1, int(pi)) for e, pi in zip(ed, p)))
+    for i in range(2 * n):
+        stats[STATS_FIXED + i] = sum(((int(pi) ^ int(qi)) >> i) & 1 for pi, qi in zip(p, phat))
+    return stats
+
+
+@pytest.mark.parametrize("n,t,fix", [(4, 2, 0), (4, 2, 1), (8, 3, 0), (8, 4, 1), (16, 8, 1)])
+def test_stats_vs_brute(n, t, fix):
+    rng = np.random.default_rng(n * 100 + t)
+    a = rng.integers(0, 1 << n, size=256, dtype=np.uint64)
+    b = rng.integers(0, 1 << n, size=256, dtype=np.uint64)
+    (got,) = eval_stats(jnp.asarray(a), jnp.asarray(b), jnp.uint64(t), jnp.uint64(fix), n=n)
+    want = _brute_stats(a, b, n, t, fix)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-12)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16, 32])
+def test_stats_kernel_equals_ref_graph(n):
+    rng = np.random.default_rng(n)
+    a = jnp.asarray(rng.integers(0, 1 << n, size=512, dtype=np.uint64))
+    b = jnp.asarray(rng.integers(0, 1 << n, size=512, dtype=np.uint64))
+    t, fix = jnp.uint64(max(1, n // 2)), jnp.uint64(1)
+    (got,) = eval_stats(a, b, t, fix, n=n)
+    (want,) = eval_stats_ref(a, b, t, fix, n=n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_stats_zero_error_when_accurate():
+    n = 16
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.integers(0, 1 << n, size=512, dtype=np.uint64))
+    b = jnp.asarray(rng.integers(0, 1 << n, size=512, dtype=np.uint64))
+    (s,) = eval_stats(a, b, jnp.uint64(0), jnp.uint64(0), n=n)
+    s = np.asarray(s)
+    assert s[0] == 512
+    np.testing.assert_array_equal(s[1:], np.zeros(stats_len(n) - 1))
+
+
+def test_stats_vector_layout():
+    assert stats_len(4) == 6 + 8
+    assert stats_len(32) == 6 + 64

@@ -1,0 +1,63 @@
+//! Bench the L3 hot path: single-multiply latency, batch evaluation on the
+//! CPU backend, and (when artifacts exist) the PJRT stats module —
+//! dispatch amortization included.
+
+use std::path::PathBuf;
+
+use segmul::bench::{bench, section};
+use segmul::coordinator::{CpuBackend, EvalBackend, PjrtBackend};
+use segmul::multiplier::wordlevel::approx_seq_mul;
+use segmul::util::rng::Xoshiro256;
+
+fn main() {
+    section("word-level multiplier (the innermost loop)");
+    for (n, t) in [(8u32, 4u32), (16, 8), (32, 16)] {
+        bench(&format!("approx_seq_mul n={n} t={t}"), Some(1.0), |iters| {
+            let mut acc = 0u64;
+            let mut x = 0x12345u64;
+            for _ in 0..iters {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                let a = x >> (64 - n);
+                let b = (x << 7) >> (64 - n);
+                acc ^= approx_seq_mul(a, b, n, t, true);
+            }
+            acc
+        });
+    }
+
+    section("CPU backend batches");
+    let mut cpu = CpuBackend::new();
+    let mut rng = Xoshiro256::seed_from_u64(5);
+    for n in [8u32, 16, 32] {
+        let len = 1usize << 16;
+        let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+        let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+        bench(&format!("cpu stats batch n={n} (2^16 pairs)"), Some(len as f64), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                acc ^= cpu.eval_batch(n, n / 2, true, &a, &b).unwrap().err_count;
+            }
+            acc
+        });
+    }
+
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        section("PJRT backend batches (AOT-compiled stats module)");
+        let mut pjrt = PjrtBackend::load(&dir).expect("artifacts");
+        for n in [8u32, 16, 32] {
+            let len = pjrt.max_batch();
+            let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            bench(&format!("pjrt stats batch n={n} (2^16 pairs)"), Some(len as f64), |iters| {
+                let mut acc = 0u64;
+                for _ in 0..iters {
+                    acc ^= pjrt.eval_batch(n, n / 2, true, &a, &b).unwrap().err_count;
+                }
+                acc
+            });
+        }
+    } else {
+        eprintln!("(skipping PJRT benches — run `make artifacts`)");
+    }
+}

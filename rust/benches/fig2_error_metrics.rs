@@ -1,0 +1,53 @@
+//! Bench E2 / Fig. 2: error-metric evaluation throughput — the cost of
+//! regenerating the accuracy figure (exhaustive for small n, MC above).
+
+use segmul::bench::{bench, section};
+use segmul::error::exhaustive::{exhaustive_stats, exhaustive_stats_mul};
+use segmul::error::montecarlo::{mc_stats, mc_stats_mul, McConfig};
+use segmul::multiplier::baselines::{MitchellLog, TruncatedMul};
+
+fn main() {
+    section("Fig. 2 — exhaustive evaluation (ours)");
+    for n in [8u32, 10, 12] {
+        let pairs = (1u64 << (2 * n)) as f64;
+        bench(&format!("exhaustive n={n} t={} fix", n / 2), Some(pairs), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                acc ^= exhaustive_stats(n, n / 2, true).err_count;
+            }
+            acc
+        });
+    }
+
+    section("Fig. 2 — Monte-Carlo evaluation (ours, n beyond exhaustive)");
+    for n in [16u32, 32] {
+        let samples = 1u64 << 16;
+        let cfg = McConfig::uniform(samples, 42);
+        bench(&format!("mc n={n} t={} fix 2^16", n / 2), Some(samples as f64), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                acc ^= mc_stats(n, n / 2, true, &cfg).err_count;
+            }
+            acc
+        });
+    }
+
+    section("Fig. 2 — baseline multipliers (exhaustive n=8 / MC n=16)");
+    bench("trunc(n=8,k=4) exhaustive", Some((1u64 << 16) as f64), |iters| {
+        let m = TruncatedMul { n: 8, k: 4 };
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= exhaustive_stats_mul(&m, 1).err_count;
+        }
+        acc
+    });
+    bench("mitchell(n=16) mc 2^16", Some((1u64 << 16) as f64), |iters| {
+        let m = MitchellLog { n: 16 };
+        let cfg = McConfig::uniform(1 << 16, 7);
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= mc_stats_mul(&m, &cfg).err_count;
+        }
+        acc
+    });
+}

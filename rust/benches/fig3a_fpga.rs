@@ -1,0 +1,28 @@
+//! Bench E4 / Fig. 3a: the FPGA-model evaluation pipeline per bit-width
+//! (netlist generation + vector-based activity simulation + LUT packing +
+//! timing + power).
+
+use segmul::bench::{bench, section};
+use segmul::netlist::generators::seq_mult::seq_mult;
+use segmul::tech::{measure_activity, FpgaModel};
+
+fn main() {
+    section("Fig. 3a — FPGA evaluation pipeline (accurate + approx)");
+    for n in [16u32, 64, 256] {
+        let vectors = 256u64;
+        bench(&format!("fpga pair n={n} ({vectors} vectors)"), Some(2.0 * vectors as f64), |iters| {
+            let mut acc = 0usize;
+            for _ in 0..iters {
+                let a = seq_mult(n, 0, false);
+                let x = seq_mult(n, n / 2, true);
+                let aa = measure_activity(&a, vectors, 1, false);
+                let xa = measure_activity(&x, vectors, 1, true);
+                let m = FpgaModel::default();
+                let ra = m.evaluate(&a.nl, &aa, n + 1, None);
+                let rx = m.evaluate(&x.nl, &xa, n + 1, Some(ra.figures.period_ns));
+                acc ^= ra.luts + rx.luts;
+            }
+            acc
+        });
+    }
+}

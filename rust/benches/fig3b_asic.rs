@@ -1,0 +1,27 @@
+//! Bench E5 / Fig. 3b: the ASIC-model evaluation pipeline per bit-width
+//! (netlist + activity + CLA-substituted timing + area + power).
+
+use segmul::bench::{bench, section};
+use segmul::netlist::generators::seq_mult::seq_mult;
+use segmul::tech::{measure_activity, AsicModel};
+
+fn main() {
+    section("Fig. 3b — ASIC evaluation pipeline (accurate + approx)");
+    for n in [16u32, 64, 256] {
+        let vectors = 256u64;
+        bench(&format!("asic pair n={n} ({vectors} vectors)"), Some(2.0 * vectors as f64), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                let a = seq_mult(n, 0, false);
+                let x = seq_mult(n, n / 2, true);
+                let aa = measure_activity(&a, vectors, 1, false);
+                let xa = measure_activity(&x, vectors, 1, true);
+                let m = AsicModel::default();
+                let ra = m.evaluate(&a.nl, &aa, n + 1, None);
+                let rx = m.evaluate(&x.nl, &xa, n + 1, Some(ra.figures.period_ns));
+                acc ^= (ra.figures.resource + rx.figures.resource) as u64;
+            }
+            acc
+        });
+    }
+}

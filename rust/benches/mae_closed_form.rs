@@ -1,0 +1,33 @@
+//! Bench E3 / Eq. 11: closed-form MAE vs the exhaustive measurement that
+//! validates it (the cost of the E3 table).
+
+use segmul::bench::{bench, section};
+use segmul::error::closed_form::{mae_eq11, mae_measured_nofix};
+use segmul::error::exhaustive::exhaustive_stats;
+
+fn main() {
+    section("Eq. 11 — closed form (O(1)) vs exhaustive validation");
+    bench("closed-form sweep n<=12 all t", None, |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            for n in 4..=12u32 {
+                for t in 1..=n / 2 {
+                    acc ^= mae_eq11(n, t) ^ mae_measured_nofix(n, t);
+                }
+            }
+        }
+        acc
+    });
+    for n in [8u32, 10, 12] {
+        let pairs = (1u64 << (2 * n)) as f64 * (n / 2) as f64;
+        bench(&format!("exhaustive MAE validation n={n} (all t)"), Some(pairs), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                for t in 1..=n / 2 {
+                    acc ^= exhaustive_stats(n, t, false).max_abs_ed;
+                }
+            }
+            acc
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench the gate-level substrate: 64-way bit-parallel simulation
+//! throughput (the Fig. 3 power-estimation workhorse) and netlist
+//! generation cost.
+
+use segmul::bench::{bench, section};
+use segmul::multiplier::U512;
+use segmul::netlist::generators::seq_mult::{run_batch, seq_mult};
+use segmul::netlist::SeqSim;
+use segmul::util::rng::Xoshiro256;
+
+fn main() {
+    section("netlist generation");
+    for n in [32u32, 128, 256] {
+        bench(&format!("seq_mult(n={n}, t=n/2, fix) build"), None, |iters| {
+            let mut acc = 0usize;
+            for _ in 0..iters {
+                acc ^= seq_mult(n, n / 2, true).nl.gate_count();
+            }
+            acc
+        });
+    }
+
+    section("64-way cycle-accurate simulation (64 multiplies/batch)");
+    for n in [32u32, 128, 256] {
+        let c = seq_mult(n, n / 2, true);
+        let gates = c.nl.gate_count() as f64;
+        let mut sim = SeqSim::new(&c.nl);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let a: Vec<U512> = (0..64).map(|_| U512::from_u64(rng.next_bits(n.min(63)))).collect();
+        let b: Vec<U512> = (0..64).map(|_| U512::from_u64(rng.next_bits(n.min(63)))).collect();
+        // gate-evals per run_batch = gates * (n + 2) cycles
+        let evals = gates * (n as f64 + 2.0);
+        bench(&format!("sim n={n} ({} gates)", gates as u64), Some(evals), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                acc ^= run_batch(&c, &mut sim, &a, &b, true)[0].limb(0);
+            }
+            acc
+        });
+    }
+}

@@ -1,0 +1,132 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` is a `harness = false` binary built on this:
+//! adaptive iteration count (targets ~0.6 s of measurement per benchmark),
+//! warmup, median-of-batches timing, and criterion-style one-line output
+//! with optional throughput reporting. `SEGMUL_BENCH_FAST=1` shrinks the
+//! measurement budget for CI smoke runs.
+
+use std::time::{Duration, Instant};
+
+/// Measurement budget per benchmark.
+fn budget() -> Duration {
+    if std::env::var_os("SEGMUL_BENCH_FAST").is_some() {
+        Duration::from_millis(120)
+    } else {
+        Duration::from_millis(600)
+    }
+}
+
+/// One benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub ns_per_iter: f64,
+    /// Optional items processed per iteration (for throughput lines).
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        let thr = match self.items_per_iter {
+            Some(items) => {
+                let per_sec = items / (self.ns_per_iter * 1e-9);
+                if per_sec >= 1e6 {
+                    format!("   thrpt: {:>10.3} Melem/s", per_sec / 1e6)
+                } else {
+                    format!("   thrpt: {:>10.1} elem/s", per_sec)
+                }
+            }
+            None => String::new(),
+        };
+        println!(
+            "{:<44} time: {:>12}/iter ({} iters){}",
+            self.name,
+            fmt_ns(self.ns_per_iter),
+            self.iters,
+            thr
+        );
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Run one benchmark: calls `f(iters)` which must perform `iters`
+/// repetitions and return a value to keep the optimizer honest.
+pub fn bench<T, F: FnMut(u64) -> T>(name: &str, items_per_iter: Option<f64>, mut f: F) -> BenchResult {
+    // calibration: find an iteration count that takes >= ~10ms
+    let mut iters = 1u64;
+    let cal = loop {
+        let started = Instant::now();
+        std::hint::black_box(f(iters));
+        let dt = started.elapsed();
+        if dt >= Duration::from_millis(10) || iters >= 1 << 24 {
+            break dt;
+        }
+        iters *= 4;
+    };
+    // measurement: scale to the budget, run 5 batches, take the median
+    let per_iter = cal.as_secs_f64() / iters as f64;
+    let target_iters = ((budget().as_secs_f64() / 5.0) / per_iter.max(1e-12)) as u64;
+    let iters = target_iters.clamp(1, 1 << 26).max(1);
+    let mut samples: Vec<f64> = (0..5)
+        .map(|_| {
+            let started = Instant::now();
+            std::hint::black_box(f(iters));
+            started.elapsed().as_secs_f64() / iters as f64
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        ns_per_iter: median * 1e9,
+        items_per_iter,
+    };
+    result.report();
+    result
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        std::env::set_var("SEGMUL_BENCH_FAST", "1");
+        let r = bench("noop-sum", Some(1000.0), |iters| {
+            let mut acc = 0u64;
+            for i in 0..iters * 1000 {
+                acc = acc.wrapping_add(i);
+            }
+            acc
+        });
+        assert!(r.ns_per_iter > 0.0);
+        assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn ns_formatting() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e4).contains("µs"));
+        assert!(fmt_ns(5e7).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

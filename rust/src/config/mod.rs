@@ -1,0 +1,140 @@
+//! Configuration system: a TOML-subset parser (the `toml` crate is
+//! unavailable offline) plus the typed [`Config`] all binaries share.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string,
+//! integer, float, boolean, and homogeneous-array values, `#` comments.
+//! That covers every configuration this project needs; nested tables and
+//! datetimes are intentionally out of scope.
+
+pub mod toml;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use toml::TomlDoc;
+
+/// Shared configuration for the CLI, examples, and benches.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Directory with the AOT artifacts (`manifest.json` + `*.hlo.txt`).
+    pub artifacts_dir: PathBuf,
+    /// Directory where figure CSVs/reports are written.
+    pub results_dir: PathBuf,
+    /// Monte-Carlo sample count for n > exhaustive_max.
+    pub mc_samples: u64,
+    /// Largest bit-width evaluated exhaustively.
+    pub exhaustive_max_n: u32,
+    /// Base RNG seed (every figure is reproducible from this).
+    pub seed: u64,
+    /// Vectors for hardware activity simulation (paper: 2^16).
+    pub hw_vectors: u64,
+    /// Worker threads (defaults to available parallelism).
+    pub workers: usize,
+    /// Bit-widths for the error figures (Fig. 2).
+    pub error_bitwidths: Vec<u32>,
+    /// Bit-widths for the hardware figures (Fig. 3).
+    pub hw_bitwidths: Vec<u32>,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: crate::runtime::artifact::default_dir(),
+            results_dir: PathBuf::from("results"),
+            mc_samples: 1 << 20,
+            exhaustive_max_n: 12,
+            seed: 0x5E6_0001,
+            hw_vectors: 1 << 12,
+            workers: crate::util::threadpool::default_workers(),
+            error_bitwidths: vec![4, 8, 12, 16, 32],
+            hw_bitwidths: vec![4, 8, 16, 32, 64, 128, 256],
+        }
+    }
+}
+
+impl Config {
+    /// Load from a TOML file, falling back to defaults for missing keys.
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let doc = TomlDoc::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    /// Load `segmul.toml` if present in the working directory.
+    pub fn discover() -> Config {
+        let p = Path::new("segmul.toml");
+        if p.exists() {
+            Self::load(p).unwrap_or_default()
+        } else {
+            Config::default()
+        }
+    }
+
+    pub fn from_doc(doc: &TomlDoc) -> Config {
+        let mut c = Config::default();
+        if let Some(s) = doc.get_str("paths", "artifacts") {
+            c.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = doc.get_str("paths", "results") {
+            c.results_dir = PathBuf::from(s);
+        }
+        if let Some(v) = doc.get_int("eval", "mc_samples") {
+            c.mc_samples = v as u64;
+        }
+        if let Some(v) = doc.get_int("eval", "exhaustive_max_n") {
+            c.exhaustive_max_n = v as u32;
+        }
+        if let Some(v) = doc.get_int("eval", "seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = doc.get_int("hw", "vectors") {
+            c.hw_vectors = v as u64;
+        }
+        if let Some(v) = doc.get_int("eval", "workers") {
+            c.workers = v as usize;
+        }
+        if let Some(v) = doc.get_int_array("eval", "error_bitwidths") {
+            c.error_bitwidths = v.iter().map(|&x| x as u32).collect();
+        }
+        if let Some(v) = doc.get_int_array("hw", "bitwidths") {
+            c.hw_bitwidths = v.iter().map(|&x| x as u32).collect();
+        }
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.mc_samples > 0);
+        assert!(c.error_bitwidths.contains(&8));
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = TomlDoc::parse(
+            r#"
+            [paths]
+            artifacts = "/tmp/a"
+            [eval]
+            mc_samples = 1024
+            error_bitwidths = [4, 8]
+            [hw]
+            vectors = 256
+            "#,
+        )
+        .unwrap();
+        let c = Config::from_doc(&doc);
+        assert_eq!(c.artifacts_dir, PathBuf::from("/tmp/a"));
+        assert_eq!(c.mc_samples, 1024);
+        assert_eq!(c.error_bitwidths, vec![4, 8]);
+        assert_eq!(c.hw_vectors, 256);
+        // untouched keys keep defaults
+        assert_eq!(c.exhaustive_max_n, 12);
+    }
+}

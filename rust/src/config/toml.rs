@@ -1,0 +1,204 @@
+//! Minimal TOML-subset parser (see module docs in `config`).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// A TOML value (subset).
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+/// A parsed document: `section -> key -> value`. Keys outside any section
+/// live under the empty-string section.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl TomlDoc {
+    pub fn parse(src: &str) -> Result<TomlDoc> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                doc.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let v = parse_value(value.trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            doc.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(key.trim().to_string(), v);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
+        match self.get(section, key)? {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key)? {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
+        match self.get(section, key)? {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn get_int_array(&self, section: &str, key: &str) -> Option<Vec<i64>> {
+        match self.get(section, key)? {
+            TomlValue::Array(items) => items
+                .iter()
+                .map(|v| match v {
+                    TomlValue::Int(i) => Some(*i),
+                    _ => None,
+                })
+                .collect(),
+            _ => None,
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').ok_or_else(|| anyhow!("unterminated string"))?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or_else(|| anyhow!("unterminated array"))?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = TomlDoc::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hello"   # comment
+            i = 42
+            f = 2.5
+            b = true
+            arr = [1, 2, 3]
+            [b]
+            i = 1_000_000
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_int("", "top"), Some(1));
+        assert_eq!(doc.get_str("a", "s"), Some("hello"));
+        assert_eq!(doc.get_int("a", "i"), Some(42));
+        assert_eq!(doc.get_float("a", "f"), Some(2.5));
+        assert_eq!(doc.get_bool("a", "b"), Some(true));
+        assert_eq!(doc.get_int_array("a", "arr"), Some(vec![1, 2, 3]));
+        assert_eq!(doc.get_int("b", "i"), Some(1_000_000));
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let doc = TomlDoc::parse("s = \"a#b\"").unwrap();
+        assert_eq!(doc.get_str("", "s"), Some("a#b"));
+    }
+
+    #[test]
+    fn errors_reported_with_line() {
+        let err = TomlDoc::parse("[bad").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(TomlDoc::parse("x ~ 3").is_err());
+        assert!(TomlDoc::parse("x = ").is_err());
+    }
+
+    #[test]
+    fn type_mismatch_is_none() {
+        let doc = TomlDoc::parse("x = 3").unwrap();
+        assert_eq!(doc.get_str("", "x"), None);
+        assert_eq!(doc.get_int("", "x"), Some(3));
+        assert_eq!(doc.get_float("", "x"), Some(3.0));
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = TomlDoc::parse("x = []").unwrap();
+        assert_eq!(doc.get_int_array("", "x"), Some(vec![]));
+    }
+}

@@ -1,0 +1,147 @@
+//! Evaluation backends.
+//!
+//! A backend turns an operand batch into an [`ErrorStats`]. The CPU backend
+//! runs the word-level model; the PJRT backend executes the AOT-compiled
+//! stats module (one `execute` per batch, O(1) host transfer). Both produce
+//! identical integer statistics for identical inputs — property-tested in
+//! `coordinator_integration`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::error::metrics::ErrorStats;
+use crate::multiplier::wordlevel::approx_seq_mul;
+use crate::runtime::Runtime;
+
+/// A batch evaluator for the segmented sequential multiplier.
+pub trait EvalBackend {
+    fn name(&self) -> &'static str;
+    /// Preferred operand-batch size.
+    fn max_batch(&self) -> usize;
+    /// Whether this backend can evaluate bit-width `n`.
+    fn supports(&self, n: u32) -> bool;
+    /// Evaluate one batch (`a.len() == b.len()`, any length ≤ max_batch).
+    fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats>;
+}
+
+/// Pure-Rust word-level backend (always available, any n ≤ 32).
+pub struct CpuBackend {
+    batch: usize,
+}
+
+impl CpuBackend {
+    pub fn new() -> Self {
+        Self { batch: 1 << 16 }
+    }
+}
+
+impl Default for CpuBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EvalBackend for CpuBackend {
+    fn name(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.batch
+    }
+
+    fn supports(&self, n: u32) -> bool {
+        (1..=32).contains(&n)
+    }
+
+    fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
+        anyhow::ensure!(a.len() == b.len());
+        let mut stats = ErrorStats::new(n);
+        for (&x, &y) in a.iter().zip(b) {
+            stats.record(x * y, approx_seq_mul(x, y, n, t, fix));
+        }
+        Ok(stats)
+    }
+}
+
+/// PJRT backend over the AOT artifacts. Short batches are padded with
+/// `(0, 0)` pairs — exact products that perturb only the sample count,
+/// which is corrected after execution.
+pub struct PjrtBackend {
+    runtime: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        Ok(Self { runtime: Runtime::load(artifacts_dir)? })
+    }
+
+    pub fn from_runtime(runtime: Runtime) -> Self {
+        Self { runtime }
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.runtime
+    }
+}
+
+impl EvalBackend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        self.runtime.batch()
+    }
+
+    fn supports(&self, n: u32) -> bool {
+        self.runtime.has(n, crate::runtime::ModuleKind::Stats)
+    }
+
+    fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
+        anyhow::ensure!(a.len() == b.len());
+        anyhow::ensure!(a.len() <= self.runtime.batch(), "batch too large");
+        let pad = self.runtime.batch() - a.len();
+        let v = if pad == 0 {
+            self.runtime.exec_stats(n, a, b, t as u64, fix)?
+        } else {
+            let mut ap = a.to_vec();
+            let mut bp = b.to_vec();
+            ap.resize(self.runtime.batch(), 0);
+            bp.resize(self.runtime.batch(), 0);
+            self.runtime.exec_stats(n, &ap, &bp, t as u64, fix)?
+        };
+        let mut stats = ErrorStats::from_f64_vec(n, &v)?;
+        // (0,0) pads are exact: only `count` needs correcting.
+        stats.count -= pad as u64;
+        Ok(stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn cpu_backend_matches_direct_record() {
+        let mut be = CpuBackend::new();
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let a: Vec<u64> = (0..500).map(|_| rng.next_bits(8)).collect();
+        let b: Vec<u64> = (0..500).map(|_| rng.next_bits(8)).collect();
+        let got = be.eval_batch(8, 4, true, &a, &b).unwrap();
+        let mut want = ErrorStats::new(8);
+        for (&x, &y) in a.iter().zip(&b) {
+            want.record(x * y, approx_seq_mul(x, y, 8, 4, true));
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn cpu_backend_supports_range() {
+        let be = CpuBackend::new();
+        assert!(be.supports(1) && be.supports(32));
+        assert!(!be.supports(0) && !be.supports(33));
+    }
+}

@@ -1,0 +1,108 @@
+//! Confidence-interval-based early stopping for adaptive MC jobs.
+//!
+//! The monitored quantity is ER (a binomial proportion): its standard
+//! error is `sqrt(p(1-p)/N)`. A job converges when the *relative* standard
+//! error drops below the target — or, for error-free configurations, when
+//! enough samples have shown no error to bound ER below the target with
+//! the rule-of-three.
+
+use crate::error::metrics::ErrorStats;
+
+/// Convergence policy.
+#[derive(Clone, Copy, Debug)]
+pub struct Convergence {
+    /// Target relative standard error on ER (e.g. 0.01 = 1%).
+    pub target_rel_stderr: f64,
+    /// Never stop before this many samples.
+    pub min_samples: u64,
+}
+
+impl Convergence {
+    pub fn new(target_rel_stderr: f64) -> Self {
+        Self { target_rel_stderr, min_samples: 1 << 12 }
+    }
+
+    /// Relative standard error of the ER estimate (∞ when undefined).
+    pub fn rel_stderr(stats: &ErrorStats) -> f64 {
+        if stats.count == 0 || stats.err_count == 0 {
+            return f64::INFINITY;
+        }
+        let n = stats.count as f64;
+        let p = stats.err_count as f64 / n;
+        let se = (p * (1.0 - p) / n).sqrt();
+        if p == 0.0 {
+            f64::INFINITY
+        } else {
+            se / p
+        }
+    }
+
+    /// Should the job stop?
+    pub fn converged(&self, stats: &ErrorStats) -> bool {
+        if stats.count < self.min_samples {
+            return false;
+        }
+        if stats.err_count == 0 {
+            // rule of three: with N error-free samples, ER < 3/N at 95%.
+            // Treat "ER bounded below target_rel_stderr as absolute" as done.
+            return (3.0 / stats.count as f64) < self.target_rel_stderr;
+        }
+        Self::rel_stderr(stats) < self.target_rel_stderr
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_with(count: u64, errs: u64) -> ErrorStats {
+        let mut s = ErrorStats::new(8);
+        s.count = count;
+        s.err_count = errs;
+        s
+    }
+
+    #[test]
+    fn more_samples_tighter_ci() {
+        let a = Convergence::rel_stderr(&stats_with(1_000, 100));
+        let b = Convergence::rel_stderr(&stats_with(100_000, 10_000));
+        assert!(b < a);
+    }
+
+    #[test]
+    fn converges_at_target() {
+        let c = Convergence::new(0.02);
+        // p = 0.5, N = 10^4: rel stderr = sqrt(.25/1e4)/.5 = 0.01 < 0.02
+        assert!(c.converged(&stats_with(10_000, 5_000)));
+        // N = 10^3: 0.0316 > 0.02
+        assert!(!c.converged(&stats_with(1_000, 500)));
+    }
+
+    #[test]
+    fn min_samples_respected() {
+        let mut c = Convergence::new(0.5);
+        c.min_samples = 1 << 20;
+        assert!(!c.converged(&stats_with(10_000, 5_000)));
+    }
+
+    #[test]
+    fn error_free_uses_rule_of_three() {
+        let c = Convergence::new(0.0001);
+        assert!(!c.converged(&stats_with(10_000, 0))); // 3/1e4 = 3e-4 > 1e-4
+        assert!(c.converged(&stats_with(100_000, 0))); // 3/1e5 = 3e-5 < 1e-4
+    }
+
+    #[test]
+    fn monotone_in_samples_at_fixed_rate() {
+        // Convergence is monotone: once converged at rate p, more samples
+        // at the same p keep it converged.
+        let c = Convergence::new(0.05);
+        let mut prev = false;
+        for k in 1..=8u32 {
+            let n = 1u64 << (10 + k);
+            let now = c.converged(&stats_with(n, n / 10));
+            assert!(!prev || now, "convergence regressed at n={n}");
+            prev = now;
+        }
+    }
+}

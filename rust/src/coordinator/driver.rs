@@ -1,0 +1,162 @@
+//! Job driver: decomposes a job's sample space into backend-sized batches.
+//!
+//! The Monte-Carlo decomposition (chunk ids → xoshiro streams) is the same
+//! one `error::montecarlo` uses, so for a given (seed, chunk) layout the
+//! CPU word-level path, the PJRT path, and the standalone `mc_stats` all
+//! see identical operands and produce identical integer statistics.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::error::metrics::ErrorStats;
+use crate::util::rng::Xoshiro256;
+
+use super::backend::EvalBackend;
+use super::convergence::Convergence;
+use super::job::{EvalJob, JobResult, WorkSpec};
+
+/// Fill operand buffers for MC chunk `chunk_id`.
+fn fill_mc_chunk(n: u32, seed: u64, chunk_id: u64, len: usize, a: &mut Vec<u64>, b: &mut Vec<u64>) {
+    let mut rng = Xoshiro256::stream(seed, chunk_id);
+    a.clear();
+    b.clear();
+    for _ in 0..len {
+        a.push(rng.next_bits(n));
+        b.push(rng.next_bits(n));
+    }
+}
+
+/// Fill operand buffers for exhaustive indices `[start, end)`.
+fn fill_exhaustive(n: u32, start: u64, end: u64, a: &mut Vec<u64>, b: &mut Vec<u64>) {
+    let mask = (1u64 << n) - 1;
+    a.clear();
+    b.clear();
+    for idx in start..end {
+        a.push(idx & mask);
+        b.push(idx >> n);
+    }
+}
+
+/// Execute `job` on `backend`, batching as needed.
+pub fn run_job(backend: &mut dyn EvalBackend, job: &EvalJob) -> Result<JobResult> {
+    job.validate()?;
+    anyhow::ensure!(
+        backend.supports(job.n),
+        "backend {} does not support n={}",
+        backend.name(),
+        job.n
+    );
+    let started = Instant::now();
+    let batch = backend.max_batch();
+    let mut total = ErrorStats::new(job.n);
+    let mut batches = 0u64;
+    let mut a = Vec::with_capacity(batch);
+    let mut b = Vec::with_capacity(batch);
+
+    match &job.spec {
+        WorkSpec::Exhaustive => {
+            let space = 1u64 << (2 * job.n);
+            let mut start = 0u64;
+            while start < space {
+                let end = (start + batch as u64).min(space);
+                fill_exhaustive(job.n, start, end, &mut a, &mut b);
+                total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
+                batches += 1;
+                start = end;
+            }
+        }
+        WorkSpec::MonteCarlo { samples, seed } => {
+            let n_chunks = samples.div_ceil(batch as u64);
+            for chunk_id in 0..n_chunks {
+                let len = (batch as u64).min(samples - chunk_id * batch as u64) as usize;
+                fill_mc_chunk(job.n, *seed, chunk_id, len, &mut a, &mut b);
+                total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
+                batches += 1;
+            }
+        }
+        WorkSpec::Adaptive { max_samples, seed, target_rel_stderr } => {
+            let conv = Convergence::new(*target_rel_stderr);
+            let n_chunks = max_samples.div_ceil(batch as u64);
+            for chunk_id in 0..n_chunks {
+                let len = (batch as u64).min(max_samples - chunk_id * batch as u64) as usize;
+                fill_mc_chunk(job.n, *seed, chunk_id, len, &mut a, &mut b);
+                total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
+                batches += 1;
+                if conv.converged(&total) {
+                    break;
+                }
+            }
+        }
+    }
+
+    Ok(JobResult {
+        job: job.clone(),
+        stats: total,
+        backend: backend.name(),
+        wall: started.elapsed(),
+        batches,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::CpuBackend;
+    use crate::error::exhaustive::exhaustive_stats;
+    use crate::error::montecarlo::{mc_stats, McConfig};
+
+    #[test]
+    fn exhaustive_job_matches_direct_evaluator() {
+        let mut be = CpuBackend::new();
+        let r = run_job(&mut be, &EvalJob::exhaustive(8, 4, true)).unwrap();
+        let direct = exhaustive_stats(8, 4, true);
+        assert!(r.stats.approx_eq(&direct));
+        assert_eq!(r.backend, "cpu");
+        assert_eq!(r.stats.count, 1 << 16);
+    }
+
+    #[test]
+    fn mc_job_matches_mc_stats_decomposition() {
+        // Same seed + same chunk size => identical integer statistics.
+        let mut be = CpuBackend::new();
+        let r = run_job(&mut be, &EvalJob::mc(8, 3, false, 200_000, 42)).unwrap();
+        let mut cfg = McConfig::uniform(200_000, 42);
+        cfg.chunk = be.max_batch() as u64;
+        let direct = mc_stats(8, 3, false, &cfg);
+        assert!(r.stats.approx_eq(&direct));
+    }
+
+    #[test]
+    fn adaptive_stops_early() {
+        let mut be = CpuBackend::new();
+        let job = EvalJob {
+            n: 8,
+            t: 4,
+            fix: true,
+            spec: WorkSpec::Adaptive {
+                max_samples: 1 << 24,
+                seed: 7,
+                target_rel_stderr: 0.05,
+            },
+        };
+        let r = run_job(&mut be, &job).unwrap();
+        assert!(r.stats.count < 1 << 24, "should stop before max samples");
+        assert!(Convergence::new(0.05).converged(&r.stats));
+    }
+
+    #[test]
+    fn batch_count_accounting() {
+        let mut be = CpuBackend::new();
+        let r = run_job(&mut be, &EvalJob::mc(8, 2, false, 100_000, 1)).unwrap();
+        assert_eq!(r.batches, (100_000u64).div_ceil(be.max_batch() as u64));
+        assert_eq!(r.stats.count, 100_000);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn invalid_job_rejected() {
+        let mut be = CpuBackend::new();
+        assert!(run_job(&mut be, &EvalJob::mc(8, 9, false, 10, 1)).is_err());
+    }
+}

@@ -1,0 +1,100 @@
+//! Job and result types for the evaluation service.
+
+use std::time::Duration;
+
+use crate::error::metrics::{ErrorMetrics, ErrorStats};
+
+/// Workload specification for one evaluation job.
+#[derive(Clone, Debug)]
+pub enum WorkSpec {
+    /// All `2^(2n)` input pairs (n ≤ 16; practical n ≤ 12 on one core).
+    Exhaustive,
+    /// Fixed-budget Monte-Carlo with uniform operands.
+    MonteCarlo { samples: u64, seed: u64 },
+    /// Adaptive Monte-Carlo: stop when the relative CI target on ER is met
+    /// (see [`super::convergence`]) or `max_samples` is exhausted.
+    Adaptive { max_samples: u64, seed: u64, target_rel_stderr: f64 },
+}
+
+/// One evaluation request.
+#[derive(Clone, Debug)]
+pub struct EvalJob {
+    /// Operand bit-width (must have a lowered artifact for the PJRT path).
+    pub n: u32,
+    /// Splitting point, `0 <= t < n`; 0 = accurate.
+    pub t: u32,
+    /// Enable fix-to-1 compensation.
+    pub fix: bool,
+    pub spec: WorkSpec,
+}
+
+impl EvalJob {
+    pub fn mc(n: u32, t: u32, fix: bool, samples: u64, seed: u64) -> Self {
+        EvalJob { n, t, fix, spec: WorkSpec::MonteCarlo { samples, seed } }
+    }
+
+    pub fn exhaustive(n: u32, t: u32, fix: bool) -> Self {
+        EvalJob { n, t, fix, spec: WorkSpec::Exhaustive }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.n >= 1 && self.n <= 32, "n={} out of range", self.n);
+        anyhow::ensure!(self.t < self.n, "t={} out of range for n={}", self.t, self.n);
+        match &self.spec {
+            WorkSpec::Exhaustive => {
+                anyhow::ensure!(self.n <= 16, "exhaustive limited to n <= 16 (n={})", self.n)
+            }
+            WorkSpec::MonteCarlo { samples, .. } => {
+                anyhow::ensure!(*samples > 0, "samples must be positive")
+            }
+            WorkSpec::Adaptive { max_samples, target_rel_stderr, .. } => {
+                anyhow::ensure!(*max_samples > 0 && *target_rel_stderr > 0.0, "bad adaptive spec")
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Completed job output.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub job: EvalJob,
+    pub stats: ErrorStats,
+    /// Backend that executed the job ("cpu" / "pjrt").
+    pub backend: &'static str,
+    pub wall: Duration,
+    /// Backend batch executions performed.
+    pub batches: u64,
+}
+
+impl JobResult {
+    pub fn metrics(&self) -> ErrorMetrics {
+        self.stats.metrics()
+    }
+
+    /// Evaluated pairs per second.
+    pub fn throughput(&self) -> f64 {
+        self.stats.count as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validation() {
+        assert!(EvalJob::mc(8, 4, true, 100, 1).validate().is_ok());
+        assert!(EvalJob::mc(8, 8, true, 100, 1).validate().is_err());
+        assert!(EvalJob::mc(40, 4, true, 100, 1).validate().is_err());
+        assert!(EvalJob::exhaustive(18, 4, true).validate().is_err());
+        assert!(EvalJob::mc(8, 4, true, 0, 1).validate().is_err());
+        let bad = EvalJob {
+            n: 8,
+            t: 1,
+            fix: false,
+            spec: WorkSpec::Adaptive { max_samples: 0, seed: 1, target_rel_stderr: 0.1 },
+        };
+        assert!(bad.validate().is_err());
+    }
+}

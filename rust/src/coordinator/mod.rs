@@ -1,0 +1,33 @@
+//! L3 coordination: the asynchronous error-evaluation service.
+//!
+//! The paper's contribution is an arithmetic unit; the system a downstream
+//! user adopts around it is an *evaluation platform*: submit
+//! (bit-width, splitting point, fix, workload) jobs, get error metrics
+//! back, with the heavy batched evaluation running on the AOT-compiled
+//! PJRT executables (python never on the request path) and a pure-Rust
+//! word-level backend as fallback / cross-check.
+//!
+//! * [`job`]         — job/result types and the workload specs
+//!   (exhaustive, fixed-budget Monte-Carlo, adaptive CI-targeted MC).
+//! * [`backend`]     — the evaluation backends: [`backend::CpuBackend`]
+//!   (word-level model) and [`backend::PjrtBackend`] (the compiled stats
+//!   modules, with pad-and-correct batching to the lowered batch size).
+//! * [`driver`]      — chunking/batching of a job onto a backend; the MC
+//!   decomposition is identical to `error::montecarlo` so CPU and PJRT
+//!   paths produce bit-identical integer statistics per seed.
+//! * [`convergence`] — CI-based early stopping for adaptive jobs.
+//! * [`service`]     — the threaded service: an executor thread owns the
+//!   (non-Send) PJRT runtime; clients submit jobs over a channel and
+//!   receive tickets.
+
+pub mod backend;
+pub mod convergence;
+pub mod driver;
+pub mod job;
+pub mod service;
+
+pub use backend::{CpuBackend, EvalBackend, PjrtBackend};
+pub use convergence::Convergence;
+pub use driver::run_job;
+pub use job::{EvalJob, JobResult, WorkSpec};
+pub use service::{EvalService, ServiceTelemetry};

@@ -1,0 +1,207 @@
+//! The threaded evaluation service.
+//!
+//! A dedicated executor thread owns the backend — deliberately, because
+//! the PJRT FFI types are not `Send`: the backend is constructed *inside*
+//! the executor thread from a `Send` factory closure. Clients hold a
+//! cheap cloneable [`EvalService`] handle and submit jobs over an mpsc
+//! channel, receiving a ticket (`std::sync::mpsc::Receiver`) that resolves
+//! to the [`JobResult`]. Telemetry is aggregated behind a mutex.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::backend::EvalBackend;
+use super::driver::run_job;
+use super::job::{EvalJob, JobResult};
+
+/// Aggregated service counters.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceTelemetry {
+    pub jobs_completed: u64,
+    pub jobs_failed: u64,
+    pub pairs_evaluated: u64,
+    pub batches_executed: u64,
+    pub busy: Duration,
+}
+
+enum Request {
+    Job(EvalJob, Sender<Result<JobResult>>),
+    Shutdown,
+}
+
+/// Client handle to the evaluation service.
+pub struct EvalService {
+    tx: Sender<Request>,
+    telemetry: Arc<Mutex<ServiceTelemetry>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// A pending result.
+pub struct JobTicket {
+    rx: Receiver<Result<JobResult>>,
+}
+
+impl JobTicket {
+    /// Block until the job completes.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("evaluation service dropped the job"))?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<JobResult>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+impl EvalService {
+    /// Start the service. `factory` runs on the executor thread and builds
+    /// the backend there (PJRT types are not `Send`).
+    pub fn start<F>(factory: F) -> Result<EvalService>
+    where
+        F: FnOnce() -> Result<Box<dyn EvalBackend>> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let telemetry = Arc::new(Mutex::new(ServiceTelemetry::default()));
+        let tele = telemetry.clone();
+        let (ready_tx, ready_rx) = channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("segmul-eval".into())
+            .spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => {
+                        let _ = ready_tx.send(Ok(()));
+                        b
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Shutdown => break,
+                        Request::Job(job, reply) => {
+                            let started = std::time::Instant::now();
+                            let result = run_job(backend.as_mut(), &job);
+                            let mut t = tele.lock().unwrap();
+                            t.busy += started.elapsed();
+                            match &result {
+                                Ok(r) => {
+                                    t.jobs_completed += 1;
+                                    t.pairs_evaluated += r.stats.count;
+                                    t.batches_executed += r.batches;
+                                }
+                                Err(_) => t.jobs_failed += 1,
+                            }
+                            drop(t);
+                            let _ = reply.send(result);
+                        }
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(EvalService { tx, telemetry, worker: Some(worker) })
+    }
+
+    /// Submit a job; returns a ticket resolving to the result.
+    pub fn submit(&self, job: EvalJob) -> JobTicket {
+        let (reply_tx, reply_rx) = channel();
+        // If the executor is gone the ticket's recv() will error out.
+        let _ = self.tx.send(Request::Job(job, reply_tx));
+        JobTicket { rx: reply_rx }
+    }
+
+    /// Submit and wait (convenience).
+    pub fn eval(&self, job: EvalJob) -> Result<JobResult> {
+        self.submit(job).wait()
+    }
+
+    pub fn telemetry(&self) -> ServiceTelemetry {
+        self.telemetry.lock().unwrap().clone()
+    }
+
+    /// Graceful shutdown (also runs on drop).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for EvalService {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::CpuBackend;
+    use crate::error::exhaustive::exhaustive_stats;
+
+    fn cpu_service() -> EvalService {
+        EvalService::start(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)).unwrap()
+    }
+
+    #[test]
+    fn end_to_end_job() {
+        let svc = cpu_service();
+        let r = svc.eval(EvalJob::exhaustive(6, 3, true)).unwrap();
+        assert!(r.stats.approx_eq(&exhaustive_stats(6, 3, true)));
+        let t = svc.telemetry();
+        assert_eq!(t.jobs_completed, 1);
+        assert_eq!(t.pairs_evaluated, 1 << 12);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pipelined_submissions() {
+        let svc = cpu_service();
+        let tickets: Vec<_> = (1..=4u32)
+            .map(|t| svc.submit(EvalJob::mc(8, t, true, 10_000, t as u64)))
+            .collect();
+        let mut counts = 0;
+        for ticket in tickets {
+            let r = ticket.wait().unwrap();
+            assert_eq!(r.stats.count, 10_000);
+            counts += 1;
+        }
+        assert_eq!(counts, 4);
+        assert_eq!(svc.telemetry().jobs_completed, 4);
+    }
+
+    #[test]
+    fn failed_jobs_reported() {
+        let svc = cpu_service();
+        let r = svc.eval(EvalJob::mc(8, 20, false, 10, 1));
+        assert!(r.is_err());
+        assert_eq!(svc.telemetry().jobs_failed, 1);
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let r = EvalService::start(|| Err(anyhow!("boom")));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let svc = cpu_service();
+        let _ = svc.eval(EvalJob::mc(4, 1, false, 100, 1)).unwrap();
+        drop(svc); // must not hang
+    }
+}

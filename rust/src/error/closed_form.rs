@@ -1,0 +1,123 @@
+//! Closed-form error expressions (§IV-B, Eq. 11) and resource-count
+//! formulas (§III).
+//!
+//! The paper derives `MAE = 2^{n+t-1} - 2^{t+1}` (Eq. 11). Our exhaustive
+//! evaluation of the paper's own Boolean recurrences (see
+//! `exhaustive::tests::paper_mae_shape_no_fix` and EXPERIMENTS.md E3)
+//! measures `MAE = 2^{n+t-1}` exactly when fix-to-1 is disabled — the
+//! dropped final LSP carry-out (weight `2^t` in the final accumulation
+//! `S^{n-1}`, i.e. product weight `2^{t+n-1}`) is achievable on its own,
+//! without the `-2^{t+1}` LSB rebate the paper subtracts. Both forms are
+//! provided; the benches compare them against measurement.
+
+/// Eq. (11) as printed in the paper: `2^{n+t-1} - 2^{t+1}`.
+pub fn mae_eq11(n: u32, t: u32) -> u64 {
+    assert!(t >= 1 && t < n && n + t - 1 < 64);
+    (1u64 << (n + t - 1)) - (1u64 << (t + 1))
+}
+
+/// Measured closed form without fix-to-1: the dropped final carry
+/// dominates, `MAE = 2^{n+t-1}` (exhaustively verified for n ≤ 12).
+pub fn mae_measured_nofix(n: u32, t: u32) -> u64 {
+    assert!(t >= 1 && t < n && n + t - 1 < 64);
+    1u64 << (n + t - 1)
+}
+
+/// Upper bound on MAE with fix-to-1 enabled: the fix writes `2^{n+t}-1`
+/// into the low bits, so `|ED| < 2^{n+t}`.
+pub fn mae_fix_upper_bound(n: u32, t: u32) -> u64 {
+    assert!(t >= 1 && t < n && n + t < 64);
+    (1u64 << (n + t)) - 1
+}
+
+/// §III: adders required by the combinatorial tree multiplier — `n - 1`,
+/// scaling linearly with the bit-width (the motivation for sequential).
+pub fn combinational_adder_count(n: u32) -> u32 {
+    assert!(n.is_power_of_two());
+    n - 1
+}
+
+/// §III: the sequential multiplier needs a single n-bit adder and performs
+/// `n` accumulation cycles.
+pub fn sequential_cycles(n: u32) -> u32 {
+    n
+}
+
+/// Carry-chain length of the accurate sequential multiplier's adder.
+pub fn accurate_chain_bits(n: u32) -> u32 {
+    n
+}
+
+/// Carry-chain length after segmentation: `max(t, n-t)` — the paper's
+/// `max{lat(MSP), lat(LSP)}` latency argument (§IV-A).
+pub fn segmented_chain_bits(n: u32, t: u32) -> u32 {
+    assert!(t < n);
+    t.max(n - t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::exhaustive::exhaustive_stats;
+
+    #[test]
+    fn eq11_reference_values() {
+        assert_eq!(mae_eq11(4, 2), 24);
+        assert_eq!(mae_eq11(8, 4), 2016);
+        assert_eq!(mae_eq11(16, 8), (1 << 23) - (1 << 9));
+    }
+
+    #[test]
+    fn measured_form_matches_exhaustive_nofix() {
+        for n in 4..=10u32 {
+            for t in 1..=n / 2 {
+                let measured = exhaustive_stats(n, t, false).max_abs_ed;
+                assert_eq!(measured, mae_measured_nofix(n, t), "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn eq11_understates_measurement_by_lsb_rebate() {
+        for n in 4..=10u32 {
+            for t in 1..=n / 2 {
+                assert_eq!(
+                    mae_measured_nofix(n, t) - mae_eq11(n, t),
+                    1u64 << (t + 1),
+                    "n={n} t={t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fix_bound_holds_exhaustively() {
+        for n in 4..=9u32 {
+            for t in 1..=n / 2 {
+                let measured = exhaustive_stats(n, t, true).max_abs_ed;
+                assert!(measured <= mae_fix_upper_bound(n, t), "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn chain_shortening() {
+        assert_eq!(segmented_chain_bits(8, 4), 4);
+        assert_eq!(segmented_chain_bits(8, 2), 6);
+        assert_eq!(accurate_chain_bits(8), 8);
+        // t = n/2 halves the carry chain — the paper's latency lever.
+        for n in [8u32, 16, 32, 64] {
+            assert_eq!(segmented_chain_bits(n, n / 2), n / 2);
+        }
+    }
+
+    #[test]
+    fn adder_count_formula() {
+        // Σ_{i=1}^{log2 n} n/2^i = n - 1 (§III)
+        for n in [4u32, 8, 16, 32, 64, 128, 256] {
+            let sum: u32 = (1..=n.ilog2()).map(|i| n >> i).sum();
+            assert_eq!(sum, n - 1);
+            assert_eq!(combinational_adder_count(n), n - 1);
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Exhaustive error evaluation over all `2^(2n)` input pairs.
+//!
+//! The paper evaluates exhaustively for n ≤ 16 (4.3·10^9 pairs on their
+//! testbed); on this 1-core box the practical limit is n ≈ 12–13 (1.7·10^7
+//! – 6.7·10^7 pairs), above which [`super::montecarlo`] takes over. The
+//! iteration space is chunked and folded via the scoped thread pool, so the
+//! same code uses every core when more are available.
+
+use crate::multiplier::wordlevel::approx_seq_mul;
+use crate::multiplier::Multiplier;
+use crate::util::threadpool::{default_workers, parallel_fold};
+
+use super::metrics::ErrorStats;
+
+/// Exhaustive stats for the paper's segmented sequential multiplier.
+/// Specialized on the word-level fast path (no dyn dispatch in the loop).
+pub fn exhaustive_stats(n: u32, t: u32, fix: bool) -> ErrorStats {
+    exhaustive_stats_workers(n, t, fix, default_workers())
+}
+
+/// As [`exhaustive_stats`] with an explicit worker count.
+pub fn exhaustive_stats_workers(n: u32, t: u32, fix: bool, workers: usize) -> ErrorStats {
+    assert!(n >= 1 && n <= 16, "exhaustive evaluation is limited to n <= 16");
+    assert!(t < n);
+    let total: u64 = 1u64 << (2 * n);
+    parallel_fold(
+        total,
+        workers,
+        |_, start, end| {
+            let mut stats = ErrorStats::new(n);
+            let mask = (1u64 << n) - 1;
+            for idx in start..end {
+                let a = idx & mask;
+                let b = idx >> n;
+                let p = a * b;
+                let phat = approx_seq_mul(a, b, n, t, fix);
+                stats.record(p, phat);
+            }
+            stats
+        },
+        |mut acc, part| {
+            acc.merge(&part);
+            acc
+        },
+    )
+    .expect("nonempty input space")
+}
+
+/// Exhaustive stats for any [`Multiplier`] (used for the Fig. 2 baselines).
+pub fn exhaustive_stats_mul(m: &dyn Multiplier, workers: usize) -> ErrorStats {
+    let n = m.n();
+    assert!(n >= 1 && n <= 16, "exhaustive evaluation is limited to n <= 16");
+    let total: u64 = 1u64 << (2 * n);
+    parallel_fold(
+        total,
+        workers,
+        |_, start, end| {
+            let mut stats = ErrorStats::new(n);
+            let mask = (1u64 << n) - 1;
+            for idx in start..end {
+                let a = idx & mask;
+                let b = idx >> n;
+                stats.record(a * b, m.mul(a, b));
+            }
+            stats
+        },
+        |mut acc, part| {
+            acc.merge(&part);
+            acc
+        },
+    )
+    .expect("nonempty input space")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::baselines::TruncatedMul;
+    use crate::multiplier::SegmentedSeqMul;
+
+    #[test]
+    fn accurate_config_has_zero_error() {
+        let s = exhaustive_stats(6, 0, false);
+        assert_eq!(s.count, 1 << 12);
+        assert_eq!(s.err_count, 0);
+        assert_eq!(s.max_abs_ed, 0);
+    }
+
+    #[test]
+    fn chunking_invariant_worker_count() {
+        // The fold must be exact regardless of how the space is chunked.
+        let w1 = exhaustive_stats_workers(6, 3, true, 1);
+        let w4 = exhaustive_stats_workers(6, 3, true, 4);
+        let w13 = exhaustive_stats_workers(6, 3, true, 13);
+        assert!(w1.approx_eq(&w4));
+        assert!(w1.approx_eq(&w13));
+    }
+
+    #[test]
+    fn matches_naive_double_loop() {
+        let n = 5;
+        let t = 2;
+        let mut naive = ErrorStats::new(n);
+        for a in 0..(1u64 << n) {
+            for b in 0..(1u64 << n) {
+                naive.record(a * b, approx_seq_mul(a, b, n, t, true));
+            }
+        }
+        assert!(exhaustive_stats(n, t, true).approx_eq(&naive));
+    }
+
+    #[test]
+    fn dyn_multiplier_agrees_with_specialized() {
+        let m = SegmentedSeqMul::new(6, 3, false);
+        let via_dyn = exhaustive_stats_mul(&m, 2);
+        let via_fast = exhaustive_stats(6, 3, false);
+        assert!(via_dyn.approx_eq(&via_fast));
+    }
+
+    #[test]
+    fn trunc_k0_zero_error_exhaustive() {
+        let s = exhaustive_stats_mul(&TruncatedMul { n: 6, k: 0 }, 2);
+        assert_eq!(s.err_count, 0);
+    }
+
+    #[test]
+    fn paper_mae_shape_no_fix() {
+        // Measured exhaustive MAE without fix-to-1 is exactly 2^{n+t-1}
+        // (the dropped final LSP carry) — the paper's Eq. 11 claims
+        // 2^{n+t-1} - 2^{t+1}; see EXPERIMENTS.md E3 for the comparison.
+        for (n, t) in [(6u32, 2u32), (6, 3), (8, 4)] {
+            let s = exhaustive_stats(n, t, false);
+            assert_eq!(s.max_abs_ed, 1u64 << (n + t - 1), "n={n} t={t}");
+        }
+    }
+}

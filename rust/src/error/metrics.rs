@@ -1,0 +1,317 @@
+//! Streaming error-statistics accumulator and the derived metric set.
+//!
+//! `ErrorStats` is the single aggregation currency of the whole system:
+//! the Rust word-level evaluators fill it exactly (integer sums), the PJRT
+//! stats modules fill it from the on-device f64 vector, chunked/parallel
+//! evaluation merges partials (merge is associative and commutative —
+//! property-tested), and `ErrorMetrics` derives the paper's §III-B metrics.
+
+use crate::multiplier::wordlevel::error_distance;
+
+/// Raw accumulated statistics for one (design, workload) evaluation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ErrorStats {
+    /// Operand bit-width (determines the 2n bit-flip counters).
+    pub n: u32,
+    /// Evaluated input pairs.
+    pub count: u64,
+    /// Pairs with `p̂ != p` (numerator of ER, Eq. 3).
+    pub err_count: u64,
+    /// Σ ED, signed and exact (for MED, Eq. 6).
+    pub sum_ed: i128,
+    /// Σ |ED| (for the absolute-ED MED variant used by NMED, cf. [3]).
+    pub sum_abs_ed: u128,
+    /// max |ED| (MAE, Eq. 5).
+    pub max_abs_ed: u64,
+    /// Σ |ED| / max(1, p) (MRED, Eq. 8).
+    pub sum_red: f64,
+    /// Per-output-bit flip counts (BER numerators, Eq. 2); length 2n.
+    pub bitflips: Vec<u64>,
+    /// True when filled from f64 sums (PJRT): sums beyond 2^53 may round.
+    pub approx_sums: bool,
+}
+
+impl ErrorStats {
+    pub fn new(n: u32) -> Self {
+        assert!(n >= 1 && n <= 32);
+        Self {
+            n,
+            count: 0,
+            err_count: 0,
+            sum_ed: 0,
+            sum_abs_ed: 0,
+            max_abs_ed: 0,
+            sum_red: 0.0,
+            bitflips: vec![0; 2 * n as usize],
+            approx_sums: false,
+        }
+    }
+
+    /// Record one (exact, approximate) product pair.
+    #[inline]
+    pub fn record(&mut self, p: u64, phat: u64) {
+        self.count += 1;
+        if p == phat {
+            return;
+        }
+        self.err_count += 1;
+        let ed = error_distance(p, phat);
+        self.sum_ed += ed as i128;
+        let abs = ed.unsigned_abs();
+        self.sum_abs_ed += abs as u128;
+        if abs > self.max_abs_ed {
+            self.max_abs_ed = abs;
+        }
+        self.sum_red += abs as f64 / p.max(1) as f64;
+        let mut flips = p ^ phat;
+        while flips != 0 {
+            let bit = flips.trailing_zeros() as usize;
+            self.bitflips[bit] += 1;
+            flips &= flips - 1;
+        }
+    }
+
+    /// Merge another partial accumulation (associative, commutative).
+    pub fn merge(&mut self, other: &ErrorStats) {
+        assert_eq!(self.n, other.n, "cannot merge stats of different bit-widths");
+        self.count += other.count;
+        self.err_count += other.err_count;
+        self.sum_ed += other.sum_ed;
+        self.sum_abs_ed += other.sum_abs_ed;
+        self.max_abs_ed = self.max_abs_ed.max(other.max_abs_ed);
+        self.sum_red += other.sum_red;
+        for (s, o) in self.bitflips.iter_mut().zip(&other.bitflips) {
+            *s += o;
+        }
+        self.approx_sums |= other.approx_sums;
+    }
+
+    /// Build from the PJRT stats vector (layout in python/compile/model.py:
+    /// `[count, err, sum_ed, sum_abs, max_abs, sum_red, flips...]`).
+    pub fn from_f64_vec(n: u32, v: &[f64]) -> anyhow::Result<Self> {
+        let expect = 6 + 2 * n as usize;
+        anyhow::ensure!(v.len() == expect, "stats vector len {} != {expect}", v.len());
+        let mut s = Self::new(n);
+        s.count = v[0] as u64;
+        s.err_count = v[1] as u64;
+        s.sum_ed = v[2] as i128;
+        s.sum_abs_ed = v[3] as u128;
+        s.max_abs_ed = v[4] as u64;
+        s.sum_red = v[5];
+        for (i, f) in s.bitflips.iter_mut().enumerate() {
+            *f = v[6 + i] as u64;
+        }
+        s.approx_sums = true;
+        Ok(s)
+    }
+
+    /// Equality up to f64 accumulation-order noise in `sum_red`: all
+    /// integer fields must match exactly. Chunked/parallel evaluation can
+    /// legally reorder the `sum_red` float additions, so tests comparing
+    /// different decompositions of the same input space use this.
+    pub fn approx_eq(&self, other: &ErrorStats) -> bool {
+        self.n == other.n
+            && self.count == other.count
+            && self.err_count == other.err_count
+            && self.sum_ed == other.sum_ed
+            && self.sum_abs_ed == other.sum_abs_ed
+            && self.max_abs_ed == other.max_abs_ed
+            && self.bitflips == other.bitflips
+            && (self.sum_red - other.sum_red).abs()
+                <= 1e-9 * self.sum_red.abs().max(other.sum_red.abs()).max(1.0)
+    }
+
+    /// Derive the paper's metrics. `count` must be nonzero.
+    pub fn metrics(&self) -> ErrorMetrics {
+        assert!(self.count > 0, "no samples accumulated");
+        let cnt = self.count as f64;
+        let max_p = {
+            let m = (1u64 << self.n) - 1;
+            (m as f64) * (m as f64)
+        };
+        ErrorMetrics {
+            n: self.n,
+            samples: self.count,
+            er: self.err_count as f64 / cnt,
+            med_signed: self.sum_ed as f64 / cnt,
+            med_abs: self.sum_abs_ed as f64 / cnt,
+            mae: self.max_abs_ed,
+            nmed: (self.sum_abs_ed as f64 / cnt) / max_p,
+            mred: self.sum_red / cnt,
+            ber: self.bitflips.iter().map(|&f| f as f64 / cnt).collect(),
+        }
+    }
+}
+
+/// The derived metric set of §III-B.
+#[derive(Clone, Debug)]
+pub struct ErrorMetrics {
+    pub n: u32,
+    pub samples: u64,
+    /// Arithmetic error rate (Eq. 3).
+    pub er: f64,
+    /// Mean error distance, signed (Eq. 6).
+    pub med_signed: f64,
+    /// Mean |ED| (the variant used for NMED comparisons, cf. [3]).
+    pub med_abs: f64,
+    /// Maximum absolute error (Eq. 5).
+    pub mae: u64,
+    /// Normalized MED (Eq. 7): mean |ED| / (2^n - 1)^2.
+    pub nmed: f64,
+    /// Mean relative error distance (Eq. 8).
+    pub mred: f64,
+    /// Bit error rate per output bit (Eq. 2); length 2n.
+    pub ber: Vec<f64>,
+}
+
+impl ErrorMetrics {
+    /// Mean BER across all 2n output bits.
+    pub fn mean_ber(&self) -> f64 {
+        self.ber.iter().sum::<f64>() / self.ber.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn record_exact_pair_only_counts() {
+        let mut s = ErrorStats::new(8);
+        s.record(100, 100);
+        assert_eq!(s.count, 1);
+        assert_eq!(s.err_count, 0);
+        assert_eq!(s.metrics().er, 0.0);
+        assert_eq!(s.metrics().mae, 0);
+    }
+
+    #[test]
+    fn record_signed_directions() {
+        let mut s = ErrorStats::new(8);
+        s.record(100, 90); // ED = +10
+        s.record(50, 60); // ED = -10
+        assert_eq!(s.sum_ed, 0);
+        assert_eq!(s.sum_abs_ed, 20);
+        assert_eq!(s.max_abs_ed, 10);
+        let m = s.metrics();
+        assert_eq!(m.med_signed, 0.0);
+        assert_eq!(m.med_abs, 10.0);
+        assert_eq!(m.er, 1.0);
+    }
+
+    #[test]
+    fn bitflips_positions() {
+        let mut s = ErrorStats::new(4);
+        s.record(0b1010, 0b0110); // bits 2 and 3 flipped
+        assert_eq!(s.bitflips[2], 1);
+        assert_eq!(s.bitflips[3], 1);
+        assert_eq!(s.bitflips.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn mred_uses_exact_denominator() {
+        let mut s = ErrorStats::new(8);
+        s.record(200, 100);
+        assert!((s.metrics().mred - 0.5).abs() < 1e-12);
+        // p = 0 clamps denominator to 1
+        let mut z = ErrorStats::new(8);
+        z.record(0, 3);
+        assert!((z.metrics().mred - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_merge_equals_sequential() {
+        Cases::new(0xE5, 100).run(|rng, _| {
+            let n = 8;
+            let mut all = ErrorStats::new(n);
+            let mut left = ErrorStats::new(n);
+            let mut right = ErrorStats::new(n);
+            for k in 0..200 {
+                let p = rng.next_bits(16);
+                let phat = if rng.next_bits(2) == 0 { p } else { rng.next_bits(16) };
+                all.record(p, phat);
+                if k % 2 == 0 {
+                    left.record(p, phat)
+                } else {
+                    right.record(p, phat)
+                }
+            }
+            let mut merged = left.clone();
+            merged.merge(&right);
+            assert!(merged.approx_eq(&all));
+            // commutativity (bitwise: same addition order per side)
+            let mut swapped = right.clone();
+            swapped.merge(&left);
+            assert!(swapped.approx_eq(&all));
+        });
+    }
+
+    #[test]
+    fn prop_merge_associative() {
+        let mk = |seed: u64| {
+            let mut rng = Xoshiro256::seed_from_u64(seed);
+            let mut s = ErrorStats::new(8);
+            for _ in 0..100 {
+                s.record(rng.next_bits(16), rng.next_bits(16));
+            }
+            s
+        };
+        let (a, b, c) = (mk(1), mk(2), mk(3));
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc);
+    }
+
+    #[test]
+    fn f64_roundtrip_matches_native() {
+        let mut s = ErrorStats::new(4);
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..500 {
+            s.record(rng.next_bits(8), rng.next_bits(8));
+        }
+        // Simulate the PJRT vector
+        let mut v = vec![
+            s.count as f64,
+            s.err_count as f64,
+            s.sum_ed as f64,
+            s.sum_abs_ed as f64,
+            s.max_abs_ed as f64,
+            s.sum_red,
+        ];
+        v.extend(s.bitflips.iter().map(|&f| f as f64));
+        let back = ErrorStats::from_f64_vec(4, &v).unwrap();
+        assert_eq!(back.count, s.count);
+        assert_eq!(back.err_count, s.err_count);
+        assert_eq!(back.sum_ed, s.sum_ed);
+        assert_eq!(back.max_abs_ed, s.max_abs_ed);
+        assert_eq!(back.bitflips, s.bitflips);
+        assert!(back.approx_sums);
+    }
+
+    #[test]
+    fn from_f64_rejects_wrong_len() {
+        assert!(ErrorStats::from_f64_vec(4, &[0.0; 10]).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "different bit-widths")]
+    fn merge_rejects_mixed_n() {
+        let mut a = ErrorStats::new(4);
+        a.merge(&ErrorStats::new(8));
+    }
+
+    #[test]
+    fn nmed_normalization() {
+        let mut s = ErrorStats::new(4);
+        s.record(225, 0); // max |ED| at n=4: (2^4-1)^2
+        let m = s.metrics();
+        assert!((m.nmed - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,23 @@
+//! The paper's error metrics (§III-B) and the four evaluation strategies:
+//!
+//! * [`metrics`]     — streaming accumulator + derived metric set
+//!   (BER per bit, ER, ED, MAE, MED, NMED, MRED), mergeable across chunks
+//!   and loadable from the PJRT stats vector.
+//! * [`exhaustive`]  — exact evaluation over all 2^(2n) input pairs.
+//! * [`montecarlo`]  — sampled evaluation (the paper uses 2^32 patterns;
+//!   sample count is configurable here) with uniform or weighted operand
+//!   distributions.
+//! * [`closed_form`] — Eq. (11) MAE closed form, the corrected measured
+//!   form, and latency/adder-count formulas from §III/§IV.
+//! * [`probprop`]    — the §V-B polynomial-time probability-propagation
+//!   estimator for ER (the remedy to Theorem 1/2's #P-completeness).
+
+pub mod closed_form;
+pub mod exhaustive;
+pub mod metrics;
+pub mod montecarlo;
+pub mod probprop;
+
+pub use exhaustive::exhaustive_stats;
+pub use metrics::{ErrorMetrics, ErrorStats};
+pub use montecarlo::{mc_stats, InputDist, McConfig};

@@ -1,0 +1,265 @@
+//! Monte-Carlo error evaluation.
+//!
+//! For n > 16 the paper switches to MC simulation with 2^32 uniform input
+//! patterns; here the sample count is configurable (EXPERIMENTS.md records
+//! the counts used). Sampling is chunked across workers with independent
+//! xoshiro streams, so results are deterministic per seed *and* independent
+//! of the worker count is NOT guaranteed (each worker owns a stream); for
+//! reproducibility the chunk layout is derived from the sample count and
+//! `chunk` size only, never from the worker count.
+
+use crate::multiplier::wordlevel::approx_seq_mul;
+use crate::multiplier::Multiplier;
+use crate::util::rng::Xoshiro256;
+use crate::util::threadpool::{default_workers, parallel_fold};
+
+use super::metrics::ErrorStats;
+
+/// Operand distribution for MC sampling.
+#[derive(Clone, Debug)]
+pub enum InputDist {
+    /// Uniform over `[0, 2^n)` (the paper's Fig. 2 setting).
+    Uniform,
+    /// Weighted distribution over `[0, 2^n)` via a probability table
+    /// (the paper's `Pr(a)·Pr(b)` measured-PDF MED variant); sampled with
+    /// Walker's alias method. Practical for n ≤ 16.
+    Weighted(AliasTable),
+}
+
+/// Walker alias table for O(1) weighted sampling.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (need not be normalized).
+    pub fn new(weights: &[f64]) -> Self {
+        assert!(!weights.is_empty() && weights.len() <= (1 << 16));
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must not all be zero");
+        let k = weights.len();
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * k as f64 / total).collect();
+        let mut alias = vec![0u32; k];
+        let mut small: Vec<u32> = (0..k as u32).filter(|&i| prob[i as usize] < 1.0).collect();
+        let mut large: Vec<u32> = (0..k as u32).filter(|&i| prob[i as usize] >= 1.0).collect();
+        while let (Some(s), Some(l)) = (small.pop(), large.pop()) {
+            alias[s as usize] = l;
+            prob[l as usize] = (prob[l as usize] + prob[s as usize]) - 1.0;
+            if prob[l as usize] < 1.0 {
+                small.push(l);
+            } else {
+                large.push(l);
+            }
+        }
+        // Numerical leftovers become certain columns.
+        for i in small.into_iter().chain(large) {
+            prob[i as usize] = 1.0;
+        }
+        Self { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
+        let k = self.prob.len() as u64;
+        let col = rng.next_below(k) as usize;
+        if rng.next_f64() < self.prob[col] {
+            col as u64
+        } else {
+            self.alias[col] as u64
+        }
+    }
+}
+
+/// MC evaluation configuration.
+#[derive(Clone, Debug)]
+pub struct McConfig {
+    pub samples: u64,
+    pub seed: u64,
+    /// Samples per independent RNG stream (chunk) — fixes the reproducible
+    /// decomposition of the sample space.
+    pub chunk: u64,
+    pub dist_a: InputDist,
+    pub dist_b: InputDist,
+    pub workers: usize,
+}
+
+impl McConfig {
+    pub fn uniform(samples: u64, seed: u64) -> Self {
+        Self {
+            samples,
+            seed,
+            chunk: 1 << 16,
+            dist_a: InputDist::Uniform,
+            dist_b: InputDist::Uniform,
+            workers: default_workers(),
+        }
+    }
+}
+
+#[inline]
+fn sample_operand(dist: &InputDist, n: u32, rng: &mut Xoshiro256) -> u64 {
+    match dist {
+        InputDist::Uniform => rng.next_bits(n),
+        InputDist::Weighted(table) => table.sample(rng),
+    }
+}
+
+/// MC stats for the paper's segmented sequential multiplier (fast path).
+pub fn mc_stats(n: u32, t: u32, fix: bool, cfg: &McConfig) -> ErrorStats {
+    assert!(n >= 1 && n <= 32);
+    assert!(t < n);
+    mc_run(n, cfg, |a, b, stats| {
+        stats.record(a * b, approx_seq_mul(a, b, n, t, fix));
+    })
+}
+
+/// MC stats for any [`Multiplier`].
+pub fn mc_stats_mul(m: &dyn Multiplier, cfg: &McConfig) -> ErrorStats {
+    let n = m.n();
+    mc_run(n, cfg, |a, b, stats| {
+        stats.record(a * b, m.mul(a, b));
+    })
+}
+
+fn mc_run<F>(n: u32, cfg: &McConfig, eval: F) -> ErrorStats
+where
+    F: Fn(u64, u64, &mut ErrorStats) + Sync,
+{
+    assert!(cfg.samples > 0 && cfg.chunk > 0);
+    let n_chunks = cfg.samples.div_ceil(cfg.chunk);
+    parallel_fold(
+        n_chunks,
+        cfg.workers,
+        |_, first_chunk, last_chunk| {
+            let mut stats = ErrorStats::new(n);
+            for chunk_id in first_chunk..last_chunk {
+                let mut rng = Xoshiro256::stream(cfg.seed, chunk_id);
+                let count = cfg.chunk.min(cfg.samples - chunk_id * cfg.chunk);
+                for _ in 0..count {
+                    let a = sample_operand(&cfg.dist_a, n, &mut rng);
+                    let b = sample_operand(&cfg.dist_b, n, &mut rng);
+                    eval(a, b, &mut stats);
+                }
+            }
+            stats
+        },
+        |mut acc, part| {
+            acc.merge(&part);
+            acc
+        },
+    )
+    .expect("samples > 0")
+}
+
+/// Standard error of the MED estimate (for CI-based stopping): the sample
+/// standard deviation of |ED| is not tracked exactly, so we use the
+/// conservative bound `MAE / (2·sqrt(samples))` when only `ErrorStats` is
+/// available.
+pub fn med_stderr_bound(stats: &ErrorStats) -> f64 {
+    if stats.count == 0 {
+        return f64::INFINITY;
+    }
+    stats.max_abs_ed as f64 / (2.0 * (stats.count as f64).sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::exhaustive::exhaustive_stats;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cfg = McConfig::uniform(10_000, 7);
+        let a = mc_stats(8, 4, true, &cfg);
+        let b = mc_stats(8, 4, true, &cfg);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let mut cfg = McConfig::uniform(20_000, 3);
+        cfg.workers = 1;
+        let w1 = mc_stats(8, 3, false, &cfg);
+        cfg.workers = 5;
+        let w5 = mc_stats(8, 3, false, &cfg);
+        assert!(w1.approx_eq(&w5));
+    }
+
+    #[test]
+    fn sample_count_exact_with_ragged_tail() {
+        let mut cfg = McConfig::uniform(100_001, 1);
+        cfg.chunk = 1000;
+        let s = mc_stats(8, 2, false, &cfg);
+        assert_eq!(s.count, 100_001);
+    }
+
+    #[test]
+    fn mc_converges_to_exhaustive() {
+        // ER from 2^20 samples must be within ~3 sigma of the exhaustive ER.
+        let (n, t) = (8u32, 4u32);
+        let exact = exhaustive_stats(n, t, true).metrics();
+        let mc = mc_stats(n, t, true, &McConfig::uniform(1 << 20, 11)).metrics();
+        let sigma = (exact.er * (1.0 - exact.er) / (1u64 << 20) as f64).sqrt();
+        assert!(
+            (mc.er - exact.er).abs() < 4.0 * sigma + 1e-9,
+            "MC ER {} vs exhaustive {} (sigma {sigma})",
+            mc.er,
+            exact.er
+        );
+        // MED (abs) within 2%
+        assert!(
+            (mc.med_abs - exact.med_abs).abs() / exact.med_abs < 0.02,
+            "MC med {} vs exhaustive {}",
+            mc.med_abs,
+            exact.med_abs
+        );
+    }
+
+    #[test]
+    fn alias_table_matches_weights() {
+        let weights = [0.1, 0.0, 0.4, 0.5];
+        let table = AliasTable::new(&weights);
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let mut counts = [0u64; 4];
+        let trials = 200_000;
+        for _ in 0..trials {
+            counts[table.sample(&mut rng) as usize] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        for (i, &w) in weights.iter().enumerate() {
+            let freq = counts[i] as f64 / trials as f64;
+            assert!((freq - w).abs() < 0.01, "bin {i}: {freq} vs {w}");
+        }
+    }
+
+    #[test]
+    fn weighted_dist_drives_eval() {
+        // Distribution concentrated on single values => deterministic inputs.
+        let mut wa = vec![0.0; 256];
+        wa[11] = 1.0;
+        let mut wb = vec![0.0; 256];
+        wb[6] = 1.0;
+        let cfg = McConfig {
+            samples: 100,
+            seed: 1,
+            chunk: 10,
+            dist_a: InputDist::Weighted(AliasTable::new(&wa)),
+            dist_b: InputDist::Weighted(AliasTable::new(&wb)),
+            workers: 2,
+        };
+        let s = mc_stats(8, 2, false, &cfg);
+        assert_eq!(s.count, 100);
+        // 11 * 6 never generates an LSP carry situation? just check determinism
+        let s2 = mc_stats(8, 2, false, &cfg);
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn stderr_bound_shrinks() {
+        let small = mc_stats(8, 4, false, &McConfig::uniform(1_000, 5));
+        let large = mc_stats(8, 4, false, &McConfig::uniform(100_000, 5));
+        assert!(med_stderr_bound(&large) < med_stderr_bound(&small));
+    }
+}

@@ -1,0 +1,33 @@
+//! # segmul — Accuracy-configurable Sequential Multipliers via Segmented Carry Chains
+//!
+//! A full reproduction of Echavarria et al., *"On the Approximation of
+//! Accuracy-configurable Sequential Multipliers via Segmented Carry Chains"*
+//! (2021), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2 (build-time python)** — a Pallas kernel + JAX graph computing
+//!   batched approximate products and on-device error statistics, AOT-lowered
+//!   to HLO text artifacts (`make artifacts`).
+//! * **L3 (this crate)** — the evaluation platform: software models of the
+//!   multiplier ([`multiplier`]), a gate-level netlist substrate with timing /
+//!   area / power analysis ([`netlist`], [`tech`]), the paper's error metrics
+//!   with exhaustive / Monte-Carlo / closed-form / probabilistic evaluation
+//!   ([`error`]), and an asynchronous evaluation service that batches work
+//!   onto the AOT-compiled PJRT executables ([`coordinator`], [`runtime`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod multiplier;
+pub mod netlist;
+pub mod report;
+pub mod runtime;
+pub mod tech;
+pub mod util;

@@ -1,0 +1,305 @@
+//! `segmul` — CLI for the segmented-carry sequential multiplier platform.
+//!
+//! Subcommands:
+//!   eval     — evaluate one (n, t, fix) configuration's error metrics
+//!   sweep    — sweep t for a bit-width, printing the metric table
+//!   hw       — hardware figures (FPGA + ASIC models) for one config
+//!   figures  — regenerate paper artifacts (fig2|mae|fig3a|fig3b|probprop|
+//!              headline|seqcomb|all) into the results directory
+//!   serve    — demo of the evaluation service (batched jobs, telemetry)
+//!   estimate — probability-propagation ER/MED estimates (no simulation)
+//!
+//! Global options: --artifacts DIR, --results DIR, --config FILE,
+//! --backend cpu|pjrt (default: pjrt when artifacts exist, else cpu).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use segmul::config::Config;
+use segmul::coordinator::{run_job, CpuBackend, EvalBackend, EvalJob, PjrtBackend, WorkSpec};
+use segmul::error::probprop;
+use segmul::netlist::generators::seq_mult::seq_mult;
+use segmul::report::{self, csv::Table};
+use segmul::tech::{measure_activity, AsicModel, FpgaModel};
+use segmul::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => Config::load(std::path::Path::new(path))?,
+        None => Config::discover(),
+    };
+    if let Some(dir) = args.opt("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(dir) = args.opt("results") {
+        cfg.results_dir = PathBuf::from(dir);
+    }
+    if let Some(s) = args.opt_u64("samples")? {
+        cfg.mc_samples = s;
+    }
+    if let Some(v) = args.opt_u64("hw-vectors")? {
+        cfg.hw_vectors = v;
+    }
+    if let Some(s) = args.opt_u64("seed")? {
+        cfg.seed = s;
+    }
+    Ok(cfg)
+}
+
+fn make_backend(args: &Args, cfg: &Config) -> Result<Box<dyn EvalBackend>> {
+    match args.opt("backend") {
+        Some("cpu") => Ok(Box::new(CpuBackend::new())),
+        Some("pjrt") => Ok(Box::new(PjrtBackend::load(&cfg.artifacts_dir)?)),
+        Some(other) => bail!("unknown backend {other:?} (cpu|pjrt)"),
+        None => {
+            if cfg.artifacts_dir.join("manifest.json").exists() {
+                Ok(Box::new(PjrtBackend::load(&cfg.artifacts_dir)?))
+            } else {
+                eprintln!("note: no artifacts found, using cpu backend");
+                Ok(Box::new(CpuBackend::new()))
+            }
+        }
+    }
+}
+
+fn job_from_args(args: &Args, cfg: &Config, n: u32, t: u32) -> Result<EvalJob> {
+    let fix = args.flag("fix");
+    let spec = if args.flag("exhaustive") || (n <= cfg.exhaustive_max_n && !args.flag("mc")) {
+        WorkSpec::Exhaustive
+    } else if let Some(target) = args.opt_f64("target-stderr")? {
+        WorkSpec::Adaptive { max_samples: cfg.mc_samples, seed: cfg.seed, target_rel_stderr: target }
+    } else {
+        WorkSpec::MonteCarlo { samples: cfg.mc_samples, seed: cfg.seed }
+    };
+    Ok(EvalJob { n, t, fix, spec })
+}
+
+fn print_metrics(job: &EvalJob, result: &segmul::coordinator::JobResult) {
+    let m = result.metrics();
+    println!(
+        "n={} t={} fix={} backend={} samples={} ({} batches, {:.2} Mpairs/s)",
+        job.n,
+        job.t,
+        job.fix,
+        result.backend,
+        m.samples,
+        result.batches,
+        result.throughput() / 1e6
+    );
+    println!(
+        "  ER={:.6}  MED|ED|={:.4}  MED(signed)={:.4}  MAE={}  NMED={:.3e}  MRED={:.3e}  meanBER={:.5}",
+        m.er,
+        m.med_abs,
+        m.med_signed,
+        m.mae,
+        m.nmed,
+        m.mred,
+        m.mean_ber()
+    );
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.req_u32("n")?;
+    let t = args.opt_u32("t")?.unwrap_or(n / 2);
+    let mut backend = make_backend(args, &cfg)?;
+    let job = job_from_args(args, &cfg, n, t)?;
+    let result = run_job(backend.as_mut(), &job)?;
+    print_metrics(&job, &result);
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.req_u32("n")?;
+    let mut backend = make_backend(args, &cfg)?;
+    let mut table = Table::new(&["t", "fix", "er", "med_abs", "mae", "nmed", "mred"]);
+    for t in 1..=n / 2 {
+        for fix in [false, true] {
+            let mut job = job_from_args(args, &cfg, n, t)?;
+            job.fix = fix;
+            let m = run_job(backend.as_mut(), &job)?.metrics();
+            table.row(vec![
+                t.to_string(),
+                fix.to_string(),
+                report::csv::f(m.er),
+                report::csv::f(m.med_abs),
+                m.mae.to_string(),
+                report::csv::f(m.nmed),
+                report::csv::f(m.mred),
+            ]);
+        }
+    }
+    println!("{}", table.to_text());
+    Ok(())
+}
+
+fn cmd_hw(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let n = args.req_u32("n")?;
+    let t = args.opt_u32("t")?.unwrap_or(n / 2);
+    let fix = t >= 1;
+    let c = seq_mult(n, t, fix);
+    let act = measure_activity(&c, cfg.hw_vectors, cfg.seed, fix);
+    let fpga = FpgaModel::default().evaluate(&c.nl, &act, n + 1, None);
+    let asic = AsicModel::default().evaluate(&c.nl, &act, n + 1, None);
+    println!("circuit {} — {} gates, {} FFs", c.nl.name, c.nl.gate_count(), c.nl.ff_count());
+    println!(
+        "FPGA : {} LUTs, {} CARRY4, period {:.3} ns, latency {:.2} ns, dyn {:.4} mW",
+        fpga.luts,
+        fpga.carry4s,
+        fpga.figures.period_ns,
+        fpga.figures.latency_ns,
+        fpga.figures.dyn_power_mw
+    );
+    println!(
+        "ASIC : {:.1} um2, {} cells, period {:.3} ns, latency {:.2} ns, dyn {:.4} mW, leak {:.4} mW",
+        asic.figures.resource,
+        asic.cells,
+        asic.figures.period_ns,
+        asic.figures.latency_ns,
+        asic.figures.dyn_power_mw,
+        asic.figures.static_power_mw
+    );
+    Ok(())
+}
+
+fn cmd_figures(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let mut backend = make_backend(args, &cfg)?;
+    let run = |name: &str, which: &str| which == "all" || which == name;
+    if run("fig2", which) {
+        println!("== Fig. 2 (error metrics) ==");
+        let t = report::fig2(&cfg, backend.as_mut())?;
+        println!("{}", t.to_text());
+    }
+    if run("mae", which) {
+        println!("== Eq. 11 closed-form MAE (E3) ==");
+        let t = report::mae_table(&cfg)?;
+        println!("{}", t.to_text());
+    }
+    if run("fig3a", which) {
+        println!("== Fig. 3a (FPGA) ==");
+        let t = report::fig3a(&cfg)?;
+        println!("{}", t.to_text());
+    }
+    if run("fig3b", which) {
+        println!("== Fig. 3b (ASIC) ==");
+        let t = report::fig3b(&cfg)?;
+        println!("{}", t.to_text());
+    }
+    if run("probprop", which) {
+        println!("== §V-B estimator accuracy (E6) ==");
+        let t = report::probprop_accuracy(&cfg)?;
+        println!("{}", t.to_text());
+    }
+    if run("headline", which) {
+        println!("== §V-D headline claims (E7) ==");
+        let t = report::headline(&cfg)?;
+        println!("{}", t.to_text());
+    }
+    if run("seqcomb", which) {
+        println!("== §III seq-vs-comb crossover (E8) ==");
+        let t = report::seqcomb(&cfg)?;
+        println!("{}", t.to_text());
+    }
+    println!("CSV written to {:?}", cfg.results_dir);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use segmul::coordinator::EvalService;
+    let cfg = load_config(args)?;
+    let jobs = args.opt_u64("jobs")?.unwrap_or(16);
+    let n = args.opt_u32("n")?.unwrap_or(16);
+    let samples = cfg.mc_samples;
+    let artifacts = cfg.artifacts_dir.clone();
+    let use_cpu = matches!(args.opt("backend"), Some("cpu"))
+        || !artifacts.join("manifest.json").exists();
+    let svc = EvalService::start(move || {
+        if use_cpu {
+            Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+        } else {
+            Ok(Box::new(PjrtBackend::load(&artifacts)?) as Box<dyn EvalBackend>)
+        }
+    })?;
+    println!("service up; submitting {jobs} jobs (n={n}, {samples} samples each)");
+    let started = std::time::Instant::now();
+    let tickets: Vec<_> = (0..jobs)
+        .map(|i| {
+            let t = 1 + (i as u32 % (n / 2).max(1));
+            svc.submit(EvalJob::mc(n, t, i % 2 == 0, samples, cfg.seed + i))
+        })
+        .collect();
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let r = ticket.wait()?;
+        let m = r.metrics();
+        println!(
+            "  job {i:>3}: t={} fix={} ER={:.5} MED={:.2} ({:.1} ms)",
+            r.job.t,
+            r.job.fix,
+            m.er,
+            m.med_abs,
+            r.wall.as_secs_f64() * 1e3
+        );
+    }
+    let wall = started.elapsed();
+    let t = svc.telemetry();
+    println!(
+        "done: {} jobs, {} pairs in {:.2} s ({:.2} Mpairs/s end-to-end, {} batches)",
+        t.jobs_completed,
+        t.pairs_evaluated,
+        wall.as_secs_f64(),
+        t.pairs_evaluated as f64 / wall.as_secs_f64() / 1e6,
+        t.batches_executed
+    );
+    svc.shutdown();
+    Ok(())
+}
+
+fn cmd_estimate(args: &Args) -> Result<()> {
+    let n = args.req_u32("n")?;
+    let t = args.opt_u32("t")?.unwrap_or(n / 2);
+    let lat = probprop::propagate(n, t);
+    println!("probability-propagation estimates for n={n}, t={t} (no simulation):");
+    println!("  ER  ≈ {:.6}", lat.er_estimate());
+    println!("  MED ≈ {:.4} (signed, fix-to-1 off)", lat.med_estimate());
+    println!("  P(fix-to-1 triggers) ≈ {:.6}", lat.fix_probability());
+    Ok(())
+}
+
+fn usage() -> &'static str {
+    "usage: segmul <eval|sweep|hw|figures|serve|estimate> [options]
+  eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
+  sweep    --n N [options as eval]
+  hw       --n N [--t T] [--hw-vectors V]
+  figures  [fig2|mae|fig3a|fig3b|probprop|headline|seqcomb|all] [--results DIR]
+  serve    [--jobs J] [--n N] [--backend cpu|pjrt]
+  estimate --n N [--t T]"
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("eval") => cmd_eval(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("hw") => cmd_hw(&args),
+        Some("figures") => cmd_figures(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("estimate") => cmd_estimate(&args),
+        Some("help") | None => {
+            println!("{}", usage());
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}\n{}", usage()),
+    }
+}

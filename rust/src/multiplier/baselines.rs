@@ -1,0 +1,267 @@
+//! Re-implemented approximate multipliers from the related work.
+//!
+//! Fig. 2 of the paper compares the segmented-carry sequential multiplier
+//! against combinatorial approximate multipliers from the literature. The
+//! authors' exact RTL is not available, so we re-implement the three classic
+//! families those works build on, each with tunable aggressiveness, to
+//! populate the same accuracy axes:
+//!
+//! * [`TruncatedMul`] / [`BrokenArrayMul`] — partial-product truncation
+//!   (vertical/horizontal break lines), the basis of fixed-width and
+//!   broken-array multipliers.
+//! * [`MitchellLog`] — Mitchell's logarithmic multiplier, the basis of the
+//!   approximate logarithmic designs (Liu et al. [10]).
+//! * [`Kulkarni2x2`] — the underdesigned 2×2-block multiplier
+//!   (3×3 ≈ 7 building block), the basis of block-composed designs.
+
+use super::Multiplier;
+
+/// Vertical truncation: every partial-product bit in columns `< k` is
+/// dropped (no compensation). `k = 0` is exact.
+#[derive(Clone, Copy, Debug)]
+pub struct TruncatedMul {
+    pub n: u32,
+    pub k: u32,
+}
+
+impl Multiplier for TruncatedMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        let mut p = 0u64;
+        for j in 0..self.n {
+            if (b >> j) & 1 == 0 {
+                continue;
+            }
+            let drop = self.k.saturating_sub(j).min(self.n);
+            p += (a >> drop) << (j + drop);
+        }
+        p
+    }
+
+    fn name(&self) -> String {
+        format!("trunc(n={},k={})", self.n, self.k)
+    }
+}
+
+/// Broken-array multiplier: drops partial-product rows `j < hbl` and
+/// columns `< vbl`. `(0, 0)` is exact; `(0, k)` equals [`TruncatedMul`].
+#[derive(Clone, Copy, Debug)]
+pub struct BrokenArrayMul {
+    pub n: u32,
+    pub hbl: u32,
+    pub vbl: u32,
+}
+
+impl Multiplier for BrokenArrayMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        let mut p = 0u64;
+        for j in self.hbl..self.n {
+            if (b >> j) & 1 == 0 {
+                continue;
+            }
+            let drop = self.vbl.saturating_sub(j).min(self.n);
+            p += (a >> drop) << (j + drop);
+        }
+        p
+    }
+
+    fn name(&self) -> String {
+        format!("bam(n={},hbl={},vbl={})", self.n, self.hbl, self.vbl)
+    }
+}
+
+/// Mitchell's logarithmic multiplier: `p ≈ antilog2(log2 a + log2 b)` with
+/// piecewise-linear log/antilog. Exact when both operands are powers of two.
+#[derive(Clone, Copy, Debug)]
+pub struct MitchellLog {
+    pub n: u32,
+}
+
+impl Multiplier for MitchellLog {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let k1 = 63 - a.leading_zeros(); // characteristic of a
+        let k2 = 63 - b.leading_zeros();
+        let x1 = a - (1u64 << k1); // mantissa numerators (x / 2^k)
+        let x2 = b - (1u64 << k2);
+        let k = k1 + k2;
+        // S = 2^K * (f1 + f2)
+        let s = (x1 << k2) + (x2 << k1);
+        if s < (1u64 << k) {
+            (1u64 << k) + s // 2^K (1 + f1 + f2)
+        } else {
+            s << 1 // 2^{K+1} (f1 + f2)
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("mitchell(n={})", self.n)
+    }
+}
+
+/// Kulkarni's underdesigned multiplier: exact 2×2 blocks except
+/// `3 × 3 = 7` (saves the MSB of the 2×2 product), composed recursively.
+/// `n` must be a power of two.
+#[derive(Clone, Copy, Debug)]
+pub struct Kulkarni2x2 {
+    pub n: u32,
+}
+
+impl Kulkarni2x2 {
+    fn mul_rec(a: u64, b: u64, n: u32) -> u64 {
+        if n == 2 {
+            return if a == 3 && b == 3 { 7 } else { a * b };
+        }
+        let h = n / 2;
+        let mask = (1u64 << h) - 1;
+        let (al, ah) = (a & mask, a >> h);
+        let (bl, bh) = (b & mask, b >> h);
+        let ll = Self::mul_rec(al, bl, h);
+        let lh = Self::mul_rec(al, bh, h);
+        let hl = Self::mul_rec(ah, bl, h);
+        let hh = Self::mul_rec(ah, bh, h);
+        (hh << n) + ((lh + hl) << h) + ll
+    }
+}
+
+impl Multiplier for Kulkarni2x2 {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        assert!(self.n.is_power_of_two() && self.n >= 2);
+        Self::mul_rec(a, b, self.n)
+    }
+
+    fn name(&self) -> String {
+        format!("kulkarni(n={})", self.n)
+    }
+}
+
+/// The baseline set plotted alongside our design in Fig. 2, with a spread
+/// of aggressiveness comparable to the cited works' configurations.
+pub fn fig2_baselines(n: u32) -> Vec<Box<dyn Multiplier>> {
+    let mut v: Vec<Box<dyn Multiplier>> = vec![
+        Box::new(TruncatedMul { n, k: n / 4 }),
+        Box::new(TruncatedMul { n, k: n / 2 }),
+        Box::new(BrokenArrayMul { n, hbl: n / 4, vbl: n / 2 }),
+        Box::new(MitchellLog { n }),
+    ];
+    if n.is_power_of_two() {
+        v.push(Box::new(Kulkarni2x2 { n }));
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn trunc_k0_exact() {
+        Cases::new(10, 200).run(|rng, _| {
+            let n = 2 + rng.next_below(31) as u32;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(n);
+            assert_eq!(TruncatedMul { n, k: 0 }.mul(a, b), a * b);
+        });
+    }
+
+    #[test]
+    fn trunc_underestimates() {
+        Cases::new(11, 200).run(|rng, _| {
+            let n = 4 + rng.next_below(29) as u32;
+            let k = rng.next_below(n as u64) as u32;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(n);
+            let p = TruncatedMul { n, k }.mul(a, b);
+            assert!(p <= a * b, "truncation must never overestimate");
+            // dropped columns bound: sum of columns < k of full PP array
+            let bound: u64 = (0..k).map(|c| (c.min(n - 1) as u64 + 1) << c).sum();
+            assert!(a * b - p <= bound);
+        });
+    }
+
+    #[test]
+    fn bam_equals_trunc_when_hbl0() {
+        Cases::new(12, 200).run(|rng, _| {
+            let n = 4 + rng.next_below(13) as u32;
+            let k = rng.next_below(n as u64) as u32;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(n);
+            assert_eq!(
+                BrokenArrayMul { n, hbl: 0, vbl: k }.mul(a, b),
+                TruncatedMul { n, k }.mul(a, b)
+            );
+        });
+    }
+
+    #[test]
+    fn mitchell_exact_on_powers_of_two() {
+        for i in 0..8u32 {
+            for j in 0..8u32 {
+                let m = MitchellLog { n: 8 };
+                assert_eq!(m.mul(1 << i, 1 << j), 1u64 << (i + j));
+            }
+        }
+    }
+
+    #[test]
+    fn mitchell_known_error_bound() {
+        // Mitchell's relative error is bounded by ~11.1% underestimation.
+        let m = MitchellLog { n: 16 };
+        Cases::new(13, 500).run(|rng, _| {
+            let a = 1 + rng.next_below((1 << 16) - 1);
+            let b = 1 + rng.next_below((1 << 16) - 1);
+            let p = (a * b) as f64;
+            let phat = m.mul(a, b) as f64;
+            assert!(phat <= p + 1e-9, "Mitchell never overestimates");
+            assert!((p - phat) / p <= 0.1140, "rel err {} too large", (p - phat) / p);
+        });
+    }
+
+    #[test]
+    fn kulkarni_base_case() {
+        let m = Kulkarni2x2 { n: 2 };
+        for a in 0..4u64 {
+            for b in 0..4u64 {
+                let expect = if a == 3 && b == 3 { 7 } else { a * b };
+                assert_eq!(m.mul(a, b), expect);
+            }
+        }
+    }
+
+    #[test]
+    fn kulkarni_exact_without_33_blocks() {
+        // If every 2-bit digit pair avoids (3,3), the product is exact.
+        let m = Kulkarni2x2 { n: 8 };
+        assert_eq!(m.mul(0b10_01_10_01, 0b01_10_01_10), 0b10011001u64 * 0b01100110);
+        // And the canonical error case: all digits 3.
+        assert!(m.mul(0xFF, 0xFF) < 0xFFu64 * 0xFF);
+    }
+
+    #[test]
+    fn fig2_set_nonempty_and_distinct_names() {
+        let set = fig2_baselines(8);
+        assert!(set.len() >= 4);
+        let mut names: Vec<String> = set.iter().map(|m| m.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), set.len());
+    }
+}

@@ -1,0 +1,119 @@
+//! Literal transcription of the paper's Boolean recurrences (§IV-A).
+//!
+//! This module is deliberately written from the `Ŝ_i^j` / `Ĉ_i^j` equations
+//! rather than from the word-level algorithm, so the two implementations can
+//! catch a mis-reading of the paper in either direction. It is the
+//! ground-truth oracle for every other model (word-level, Pallas kernel,
+//! gate-level netlist).
+
+/// Approximate sequential multiply per the paper's equations.
+///
+/// `n ≤ 32` (result fits u64), `0 ≤ t < n`. `t = 0` yields the fully
+/// accurate multiplier (the LSP adder is empty; the paper's `i = t` D-FF
+/// case never fires).
+pub fn approx_seq_mul_bitlevel(a: u64, b: u64, n: u32, t: u32, fix_to_1: bool) -> u64 {
+    let n = n as usize;
+    let t = t as usize;
+    assert!(n >= 1 && n <= 32);
+    assert!(t < n);
+    let abit: Vec<u8> = (0..n).map(|i| ((a >> i) & 1) as u8).collect();
+    let bbit: Vec<u8> = (0..n).map(|j| ((b >> j) & 1) as u8).collect();
+
+    // S[j][i], i in [0, n]; S[j][n] is the carry-out C_{n-1}^j.
+    let mut s = vec![vec![0u8; n + 1]; n];
+    // C[j][i], i in [0, n).
+    let mut c = vec![vec![0u8; n]; n];
+
+    // j = 0: S^0 = a & -b_0; C_i^0 = 0 (paper's first cases).
+    for i in 0..n {
+        s[0][i] = abit[i] & bbit[0];
+    }
+    s[0][n] = 0;
+
+    for j in 1..n {
+        // i = 0: S = Ŝ_1^{j-1} ⊕ (a_0 ∧ b_j), C = Ŝ_1^{j-1} ∧ (a_0 ∧ b_j).
+        let pp0 = abit[0] & bbit[j];
+        s[j][0] = s[j - 1][1] ^ pp0;
+        c[j][0] = s[j - 1][1] & pp0;
+        for i in 1..n {
+            let pp = abit[i] & bbit[j];
+            // The segmentation: bit t consumes the D-FF'd previous-cycle
+            // LSP carry-out Ĉ_{t-1}^{j-1}; all other bits ripple in-cycle.
+            let cin = if i == t { c[j - 1][t - 1] } else { c[j][i - 1] };
+            s[j][i] = s[j - 1][i + 1] ^ cin ^ pp;
+            c[j][i] = ((s[j - 1][i + 1] ^ pp) & cin) | (s[j - 1][i + 1] & pp);
+        }
+        // i = n: Ŝ_n^j = Ĉ_{n-1}^j.
+        s[j][n] = c[j][n - 1];
+    }
+
+    // Product construction (the paper's p̂_r cases).
+    let mut p: u64 = 0;
+    for r in 0..n.saturating_sub(1) {
+        p |= (s[r][0] as u64) << r;
+    }
+    for r in (n - 1)..(2 * n) {
+        p |= (s[n - 1][r + 1 - n] as u64) << r;
+    }
+
+    // Fix-to-1: Ĉ_{t-1}^{n-1} = 1 forces the n+t LSBs to 1.
+    if fix_to_1 && t >= 1 && n >= 2 && c[n - 1][t - 1] == 1 {
+        p |= (1u64 << (n + t)) - 1;
+    }
+    p
+}
+
+/// The fully accurate recurrence (the paper's unsegmented `S_i^j`/`C_i^j`,
+/// §III-A) — must equal `a * b` for all inputs; used to validate the
+/// transcription machinery itself.
+pub fn exact_seq_mul_bitlevel(a: u64, b: u64, n: u32) -> u64 {
+    // t = 0 disables the D-FF path entirely.
+    approx_seq_mul_bitlevel(a, b, n, 0, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn exact_recurrence_is_multiplication() {
+        for n in 1..=8u32 {
+            for a in 0..(1u64 << n.min(6)) {
+                for b in 0..(1u64 << n.min(6)) {
+                    assert_eq!(exact_seq_mul_bitlevel(a, b, n), a * b, "n={n} a={a} b={b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_table2b() {
+        assert_eq!(approx_seq_mul_bitlevel(0b1011, 0b0110, 4, 2, false), 82);
+    }
+
+    #[test]
+    fn prop_exact_random_wide() {
+        Cases::new(0xB17, 200).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(n);
+            assert_eq!(exact_seq_mul_bitlevel(a, b, n), a * b);
+        });
+    }
+
+    #[test]
+    fn approximation_only_differs_when_carry_crosses_t() {
+        // If b has a single set bit there is only one nonzero partial
+        // product, no carries are ever generated, and the result is exact.
+        for n in [8u32, 16] {
+            for t in 1..n / 2 {
+                for j in 0..n {
+                    let b = 1u64 << j;
+                    let a = (1u64 << n) - 1;
+                    assert_eq!(approx_seq_mul_bitlevel(a, b, n, t, false), a * b);
+                }
+            }
+        }
+    }
+}

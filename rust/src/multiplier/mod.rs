@@ -1,0 +1,117 @@
+//! Software models of the paper's multipliers and the related-work baselines.
+//!
+//! * [`wordlevel`] — the fast word-level model of the segmented-carry
+//!   sequential multiplier (the L3 hot path for exhaustive / Monte-Carlo
+//!   evaluation), generic over the word type so the same code serves
+//!   n ≤ 32 (`u64`), n ≤ 63 (`u128`) and n ≤ 255 ([`wide::U512`]).
+//! * [`bitlevel`] — a literal transcription of the paper's `Ŝ_i^j`/`Ĉ_i^j`
+//!   Boolean recurrences (§IV-A); the ground-truth oracle.
+//! * [`wide`] — a small fixed-width U512 integer for the n ∈ {64,128,256}
+//!   hardware sweeps (Fig. 3).
+//! * [`baselines`] — re-implemented approximate multipliers from the
+//!   related work plotted in Fig. 2 (truncation / broken-array, Mitchell's
+//!   logarithmic multiplier, Kulkarni's 2x2-block multiplier).
+
+pub mod baselines;
+pub mod bitlevel;
+pub mod wide;
+pub mod wordlevel;
+
+pub use bitlevel::approx_seq_mul_bitlevel;
+pub use wide::U512;
+pub use wordlevel::{approx_seq_mul, approx_seq_mul_u128, approx_seq_mul_wide, exact_mul};
+
+/// A (possibly approximate) n-bit unsigned multiplier producing 2n-bit
+/// products. All Fig. 2 error evaluation is driven through this trait.
+pub trait Multiplier: Sync {
+    /// Operand bit-width n (operands are `< 2^n`); n ≤ 32 for this trait
+    /// (products fit in u64).
+    fn n(&self) -> u32;
+    /// The (approximate) product of `a * b`.
+    fn mul(&self, a: u64, b: u64) -> u64;
+    /// Display name used in reports, e.g. `"segmul(n=8,t=4,fix)"`.
+    fn name(&self) -> String;
+}
+
+/// The paper's design: accuracy-configurable sequential multiplier with a
+/// carry chain segmented at bit `t` (t = 0 degenerates to accurate).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegmentedSeqMul {
+    pub n: u32,
+    pub t: u32,
+    pub fix_to_1: bool,
+}
+
+impl SegmentedSeqMul {
+    pub fn new(n: u32, t: u32, fix_to_1: bool) -> Self {
+        assert!(n >= 1 && n <= 32, "SegmentedSeqMul supports 1 <= n <= 32");
+        assert!(t < n, "splitting point must satisfy 0 <= t < n");
+        Self { n, t, fix_to_1 }
+    }
+
+    /// The paper's recommended configuration space is `t <= n/2`.
+    pub fn paper_configs(n: u32, fix_to_1: bool) -> Vec<Self> {
+        (2..=n / 2).map(|t| Self::new(n, t, fix_to_1)).collect()
+    }
+}
+
+impl Multiplier for SegmentedSeqMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        wordlevel::approx_seq_mul(a, b, self.n, self.t, self.fix_to_1)
+    }
+
+    fn name(&self) -> String {
+        format!(
+            "segmul(n={},t={}{})",
+            self.n,
+            self.t,
+            if self.fix_to_1 { ",fix" } else { "" }
+        )
+    }
+}
+
+/// The accurate reference multiplier.
+#[derive(Clone, Copy, Debug)]
+pub struct AccurateMul {
+    pub n: u32,
+}
+
+impl Multiplier for AccurateMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        wordlevel::exact_mul(a, b, self.n)
+    }
+    fn name(&self) -> String {
+        format!("accurate(n={})", self.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_range() {
+        let cfgs = SegmentedSeqMul::paper_configs(8, true);
+        assert_eq!(cfgs.iter().map(|c| c.t).collect::<Vec<_>>(), vec![2, 3, 4]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_t_equal_n() {
+        SegmentedSeqMul::new(8, 8, false);
+    }
+
+    #[test]
+    fn trait_dispatch_matches_fn() {
+        let m = SegmentedSeqMul::new(8, 3, true);
+        assert_eq!(m.mul(200, 100), wordlevel::approx_seq_mul(200, 100, 8, 3, true));
+        assert_eq!(m.name(), "segmul(n=8,t=3,fix)");
+    }
+}

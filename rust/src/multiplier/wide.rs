@@ -1,0 +1,384 @@
+//! U512 — fixed-width 512-bit unsigned integer.
+//!
+//! Supports the n ∈ {64, 128, 256} configurations of the paper's hardware
+//! sweep (Fig. 3): operands up to 256 bits, products up to 512 bits. Only
+//! the operations the multiplier models and evaluators need are implemented
+//! (add/sub with wrap, shifts, bitwise ops, comparison, full multiply,
+//! decimal/hex formatting).
+
+use std::cmp::Ordering;
+use std::fmt;
+
+const LIMBS: usize = 8;
+
+/// Little-endian 8×u64 fixed-width unsigned integer.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct U512 {
+    limbs: [u64; LIMBS],
+}
+
+impl U512 {
+    pub const ZERO: U512 = U512 { limbs: [0; LIMBS] };
+    pub const ONE: U512 = {
+        let mut l = [0u64; LIMBS];
+        l[0] = 1;
+        U512 { limbs: l }
+    };
+    pub const MAX: U512 = U512 { limbs: [u64::MAX; LIMBS] };
+
+    #[inline]
+    pub fn from_u64(v: u64) -> Self {
+        let mut l = [0u64; LIMBS];
+        l[0] = v;
+        Self { limbs: l }
+    }
+
+    #[inline]
+    pub fn from_u128(v: u128) -> Self {
+        let mut l = [0u64; LIMBS];
+        l[0] = v as u64;
+        l[1] = (v >> 64) as u64;
+        Self { limbs: l }
+    }
+
+    #[inline]
+    pub fn limb(&self, i: usize) -> u64 {
+        self.limbs[i]
+    }
+
+    #[inline]
+    pub fn is_zero(&self) -> bool {
+        self.limbs.iter().all(|&l| l == 0)
+    }
+
+    /// Bit `i` (0-based), false beyond 511.
+    #[inline]
+    pub fn bit(&self, i: u32) -> bool {
+        if i >= 512 {
+            return false;
+        }
+        (self.limbs[(i / 64) as usize] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set bit `i` to 1.
+    #[inline]
+    pub fn set_bit(&mut self, i: u32) {
+        assert!(i < 512);
+        self.limbs[(i / 64) as usize] |= 1u64 << (i % 64);
+    }
+
+    /// Number of significant bits (position of highest set bit + 1).
+    pub fn bits(&self) -> u32 {
+        for i in (0..LIMBS).rev() {
+            if self.limbs[i] != 0 {
+                return (i as u32) * 64 + (64 - self.limbs[i].leading_zeros());
+            }
+        }
+        0
+    }
+
+    /// All-ones mask of the low `nbits` bits (nbits ≤ 512).
+    pub fn mask_lo(nbits: u32) -> Self {
+        assert!(nbits <= 512);
+        let mut l = [0u64; LIMBS];
+        let full = (nbits / 64) as usize;
+        for limb in l.iter_mut().take(full) {
+            *limb = u64::MAX;
+        }
+        let rem = nbits % 64;
+        if rem != 0 && full < LIMBS {
+            l[full] = (1u64 << rem) - 1;
+        }
+        Self { limbs: l }
+    }
+
+    #[inline]
+    pub fn wrapping_add(&self, rhs: &Self) -> Self {
+        let mut out = [0u64; LIMBS];
+        let mut carry = 0u64;
+        for i in 0..LIMBS {
+            let (s1, c1) = self.limbs[i].overflowing_add(rhs.limbs[i]);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out[i] = s2;
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        Self { limbs: out }
+    }
+
+    #[inline]
+    pub fn wrapping_sub(&self, rhs: &Self) -> Self {
+        let mut out = [0u64; LIMBS];
+        let mut borrow = 0u64;
+        for i in 0..LIMBS {
+            let (d1, b1) = self.limbs[i].overflowing_sub(rhs.limbs[i]);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out[i] = d2;
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        Self { limbs: out }
+    }
+
+    #[inline]
+    pub fn shl(&self, sh: u32) -> Self {
+        if sh >= 512 {
+            return Self::ZERO;
+        }
+        let word = (sh / 64) as usize;
+        let bit = sh % 64;
+        let mut out = [0u64; LIMBS];
+        for i in (0..LIMBS).rev() {
+            if i < word {
+                continue;
+            }
+            let mut v = self.limbs[i - word] << bit;
+            if bit != 0 && i - word >= 1 {
+                v |= self.limbs[i - word - 1] >> (64 - bit);
+            }
+            out[i] = v;
+        }
+        Self { limbs: out }
+    }
+
+    #[inline]
+    pub fn shr(&self, sh: u32) -> Self {
+        if sh >= 512 {
+            return Self::ZERO;
+        }
+        let word = (sh / 64) as usize;
+        let bit = sh % 64;
+        let mut out = [0u64; LIMBS];
+        for i in 0..LIMBS {
+            if i + word >= LIMBS {
+                break;
+            }
+            let mut v = self.limbs[i + word] >> bit;
+            if bit != 0 && i + word + 1 < LIMBS {
+                v |= self.limbs[i + word + 1] << (64 - bit);
+            }
+            out[i] = v;
+        }
+        Self { limbs: out }
+    }
+
+    /// Full 512-bit wrapping multiply (schoolbook over limbs).
+    pub fn wrapping_mul(&self, rhs: &Self) -> Self {
+        let mut out = [0u64; LIMBS];
+        for i in 0..LIMBS {
+            if self.limbs[i] == 0 {
+                continue;
+            }
+            let mut carry = 0u128;
+            for j in 0..(LIMBS - i) {
+                let cur = out[i + j] as u128
+                    + (self.limbs[i] as u128) * (rhs.limbs[j] as u128)
+                    + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+        }
+        Self { limbs: out }
+    }
+
+    /// Absolute difference and sign (`self - rhs`): (|diff|, diff >= 0).
+    pub fn abs_diff(&self, rhs: &Self) -> (Self, bool) {
+        if self >= rhs {
+            (self.wrapping_sub(rhs), true)
+        } else {
+            (rhs.wrapping_sub(self), false)
+        }
+    }
+
+    /// Approximate f64 value (for statistics; exact below 2^53).
+    pub fn to_f64(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for i in (0..LIMBS).rev() {
+            acc = acc * 1.8446744073709552e19 + self.limbs[i] as f64;
+        }
+        acc
+    }
+
+    pub fn to_hex(&self) -> String {
+        let top = ((self.bits().max(1) + 63) / 64) as usize;
+        let mut s = String::new();
+        for i in (0..top).rev() {
+            if i == top - 1 {
+                s.push_str(&format!("{:x}", self.limbs[i]));
+            } else {
+                s.push_str(&format!("{:016x}", self.limbs[i]));
+            }
+        }
+        s
+    }
+}
+
+impl Ord for U512 {
+    fn cmp(&self, other: &Self) -> Ordering {
+        for i in (0..LIMBS).rev() {
+            match self.limbs[i].cmp(&other.limbs[i]) {
+                Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+}
+
+impl PartialOrd for U512 {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl fmt::Debug for U512 {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "U512(0x{})", self.to_hex())
+    }
+}
+
+macro_rules! forward_bitop {
+    ($trait_:ident, $fn_:ident, $op:tt) => {
+        impl std::ops::$trait_ for U512 {
+            type Output = U512;
+            #[inline]
+            fn $fn_(self, rhs: U512) -> U512 {
+                let mut out = [0u64; LIMBS];
+                for i in 0..LIMBS {
+                    out[i] = self.limbs[i] $op rhs.limbs[i];
+                }
+                U512 { limbs: out }
+            }
+        }
+    };
+}
+
+forward_bitop!(BitAnd, bitand, &);
+forward_bitop!(BitOr, bitor, |);
+forward_bitop!(BitXor, bitxor, ^);
+
+impl std::ops::Add for U512 {
+    type Output = U512;
+    #[inline]
+    fn add(self, rhs: U512) -> U512 {
+        self.wrapping_add(&rhs)
+    }
+}
+
+impl std::ops::Shl<u32> for U512 {
+    type Output = U512;
+    #[inline]
+    fn shl(self, sh: u32) -> U512 {
+        U512::shl(&self, sh)
+    }
+}
+
+impl std::ops::Shr<u32> for U512 {
+    type Output = U512;
+    #[inline]
+    fn shr(self, sh: u32) -> U512 {
+        U512::shr(&self, sh)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn add_sub_roundtrip() {
+        Cases::new(1, 300).run(|rng, _| {
+            let a = U512::from_u128(((rng.next_u64() as u128) << 64) | rng.next_u64() as u128);
+            let b = U512::from_u128(((rng.next_u64() as u128) << 64) | rng.next_u64() as u128);
+            assert_eq!(a.wrapping_add(&b).wrapping_sub(&b), a);
+        });
+    }
+
+    #[test]
+    fn mul_matches_u128() {
+        Cases::new(2, 300).run(|rng, _| {
+            let a = rng.next_u64();
+            let b = rng.next_u64();
+            let got = U512::from_u64(a).wrapping_mul(&U512::from_u64(b));
+            assert_eq!(got, U512::from_u128(a as u128 * b as u128));
+        });
+    }
+
+    #[test]
+    fn shifts_match_u128() {
+        Cases::new(3, 300).run(|rng, _| {
+            let v = ((rng.next_u64() as u128) << 64) | rng.next_u64() as u128;
+            let sh = rng.next_below(128) as u32;
+            // U512 is wide enough that no bits fall off for sh < 128:
+            assert_eq!(U512::from_u128(v).shl(sh).shr(sh), U512::from_u128(v));
+            // truncated back to 128 bits it matches the u128 shift:
+            let truncated = U512::from_u128(v).shl(sh) & U512::mask_lo(128);
+            assert_eq!(truncated, U512::from_u128(v << sh));
+            assert_eq!(U512::from_u128(v).shr(sh), U512::from_u128(v >> sh));
+        });
+    }
+
+    #[test]
+    fn shift_across_limbs() {
+        let one = U512::ONE;
+        let big = one.shl(200);
+        assert!(big.bit(200));
+        assert_eq!(big.bits(), 201);
+        assert_eq!(big.shr(200), one);
+        assert_eq!(one.shl(512), U512::ZERO);
+    }
+
+    #[test]
+    fn mask_lo_correct() {
+        assert_eq!(U512::mask_lo(0), U512::ZERO);
+        assert_eq!(U512::mask_lo(1), U512::ONE);
+        assert_eq!(U512::mask_lo(64), U512::from_u64(u64::MAX));
+        assert_eq!(U512::mask_lo(65), U512::from_u128((1u128 << 65) - 1));
+        assert_eq!(U512::mask_lo(512), U512::MAX);
+        // (1 << t) - 1 identity used by the word-level multiplier
+        for t in [0u32, 1, 63, 64, 100, 300] {
+            let via_ops = (U512::ONE.shl(t)).wrapping_sub(&U512::ONE);
+            assert_eq!(via_ops, U512::mask_lo(t), "t={t}");
+        }
+    }
+
+    #[test]
+    fn cmp_ordering() {
+        let a = U512::from_u64(5);
+        let b = U512::ONE.shl(300);
+        assert!(a < b);
+        assert!(b > a);
+        assert_eq!(a.cmp(&a), Ordering::Equal);
+    }
+
+    #[test]
+    fn abs_diff_signs() {
+        let a = U512::from_u64(10);
+        let b = U512::from_u64(4);
+        assert_eq!(a.abs_diff(&b), (U512::from_u64(6), true));
+        assert_eq!(b.abs_diff(&a), (U512::from_u64(6), false));
+    }
+
+    #[test]
+    fn to_f64_exact_small() {
+        assert_eq!(U512::from_u64(12345).to_f64(), 12345.0);
+        let big = U512::ONE.shl(100);
+        assert!((big.to_f64() - 2f64.powi(100)).abs() / 2f64.powi(100) < 1e-12);
+    }
+
+    #[test]
+    fn wide_multiply_256bit_operands() {
+        // (2^256 - 1)^2 = 2^512 - 2^257 + 1 (mod 2^512)
+        let x = U512::mask_lo(256);
+        let sq = x.wrapping_mul(&x);
+        let expect = U512::ZERO
+            .wrapping_sub(&U512::ONE.shl(257))
+            .wrapping_add(&U512::ONE);
+        assert_eq!(sq, expect);
+    }
+
+    #[test]
+    fn hex_format() {
+        assert_eq!(U512::from_u64(0xdeadbeef).to_hex(), "deadbeef");
+        assert_eq!(U512::ONE.shl(64).to_hex(), "10000000000000000");
+    }
+}

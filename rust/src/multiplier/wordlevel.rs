@@ -1,0 +1,356 @@
+//! Word-level model of the segmented-carry sequential multiplier.
+//!
+//! This is the L3 hot path: exhaustive and Monte-Carlo error evaluation run
+//! hundreds of millions of these per figure, so the inner loop is branch-free
+//! (the partial product is selected with a mask, not an `if`) and fully
+//! inlined. Bit-exactness to the paper's Boolean recurrences is enforced by
+//! tests against [`super::bitlevel`].
+//!
+//! Per clock cycle `j = 1..n` (cycle 0 loads `a & -b_0`):
+//! ```text
+//! x    = s >> 1                       // previous sum, shifted right once
+//! pp   = b_j ? a : 0                  // partial product
+//! lsum = (x & M_t) + (pp & M_t)       // t-bit LSP adder, carry-in 0
+//! msum = (x >> t) + (pp >> t) + cff   // MSP adder; carry-in = D-FF'd LSP
+//!                                     //   carry-out of the PREVIOUS cycle
+//! s'   = (msum << t) | (lsum & M_t)
+//! cff' = (lsum >> t) & 1
+//! ```
+//! with the product bit `p_{j-1} = s & 1` shifted out each cycle; after the
+//! last cycle `p̂[2n-1 .. n-1] = s`, and fix-to-1 forces the `n+t` LSBs to 1
+//! when the final LSP carry-out is 1.
+
+use super::wide::U512;
+
+/// Minimal unsigned-word interface so one generic implementation serves
+/// u64 (n ≤ 32), u128 (n ≤ 63), and U512 (n ≤ 255).
+pub trait MulWord:
+    Copy
+    + PartialEq
+    + std::ops::BitAnd<Output = Self>
+    + std::ops::BitOr<Output = Self>
+    + std::ops::Add<Output = Self>
+    + std::ops::Shl<u32, Output = Self>
+    + std::ops::Shr<u32, Output = Self>
+{
+    const ZERO: Self;
+    const ONE: Self;
+    /// Two's-complement negation (for mask selection: `0 - 1 = all-ones`).
+    fn wrapping_neg_word(self) -> Self;
+    /// All-ones mask of the low `bits` bits (bits < word width).
+    fn mask_lo_word(bits: u32) -> Self;
+    /// Lowest 64 bits (used for bit tests).
+    fn low_u64(self) -> u64;
+}
+
+impl MulWord for u64 {
+    const ZERO: Self = 0;
+    const ONE: Self = 1;
+    #[inline(always)]
+    fn wrapping_neg_word(self) -> Self {
+        self.wrapping_neg()
+    }
+    #[inline(always)]
+    fn mask_lo_word(bits: u32) -> Self {
+        debug_assert!(bits < 64);
+        (1u64 << bits) - 1
+    }
+    #[inline(always)]
+    fn low_u64(self) -> u64 {
+        self
+    }
+}
+
+impl MulWord for u128 {
+    const ZERO: Self = 0;
+    const ONE: Self = 1;
+    #[inline(always)]
+    fn wrapping_neg_word(self) -> Self {
+        self.wrapping_neg()
+    }
+    #[inline(always)]
+    fn mask_lo_word(bits: u32) -> Self {
+        debug_assert!(bits < 128);
+        (1u128 << bits) - 1
+    }
+    #[inline(always)]
+    fn low_u64(self) -> u64 {
+        self as u64
+    }
+}
+
+impl MulWord for U512 {
+    const ZERO: Self = U512::ZERO;
+    const ONE: Self = U512::ONE;
+    #[inline(always)]
+    fn wrapping_neg_word(self) -> Self {
+        U512::ZERO.wrapping_sub(&self)
+    }
+    #[inline(always)]
+    fn mask_lo_word(bits: u32) -> Self {
+        U512::mask_lo(bits)
+    }
+    #[inline(always)]
+    fn low_u64(self) -> u64 {
+        self.limb(0)
+    }
+}
+
+/// Generic word-level segmented-carry sequential multiply.
+///
+/// Requirements: `n >= 1`, `0 <= t < n`, operands `< 2^n`, and the word type
+/// must hold `2n` bits.
+#[inline(always)]
+pub fn approx_seq_mul_word<W: MulWord>(a: W, b: W, n: u32, t: u32, fix_to_1: bool) -> W {
+    debug_assert!(t < n);
+    let mt = W::mask_lo_word(t); // (1 << t) - 1
+    // s = b_0 ? a : 0   — branch-free via mask = 0 - bit
+    let bit0 = b & W::ONE;
+    let mut s = a & bit0.wrapping_neg_word();
+    let mut cff = W::ZERO;
+    let mut low = W::ZERO;
+    for j in 1..n {
+        low = low | ((s & W::ONE) << (j - 1));
+        let x = s >> 1;
+        let bj = (b >> j) & W::ONE;
+        let pp = a & bj.wrapping_neg_word();
+        let lsum = (x & mt) + (pp & mt);
+        let clsp = (lsum >> t) & W::ONE;
+        let msum = (x >> t) + (pp >> t) + cff;
+        s = (msum << t) | (lsum & mt);
+        cff = clsp;
+    }
+    let mut phat = (s << (n - 1)) | low;
+    if fix_to_1 && cff.low_u64() == 1 {
+        phat = phat | W::mask_lo_word(n + t);
+    }
+    phat
+}
+
+/// u64 fast path with an exhausted-multiplier early exit: once every
+/// remaining multiplicand bit is 0 AND the deferred carry has been
+/// consumed, the remaining cycles are pure right-shifts whose effect has
+/// the closed form `p̂ = (s << (j-1)) | low` — so the loop runs only
+/// `highest_set_bit(b) + 2` iterations instead of n. (Bit-exactness vs.
+/// the generic loop is property-tested below.)
+#[inline(always)]
+fn approx_seq_mul_u64_fast(a: u64, b: u64, n: u32, t: u32, fix_to_1: bool) -> u64 {
+    let mt = (1u64 << t) - 1;
+    let mut s = a & (b & 1).wrapping_neg();
+    let mut cff = 0u64;
+    let mut low = 0u64;
+    let mut j = 1u32;
+    while j < n {
+        let pp_possible = (b >> j) != 0;
+        if !pp_possible && cff == 0 {
+            // remaining cycles only shift: p̂ = (s << (j-1)) | low.
+            // The final LSP carry-out is 0 here, so fix-to-1 never fires.
+            return (s << (j - 1)) | low;
+        }
+        low |= (s & 1) << (j - 1);
+        let x = s >> 1;
+        let pp = a & ((b >> j) & 1).wrapping_neg();
+        let lsum = (x & mt) + (pp & mt);
+        let clsp = (lsum >> t) & 1;
+        let msum = (x >> t) + (pp >> t) + cff;
+        s = (msum << t) | (lsum & mt);
+        cff = clsp;
+        j += 1;
+    }
+    let mut phat = (s << (n - 1)) | low;
+    if fix_to_1 && cff == 1 {
+        phat |= (1u64 << (n + t)) - 1;
+    }
+    phat
+}
+
+/// Approximate product for n ≤ 32 (product fits in u64). Hot path.
+#[inline(always)]
+pub fn approx_seq_mul(a: u64, b: u64, n: u32, t: u32, fix_to_1: bool) -> u64 {
+    debug_assert!(n >= 1 && n <= 32);
+    debug_assert!(a < (1u64 << n) && b < (1u64 << n));
+    approx_seq_mul_u64_fast(a, b, n, t, fix_to_1)
+}
+
+/// Generic-loop variant kept for differential testing of the fast path.
+#[inline(always)]
+pub fn approx_seq_mul_generic(a: u64, b: u64, n: u32, t: u32, fix_to_1: bool) -> u64 {
+    approx_seq_mul_word(a, b, n, t, fix_to_1)
+}
+
+/// Approximate product for n ≤ 63.
+#[inline]
+pub fn approx_seq_mul_u128(a: u128, b: u128, n: u32, t: u32, fix_to_1: bool) -> u128 {
+    debug_assert!(n >= 1 && n <= 63);
+    approx_seq_mul_word(a, b, n, t, fix_to_1)
+}
+
+/// Approximate product for n ≤ 255 (hardware sweeps up to n = 256 use the
+/// netlist simulator directly; this covers the software cross-check).
+#[inline]
+pub fn approx_seq_mul_wide(a: &U512, b: &U512, n: u32, t: u32, fix_to_1: bool) -> U512 {
+    debug_assert!(n >= 1 && n <= 255);
+    approx_seq_mul_word(*a, *b, n, t, fix_to_1)
+}
+
+/// Exact 2n-bit product for n ≤ 32.
+#[inline(always)]
+pub fn exact_mul(a: u64, b: u64, n: u32) -> u64 {
+    debug_assert!(n <= 32 && a < (1u64 << n) && b < (1u64 << n));
+    a * b
+}
+
+/// Signed error distance `ED = dec(p) - dec(p̂)` (Eq. 4), exact for n ≤ 32.
+#[inline(always)]
+pub fn error_distance(p: u64, phat: u64) -> i64 {
+    p.wrapping_sub(phat) as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::bitlevel::approx_seq_mul_bitlevel;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn golden_paper_table2b() {
+        // Table IIb: a=1011₂, b=0110₂, n=4, t=2; exact = 66. The delayed
+        // LSP carry from cycle 2 lands one position high in cycle 3:
+        // p̂ = 82, ED = -16 (overshoot 2^{t+j} with j = 2).
+        assert_eq!(exact_mul(0b1011, 0b0110, 4), 66);
+        assert_eq!(approx_seq_mul(0b1011, 0b0110, 4, 2, false), 82);
+        assert_eq!(approx_seq_mul(0b1011, 0b0110, 4, 2, true), 82);
+    }
+
+    #[test]
+    fn golden_paper_table1_accurate() {
+        // Table Ib: accurate sequential multiplication (t = 0 degenerate).
+        assert_eq!(approx_seq_mul(0b1011, 0b0110, 4, 0, false), 66);
+    }
+
+    #[test]
+    fn exhaustive_equals_bitlevel_n_le_6() {
+        for n in 1..=6u32 {
+            for t in 0..n {
+                for fix in [false, true] {
+                    for a in 0..(1u64 << n) {
+                        for b in 0..(1u64 << n) {
+                            let w = approx_seq_mul(a, b, n, t, fix);
+                            let bl = approx_seq_mul_bitlevel(a, b, n, t, fix);
+                            assert_eq!(w, bl, "n={n} t={t} fix={fix} a={a} b={b}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_equals_bitlevel_random_n_le_32() {
+        Cases::new(0xBEEF, 400).run(|rng, _| {
+            let n = 2 + (rng.next_below(31)) as u32; // 2..=32
+            let t = rng.next_below(n as u64) as u32;
+            let fix = rng.next_bits(1) == 1;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(n);
+            assert_eq!(
+                approx_seq_mul(a, b, n, t, fix),
+                approx_seq_mul_bitlevel(a, b, n, t, fix),
+                "n={n} t={t} fix={fix} a={a} b={b}"
+            );
+        });
+    }
+
+    #[test]
+    fn prop_t_zero_is_accurate() {
+        Cases::new(0xACC, 300).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(n);
+            assert_eq!(approx_seq_mul(a, b, n, 0, false), a * b);
+            assert_eq!(approx_seq_mul(a, b, n, 0, true), a * b);
+        });
+    }
+
+    #[test]
+    fn prop_u128_matches_u64_on_overlap() {
+        Cases::new(0x128, 300).run(|rng, _| {
+            let n = 2 + rng.next_below(31) as u32;
+            let t = rng.next_below(n as u64) as u32;
+            let fix = rng.next_bits(1) == 1;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(n);
+            assert_eq!(
+                approx_seq_mul_u128(a as u128, b as u128, n, t, fix) as u64,
+                approx_seq_mul(a, b, n, t, fix)
+            );
+        });
+    }
+
+    #[test]
+    fn prop_wide_matches_u128() {
+        Cases::new(0x512, 200).run(|rng, _| {
+            let n = 2 + rng.next_below(62) as u32; // 2..=63
+            let t = rng.next_below(n as u64) as u32;
+            let fix = rng.next_bits(1) == 1;
+            let a = rng.next_bits(n.min(63)) as u128;
+            let b = rng.next_bits(n.min(63)) as u128;
+            let w = approx_seq_mul_wide(&U512::from_u128(a), &U512::from_u128(b), n, t, fix);
+            let r = approx_seq_mul_u128(a, b, n, t, fix);
+            assert_eq!(w, U512::from_u128(r), "n={n} t={t}");
+        });
+    }
+
+    #[test]
+    fn u128_t_zero_accurate_large_n() {
+        let a = (1u128 << 60) - 3;
+        let b = (1u128 << 60) - 7;
+        assert_eq!(approx_seq_mul_u128(a, b, 61, 0, false), a * b);
+    }
+
+    #[test]
+    fn prop_fast_path_equals_generic() {
+        Cases::new(0xFA57, 600).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let t = rng.next_below(n as u64) as u32;
+            let fix = rng.next_bits(1) == 1;
+            // bias towards small b so the early exit actually fires
+            let bbits = 1 + rng.next_below(n as u64) as u32;
+            let a = rng.next_bits(n);
+            let b = rng.next_bits(bbits);
+            assert_eq!(
+                approx_seq_mul(a, b, n, t, fix),
+                approx_seq_mul_generic(a, b, n, t, fix),
+                "n={n} t={t} fix={fix} a={a} b={b}"
+            );
+        });
+    }
+
+    #[test]
+    fn error_distance_sign() {
+        // Dropped final carry => p̂ < p => ED > 0; overshoot => ED < 0.
+        assert_eq!(error_distance(66, 82), -16);
+        assert_eq!(error_distance(82, 66), 16);
+    }
+
+    #[test]
+    fn fix_to_1_sets_low_bits() {
+        // Find a case where the final LSP carry-out is 1 and check the
+        // n+t LSBs are forced to 1.
+        let (n, t) = (8u32, 4u32);
+        let mut found = false;
+        for a in 0..256u64 {
+            for b in 0..256u64 {
+                let nofix = approx_seq_mul(a, b, n, t, false);
+                let fix = approx_seq_mul(a, b, n, t, true);
+                if nofix != fix {
+                    let mask = (1u64 << (n + t)) - 1;
+                    assert_eq!(fix & mask, mask);
+                    assert_eq!(fix >> (n + t), nofix >> (n + t));
+                    found = true;
+                }
+            }
+        }
+        assert!(found, "no fix-to-1 trigger found at n=8,t=4");
+    }
+}

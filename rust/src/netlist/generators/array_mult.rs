@@ -1,0 +1,111 @@
+//! Combinational array multiplier (§III, Table Ia).
+//!
+//! The n-1-adder grade-school architecture the paper contrasts against:
+//! n² AND partial products accumulated row by row with ripple-carry
+//! adders. Used for E8 (sequential-vs-combinational resource crossover).
+
+use crate::netlist::graph::{Net, Netlist, NetlistBuilder};
+
+use super::adders::ripple_adder;
+
+/// Build the n×n combinational array multiplier (2n-bit product).
+pub fn array_mult(n: u32) -> Netlist {
+    assert!(n >= 2);
+    let mut b = NetlistBuilder::new(&format!("arraymul_n{n}"));
+    let a = b.input_bus(n);
+    let bb = b.input_bus(n);
+    let zero = b.constant(false);
+
+    // Partial-product rows: pp[j][i] = a_i ∧ b_j.
+    let rows: Vec<Vec<Net>> = (0..n as usize)
+        .map(|j| a.iter().map(|&ai| b.and2(ai, bb[j])).collect())
+        .collect();
+
+    // Row-by-row accumulation. Invariant entering round j: `acc` holds the
+    // partial sum of rows 0..j shifted so acc[0] has product weight
+    // 2^{j-1}; product bit 2^{j-1} is finalized by retiring acc[0], and
+    // the rest is added to row j.
+    let mut product: Vec<Net> = Vec::with_capacity(2 * n as usize);
+    let mut acc: Vec<Net> = rows[0].clone(); // rows 0 sum; acc[0] = p_0
+    for (j, row) in rows.iter().enumerate().skip(1) {
+        product.push(acc[0]); // finalize p_{j-1}
+        // augend = acc >> 1, zero-padded to the row width.
+        let mut augend: Vec<Net> = acc[1..].to_vec();
+        while augend.len() < row.len() {
+            augend.push(zero);
+        }
+        let (mut sums, cout, chain, members) = ripple_adder(&mut b, &augend, row, zero);
+        b.tag_carry_chain_full(&format!("row{j}"), &chain, &members);
+        sums.push(cout);
+        acc = sums; // n+1 bits: weights 2^j .. 2^{j+n}
+        // next round's row must be padded to acc[1..].len() = n — rows are
+        // exactly n bits, and augend drops back to n via the shift: OK.
+    }
+    // After the last row (j = n-1): acc holds product bits n-1 .. 2n-1.
+    product.extend(acc.iter().copied());
+    assert_eq!(product.len(), 2 * n as usize);
+
+    for (r, net) in product.iter().enumerate() {
+        b.output(&format!("p[{r}]"), *net);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::eval_comb;
+    use crate::util::prop::Cases;
+
+    fn mul_via_netlist(nl: &Netlist, n: u32, x: u64, y: u64) -> u64 {
+        let mut inputs = Vec::new();
+        for i in 0..n {
+            inputs.push(if (x >> i) & 1 == 1 { u64::MAX } else { 0 });
+        }
+        for i in 0..n {
+            inputs.push(if (y >> i) & 1 == 1 { u64::MAX } else { 0 });
+        }
+        let vals = eval_comb(nl, &inputs, &[]);
+        let mut out = 0u64;
+        for r in 0..2 * n {
+            let net = nl.find_output(&format!("p[{r}]")).unwrap();
+            out |= (vals[net.0 as usize] & 1) << r;
+        }
+        out
+    }
+
+    #[test]
+    fn exhaustive_4bit() {
+        let nl = array_mult(4);
+        for x in 0..16u64 {
+            for y in 0..16u64 {
+                assert_eq!(mul_via_netlist(&nl, 4, x, y), x * y, "{x}*{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_random_up_to_16() {
+        Cases::new(0xA77, 40).run(|rng, _| {
+            let n = 2 + rng.next_below(15) as u32;
+            let nl = array_mult(n);
+            let x = rng.next_bits(n);
+            let y = rng.next_bits(n);
+            assert_eq!(mul_via_netlist(&nl, n, x, y), x * y, "n={n} {x}*{y}");
+        });
+    }
+
+    #[test]
+    fn area_scales_quadratically() {
+        // n² partial products dominate: gates(2n) / gates(n) ≈ 4.
+        let g8 = array_mult(8).gate_count() as f64;
+        let g16 = array_mult(16).gate_count() as f64;
+        let ratio = g16 / g8;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
+    }
+
+    #[test]
+    fn no_flip_flops() {
+        assert_eq!(array_mult(8).ff_count(), 0);
+    }
+}

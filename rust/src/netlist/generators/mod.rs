@@ -1,0 +1,70 @@
+//! Structural generators for the paper's circuits.
+//!
+//! * [`adders`]     — ripple-carry full-adder chains (the building block;
+//!   carry chains are tagged for the technology models).
+//! * [`seq_mult`]   — the sequential multipliers of Fig. 1: accurate (1a)
+//!   and approximate with segmented carry chain, D-FF carry deferral,
+//!   fix-to-1 muxes and the decrement/zero-detect controller (1b).
+//! * [`array_mult`] — the combinational array multiplier of §III (the
+//!   n-1-adder baseline motivating the sequential approach).
+
+pub mod adders;
+pub mod array_mult;
+pub mod seq_mult;
+
+pub use seq_mult::{seq_mult, SeqMultCircuit};
+
+/// Pack per-operand values into per-bit 64-way words: `out[i]` holds bit i
+/// of up to 64 values (vector v in lane v).
+pub fn pack_bits_u512(values: &[crate::multiplier::U512], nbits: u32) -> Vec<u64> {
+    assert!(values.len() <= 64);
+    let mut words = vec![0u64; nbits as usize];
+    for (lane, v) in values.iter().enumerate() {
+        for (i, w) in words.iter_mut().enumerate() {
+            if v.bit(i as u32) {
+                *w |= 1u64 << lane;
+            }
+        }
+    }
+    words
+}
+
+/// Unpack per-bit words back into values (lane-major).
+pub fn unpack_bits_u512(words: &[u64], lanes: usize) -> Vec<crate::multiplier::U512> {
+    assert!(lanes <= 64 && words.len() <= 512);
+    let mut out = vec![crate::multiplier::U512::ZERO; lanes];
+    for (i, w) in words.iter().enumerate() {
+        for (lane, v) in out.iter_mut().enumerate() {
+            if (w >> lane) & 1 == 1 {
+                v.set_bit(i as u32);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::U512;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let vals: Vec<U512> = (0..64u64).map(|i| U512::from_u64(i * 2654435761)).collect();
+        let words = pack_bits_u512(&vals, 40);
+        let back = unpack_bits_u512(&words, 64);
+        for (orig, got) in vals.iter().zip(&back) {
+            let masked = *orig & U512::mask_lo(40);
+            assert_eq!(*got, masked);
+        }
+    }
+
+    #[test]
+    fn pack_partial_lanes() {
+        let vals = vec![U512::from_u64(0b101), U512::from_u64(0b011)];
+        let words = pack_bits_u512(&vals, 3);
+        assert_eq!(words, vec![0b11, 0b10, 0b01]);
+        let back = unpack_bits_u512(&words, 2);
+        assert_eq!(back, vals);
+    }
+}

@@ -1,0 +1,339 @@
+//! The sequential multipliers of Fig. 1.
+//!
+//! Accurate (Fig. 1a): shift registers A (n bits + carry D-FF) and B
+//! (n bits), one n-bit ripple adder. Per clock: the adder sums the
+//! right-shifted previous accumulation `x = {C_FF, A[n-1:1]}` with the
+//! partial product `a ∧ B[0]`; A latches the sum, C_FF the carry-out, and
+//! B shifts right taking `A[0]` (the retiring product bit) from the left.
+//!
+//! Approximate (Fig. 1b): the adder's carry chain is segmented at bit `t`
+//! — a t-bit LSP adder whose carry-out feeds a D flip-flop, and an
+//! (n-t)-bit MSP adder whose carry-in is the FF's *previous-cycle* value.
+//! A decrement unit (down counter + zero detect) raises `last` in the
+//! final cycle; when the final LSP carry-out is 1 and fix-to-1 is enabled,
+//! multiplexers force the n+t product LSBs to 1 (registers B and A[t:0]).
+//!
+//! The generated netlist is cycle-accurate against the word-level software
+//! model for every n, t, fix (see `netlist_integration`).
+
+use crate::multiplier::U512;
+use crate::netlist::graph::{Net, Netlist, NetlistBuilder};
+use crate::netlist::sim::SeqSim;
+
+use super::adders::ripple_adder;
+use super::{pack_bits_u512, unpack_bits_u512};
+
+/// A generated sequential multiplier with its interface map.
+pub struct SeqMultCircuit {
+    pub nl: Netlist,
+    pub n: u32,
+    /// Splitting point; 0 = accurate (no segmentation hardware).
+    pub t: u32,
+    /// Whether the fix-to-1 muxes were generated.
+    pub has_fix: bool,
+    /// Output nets of the product bits, LSB first (length 2n; read after
+    /// a combinational settle following the final clock).
+    product_nets: Vec<crate::netlist::graph::Net>,
+}
+
+/// Input ordering: `a[0..n)`, `b[0..n)`, `load`, `fix_mode`.
+const fn input_count(n: u32) -> usize {
+    (2 * n + 2) as usize
+}
+
+/// Generate the sequential multiplier. `t = 0` produces the accurate
+/// design of Fig. 1a (no LSP FF, no muxes, but the same controller).
+pub fn seq_mult(n: u32, t: u32, with_fix: bool) -> SeqMultCircuit {
+    assert!(n >= 2, "need n >= 2");
+    assert!(t < n, "t must be in [0, n)");
+    assert!(!(with_fix && t == 0), "fix-to-1 requires a segmented chain (t >= 1)");
+    let mut b = NetlistBuilder::new(&format!("seqmul_n{n}_t{t}{}", if with_fix { "_fix" } else { "" }));
+
+    // ---- primary inputs ----------------------------------------------
+    let a_in = b.input_bus(n);
+    let b_in = b.input_bus(n);
+    let load = b.input();
+    let fix_mode = b.input();
+    let zero = b.constant(false);
+    let one = b.constant(true);
+
+    // ---- state ---------------------------------------------------------
+    let a_reg = b.ff_bus("A", n); // accumulated sum
+    let c_ff = b.ff("Cout"); // adder carry-out delay FF
+    let b_reg = b.ff_bus("B", n); // multiplicand / low product shift register
+    let lsp_ff = if t >= 1 { Some(b.ff("ClspFF")) } else { None };
+
+    // ---- decrement unit (down counter + zero detect -> `last`) ---------
+    // Counts n-1 .. 0 across the n accumulation cycles; `last` is high in
+    // the final cycle. The counter is log2ceil(n) bits.
+    let cnt_w = 32 - (n - 1).leading_zeros().min(31);
+    let cnt = b.ff_bus("cnt", cnt_w.max(1));
+    // decrementer: cnt - 1 (ripple borrow: half subtractor per bit).
+    // On the FPGA target this maps onto the dedicated carry chain, so the
+    // borrow gates are tagged as chain members.
+    let mut borrow = one; // subtracting 1 == borrow-in at bit 0
+    let mut dec = Vec::with_capacity(cnt.len());
+    let mut dec_couts = Vec::with_capacity(cnt.len());
+    let mut dec_members = Vec::with_capacity(3 * cnt.len());
+    for &bit in &cnt {
+        let d = b.xor2(bit, borrow);
+        let nb = b.not(bit);
+        borrow = b.and2(nb, borrow);
+        dec.push(d);
+        dec_couts.push(borrow);
+        dec_members.extend_from_slice(&[d, nb, borrow]);
+    }
+    b.tag_carry_chain_full("decrement", &dec_couts, &dec_members);
+    // zero detect: balanced OR tree then NOT (packs into one LUT6 for
+    // counters up to 6 bits): last = (cnt == 0)
+    let mut layer: Vec<Net> = cnt.clone();
+    while layer.len() > 1 {
+        let mut next = Vec::with_capacity(layer.len().div_ceil(2));
+        for pair in layer.chunks(2) {
+            next.push(if pair.len() == 2 { b.or2(pair[0], pair[1]) } else { pair[0] });
+        }
+        layer = next;
+    }
+    let last = b.not(layer[0]);
+    // counter next state: load ? n-1 : cnt-1
+    for (i, (&q, &d)) in cnt.iter().zip(&dec).enumerate() {
+        let init = if ((n - 1) >> i) & 1 == 1 { one } else { zero };
+        let nxt = b.mux2(d, init, load);
+        b.connect_ff(q, nxt);
+    }
+
+    // ---- datapath: shifted augend and partial product ------------------
+    // x = {C_FF, A[n-1:1]}  (the "right-shifted once" adder input)
+    let mut x = Vec::with_capacity(n as usize);
+    for i in 0..n as usize {
+        x.push(if i + 1 < n as usize { a_reg[i + 1] } else { c_ff });
+    }
+    // pp = a & B[0]
+    let pp: Vec<Net> = a_in.iter().map(|&ai| b.and2(ai, b_reg[0])).collect();
+
+    // ---- the (possibly segmented) accumulation adder --------------------
+    let (sums, cout, clsp_comb) = if t == 0 {
+        let (sums, cout, chain, members) = ripple_adder(&mut b, &x, &pp, zero);
+        b.tag_carry_chain_full("acc", &chain, &members);
+        (sums, cout, None)
+    } else {
+        let ti = t as usize;
+        let (lsums, clsp, lchain, lmem) = ripple_adder(&mut b, &x[..ti], &pp[..ti], zero);
+        b.tag_carry_chain_full("lsp", &lchain, &lmem);
+        let ff = lsp_ff.unwrap();
+        let (msums, cout, mchain, mmem) = ripple_adder(&mut b, &x[ti..], &pp[ti..], ff);
+        b.tag_carry_chain_full("msp", &mchain, &mmem);
+        let mut sums = lsums;
+        sums.extend(msums);
+        (sums, cout, Some(clsp))
+    };
+
+    // ---- fix-to-1 ------------------------------------------------------
+    // The fix decision fires when the FINAL accumulation's LSP carry-out
+    // is 1: fe = last ∧ fix_mode ∧ Ĉ_{t-1}^{n-1}. It is latched into a
+    // dedicated D-FF at the final clock edge and applied on the READ-OUT
+    // path (output-side multiplexing, Fig. 1b) — so the adder's shortened
+    // carry chain, not the fix logic, sets the clock period.
+    let fix_ff = match (with_fix, clsp_comb) {
+        (true, Some(clsp)) => {
+            let lf = b.and2(last, fix_mode);
+            let fe = b.and2(lf, clsp);
+            let q = b.ff("FixFF");
+            let nl = b.not(load);
+            let gated = b.and2(fe, nl); // cleared on load
+            b.connect_ff(q, gated);
+            Some(q)
+        }
+        _ => None,
+    };
+
+    // ---- register next-state logic --------------------------------------
+    // A[i] <= load ? 0 : sum[i]
+    for (i, &q) in a_reg.iter().enumerate() {
+        let d = sums[i];
+        let nl = b.not(load);
+        let gated = b.and2(d, nl); // load clears A
+        b.connect_ff(q, gated);
+    }
+    // C_FF <= load ? 0 : cout
+    {
+        let nl = b.not(load);
+        let gated = b.and2(cout, nl);
+        b.connect_ff(c_ff, gated);
+    }
+    // LSP FF <= load ? 0 : clsp (cleared on load so the first
+    // accumulation sees a zero deferred carry)
+    if let (Some(ff), Some(clsp)) = (lsp_ff, clsp_comb) {
+        let nl = b.not(load);
+        let gated = b.and2(clsp, nl);
+        b.connect_ff(ff, gated);
+    }
+    // B[i] <= load ? b_in[i] : shift-right
+    for (i, &q) in b_reg.iter().enumerate() {
+        let shifted = if i + 1 < n as usize { b_reg[i + 1] } else { a_reg[0] };
+        let with_load = b.mux2(shifted, b_in[i], load);
+        b.connect_ff(q, with_load);
+    }
+
+    // ---- outputs ---------------------------------------------------------
+    // Product: p[r] = B[r+1] for r < n-1; p[n-1+i] = A[i]; p[2n-1] = C_FF.
+    // With fix-to-1, the n+t LSBs are OR-ed with the latched fix decision
+    // (output-side multiplexing — one OR per affected product bit).
+    let mut product_nets = Vec::with_capacity(2 * n as usize);
+    for r in 0..(2 * n as usize) {
+        let q = if r < n as usize - 1 {
+            b_reg[r + 1]
+        } else if r < 2 * n as usize - 1 {
+            a_reg[r + 1 - n as usize]
+        } else {
+            c_ff
+        };
+        let out = match fix_ff {
+            Some(ff) if (r as u32) < n + t => b.or2(q, ff),
+            _ => q,
+        };
+        b.output(&format!("p[{r}]"), out);
+        product_nets.push(out);
+    }
+
+    SeqMultCircuit { nl: b.build(), n, t, has_fix: with_fix, product_nets }
+}
+
+/// One batched run (≤ 64 operand pairs): load cycle + n accumulation
+/// cycles, cycle-accurate. Returns the 2n-bit products.
+pub fn run_batch(c: &SeqMultCircuit, sim: &mut SeqSim, a: &[U512], b: &[U512], fix: bool) -> Vec<U512> {
+    assert!(a.len() == b.len() && a.len() <= 64);
+    let n = c.n;
+    let lanes = a.len();
+    let a_words = pack_bits_u512(a, n);
+    let b_words = pack_bits_u512(b, n);
+
+    let mut inputs = vec![0u64; input_count(n)];
+    inputs[..n as usize].copy_from_slice(&a_words);
+    inputs[n as usize..2 * n as usize].copy_from_slice(&b_words);
+    let fix_word = if fix && c.has_fix { u64::MAX } else { 0 };
+
+    // load cycle
+    inputs[2 * n as usize] = u64::MAX; // load
+    inputs[2 * n as usize + 1] = fix_word;
+    sim.step(&inputs);
+    // n accumulation cycles (the counter supplies `last` internally)
+    inputs[2 * n as usize] = 0;
+    for _ in 0..n {
+        sim.step(&inputs);
+    }
+    // settle the read-out logic (fix OR gates) and read the product nets
+    sim.settle(&inputs);
+    let words: Vec<u64> = c.product_nets.iter().map(|&net| sim.vals[net.0 as usize]).collect();
+    unpack_bits_u512(&words, lanes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::wordlevel::{approx_seq_mul, approx_seq_mul_wide};
+    use crate::util::prop::Cases;
+    use crate::util::rng::Xoshiro256;
+
+    fn check_against_word_model(n: u32, t: u32, fix: bool, trials: usize, seed: u64) {
+        let c = seq_mult(n, t, t >= 1);
+        let mut sim = SeqSim::new(&c.nl);
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let a: Vec<U512> = (0..trials).map(|_| U512::from_u64(rng.next_bits(n.min(63)))).collect();
+        let b: Vec<U512> = (0..trials).map(|_| U512::from_u64(rng.next_bits(n.min(63)))).collect();
+        let got = run_batch(&c, &mut sim, &a, &b, fix);
+        for ((&ga, &gb), gp) in a.iter().zip(&b).zip(&got) {
+            let want = approx_seq_mul_wide(&ga, &gb, n, t, fix);
+            assert_eq!(*gp, want, "n={n} t={t} fix={fix} a={ga:?} b={gb:?}");
+        }
+    }
+
+    #[test]
+    fn accurate_matches_exact_products() {
+        let c = seq_mult(8, 0, false);
+        let mut sim = SeqSim::new(&c.nl);
+        let a: Vec<U512> = (0..64u64).map(|i| U512::from_u64((i * 37) & 0xFF)).collect();
+        let b: Vec<U512> = (0..64u64).map(|i| U512::from_u64((i * 91) & 0xFF)).collect();
+        let got = run_batch(&c, &mut sim, &a, &b, false);
+        for ((x, y), p) in a.iter().zip(&b).zip(&got) {
+            assert_eq!(p.limb(0), x.limb(0) * y.limb(0));
+        }
+    }
+
+    #[test]
+    fn approx_matches_word_model_various_configs() {
+        for (n, t) in [(4u32, 2u32), (6, 3), (8, 3), (8, 4), (12, 5)] {
+            check_against_word_model(n, t, false, 64, n as u64 * 10 + t as u64);
+            check_against_word_model(n, t, true, 64, n as u64 * 100 + t as u64);
+        }
+    }
+
+    #[test]
+    fn prop_random_configs() {
+        Cases::new(0x5E9, 12).run(|rng, _| {
+            let n = 3 + rng.next_below(14) as u32; // 3..=16
+            let t = rng.next_below(n as u64) as u32;
+            let fix = t >= 1 && rng.next_bits(1) == 1;
+            check_against_word_model(n, t, fix, 32, rng.next_u64());
+        });
+    }
+
+    #[test]
+    fn wide_circuit_matches_wide_model() {
+        // n = 40: beyond u64 products, exercises the U512 path end-to-end.
+        let (n, t) = (40u32, 20u32);
+        let c = seq_mult(n, t, true);
+        let mut sim = SeqSim::new(&c.nl);
+        let mut rng = Xoshiro256::seed_from_u64(77);
+        let a: Vec<U512> = (0..16).map(|_| U512::from_u64(rng.next_bits(40))).collect();
+        let b: Vec<U512> = (0..16).map(|_| U512::from_u64(rng.next_bits(40))).collect();
+        for fix in [false, true] {
+            let got = run_batch(&c, &mut sim, &a, &b, fix);
+            for ((x, y), p) in a.iter().zip(&b).zip(&got) {
+                assert_eq!(*p, approx_seq_mul_wide(x, y, n, t, fix));
+            }
+        }
+    }
+
+    #[test]
+    fn fix_or_count_scales_with_t() {
+        // Fix-to-1 instrumentation: n+t read-out OR gates (the paper's
+        // "multiplexing of the least significant n+t bits") + the enable
+        // ANDs + one FF — no multiplexers, nothing on the adder path.
+        let plain = seq_mult(8, 4, false);
+        let fixed = seq_mult(8, 4, true);
+        let ph = plain.nl.gate_histogram();
+        let fh = fixed.nl.gate_histogram();
+        let extra_or = fh.get("OR2").unwrap_or(&0) - ph.get("OR2").unwrap_or(&0);
+        assert_eq!(extra_or, (8 + 4) as usize);
+        assert_eq!(
+            fh.get("MUX2").unwrap_or(&0),
+            ph.get("MUX2").unwrap_or(&0),
+            "no extra muxes"
+        );
+        // both have the LSP FF (t >= 1); fix adds only the Fix FF
+        assert_eq!(fixed.nl.ff_count(), plain.nl.ff_count() + 1);
+    }
+
+    #[test]
+    fn segmented_shortens_critical_path() {
+        use crate::netlist::timing::{analyze, UnitDelay};
+        let acc = analyze(&seq_mult(16, 0, false).nl, &UnitDelay).critical_path_ps;
+        let seg = analyze(&seq_mult(16, 8, true).nl, &UnitDelay).critical_path_ps;
+        assert!(
+            seg < acc,
+            "segmentation must shorten the critical path (acc {acc}, seg {seg})"
+        );
+    }
+
+    #[test]
+    fn word_model_spot_check_consistency() {
+        // The circuit-vs-word agreement implies circuit == paper equations,
+        // but pin one literal value anyway (Table IIb).
+        let c = seq_mult(4, 2, false);
+        let mut sim = SeqSim::new(&c.nl);
+        let got = run_batch(&c, &mut sim, &[U512::from_u64(0b1011)], &[U512::from_u64(0b0110)], false);
+        assert_eq!(got[0].limb(0), 82);
+        assert_eq!(approx_seq_mul(0b1011, 0b0110, 4, 2, false), 82);
+    }
+}

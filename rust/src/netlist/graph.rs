@@ -1,0 +1,402 @@
+//! Netlist graph: gates, flip-flops, primary I/O, carry-chain tags.
+//!
+//! Nets are dense indices (`Net`), each driven by exactly one source
+//! (constant, primary input, gate output, or D-FF output). The builder
+//! checks single-driver and acyclicity invariants and produces a levelized
+//! evaluation order for the simulator and the timing analyzer.
+
+/// A net id (index into the netlist's driver table).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Net(pub u32);
+
+/// Combinational gate kinds (2-input unless noted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GateKind {
+    Not,
+    And,
+    Or,
+    Xor,
+    Nand,
+    Nor,
+    Xnor,
+    /// 2:1 multiplexer: `sel ? b : a` (inputs ordered `[a, b, sel]`).
+    Mux,
+}
+
+impl GateKind {
+    pub fn fanin(&self) -> usize {
+        match self {
+            GateKind::Not => 1,
+            GateKind::Mux => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// What drives a net.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Driver {
+    Const(bool),
+    /// Primary input (index into the input list).
+    Input(u32),
+    /// Combinational gate over other nets.
+    Gate { kind: GateKind, ins: Vec<Net> },
+    /// D flip-flop output (index into the FF list); next-state net is
+    /// registered separately in `Netlist::ffs`.
+    Ff(u32),
+}
+
+/// A D flip-flop: output net `q`, data input net `d` (asynchronous clear
+/// is modeled by the simulator's reset).
+#[derive(Clone, Debug)]
+pub struct FlipFlop {
+    pub q: Net,
+    pub d: Net,
+    pub name: String,
+}
+
+/// A tagged carry chain (sequence of carry-out nets, LSB first). Used by
+/// the FPGA model to map onto dedicated carry logic and by both tech
+/// models for critical-path reasoning.
+#[derive(Clone, Debug)]
+pub struct CarryChain {
+    pub name: String,
+    /// Per-bit carry-out nets (chain length = couts.len()).
+    pub couts: Vec<Net>,
+    /// Every gate realized inside the dedicated carry logic (generate /
+    /// propagate-AND, carry mux/OR, sum XORCY) — excluded from LUT packing
+    /// and charged the fast carry delay by the FPGA model.
+    pub members: Vec<Net>,
+}
+
+/// An immutable, levelized netlist.
+#[derive(Clone, Debug)]
+pub struct Netlist {
+    pub name: String,
+    pub drivers: Vec<Driver>,
+    pub inputs: Vec<Net>,
+    pub outputs: Vec<(String, Net)>,
+    pub ffs: Vec<FlipFlop>,
+    pub carry_chains: Vec<CarryChain>,
+    /// Gate nets in topological (levelized) order.
+    pub topo: Vec<Net>,
+}
+
+impl Netlist {
+    pub fn gate_count(&self) -> usize {
+        self.drivers
+            .iter()
+            .filter(|d| matches!(d, Driver::Gate { .. }))
+            .count()
+    }
+
+    pub fn ff_count(&self) -> usize {
+        self.ffs.len()
+    }
+
+    /// Gate count per kind (for area models).
+    pub fn gate_histogram(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for d in &self.drivers {
+            if let Driver::Gate { kind, .. } = d {
+                let name = match kind {
+                    GateKind::Not => "NOT",
+                    GateKind::And => "AND2",
+                    GateKind::Or => "OR2",
+                    GateKind::Xor => "XOR2",
+                    GateKind::Nand => "NAND2",
+                    GateKind::Nor => "NOR2",
+                    GateKind::Xnor => "XNOR2",
+                    GateKind::Mux => "MUX2",
+                };
+                *h.entry(name).or_insert(0) += 1;
+            }
+        }
+        h
+    }
+
+    /// Per-bit carry-out nets of all tagged chains.
+    pub fn chain_nets(&self) -> std::collections::HashSet<Net> {
+        self.carry_chains
+            .iter()
+            .flat_map(|c| c.couts.iter().copied())
+            .collect()
+    }
+
+    /// Every gate realized inside dedicated carry logic.
+    pub fn chain_member_nets(&self) -> std::collections::HashSet<Net> {
+        self.carry_chains
+            .iter()
+            .flat_map(|c| c.members.iter().copied())
+            .collect()
+    }
+
+    pub fn find_output(&self, name: &str) -> Option<Net> {
+        self.outputs
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, net)| *net)
+    }
+}
+
+/// Builder with invariant checking.
+pub struct NetlistBuilder {
+    name: String,
+    drivers: Vec<Driver>,
+    inputs: Vec<Net>,
+    outputs: Vec<(String, Net)>,
+    ffs: Vec<FlipFlop>,
+    ff_d_pending: Vec<Option<Net>>,
+    carry_chains: Vec<CarryChain>,
+}
+
+impl NetlistBuilder {
+    pub fn new(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            drivers: Vec::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+            ffs: Vec::new(),
+            ff_d_pending: Vec::new(),
+            carry_chains: Vec::new(),
+        }
+    }
+
+    fn push(&mut self, d: Driver) -> Net {
+        let net = Net(self.drivers.len() as u32);
+        self.drivers.push(d);
+        net
+    }
+
+    pub fn constant(&mut self, v: bool) -> Net {
+        self.push(Driver::Const(v))
+    }
+
+    pub fn input(&mut self) -> Net {
+        let idx = self.inputs.len() as u32;
+        let net = self.push(Driver::Input(idx));
+        self.inputs.push(net);
+        net
+    }
+
+    /// A vector of fresh primary inputs, LSB first.
+    pub fn input_bus(&mut self, width: u32) -> Vec<Net> {
+        (0..width).map(|_| self.input()).collect()
+    }
+
+    pub fn gate(&mut self, kind: GateKind, ins: &[Net]) -> Net {
+        assert_eq!(ins.len(), kind.fanin(), "{kind:?} fanin mismatch");
+        for n in ins {
+            assert!((n.0 as usize) < self.drivers.len(), "undriven net {n:?}");
+        }
+        self.push(Driver::Gate { kind, ins: ins.to_vec() })
+    }
+
+    pub fn not(&mut self, a: Net) -> Net {
+        self.gate(GateKind::Not, &[a])
+    }
+    pub fn and2(&mut self, a: Net, b: Net) -> Net {
+        self.gate(GateKind::And, &[a, b])
+    }
+    pub fn or2(&mut self, a: Net, b: Net) -> Net {
+        self.gate(GateKind::Or, &[a, b])
+    }
+    pub fn xor2(&mut self, a: Net, b: Net) -> Net {
+        self.gate(GateKind::Xor, &[a, b])
+    }
+    /// `sel ? b : a`
+    pub fn mux2(&mut self, a: Net, b: Net, sel: Net) -> Net {
+        self.gate(GateKind::Mux, &[a, b, sel])
+    }
+
+    /// Declare a flip-flop; its data input is connected later with
+    /// [`Self::connect_ff`] (state nets are usually needed before the
+    /// next-state logic exists).
+    pub fn ff(&mut self, name: &str) -> Net {
+        let idx = self.ffs.len() as u32;
+        let q = self.push(Driver::Ff(idx));
+        self.ffs.push(FlipFlop { q, d: Net(u32::MAX), name: name.to_string() });
+        self.ff_d_pending.push(None);
+        q
+    }
+
+    pub fn ff_bus(&mut self, name: &str, width: u32) -> Vec<Net> {
+        (0..width).map(|i| self.ff(&format!("{name}[{i}]"))).collect()
+    }
+
+    pub fn connect_ff(&mut self, q: Net, d: Net) {
+        let idx = match self.drivers[q.0 as usize] {
+            Driver::Ff(i) => i as usize,
+            _ => panic!("{q:?} is not a flip-flop output"),
+        };
+        assert!(self.ff_d_pending[idx].is_none(), "FF {q:?} already connected");
+        self.ff_d_pending[idx] = Some(d);
+    }
+
+    pub fn output(&mut self, name: &str, net: Net) {
+        self.outputs.push((name.to_string(), net));
+    }
+
+    /// Peek the driver of a net (read-only; used by generators to map
+    /// FF output nets back to FF indices).
+    pub fn driver_of(&self, net: Net) -> Driver {
+        self.drivers[net.0 as usize].clone()
+    }
+
+    pub fn tag_carry_chain(&mut self, name: &str, couts: &[Net]) {
+        self.carry_chains.push(CarryChain {
+            name: name.to_string(),
+            couts: couts.to_vec(),
+            members: couts.to_vec(),
+        });
+    }
+
+    /// Tag a chain with an explicit member set (couts ⊆ members).
+    pub fn tag_carry_chain_full(&mut self, name: &str, couts: &[Net], members: &[Net]) {
+        self.carry_chains.push(CarryChain {
+            name: name.to_string(),
+            couts: couts.to_vec(),
+            members: members.to_vec(),
+        });
+    }
+
+    /// Finalize: check invariants and levelize.
+    pub fn build(mut self) -> Netlist {
+        for (idx, d) in self.ff_d_pending.iter().enumerate() {
+            let d = d.unwrap_or_else(|| panic!("FF {} left unconnected", self.ffs[idx].name));
+            self.ffs[idx].d = d;
+        }
+        // Topological sort of combinational gates (FF outputs, inputs and
+        // constants are level-0 sources). Cycles through gates are errors.
+        let n = self.drivers.len();
+        let mut order = Vec::with_capacity(n);
+        let mut state = vec![0u8; n]; // 0 unvisited, 1 on stack, 2 done
+        // iterative DFS
+        for start in 0..n {
+            if state[start] != 0 {
+                continue;
+            }
+            let mut stack: Vec<(u32, usize)> = vec![(start as u32, 0)];
+            while let Some(&mut (node, ref mut child)) = stack.last_mut() {
+                let node_usize = node as usize;
+                if state[node_usize] == 2 {
+                    stack.pop();
+                    continue;
+                }
+                state[node_usize] = 1;
+                let ins: &[Net] = match &self.drivers[node_usize] {
+                    Driver::Gate { ins, .. } => ins,
+                    _ => &[],
+                };
+                if *child < ins.len() {
+                    let next = ins[*child].0;
+                    *child += 1;
+                    match state[next as usize] {
+                        0 => stack.push((next, 0)),
+                        1 => panic!("combinational cycle through net {next}"),
+                        _ => {}
+                    }
+                } else {
+                    state[node_usize] = 2;
+                    if matches!(self.drivers[node_usize], Driver::Gate { .. }) {
+                        order.push(Net(node));
+                    }
+                    stack.pop();
+                }
+            }
+        }
+        Netlist {
+            name: self.name,
+            drivers: self.drivers,
+            inputs: self.inputs,
+            outputs: self.outputs,
+            ffs: self.ffs,
+            carry_chains: self.carry_chains,
+            topo: order,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_simple_and() {
+        let mut b = NetlistBuilder::new("and");
+        let x = b.input();
+        let y = b.input();
+        let z = b.and2(x, y);
+        b.output("z", z);
+        let nl = b.build();
+        assert_eq!(nl.gate_count(), 1);
+        assert_eq!(nl.topo, vec![z]);
+        assert_eq!(nl.find_output("z"), Some(z));
+    }
+
+    #[test]
+    fn topo_respects_dependencies() {
+        let mut b = NetlistBuilder::new("chain");
+        let x = b.input();
+        let g1 = b.not(x);
+        let g2 = b.not(g1);
+        let g3 = b.xor2(g1, g2);
+        b.output("o", g3);
+        let nl = b.build();
+        let pos = |n: Net| nl.topo.iter().position(|&m| m == n).unwrap();
+        assert!(pos(g1) < pos(g2));
+        assert!(pos(g2) < pos(g3));
+    }
+
+    #[test]
+    fn ff_breaks_cycles() {
+        // q feeds its own d through an inverter — legal (sequential loop).
+        let mut b = NetlistBuilder::new("toggle");
+        let q = b.ff("q");
+        let d = b.not(q);
+        b.connect_ff(q, d);
+        b.output("q", q);
+        let nl = b.build();
+        assert_eq!(nl.ff_count(), 1);
+        assert_eq!(nl.ffs[0].d, d);
+    }
+
+    #[test]
+    #[should_panic(expected = "combinational cycle")]
+    fn combinational_cycle_detected() {
+        let mut b = NetlistBuilder::new("bad");
+        let x = b.input();
+        // Manually create a cycle: gate reading a not-yet-created net is
+        // prevented by the builder, so force it via two gates + swap.
+        let g1 = b.gate(GateKind::And, &[x, x]);
+        let g2 = b.gate(GateKind::And, &[g1, x]);
+        // Rewire g1 to read g2 (test-only surgery).
+        if let Driver::Gate { ins, .. } = &mut b.drivers[g1.0 as usize] {
+            ins[1] = g2;
+        }
+        b.build();
+    }
+
+    #[test]
+    #[should_panic(expected = "left unconnected")]
+    fn unconnected_ff_panics() {
+        let mut b = NetlistBuilder::new("bad_ff");
+        b.ff("q");
+        b.build();
+    }
+
+    #[test]
+    fn histogram_counts_kinds() {
+        let mut b = NetlistBuilder::new("h");
+        let x = b.input();
+        let y = b.input();
+        let a = b.and2(x, y);
+        let o = b.xor2(a, y);
+        let _ = b.mux2(a, o, x);
+        let h = b.build().gate_histogram();
+        assert_eq!(h["AND2"], 1);
+        assert_eq!(h["XOR2"], 1);
+        assert_eq!(h["MUX2"], 1);
+    }
+}

@@ -1,0 +1,29 @@
+//! Gate-level netlist substrate.
+//!
+//! The paper evaluates Verilog/VHDL implementations through Vivado (FPGA)
+//! and Genus/Innovus (45 nm ASIC). Neither toolchain is available, so this
+//! module provides the substrate those flows would consume: a structural
+//! netlist representation with
+//!
+//! * [`graph`]      — gates, D flip-flops, primary I/O, carry-chain tags,
+//!   and a builder with topological levelization;
+//! * [`sim`]        — 64-way bit-parallel functional simulation (combinational
+//!   and cycle-accurate sequential) with per-net toggle counting for
+//!   vector-based power estimation;
+//! * [`timing`]     — static timing analysis parameterized by a per-gate
+//!   delay model (supplied by [`crate::tech`]);
+//! * [`generators`] — structural generators for the paper's circuits:
+//!   ripple-carry and segmented adders, the accurate (Fig. 1a) and
+//!   approximate (Fig. 1b) sequential multipliers, and the combinational
+//!   array multiplier of §III.
+//!
+//! Every generated circuit is verified cycle-accurately against the
+//! word-level software model (`netlist_integration` tests).
+
+pub mod generators;
+pub mod graph;
+pub mod sim;
+pub mod timing;
+
+pub use graph::{GateKind, Net, Netlist, NetlistBuilder};
+pub use sim::SeqSim;

@@ -1,0 +1,152 @@
+//! Static timing analysis over the levelized netlist.
+//!
+//! Delay is parameterized by a [`DelayModel`] supplied by the technology
+//! layer: the ASIC model charges per-gate cell delays; the FPGA model
+//! charges LUT hops for generic logic and fast dedicated-carry delays for
+//! nets tagged as carry chains (the mechanism behind the paper's latency
+//! savings — segmentation halves the longest chain).
+
+use std::collections::HashSet;
+
+use super::graph::{Driver, GateKind, Net, Netlist};
+
+/// Per-gate delay model (picoseconds).
+pub trait DelayModel {
+    /// Delay through a gate of `kind`; `on_chain` is true when the gate's
+    /// output net is part of a tagged carry chain (FPGA dedicated carry).
+    fn gate_delay_ps(&self, kind: GateKind, on_chain: bool) -> f64;
+    /// Clock-to-Q + setup allowance for flip-flops.
+    fn ff_overhead_ps(&self) -> f64;
+}
+
+/// Result of a timing pass.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Worst combinational arrival time (ps) over all FF inputs + outputs.
+    pub critical_path_ps: f64,
+    /// Arrival time per net (ps).
+    pub arrival_ps: Vec<f64>,
+    /// Net with the worst arrival.
+    pub critical_net: Option<Net>,
+}
+
+impl TimingReport {
+    /// Minimum clock period (ps) including FF overhead.
+    pub fn min_period_ps(&self, model: &dyn DelayModel) -> f64 {
+        self.critical_path_ps + model.ff_overhead_ps()
+    }
+}
+
+/// Compute arrival times: sources (inputs, FF outputs, constants) start at
+/// 0; every gate adds its delay on top of its worst input.
+pub fn analyze(nl: &Netlist, model: &dyn DelayModel) -> TimingReport {
+    let chain: HashSet<Net> = nl.chain_nets();
+    let mut arrival = vec![0.0f64; nl.drivers.len()];
+    let mut worst = 0.0f64;
+    let mut worst_net = None;
+    for &net in &nl.topo {
+        if let Driver::Gate { kind, ins } = &nl.drivers[net.0 as usize] {
+            let in_max = ins
+                .iter()
+                .map(|n| arrival[n.0 as usize])
+                .fold(0.0f64, f64::max);
+            let t = in_max + model.gate_delay_ps(*kind, chain.contains(&net));
+            arrival[net.0 as usize] = t;
+            if t > worst {
+                worst = t;
+                worst_net = Some(net);
+            }
+        }
+    }
+    TimingReport { critical_path_ps: worst, arrival_ps: arrival, critical_net: worst_net }
+}
+
+/// Logic depth (in gate levels) per net — technology-independent structure
+/// metric used by tests and the LUT-depth estimator.
+pub fn logic_depth(nl: &Netlist) -> Vec<u32> {
+    let mut depth = vec![0u32; nl.drivers.len()];
+    for &net in &nl.topo {
+        if let Driver::Gate { ins, .. } = &nl.drivers[net.0 as usize] {
+            depth[net.0 as usize] =
+                1 + ins.iter().map(|n| depth[n.0 as usize]).max().unwrap_or(0);
+        }
+    }
+    depth
+}
+
+/// A trivial unit-delay model (1000 ps per gate) for tests.
+pub struct UnitDelay;
+
+impl DelayModel for UnitDelay {
+    fn gate_delay_ps(&self, _kind: GateKind, _on_chain: bool) -> f64 {
+        1000.0
+    }
+    fn ff_overhead_ps(&self) -> f64 {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::graph::NetlistBuilder;
+
+    #[test]
+    fn unit_delay_equals_depth() {
+        let mut b = NetlistBuilder::new("d");
+        let x = b.input();
+        let g1 = b.not(x);
+        let g2 = b.and2(g1, x);
+        let g3 = b.xor2(g2, g1);
+        b.output("o", g3);
+        let nl = b.build();
+        let rep = analyze(&nl, &UnitDelay);
+        assert_eq!(rep.critical_path_ps, 3000.0);
+        assert_eq!(rep.critical_net, Some(g3));
+        let depth = logic_depth(&nl);
+        assert_eq!(depth[g3.0 as usize], 3);
+    }
+
+    #[test]
+    fn chain_flag_reaches_model() {
+        struct ChainCheck;
+        impl DelayModel for ChainCheck {
+            fn gate_delay_ps(&self, _k: GateKind, on_chain: bool) -> f64 {
+                if on_chain {
+                    10.0
+                } else {
+                    1000.0
+                }
+            }
+            fn ff_overhead_ps(&self) -> f64 {
+                0.0
+            }
+        }
+        let mut b = NetlistBuilder::new("c");
+        let x = b.input();
+        let y = b.input();
+        let c0 = b.and2(x, y);
+        let c1 = b.and2(c0, y);
+        let c2 = b.and2(c1, y);
+        b.tag_carry_chain("cc", &[c0, c1, c2]);
+        b.output("o", c2);
+        let nl = b.build();
+        let rep = analyze(&nl, &ChainCheck);
+        assert_eq!(rep.critical_path_ps, 30.0);
+    }
+
+    #[test]
+    fn parallel_paths_take_max() {
+        let mut b = NetlistBuilder::new("p");
+        let x = b.input();
+        let shallow = b.not(x);
+        let d1 = b.not(x);
+        let d2 = b.not(d1);
+        let deep = b.not(d2);
+        let o = b.and2(shallow, deep);
+        b.output("o", o);
+        let nl = b.build();
+        let rep = analyze(&nl, &UnitDelay);
+        assert_eq!(rep.critical_path_ps, 4000.0);
+    }
+}

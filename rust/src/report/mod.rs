@@ -1,0 +1,10 @@
+//! Figure regeneration: one entry point per paper table/figure.
+//!
+//! Every function returns a [`csv::Table`] (also written to
+//! `results/<name>.csv`) and the experiment index in DESIGN.md §4 maps
+//! each to its paper artifact. EXPERIMENTS.md records paper-vs-measured.
+
+pub mod csv;
+pub mod figures;
+
+pub use figures::*;

@@ -1,0 +1,181 @@
+//! Artifact manifest: `artifacts/manifest.json` written by `python -m
+//! compile.aot`, describing each lowered HLO module (shapes, dtypes, batch).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// What a lowered module computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModuleKind {
+    /// f64[6+2n] statistics vector (the evaluation-service hot path).
+    Stats,
+    /// u64[batch] approximate products (value-returning path).
+    Prod,
+}
+
+impl ModuleKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "stats" => Ok(ModuleKind::Stats),
+            "prod" => Ok(ModuleKind::Prod),
+            other => bail!("unknown module kind {other:?}"),
+        }
+    }
+}
+
+/// One AOT-lowered HLO module.
+#[derive(Clone, Debug)]
+pub struct ModuleSpec {
+    pub name: String,
+    pub kind: ModuleKind,
+    /// Operand bit-width the module was lowered for.
+    pub n: u32,
+    /// HLO text file, relative to the artifacts dir.
+    pub file: PathBuf,
+    /// Static batch size (length of the `a`/`b` operands).
+    pub batch: usize,
+    /// Output vector length (6+2n for stats, batch for prod).
+    pub out_len: usize,
+}
+
+/// Parsed `manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub modules: Vec<ModuleSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — did you run `make artifacts`?"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let batch = json
+            .get("batch")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest missing numeric 'batch'"))? as usize;
+        let mut modules = Vec::new();
+        for m in json
+            .get("modules")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'modules' array"))?
+        {
+            let name = m
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("module missing 'name'"))?
+                .to_string();
+            let kind = ModuleKind::parse(
+                m.get("kind").and_then(Json::as_str).ok_or_else(|| anyhow!("module {name}: missing kind"))?,
+            )?;
+            let n = m
+                .get("n")
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("module {name}: missing n"))? as u32;
+            let file = PathBuf::from(
+                m.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("module {name}: missing file"))?,
+            );
+            let out_len = m
+                .get("output")
+                .and_then(|o| o.get("shape"))
+                .and_then(Json::as_arr)
+                .and_then(|s| s.first())
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("module {name}: missing output shape"))? as usize;
+            if !dir.join(&file).exists() {
+                bail!("module {name}: artifact file {:?} not found in {dir:?}", file);
+            }
+            modules.push(ModuleSpec { name, kind, n, file, batch, out_len });
+        }
+        if modules.is_empty() {
+            bail!("manifest has no modules");
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), batch, modules })
+    }
+
+    /// Find a module by bit-width and kind.
+    pub fn find(&self, n: u32, kind: ModuleKind) -> Option<&ModuleSpec> {
+        self.modules.iter().find(|m| m.n == n && m.kind == kind)
+    }
+
+    /// Bit-widths with a stats module available.
+    pub fn stats_bitwidths(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .modules
+            .iter()
+            .filter(|m| m.kind == ModuleKind::Stats)
+            .map(|m| m.n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// Default artifacts directory: `$SEGMUL_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("SEGMUL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 8, "modules": [
+                {"name":"seqmul_stats_n4","kind":"stats","n":4,"file":"m.hlo.txt",
+                 "inputs":[],"output":{"dtype":"f64","shape":[14]}}
+            ]}"#,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = std::env::temp_dir().join("segmul_manifest_test");
+        write_fake(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.batch, 8);
+        let spec = m.find(4, ModuleKind::Stats).unwrap();
+        assert_eq!(spec.out_len, 14);
+        assert!(m.find(4, ModuleKind::Prod).is_none());
+        assert_eq!(m.stats_bitwidths(), vec![4]);
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        let dir = std::env::temp_dir().join("segmul_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 8, "modules": [
+                {"name":"x","kind":"stats","n":4,"file":"nope.hlo.txt",
+                 "output":{"dtype":"f64","shape":[14]}}
+            ]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn real_artifacts_manifest_if_present() {
+        // When `make artifacts` has run, validate the real manifest parses.
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find(8, ModuleKind::Stats).is_some());
+            assert_eq!(m.find(8, ModuleKind::Stats).unwrap().out_len, 6 + 16);
+        }
+    }
+}

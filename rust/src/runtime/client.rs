@@ -1,0 +1,160 @@
+//! The PJRT client wrapper: compile-once, execute-many.
+//!
+//! Adapted from `/opt/xla-example/src/bin/load_hlo.rs`. One
+//! `PjRtLoadedExecutable` per manifest module; executions are synchronous
+//! on the calling thread (the coordinator owns a dedicated executor thread
+//! and feeds it through channels — the FFI types are kept off other
+//! threads).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::artifact::{Manifest, ModuleKind, ModuleSpec};
+
+/// Execution telemetry for one runtime instance.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub pairs_evaluated: u64,
+    pub exec_time: Duration,
+    pub compile_time: Duration,
+}
+
+/// Loaded-and-compiled artifact set.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    modules: HashMap<(u32, ModuleKind), LoadedModule>,
+    batch: usize,
+    stats: RuntimeStats,
+}
+
+struct LoadedModule {
+    spec: ModuleSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile every module in the manifest.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        Self::from_manifest(&manifest)
+    }
+
+    /// Compile every module of an already-parsed manifest.
+    pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+        let mut modules = HashMap::new();
+        let mut compile_time = Duration::ZERO;
+        for spec in &manifest.modules {
+            let path = manifest.dir.join(&spec.file);
+            let started = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+            compile_time += started.elapsed();
+            modules.insert((spec.n, spec.kind), LoadedModule { spec: spec.clone(), exe });
+        }
+        Ok(Self {
+            client,
+            modules,
+            batch: manifest.batch,
+            stats: RuntimeStats { compile_time, ..Default::default() },
+        })
+    }
+
+    /// The static batch size every module was lowered with.
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Bit-widths with a stats module compiled.
+    pub fn stats_bitwidths(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self
+            .modules
+            .keys()
+            .filter(|(_, k)| *k == ModuleKind::Stats)
+            .map(|(n, _)| *n)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn has(&self, n: u32, kind: ModuleKind) -> bool {
+        self.modules.contains_key(&(n, kind))
+    }
+
+    /// Telemetry snapshot.
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.clone()
+    }
+
+    fn execute(&mut self, n: u32, kind: ModuleKind, a: &[u64], b: &[u64], t: u64, fix: bool) -> Result<(xla::Literal, usize)> {
+        let module = self
+            .modules
+            .get(&(n, kind))
+            .ok_or_else(|| anyhow!("no {kind:?} module for n={n} (run `make artifacts`)"))?;
+        if a.len() != module.spec.batch || b.len() != module.spec.batch {
+            bail!(
+                "operand length {} != lowered batch {} (module {})",
+                a.len(),
+                module.spec.batch,
+                module.spec.name
+            );
+        }
+        if t >= n as u64 {
+            bail!("splitting point t={t} out of range for n={n}");
+        }
+        let started = Instant::now();
+        let lit_a = xla::Literal::vec1(a);
+        let lit_b = xla::Literal::vec1(b);
+        let lit_t = xla::Literal::from(t);
+        let lit_fix = xla::Literal::from(fix as u64);
+        let result = module
+            .exe
+            .execute::<xla::Literal>(&[lit_a, lit_b, lit_t, lit_fix])
+            .map_err(|e| anyhow!("executing {}: {e}", module.spec.name))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", module.spec.name))?;
+        // Lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = literal
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result of {}: {e}", module.spec.name))?;
+        self.stats.executions += 1;
+        self.stats.pairs_evaluated += a.len() as u64;
+        self.stats.exec_time += started.elapsed();
+        Ok((out, module.spec.out_len))
+    }
+
+    /// Run the stats module: returns the raw f64 statistics vector
+    /// (layout documented in `python/compile/model.py`).
+    pub fn exec_stats(&mut self, n: u32, a: &[u64], b: &[u64], t: u64, fix: bool) -> Result<Vec<f64>> {
+        let (out, out_len) = self.execute(n, ModuleKind::Stats, a, b, t, fix)?;
+        let v = out
+            .to_vec::<f64>()
+            .map_err(|e| anyhow!("reading stats vector: {e}"))?;
+        if v.len() != out_len {
+            bail!("stats length {} != manifest {}", v.len(), out_len);
+        }
+        Ok(v)
+    }
+
+    /// Run the prod module: returns the approximate products.
+    pub fn exec_prod(&mut self, n: u32, a: &[u64], b: &[u64], t: u64, fix: bool) -> Result<Vec<u64>> {
+        let (out, out_len) = self.execute(n, ModuleKind::Prod, a, b, t, fix)?;
+        let v = out
+            .to_vec::<u64>()
+            .map_err(|e| anyhow!("reading product vector: {e}"))?;
+        if v.len() != out_len {
+            bail!("product length {} != manifest {}", v.len(), out_len);
+        }
+        Ok(v)
+    }
+}

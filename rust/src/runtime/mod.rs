@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
+//! `make artifacts` and executes them on the CPU PJRT client.
+//!
+//! This is the only place the `xla` crate is touched. The interchange
+//! format is HLO *text* (not serialized HloModuleProto) — jax ≥ 0.5 emits
+//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+
+pub use artifact::{Manifest, ModuleKind, ModuleSpec};
+pub use client::Runtime;

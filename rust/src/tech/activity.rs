@@ -1,0 +1,115 @@
+//! Vector-based switching-activity measurement (the paper's Fig. 3 power
+//! methodology: "a vector-based approach with a set of 2^16 uniform input
+//! patterns").
+//!
+//! Runs the sequential multiplier netlist on uniform random operand pairs
+//! (64 per simulator pass) and returns per-net toggle counts plus the cycle
+//! count — the inputs to both technology power models.
+
+use crate::multiplier::U512;
+use crate::netlist::generators::seq_mult::{run_batch, SeqMultCircuit};
+use crate::netlist::sim::SeqSim;
+use crate::util::rng::Xoshiro256;
+
+/// Toggle/activity measurement result.
+#[derive(Clone, Debug)]
+pub struct Activity {
+    /// Per-net toggle counts over the whole run (64 vectors per lane-pass).
+    pub toggles: Vec<u64>,
+    /// Clock cycles simulated (load + n accumulation cycles per multiply,
+    /// times the number of 64-lane groups).
+    pub cycles: u64,
+    /// Lanes per cycle (64): divide toggles by `cycles * 64` for per-net α.
+    pub lanes: u64,
+    /// Multiplies performed.
+    pub multiplies: u64,
+}
+
+impl Activity {
+    /// Mean toggles per net per (cycle·lane) — the activity factor α.
+    pub fn alpha(&self, nets: usize) -> f64 {
+        if self.cycles == 0 || nets == 0 {
+            return 0.0;
+        }
+        self.toggles.iter().sum::<u64>() as f64
+            / (nets as f64 * self.cycles as f64 * self.lanes as f64)
+    }
+}
+
+/// Simulate `vectors` uniform random multiplies (rounded up to a multiple
+/// of 64) and collect switching activity.
+pub fn measure_activity(c: &SeqMultCircuit, vectors: u64, seed: u64, fix: bool) -> Activity {
+    let groups = vectors.div_ceil(64).max(1);
+    let mut sim = SeqSim::new(&c.nl);
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let n = c.n;
+    for _ in 0..groups {
+        let a: Vec<U512> = (0..64).map(|_| rand_u512(&mut rng, n)).collect();
+        let b: Vec<U512> = (0..64).map(|_| rand_u512(&mut rng, n)).collect();
+        let _ = run_batch(c, &mut sim, &a, &b, fix);
+    }
+    Activity {
+        toggles: sim.toggles.clone(),
+        cycles: sim.cycles,
+        lanes: 64,
+        multiplies: groups * 64,
+    }
+}
+
+fn rand_u512(rng: &mut Xoshiro256, nbits: u32) -> U512 {
+    let mut v = U512::ZERO;
+    let mut remaining = nbits;
+    let mut limb = 0;
+    while remaining > 0 {
+        let take = remaining.min(64);
+        let word = rng.next_bits(take);
+        // place at limb position
+        let mut shifted = U512::from_u64(word);
+        shifted = shifted.shl(limb * 64);
+        v = v | shifted;
+        remaining -= take;
+        limb += 1;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::generators::seq_mult::seq_mult;
+
+    #[test]
+    fn activity_nonzero_and_bounded() {
+        let c = seq_mult(8, 4, true);
+        let act = measure_activity(&c, 128, 1, true);
+        assert_eq!(act.multiplies, 128);
+        assert_eq!(act.cycles, 2 * (8 + 1)); // 2 groups x (load + n cycles)
+        let alpha = act.alpha(c.nl.drivers.len());
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha {alpha}");
+    }
+
+    #[test]
+    fn rand_u512_respects_width() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..50 {
+            let v = rand_u512(&mut rng, 100);
+            assert!(v.bits() <= 100);
+        }
+        // wide values do appear
+        let mut any_high = false;
+        for _ in 0..50 {
+            if rand_u512(&mut rng, 100).bits() > 64 {
+                any_high = true;
+            }
+        }
+        assert!(any_high);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let c = seq_mult(6, 3, false);
+        let a1 = measure_activity(&c, 64, 9, false);
+        let a2 = measure_activity(&c, 64, 9, false);
+        assert_eq!(a1.toggles, a2.toggles);
+    }
+}

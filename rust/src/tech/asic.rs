@@ -1,0 +1,261 @@
+//! 45 nm-class standard-cell model (stand-in for Nangate 45 nm OCL through
+//! Genus/Innovus, which are unavailable — DESIGN.md §2).
+//!
+//! Per-cell constants are typical of public 45 nm open-cell data (order of
+//! magnitude; the paper's claims are *relative*): area in µm², delay in ps,
+//! switching energy in fJ per output toggle, leakage in nW. Every netlist
+//! gate maps 1:1 onto a cell; timing runs the shared STA with these delays;
+//! power combines simulated toggle counts with per-cell energies.
+
+use crate::netlist::graph::{Driver, GateKind, Netlist};
+use crate::netlist::timing::DelayModel;
+
+use super::activity::Activity;
+use super::HwFigures;
+
+/// Per-cell characterization.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub area_um2: f64,
+    pub delay_ps: f64,
+    pub energy_fj: f64,
+    pub leakage_nw: f64,
+}
+
+/// The cell library (45 nm-class constants).
+#[derive(Clone, Debug)]
+pub struct AsicModel {
+    pub inv: Cell,
+    pub and2: Cell,
+    pub or2: Cell,
+    pub xor2: Cell,
+    pub nand2: Cell,
+    pub nor2: Cell,
+    pub xnor2: Cell,
+    pub mux2: Cell,
+    pub dff: Cell,
+    /// Clock-to-Q + setup charged on every register-to-register path.
+    pub ff_overhead_ps: f64,
+    /// Per-stage delay of the synthesizer's carry-lookahead / prefix-adder
+    /// substitution. Genus/Innovus do not keep long ripple chains: beyond
+    /// the break-even width an n-bit carry resolves in ~(log2 n + 2)
+    /// prefix stages. The timing pass charges each tagged chain
+    /// min(ripple, CLA) — this reproduces the paper's ASIC trend (largest
+    /// latency gain at n = 8, shrinking as n grows).
+    pub cla_stage_ps: f64,
+}
+
+impl Default for AsicModel {
+    fn default() -> Self {
+        AsicModel {
+            inv: Cell { area_um2: 0.532, delay_ps: 12.0, energy_fj: 0.6, leakage_nw: 10.0 },
+            and2: Cell { area_um2: 1.064, delay_ps: 22.0, energy_fj: 1.2, leakage_nw: 22.0 },
+            or2: Cell { area_um2: 1.064, delay_ps: 22.0, energy_fj: 1.2, leakage_nw: 22.0 },
+            xor2: Cell { area_um2: 1.596, delay_ps: 36.0, energy_fj: 2.2, leakage_nw: 35.0 },
+            nand2: Cell { area_um2: 0.798, delay_ps: 14.0, energy_fj: 0.9, leakage_nw: 16.0 },
+            nor2: Cell { area_um2: 0.798, delay_ps: 16.0, energy_fj: 0.9, leakage_nw: 16.0 },
+            xnor2: Cell { area_um2: 1.596, delay_ps: 36.0, energy_fj: 2.2, leakage_nw: 35.0 },
+            mux2: Cell { area_um2: 1.862, delay_ps: 30.0, energy_fj: 1.8, leakage_nw: 30.0 },
+            dff: Cell { area_um2: 4.522, delay_ps: 0.0, energy_fj: 4.5, leakage_nw: 60.0 },
+            ff_overhead_ps: 130.0,
+            cla_stage_ps: 60.0,
+        }
+    }
+}
+
+impl AsicModel {
+    pub fn cell(&self, kind: GateKind) -> Cell {
+        match kind {
+            GateKind::Not => self.inv,
+            GateKind::And => self.and2,
+            GateKind::Or => self.or2,
+            GateKind::Xor => self.xor2,
+            GateKind::Nand => self.nand2,
+            GateKind::Nor => self.nor2,
+            GateKind::Xnor => self.xnor2,
+            GateKind::Mux => self.mux2,
+        }
+    }
+
+    /// Total cell area (gates + FFs), µm².
+    pub fn area_um2(&self, nl: &Netlist) -> f64 {
+        let gates: f64 = nl
+            .drivers
+            .iter()
+            .filter_map(|d| match d {
+                Driver::Gate { kind, .. } => Some(self.cell(*kind).area_um2),
+                _ => None,
+            })
+            .sum();
+        gates + nl.ff_count() as f64 * self.dff.area_um2
+    }
+
+    /// Total leakage, mW.
+    pub fn leakage_mw(&self, nl: &Netlist) -> f64 {
+        let gates: f64 = nl
+            .drivers
+            .iter()
+            .filter_map(|d| match d {
+                Driver::Gate { kind, .. } => Some(self.cell(*kind).leakage_nw),
+                _ => None,
+            })
+            .sum();
+        (gates + nl.ff_count() as f64 * self.dff.leakage_nw) * 1e-6
+    }
+
+    /// Dynamic energy per clock cycle (fJ) from measured activity:
+    /// Σ_gates toggles_g / (cycles·lanes) · E_g, plus FF clock energy.
+    pub fn energy_per_cycle_fj(&self, nl: &Netlist, act: &Activity) -> f64 {
+        let denom = (act.cycles * act.lanes) as f64;
+        let mut fj = 0.0;
+        for (i, d) in nl.drivers.iter().enumerate() {
+            if let Driver::Gate { kind, .. } = d {
+                fj += act.toggles[i] as f64 / denom * self.cell(*kind).energy_fj;
+            }
+        }
+        // FF output toggles + clock tree charge per FF per cycle (~30%).
+        for ff in &nl.ffs {
+            fj += act.toggles[ff.q.0 as usize] as f64 / denom * self.dff.energy_fj;
+            fj += 0.3 * self.dff.energy_fj;
+        }
+        fj
+    }
+
+    /// Static timing with carry-lookahead substitution: every gate inside
+    /// a tagged chain is charged `min(cell delay, CLA budget per gate)`,
+    /// where the chain's CLA budget is `(log2 len + 2) * cla_stage_ps`.
+    pub fn critical_path_ps(&self, nl: &Netlist) -> f64 {
+        use crate::netlist::graph::Driver;
+        use std::collections::HashMap;
+        // per-gate delay cap for chain members
+        let mut cap: HashMap<crate::netlist::graph::Net, f64> = HashMap::new();
+        for chain in &nl.carry_chains {
+            let len = chain.couts.len().max(1) as f64;
+            let cla_total = ((len.log2().ceil()) + 2.0) * self.cla_stage_ps;
+            // ~2 chain gates per bit lie on the carry path
+            let per_gate = cla_total / (2.0 * len);
+            for &m in &chain.members {
+                cap.insert(m, per_gate);
+            }
+        }
+        let mut arrival = vec![0.0f64; nl.drivers.len()];
+        let mut worst = 0.0f64;
+        for &net in &nl.topo {
+            if let Driver::Gate { kind, ins } = &nl.drivers[net.0 as usize] {
+                let in_max = ins.iter().map(|n| arrival[n.0 as usize]).fold(0.0, f64::max);
+                let mut d = self.cell(*kind).delay_ps;
+                if let Some(&c) = cap.get(&net) {
+                    d = d.min(c);
+                }
+                arrival[net.0 as usize] = in_max + d;
+                worst = worst.max(in_max + d);
+            }
+        }
+        worst
+    }
+
+    /// Full evaluation. `cycles_per_op` is n+1 for the sequential designs
+    /// (load + n accumulations), 1 for combinational. The clock is run at
+    /// the circuit's own minimum period unless `period_ns` pins it (the
+    /// paper pins accurate/approximate to the same clock for power
+    /// fairness).
+    pub fn evaluate(
+        &self,
+        nl: &Netlist,
+        act: &Activity,
+        cycles_per_op: u32,
+        period_ns: Option<f64>,
+    ) -> AsicReport {
+        let crit = self.critical_path_ps(nl);
+        let min_period_ns = (crit + self.ff_overhead_ps) / 1000.0;
+        let period = period_ns.unwrap_or(min_period_ns).max(min_period_ns);
+        let f_ghz = 1.0 / period;
+        let e_cycle_fj = self.energy_per_cycle_fj(nl, act);
+        // P[mW] = E[fJ]/cycle × f[GHz] × 1e-3
+        let dyn_mw = e_cycle_fj * f_ghz * 1e-3;
+        AsicReport {
+            figures: HwFigures {
+                resource: self.area_um2(nl),
+                ffs: nl.ff_count(),
+                period_ns: min_period_ns,
+                latency_ns: cycles_per_op as f64 * period,
+                dyn_power_mw: dyn_mw,
+                static_power_mw: self.leakage_mw(nl),
+            },
+            cells: nl.gate_count(),
+            crit_path_ps: crit,
+        }
+    }
+}
+
+impl DelayModel for AsicModel {
+    fn gate_delay_ps(&self, kind: GateKind, _on_chain: bool) -> f64 {
+        self.cell(kind).delay_ps
+    }
+    fn ff_overhead_ps(&self) -> f64 {
+        self.ff_overhead_ps
+    }
+}
+
+/// ASIC evaluation report (Fig. 3b axes).
+#[derive(Clone, Debug)]
+pub struct AsicReport {
+    pub figures: HwFigures,
+    pub cells: usize,
+    pub crit_path_ps: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::generators::seq_mult::seq_mult;
+    use crate::tech::measure_activity;
+
+    fn eval(n: u32, t: u32, fix: bool) -> AsicReport {
+        let c = seq_mult(n, t, fix);
+        let act = measure_activity(&c, 256, 42, fix);
+        AsicModel::default().evaluate(&c.nl, &act, n + 1, None)
+    }
+
+    #[test]
+    fn segmentation_reduces_period() {
+        let acc = eval(16, 0, false);
+        let seg = eval(16, 8, true);
+        assert!(
+            seg.figures.period_ns < acc.figures.period_ns,
+            "approx {} vs accurate {}",
+            seg.figures.period_ns,
+            acc.figures.period_ns
+        );
+        assert!(seg.figures.latency_ns < acc.figures.latency_ns);
+    }
+
+    #[test]
+    fn area_overhead_is_small() {
+        // Paper: ASIC area overhead < 3% for larger bit-widths.
+        let acc = eval(32, 0, false);
+        let seg = eval(32, 16, true);
+        let overhead = seg.figures.resource / acc.figures.resource - 1.0;
+        assert!(overhead > 0.0, "approx design must cost extra muxes/FF");
+        assert!(overhead < 0.25, "overhead {overhead} unexpectedly large");
+    }
+
+    #[test]
+    fn power_positive_and_leakage_scales_with_area() {
+        let small = eval(8, 4, true);
+        let large = eval(16, 8, true);
+        assert!(small.figures.dyn_power_mw > 0.0);
+        assert!(large.figures.static_power_mw > small.figures.static_power_mw);
+    }
+
+    #[test]
+    fn pinned_period_lowers_power_not_latency_floor() {
+        let c = seq_mult(8, 4, true);
+        let act = measure_activity(&c, 256, 1, true);
+        let free = AsicModel::default().evaluate(&c.nl, &act, 9, None);
+        let pinned = AsicModel::default().evaluate(&c.nl, &act, 9, Some(10.0));
+        assert!(pinned.figures.latency_ns > free.figures.latency_ns);
+        assert!(pinned.figures.dyn_power_mw < free.figures.dyn_power_mw);
+        assert_eq!(pinned.figures.period_ns, free.figures.period_ns);
+    }
+}

@@ -1,0 +1,296 @@
+//! Xilinx-7-series-class FPGA model (stand-in for Vivado on the ZC706 —
+//! DESIGN.md §2).
+//!
+//! * **LUT packing**: generic (non-carry) gates are greedily packed into
+//!   LUT6s — a gate absorbs a fanin gate's cone when the merged cone still
+//!   has ≤ 6 leaf inputs and the fanin has no other consumer. Adder bits on
+//!   tagged carry chains map to 1 LUT (the propagate/generate function) +
+//!   dedicated CARRY4 logic, like the 7-series slice.
+//! * **Timing**: LUT hops cost `t_lut + t_net`; carry chain bits cost the
+//!   fast dedicated-mux delay. This reproduces the paper's mechanism: the
+//!   approximate design's shorter chain cuts the critical path while the
+//!   LUT count barely moves.
+//! * **Power**: toggle counts × per-resource switching energy at the
+//!   operating frequency (vector-based, 2^16 uniform patterns by default).
+
+use std::collections::HashSet;
+
+use crate::netlist::graph::{Driver, GateKind, Net, Netlist};
+use crate::netlist::timing::{analyze, DelayModel};
+
+use super::activity::Activity;
+use super::HwFigures;
+
+/// FPGA timing/energy constants (7-series-class).
+#[derive(Clone, Debug)]
+pub struct FpgaModel {
+    /// LUT6 propagation delay, ps.
+    pub t_lut_ps: f64,
+    /// Average net routing delay per LUT hop, ps.
+    pub t_net_ps: f64,
+    /// Delay per carry-logic gate, ps (two gates lie on the chain per
+    /// adder bit, so the per-bit cost is 2x this — ~45 ps/bit like the
+    /// 7-series CARRY4).
+    pub t_carry_ps: f64,
+    /// FF clock-to-Q + setup, ps.
+    pub t_ff_ps: f64,
+    /// Switching energy per LUT output toggle, fJ.
+    pub e_lut_fj: f64,
+    /// Switching energy per FF toggle (incl. local clock), fJ.
+    pub e_ff_fj: f64,
+    /// Switching energy per carry-logic gate toggle, fJ.
+    pub e_carry_fj: f64,
+}
+
+impl Default for FpgaModel {
+    fn default() -> Self {
+        FpgaModel {
+            t_lut_ps: 580.0,
+            t_net_ps: 320.0,
+            t_carry_ps: 22.0,
+            t_ff_ps: 460.0,
+            e_lut_fj: 12.0,
+            e_ff_fj: 9.0,
+            e_carry_fj: 3.0,
+        }
+    }
+}
+
+/// Result of LUT packing.
+#[derive(Clone, Debug)]
+pub struct Packing {
+    /// Nets that are LUT roots (everything else was absorbed or is carry).
+    pub roots: HashSet<Net>,
+    /// Total LUT count (packed roots; carry logic uses CARRY4s, and the
+    /// per-bit propagate XOR LUT is already a root).
+    pub luts: usize,
+    /// CARRY4 blocks (4 chain bits each, like the 7-series slice).
+    pub carry4s: usize,
+}
+
+/// Greedy cone packing of the non-chain combinational gates into LUT6s.
+pub fn pack_luts(nl: &Netlist) -> Packing {
+    let chain = nl.chain_member_nets();
+    // fanout of each net among gates
+    let mut fanout = vec![0u32; nl.drivers.len()];
+    for d in &nl.drivers {
+        if let Driver::Gate { ins, .. } = d {
+            for n in ins {
+                fanout[n.0 as usize] += 1;
+            }
+        }
+    }
+    for (_, net) in &nl.outputs {
+        fanout[net.0 as usize] += 1;
+    }
+    // Each gate's cone leaves (None = absorbed into a consumer).
+    let mut leaves: Vec<Option<Vec<Net>>> = vec![None; nl.drivers.len()];
+    let is_source = |d: &Driver| !matches!(d, Driver::Gate { .. });
+    let mut roots: HashSet<Net> = HashSet::new();
+    for &net in &nl.topo {
+        if chain.contains(&net) {
+            continue; // carry logic is not packed into LUTs
+        }
+        let Driver::Gate { ins, .. } = &nl.drivers[net.0 as usize] else { continue };
+        let mut cone: Vec<Net> = Vec::new();
+        for &input in ins {
+            let d = &nl.drivers[input.0 as usize];
+            let absorbable = !is_source(d)
+                && !chain.contains(&input)
+                && fanout[input.0 as usize] == 1
+                && roots.contains(&input);
+            if absorbable {
+                // tentatively merge the fanin cone
+                let sub = leaves[input.0 as usize].clone().unwrap_or_default();
+                for l in sub {
+                    if !cone.contains(&l) {
+                        cone.push(l);
+                    }
+                }
+            } else if !cone.contains(&input) {
+                cone.push(input);
+            }
+        }
+        if cone.len() <= 6 {
+            // absorb eligible fanins
+            for &input in ins {
+                let d = &nl.drivers[input.0 as usize];
+                if !is_source(d) && !chain.contains(&input) && fanout[input.0 as usize] == 1 {
+                    roots.remove(&input);
+                    leaves[input.0 as usize] = None;
+                }
+            }
+            leaves[net.0 as usize] = Some(cone);
+        } else {
+            // keep fanins as their own LUTs; this gate reads them directly
+            leaves[net.0 as usize] = Some(ins.clone());
+        }
+        roots.insert(net);
+    }
+    // Carry-logic gates map onto CARRY4 muxes/XORCY, not LUTs; the
+    // propagate XOR per adder bit is an ordinary packed LUT (in `roots`).
+    let carry4s = nl.carry_chains.iter().map(|c| c.couts.len().div_ceil(4)).sum();
+    Packing { luts: roots.len(), roots, carry4s }
+}
+
+struct FpgaDelay<'a> {
+    model: &'a FpgaModel,
+    roots: &'a HashSet<Net>,
+    current: std::cell::Cell<Net>,
+}
+
+impl DelayModel for FpgaDelay<'_> {
+    fn gate_delay_ps(&self, _kind: GateKind, on_chain: bool) -> f64 {
+        if on_chain {
+            self.model.t_carry_ps
+        } else if self.roots.contains(&self.current.get()) {
+            self.model.t_lut_ps + self.model.t_net_ps
+        } else {
+            0.0 // absorbed into a LUT root
+        }
+    }
+    fn ff_overhead_ps(&self) -> f64 {
+        self.model.t_ff_ps
+    }
+}
+
+/// FPGA evaluation report (Fig. 3a axes).
+#[derive(Clone, Debug)]
+pub struct FpgaReport {
+    pub figures: HwFigures,
+    pub luts: usize,
+    pub carry4s: usize,
+    pub crit_path_ps: f64,
+}
+
+impl FpgaModel {
+    /// Evaluate a netlist. `cycles_per_op` as in the ASIC model; `period_ns`
+    /// optionally pins the clock (power fairness).
+    pub fn evaluate(
+        &self,
+        nl: &Netlist,
+        act: &Activity,
+        cycles_per_op: u32,
+        period_ns: Option<f64>,
+    ) -> FpgaReport {
+        let packing = pack_luts(nl);
+        // Timing: we cannot thread per-net identity through the DelayModel
+        // trait, so run a custom arrival pass here.
+        let chain = nl.chain_member_nets();
+        let mut arrival = vec![0.0f64; nl.drivers.len()];
+        let mut worst = 0.0f64;
+        for &net in &nl.topo {
+            if let Driver::Gate { ins, .. } = &nl.drivers[net.0 as usize] {
+                let in_max = ins.iter().map(|n| arrival[n.0 as usize]).fold(0.0, f64::max);
+                let d = if chain.contains(&net) {
+                    self.t_carry_ps
+                } else if packing.roots.contains(&net) {
+                    self.t_lut_ps + self.t_net_ps
+                } else {
+                    0.0
+                };
+                arrival[net.0 as usize] = in_max + d;
+                worst = worst.max(in_max + d);
+            }
+        }
+        let min_period_ns = (worst + self.t_ff_ps) / 1000.0;
+        let period = period_ns.unwrap_or(min_period_ns).max(min_period_ns);
+        let f_ghz = 1.0 / period;
+        // Energy: toggles on LUT roots + chain bits + FF outputs.
+        let denom = (act.cycles * act.lanes) as f64;
+        let mut e_cycle_fj = 0.0;
+        for (i, d) in nl.drivers.iter().enumerate() {
+            if let Driver::Gate { .. } = d {
+                let net = Net(i as u32);
+                if packing.roots.contains(&net) || chain.contains(&net) {
+                    e_cycle_fj += act.toggles[i] as f64 / denom * self.e_lut_fj;
+                }
+            }
+        }
+        for ff in &nl.ffs {
+            e_cycle_fj += act.toggles[ff.q.0 as usize] as f64 / denom * self.e_ff_fj;
+            e_cycle_fj += 0.3 * self.e_ff_fj; // clock tree share
+        }
+        let dyn_mw = e_cycle_fj * f_ghz * 1e-3;
+        FpgaReport {
+            figures: HwFigures {
+                resource: packing.luts as f64,
+                ffs: nl.ff_count(),
+                period_ns: min_period_ns,
+                latency_ns: cycles_per_op as f64 * period,
+                dyn_power_mw: dyn_mw,
+                static_power_mw: 0.0,
+            },
+            luts: packing.luts,
+            carry4s: packing.carry4s,
+            crit_path_ps: worst,
+        }
+    }
+}
+
+// Silence the unused struct warning: FpgaDelay documents the intended trait
+// shape; the inline pass above is the real implementation.
+#[allow(dead_code)]
+fn _delay_model_shape(m: &FpgaModel, roots: &HashSet<Net>) -> f64 {
+    let d = FpgaDelay { model: m, roots, current: std::cell::Cell::new(Net(0)) };
+    let _ = analyze;
+    d.ff_overhead_ps()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::generators::adders::rca_netlist;
+    use crate::netlist::generators::seq_mult::seq_mult;
+    use crate::tech::measure_activity;
+
+    #[test]
+    fn rca_luts_scale_linearly() {
+        let p8 = pack_luts(&rca_netlist(8));
+        let p32 = pack_luts(&rca_netlist(32));
+        assert!(p32.luts > p8.luts);
+        let ratio = p32.luts as f64 / p8.luts as f64;
+        assert!(ratio > 3.0 && ratio < 5.0, "ratio {ratio}");
+        assert_eq!(p8.carry4s, 2);
+        assert_eq!(p32.carry4s, 8);
+    }
+
+    #[test]
+    fn packing_covers_all_gates() {
+        // Every non-chain gate is either a root or absorbed (reachable
+        // from some root) — sanity: root count <= gate count.
+        let nl = seq_mult(8, 4, true).nl;
+        let p = pack_luts(&nl);
+        assert!(p.roots.len() <= nl.gate_count());
+        assert!(p.luts >= p.roots.len());
+    }
+
+    #[test]
+    fn segmentation_shortens_fpga_critical_path() {
+        let model = FpgaModel::default();
+        let acc = seq_mult(32, 0, false);
+        let seg = seq_mult(32, 16, true);
+        let a_act = measure_activity(&acc, 64, 1, false);
+        let s_act = measure_activity(&seg, 64, 1, true);
+        let ar = model.evaluate(&acc.nl, &a_act, 33, None);
+        let sr = model.evaluate(&seg.nl, &s_act, 33, None);
+        assert!(
+            sr.figures.period_ns < ar.figures.period_ns,
+            "seg {} vs acc {}",
+            sr.figures.period_ns,
+            ar.figures.period_ns
+        );
+        // LUT overhead should be modest (paper: slight area overhead).
+        let overhead = sr.luts as f64 / ar.luts as f64 - 1.0;
+        assert!(overhead < 0.40, "LUT overhead {overhead}");
+    }
+
+    #[test]
+    fn power_positive() {
+        let c = seq_mult(8, 4, true);
+        let act = measure_activity(&c, 128, 5, true);
+        let r = FpgaModel::default().evaluate(&c.nl, &act, 9, None);
+        assert!(r.figures.dyn_power_mw > 0.0);
+        assert_eq!(r.figures.static_power_mw, 0.0);
+    }
+}

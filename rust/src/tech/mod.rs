@@ -1,0 +1,47 @@
+//! Technology models: map a netlist onto FPGA or ASIC resources and
+//! estimate area, timing, and vector-based power.
+//!
+//! Substitution for the paper's EDA flows (DESIGN.md §2):
+//!
+//! * [`fpga`] — a Xilinx-7-series-class model (LUT6 packing + dedicated
+//!   carry chains + FFs) standing in for Vivado on the ZC706;
+//! * [`asic`] — a 45 nm-class standard-cell model standing in for
+//!   Genus/Innovus on Nangate 45 nm OCL.
+//!
+//! Absolute numbers are model constants; the *shapes* the paper reports
+//! (carry-chain-driven latency gap, small area/power overhead of the
+//! approximate design, sequential-vs-combinational crossover) emerge from
+//! structure: gate counts, chain lengths, logic depth, and simulated
+//! switching activity.
+
+pub mod activity;
+pub mod asic;
+pub mod fpga;
+
+pub use activity::measure_activity;
+pub use asic::{AsicModel, AsicReport};
+pub use fpga::{FpgaModel, FpgaReport};
+
+/// Common hardware evaluation output for one circuit.
+#[derive(Clone, Debug)]
+pub struct HwFigures {
+    /// Resource metric: LUTs (FPGA) or µm² (ASIC).
+    pub resource: f64,
+    /// Registers used.
+    pub ffs: usize,
+    /// Minimum clock period, ns.
+    pub period_ns: f64,
+    /// End-to-end multiply latency, ns (cycles × period for sequential;
+    /// = period for combinational).
+    pub latency_ns: f64,
+    /// Dynamic power at the operating frequency, mW.
+    pub dyn_power_mw: f64,
+    /// Static/leakage power, mW (ASIC only; 0 for the FPGA model).
+    pub static_power_mw: f64,
+}
+
+impl HwFigures {
+    pub fn total_power_mw(&self) -> f64 {
+        self.dyn_power_mw + self.static_power_mw
+    }
+}

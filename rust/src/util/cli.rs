@@ -1,0 +1,122 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `segmul <subcommand> [--flag] [--key value] [positional...]`.
+//! Flags and options may appear in any order after the subcommand.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.opt(name)
+            .map(|v| {
+                v.replace('_', "")
+                    .parse::<u64>()
+                    .map_err(|_| anyhow!("--{name} expects an integer, got {v:?}"))
+            })
+            .transpose()
+    }
+
+    pub fn opt_u32(&self, name: &str) -> Result<Option<u32>> {
+        Ok(self.opt_u64(name)?.map(|v| v as u32))
+    }
+
+    pub fn opt_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.opt(name)
+            .map(|v| v.parse::<f64>().map_err(|_| anyhow!("--{name} expects a float, got {v:?}")))
+            .transpose()
+    }
+
+    /// Required option helper.
+    pub fn req_u32(&self, name: &str) -> Result<u32> {
+        self.opt_u32(name)?.ok_or_else(|| anyhow!("missing required --{name}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse("eval --n 8 --t 4 --fix --samples 1_000");
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.req_u32("n").unwrap(), 8);
+        assert_eq!(a.opt_u32("t").unwrap(), Some(4));
+        assert!(a.flag("fix"));
+        assert_eq!(a.opt_u64("samples").unwrap(), Some(1000));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("figures --out=results fig2");
+        assert_eq!(a.opt("out"), Some("results"));
+        assert_eq!(a.positional, vec!["fig2"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("eval --fix");
+        assert!(a.flag("fix"));
+        assert_eq!(a.opt("fix"), None);
+    }
+
+    #[test]
+    fn type_errors() {
+        let a = parse("eval --n abc");
+        assert!(a.opt_u32("n").is_err());
+        assert!(a.req_u32("missing").is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! Small self-contained substrates (no external crates available offline):
+//! a JSON codec, a counter-based PRNG, a scoped thread pool, and a
+//! lightweight property-testing helper.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;

@@ -1,0 +1,78 @@
+//! Lightweight property-testing helper (proptest is unavailable offline).
+//!
+//! `Cases` drives a closure with seeded pseudo-random inputs and reports the
+//! first failing case with its seed so it can be replayed; `forall_u64`
+//! et al. are convenience drivers used by the invariant tests across the
+//! crate (multiplier equivalences, coordinator chunking, metric merges).
+
+use super::rng::Xoshiro256;
+
+/// A deterministic case driver: `n_cases` random trials from `seed`.
+pub struct Cases {
+    pub seed: u64,
+    pub n_cases: usize,
+}
+
+impl Default for Cases {
+    fn default() -> Self {
+        Self { seed: 0xC0FFEE, n_cases: 256 }
+    }
+}
+
+impl Cases {
+    pub fn new(seed: u64, n_cases: usize) -> Self {
+        Self { seed, n_cases }
+    }
+
+    /// Run `f(rng, case_index)`; panics with seed/case info on failure so the
+    /// failure is reproducible.
+    pub fn run<F>(&self, mut f: F)
+    where
+        F: FnMut(&mut Xoshiro256, usize),
+    {
+        for case in 0..self.n_cases {
+            let mut rng = Xoshiro256::stream(self.seed, case as u64);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut rng, case)
+            }));
+            if let Err(e) = result {
+                let msg = e
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property failed at case {case} (replay: Cases::new({}, ..)): {msg}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        Cases::new(1, 50).run(|_, _| count += 1);
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut first: Vec<u64> = Vec::new();
+        Cases::new(2, 10).run(|rng, _| first.push(rng.next_u64()));
+        let mut second: Vec<u64> = Vec::new();
+        Cases::new(2, 10).run(|rng, _| second.push(rng.next_u64()));
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case() {
+        Cases::new(3, 10).run(|_, case| assert!(case < 5));
+    }
+}

@@ -1,0 +1,105 @@
+//! Scoped parallel-map built on `std::thread::scope`.
+//!
+//! rayon is not available offline; this provides the one primitive the
+//! evaluators need: split an index range across worker threads and fold the
+//! partial results. On the 1-core CI box this degenerates gracefully to a
+//! sequential loop (no thread spawn when `workers == 1`).
+
+/// Number of worker threads to use by default.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `[0, len)` into `parts` near-equal contiguous chunks.
+pub fn chunks(len: u64, parts: usize) -> Vec<(u64, u64)> {
+    let parts = parts.max(1) as u64;
+    let base = len / parts;
+    let rem = len % parts;
+    let mut out = Vec::with_capacity(parts as usize);
+    let mut start = 0;
+    for i in 0..parts {
+        let sz = base + if i < rem { 1 } else { 0 };
+        if sz == 0 {
+            continue;
+        }
+        out.push((start, start + sz));
+        start += sz;
+    }
+    out
+}
+
+/// Run `work(chunk_index, start, end)` over `[0, len)` split across
+/// `workers` threads, then fold the partial results with `fold`.
+pub fn parallel_fold<T, F, G>(len: u64, workers: usize, work: F, fold: G) -> Option<T>
+where
+    T: Send,
+    F: Fn(usize, u64, u64) -> T + Sync,
+    G: Fn(T, T) -> T,
+{
+    let parts = chunks(len, workers);
+    if parts.is_empty() {
+        return None;
+    }
+    if parts.len() == 1 {
+        let (s, e) = parts[0];
+        return Some(work(0, s, e));
+    }
+    let results: Vec<T> = std::thread::scope(|scope| {
+        let handles: Vec<_> = parts
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, e))| {
+                let work = &work;
+                scope.spawn(move || work(i, s, e))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    results.into_iter().reduce(fold)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chunks_cover_exactly_once() {
+        for len in [0u64, 1, 7, 100, 101] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let cs = chunks(len, parts);
+                let mut covered = 0u64;
+                let mut prev_end = 0u64;
+                for (s, e) in &cs {
+                    assert_eq!(*s, prev_end, "gap/overlap at {s}");
+                    assert!(e > s);
+                    covered += e - s;
+                    prev_end = *e;
+                }
+                assert_eq!(covered, len, "len={len} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn fold_sums_range() {
+        let total = parallel_fold(
+            1000,
+            4,
+            |_, s, e| (s..e).sum::<u64>(),
+            |a, b| a + b,
+        )
+        .unwrap();
+        assert_eq!(total, (0..1000u64).sum::<u64>());
+    }
+
+    #[test]
+    fn single_worker_no_threads() {
+        let total = parallel_fold(10, 1, |_, s, e| e - s, |a, b| a + b).unwrap();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn empty_range() {
+        assert!(parallel_fold(0, 4, |_, _, _| 0u64, |a, b| a + b).is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! Coordinator integration: PJRT backend ≡ CPU backend on identical jobs,
+//! service end-to-end over the compiled artifacts, telemetry sanity.
+//! PJRT parts skip gracefully when `make artifacts` has not run.
+
+use std::path::PathBuf;
+
+use segmul::coordinator::{run_job, CpuBackend, EvalBackend, EvalJob, EvalService, PjrtBackend, WorkSpec};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/");
+        None
+    }
+}
+
+#[test]
+fn pjrt_and_cpu_backends_agree_exactly() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut cpu = CpuBackend::new();
+    // Same MC spec on both: identical chunk decomposition requires equal
+    // max_batch, so drive both through explicit batches instead.
+    use segmul::util::rng::Xoshiro256;
+    let mut rng = Xoshiro256::seed_from_u64(99);
+    for (n, t, fix) in [(8u32, 3u32, true), (16, 8, false), (32, 16, true)] {
+        let len = pjrt.max_batch();
+        let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+        let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+        let sp = pjrt.eval_batch(n, t, fix, &a, &b).unwrap();
+        let sc = cpu.eval_batch(n, t, fix, &a, &b).unwrap();
+        assert_eq!(sp.count, sc.count);
+        assert_eq!(sp.err_count, sc.err_count, "n={n} t={t}");
+        // PJRT sums are f64 on-device (approx_sums): exact below 2^53,
+        // else within f64 rounding of the exact integer sums.
+        assert!(sp.approx_sums && !sc.approx_sums);
+        let rel = |a: f64, b: f64| (a - b).abs() / b.abs().max(1.0);
+        assert!(rel(sp.sum_ed as f64, sc.sum_ed as f64) < 1e-12, "n={n} sum_ed");
+        assert!(rel(sp.sum_abs_ed as f64, sc.sum_abs_ed as f64) < 1e-12, "n={n} sum_abs");
+        assert_eq!(sp.max_abs_ed, sc.max_abs_ed);
+        assert_eq!(sp.bitflips, sc.bitflips);
+        assert!((sp.sum_red - sc.sum_red).abs() <= 1e-6 * sc.sum_red.max(1.0));
+    }
+}
+
+#[test]
+fn pjrt_padding_correction() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let a = vec![3u64; 100];
+    let b = vec![7u64; 100];
+    let s = pjrt.eval_batch(8, 4, true, &a, &b).unwrap();
+    assert_eq!(s.count, 100, "pad pairs must not inflate the sample count");
+}
+
+#[test]
+fn service_with_pjrt_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = EvalService::start(move || {
+        Ok(Box::new(PjrtBackend::load(&dir)?) as Box<dyn EvalBackend>)
+    })
+    .unwrap();
+    let r = svc
+        .eval(EvalJob::mc(16, 8, true, 1 << 17, 7))
+        .unwrap();
+    assert_eq!(r.backend, "pjrt");
+    assert_eq!(r.stats.count, 1 << 17);
+    assert!(r.metrics().er > 0.0);
+    let t = svc.telemetry();
+    assert_eq!(t.jobs_completed, 1);
+    assert_eq!(t.pairs_evaluated, 1 << 17);
+    svc.shutdown();
+}
+
+#[test]
+fn adaptive_job_on_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let job = EvalJob {
+        n: 16,
+        t: 4,
+        fix: false,
+        spec: WorkSpec::Adaptive { max_samples: 1 << 22, seed: 3, target_rel_stderr: 0.02 },
+    };
+    let r = run_job(&mut pjrt, &job).unwrap();
+    assert!(r.stats.count <= 1 << 22);
+    assert!(r.stats.count >= 1 << 12);
+}
+
+#[test]
+fn cpu_service_handles_job_burst() {
+    let svc = EvalService::start(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)).unwrap();
+    let tickets: Vec<_> = (0..8)
+        .map(|i| svc.submit(EvalJob::mc(12, 1 + (i % 6), i % 2 == 0, 20_000, i as u64)))
+        .collect();
+    for t in tickets {
+        assert!(t.wait().is_ok());
+    }
+    assert_eq!(svc.telemetry().jobs_completed, 8);
+}

@@ -1,0 +1,81 @@
+//! Figure-generation integration: every paper artifact generator runs on a
+//! reduced configuration and produces structurally-correct output.
+
+use segmul::config::Config;
+use segmul::coordinator::CpuBackend;
+use segmul::report;
+
+fn test_cfg(tag: &str) -> Config {
+    let mut c = Config::default();
+    c.results_dir = std::env::temp_dir().join(format!("segmul_figint_{tag}"));
+    c.error_bitwidths = vec![4, 8];
+    c.hw_bitwidths = vec![4, 8, 16];
+    c.hw_vectors = 64;
+    c.mc_samples = 1 << 10;
+    c.exhaustive_max_n = 8;
+    c
+}
+
+#[test]
+fn fig2_rows_cover_designs_and_baselines() {
+    let cfg = test_cfg("fig2");
+    let mut be = CpuBackend::new();
+    let t = report::fig2(&cfg, &mut be).unwrap();
+    let designs: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+    assert!(designs.iter().any(|d| *d == "segmul"));
+    assert!(designs.iter().any(|d| *d == "segmul+fix"));
+    assert!(designs.iter().any(|d| d.starts_with("trunc")));
+    assert!(designs.iter().any(|d| d.starts_with("mitchell")));
+    assert!(designs.iter().any(|d| d.starts_with("kulkarni")));
+    // ER column must be a probability
+    for row in &t.rows {
+        let er: f64 = row[4].parse().unwrap();
+        assert!((0.0..=1.0).contains(&er));
+    }
+}
+
+#[test]
+fn headline_reports_both_targets() {
+    let mut cfg = test_cfg("headline");
+    // small n (4) is noise-dominated on the FPGA model (constant LUT
+    // entry/exit swamps the 2-bit chain); the claim is about the sweep.
+    cfg.hw_bitwidths = vec![8, 16, 32];
+    let t = report::headline(&cfg).unwrap();
+    assert_eq!(t.rows.len(), 2);
+    for row in &t.rows {
+        let avg_red: f64 = row[1].parse().unwrap();
+        assert!(avg_red > 0.0, "latency must reduce on average: {row:?}");
+    }
+}
+
+#[test]
+fn probprop_table_bounded_error() {
+    let mut cfg = test_cfg("probprop");
+    cfg.exhaustive_max_n = 8;
+    let t = report::probprop_accuracy(&cfg).unwrap();
+    assert!(!t.rows.is_empty());
+    for row in &t.rows {
+        let rel: f64 = row[4].parse().unwrap();
+        assert!(rel < 0.5, "estimator ER rel err {rel} too large: {row:?}");
+    }
+}
+
+#[test]
+fn all_csvs_written() {
+    let cfg = test_cfg("csv");
+    let mut be = CpuBackend::new();
+    report::fig2(&cfg, &mut be).unwrap();
+    report::mae_table(&cfg).unwrap();
+    report::fig3a(&cfg).unwrap();
+    report::fig3b(&cfg).unwrap();
+    report::seqcomb(&cfg).unwrap();
+    for f in [
+        "fig2_error_metrics.csv",
+        "mae_closed_form.csv",
+        "fig3a_fpga.csv",
+        "fig3b_asic.csv",
+        "seqcomb_crossover.csv",
+    ] {
+        assert!(cfg.results_dir.join(f).exists(), "{f} missing");
+    }
+}

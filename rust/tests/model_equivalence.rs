@@ -1,0 +1,70 @@
+//! Cross-model equivalence: the four implementations of the approximate
+//! multiplier (bit-level paper equations, word-level u64/u128/U512, and
+//! the gate-level netlist) must agree bit-for-bit everywhere they overlap.
+
+use segmul::multiplier::wordlevel::{approx_seq_mul, approx_seq_mul_u128, approx_seq_mul_wide};
+use segmul::multiplier::{approx_seq_mul_bitlevel, U512};
+use segmul::netlist::generators::seq_mult::{run_batch, seq_mult};
+use segmul::netlist::SeqSim;
+use segmul::util::prop::Cases;
+
+#[test]
+fn exhaustive_all_models_n_le_5() {
+    for n in 2..=5u32 {
+        for t in 0..n {
+            for fix in [false, true] {
+                let run_fix = fix && t >= 1;
+                let circuit = seq_mult(n, t, t >= 1);
+                let mut sim = SeqSim::new(&circuit.nl);
+                let all: Vec<(u64, u64)> = (0..(1u64 << n))
+                    .flat_map(|a| (0..(1u64 << n)).map(move |b| (a, b)))
+                    .collect();
+                for chunk in all.chunks(64) {
+                    let av: Vec<U512> = chunk.iter().map(|&(a, _)| U512::from_u64(a)).collect();
+                    let bv: Vec<U512> = chunk.iter().map(|&(_, b)| U512::from_u64(b)).collect();
+                    let gate = run_batch(&circuit, &mut sim, &av, &bv, run_fix);
+                    for (&(a, b), g) in chunk.iter().zip(&gate) {
+                        let word = approx_seq_mul(a, b, n, t, run_fix);
+                        let bit = approx_seq_mul_bitlevel(a, b, n, t, run_fix);
+                        let w128 = approx_seq_mul_u128(a as u128, b as u128, n, t, run_fix) as u64;
+                        assert_eq!(word, bit, "word!=bit n={n} t={t} fix={run_fix} {a}x{b}");
+                        assert_eq!(word, w128, "word!=u128 n={n} t={t} {a}x{b}");
+                        assert_eq!(g.limb(0), word, "gate!=word n={n} t={t} fix={run_fix} {a}x{b}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_wide_and_word_agree_random_n_up_to_60() {
+    Cases::new(0xE951, 40).run(|rng, _| {
+        let n = 33 + rng.next_below(28) as u32; // 33..=60
+        let t = rng.next_below(n as u64) as u32;
+        let fix = rng.next_bits(1) == 1;
+        let a = rng.next_bits(n.min(60)) as u128;
+        let b = rng.next_bits(n.min(60)) as u128;
+        let via128 = approx_seq_mul_u128(a, b, n, t, fix);
+        let wide = approx_seq_mul_wide(&U512::from_u128(a), &U512::from_u128(b), n, t, fix);
+        assert_eq!(wide, U512::from_u128(via128), "n={n} t={t} fix={fix}");
+    });
+}
+
+#[test]
+fn paper_worked_examples() {
+    // Table Ia/Ib: 1011 x 0110 = 1000010 (66), accurate.
+    assert_eq!(approx_seq_mul(0b1011, 0b0110, 4, 0, false), 66);
+    // Table IIb: t = 2 segmentation defers the cycle-2 LSP carry.
+    assert_eq!(approx_seq_mul(0b1011, 0b0110, 4, 2, false), 82);
+    // MAE structure (E3): dropped final carry achieves 2^{n+t-1} exactly.
+    let (n, t) = (6u32, 3u32);
+    let mut worst = 0i64;
+    for a in 0..(1u64 << n) {
+        for b in 0..(1u64 << n) {
+            let ed = (a * b) as i64 - approx_seq_mul(a, b, n, t, false) as i64;
+            worst = worst.max(ed.abs());
+        }
+    }
+    assert_eq!(worst as u64, 1u64 << (n + t - 1));
+}

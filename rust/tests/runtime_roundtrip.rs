@@ -1,0 +1,128 @@
+//! Integration: the AOT-compiled PJRT artifacts must agree bit-for-bit with
+//! the Rust word-level model (which itself is proven equal to the paper's
+//! Boolean recurrences). This closes the loop python(L1/L2) == rust(L3).
+//!
+//! Skipped (with a message) when `make artifacts` has not been run.
+
+use std::path::PathBuf;
+
+use segmul::multiplier::wordlevel::{approx_seq_mul, error_distance, exact_mul};
+use segmul::runtime::{artifact, ModuleKind, Runtime};
+use segmul::util::rng::Xoshiro256;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts/ — run `make artifacts` first");
+        None
+    }
+}
+
+fn random_operands(n: u32, len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = Xoshiro256::seed_from_u64(seed);
+    let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+    let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+    (a, b)
+}
+
+#[test]
+fn manifest_covers_expected_bitwidths() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = artifact::Manifest::load(&dir).unwrap();
+    for n in [4u32, 8, 16, 32] {
+        assert!(manifest.find(n, ModuleKind::Stats).is_some(), "missing stats n={n}");
+        assert!(manifest.find(n, ModuleKind::Prod).is_some(), "missing prod n={n}");
+    }
+}
+
+#[test]
+fn prod_module_matches_wordlevel() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let batch = rt.batch();
+    for (n, t, fix) in [(4u32, 2u64, false), (8, 3, true), (16, 8, true), (32, 13, false)] {
+        let (a, b) = random_operands(n, batch, 42 + n as u64);
+        let got = rt.exec_prod(n, &a, &b, t, fix).unwrap();
+        for i in (0..batch).step_by(97) {
+            let want = approx_seq_mul(a[i], b[i], n, t as u32, fix);
+            assert_eq!(got[i], want, "n={n} t={t} fix={fix} i={i} a={} b={}", a[i], b[i]);
+        }
+        // full equality too (cheap)
+        let want_all: Vec<u64> = a
+            .iter()
+            .zip(&b)
+            .map(|(&x, &y)| approx_seq_mul(x, y, n, t as u32, fix))
+            .collect();
+        assert_eq!(got, want_all, "n={n}");
+    }
+}
+
+#[test]
+fn stats_module_matches_wordlevel_aggregation() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let batch = rt.batch();
+    for (n, t, fix) in [(8u32, 4u64, true), (16, 6, false)] {
+        let (a, b) = random_operands(n, batch, 7 + n as u64);
+        let got = rt.exec_stats(n, &a, &b, t, fix).unwrap();
+        assert_eq!(got.len(), 6 + 2 * n as usize);
+
+        let mut err_count = 0f64;
+        let mut sum_ed = 0f64;
+        let mut sum_abs = 0f64;
+        let mut max_abs = 0f64;
+        let mut sum_red = 0f64;
+        let mut flips = vec![0f64; 2 * n as usize];
+        for i in 0..batch {
+            let p = exact_mul(a[i], b[i], n);
+            let phat = approx_seq_mul(a[i], b[i], n, t as u32, fix);
+            let ed = error_distance(p, phat);
+            if ed != 0 {
+                err_count += 1.0;
+            }
+            sum_ed += ed as f64;
+            sum_abs += ed.unsigned_abs() as f64;
+            max_abs = max_abs.max(ed.unsigned_abs() as f64);
+            sum_red += ed.unsigned_abs() as f64 / (p.max(1)) as f64;
+            let x = p ^ phat;
+            for (bit, f) in flips.iter_mut().enumerate() {
+                *f += ((x >> bit) & 1) as f64;
+            }
+        }
+        assert_eq!(got[0], batch as f64);
+        assert_eq!(got[1], err_count, "err_count n={n}");
+        assert!((got[2] - sum_ed).abs() <= sum_abs.abs() * 1e-9, "sum_ed {} vs {}", got[2], sum_ed);
+        assert!((got[3] - sum_abs).abs() <= sum_abs * 1e-9);
+        assert_eq!(got[4], max_abs, "max_abs n={n}");
+        assert!((got[5] - sum_red).abs() <= sum_red.max(1.0) * 1e-9);
+        for (bit, f) in flips.iter().enumerate() {
+            assert_eq!(got[6 + bit], *f, "bitflip[{bit}] n={n}");
+        }
+    }
+}
+
+#[test]
+fn stats_accurate_config_is_error_free() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let batch = rt.batch();
+    let (a, b) = random_operands(16, batch, 99);
+    let got = rt.exec_stats(16, &a, &b, 0, false).unwrap();
+    assert_eq!(got[0], batch as f64);
+    for v in &got[1..] {
+        assert_eq!(*v, 0.0);
+    }
+}
+
+#[test]
+fn rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let short = vec![0u64; 3];
+    assert!(rt.exec_stats(8, &short, &short, 1, false).is_err());
+    let (a, b) = random_operands(8, rt.batch(), 1);
+    assert!(rt.exec_stats(8, &a, &b, 8, false).is_err(), "t >= n must be rejected");
+    assert!(rt.exec_stats(7, &a, &b, 1, false).is_err(), "unknown n must be rejected");
+}
