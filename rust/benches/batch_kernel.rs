@@ -1,0 +1,106 @@
+//! Batched vs scalar evaluation throughput (the acceptance benchmark for
+//! the batched engine): the n=8 exhaustive sweep, measured three ways —
+//!
+//! 1. `scalar/dyn`   — per-pair virtual `Multiplier::mul` + per-pair
+//!                     `ErrorStats::record` (the pre-batching hot path);
+//! 2. `scalar/static`— per-pair statically-dispatched `approx_seq_mul`
+//!                     (what the old specialized exhaustive loop did);
+//! 3. `batched`      — the monomorphized 4-wide batch kernel streaming
+//!                     through `BatchAccumulator` (the new engine).
+//!
+//! Pairs/sec lines are comparable across the three, and the summary prints
+//! the batched-over-scalar speedups so future BENCH_*.json capture them.
+//! Target: batched ≥ 3x over scalar/dyn on the n=8 exhaustive sweep.
+
+use segmul::bench::{bench, section, speedup};
+use segmul::error::metrics::ErrorStats;
+use segmul::error::stream::BatchAccumulator;
+use segmul::multiplier::batch::approx_seq_mul_batch;
+use segmul::multiplier::wordlevel::approx_seq_mul;
+use segmul::multiplier::{Multiplier, SegmentedSeqMul};
+
+fn main() {
+    let (n, t, fix) = (8u32, 4u32, true);
+    let space = 1u64 << (2 * n);
+    let pairs = space as f64;
+    let mask = (1u64 << n) - 1;
+    // Materialized operand arrays for the kernel-only comparison.
+    let av: Vec<u64> = (0..space).map(|i| i & mask).collect();
+    let bv: Vec<u64> = (0..space).map(|i| i >> n).collect();
+    let mut out = vec![0u64; av.len()];
+    let m = SegmentedSeqMul::new(n, t, fix);
+    let dynm: &dyn Multiplier = &m;
+
+    section("multiply kernel only (n=8 exhaustive operand set)");
+    let k_dyn = bench("mul scalar/dyn (per-pair virtual call)", Some(pairs), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            for (&a, &b) in av.iter().zip(&bv) {
+                acc ^= dynm.mul(a, b);
+            }
+        }
+        acc
+    });
+    let k_static = bench("mul scalar/static (inlined fast path)", Some(pairs), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            for (&a, &b) in av.iter().zip(&bv) {
+                acc ^= approx_seq_mul(a, b, n, t, fix);
+            }
+        }
+        acc
+    });
+    let k_batch = bench("mul batched (monomorphized, 4-wide)", Some(pairs), |iters| {
+        // XOR-fold the whole output (like the scalar loops) so no store
+        // can be eliminated as dead under LTO.
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            approx_seq_mul_batch(&av, &bv, &mut out, n, t, fix);
+            for &o in &out {
+                acc ^= o;
+            }
+        }
+        acc
+    });
+
+    section("full exhaustive sweep (multiply + streaming ErrorStats)");
+    let s_dyn = bench("sweep scalar/dyn + per-pair record", Some(pairs), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            let mut stats = ErrorStats::new(n);
+            for idx in 0..space {
+                let (a, b) = (idx & mask, idx >> n);
+                stats.record(a * b, dynm.mul(a, b));
+            }
+            acc ^= stats.err_count;
+        }
+        acc
+    });
+    let s_static = bench("sweep scalar/static + per-pair record", Some(pairs), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            let mut stats = ErrorStats::new(n);
+            for idx in 0..space {
+                let (a, b) = (idx & mask, idx >> n);
+                stats.record(a * b, approx_seq_mul(a, b, n, t, fix));
+            }
+            acc ^= stats.err_count;
+        }
+        acc
+    });
+    let s_batch = bench("sweep batched engine (BatchAccumulator)", Some(pairs), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            let mut ba = BatchAccumulator::new(&m);
+            ba.eval_index_range(0, space);
+            acc ^= ba.finish().err_count;
+        }
+        acc
+    });
+
+    println!();
+    println!("kernel speedup, batched vs scalar/dyn    : {:>6.2}x", speedup(&k_batch, &k_dyn));
+    println!("kernel speedup, batched vs scalar/static : {:>6.2}x", speedup(&k_batch, &k_static));
+    println!("sweep  speedup, batched vs scalar/dyn    : {:>6.2}x  (target >= 3x)", speedup(&s_batch, &s_dyn));
+    println!("sweep  speedup, batched vs scalar/static : {:>6.2}x", speedup(&s_batch, &s_static));
+}

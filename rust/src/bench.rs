@@ -104,6 +104,15 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Throughput ratio of two results over the same workload (> 1 means
+/// `new` is faster). Accounts for differing `items_per_iter`, so a
+/// batched run and a scalar run of the same sweep compare directly.
+pub fn speedup(new: &BenchResult, old: &BenchResult) -> f64 {
+    let per_item_new = new.ns_per_iter / new.items_per_iter.unwrap_or(1.0);
+    let per_item_old = old.ns_per_iter / old.items_per_iter.unwrap_or(1.0);
+    per_item_old / per_item_new
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +129,20 @@ mod tests {
         });
         assert!(r.ns_per_iter > 0.0);
         assert!(r.iters >= 1);
+    }
+
+    #[test]
+    fn speedup_accounts_for_items() {
+        let mk = |ns: f64, items: Option<f64>| BenchResult {
+            name: "x".into(),
+            iters: 1,
+            ns_per_iter: ns,
+            items_per_iter: items,
+        };
+        // 100 ns for 10 items vs 100 ns for 1 item: 10x.
+        assert!((speedup(&mk(100.0, Some(10.0)), &mk(100.0, Some(1.0))) - 10.0).abs() < 1e-12);
+        // Same workload, half the time: 2x.
+        assert!((speedup(&mk(50.0, None), &mk(100.0, None)) - 2.0).abs() < 1e-12);
     }
 
     #[test]

@@ -11,7 +11,8 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::error::metrics::ErrorStats;
-use crate::multiplier::wordlevel::approx_seq_mul;
+use crate::error::stream::BatchAccumulator;
+use crate::multiplier::SegmentedSeqMul;
 use crate::runtime::Runtime;
 
 /// A batch evaluator for the segmented sequential multiplier.
@@ -25,7 +26,10 @@ pub trait EvalBackend {
     fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats>;
 }
 
-/// Pure-Rust word-level backend (always available, any n ≤ 32).
+/// Pure-Rust word-level backend (always available, any n ≤ 32). A thin
+/// wrapper over the batched streaming engine: each call runs the same
+/// monomorphized kernels + block-resident `BatchAccumulator` the
+/// standalone evaluators use — no per-pair dispatch anywhere.
 pub struct CpuBackend {
     batch: usize,
 }
@@ -57,11 +61,12 @@ impl EvalBackend for CpuBackend {
 
     fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
         anyhow::ensure!(a.len() == b.len());
-        let mut stats = ErrorStats::new(n);
-        for (&x, &y) in a.iter().zip(b) {
-            stats.record(x * y, approx_seq_mul(x, y, n, t, fix));
-        }
-        Ok(stats)
+        anyhow::ensure!((1..=32).contains(&n), "n={n} out of range");
+        anyhow::ensure!(t < n, "t={t} out of range for n={n}");
+        let m = SegmentedSeqMul::new(n, t, fix);
+        let mut acc = BatchAccumulator::new(&m);
+        acc.eval_pairs(a, b);
+        Ok(acc.finish())
     }
 }
 
@@ -122,6 +127,7 @@ impl EvalBackend for PjrtBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::multiplier::wordlevel::approx_seq_mul;
     use crate::util::rng::Xoshiro256;
 
     #[test]

@@ -3,17 +3,22 @@
 //! The paper evaluates exhaustively for n ≤ 16 (4.3·10^9 pairs on their
 //! testbed); on this 1-core box the practical limit is n ≈ 12–13 (1.7·10^7
 //! – 6.7·10^7 pairs), above which [`super::montecarlo`] takes over. The
-//! iteration space is chunked and folded via the scoped thread pool, so the
-//! same code uses every core when more are available.
+//! iteration space is chunked across the scoped thread pool and each chunk
+//! runs the batched streaming engine ([`super::stream::BatchAccumulator`]):
+//! blocks of operand pairs go through the monomorphized word-level batch
+//! kernel — no per-pair virtual dispatch anywhere on the hot path — and
+//! the partial [`ErrorStats`] fold exactly regardless of the chunking.
 
-use crate::multiplier::wordlevel::approx_seq_mul;
-use crate::multiplier::Multiplier;
+use crate::multiplier::batch::BatchMultiplier;
+use crate::multiplier::{Multiplier, ScalarBatch, SegmentedSeqMul};
 use crate::util::threadpool::{default_workers, parallel_fold};
 
 use super::metrics::ErrorStats;
+use super::stream::BatchAccumulator;
 
 /// Exhaustive stats for the paper's segmented sequential multiplier.
-/// Specialized on the word-level fast path (no dyn dispatch in the loop).
+/// Specialized on the batched word-level kernel (no dyn dispatch in the
+/// inner loop).
 pub fn exhaustive_stats(n: u32, t: u32, fix: bool) -> ErrorStats {
     exhaustive_stats_workers(n, t, fix, default_workers())
 }
@@ -22,32 +27,13 @@ pub fn exhaustive_stats(n: u32, t: u32, fix: bool) -> ErrorStats {
 pub fn exhaustive_stats_workers(n: u32, t: u32, fix: bool, workers: usize) -> ErrorStats {
     assert!(n >= 1 && n <= 16, "exhaustive evaluation is limited to n <= 16");
     assert!(t < n);
-    let total: u64 = 1u64 << (2 * n);
-    parallel_fold(
-        total,
-        workers,
-        |_, start, end| {
-            let mut stats = ErrorStats::new(n);
-            let mask = (1u64 << n) - 1;
-            for idx in start..end {
-                let a = idx & mask;
-                let b = idx >> n;
-                let p = a * b;
-                let phat = approx_seq_mul(a, b, n, t, fix);
-                stats.record(p, phat);
-            }
-            stats
-        },
-        |mut acc, part| {
-            acc.merge(&part);
-            acc
-        },
-    )
-    .expect("nonempty input space")
+    exhaustive_stats_batch(&SegmentedSeqMul::new(n, t, fix), workers)
 }
 
-/// Exhaustive stats for any [`Multiplier`] (used for the Fig. 2 baselines).
-pub fn exhaustive_stats_mul(m: &dyn Multiplier, workers: usize) -> ErrorStats {
+/// Exhaustive stats for any [`BatchMultiplier`]. The whole `2^(2n)` index
+/// space is split across `workers` threads; each worker streams its range
+/// through a [`BatchAccumulator`] and the partials are merged.
+pub fn exhaustive_stats_batch(m: &dyn BatchMultiplier, workers: usize) -> ErrorStats {
     let n = m.n();
     assert!(n >= 1 && n <= 16, "exhaustive evaluation is limited to n <= 16");
     let total: u64 = 1u64 << (2 * n);
@@ -55,14 +41,9 @@ pub fn exhaustive_stats_mul(m: &dyn Multiplier, workers: usize) -> ErrorStats {
         total,
         workers,
         |_, start, end| {
-            let mut stats = ErrorStats::new(n);
-            let mask = (1u64 << n) - 1;
-            for idx in start..end {
-                let a = idx & mask;
-                let b = idx >> n;
-                stats.record(a * b, m.mul(a, b));
-            }
-            stats
+            let mut acc = BatchAccumulator::new(m);
+            acc.eval_index_range(start, end);
+            acc.finish()
         },
         |mut acc, part| {
             acc.merge(&part);
@@ -72,10 +53,18 @@ pub fn exhaustive_stats_mul(m: &dyn Multiplier, workers: usize) -> ErrorStats {
     .expect("nonempty input space")
 }
 
+/// Exhaustive stats for any scalar [`Multiplier`] (used for the Fig. 2
+/// baselines, which have no batched kernels): the scalar model runs under
+/// the batched engine through the [`ScalarBatch`] adapter.
+pub fn exhaustive_stats_mul(m: &dyn Multiplier, workers: usize) -> ErrorStats {
+    exhaustive_stats_batch(&ScalarBatch(m), workers)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::multiplier::baselines::TruncatedMul;
+    use crate::multiplier::wordlevel::approx_seq_mul;
     use crate::multiplier::SegmentedSeqMul;
 
     #[test]
@@ -115,6 +104,14 @@ mod tests {
         let via_dyn = exhaustive_stats_mul(&m, 2);
         let via_fast = exhaustive_stats(6, 3, false);
         assert!(via_dyn.approx_eq(&via_fast));
+    }
+
+    #[test]
+    fn batch_multiplier_entry_point_agrees() {
+        let m = SegmentedSeqMul::new(6, 2, true);
+        let via_batch = exhaustive_stats_batch(&m, 3);
+        let via_fast = exhaustive_stats(6, 2, true);
+        assert!(via_batch.approx_eq(&via_fast));
     }
 
     #[test]

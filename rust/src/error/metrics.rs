@@ -51,9 +51,28 @@ impl ErrorStats {
     #[inline]
     pub fn record(&mut self, p: u64, phat: u64) {
         self.count += 1;
-        if p == phat {
-            return;
+        if p != phat {
+            self.record_mismatch(p, phat);
         }
+    }
+
+    /// Record a batch of (exact, approximate) product pairs — the batched
+    /// engine's entry point. Equivalent to calling [`Self::record`] per
+    /// pair (bit-exact, same accumulation order), with the per-pair count
+    /// bump hoisted out of the loop.
+    pub fn record_batch(&mut self, exact: &[u64], approx: &[u64]) {
+        assert_eq!(exact.len(), approx.len(), "product slices must have equal length");
+        self.count += exact.len() as u64;
+        for (&p, &phat) in exact.iter().zip(approx) {
+            if p != phat {
+                self.record_mismatch(p, phat);
+            }
+        }
+    }
+
+    /// The error branch of [`Self::record`] (`p != phat` established).
+    #[inline]
+    fn record_mismatch(&mut self, p: u64, phat: u64) {
         self.err_count += 1;
         let ed = error_distance(p, phat);
         self.sum_ed += ed as i128;
@@ -219,6 +238,29 @@ mod tests {
         let mut z = ErrorStats::new(8);
         z.record(0, 3);
         assert!((z.metrics().mred - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn record_batch_equals_per_pair() {
+        let mut rng = Xoshiro256::seed_from_u64(0xBB);
+        let exact: Vec<u64> = (0..777).map(|_| rng.next_bits(16)).collect();
+        let approx: Vec<u64> =
+            exact.iter().map(|&p| if p % 3 == 0 { p } else { p ^ 5 }).collect();
+        let mut batched = ErrorStats::new(8);
+        batched.record_batch(&exact, &approx);
+        let mut scalar = ErrorStats::new(8);
+        for (&p, &ph) in exact.iter().zip(&approx) {
+            scalar.record(p, ph);
+        }
+        // Same accumulation order => bit-identical, floats included.
+        assert_eq!(batched, scalar);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn record_batch_rejects_mismatched_lengths() {
+        let mut s = ErrorStats::new(8);
+        s.record_batch(&[1, 2], &[1]);
     }
 
     #[test]

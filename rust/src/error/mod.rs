@@ -3,10 +3,15 @@
 //! * [`metrics`]     — streaming accumulator + derived metric set
 //!   (BER per bit, ER, ED, MAE, MED, NMED, MRED), mergeable across chunks
 //!   and loadable from the PJRT stats vector.
-//! * [`exhaustive`]  — exact evaluation over all 2^(2n) input pairs.
+//! * [`stream`]      — the batched streaming engine: a
+//!   [`stream::BatchAccumulator`] drives a batched multiplier kernel over
+//!   L1-sized operand blocks and folds exact-vs-approximate products into
+//!   a mergeable [`ErrorStats`].
+//! * [`exhaustive`]  — exact evaluation over all 2^(2n) input pairs
+//!   (chunked across workers, batched within each chunk).
 //! * [`montecarlo`]  — sampled evaluation (the paper uses 2^32 patterns;
 //!   sample count is configurable here) with uniform or weighted operand
-//!   distributions.
+//!   distributions, batched per chunk.
 //! * [`closed_form`] — Eq. (11) MAE closed form, the corrected measured
 //!   form, and latency/adder-count formulas from §III/§IV.
 //! * [`probprop`]    — the §V-B polynomial-time probability-propagation
@@ -17,7 +22,9 @@ pub mod exhaustive;
 pub mod metrics;
 pub mod montecarlo;
 pub mod probprop;
+pub mod stream;
 
 pub use exhaustive::exhaustive_stats;
 pub use metrics::{ErrorMetrics, ErrorStats};
 pub use montecarlo::{mc_stats, InputDist, McConfig};
+pub use stream::BatchAccumulator;

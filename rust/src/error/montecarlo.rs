@@ -7,13 +7,21 @@
 //! of the worker count is NOT guaranteed (each worker owns a stream); for
 //! reproducibility the chunk layout is derived from the sample count and
 //! `chunk` size only, never from the worker count.
+//!
+//! Within each chunk, operands are sampled into blocks and evaluated
+//! through the batched engine ([`super::stream::BatchAccumulator`]), so
+//! the multiply inner loop is the same monomorphized kernel the
+//! exhaustive path uses. The sampling order (a, b interleaved per pair,
+//! sequential within a chunk) is part of the reproducibility contract and
+//! is unchanged by the blocking.
 
-use crate::multiplier::wordlevel::approx_seq_mul;
-use crate::multiplier::Multiplier;
+use crate::multiplier::batch::BatchMultiplier;
+use crate::multiplier::{Multiplier, ScalarBatch, SegmentedSeqMul};
 use crate::util::rng::Xoshiro256;
 use crate::util::threadpool::{default_workers, parallel_fold};
 
 use super::metrics::ErrorStats;
+use super::stream::{BatchAccumulator, BLOCK};
 
 /// Operand distribution for MC sampling.
 #[derive(Clone, Debug)]
@@ -106,44 +114,48 @@ fn sample_operand(dist: &InputDist, n: u32, rng: &mut Xoshiro256) -> u64 {
     }
 }
 
-/// MC stats for the paper's segmented sequential multiplier (fast path).
+/// MC stats for the paper's segmented sequential multiplier (the batched
+/// monomorphized kernel).
 pub fn mc_stats(n: u32, t: u32, fix: bool, cfg: &McConfig) -> ErrorStats {
     assert!(n >= 1 && n <= 32);
     assert!(t < n);
-    mc_run(n, cfg, |a, b, stats| {
-        stats.record(a * b, approx_seq_mul(a, b, n, t, fix));
-    })
+    mc_stats_batch(&SegmentedSeqMul::new(n, t, fix), cfg)
 }
 
-/// MC stats for any [`Multiplier`].
+/// MC stats for any scalar [`Multiplier`] (via the [`ScalarBatch`]
+/// adapter — per-pair dispatch, but the same sampling decomposition).
 pub fn mc_stats_mul(m: &dyn Multiplier, cfg: &McConfig) -> ErrorStats {
-    let n = m.n();
-    mc_run(n, cfg, |a, b, stats| {
-        stats.record(a * b, m.mul(a, b));
-    })
+    mc_stats_batch(&ScalarBatch(m), cfg)
 }
 
-fn mc_run<F>(n: u32, cfg: &McConfig, eval: F) -> ErrorStats
-where
-    F: Fn(u64, u64, &mut ErrorStats) + Sync,
-{
+/// MC stats for any [`BatchMultiplier`]. Chunks are assigned to workers;
+/// each chunk owns an independent xoshiro stream and is evaluated in
+/// [`BLOCK`]-sized operand blocks through the batched engine.
+pub fn mc_stats_batch(m: &dyn BatchMultiplier, cfg: &McConfig) -> ErrorStats {
     assert!(cfg.samples > 0 && cfg.chunk > 0);
+    let n = m.n();
     let n_chunks = cfg.samples.div_ceil(cfg.chunk);
     parallel_fold(
         n_chunks,
         cfg.workers,
         |_, first_chunk, last_chunk| {
-            let mut stats = ErrorStats::new(n);
+            let mut acc = BatchAccumulator::new(m);
+            let mut a = vec![0u64; BLOCK];
+            let mut b = vec![0u64; BLOCK];
             for chunk_id in first_chunk..last_chunk {
                 let mut rng = Xoshiro256::stream(cfg.seed, chunk_id);
-                let count = cfg.chunk.min(cfg.samples - chunk_id * cfg.chunk);
-                for _ in 0..count {
-                    let a = sample_operand(&cfg.dist_a, n, &mut rng);
-                    let b = sample_operand(&cfg.dist_b, n, &mut rng);
-                    eval(a, b, &mut stats);
+                let mut remaining = cfg.chunk.min(cfg.samples - chunk_id * cfg.chunk);
+                while remaining > 0 {
+                    let len = (remaining as usize).min(BLOCK);
+                    for (ai, bi) in a[..len].iter_mut().zip(&mut b[..len]) {
+                        *ai = sample_operand(&cfg.dist_a, n, &mut rng);
+                        *bi = sample_operand(&cfg.dist_b, n, &mut rng);
+                    }
+                    acc.eval_pairs(&a[..len], &b[..len]);
+                    remaining -= len as u64;
                 }
             }
-            stats
+            acc.finish()
         },
         |mut acc, part| {
             acc.merge(&part);
@@ -193,6 +205,17 @@ mod tests {
         cfg.chunk = 1000;
         let s = mc_stats(8, 2, false, &cfg);
         assert_eq!(s.count, 100_001);
+    }
+
+    #[test]
+    fn batched_and_scalar_adapter_agree() {
+        // The monomorphized batch kernel and the per-pair scalar adapter
+        // must see identical operands and produce identical statistics.
+        let cfg = McConfig::uniform(30_000, 21);
+        let m = crate::multiplier::SegmentedSeqMul::new(10, 4, true);
+        let fast = mc_stats(10, 4, true, &cfg);
+        let via_adapter = mc_stats_mul(&m, &cfg);
+        assert!(fast.approx_eq(&via_adapter));
     }
 
     #[test]

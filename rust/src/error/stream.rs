@@ -1,0 +1,166 @@
+//! Streaming batched evaluation: multiplier kernels → [`ErrorStats`].
+//!
+//! [`BatchAccumulator`] is the single evaluation engine behind the
+//! exhaustive and Monte-Carlo paths: it drives a [`BatchMultiplier`] over
+//! operand blocks of [`BLOCK`] pairs (sized so the four scratch buffers
+//! stay L1/L2-resident), computes the exact products alongside, and folds
+//! both into a streaming [`ErrorStats`]. Partial accumulators from
+//! different chunks of the input space merge exactly (integer fields are
+//! bit-exact under any chunking; see `tests/kernel_differential.rs`), so
+//! the same engine runs sequentially, across `util::threadpool` workers,
+//! and inside the coordinator's backend batches.
+
+use crate::error::metrics::ErrorStats;
+use crate::multiplier::batch::{exact_mul_batch, BatchMultiplier};
+
+/// Operand block size for the streaming engine. Four u64 buffers of this
+/// length are 128 KiB total — L2-resident on every target we run on,
+/// while long enough to amortize per-block dispatch to noise.
+pub const BLOCK: usize = 4096;
+
+/// Streaming batched evaluator for one multiplier configuration.
+pub struct BatchAccumulator<'m> {
+    m: &'m dyn BatchMultiplier,
+    /// Scratch operand blocks (used by the index-range driver).
+    a: Vec<u64>,
+    b: Vec<u64>,
+    /// Scratch product blocks.
+    prod: Vec<u64>,
+    phat: Vec<u64>,
+    stats: ErrorStats,
+}
+
+/// Evaluate one block: batched approximate + exact products, then a
+/// batched statistics record. Free function so callers can pass disjoint
+/// borrows of an accumulator's fields.
+fn eval_block(
+    m: &dyn BatchMultiplier,
+    a: &[u64],
+    b: &[u64],
+    prod: &mut [u64],
+    phat: &mut [u64],
+    stats: &mut ErrorStats,
+) {
+    m.mul_batch(a, b, phat);
+    exact_mul_batch(a, b, prod);
+    stats.record_batch(prod, phat);
+}
+
+impl<'m> BatchAccumulator<'m> {
+    pub fn new(m: &'m dyn BatchMultiplier) -> Self {
+        let n = m.n();
+        Self {
+            m,
+            a: vec![0; BLOCK],
+            b: vec![0; BLOCK],
+            prod: vec![0; BLOCK],
+            phat: vec![0; BLOCK],
+            stats: ErrorStats::new(n),
+        }
+    }
+
+    /// Evaluate explicit operand pairs (any length; blocked internally).
+    pub fn eval_pairs(&mut self, a: &[u64], b: &[u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+        for (ca, cb) in a.chunks(BLOCK).zip(b.chunks(BLOCK)) {
+            let len = ca.len();
+            eval_block(self.m, ca, cb, &mut self.prod[..len], &mut self.phat[..len], &mut self.stats);
+        }
+    }
+
+    /// Evaluate the exhaustive index range `[start, end)` of the `2^(2n)`
+    /// input space, where index `i` encodes `a = i & (2^n - 1)`,
+    /// `b = i >> n` (the same decomposition `error::exhaustive` and the
+    /// coordinator driver use).
+    pub fn eval_index_range(&mut self, start: u64, end: u64) {
+        let n = self.stats.n;
+        let mask = (1u64 << n) - 1;
+        let mut idx = start;
+        while idx < end {
+            let len = ((end - idx) as usize).min(BLOCK);
+            for (k, (ai, bi)) in self.a[..len].iter_mut().zip(&mut self.b[..len]).enumerate() {
+                let i = idx + k as u64;
+                *ai = i & mask;
+                *bi = i >> n;
+            }
+            eval_block(
+                self.m,
+                &self.a[..len],
+                &self.b[..len],
+                &mut self.prod[..len],
+                &mut self.phat[..len],
+                &mut self.stats,
+            );
+            idx += len as u64;
+        }
+    }
+
+    /// The statistics accumulated so far.
+    pub fn stats(&self) -> &ErrorStats {
+        &self.stats
+    }
+
+    /// Consume the accumulator, yielding its statistics.
+    pub fn finish(self) -> ErrorStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::wordlevel::approx_seq_mul;
+    use crate::multiplier::SegmentedSeqMul;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn index_range_matches_per_pair_record() {
+        let (n, t, fix) = (6u32, 3u32, true);
+        let m = SegmentedSeqMul::new(n, t, fix);
+        let mut acc = BatchAccumulator::new(&m);
+        acc.eval_index_range(0, 1 << (2 * n));
+        let mut want = ErrorStats::new(n);
+        for idx in 0..(1u64 << (2 * n)) {
+            let (a, b) = (idx & ((1 << n) - 1), idx >> n);
+            want.record(a * b, approx_seq_mul(a, b, n, t, fix));
+        }
+        // Same evaluation order => identical accumulation, floats included.
+        assert_eq!(acc.finish(), want);
+    }
+
+    #[test]
+    fn pairs_blocking_is_invisible() {
+        // One call over > BLOCK pairs == many calls over ragged pieces.
+        let (n, t, fix) = (8u32, 4u32, false);
+        let m = SegmentedSeqMul::new(n, t, fix);
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let len = BLOCK + 1234;
+        let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+        let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+        let mut one = BatchAccumulator::new(&m);
+        one.eval_pairs(&a, &b);
+        let mut pieces = BatchAccumulator::new(&m);
+        let cut1 = 7;
+        let cut2 = BLOCK + 13;
+        pieces.eval_pairs(&a[..cut1], &b[..cut1]);
+        pieces.eval_pairs(&a[cut1..cut2], &b[cut1..cut2]);
+        pieces.eval_pairs(&a[cut2..], &b[cut2..]);
+        assert_eq!(one.finish(), pieces.finish());
+    }
+
+    #[test]
+    fn split_index_ranges_merge_exactly() {
+        let (n, t) = (5u32, 2u32);
+        let m = SegmentedSeqMul::new(n, t, true);
+        let total = 1u64 << (2 * n);
+        let mut whole = BatchAccumulator::new(&m);
+        whole.eval_index_range(0, total);
+        let mut left = BatchAccumulator::new(&m);
+        left.eval_index_range(0, total / 3);
+        let mut right = BatchAccumulator::new(&m);
+        right.eval_index_range(total / 3, total);
+        let mut merged = left.finish();
+        merged.merge(&right.finish());
+        assert!(merged.approx_eq(whole.stats()));
+    }
+}

@@ -1,0 +1,274 @@
+//! Batched word-level kernels — the L3 hot path.
+//!
+//! The scalar [`super::Multiplier`] trait costs one virtual call per
+//! operand pair, which blocks inlining of a ~ten-cycle kernel and starves
+//! the out-of-order core. [`BatchMultiplier`] is the batched counterpart:
+//! one (possibly virtual) call per operand *slice*, with the inner loop
+//! monomorphized over the fix-to-1 flag and manually unrolled four pairs
+//! wide so independent multiplications overlap in flight. The kernel body
+//! is the branch-free generic recurrence of [`super::wordlevel`] (no
+//! data-dependent early exit — uniform latency is what lets the unrolled
+//! lanes pipeline), and bit-exactness against the scalar fast path, the
+//! bit-level `Ŝ/Ĉ` oracle, and the gate-level netlist is enforced by
+//! `tests/kernel_differential.rs`.
+//!
+//! Layering: this module only computes products. The streaming statistics
+//! side of the batched engine (exact products + [`crate::error::metrics::
+//! ErrorStats`] accumulation) lives in `error::stream`, which drives these
+//! kernels through scratch blocks sized for the L1 cache.
+
+use super::wordlevel::MulWord;
+use super::{AccurateMul, Multiplier, SegmentedSeqMul};
+
+/// A (possibly approximate) n-bit multiplier evaluated over operand
+/// slices. `mul_batch` must satisfy `out[i] = mul(a[i], b[i])` for the
+/// corresponding scalar model; implementations amortize dispatch and
+/// expose instruction-level parallelism across pairs.
+pub trait BatchMultiplier: Sync {
+    /// Operand bit-width n (operands `< 2^n`, products fit in u64; n ≤ 32).
+    fn n(&self) -> u32;
+    /// Display name used in reports.
+    fn name(&self) -> String;
+    /// Batched products: `out[i] = mul(a[i], b[i])`. All three slices must
+    /// have equal length.
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]);
+}
+
+/// One branch-free segmented-carry multiply (the generic word-level
+/// recurrence, u64-specialized, fix-to-1 monomorphized).
+#[inline(always)]
+fn seq_mul_one<const FIX: bool>(a: u64, b: u64, n: u32, t: u32, mt: u64) -> u64 {
+    let mut s = a & (b & 1).wrapping_neg();
+    let mut cff = 0u64;
+    let mut low = 0u64;
+    let mut j = 1u32;
+    while j < n {
+        low |= (s & 1) << (j - 1);
+        let x = s >> 1;
+        let pp = a & ((b >> j) & 1).wrapping_neg();
+        let lsum = (x & mt) + (pp & mt);
+        let clsp = (lsum >> t) & 1;
+        let msum = (x >> t) + (pp >> t) + cff;
+        s = (msum << t) | (lsum & mt);
+        cff = clsp;
+        j += 1;
+    }
+    let mut phat = (s << (n - 1)) | low;
+    if FIX && cff == 1 {
+        phat |= (1u64 << (n + t)) - 1;
+    }
+    phat
+}
+
+/// Monomorphized batch loop, unrolled 4 pairs wide. The four lanes carry
+/// no data dependencies, so their recurrences interleave in the pipeline.
+fn batch_kernel<const FIX: bool>(a: &[u64], b: &[u64], out: &mut [u64], n: u32, t: u32) {
+    let mt = (1u64 << t) - 1;
+    let mut ac = a.chunks_exact(4);
+    let mut bc = b.chunks_exact(4);
+    let mut oc = out.chunks_exact_mut(4);
+    for ((ca, cb), co) in (&mut ac).zip(&mut bc).zip(&mut oc) {
+        co[0] = seq_mul_one::<FIX>(ca[0], cb[0], n, t, mt);
+        co[1] = seq_mul_one::<FIX>(ca[1], cb[1], n, t, mt);
+        co[2] = seq_mul_one::<FIX>(ca[2], cb[2], n, t, mt);
+        co[3] = seq_mul_one::<FIX>(ca[3], cb[3], n, t, mt);
+    }
+    for ((&ai, &bi), o) in ac.remainder().iter().zip(bc.remainder()).zip(oc.into_remainder()) {
+        *o = seq_mul_one::<FIX>(ai, bi, n, t, mt);
+    }
+}
+
+/// Batched approximate products of the paper's segmented-carry sequential
+/// multiplier: `out[i] = approx_seq_mul(a[i], b[i], n, t, fix)`, bit-exact
+/// with the scalar model. Requirements: equal slice lengths, `1 <= n <= 32`,
+/// `t < n`, operands `< 2^n`.
+pub fn approx_seq_mul_batch(a: &[u64], b: &[u64], out: &mut [u64], n: u32, t: u32, fix: bool) {
+    assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+    assert_eq!(a.len(), out.len(), "output slice must match operand length");
+    assert!(n >= 1 && n <= 32, "approx_seq_mul_batch supports 1 <= n <= 32");
+    assert!(t < n, "splitting point must satisfy 0 <= t < n");
+    debug_assert!(a.iter().chain(b).all(|&x| x >> n == 0), "operands must be < 2^n");
+    if fix {
+        batch_kernel::<true>(a, b, out, n, t);
+    } else {
+        batch_kernel::<false>(a, b, out, n, t);
+    }
+}
+
+/// Batched exact 2n-bit products (n ≤ 32): `out[i] = a[i] * b[i]`.
+/// The loop is multiplication-only, so it auto-vectorizes.
+pub fn exact_mul_batch(a: &[u64], b: &[u64], out: &mut [u64]) {
+    assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+    assert_eq!(a.len(), out.len(), "output slice must match operand length");
+    for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+        *o = x * y;
+    }
+}
+
+impl BatchMultiplier for SegmentedSeqMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        Multiplier::name(self)
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        approx_seq_mul_batch(a, b, out, self.n, self.t, self.fix_to_1);
+    }
+}
+
+impl BatchMultiplier for AccurateMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        Multiplier::name(self)
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        exact_mul_batch(a, b, out);
+    }
+}
+
+/// Adapter running any scalar [`Multiplier`] under the batched interface
+/// (one virtual call per pair — used for the Fig. 2 related-work baselines,
+/// which have no batched kernels; the paper's design never goes through
+/// this).
+pub struct ScalarBatch<'a, M: Multiplier + ?Sized>(pub &'a M);
+
+impl<M: Multiplier + ?Sized> BatchMultiplier for ScalarBatch<'_, M> {
+    fn n(&self) -> u32 {
+        self.0.n()
+    }
+
+    fn name(&self) -> String {
+        self.0.name()
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+        assert_eq!(a.len(), out.len(), "output slice must match operand length");
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = self.0.mul(x, y);
+        }
+    }
+}
+
+/// Word-generic batched kernel for the wide models (u128 / U512): the same
+/// branch-free recurrence over any [`MulWord`]. Slower than the u64 path
+/// (no unroll) — used by software cross-checks, not the hot loop.
+pub fn approx_seq_mul_batch_word<W: MulWord>(a: &[W], b: &[W], out: &mut [W], n: u32, t: u32, fix: bool) {
+    assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+    assert_eq!(a.len(), out.len(), "output slice must match operand length");
+    for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+        *o = super::wordlevel::approx_seq_mul_word(x, y, n, t, fix);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::wordlevel::approx_seq_mul;
+    use crate::util::prop::Cases;
+
+    #[test]
+    fn batch_matches_scalar_all_tail_lengths() {
+        // Exercise both the unrolled body and every remainder length.
+        let (n, t) = (8u32, 3u32);
+        for fix in [false, true] {
+            for len in 0..=9usize {
+                let a: Vec<u64> = (0..len as u64).map(|i| (i * 37) & 0xFF).collect();
+                let b: Vec<u64> = (0..len as u64).map(|i| (i * 91 + 5) & 0xFF).collect();
+                let mut out = vec![0u64; len];
+                approx_seq_mul_batch(&a, &b, &mut out, n, t, fix);
+                for i in 0..len {
+                    assert_eq!(out[i], approx_seq_mul(a[i], b[i], n, t, fix), "len={len} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_batch_matches_scalar_random() {
+        Cases::new(0xBA7C, 200).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let t = rng.next_below(n as u64) as u32;
+            let fix = rng.next_bits(1) == 1;
+            let len = 1 + rng.next_below(64) as usize;
+            let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let mut out = vec![0u64; len];
+            approx_seq_mul_batch(&a, &b, &mut out, n, t, fix);
+            for i in 0..len {
+                assert_eq!(out[i], approx_seq_mul(a[i], b[i], n, t, fix), "n={n} t={t} fix={fix} i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn trait_impls_agree_with_scalar_trait() {
+        let m = SegmentedSeqMul::new(8, 4, true);
+        let a = [200u64, 0, 255, 7];
+        let b = [100u64, 0, 255, 9];
+        let mut out = [0u64; 4];
+        BatchMultiplier::mul_batch(&m, &a, &b, &mut out);
+        for i in 0..4 {
+            assert_eq!(out[i], Multiplier::mul(&m, a[i], b[i]));
+        }
+        assert_eq!(BatchMultiplier::name(&m), Multiplier::name(&m));
+        assert_eq!(BatchMultiplier::n(&m), 8);
+
+        let acc = AccurateMul { n: 8 };
+        BatchMultiplier::mul_batch(&acc, &a, &b, &mut out);
+        assert_eq!(out[0], 200 * 100);
+    }
+
+    #[test]
+    fn scalar_batch_adapter_forwards() {
+        let m = SegmentedSeqMul::new(6, 2, false);
+        let dynm: &dyn Multiplier = &m;
+        let wrap = ScalarBatch(dynm);
+        assert_eq!(wrap.n(), 6);
+        assert_eq!(wrap.name(), "segmul(n=6,t=2)");
+        let a = [13u64, 63, 0];
+        let b = [7u64, 63, 5];
+        let mut got = [0u64; 3];
+        let mut want = [0u64; 3];
+        wrap.mul_batch(&a, &b, &mut got);
+        approx_seq_mul_batch(&a, &b, &mut want, 6, 2, false);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn exact_batch_is_exact() {
+        let a = [0u64, 1, 65535, 40000];
+        let b = [9u64, 1, 65535, 3];
+        let mut out = [0u64; 4];
+        exact_mul_batch(&a, &b, &mut out);
+        for i in 0..4 {
+            assert_eq!(out[i], a[i] * b[i]);
+        }
+    }
+
+    #[test]
+    fn word_generic_batch_matches_u64_batch() {
+        let (n, t) = (20u32, 9u32);
+        let a: Vec<u64> = (0..17u64).map(|i| (i * 48271) & 0xF_FFFF).collect();
+        let b: Vec<u64> = (0..17u64).map(|i| (i * 69621 + 11) & 0xF_FFFF).collect();
+        let mut fast = vec![0u64; 17];
+        let mut generic = vec![0u64; 17];
+        approx_seq_mul_batch(&a, &b, &mut fast, n, t, true);
+        approx_seq_mul_batch_word(&a, &b, &mut generic, n, t, true);
+        assert_eq!(fast, generic);
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn rejects_mismatched_lengths() {
+        let mut out = [0u64; 2];
+        approx_seq_mul_batch(&[1, 2, 3], &[1, 2], &mut out, 4, 1, false);
+    }
+}

@@ -11,12 +11,21 @@
 //! * [`baselines`] — re-implemented approximate multipliers from the
 //!   related work plotted in Fig. 2 (truncation / broken-array, Mitchell's
 //!   logarithmic multiplier, Kulkarni's 2x2-block multiplier).
+//! * [`batch`] — the batched evaluation kernels: [`batch::BatchMultiplier`]
+//!   evaluates operand *slices* with a monomorphized, branch-free,
+//!   4-wide-unrolled inner loop (one virtual call per slice instead of one
+//!   per pair). This is what the exhaustive / Monte-Carlo sweeps and the
+//!   coordinator's CPU backend actually run; the scalar [`Multiplier`]
+//!   trait remains for single multiplies and the related-work baselines
+//!   (adapted via [`batch::ScalarBatch`]).
 
 pub mod baselines;
+pub mod batch;
 pub mod bitlevel;
 pub mod wide;
 pub mod wordlevel;
 
+pub use batch::{approx_seq_mul_batch, exact_mul_batch, BatchMultiplier, ScalarBatch};
 pub use bitlevel::approx_seq_mul_bitlevel;
 pub use wide::U512;
 pub use wordlevel::{approx_seq_mul, approx_seq_mul_u128, approx_seq_mul_wide, exact_mul};

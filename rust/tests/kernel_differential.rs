@@ -1,0 +1,230 @@
+//! Differential test harness for the batched evaluation engine.
+//!
+//! Four independent implementations of the segmented-carry sequential
+//! multiplier must agree bit-for-bit wherever they overlap:
+//!
+//! * the batched word-level kernel (`approx_seq_mul_batch`, the hot path),
+//! * the scalar word-level fast path (`approx_seq_mul`),
+//! * the bit-level `Ŝ/Ĉ` Boolean recurrences (`approx_seq_mul_bitlevel`,
+//!   the paper-equation oracle),
+//! * the gate-level netlist simulated cycle-accurately (`seq_mult` +
+//!   `run_batch`).
+//!
+//! Sweeps are randomized over `(n, t, fix, a, b)` for n ∈ {4, 8, 16, 32}
+//! with seeded `Xoshiro256` streams (`util::prop::Cases`), so every
+//! failure replays from its printed seed. The second half of the file
+//! pins the merge semantics of the batched engine: partial `ErrorStats`
+//! from arbitrary chunkings (1, 3, 7, 64 workers / pieces) fold bit-exactly
+//! to the sequential result.
+
+use segmul::coordinator::{CpuBackend, EvalBackend};
+use segmul::error::exhaustive::{exhaustive_stats, exhaustive_stats_batch, exhaustive_stats_workers};
+use segmul::error::metrics::ErrorStats;
+use segmul::error::stream::{BatchAccumulator, BLOCK};
+use segmul::multiplier::batch::approx_seq_mul_batch;
+use segmul::multiplier::wordlevel::{approx_seq_mul, approx_seq_mul_generic};
+use segmul::multiplier::{approx_seq_mul_bitlevel, SegmentedSeqMul, U512};
+use segmul::netlist::generators::seq_mult::{run_batch, seq_mult};
+use segmul::netlist::SeqSim;
+use segmul::util::prop::Cases;
+use segmul::util::rng::Xoshiro256;
+
+const WIDTHS: [u32; 4] = [4, 8, 16, 32];
+
+/// Batched kernel ≡ scalar fast path ≡ scalar generic loop ≡ bit-level
+/// oracle, randomized over the full configuration space.
+#[test]
+fn batched_equals_scalar_and_bitlevel_oracle() {
+    for &n in &WIDTHS {
+        Cases::new(0xD1FF ^ n as u64, 40).run(|rng, _| {
+            let t = rng.next_below(n as u64) as u32;
+            let fix = rng.next_bits(1) == 1;
+            let len = 1 + rng.next_below(96) as usize;
+            let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let mut batched = vec![0u64; len];
+            approx_seq_mul_batch(&a, &b, &mut batched, n, t, fix);
+            for i in 0..len {
+                let scalar = approx_seq_mul(a[i], b[i], n, t, fix);
+                let generic = approx_seq_mul_generic(a[i], b[i], n, t, fix);
+                let oracle = approx_seq_mul_bitlevel(a[i], b[i], n, t, fix);
+                assert_eq!(batched[i], scalar, "batch!=scalar n={n} t={t} fix={fix} a={} b={}", a[i], b[i]);
+                assert_eq!(batched[i], generic, "batch!=generic n={n} t={t} fix={fix} a={} b={}", a[i], b[i]);
+                assert_eq!(batched[i], oracle, "batch!=bitlevel n={n} t={t} fix={fix} a={} b={}", a[i], b[i]);
+            }
+        });
+    }
+}
+
+/// Batched kernel ≡ gate-level netlist simulation, over randomized
+/// operands for each width (the netlist is cycle-accurate, so one circuit
+/// per configuration and 64-lane batches keep this fast even at n = 32).
+#[test]
+fn batched_equals_netlist_simulation() {
+    for &(n, t) in &[(4u32, 2u32), (8, 3), (8, 4), (16, 8), (32, 13)] {
+        let circuit = seq_mult(n, t, t >= 1);
+        let mut sim = SeqSim::new(&circuit.nl);
+        for fix in [false, true] {
+            let run_fix = fix && t >= 1;
+            let mut rng = Xoshiro256::stream(0x9E71, (n as u64) << 8 | t as u64);
+            let a: Vec<u64> = (0..64).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..64).map(|_| rng.next_bits(n)).collect();
+            let av: Vec<U512> = a.iter().map(|&x| U512::from_u64(x)).collect();
+            let bv: Vec<U512> = b.iter().map(|&x| U512::from_u64(x)).collect();
+            let gate = run_batch(&circuit, &mut sim, &av, &bv, run_fix);
+            let mut batched = vec![0u64; a.len()];
+            approx_seq_mul_batch(&a, &b, &mut batched, n, t, run_fix);
+            for i in 0..a.len() {
+                assert_eq!(
+                    gate[i].limb(0),
+                    batched[i],
+                    "gate!=batch n={n} t={t} fix={run_fix} a={} b={}",
+                    a[i],
+                    b[i]
+                );
+            }
+        }
+    }
+}
+
+/// The batched exhaustive evaluator ≡ a naive per-pair double loop over
+/// the full space (small n, every t and fix).
+#[test]
+fn batched_exhaustive_equals_naive_double_loop() {
+    for n in [4u32, 5, 6] {
+        for t in 0..n {
+            for fix in [false, true] {
+                let mut naive = ErrorStats::new(n);
+                for a in 0..(1u64 << n) {
+                    for b in 0..(1u64 << n) {
+                        naive.record(a * b, approx_seq_mul(a, b, n, t, fix));
+                    }
+                }
+                let batched = exhaustive_stats(n, t, fix);
+                assert!(batched.approx_eq(&naive), "n={n} t={t} fix={fix}");
+            }
+        }
+    }
+}
+
+/// Chunking invariance of the batched exhaustive path: 1, 3, 7 and 64
+/// workers must fold to the same statistics (integer fields bit-exact).
+#[test]
+fn exhaustive_chunking_invariant_1_3_7_64() {
+    let (n, t, fix) = (8u32, 4u32, true);
+    let w1 = exhaustive_stats_workers(n, t, fix, 1);
+    for workers in [3usize, 7, 64] {
+        let w = exhaustive_stats_workers(n, t, fix, workers);
+        assert!(w1.approx_eq(&w), "workers={workers}");
+        // approx_eq already pins every integer field; make the intent
+        // explicit for the batched path:
+        assert_eq!(w1.count, w.count);
+        assert_eq!(w1.err_count, w.err_count);
+        assert_eq!(w1.sum_ed, w.sum_ed);
+        assert_eq!(w1.sum_abs_ed, w.sum_abs_ed);
+        assert_eq!(w1.max_abs_ed, w.max_abs_ed);
+        assert_eq!(w1.bitflips, w.bitflips);
+    }
+}
+
+/// Folding partial `ErrorStats` from arbitrary stream chunkings (1, 3, 7,
+/// 64 pieces, ragged sizes) is bit-exact versus the sequential fold —
+/// identical order per piece means even the f64 `sum_red` matches exactly.
+#[test]
+fn record_batch_partials_merge_exactly_any_chunking() {
+    let n = 8u32;
+    let mut rng = Xoshiro256::seed_from_u64(0xC47);
+    let len = 10_000usize;
+    let exact: Vec<u64> = (0..len).map(|_| rng.next_bits(16)).collect();
+    let approx: Vec<u64> = exact
+        .iter()
+        .map(|&p| if rng.next_bits(2) == 0 { p } else { rng.next_bits(16) })
+        .collect();
+
+    let mut sequential = ErrorStats::new(n);
+    sequential.record_batch(&exact, &approx);
+
+    for pieces in [1usize, 3, 7, 64] {
+        let piece_len = len.div_ceil(pieces);
+        let mut folded: Option<ErrorStats> = None;
+        for (ce, ca) in exact.chunks(piece_len).zip(approx.chunks(piece_len)) {
+            let mut part = ErrorStats::new(n);
+            part.record_batch(ce, ca);
+            folded = Some(match folded {
+                None => part,
+                Some(mut acc) => {
+                    acc.merge(&part);
+                    acc
+                }
+            });
+        }
+        let folded = folded.unwrap();
+        // Integer fields are bit-exact under any chunking; sum_red is f64
+        // and merging re-associates its additions, so it is compared up to
+        // accumulation-order noise (approx_eq).
+        assert_eq!(folded.count, sequential.count, "pieces={pieces}");
+        assert_eq!(folded.err_count, sequential.err_count, "pieces={pieces}");
+        assert_eq!(folded.sum_ed, sequential.sum_ed, "pieces={pieces}");
+        assert_eq!(folded.sum_abs_ed, sequential.sum_abs_ed, "pieces={pieces}");
+        assert_eq!(folded.max_abs_ed, sequential.max_abs_ed, "pieces={pieces}");
+        assert_eq!(folded.bitflips, sequential.bitflips, "pieces={pieces}");
+        assert!(folded.approx_eq(&sequential), "pieces={pieces}");
+    }
+}
+
+/// The BatchAccumulator over split index ranges ≡ one accumulator over
+/// the whole range, for ragged splits around the internal BLOCK size.
+#[test]
+fn accumulator_split_ranges_fold_exactly() {
+    let (n, t, fix) = (7u32, 3u32, true);
+    let m = SegmentedSeqMul::new(n, t, fix);
+    let total = 1u64 << (2 * n);
+    let mut whole = BatchAccumulator::new(&m);
+    whole.eval_index_range(0, total);
+    let whole = whole.finish();
+
+    let cuts = [0u64, 1, BLOCK as u64 - 1, BLOCK as u64 + 7, total / 2, total];
+    let mut folded = ErrorStats::new(n);
+    for w in cuts.windows(2) {
+        let mut part = BatchAccumulator::new(&m);
+        part.eval_index_range(w[0], w[1]);
+        folded.merge(&part.finish());
+    }
+    // Integer fields bit-exact; sum_red up to merge re-association noise.
+    assert_eq!(folded.count, whole.count);
+    assert_eq!(folded.err_count, whole.err_count);
+    assert_eq!(folded.sum_ed, whole.sum_ed);
+    assert_eq!(folded.sum_abs_ed, whole.sum_abs_ed);
+    assert_eq!(folded.max_abs_ed, whole.max_abs_ed);
+    assert_eq!(folded.bitflips, whole.bitflips);
+    assert!(folded.approx_eq(&whole));
+}
+
+/// The coordinator's CPU backend is a thin wrapper over the same batched
+/// kernels: identical statistics to the direct engine, floats included.
+#[test]
+fn cpu_backend_is_thin_wrapper_over_batch_kernels() {
+    let (n, t, fix) = (8u32, 3u32, true);
+    let mut be = CpuBackend::new();
+    let mut rng = Xoshiro256::seed_from_u64(0xBE);
+    let a: Vec<u64> = (0..2000).map(|_| rng.next_bits(n)).collect();
+    let b: Vec<u64> = (0..2000).map(|_| rng.next_bits(n)).collect();
+    let got = be.eval_batch(n, t, fix, &a, &b).unwrap();
+    let m = SegmentedSeqMul::new(n, t, fix);
+    let mut want = BatchAccumulator::new(&m);
+    want.eval_pairs(&a, &b);
+    assert_eq!(got, want.finish());
+}
+
+/// exhaustive_stats_batch with the paper's multiplier as a BatchMultiplier
+/// trait object agrees with the monomorphized entry point across widths
+/// that are exhaustively tractable.
+#[test]
+fn trait_object_batch_path_matches_specialized() {
+    for (n, t, fix) in [(4u32, 2u32, false), (8, 4, true)] {
+        let m = SegmentedSeqMul::new(n, t, fix);
+        let via_obj = exhaustive_stats_batch(&m, 2);
+        let direct = exhaustive_stats(n, t, fix);
+        assert!(via_obj.approx_eq(&direct), "n={n} t={t} fix={fix}");
+    }
+}

@@ -1,0 +1,179 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored because
+//! the build image has no crates.io access. Covers exactly the surface the
+//! `segmul` crate uses:
+//!
+//! * [`Error`] / [`Result`] (with the `E = Error` default parameter),
+//! * the [`anyhow!`], [`bail!`] and [`ensure!`] macros (bare-condition and
+//!   formatted forms),
+//! * the [`Context`] extension trait (`context` / `with_context`),
+//! * `From<E>` for every `std::error::Error`, so `?` converts foreign
+//!   errors.
+//!
+//! Differences from the real crate: the error keeps a flattened message
+//! string instead of a source chain (context is prepended eagerly), and
+//! backtraces are not captured. Swap back to crates.io `anyhow` by
+//! replacing the `path` dependency — no call sites change.
+
+use std::fmt;
+
+/// A flattened error message. Like `anyhow::Error`, this deliberately does
+/// NOT implement `std::error::Error`, which is what makes the blanket
+/// `From<E: std::error::Error>` impl coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from a printable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Error { msg: msg.to_string() }
+    }
+
+    /// Prepend a context layer (most recent first, `{outer}: {inner}`).
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Self {
+        Error { msg: format!("{ctx}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{:#}` on the real crate prints the full cause chain; our message
+        // is already flattened, so both forms print the same string.
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `std::result::Result` with a defaulted
+/// error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible values.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Wrap the error with a lazily-evaluated context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: `{}`", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "nope")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(inner().unwrap_err().to_string(), "nope");
+    }
+
+    #[test]
+    fn context_layers_prepend() {
+        let e: Result<()> = Err(io_err());
+        let e = e.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "reading x: nope");
+        assert_eq!(format!("{e:#}"), "reading x: nope");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(v.context("missing").is_err());
+        assert_eq!(Some(3u32).context("missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_compile_in_all_forms() {
+        fn f(flag: bool) -> Result<u32> {
+            ensure!(1 + 1 == 2);
+            ensure!(!flag, "flag was {flag}");
+            if flag {
+                bail!("unreachable");
+            }
+            Err(anyhow!("value {} bad", 7))
+        }
+        let e = f(false).unwrap_err();
+        assert_eq!(e.to_string(), "value 7 bad");
+        assert_eq!(f(true).unwrap_err().to_string(), "flag was true");
+    }
+
+    #[test]
+    fn bare_ensure_names_the_condition() {
+        fn f() -> Result<()> {
+            ensure!(1 > 2);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("1 > 2"));
+    }
+}
