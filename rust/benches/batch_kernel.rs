@@ -9,10 +9,12 @@
 //!                     through `BatchAccumulator` (the new engine).
 //!
 //! Pairs/sec lines are comparable across the three, and the summary prints
-//! the batched-over-scalar speedups so future BENCH_*.json capture them.
+//! the batched-over-scalar speedups and writes `BENCH_batch_kernel.json`
+//! for the CI bench-regression gate (`bench-gate` vs
+//! `ci/bench_baseline.json`).
 //! Target: batched ≥ 3x over scalar/dyn on the n=8 exhaustive sweep.
 
-use segmul::bench::{bench, section, speedup};
+use segmul::bench::{bench, section, speedup, throughput, Summary};
 use segmul::error::metrics::ErrorStats;
 use segmul::error::stream::BatchAccumulator;
 use segmul::multiplier::batch::approx_seq_mul_batch;
@@ -103,4 +105,13 @@ fn main() {
     println!("kernel speedup, batched vs scalar/static : {:>6.2}x", speedup(&k_batch, &k_static));
     println!("sweep  speedup, batched vs scalar/dyn    : {:>6.2}x  (target >= 3x)", speedup(&s_batch, &s_dyn));
     println!("sweep  speedup, batched vs scalar/static : {:>6.2}x", speedup(&s_batch, &s_static));
+
+    let mut summary = Summary::new("batch_kernel");
+    summary
+        .metric("kernel_speedup_batched_vs_dyn", speedup(&k_batch, &k_dyn))
+        .metric("kernel_speedup_batched_vs_static", speedup(&k_batch, &k_static))
+        .metric("sweep_speedup_batched_vs_dyn", speedup(&s_batch, &s_dyn))
+        .metric("sweep_speedup_batched_vs_static", speedup(&s_batch, &s_static))
+        .metric("batched_sweep_melem_per_s", throughput(&s_batch).unwrap_or(0.0) / 1e6);
+    summary.write().expect("write bench summary");
 }

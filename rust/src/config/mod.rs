@@ -35,6 +35,8 @@ pub struct Config {
     pub error_bitwidths: Vec<u32>,
     /// Bit-widths for the hardware figures (Fig. 3).
     pub hw_bitwidths: Vec<u32>,
+    /// Bit-widths for the full design-space sweep (`segmul sweep`).
+    pub sweep_bitwidths: Vec<u32>,
 }
 
 impl Default for Config {
@@ -49,6 +51,7 @@ impl Default for Config {
             workers: crate::util::threadpool::default_workers(),
             error_bitwidths: vec![4, 8, 12, 16, 32],
             hw_bitwidths: vec![4, 8, 16, 32, 64, 128, 256],
+            sweep_bitwidths: vec![4, 8, 16, 32],
         }
     }
 }
@@ -100,6 +103,9 @@ impl Config {
         if let Some(v) = doc.get_int_array("hw", "bitwidths") {
             c.hw_bitwidths = v.iter().map(|&x| x as u32).collect();
         }
+        if let Some(v) = doc.get_int_array("sweep", "bitwidths") {
+            c.sweep_bitwidths = v.iter().map(|&x| x as u32).collect();
+        }
         c
     }
 }
@@ -126,6 +132,8 @@ mod tests {
             error_bitwidths = [4, 8]
             [hw]
             vectors = 256
+            [sweep]
+            bitwidths = [4, 8]
             "#,
         )
         .unwrap();
@@ -134,7 +142,13 @@ mod tests {
         assert_eq!(c.mc_samples, 1024);
         assert_eq!(c.error_bitwidths, vec![4, 8]);
         assert_eq!(c.hw_vectors, 256);
+        assert_eq!(c.sweep_bitwidths, vec![4, 8]);
         // untouched keys keep defaults
         assert_eq!(c.exhaustive_max_n, 12);
+    }
+
+    #[test]
+    fn sweep_bitwidths_default_to_paper_grid() {
+        assert_eq!(Config::default().sweep_bitwidths, vec![4, 8, 16, 32]);
     }
 }

@@ -5,6 +5,13 @@
 //! error drops below the target — or, for error-free configurations, when
 //! enough samples have shown no error to bound ER below the target with
 //! the rule-of-three.
+//!
+//! Determinism contract: callers must evaluate [`Convergence::converged`]
+//! on chunk-ordered prefixes only (after each single in-order chunk
+//! merge, as the sequential driver does). The sharded runner preserves
+//! exactly that schedule via `OrderedMerger::step`, which is why an
+//! adaptive job stops at the same chunk — and returns bit-identical
+//! stats — for any worker count.
 
 use crate::error::metrics::ErrorStats;
 

@@ -1,9 +1,13 @@
 //! Job driver: decomposes a job's sample space into backend-sized batches.
 //!
-//! The Monte-Carlo decomposition (chunk ids → xoshiro streams) is the same
-//! one `error::montecarlo` uses, so for a given (seed, chunk) layout the
-//! CPU word-level path, the PJRT path, and the standalone `mc_stats` all
-//! see identical operands and produce identical integer statistics.
+//! The decomposition lives in [`ChunkPlan`]: one deterministic mapping
+//! from (job, batch size) to operand chunks, shared by this sequential
+//! driver and the sharded parallel runner ([`super::sharded`]) so both
+//! see identical operands per chunk id. The Monte-Carlo decomposition
+//! (chunk ids → xoshiro streams) is the same one `error::montecarlo`
+//! uses, so for a given (seed, chunk) layout the CPU word-level path, the
+//! PJRT path, and the standalone `mc_stats` all see identical operands
+//! and produce identical integer statistics.
 
 use std::time::Instant;
 
@@ -38,6 +42,75 @@ fn fill_exhaustive(n: u32, start: u64, end: u64, a: &mut Vec<u64>, b: &mut Vec<u
     }
 }
 
+/// The deterministic chunk decomposition of one job for a given backend
+/// batch size. Chunk `i` always denotes the same operand set — exhaustive
+/// index range `[i·chunk, (i+1)·chunk)` or MC stream `i` of the job's
+/// seed — regardless of which worker evaluates it or in which order.
+#[derive(Clone, Debug)]
+pub struct ChunkPlan {
+    n: u32,
+    spec: WorkSpec,
+    /// Pairs per chunk (= the backend batch size).
+    chunk: u64,
+    /// Total pairs in the job's input space (upper bound for adaptive).
+    total: u64,
+    n_chunks: u64,
+}
+
+impl ChunkPlan {
+    pub fn new(job: &EvalJob, batch: usize) -> Self {
+        let chunk = (batch.max(1)) as u64;
+        let total = match &job.spec {
+            WorkSpec::Exhaustive => {
+                // `EvalJob::validate` enforces this for every driver path;
+                // asserted here too so the invariant is local (n = 32
+                // would shift-overflow the u64 index space).
+                assert!(job.n <= 16, "exhaustive chunk plan requires n <= 16 (n={})", job.n);
+                1u64 << (2 * job.n)
+            }
+            WorkSpec::MonteCarlo { samples, .. } => *samples,
+            WorkSpec::Adaptive { max_samples, .. } => *max_samples,
+        };
+        ChunkPlan { n: job.n, spec: job.spec.clone(), chunk, total, n_chunks: total.div_ceil(chunk) }
+    }
+
+    pub fn n_chunks(&self) -> u64 {
+        self.n_chunks
+    }
+
+    /// Pairs in chunk `chunk_id` (the last chunk may be ragged).
+    pub fn chunk_len(&self, chunk_id: u64) -> u64 {
+        debug_assert!(chunk_id < self.n_chunks);
+        self.chunk.min(self.total - chunk_id * self.chunk)
+    }
+
+    /// Convergence policy for adaptive jobs (checked against the in-order
+    /// merged prefix after each chunk), `None` for fixed workloads.
+    pub fn convergence(&self) -> Option<Convergence> {
+        match &self.spec {
+            WorkSpec::Adaptive { target_rel_stderr, .. } => {
+                Some(Convergence::new(*target_rel_stderr))
+            }
+            _ => None,
+        }
+    }
+
+    /// Fill the operand buffers for chunk `chunk_id`.
+    pub fn fill(&self, chunk_id: u64, a: &mut Vec<u64>, b: &mut Vec<u64>) {
+        debug_assert!(chunk_id < self.n_chunks);
+        let len = self.chunk_len(chunk_id);
+        match &self.spec {
+            WorkSpec::Exhaustive => {
+                let start = chunk_id * self.chunk;
+                fill_exhaustive(self.n, start, start + len, a, b);
+            }
+            WorkSpec::MonteCarlo { seed, .. } | WorkSpec::Adaptive { seed, .. } => {
+                fill_mc_chunk(self.n, *seed, chunk_id, len as usize, a, b);
+            }
+        }
+    }
+}
+
 /// Execute `job` on `backend`, batching as needed.
 pub fn run_job(backend: &mut dyn EvalBackend, job: &EvalJob) -> Result<JobResult> {
     job.validate()?;
@@ -48,44 +121,20 @@ pub fn run_job(backend: &mut dyn EvalBackend, job: &EvalJob) -> Result<JobResult
         job.n
     );
     let started = Instant::now();
-    let batch = backend.max_batch();
+    let plan = ChunkPlan::new(job, backend.max_batch());
+    let conv = plan.convergence();
     let mut total = ErrorStats::new(job.n);
     let mut batches = 0u64;
-    let mut a = Vec::with_capacity(batch);
-    let mut b = Vec::with_capacity(batch);
+    let mut a = Vec::with_capacity(backend.max_batch());
+    let mut b = Vec::with_capacity(backend.max_batch());
 
-    match &job.spec {
-        WorkSpec::Exhaustive => {
-            let space = 1u64 << (2 * job.n);
-            let mut start = 0u64;
-            while start < space {
-                let end = (start + batch as u64).min(space);
-                fill_exhaustive(job.n, start, end, &mut a, &mut b);
-                total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
-                batches += 1;
-                start = end;
-            }
-        }
-        WorkSpec::MonteCarlo { samples, seed } => {
-            let n_chunks = samples.div_ceil(batch as u64);
-            for chunk_id in 0..n_chunks {
-                let len = (batch as u64).min(samples - chunk_id * batch as u64) as usize;
-                fill_mc_chunk(job.n, *seed, chunk_id, len, &mut a, &mut b);
-                total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
-                batches += 1;
-            }
-        }
-        WorkSpec::Adaptive { max_samples, seed, target_rel_stderr } => {
-            let conv = Convergence::new(*target_rel_stderr);
-            let n_chunks = max_samples.div_ceil(batch as u64);
-            for chunk_id in 0..n_chunks {
-                let len = (batch as u64).min(max_samples - chunk_id * batch as u64) as usize;
-                fill_mc_chunk(job.n, *seed, chunk_id, len, &mut a, &mut b);
-                total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
-                batches += 1;
-                if conv.converged(&total) {
-                    break;
-                }
+    for chunk_id in 0..plan.n_chunks() {
+        plan.fill(chunk_id, &mut a, &mut b);
+        total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
+        batches += 1;
+        if let Some(c) = &conv {
+            if c.converged(&total) {
+                break;
             }
         }
     }
@@ -158,5 +207,35 @@ mod tests {
     fn invalid_job_rejected() {
         let mut be = CpuBackend::new();
         assert!(run_job(&mut be, &EvalJob::mc(8, 9, false, 10, 1)).is_err());
+    }
+
+    #[test]
+    fn chunk_plan_covers_space_exactly() {
+        for (job, want_total) in [
+            (EvalJob::exhaustive(6, 3, true), 1u64 << 12),
+            (EvalJob::mc(8, 2, false, 100_001, 1), 100_001),
+        ] {
+            let plan = ChunkPlan::new(&job, 1000);
+            let total: u64 = (0..plan.n_chunks()).map(|i| plan.chunk_len(i)).sum();
+            assert_eq!(total, want_total);
+        }
+    }
+
+    #[test]
+    fn chunk_plan_fill_matches_sequential_space() {
+        // Concatenating the chunks re-creates the exhaustive index space.
+        let job = EvalJob::exhaustive(5, 2, false);
+        let plan = ChunkPlan::new(&job, 300);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        let mut seen = Vec::new();
+        for id in 0..plan.n_chunks() {
+            plan.fill(id, &mut a, &mut b);
+            assert_eq!(a.len() as u64, plan.chunk_len(id));
+            for (&x, &y) in a.iter().zip(&b) {
+                seen.push((y << 5) | x);
+            }
+        }
+        let want: Vec<u64> = (0..1u64 << 10).collect();
+        assert_eq!(seen, want);
     }
 }

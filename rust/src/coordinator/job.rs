@@ -28,6 +28,30 @@ pub struct EvalJob {
     pub spec: WorkSpec,
 }
 
+/// Canonical cache identity of a job. Two jobs with equal keys produce
+/// identical [`ErrorStats`] **when evaluated through the same backend
+/// factory**: the MC operand multiset additionally depends on the
+/// backend's batch size (it fixes the chunk-to-stream layout), so this
+/// key is only valid within one runner — never persist it across
+/// backends. [`super::sweep::SweepRunner`] holds one factory for its
+/// whole lifetime, which is what makes its cache sound.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct JobKey {
+    pub n: u32,
+    pub t: u32,
+    pub fix: bool,
+    pub spec: SpecKey,
+}
+
+/// Hashable image of [`WorkSpec`] (the adaptive target is keyed by its
+/// exact f64 bit pattern).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum SpecKey {
+    Exhaustive,
+    MonteCarlo { samples: u64, seed: u64 },
+    Adaptive { max_samples: u64, seed: u64, target_bits: u64 },
+}
+
 impl EvalJob {
     pub fn mc(n: u32, t: u32, fix: bool, samples: u64, seed: u64) -> Self {
         EvalJob { n, t, fix, spec: WorkSpec::MonteCarlo { samples, seed } }
@@ -35,6 +59,25 @@ impl EvalJob {
 
     pub fn exhaustive(n: u32, t: u32, fix: bool) -> Self {
         EvalJob { n, t, fix, spec: WorkSpec::Exhaustive }
+    }
+
+    /// The job's cache key. `t == 0` is the accurate multiplier whose
+    /// zero-bit LSP adder can never raise the carry that fix-to-1
+    /// compensates, so `fix` is canonicalized to `false` there and
+    /// `(n, 0, false)` / `(n, 0, true)` share one cache entry.
+    pub fn key(&self) -> JobKey {
+        let spec = match &self.spec {
+            WorkSpec::Exhaustive => SpecKey::Exhaustive,
+            WorkSpec::MonteCarlo { samples, seed } => {
+                SpecKey::MonteCarlo { samples: *samples, seed: *seed }
+            }
+            WorkSpec::Adaptive { max_samples, seed, target_rel_stderr } => SpecKey::Adaptive {
+                max_samples: *max_samples,
+                seed: *seed,
+                target_bits: target_rel_stderr.to_bits(),
+            },
+        };
+        JobKey { n: self.n, t: self.t, fix: if self.t == 0 { false } else { self.fix }, spec }
     }
 
     pub fn validate(&self) -> anyhow::Result<()> {
@@ -96,5 +139,27 @@ mod tests {
             spec: WorkSpec::Adaptive { max_samples: 0, seed: 1, target_rel_stderr: 0.1 },
         };
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn cache_key_identity() {
+        // Same job => same key; different seed/samples/config => different.
+        assert_eq!(EvalJob::mc(8, 4, true, 100, 1).key(), EvalJob::mc(8, 4, true, 100, 1).key());
+        assert_ne!(EvalJob::mc(8, 4, true, 100, 1).key(), EvalJob::mc(8, 4, true, 100, 2).key());
+        assert_ne!(EvalJob::mc(8, 4, true, 100, 1).key(), EvalJob::mc(8, 4, true, 200, 1).key());
+        assert_ne!(EvalJob::mc(8, 4, true, 100, 1).key(), EvalJob::mc(8, 3, true, 100, 1).key());
+        assert_ne!(
+            EvalJob::exhaustive(8, 4, true).key(),
+            EvalJob::mc(8, 4, true, 100, 1).key()
+        );
+    }
+
+    #[test]
+    fn cache_key_canonicalizes_fix_at_t0() {
+        // t=0 is accurate: fix-to-1 can never trigger, so both variants
+        // share one cache identity...
+        assert_eq!(EvalJob::exhaustive(8, 0, true).key(), EvalJob::exhaustive(8, 0, false).key());
+        // ...but at t>0 fix is a real configuration axis.
+        assert_ne!(EvalJob::exhaustive(8, 4, true).key(), EvalJob::exhaustive(8, 4, false).key());
     }
 }

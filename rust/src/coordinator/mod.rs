@@ -12,22 +12,32 @@
 //! * [`backend`]     — the evaluation backends: [`backend::CpuBackend`]
 //!   (word-level model) and [`backend::PjrtBackend`] (the compiled stats
 //!   modules, with pad-and-correct batching to the lowered batch size).
-//! * [`driver`]      — chunking/batching of a job onto a backend; the MC
+//! * [`driver`]      — the deterministic chunk decomposition
+//!   ([`driver::ChunkPlan`]) and the sequential driver; the MC
 //!   decomposition is identical to `error::montecarlo` so CPU and PJRT
 //!   paths produce bit-identical integer statistics per seed.
+//! * [`sharded`]     — intra-job parallelism: N workers steal chunks
+//!   from a shared cursor and an ordered merge keeps results
+//!   bit-identical to the sequential driver for any worker count.
+//! * [`sweep`]       — design-space sweep orchestration over the paper
+//!   grid, with a `(config, seed, samples)` result cache.
 //! * [`convergence`] — CI-based early stopping for adaptive jobs.
-//! * [`service`]     — the threaded service: an executor thread owns the
-//!   (non-Send) PJRT runtime; clients submit jobs over a channel and
-//!   receive tickets.
+//! * [`service`]     — the threaded service: a pool of executor threads
+//!   owns the (non-Send) PJRT runtimes; clients submit jobs over a
+//!   shared channel and receive tickets.
 
 pub mod backend;
 pub mod convergence;
 pub mod driver;
 pub mod job;
 pub mod service;
+pub mod sharded;
+pub mod sweep;
 
 pub use backend::{CpuBackend, EvalBackend, PjrtBackend};
 pub use convergence::Convergence;
-pub use driver::run_job;
-pub use job::{EvalJob, JobResult, WorkSpec};
+pub use driver::{run_job, ChunkPlan};
+pub use job::{EvalJob, JobKey, JobResult, SpecKey, WorkSpec};
 pub use service::{EvalService, ServiceTelemetry};
+pub use sharded::run_job_sharded;
+pub use sweep::{SweepGrid, SweepOutcome, SweepRunner};

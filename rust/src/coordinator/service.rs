@@ -1,11 +1,20 @@
 //! The threaded evaluation service.
 //!
-//! A dedicated executor thread owns the backend — deliberately, because
-//! the PJRT FFI types are not `Send`: the backend is constructed *inside*
-//! the executor thread from a `Send` factory closure. Clients hold a
-//! cheap cloneable [`EvalService`] handle and submit jobs over an mpsc
-//! channel, receiving a ticket (`std::sync::mpsc::Receiver`) that resolves
-//! to the [`JobResult`]. Telemetry is aggregated behind a mutex.
+//! A pool of executor threads owns the backends — deliberately, because
+//! the PJRT FFI types are not `Send`: each executor constructs its own
+//! backend *inside* its thread from a shared `Fn` factory. Clients hold a
+//! cheap [`EvalService`] handle and submit jobs over an mpsc channel,
+//! receiving a ticket (`std::sync::mpsc::Receiver`) that resolves to the
+//! [`JobResult`]. Workers pull from the shared queue as they free up
+//! (the idle worker holds the queue lock only while blocked on `recv`,
+//! never while evaluating), so an N-worker pool schedules N jobs
+//! concurrently with no partitioning decisions up front. Telemetry is
+//! aggregated behind a mutex shared by the pool.
+//!
+//! Per-job results are independent of which worker ran them (the chunk
+//! decomposition in [`super::driver::ChunkPlan`] depends only on the job
+//! and the backend batch size), so pooling changes throughput, never
+//! statistics. For intra-job parallelism see [`super::sharded`].
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -37,7 +46,7 @@ enum Request {
 pub struct EvalService {
     tx: Sender<Request>,
     telemetry: Arc<Mutex<ServiceTelemetry>>,
-    worker: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
 }
 
 /// A pending result.
@@ -60,61 +69,97 @@ impl JobTicket {
 }
 
 impl EvalService {
-    /// Start the service. `factory` runs on the executor thread and builds
-    /// the backend there (PJRT types are not `Send`).
+    /// Start a single-executor service (the pool of one). `factory` runs
+    /// on the executor thread and builds the backend there (PJRT types
+    /// are not `Send`).
     pub fn start<F>(factory: F) -> Result<EvalService>
     where
-        F: FnOnce() -> Result<Box<dyn EvalBackend>> + Send + 'static,
+        F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
     {
+        Self::start_pool(factory, 1)
+    }
+
+    /// Start an N-worker pool. `factory` is invoked once per worker, in
+    /// that worker's thread; startup fails if any backend fails to build.
+    pub fn start_pool<F>(factory: F, workers: usize) -> Result<EvalService>
+    where
+        F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
         let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+        let factory = Arc::new(factory);
         let telemetry = Arc::new(Mutex::new(ServiceTelemetry::default()));
-        let tele = telemetry.clone();
         let (ready_tx, ready_rx) = channel::<Result<()>>();
-        let worker = std::thread::Builder::new()
-            .name("segmul-eval".into())
-            .spawn(move || {
-                let mut backend = match factory() {
-                    Ok(b) => {
-                        let _ = ready_tx.send(Ok(()));
-                        b
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Shutdown => break,
-                        Request::Job(job, reply) => {
-                            let started = std::time::Instant::now();
-                            let result = run_job(backend.as_mut(), &job);
-                            let mut t = tele.lock().unwrap();
-                            t.busy += started.elapsed();
-                            match &result {
-                                Ok(r) => {
-                                    t.jobs_completed += 1;
-                                    t.pairs_evaluated += r.stats.count;
-                                    t.batches_executed += r.batches;
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let rx = rx.clone();
+            let tele = telemetry.clone();
+            let factory = factory.clone();
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("segmul-eval-{i}"))
+                .spawn(move || {
+                    let mut backend = match factory() {
+                        Ok(b) => {
+                            let _ = ready_tx.send(Ok(()));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    loop {
+                        // Hold the queue lock only while waiting, never
+                        // while evaluating.
+                        let req = match rx.lock() {
+                            Ok(guard) => guard.recv(),
+                            Err(_) => break,
+                        };
+                        match req {
+                            Err(_) | Ok(Request::Shutdown) => break,
+                            Ok(Request::Job(job, reply)) => {
+                                let started = std::time::Instant::now();
+                                let result = run_job(backend.as_mut(), &job);
+                                let mut t = tele.lock().unwrap();
+                                t.busy += started.elapsed();
+                                match &result {
+                                    Ok(r) => {
+                                        t.jobs_completed += 1;
+                                        t.pairs_evaluated += r.stats.count;
+                                        t.batches_executed += r.batches;
+                                    }
+                                    Err(_) => t.jobs_failed += 1,
                                 }
-                                Err(_) => t.jobs_failed += 1,
+                                drop(t);
+                                let _ = reply.send(result);
                             }
-                            drop(t);
-                            let _ = reply.send(result);
                         }
                     }
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("executor thread died during startup"))??;
-        Ok(EvalService { tx, telemetry, worker: Some(worker) })
+                })?;
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        for _ in 0..workers {
+            // On failure, dropping `tx` (and the handles) unblocks the
+            // already-started workers, which exit on the closed channel.
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("executor thread died during startup"))??;
+        }
+        Ok(EvalService { tx, telemetry, workers: handles })
+    }
+
+    /// Number of executor threads in the pool.
+    pub fn pool_size(&self) -> usize {
+        self.workers.len()
     }
 
     /// Submit a job; returns a ticket resolving to the result.
     pub fn submit(&self, job: EvalJob) -> JobTicket {
         let (reply_tx, reply_rx) = channel();
-        // If the executor is gone the ticket's recv() will error out.
+        // If the executors are gone the ticket's recv() will error out.
         let _ = self.tx.send(Request::Job(job, reply_tx));
         JobTicket { rx: reply_rx }
     }
@@ -134,8 +179,10 @@ impl EvalService {
     }
 
     fn shutdown_inner(&mut self) {
-        let _ = self.tx.send(Request::Shutdown);
-        if let Some(h) = self.worker.take() {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Request::Shutdown);
+        }
+        for h in self.workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -153,8 +200,12 @@ mod tests {
     use crate::coordinator::backend::CpuBackend;
     use crate::error::exhaustive::exhaustive_stats;
 
+    fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static {
+        || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+    }
+
     fn cpu_service() -> EvalService {
-        EvalService::start(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)).unwrap()
+        EvalService::start(cpu_factory()).unwrap()
     }
 
     #[test]
@@ -185,6 +236,36 @@ mod tests {
     }
 
     #[test]
+    fn pool_processes_all_jobs() {
+        let svc = EvalService::start_pool(cpu_factory(), 3).unwrap();
+        assert_eq!(svc.pool_size(), 3);
+        let tickets: Vec<_> = (0..12u64)
+            .map(|i| svc.submit(EvalJob::mc(8, 1 + (i % 7) as u32, i % 2 == 0, 20_000, i)))
+            .collect();
+        for ticket in tickets {
+            assert_eq!(ticket.wait().unwrap().stats.count, 20_000);
+        }
+        let t = svc.telemetry();
+        assert_eq!(t.jobs_completed, 12);
+        assert_eq!(t.pairs_evaluated, 12 * 20_000);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn pool_results_match_single_executor() {
+        // Which worker runs a job must not affect its statistics.
+        let pool = EvalService::start_pool(cpu_factory(), 4).unwrap();
+        let single = cpu_service();
+        let jobs: Vec<_> = (1..=5u32).map(|t| EvalJob::mc(8, t, true, 50_000, 42)).collect();
+        let pool_tickets: Vec<_> = jobs.iter().map(|j| pool.submit(j.clone())).collect();
+        for (job, ticket) in jobs.iter().zip(pool_tickets) {
+            let p = ticket.wait().unwrap();
+            let s = single.eval(job.clone()).unwrap();
+            assert_eq!(p.stats, s.stats, "t={}", job.t);
+        }
+    }
+
+    #[test]
     fn failed_jobs_reported() {
         let svc = cpu_service();
         let r = svc.eval(EvalJob::mc(8, 20, false, 10, 1));
@@ -196,11 +277,13 @@ mod tests {
     fn factory_failure_propagates() {
         let r = EvalService::start(|| Err(anyhow!("boom")));
         assert!(r.is_err());
+        let r = EvalService::start_pool(|| Err(anyhow!("boom")), 3);
+        assert!(r.is_err());
     }
 
     #[test]
     fn drop_shuts_down_cleanly() {
-        let svc = cpu_service();
+        let svc = EvalService::start_pool(cpu_factory(), 2).unwrap();
         let _ = svc.eval(EvalJob::mc(4, 1, false, 100, 1)).unwrap();
         drop(svc); // must not hang
     }

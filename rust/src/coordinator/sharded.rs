@@ -1,0 +1,362 @@
+//! Sharded parallel job execution with a deterministic merge.
+//!
+//! One job's chunk space (MC chunk ids / exhaustive index ranges, as laid
+//! out by [`super::driver::ChunkPlan`]) is claimed dynamically by N
+//! workers from a shared atomic cursor — idle workers steal the next
+//! chunk the moment they finish one, so ragged chunk costs balance
+//! automatically. Each worker owns its own backend (PJRT handles are not
+//! `Send`; the factory runs in-thread) and streams per-chunk
+//! [`ErrorStats`] back over a channel. The receiving side folds them
+//! through [`OrderedMerger`] strictly in chunk-id order, which makes the
+//! result **bit-identical** — order-sensitive f64 fields included — to a
+//! single-worker run, for any worker count and any completion schedule.
+//!
+//! Adaptive jobs keep the sequential stopping rule: convergence is
+//! evaluated on the in-order prefix after every single chunk merge, so
+//! the stopping chunk (and therefore the result) is the same whether one
+//! worker or sixteen evaluated the stream. Chunks evaluated beyond the
+//! stopping point are discarded, never merged.
+//!
+//! Backends are constructed per job, not kept in a persistent pool: the
+//! non-`Send` PJRT handles cannot migrate out of the scoped worker
+//! threads that a job's lifetime bounds. That build cost is trivial for
+//! the CPU backend and amortized over a job's chunk work; a persistent
+//! shard pool for artifact-heavy backends is future work (see ROADMAP).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::error::metrics::ErrorStats;
+use crate::error::stream::OrderedMerger;
+
+use super::backend::EvalBackend;
+use super::driver::{run_job, ChunkPlan};
+use super::job::{EvalJob, JobResult};
+
+/// Execute `job` across `workers` threads, each running a backend built
+/// by `factory` in-thread. With `workers == 1` this is exactly
+/// [`run_job`]; with more, the chunk-ordered merge keeps the result
+/// bit-identical to that sequential run. `JobResult::batches` counts the
+/// chunks folded into the result (matching the sequential driver's
+/// accounting; an adaptive job may additionally have evaluated and
+/// discarded chunks beyond its stopping point).
+pub fn run_job_sharded<F>(factory: &F, job: &EvalJob, workers: usize) -> Result<JobResult>
+where
+    F: Fn() -> Result<Box<dyn EvalBackend>> + Sync,
+{
+    job.validate()?;
+    if workers <= 1 {
+        let mut backend = factory()?;
+        return run_job(backend.as_mut(), job);
+    }
+    let started = Instant::now();
+    // Probe a backend on the calling thread for the batch size and the
+    // support check; workers re-build their own from the same factory.
+    let (batch, backend_name) = {
+        let probe = factory()?;
+        anyhow::ensure!(
+            probe.supports(job.n),
+            "backend {} does not support n={}",
+            probe.name(),
+            job.n
+        );
+        (probe.max_batch(), probe.name())
+    };
+    let plan = ChunkPlan::new(job, batch);
+    let n_chunks = plan.n_chunks();
+    let workers = workers.min(n_chunks as usize).max(1);
+    let conv = plan.convergence();
+
+    // Shared scheduling state: workers steal the next unclaimed chunk id.
+    let next = AtomicU64::new(0);
+    let stop = AtomicBool::new(false);
+    let (tx, rx) = channel::<(u64, Result<ErrorStats>)>();
+
+    let merged: Result<OrderedMerger> = std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let (plan, next, stop) = (&plan, &next, &stop);
+            scope.spawn(move || {
+                let mut backend = match factory() {
+                    Ok(b) => b,
+                    Err(e) => {
+                        let _ = tx.send((u64::MAX, Err(e)));
+                        return;
+                    }
+                };
+                let mut a = Vec::with_capacity(batch);
+                let mut b = Vec::with_capacity(batch);
+                while !stop.load(Ordering::Relaxed) {
+                    let id = next.fetch_add(1, Ordering::Relaxed);
+                    if id >= n_chunks {
+                        break;
+                    }
+                    plan.fill(id, &mut a, &mut b);
+                    let r = backend.eval_batch(job.n, job.t, job.fix, &a, &b);
+                    if tx.send((id, r)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(tx); // workers hold the remaining senders
+
+        // Error parity with the sequential driver: a chunk's eval error
+        // only fails the job when the in-order prefix actually *needs*
+        // that chunk — an adaptive job that converges on earlier chunks
+        // returns Ok exactly as a one-worker run would, and with several
+        // errored chunks the one sequential execution would hit first
+        // (lowest id) is the one reported.
+        enum Decision {
+            Pending,
+            Converged,
+            Failed(anyhow::Error),
+        }
+        let mut merger = OrderedMerger::new(job.n);
+        let mut chunk_errs: std::collections::BTreeMap<u64, anyhow::Error> =
+            std::collections::BTreeMap::new();
+        let mut decision = Decision::Pending;
+        while let Ok((id, r)) = rx.recv() {
+            if !matches!(decision, Decision::Pending) {
+                continue; // draining: result already decided
+            }
+            match r {
+                Err(e) => {
+                    chunk_errs.entry(id).or_insert(e);
+                }
+                Ok(s) => merger.offer(id, s),
+            }
+            // Advance the prefix one chunk at a time so adaptive
+            // convergence sees every prefix a sequential run would see,
+            // failing the moment the prefix reaches an errored chunk.
+            loop {
+                if let Some(e) = chunk_errs.remove(&merger.merged()) {
+                    decision = Decision::Failed(e);
+                    stop.store(true, Ordering::Relaxed);
+                    break;
+                }
+                if !merger.step() {
+                    break;
+                }
+                if let Some(c) = &conv {
+                    if c.converged(merger.prefix()) {
+                        decision = Decision::Converged;
+                        stop.store(true, Ordering::Relaxed);
+                        break;
+                    }
+                }
+            }
+        }
+        match decision {
+            Decision::Failed(e) => Err(e),
+            Decision::Converged => Ok(merger),
+            Decision::Pending => {
+                // Stream ended naturally. An incomplete prefix means an
+                // errored chunk (or a failed factory, id = u64::MAX with
+                // no worker left to cover the space) blocked it.
+                if merger.merged() < n_chunks {
+                    if let Some((_, e)) = chunk_errs.into_iter().next() {
+                        return Err(e);
+                    }
+                }
+                Ok(merger)
+            }
+        }
+    });
+    let merger = merged?;
+
+    let batches = merger.merged();
+    let stats = if conv.is_some() {
+        merger.into_prefix()
+    } else {
+        anyhow::ensure!(
+            merger.merged() == n_chunks,
+            "sharded run folded {} of {} chunks",
+            merger.merged(),
+            n_chunks
+        );
+        merger.finish()
+    };
+    if stats.count == 0 {
+        return Err(anyhow!("sharded run produced no samples"));
+    }
+    Ok(JobResult { job: job.clone(), stats, backend: backend_name, wall: started.elapsed(), batches })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::CpuBackend;
+    use crate::coordinator::job::WorkSpec;
+
+    fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Sync {
+        || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+    }
+
+    /// Sequential reference for a job (workers = 1).
+    fn sequential(job: &EvalJob) -> JobResult {
+        let mut be = CpuBackend::new();
+        run_job(&mut be, job).unwrap()
+    }
+
+    #[test]
+    fn exhaustive_bit_identical_across_worker_counts() {
+        // n=10 => 2^20 pairs => 16 chunks of 2^16: enough to interleave.
+        let job = EvalJob::exhaustive(10, 4, true);
+        let want = sequential(&job);
+        for workers in [2usize, 3, 7] {
+            let got = run_job_sharded(&cpu_factory(), &job, workers).unwrap();
+            // Full equality: integer fields AND the f64 sum_red.
+            assert_eq!(got.stats, want.stats, "workers={workers}");
+            assert_eq!(got.batches, want.batches);
+            assert_eq!(got.backend, "cpu");
+        }
+    }
+
+    #[test]
+    fn mc_bit_identical_across_worker_counts() {
+        let job = EvalJob::mc(12, 5, false, 700_000, 99);
+        let want = sequential(&job);
+        for workers in [2usize, 5] {
+            let got = run_job_sharded(&cpu_factory(), &job, workers).unwrap();
+            assert_eq!(got.stats, want.stats, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn adaptive_same_stopping_point() {
+        let job = EvalJob {
+            n: 8,
+            t: 4,
+            fix: true,
+            spec: WorkSpec::Adaptive { max_samples: 1 << 24, seed: 7, target_rel_stderr: 0.05 },
+        };
+        let want = sequential(&job);
+        let got = run_job_sharded(&cpu_factory(), &job, 4).unwrap();
+        // Same convergence decision on the same ordered prefixes => the
+        // very same chunks are folded, bit-identically.
+        assert_eq!(got.stats, want.stats);
+        assert_eq!(got.batches, want.batches);
+        assert!(got.stats.count < 1 << 24);
+    }
+
+    #[test]
+    fn single_worker_delegates_to_sequential() {
+        let job = EvalJob::mc(8, 3, true, 100_000, 5);
+        let want = sequential(&job);
+        let got = run_job_sharded(&cpu_factory(), &job, 1).unwrap();
+        assert_eq!(got.stats, want.stats);
+    }
+
+    #[test]
+    fn invalid_job_rejected() {
+        assert!(run_job_sharded(&cpu_factory(), &EvalJob::mc(8, 9, false, 10, 1), 4).is_err());
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let bad = || -> Result<Box<dyn EvalBackend>> { Err(anyhow!("no backend")) };
+        assert!(run_job_sharded(&bad, &EvalJob::mc(8, 3, false, 10, 1), 3).is_err());
+    }
+
+    #[test]
+    fn worker_eval_error_propagates() {
+        struct Picky;
+        impl EvalBackend for Picky {
+            fn name(&self) -> &'static str {
+                "picky"
+            }
+            fn max_batch(&self) -> usize {
+                64
+            }
+            fn supports(&self, _n: u32) -> bool {
+                true
+            }
+            fn eval_batch(
+                &mut self,
+                _n: u32,
+                _t: u32,
+                _fix: bool,
+                _a: &[u64],
+                _b: &[u64],
+            ) -> Result<ErrorStats> {
+                Err(anyhow!("backend exploded"))
+            }
+        }
+        let factory = || -> Result<Box<dyn EvalBackend>> { Ok(Box::new(Picky)) };
+        let err = run_job_sharded(&factory, &EvalJob::mc(8, 3, false, 10_000, 1), 3)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("exploded"), "{err}");
+    }
+
+    #[test]
+    fn adaptive_ignores_errors_beyond_its_stopping_chunk() {
+        // Backend that only evaluates the job's chunk 0 (recognized by
+        // its first operand — MC chunk id determines the rng stream) and
+        // errors on every other chunk. Sequential: chunk 0 converges, so
+        // chunk 1 is never evaluated => Ok. Sharded workers eagerly
+        // evaluate (and fail) later chunks; those errors must be
+        // discarded because the converged prefix never needs them.
+        use crate::util::rng::Xoshiro256;
+        let (n, seed) = (8u32, 11u64);
+        let first0 = Xoshiro256::stream(seed, 0).next_bits(n);
+        struct Flaky {
+            inner: CpuBackend,
+            first0: u64,
+        }
+        impl EvalBackend for Flaky {
+            fn name(&self) -> &'static str {
+                "flaky"
+            }
+            fn max_batch(&self) -> usize {
+                self.inner.max_batch()
+            }
+            fn supports(&self, n: u32) -> bool {
+                self.inner.supports(n)
+            }
+            fn eval_batch(
+                &mut self,
+                n: u32,
+                t: u32,
+                fix: bool,
+                a: &[u64],
+                b: &[u64],
+            ) -> Result<ErrorStats> {
+                if a.first() != Some(&self.first0) {
+                    return Err(anyhow!("tail chunk refused"));
+                }
+                self.inner.eval_batch(n, t, fix, a, b)
+            }
+        }
+        let factory = move || -> Result<Box<dyn EvalBackend>> {
+            Ok(Box::new(Flaky { inner: CpuBackend::new(), first0 }))
+        };
+        let job = EvalJob {
+            n,
+            t: 4,
+            fix: true,
+            spec: WorkSpec::Adaptive {
+                max_samples: 5 * (1 << 16),
+                seed,
+                target_rel_stderr: 0.05,
+            },
+        };
+        let want = {
+            let mut be = Flaky { inner: CpuBackend::new(), first0 };
+            run_job(&mut be, &job).unwrap()
+        };
+        assert_eq!(want.batches, 1, "test premise: sequential converges on chunk 0");
+        let got = run_job_sharded(&factory, &job, 3).unwrap();
+        assert_eq!(got.stats, want.stats);
+        assert_eq!(got.batches, 1);
+        // A fixed-budget job over the same flaky backend must still fail:
+        // its prefix needs the refused chunks.
+        let fixed = EvalJob::mc(n, 4, true, 5 * (1 << 16), seed);
+        let err = run_job_sharded(&factory, &fixed, 3).unwrap_err().to_string();
+        assert!(err.contains("refused"), "{err}");
+    }
+}

@@ -1,0 +1,265 @@
+//! Design-space sweep orchestration: the full paper grid, cached.
+//!
+//! A sweep enumerates every `(n, t, fix)` point of the configured design
+//! space — bit-widths × carry-chain split points × accumulation modes —
+//! and evaluates each through the sharded parallel runner
+//! ([`super::sharded::run_job_sharded`]), so per-config results are
+//! bit-identical for any worker count. A result cache keyed by
+//! [`JobKey`] (config + workload + seed/sample budget) dedups repeated
+//! configs across the sweep: the `t = 0` accurate points collapse across
+//! fix modes, and re-running a grid against a warm runner costs nothing.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::config::Config;
+
+use super::backend::EvalBackend;
+use super::job::{EvalJob, JobKey, JobResult, WorkSpec};
+use super::sharded::run_job_sharded;
+
+/// The sweep grid: which design points to evaluate and under which
+/// workload. Split points always cover `t ∈ 0..n` (0 = accurate) and
+/// both fix-to-1 modes, matching the paper's axes.
+#[derive(Clone, Debug)]
+pub struct SweepGrid {
+    /// Operand bit-widths (paper grid: 4, 8, 16, 32).
+    pub bitwidths: Vec<u32>,
+    /// Evaluate exhaustively for `n <=` this (capped at 16), MC above.
+    pub exhaustive_max_n: u32,
+    /// Force Monte-Carlo even below the exhaustive threshold.
+    pub force_mc: bool,
+    /// MC sample budget per config.
+    pub mc_samples: u64,
+    /// Base RNG seed shared by every MC config (determinism contract).
+    pub seed: u64,
+}
+
+impl SweepGrid {
+    /// The full paper grid from the shared [`Config`].
+    pub fn from_config(cfg: &Config) -> Self {
+        SweepGrid {
+            bitwidths: cfg.sweep_bitwidths.clone(),
+            exhaustive_max_n: cfg.exhaustive_max_n,
+            force_mc: false,
+            mc_samples: cfg.mc_samples,
+            seed: cfg.seed,
+        }
+    }
+
+    /// A single-bit-width slice of the grid.
+    pub fn single(n: u32, cfg: &Config) -> Self {
+        SweepGrid { bitwidths: vec![n], ..Self::from_config(cfg) }
+    }
+
+    /// Workload for one bit-width.
+    fn spec(&self, n: u32) -> WorkSpec {
+        if !self.force_mc && n <= self.exhaustive_max_n.min(16) {
+            WorkSpec::Exhaustive
+        } else {
+            WorkSpec::MonteCarlo { samples: self.mc_samples, seed: self.seed }
+        }
+    }
+
+    /// Materialize the jobs, in deterministic grid order: for each
+    /// bit-width, every split point, both accumulation modes.
+    pub fn jobs(&self) -> Vec<EvalJob> {
+        let mut out = Vec::new();
+        for &n in &self.bitwidths {
+            for t in 0..n {
+                for fix in [false, true] {
+                    out.push(EvalJob { n, t, fix, spec: self.spec(n) });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One evaluated (or cache-served) grid point.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    /// The job as requested by the grid (cache canonicalization may have
+    /// served it from an equivalent config's entry).
+    pub job: EvalJob,
+    pub result: JobResult,
+    pub cached: bool,
+}
+
+/// Sweep executor: sharded parallel evaluation + the result cache.
+///
+/// The cache is sound because one runner holds one backend factory for
+/// its whole lifetime: [`JobKey`] identity only implies identical stats
+/// for a fixed backend batch size (see its docs).
+pub struct SweepRunner<F> {
+    factory: F,
+    workers: usize,
+    cache: HashMap<JobKey, JobResult>,
+    /// Jobs served from the cache (no evaluation).
+    pub cache_hits: u64,
+    /// Jobs actually evaluated.
+    pub jobs_evaluated: u64,
+}
+
+impl<F> SweepRunner<F>
+where
+    F: Fn() -> Result<Box<dyn EvalBackend>> + Sync,
+{
+    pub fn new(factory: F, workers: usize) -> Self {
+        SweepRunner {
+            factory,
+            workers: workers.max(1),
+            cache: HashMap::new(),
+            cache_hits: 0,
+            jobs_evaluated: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Evaluate one job, consulting the cache first.
+    pub fn run(&mut self, job: &EvalJob) -> Result<SweepOutcome> {
+        let key = job.key();
+        if let Some(hit) = self.cache.get(&key) {
+            self.cache_hits += 1;
+            return Ok(SweepOutcome { job: job.clone(), result: hit.clone(), cached: true });
+        }
+        let result = run_job_sharded(&self.factory, job, self.workers)?;
+        self.jobs_evaluated += 1;
+        self.cache.insert(key, result.clone());
+        Ok(SweepOutcome { job: job.clone(), result, cached: false })
+    }
+
+    /// Run a whole grid in order, streaming progress through `progress`
+    /// (called once per completed point with `(index, total, outcome)`).
+    pub fn run_grid(
+        &mut self,
+        grid: &SweepGrid,
+        mut progress: impl FnMut(usize, usize, &SweepOutcome),
+    ) -> Result<Vec<SweepOutcome>> {
+        let jobs = grid.jobs();
+        let total = jobs.len();
+        let mut out = Vec::with_capacity(total);
+        for (i, job) in jobs.iter().enumerate() {
+            let outcome = self.run(job)?;
+            progress(i, total, &outcome);
+            out.push(outcome);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+    use crate::coordinator::backend::CpuBackend;
+
+    fn tiny_grid() -> SweepGrid {
+        SweepGrid {
+            bitwidths: vec![4, 6],
+            exhaustive_max_n: 6,
+            force_mc: false,
+            mc_samples: 10_000,
+            seed: 3,
+        }
+    }
+
+    #[test]
+    fn grid_enumerates_all_points() {
+        let jobs = tiny_grid().jobs();
+        // (4 + 6 split points) x 2 modes.
+        assert_eq!(jobs.len(), (4 + 6) * 2);
+        assert!(jobs.iter().all(|j| matches!(j.spec, WorkSpec::Exhaustive)));
+        let mc = SweepGrid { force_mc: true, ..tiny_grid() };
+        assert!(mc.jobs().iter().all(|j| matches!(j.spec, WorkSpec::MonteCarlo { .. })));
+    }
+
+    #[test]
+    fn cache_dedups_t0_modes_and_repeats() {
+        let grid = tiny_grid();
+        let mut runner =
+            SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), 2);
+        let outcomes = runner.run_grid(&grid, |_, _, _| {}).unwrap();
+        assert_eq!(outcomes.len(), 20);
+        // Each bit-width's (t=0, fix=true) point is served from the
+        // (t=0, fix=false) entry.
+        assert_eq!(runner.cache_hits, 2);
+        assert_eq!(runner.jobs_evaluated, 18);
+        // Re-running the same grid is fully cached.
+        let again = runner.run_grid(&grid, |_, _, _| {}).unwrap();
+        assert_eq!(runner.jobs_evaluated, 18);
+        assert_eq!(runner.cache_hits, 2 + 20);
+        assert!(again.iter().all(|o| o.cached));
+        // Cached results are the same statistics objects.
+        for (a, b) in outcomes.iter().zip(&again) {
+            assert_eq!(a.result.stats, b.result.stats);
+        }
+    }
+
+    #[test]
+    fn cache_hits_do_not_touch_the_backend() {
+        use std::sync::Arc;
+        let evals = Arc::new(AtomicUsize::new(0));
+        struct Counting {
+            inner: CpuBackend,
+            evals: Arc<AtomicUsize>,
+        }
+        impl EvalBackend for Counting {
+            fn name(&self) -> &'static str {
+                "counting"
+            }
+            fn max_batch(&self) -> usize {
+                self.inner.max_batch()
+            }
+            fn supports(&self, n: u32) -> bool {
+                self.inner.supports(n)
+            }
+            fn eval_batch(
+                &mut self,
+                n: u32,
+                t: u32,
+                fix: bool,
+                a: &[u64],
+                b: &[u64],
+            ) -> Result<crate::error::metrics::ErrorStats> {
+                self.evals.fetch_add(1, Ordering::Relaxed);
+                self.inner.eval_batch(n, t, fix, a, b)
+            }
+        }
+        let counter = evals.clone();
+        let factory = move || {
+            Ok(Box::new(Counting { inner: CpuBackend::new(), evals: counter.clone() })
+                as Box<dyn EvalBackend>)
+        };
+        let mut runner = SweepRunner::new(factory, 1);
+        let job = EvalJob::mc(8, 4, true, 50_000, 1);
+        let first = runner.run(&job).unwrap();
+        let after_first = evals.load(Ordering::Relaxed);
+        assert!(!first.cached && after_first > 0);
+        let second = runner.run(&job).unwrap();
+        assert!(second.cached);
+        assert_eq!(evals.load(Ordering::Relaxed), after_first, "cache hit re-evaluated");
+        assert_eq!(first.result.stats, second.result.stats);
+    }
+
+    #[test]
+    fn grid_results_deterministic_across_worker_counts() {
+        // > 2 chunks of 2^16 per config so the stealing cursor interleaves.
+        let grid = SweepGrid { force_mc: true, mc_samples: 150_000, ..tiny_grid() };
+        let run = |workers| {
+            let mut r =
+                SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), workers);
+            r.run_grid(&grid, |_, _, _| {}).unwrap()
+        };
+        let w1 = run(1);
+        let w3 = run(3);
+        for (a, b) in w1.iter().zip(&w3) {
+            assert_eq!(a.result.stats, b.result.stats, "n={} t={}", a.job.n, a.job.t);
+        }
+    }
+}

@@ -76,6 +76,14 @@ mod tests {
     }
 
     #[test]
+    fn t0_fix_is_irrelevant() {
+        // The zero-bit LSP adder never raises a carry, so fix-to-1 cannot
+        // trigger at t=0 — the premise behind `EvalJob::key`'s fix
+        // canonicalization for the sweep result cache.
+        assert_eq!(exhaustive_stats(6, 0, false), exhaustive_stats(6, 0, true));
+    }
+
+    #[test]
     fn chunking_invariant_worker_count() {
         // The fold must be exact regardless of how the space is chunked.
         let w1 = exhaustive_stats_workers(6, 3, true, 1);

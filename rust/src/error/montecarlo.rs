@@ -2,11 +2,14 @@
 //!
 //! For n > 16 the paper switches to MC simulation with 2^32 uniform input
 //! patterns; here the sample count is configurable (EXPERIMENTS.md records
-//! the counts used). Sampling is chunked across workers with independent
-//! xoshiro streams, so results are deterministic per seed *and* independent
-//! of the worker count is NOT guaranteed (each worker owns a stream); for
-//! reproducibility the chunk layout is derived from the sample count and
-//! `chunk` size only, never from the worker count.
+//! the counts used). Sampling is chunked with independent xoshiro streams
+//! whose layout is derived from the sample count and `chunk` size only —
+//! never from the worker count — so every integer statistic is bit-exact
+//! per seed for any `workers`. Only the f64 `sum_red` can wobble in its
+//! last bits here, because `parallel_fold` groups chunk merges by worker;
+//! the coordinator's sharded runner (`coordinator::sharded`) instead
+//! folds chunks in id order and is bit-identical across worker counts,
+//! `sum_red` included.
 //!
 //! Within each chunk, operands are sampled into blocks and evaluated
 //! through the batched engine ([`super::stream::BatchAccumulator`]), so

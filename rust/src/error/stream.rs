@@ -10,6 +10,8 @@
 //! the same engine runs sequentially, across `util::threadpool` workers,
 //! and inside the coordinator's backend batches.
 
+use std::collections::BTreeMap;
+
 use crate::error::metrics::ErrorStats;
 use crate::multiplier::batch::{exact_mul_batch, BatchMultiplier};
 
@@ -106,6 +108,93 @@ impl<'m> BatchAccumulator<'m> {
     }
 }
 
+/// Order-restoring reducer for chunked parallel evaluation.
+///
+/// `ErrorStats::merge` is exact on the integer fields under any merge
+/// order, but `sum_red` is an f64 whose accumulation order matters at the
+/// last bit. A sequential chunk loop merges partials in chunk-id order;
+/// parallel workers complete chunks in a nondeterministic order. This
+/// reducer buffers out-of-order partials and applies every merge in
+/// chunk-id order, so the folded result is **bit-identical** — `sum_red`
+/// included — to the sequential loop, for any worker count and any
+/// completion schedule. Buffering grows with the schedule's
+/// out-of-orderness: typically ~workers partials when chunks complete at
+/// similar rates, but a stalled low-id chunk lets it reach O(pending
+/// chunks) in the worst case — callers sizing giant chunk spaces should
+/// account for that.
+#[derive(Debug)]
+pub struct OrderedMerger {
+    total: ErrorStats,
+    /// Next chunk id the in-order prefix is waiting for.
+    next: u64,
+    /// Out-of-order partials, keyed by chunk id.
+    pending: BTreeMap<u64, ErrorStats>,
+}
+
+impl OrderedMerger {
+    pub fn new(n: u32) -> Self {
+        Self { total: ErrorStats::new(n), next: 0, pending: BTreeMap::new() }
+    }
+
+    /// Offer the partial for `chunk_id`. Merges it (and any unblocked
+    /// pending successors) as soon as the in-order prefix reaches it.
+    /// Each chunk id must be offered exactly once.
+    pub fn push(&mut self, chunk_id: u64, stats: ErrorStats) {
+        self.offer(chunk_id, stats);
+        while self.step() {}
+    }
+
+    /// Buffer the partial for `chunk_id` without merging. Callers that
+    /// must observe the prefix after every single merge (e.g. adaptive
+    /// convergence checks, which may stop mid-drain) pair this with
+    /// [`Self::step`]; everyone else uses [`Self::push`].
+    pub fn offer(&mut self, chunk_id: u64, stats: ErrorStats) {
+        assert!(
+            chunk_id >= self.next && !self.pending.contains_key(&chunk_id),
+            "chunk {chunk_id} offered twice"
+        );
+        self.pending.insert(chunk_id, stats);
+    }
+
+    /// Merge at most one pending chunk into the in-order prefix. Returns
+    /// `true` if a chunk was merged (inspect [`Self::prefix`] after).
+    pub fn step(&mut self) -> bool {
+        match self.pending.remove(&self.next) {
+            Some(s) => {
+                self.total.merge(&s);
+                self.next += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of chunks merged into the in-order prefix so far.
+    pub fn merged(&self) -> u64 {
+        self.next
+    }
+
+    /// The stats of the contiguous in-order prefix merged so far (what a
+    /// sequential loop would hold after `merged()` chunks).
+    pub fn prefix(&self) -> &ErrorStats {
+        &self.total
+    }
+
+    /// Finish, returning the folded stats. Panics if gaps remain — every
+    /// chunk id in `0..merged()` must have been pushed.
+    pub fn finish(self) -> ErrorStats {
+        assert!(self.pending.is_empty(), "ordered merge finished with gaps");
+        self.total
+    }
+
+    /// Consume, returning the in-order prefix and discarding any pending
+    /// out-of-order partials (an adaptive job that converged mid-stream
+    /// legitimately abandons chunks beyond its stopping point).
+    pub fn into_prefix(self) -> ErrorStats {
+        self.total
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -162,5 +251,74 @@ mod tests {
         let mut merged = left.finish();
         merged.merge(&right.finish());
         assert!(merged.approx_eq(whole.stats()));
+    }
+
+    /// Per-chunk stats over distinct slices of a random workload.
+    fn chunk_stats(n_chunks: usize) -> Vec<ErrorStats> {
+        let m = SegmentedSeqMul::new(8, 4, true);
+        let mut rng = Xoshiro256::seed_from_u64(0xC0);
+        (0..n_chunks)
+            .map(|_| {
+                let a: Vec<u64> = (0..300).map(|_| rng.next_bits(8)).collect();
+                let b: Vec<u64> = (0..300).map(|_| rng.next_bits(8)).collect();
+                let mut acc = BatchAccumulator::new(&m);
+                acc.eval_pairs(&a, &b);
+                acc.finish()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ordered_merger_bit_identical_under_any_arrival_order() {
+        let parts = chunk_stats(7);
+        // Sequential reference: merge in chunk order.
+        let mut want = ErrorStats::new(8);
+        for p in &parts {
+            want.merge(p);
+        }
+        for arrival in [
+            vec![0u64, 1, 2, 3, 4, 5, 6],
+            vec![6, 5, 4, 3, 2, 1, 0],
+            vec![3, 0, 6, 1, 5, 2, 4],
+        ] {
+            let mut om = OrderedMerger::new(8);
+            for &id in &arrival {
+                om.push(id, parts[id as usize].clone());
+            }
+            assert_eq!(om.merged(), 7);
+            // Full bitwise equality: the f64 sum_red must match exactly.
+            assert_eq!(om.finish(), want);
+        }
+    }
+
+    #[test]
+    fn ordered_merger_prefix_tracks_in_order_merges() {
+        let parts = chunk_stats(3);
+        let mut om = OrderedMerger::new(8);
+        om.push(2, parts[2].clone());
+        assert_eq!(om.merged(), 0); // chunk 0 still missing
+        assert_eq!(om.prefix().count, 0);
+        om.push(0, parts[0].clone());
+        assert_eq!(om.merged(), 1); // 0 merged; 2 still blocked on 1
+        om.push(1, parts[1].clone());
+        assert_eq!(om.merged(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "gaps")]
+    fn ordered_merger_rejects_gaps() {
+        let parts = chunk_stats(2);
+        let mut om = OrderedMerger::new(8);
+        om.push(1, parts[1].clone());
+        let _ = om.finish();
+    }
+
+    #[test]
+    #[should_panic(expected = "twice")]
+    fn ordered_merger_rejects_duplicates() {
+        let parts = chunk_stats(1);
+        let mut om = OrderedMerger::new(8);
+        om.push(0, parts[0].clone());
+        om.push(0, parts[0].clone());
     }
 }

@@ -17,10 +17,12 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use segmul::config::Config;
-use segmul::coordinator::{run_job, CpuBackend, EvalBackend, EvalJob, PjrtBackend, WorkSpec};
+use segmul::coordinator::{
+    run_job, CpuBackend, EvalBackend, EvalJob, PjrtBackend, SweepGrid, SweepRunner, WorkSpec,
+};
 use segmul::error::probprop;
 use segmul::netlist::generators::seq_mult::seq_mult;
-use segmul::report::{self, csv::Table};
+use segmul::report;
 use segmul::tech::{measure_activity, AsicModel, FpgaModel};
 use segmul::util::cli::Args;
 
@@ -55,19 +57,7 @@ fn load_config(args: &Args) -> Result<Config> {
 }
 
 fn make_backend(args: &Args, cfg: &Config) -> Result<Box<dyn EvalBackend>> {
-    match args.opt("backend") {
-        Some("cpu") => Ok(Box::new(CpuBackend::new())),
-        Some("pjrt") => Ok(Box::new(PjrtBackend::load(&cfg.artifacts_dir)?)),
-        Some(other) => bail!("unknown backend {other:?} (cpu|pjrt)"),
-        None => {
-            if cfg.artifacts_dir.join("manifest.json").exists() {
-                Ok(Box::new(PjrtBackend::load(&cfg.artifacts_dir)?))
-            } else {
-                eprintln!("note: no artifacts found, using cpu backend");
-                Ok(Box::new(CpuBackend::new()))
-            }
-        }
-    }
+    backend_factory(args, cfg)?()
 }
 
 fn job_from_args(args: &Args, cfg: &Config, n: u32, t: u32) -> Result<EvalJob> {
@@ -117,28 +107,108 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The single worker-count policy: `--workers` (clamped to ≥ 1), else
+/// the config (which itself honors `SEGMUL_WORKERS`).
+fn workers_from(args: &Args, cfg: &Config) -> Result<usize> {
+    Ok(match args.opt_u64("workers")? {
+        Some(w) => (w as usize).max(1),
+        None => cfg.workers,
+    })
+}
+
+/// The single backend-selection policy (`--backend cpu|pjrt`, else PJRT
+/// when artifacts exist), returned as a shareable factory: the sharded
+/// runner and the service pool build one backend per worker thread from
+/// it, and [`make_backend`] calls it once.
+fn backend_factory(
+    args: &Args,
+    cfg: &Config,
+) -> Result<impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static> {
+    let artifacts = cfg.artifacts_dir.clone();
+    let use_cpu = match args.opt("backend") {
+        Some("cpu") => true,
+        Some("pjrt") => false,
+        Some(other) => bail!("unknown backend {other:?} (cpu|pjrt)"),
+        None => {
+            if !artifacts.join("manifest.json").exists() {
+                eprintln!("note: no artifacts found, using cpu backend");
+                true
+            } else {
+                false
+            }
+        }
+    };
+    Ok(move || -> Result<Box<dyn EvalBackend>> {
+        if use_cpu {
+            Ok(Box::new(CpuBackend::new()))
+        } else {
+            Ok(Box::new(PjrtBackend::load(&artifacts)?))
+        }
+    })
+}
+
+/// Run the design-space sweep: the full paper grid by default, or a
+/// single bit-width slice with `--n`. Chunks of every config are sharded
+/// across workers (`--workers` / `SEGMUL_WORKERS` / config) with a
+/// deterministic merge, so results are bit-identical for any worker
+/// count; repeated configs are served from the result cache.
 fn cmd_sweep(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    let n = args.req_u32("n")?;
-    let mut backend = make_backend(args, &cfg)?;
-    let mut table = Table::new(&["t", "fix", "er", "med_abs", "mae", "nmed", "mred"]);
-    for t in 1..=n / 2 {
-        for fix in [false, true] {
-            let mut job = job_from_args(args, &cfg, n, t)?;
-            job.fix = fix;
-            let m = run_job(backend.as_mut(), &job)?.metrics();
-            table.row(vec![
-                t.to_string(),
-                fix.to_string(),
-                report::csv::f(m.er),
-                report::csv::f(m.med_abs),
-                m.mae.to_string(),
-                report::csv::f(m.nmed),
-                report::csv::f(m.mred),
-            ]);
-        }
+    let workers = workers_from(args, &cfg)?;
+    let mut grid = match args.opt_u32("n")? {
+        Some(n) => SweepGrid::single(n, &cfg),
+        None => SweepGrid::from_config(&cfg),
+    };
+    if args.flag("mc") {
+        grid.force_mc = true;
     }
-    println!("{}", table.to_text());
+    let factory = backend_factory(args, &cfg)?;
+    let mut runner = SweepRunner::new(factory, workers);
+    let total = grid.jobs().len();
+    println!(
+        "sweep: {} configs over n ∈ {:?} ({} workers, seed {})",
+        total, grid.bitwidths, workers, grid.seed
+    );
+    let started = std::time::Instant::now();
+    let outcomes = runner.run_grid(&grid, |i, total, o| {
+        let m = o.result.metrics();
+        println!(
+            "  [{:>3}/{total}] n={:>2} t={:>2} fix={:<5} {:>10} samples  ER={:.6}  MED={:<12.4} {}",
+            i + 1,
+            o.job.n,
+            o.job.t,
+            o.job.fix,
+            m.samples,
+            m.er,
+            m.med_abs,
+            if o.cached {
+                "(cached)".to_string()
+            } else {
+                format!("({:.1} Mpairs/s)", o.result.throughput() / 1e6)
+            }
+        );
+    })?;
+    let wall = started.elapsed();
+    println!("\n{}", report::sweep::sweep_table(&outcomes).to_text());
+    let info = report::sweep::SweepRunInfo {
+        workers,
+        cache_hits: runner.cache_hits,
+        jobs_evaluated: runner.jobs_evaluated,
+        wall,
+        // Every grid point ran on the same selection policy; the first
+        // result carries the name (no throwaway backend build needed).
+        backend: outcomes.first().map(|o| o.result.backend).unwrap_or("cpu").to_string(),
+    };
+    let (csv_path, json_path) = report::sweep::write_sweep_reports(&cfg.results_dir, &outcomes, &info)?;
+    println!(
+        "{} configs in {:.2} s ({} evaluated, {} cache hits, {} workers)",
+        total,
+        wall.as_secs_f64(),
+        runner.jobs_evaluated,
+        runner.cache_hits,
+        workers
+    );
+    println!("wrote {csv_path:?} and {json_path:?}");
     Ok(())
 }
 
@@ -222,17 +292,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.opt_u64("jobs")?.unwrap_or(16);
     let n = args.opt_u32("n")?.unwrap_or(16);
     let samples = cfg.mc_samples;
-    let artifacts = cfg.artifacts_dir.clone();
-    let use_cpu = matches!(args.opt("backend"), Some("cpu"))
-        || !artifacts.join("manifest.json").exists();
-    let svc = EvalService::start(move || {
-        if use_cpu {
-            Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
-        } else {
-            Ok(Box::new(PjrtBackend::load(&artifacts)?) as Box<dyn EvalBackend>)
-        }
-    })?;
-    println!("service up; submitting {jobs} jobs (n={n}, {samples} samples each)");
+    let workers = workers_from(args, &cfg)?;
+    let svc = EvalService::start_pool(backend_factory(args, &cfg)?, workers)?;
+    println!(
+        "service up ({} executors); submitting {jobs} jobs (n={n}, {samples} samples each)",
+        svc.pool_size()
+    );
     let started = std::time::Instant::now();
     let tickets: Vec<_> = (0..jobs)
         .map(|i| {
@@ -280,10 +345,11 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 fn usage() -> &'static str {
     "usage: segmul <eval|sweep|hw|figures|serve|estimate> [options]
   eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
-  sweep    --n N [options as eval]
+  sweep    [--n N] [--mc] [--workers W] [--samples S] [--seed S] [--results DIR]
+           (no --n: full paper grid; writes sweep.csv + BENCH_sweep.json)
   hw       --n N [--t T] [--hw-vectors V]
   figures  [fig2|mae|fig3a|fig3b|probprop|headline|seqcomb|all] [--results DIR]
-  serve    [--jobs J] [--n N] [--backend cpu|pjrt]
+  serve    [--jobs J] [--n N] [--workers W] [--backend cpu|pjrt]
   estimate --n N [--t T]"
 }
 

@@ -6,5 +6,6 @@
 
 pub mod csv;
 pub mod figures;
+pub mod sweep;
 
 pub use figures::*;

@@ -1,0 +1,216 @@
+//! Sweep reporting: metric table, CSV, and the `BENCH_sweep.json`
+//! machine-readable summary consumed by the CI bench-regression gate and
+//! by downstream plotting.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::sweep::SweepOutcome;
+use crate::coordinator::WorkSpec;
+use crate::util::json::{obj, Json};
+
+use super::csv::{f, Table};
+
+fn workload_name(spec: &WorkSpec) -> &'static str {
+    match spec {
+        WorkSpec::Exhaustive => "exhaustive",
+        WorkSpec::MonteCarlo { .. } => "mc",
+        WorkSpec::Adaptive { .. } => "adaptive",
+    }
+}
+
+/// Render the per-config metric table (also the CSV layout).
+pub fn sweep_table(outcomes: &[SweepOutcome]) -> Table {
+    let mut table = Table::new(&[
+        "n",
+        "t",
+        "fix",
+        "workload",
+        "samples",
+        "er",
+        "med_abs",
+        "mae",
+        "nmed",
+        "mred",
+        "mean_ber",
+        "mpairs_per_s",
+        "cached",
+    ]);
+    for o in outcomes {
+        let m = o.result.metrics();
+        table.row(vec![
+            o.job.n.to_string(),
+            o.job.t.to_string(),
+            o.job.fix.to_string(),
+            workload_name(&o.job.spec).to_string(),
+            m.samples.to_string(),
+            f(m.er),
+            f(m.med_abs),
+            m.mae.to_string(),
+            f(m.nmed),
+            f(m.mred),
+            f(m.mean_ber()),
+            f(o.result.throughput() / 1e6),
+            o.cached.to_string(),
+        ]);
+    }
+    table
+}
+
+/// Aggregate run facts for the JSON summary.
+pub struct SweepRunInfo {
+    pub workers: usize,
+    pub cache_hits: u64,
+    pub jobs_evaluated: u64,
+    pub wall: Duration,
+    pub backend: String,
+}
+
+/// Build the `BENCH_sweep.json` document: run totals (what the CI gate
+/// reads) plus the full per-config result array.
+pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Json {
+    // Cached configs cost no evaluation time: totals count fresh runs.
+    let pairs: u64 = outcomes.iter().filter(|o| !o.cached).map(|o| o.result.stats.count).sum();
+    let busy: f64 =
+        outcomes.iter().filter(|o| !o.cached).map(|o| o.result.wall.as_secs_f64()).sum();
+    let wall = info.wall.as_secs_f64();
+    let results: Vec<Json> = outcomes
+        .iter()
+        .map(|o| {
+            let m = o.result.metrics();
+            obj(vec![
+                ("n", Json::from(o.job.n as u64)),
+                ("t", Json::from(o.job.t as u64)),
+                ("fix", Json::from(o.job.fix)),
+                ("workload", Json::from(workload_name(&o.job.spec))),
+                ("samples", Json::from(m.samples)),
+                ("er", Json::from(m.er)),
+                ("med_abs", Json::from(m.med_abs)),
+                ("mae", Json::from(m.mae)),
+                ("nmed", Json::from(m.nmed)),
+                ("mred", Json::from(m.mred)),
+                ("mean_ber", Json::from(m.mean_ber())),
+                ("wall_s", Json::from(o.result.wall.as_secs_f64())),
+                ("cached", Json::from(o.cached)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", Json::from("sweep")),
+        ("backend", Json::from(info.backend.as_str())),
+        ("workers", Json::from(info.workers as u64)),
+        ("configs", Json::from(outcomes.len() as u64)),
+        ("jobs_evaluated", Json::from(info.jobs_evaluated)),
+        ("cache_hits", Json::from(info.cache_hits)),
+        ("pairs_evaluated", Json::from(pairs)),
+        ("wall_s", Json::from(wall)),
+        ("eval_busy_s", Json::from(busy)),
+        (
+            "metrics",
+            obj(vec![(
+                "sweep_mpairs_per_s",
+                Json::from(pairs as f64 / wall.max(1e-9) / 1e6),
+            )]),
+        ),
+        ("results", Json::Arr(results)),
+    ])
+}
+
+/// Write `sweep.csv` and `BENCH_sweep.json` into `results_dir`; returns
+/// the two paths.
+pub fn write_sweep_reports(
+    results_dir: &Path,
+    outcomes: &[SweepOutcome],
+    info: &SweepRunInfo,
+) -> Result<(PathBuf, PathBuf)> {
+    std::fs::create_dir_all(results_dir)?;
+    let csv_path = results_dir.join("sweep.csv");
+    sweep_table(outcomes).write(&csv_path)?;
+    let json_path = results_dir.join("BENCH_sweep.json");
+    std::fs::write(&json_path, sweep_json(outcomes, info).to_string_pretty())?;
+    Ok((csv_path, json_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CpuBackend, EvalBackend, EvalJob, SweepGrid, SweepRunner};
+
+    fn outcomes() -> (Vec<SweepOutcome>, SweepRunInfo) {
+        let grid = SweepGrid {
+            bitwidths: vec![4],
+            exhaustive_max_n: 6,
+            force_mc: false,
+            mc_samples: 1000,
+            seed: 1,
+        };
+        let mut runner =
+            SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), 1);
+        let outs = runner.run_grid(&grid, |_, _, _| {}).unwrap();
+        let info = SweepRunInfo {
+            workers: 1,
+            cache_hits: runner.cache_hits,
+            jobs_evaluated: runner.jobs_evaluated,
+            wall: Duration::from_millis(10),
+            backend: "cpu".into(),
+        };
+        (outs, info)
+    }
+
+    #[test]
+    fn table_has_one_row_per_config() {
+        let (outs, _) = outcomes();
+        let table = sweep_table(&outs);
+        assert_eq!(table.rows.len(), outs.len());
+        assert_eq!(table.header.len(), table.rows[0].len());
+    }
+
+    #[test]
+    fn json_roundtrips_and_carries_totals() {
+        let (outs, info) = outcomes();
+        let j = sweep_json(&outs, &info);
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("sweep"));
+        assert_eq!(parsed.get("configs").unwrap().as_u64(), Some(outs.len() as u64));
+        assert_eq!(parsed.get("cache_hits").unwrap().as_u64(), Some(info.cache_hits));
+        assert!(parsed.get("metrics").unwrap().get("sweep_mpairs_per_s").is_some());
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), outs.len());
+        assert_eq!(results[0].get("workload").unwrap().as_str(), Some("exhaustive"));
+    }
+
+    #[test]
+    fn reports_written_to_disk() {
+        let (outs, info) = outcomes();
+        let dir = std::env::temp_dir().join(format!("segmul_sweep_report_{}", std::process::id()));
+        let (csv, json) = write_sweep_reports(&dir, &outs, &info).unwrap();
+        let csv_text = std::fs::read_to_string(&csv).unwrap();
+        assert!(csv_text.starts_with("n,t,fix,workload"));
+        let parsed = Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("sweep"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cached_outcomes_excluded_from_throughput_totals() {
+        let (mut outs, info) = outcomes();
+        let pairs_fresh = outs.iter().map(|o| o.result.stats.count).sum::<u64>();
+        // Duplicate every outcome as a cache hit: totals must not change.
+        let dupes: Vec<SweepOutcome> = outs
+            .iter()
+            .map(|o| SweepOutcome { cached: true, ..o.clone() })
+            .collect();
+        outs.extend(dupes);
+        let j = sweep_json(&outs, &info);
+        assert_eq!(j.get("pairs_evaluated").unwrap().as_u64(), Some(pairs_fresh));
+        assert_eq!(j.get("configs").unwrap().as_u64(), Some(outs.len() as u64));
+    }
+
+    #[test]
+    fn workload_names() {
+        assert_eq!(workload_name(&EvalJob::exhaustive(4, 1, false).spec), "exhaustive");
+        assert_eq!(workload_name(&EvalJob::mc(8, 1, false, 10, 1).spec), "mc");
+    }
+}

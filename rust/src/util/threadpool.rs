@@ -5,8 +5,22 @@
 //! partial results. On the 1-core CI box this degenerates gracefully to a
 //! sequential loop (no thread spawn when `workers == 1`).
 
-/// Number of worker threads to use by default.
+/// Parse a `SEGMUL_WORKERS`-style override. Returns `None` when the
+/// value is absent or unparsable; parsed values clamp to ≥ 1 so an
+/// explicit `0` pins a single worker instead of panicking downstream.
+pub fn workers_override(value: Option<&str>) -> Option<usize> {
+    value.and_then(|v| v.trim().parse::<usize>().ok()).map(|w| w.max(1))
+}
+
+/// Number of worker threads to use by default: the `SEGMUL_WORKERS`
+/// environment variable when set (so CI and benches can pin worker
+/// counts deterministically), else the machine's available parallelism.
 pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("SEGMUL_WORKERS") {
+        if let Some(w) = workers_override(Some(&v)) {
+            return w;
+        }
+    }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
@@ -101,5 +115,22 @@ mod tests {
     #[test]
     fn empty_range() {
         assert!(parallel_fold(0, 4, |_, _, _| 0u64, |a, b| a + b).is_none());
+    }
+
+    #[test]
+    fn workers_override_parsing() {
+        assert_eq!(workers_override(None), None);
+        assert_eq!(workers_override(Some("")), None);
+        assert_eq!(workers_override(Some("abc")), None);
+        assert_eq!(workers_override(Some("-2")), None);
+        assert_eq!(workers_override(Some("4")), Some(4));
+        assert_eq!(workers_override(Some(" 7 ")), Some(7));
+        // 0 clamps to 1 rather than producing a zero-worker pool.
+        assert_eq!(workers_override(Some("0")), Some(1));
+    }
+
+    #[test]
+    fn default_workers_is_positive() {
+        assert!(default_workers() >= 1);
     }
 }

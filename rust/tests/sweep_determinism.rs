@@ -1,0 +1,158 @@
+//! Parallel-vs-sequential determinism of the sweep orchestrator.
+//!
+//! The contract under test: for every config in a grid, MC and
+//! exhaustive sweeps produce **bit-identical** `ErrorStats` — every
+//! integer field and the order-sensitive f64 `sum_red` — for workers
+//! ∈ {1, 2, 7}, and the `(config, seed, samples)` result cache serves
+//! repeats without re-evaluating.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use segmul::coordinator::{
+    run_job, run_job_sharded, CpuBackend, EvalBackend, EvalJob, SweepGrid, SweepRunner,
+};
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 7];
+
+fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Sync {
+    || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+}
+
+fn exhaustive_grid() -> SweepGrid {
+    SweepGrid {
+        bitwidths: vec![4, 8],
+        exhaustive_max_n: 12,
+        force_mc: false,
+        mc_samples: 1 << 16,
+        seed: 0x5EED,
+    }
+}
+
+fn mc_grid() -> SweepGrid {
+    SweepGrid {
+        bitwidths: vec![8, 12],
+        exhaustive_max_n: 12,
+        force_mc: true,
+        // > one chunk (2^16) per config so sharding actually interleaves.
+        mc_samples: 300_000,
+        seed: 0x5EED,
+    }
+}
+
+/// Every config of `grid`, evaluated at each worker count, must be
+/// bit-identical to the sequential driver.
+fn assert_grid_deterministic(grid: &SweepGrid) {
+    let jobs = grid.jobs();
+    assert!(!jobs.is_empty());
+    let reference: Vec<_> = jobs
+        .iter()
+        .map(|job| {
+            let mut be = CpuBackend::new();
+            run_job(&mut be, job).unwrap().stats
+        })
+        .collect();
+    for workers in WORKER_COUNTS {
+        let mut runner = SweepRunner::new(cpu_factory(), workers);
+        let outcomes = runner.run_grid(grid, |_, _, _| {}).unwrap();
+        for (outcome, want) in outcomes.iter().zip(&reference) {
+            // Full equality: count, err_count, sums, bitflips AND the
+            // accumulation-order-sensitive sum_red.
+            assert_eq!(
+                &outcome.result.stats, want,
+                "workers={workers} n={} t={} fix={}",
+                outcome.job.n, outcome.job.t, outcome.job.fix
+            );
+        }
+    }
+}
+
+#[test]
+fn exhaustive_grid_bit_identical_across_worker_counts() {
+    assert_grid_deterministic(&exhaustive_grid());
+}
+
+#[test]
+fn mc_grid_bit_identical_across_worker_counts() {
+    assert_grid_deterministic(&mc_grid());
+}
+
+#[test]
+fn sharded_job_equals_sequential_for_large_config() {
+    // One big config sliced many ways (more chunks than workers so the
+    // stealing cursor actually interleaves).
+    let job = EvalJob::mc(16, 7, true, 500_000, 42);
+    let mut be = CpuBackend::new();
+    let want = run_job(&mut be, &job).unwrap();
+    for workers in WORKER_COUNTS {
+        let got = run_job_sharded(&cpu_factory(), &job, workers).unwrap();
+        assert_eq!(got.stats, want.stats, "workers={workers}");
+        assert_eq!(got.batches, want.batches, "workers={workers}");
+    }
+}
+
+#[test]
+fn cache_serves_repeats_without_reevaluating() {
+    // Counting backend: every eval_batch call is recorded.
+    let calls = Arc::new(AtomicUsize::new(0));
+    struct Counting {
+        inner: CpuBackend,
+        calls: Arc<AtomicUsize>,
+    }
+    impl EvalBackend for Counting {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+        fn supports(&self, n: u32) -> bool {
+            self.inner.supports(n)
+        }
+        fn eval_batch(
+            &mut self,
+            n: u32,
+            t: u32,
+            fix: bool,
+            a: &[u64],
+            b: &[u64],
+        ) -> Result<segmul::error::metrics::ErrorStats> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.inner.eval_batch(n, t, fix, a, b)
+        }
+    }
+    let counter = calls.clone();
+    let factory = move || {
+        Ok(Box::new(Counting { inner: CpuBackend::new(), calls: counter.clone() })
+            as Box<dyn EvalBackend>)
+    };
+    let grid = exhaustive_grid();
+    let mut runner = SweepRunner::new(factory, 2);
+    let first = runner.run_grid(&grid, |_, _, _| {}).unwrap();
+    let evals_after_first_pass = calls.load(Ordering::Relaxed);
+    // t=0 fix=true is served from the t=0 fix=false entry per bit-width.
+    assert_eq!(runner.cache_hits, grid.bitwidths.len() as u64);
+    // Second pass over the same grid: all cache hits, zero backend work.
+    let second = runner.run_grid(&grid, |_, _, _| {}).unwrap();
+    assert!(second.iter().all(|o| o.cached));
+    assert_eq!(
+        calls.load(Ordering::Relaxed),
+        evals_after_first_pass,
+        "cache hits must not re-evaluate"
+    );
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.result.stats, b.result.stats);
+    }
+}
+
+#[test]
+fn segmul_workers_env_contract() {
+    // The env override is parsed through this pure helper (process-global
+    // env mutation is racy under the parallel test harness).
+    use segmul::util::threadpool::workers_override;
+    assert_eq!(workers_override(Some("4")), Some(4));
+    assert_eq!(workers_override(Some("0")), Some(1), "clamped to >= 1");
+    assert_eq!(workers_override(Some("junk")), None);
+}
