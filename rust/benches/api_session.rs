@@ -1,0 +1,78 @@
+//! Persistent-pool job-submission latency through the `api` facade.
+//!
+//! Small jobs make the fixed per-job cost visible: broadcast to the
+//! pool, chunk steal, ordered merge, result plumbing. The session path
+//! (long-lived workers, backend built once per worker) is compared
+//! against the per-job scoped runner (`run_job_sharded`, which re-spawns
+//! threads and re-builds backends for every job). Determinism is
+//! asserted inline; the summary writes `BENCH_api_session.json` for the
+//! CI bench-regression gate.
+
+use segmul::api::{BackendChoice, EvalJob, Session};
+use segmul::bench::{bench, section, speedup, throughput, Summary};
+use segmul::coordinator::{run_job_sharded, CpuBackend, EvalBackend};
+use segmul::util::threadpool::default_workers;
+
+use anyhow::Result;
+
+fn factory() -> Result<Box<dyn EvalBackend>> {
+    Ok(Box::new(CpuBackend::new()))
+}
+
+fn main() {
+    let workers = default_workers().expect("invalid SEGMUL_WORKERS").max(2);
+    // One backend-batch worth of samples: the job body is cheap, so the
+    // measurement is dominated by submission + merge overhead.
+    let job = EvalJob::mc(8, 3, true, 1 << 12, 42);
+
+    let mut session = Session::builder()
+        .workers(workers)
+        .backend(BackendChoice::Cpu)
+        .cache(false) // measure evaluation, not cache lookups
+        .build()
+        .expect("session startup");
+
+    // Bit-identical before timing anything.
+    let via_session = session.run(&job).unwrap();
+    let via_respawn = run_job_sharded(&factory, &job, workers).unwrap();
+    assert_eq!(
+        via_session.stats, via_respawn.stats,
+        "session diverged from the scoped sharded runner"
+    );
+
+    section(&format!("api session job submission ({workers} workers)"));
+    let s_pool = bench("session persistent pool", Some(1.0), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= session.run(&job).unwrap().stats.err_count;
+        }
+        acc
+    });
+    let s_spawn = bench("per-job worker respawn", Some(1.0), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= run_job_sharded(&factory, &job, workers).unwrap().stats.err_count;
+        }
+        acc
+    });
+
+    let jobs_per_s = throughput(&s_pool).unwrap_or(0.0);
+    println!();
+    println!("persistent-pool submission rate         : {jobs_per_s:>10.0} jobs/s");
+    println!(
+        "speedup vs per-job respawn              : {:>9.2}x",
+        speedup(&s_pool, &s_spawn)
+    );
+    println!(
+        "sanity: session built {} backends for {} workers across the whole run",
+        session.backend_builds(),
+        session.workers()
+    );
+
+    let mut summary = Summary::new("api_session");
+    summary
+        .metric("api_session_jobs_per_s", jobs_per_s)
+        .metric("api_session_speedup_vs_respawn", speedup(&s_pool, &s_spawn))
+        .metric("api_session_workers", workers as f64);
+    summary.write().expect("write bench summary");
+}

@@ -21,7 +21,7 @@ fn main() {
     // shard, small enough for a CI smoke run.
     let job = EvalJob::exhaustive(10, 4, true);
     let pairs = (1u64 << 20) as f64;
-    let workers = default_workers().max(2);
+    let workers = default_workers().expect("invalid SEGMUL_WORKERS").max(2);
 
     // Bit-identical before timing anything.
     let seq = run_job_sharded(&factory, &job, 1).unwrap();

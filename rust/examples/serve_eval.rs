@@ -45,8 +45,11 @@ fn main() -> anyhow::Result<()> {
         let m = r.metrics();
         if i < 4 || i as u64 == jobs - 1 {
             println!(
-                "  job {i:>2}: t={} fix={:<5} ER={:.5} NMED={:.3e} [{:.0} ms]",
-                r.job.t, r.job.fix, m.er, m.nmed, lat
+                "  job {i:>2}: {} ER={:.5} NMED={:.3e} [{:.0} ms]",
+                r.job.design.name(),
+                m.er,
+                m.nmed,
+                lat
             );
         } else if i == 4 {
             println!("  ...");

@@ -1,0 +1,140 @@
+//! Fluent construction of validated [`EvalJob`]s.
+
+use crate::coordinator::{EvalJob, WorkSpec};
+use crate::multiplier::MultiplierSpec;
+
+use crate::error::SegmulError;
+
+/// Builder for one evaluation job: a design plus a workload. Obtain one
+/// from [`JobBuilder::new`] or — pre-seeded with the session's RNG seed
+/// policy — from [`super::Session::job`].
+///
+/// ```no_run
+/// use segmul::api::{JobBuilder, MultiplierSpec};
+///
+/// let job = JobBuilder::new(MultiplierSpec::Segmented { n: 16, t: 7, fix: true })
+///     .monte_carlo(1 << 20)
+///     .seed(42)
+///     .build()?;
+/// # Ok::<(), segmul::api::SegmulError>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct JobBuilder {
+    design: MultiplierSpec,
+    workload: Option<Workload>,
+    seed: u64,
+}
+
+#[derive(Clone, Debug)]
+enum Workload {
+    Exhaustive,
+    MonteCarlo { samples: u64 },
+    Adaptive { max_samples: u64, target_rel_stderr: f64 },
+}
+
+impl JobBuilder {
+    pub fn new(design: MultiplierSpec) -> Self {
+        JobBuilder { design, workload: None, seed: 0 }
+    }
+
+    /// RNG seed for Monte-Carlo workloads (ignored by exhaustive ones).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Evaluate all `2^(2n)` operand pairs (requires `n <= 16`).
+    pub fn exhaustive(mut self) -> Self {
+        self.workload = Some(Workload::Exhaustive);
+        self
+    }
+
+    /// Fixed-budget Monte-Carlo with uniform operands.
+    pub fn monte_carlo(mut self, samples: u64) -> Self {
+        self.workload = Some(Workload::MonteCarlo { samples });
+        self
+    }
+
+    /// Adaptive Monte-Carlo: stop when the relative CI target on the
+    /// error rate is met, or `max_samples` is exhausted.
+    pub fn adaptive(mut self, max_samples: u64, target_rel_stderr: f64) -> Self {
+        self.workload = Some(Workload::Adaptive { max_samples, target_rel_stderr });
+        self
+    }
+
+    /// Validate and produce the job.
+    pub fn build(self) -> Result<EvalJob, SegmulError> {
+        self.design.validate()?;
+        let spec = match self.workload {
+            None => {
+                return Err(SegmulError::workload(
+                    "no workload specified — call exhaustive(), monte_carlo(samples) \
+                     or adaptive(max_samples, target)",
+                ))
+            }
+            Some(Workload::Exhaustive) => WorkSpec::Exhaustive,
+            Some(Workload::MonteCarlo { samples }) => {
+                WorkSpec::MonteCarlo { samples, seed: self.seed }
+            }
+            Some(Workload::Adaptive { max_samples, target_rel_stderr }) => WorkSpec::Adaptive {
+                max_samples,
+                seed: self.seed,
+                target_rel_stderr,
+            },
+        };
+        let job = EvalJob::new(self.design, spec);
+        job.validate()?;
+        Ok(job)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_validated_jobs() {
+        let job = JobBuilder::new(MultiplierSpec::Segmented { n: 8, t: 3, fix: true })
+            .monte_carlo(1000)
+            .seed(7)
+            .build()
+            .unwrap();
+        assert_eq!(job.n(), 8);
+        assert!(matches!(job.spec, WorkSpec::MonteCarlo { samples: 1000, seed: 7 }));
+    }
+
+    #[test]
+    fn typed_errors_on_the_builder_surface() {
+        // Missing workload.
+        let e = JobBuilder::new(MultiplierSpec::Accurate { n: 8 }).build().unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        // Invalid design.
+        let e = JobBuilder::new(MultiplierSpec::Segmented { n: 8, t: 9, fix: false })
+            .monte_carlo(10)
+            .build()
+            .unwrap_err();
+        assert_eq!(e.kind(), "spec");
+        // Invalid workload parameters.
+        let e = JobBuilder::new(MultiplierSpec::Accurate { n: 8 })
+            .monte_carlo(0)
+            .build()
+            .unwrap_err();
+        assert_eq!(e.kind(), "workload");
+        // Exhaustive out of range.
+        let e = JobBuilder::new(MultiplierSpec::Accurate { n: 20 })
+            .exhaustive()
+            .build()
+            .unwrap_err();
+        assert_eq!(e.kind(), "workload");
+    }
+
+    #[test]
+    fn every_registry_design_round_trips_through_job_key() {
+        for spec in MultiplierSpec::registry_examples(8) {
+            let j1 = JobBuilder::new(spec).monte_carlo(100).seed(1).build().unwrap();
+            let j2 = JobBuilder::new(spec).monte_carlo(100).seed(1).build().unwrap();
+            assert_eq!(j1.key(), j2.key(), "{}", spec.name());
+            assert_eq!(j1.key().design, spec.canonical(), "{}", spec.name());
+        }
+    }
+}

@@ -1,0 +1,54 @@
+//! # The `segmul` public API facade
+//!
+//! The single entry point for library users, the CLI, and benches.
+//! Everything evaluable is described by a design-agnostic
+//! [`MultiplierSpec`] — the paper's segmented sequential multiplier, the
+//! accurate reference, each related-work baseline, the bit-level oracle,
+//! and the gate-level netlist simulator — and runs through one pipeline:
+//!
+//! ```text
+//!  MultiplierSpec ──┐
+//!                   ├─ JobBuilder ──> EvalJob ──┐
+//!  WorkSpec ────────┘      (typed validation)   │
+//!                                               ▼
+//!  SessionBuilder ──> Session ──────────> persistent WorkerPool
+//!   workers / backend │  ├─ JobKey cache   (long-lived workers, one
+//!   cache / seed      │  ├─ telemetry       backend each, built once)
+//!   progress callback │  └─ ProgressEvents        │
+//!                     ▼                           ▼
+//!               SweepGrid × DesignSet ──> bit-identical ErrorStats
+//! ```
+//!
+//! * **Specs, not structs**: [`MultiplierSpec`] is plain hashable data;
+//!   [`MultiplierSpec::canonical`] collapses provably-equal product
+//!   functions so caches and sweeps dedup across designs.
+//! * **Sessions, not per-job plumbing**: [`Session`] owns worker threads
+//!   that hold a backend **across jobs** — artifact-heavy backends are
+//!   constructed once per worker per session, never per job.
+//! * **Typed errors**: the facade reports [`SegmulError`] (config /
+//!   spec / workload / backend / eval / io) instead of stringly errors.
+//! * **Streaming progress**: register a callback with
+//!   [`SessionBuilder::on_progress`] and observe every in-order chunk
+//!   merge without polling.
+//! * **Determinism**: results are bit-identical — order-sensitive f64
+//!   fields included — across worker counts and scheduling, inherited
+//!   from the coordinator's ordered merge.
+//!
+//! Machinery re-exports ([`EvalJob`], [`SweepGrid`], [`EvalService`],
+//! ...) come from [`crate::coordinator`]; reach into that module only
+//! when building custom backends or drivers.
+
+mod job;
+mod session;
+
+pub use crate::error::SegmulError;
+pub use job::JobBuilder;
+pub use session::{
+    BackendChoice, BackendFactory, ProgressEvent, Session, SessionBuilder, SessionTelemetry,
+};
+
+pub use crate::coordinator::{
+    ChunkEvent, EvalBackend, EvalJob, EvalService, JobKey, JobResult, SweepGrid, SweepOutcome,
+    WorkSpec, WorkerPool,
+};
+pub use crate::multiplier::{DesignSet, MultiplierSpec};

@@ -1,0 +1,402 @@
+//! The session: a builder-configured handle owning the persistent worker
+//! pool, the result cache, and the telemetry of one evaluation campaign.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::coordinator::{
+    ChunkEvent, ChunkPlan, CpuBackend, EvalBackend, EvalJob, JobResult, PjrtBackend, SweepGrid,
+    SweepOutcome, SweepRunner,
+};
+use crate::multiplier::MultiplierSpec;
+use crate::util::threadpool::default_workers;
+
+use crate::error::SegmulError;
+use super::job::JobBuilder;
+
+/// Backend selection for a session.
+#[derive(Clone, Debug)]
+pub enum BackendChoice {
+    /// The pure-Rust word-level backend (evaluates every design).
+    Cpu,
+    /// The PJRT backend over AOT artifacts in the given directory.
+    Pjrt(PathBuf),
+    /// PJRT when `manifest.json` exists in the directory, CPU otherwise
+    /// (the decision is made at session build time).
+    Auto(PathBuf),
+}
+
+impl BackendChoice {
+    /// The backend factory this choice denotes (the `Auto` manifest probe
+    /// runs now, once). The factory runs in each worker's thread — once
+    /// per worker for a session/pool, once total for a direct build.
+    pub fn into_factory(self) -> BackendFactory {
+        match self {
+            BackendChoice::Cpu => {
+                Box::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>))
+            }
+            BackendChoice::Pjrt(dir) => Box::new(move || {
+                Ok(Box::new(PjrtBackend::load(&dir)?) as Box<dyn EvalBackend>)
+            }),
+            BackendChoice::Auto(dir) => {
+                if dir.join("manifest.json").exists() {
+                    BackendChoice::Pjrt(dir).into_factory()
+                } else {
+                    BackendChoice::Cpu.into_factory()
+                }
+            }
+        }
+    }
+}
+
+/// Streaming progress events, delivered synchronously on the submitting
+/// thread — callers observe chunk completion without polling.
+#[derive(Clone, Debug)]
+pub enum ProgressEvent {
+    /// A job was submitted (a cache hit finishes without chunk events).
+    JobStarted {
+        design: String,
+        /// Planned chunk count (adaptive jobs may stop earlier).
+        chunks: u64,
+    },
+    /// One chunk folded into the job's in-order prefix.
+    ChunkMerged { merged: u64, chunks: u64, samples: u64 },
+    /// A job completed (evaluated or served from the cache).
+    JobFinished { design: String, cached: bool, samples: u64, wall: Duration },
+}
+
+/// Aggregate session counters.
+#[derive(Clone, Debug, Default)]
+pub struct SessionTelemetry {
+    pub jobs_completed: u64,
+    pub cache_hits: u64,
+    pub jobs_evaluated: u64,
+    pub pairs_evaluated: u64,
+    /// Backend constructions since startup — stays at `workers` for the
+    /// session's lifetime (the persistent-pool contract).
+    pub backend_builds: u64,
+    pub workers: usize,
+}
+
+type ProgressCallback = Box<dyn Fn(ProgressEvent) + Send + Sync>;
+
+/// A backend constructor, invoked once per worker thread.
+pub type BackendFactory = Box<dyn Fn() -> anyhow::Result<Box<dyn EvalBackend>> + Send + Sync>;
+
+/// Builder for [`Session`].
+pub struct SessionBuilder {
+    workers: Option<usize>,
+    backend: BackendChoice,
+    factory: Option<BackendFactory>,
+    cache: bool,
+    seed: u64,
+    progress: Option<ProgressCallback>,
+}
+
+impl SessionBuilder {
+    fn new() -> Self {
+        SessionBuilder {
+            workers: None,
+            backend: BackendChoice::Cpu,
+            factory: None,
+            cache: true,
+            seed: 0,
+            progress: None,
+        }
+    }
+
+    /// Worker-thread count. Unset: `SEGMUL_WORKERS` when present (a
+    /// typed [`SegmulError::Config`] if it is `0` or unparsable), else
+    /// the machine's available parallelism. Explicit `0` is rejected at
+    /// [`Self::build`].
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.workers = Some(workers);
+        self
+    }
+
+    /// Select a built-in backend (default: [`BackendChoice::Cpu`]).
+    pub fn backend(mut self, choice: BackendChoice) -> Self {
+        self.backend = choice;
+        self
+    }
+
+    /// Provide a custom backend factory (overrides [`Self::backend`]).
+    /// It runs once in each worker's thread at session build time.
+    pub fn backend_factory<F>(mut self, factory: F) -> Self
+    where
+        F: Fn() -> anyhow::Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
+    {
+        self.factory = Some(Box::new(factory));
+        self
+    }
+
+    /// Enable or disable the result cache (default: enabled).
+    pub fn cache(mut self, enabled: bool) -> Self {
+        self.cache = enabled;
+        self
+    }
+
+    /// Default RNG seed applied to jobs built through [`Session::job`].
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Register a streaming progress callback (chunk merges, job
+    /// completion). Called synchronously on the submitting thread.
+    pub fn on_progress<F>(mut self, callback: F) -> Self
+    where
+        F: Fn(ProgressEvent) + Send + Sync + 'static,
+    {
+        self.progress = Some(Box::new(callback));
+        self
+    }
+
+    /// Spawn the persistent pool and produce the session. Each worker
+    /// thread constructs its backend exactly once, here; every job the
+    /// session ever runs reuses them.
+    pub fn build(self) -> Result<Session, SegmulError> {
+        let workers = match self.workers {
+            Some(0) => {
+                return Err(SegmulError::config(
+                    "workers = 0: a session needs at least one worker",
+                ))
+            }
+            Some(w) => w,
+            None => default_workers()?,
+        };
+        let factory: BackendFactory = match self.factory {
+            Some(f) => f,
+            None => self.backend.into_factory(),
+        };
+        let mut runner = SweepRunner::new(factory, workers)
+            .map_err(|e| SegmulError::Backend(e.to_string()))?;
+        runner.set_cache_enabled(self.cache);
+        Ok(Session {
+            runner,
+            seed: self.seed,
+            progress: self.progress,
+            jobs_completed: 0,
+            pairs_evaluated: 0,
+        })
+    }
+}
+
+/// The single entry point for evaluating designs: owns long-lived worker
+/// threads that hold a backend **across jobs** (replacing per-job backend
+/// construction), a canonical-keyed result cache, and the session
+/// telemetry. Construct with [`Session::builder`].
+///
+/// ```no_run
+/// use segmul::api::{BackendChoice, MultiplierSpec, Session};
+///
+/// let mut session = Session::builder()
+///     .workers(4)
+///     .backend(BackendChoice::Cpu)
+///     .seed(42)
+///     .build()?;
+/// let job = session
+///     .job(MultiplierSpec::Segmented { n: 16, t: 7, fix: true })
+///     .monte_carlo(1 << 20)
+///     .build()?;
+/// let result = session.run(&job)?;
+/// println!("ER = {}", result.metrics().er);
+/// # Ok::<(), segmul::api::SegmulError>(())
+/// ```
+pub struct Session {
+    runner: SweepRunner,
+    seed: u64,
+    progress: Option<ProgressCallback>,
+    jobs_completed: u64,
+    pairs_evaluated: u64,
+}
+
+impl Session {
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::new()
+    }
+
+    /// A [`JobBuilder`] pre-seeded with the session's RNG seed policy.
+    pub fn job(&self, design: MultiplierSpec) -> JobBuilder {
+        JobBuilder::new(design).seed(self.seed)
+    }
+
+    /// Worker threads in the persistent pool.
+    pub fn workers(&self) -> usize {
+        self.runner.workers()
+    }
+
+    /// Backend constructions since startup (one per worker, ever).
+    pub fn backend_builds(&self) -> u64 {
+        self.runner.pool().backend_builds()
+    }
+
+    /// Name of the backend the pool workers hold.
+    pub fn backend_name(&self) -> &'static str {
+        self.runner.pool().backend_name()
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.runner.cache_hits
+    }
+
+    pub fn jobs_evaluated(&self) -> u64 {
+        self.runner.jobs_evaluated
+    }
+
+    pub fn telemetry(&self) -> SessionTelemetry {
+        SessionTelemetry {
+            jobs_completed: self.jobs_completed,
+            cache_hits: self.runner.cache_hits,
+            jobs_evaluated: self.runner.jobs_evaluated,
+            pairs_evaluated: self.pairs_evaluated,
+            backend_builds: self.backend_builds(),
+            workers: self.workers(),
+        }
+    }
+
+    /// Evaluate one job through the cache and the persistent pool,
+    /// streaming progress to the registered callback.
+    pub fn run(&mut self, job: &EvalJob) -> Result<JobResult, SegmulError> {
+        Ok(self.run_outcome(job)?.result)
+    }
+
+    /// [`Self::run`], additionally reporting whether the cache served it.
+    pub fn run_outcome(&mut self, job: &EvalJob) -> Result<SweepOutcome, SegmulError> {
+        // Validate and capability-check here, before anything is wrapped
+        // in `anyhow`, so the caller sees the precise Spec / Workload /
+        // Backend class (the vendored anyhow shim flattens messages and
+        // cannot downcast).
+        job.validate()?;
+        self.runner.pool().preflight(job)?;
+        let progress = self.progress.as_deref();
+        if let Some(cb) = progress {
+            let chunks = ChunkPlan::new(job, self.runner.pool().batch()).n_chunks();
+            cb(ProgressEvent::JobStarted { design: job.design.name(), chunks });
+        }
+        let outcome = self
+            .runner
+            .run_observed(job, &mut |e: ChunkEvent| {
+                if let Some(cb) = progress {
+                    cb(ProgressEvent::ChunkMerged {
+                        merged: e.merged,
+                        chunks: e.n_chunks,
+                        samples: e.samples,
+                    });
+                }
+            })
+            .map_err(SegmulError::from)?;
+        self.jobs_completed += 1;
+        if !outcome.cached {
+            self.pairs_evaluated += outcome.result.stats.count;
+        }
+        if let Some(cb) = progress {
+            cb(ProgressEvent::JobFinished {
+                design: job.design.name(),
+                cached: outcome.cached,
+                samples: outcome.result.stats.count,
+                wall: outcome.result.wall,
+            });
+        }
+        Ok(outcome)
+    }
+
+    /// Run a whole sweep grid in order through the shared cache/shard
+    /// path, calling `progress` once per completed point.
+    pub fn run_grid(
+        &mut self,
+        grid: &SweepGrid,
+        mut progress: impl FnMut(usize, usize, &SweepOutcome),
+    ) -> Result<Vec<SweepOutcome>, SegmulError> {
+        let jobs = grid.jobs();
+        let total = jobs.len();
+        let mut out = Vec::with_capacity(total);
+        for (i, job) in jobs.iter().enumerate() {
+            let outcome = self.run_outcome(job)?;
+            progress(i, total, &outcome);
+            out.push(outcome);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run_job;
+
+    #[test]
+    fn builder_rejects_zero_workers_with_typed_error() {
+        let e = Session::builder().workers(0).build().unwrap_err();
+        assert_eq!(e.kind(), "config");
+    }
+
+    #[test]
+    fn session_runs_jobs_and_counts() {
+        let mut s = Session::builder().workers(2).seed(9).build().unwrap();
+        let job = s
+            .job(MultiplierSpec::Segmented { n: 8, t: 4, fix: true })
+            .monte_carlo(50_000)
+            .build()
+            .unwrap();
+        let r1 = s.run(&job).unwrap();
+        assert_eq!(r1.stats.count, 50_000);
+        // Session-seeded: the builder picked up seed 9.
+        match job.spec {
+            crate::coordinator::WorkSpec::MonteCarlo { seed, .. } => assert_eq!(seed, 9),
+            _ => panic!("expected MC"),
+        }
+        let r2 = s.run(&job).unwrap();
+        assert_eq!(r1.stats, r2.stats);
+        assert_eq!(s.cache_hits(), 1);
+        assert_eq!(s.jobs_evaluated(), 1);
+        assert_eq!(s.telemetry().jobs_completed, 2);
+        // Results equal the sequential driver bit-for-bit.
+        let mut be = CpuBackend::new();
+        let want = run_job(&mut be, &job).unwrap();
+        assert_eq!(r1.stats, want.stats);
+    }
+
+    #[test]
+    fn progress_events_stream_chunk_merges() {
+        use std::sync::{Arc, Mutex};
+        let events: Arc<Mutex<Vec<ProgressEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let sink = events.clone();
+        let mut s = Session::builder()
+            .workers(2)
+            .on_progress(move |e| sink.lock().unwrap().push(e))
+            .build()
+            .unwrap();
+        let job = s
+            .job(MultiplierSpec::Segmented { n: 8, t: 2, fix: false })
+            .monte_carlo(200_000)
+            .build()
+            .unwrap();
+        let r = s.run(&job).unwrap();
+        let before = {
+            let log = events.lock().unwrap();
+            let merges = log
+                .iter()
+                .filter(|e| matches!(e, ProgressEvent::ChunkMerged { .. }))
+                .count() as u64;
+            assert_eq!(merges, r.batches, "one event per in-order chunk merge");
+            assert!(matches!(log.first(), Some(ProgressEvent::JobStarted { .. })));
+            match log.last() {
+                Some(ProgressEvent::JobFinished { cached, samples, .. }) => {
+                    assert!(!cached);
+                    assert_eq!(*samples, 200_000);
+                }
+                other => panic!("expected JobFinished, got {other:?}"),
+            }
+            log.len()
+        };
+        // Cache hit: no chunk merges, still a started + finished pair.
+        let _ = s.run(&job).unwrap();
+        let log = events.lock().unwrap();
+        assert_eq!(log.len(), before + 2);
+        match log.last() {
+            Some(ProgressEvent::JobFinished { cached, .. }) => assert!(cached),
+            other => panic!("expected JobFinished, got {other:?}"),
+        }
+    }
+}

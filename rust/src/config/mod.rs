@@ -29,7 +29,10 @@ pub struct Config {
     pub seed: u64,
     /// Vectors for hardware activity simulation (paper: 2^16).
     pub hw_vectors: u64,
-    /// Worker threads (defaults to available parallelism).
+    /// Worker threads (defaults to available parallelism). An invalid
+    /// `SEGMUL_WORKERS` override falls back to 1 here; the CLI and the
+    /// [`crate::api::SessionBuilder`] surface it as a typed
+    /// `SegmulError::Config` before any work runs.
     pub workers: usize,
     /// Bit-widths for the error figures (Fig. 2).
     pub error_bitwidths: Vec<u32>,
@@ -37,6 +40,10 @@ pub struct Config {
     pub hw_bitwidths: Vec<u32>,
     /// Bit-widths for the full design-space sweep (`segmul sweep`).
     pub sweep_bitwidths: Vec<u32>,
+    /// Design set for the sweep (`paper`, `accurate`, `baselines`,
+    /// `oracle`, `netlist`, `all`) — parsed by
+    /// [`crate::multiplier::DesignSet::parse`] at sweep construction.
+    pub sweep_designs: String,
 }
 
 impl Default for Config {
@@ -48,10 +55,11 @@ impl Default for Config {
             exhaustive_max_n: 12,
             seed: 0x5E6_0001,
             hw_vectors: 1 << 12,
-            workers: crate::util::threadpool::default_workers(),
+            workers: crate::util::threadpool::default_workers().unwrap_or(1),
             error_bitwidths: vec![4, 8, 12, 16, 32],
             hw_bitwidths: vec![4, 8, 16, 32, 64, 128, 256],
             sweep_bitwidths: vec![4, 8, 16, 32],
+            sweep_designs: "paper".to_string(),
         }
     }
 }
@@ -106,6 +114,9 @@ impl Config {
         if let Some(v) = doc.get_int_array("sweep", "bitwidths") {
             c.sweep_bitwidths = v.iter().map(|&x| x as u32).collect();
         }
+        if let Some(s) = doc.get_str("sweep", "designs") {
+            c.sweep_designs = s.to_string();
+        }
         c
     }
 }
@@ -134,6 +145,7 @@ mod tests {
             vectors = 256
             [sweep]
             bitwidths = [4, 8]
+            designs = "all"
             "#,
         )
         .unwrap();
@@ -143,6 +155,7 @@ mod tests {
         assert_eq!(c.error_bitwidths, vec![4, 8]);
         assert_eq!(c.hw_vectors, 256);
         assert_eq!(c.sweep_bitwidths, vec![4, 8]);
+        assert_eq!(c.sweep_designs, "all");
         // untouched keys keep defaults
         assert_eq!(c.exhaustive_max_n, 12);
     }
@@ -150,5 +163,6 @@ mod tests {
     #[test]
     fn sweep_bitwidths_default_to_paper_grid() {
         assert_eq!(Config::default().sweep_bitwidths, vec![4, 8, 16, 32]);
+        assert_eq!(Config::default().sweep_designs, "paper");
     }
 }

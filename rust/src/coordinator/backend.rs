@@ -6,37 +6,70 @@
 //! identical integer statistics for identical inputs — property-tested in
 //! `coordinator_integration`.
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::error::metrics::ErrorStats;
 use crate::error::stream::BatchAccumulator;
-use crate::multiplier::SegmentedSeqMul;
+use crate::multiplier::{BatchMultiplier, MultiplierSpec, SegmentedSeqMul};
 use crate::runtime::Runtime;
 
-/// A batch evaluator for the segmented sequential multiplier.
+/// A batch evaluator. The segmented fast path ([`Self::eval_batch`]) is
+/// what the PJRT artifacts lower; [`Self::eval_design`] generalizes to
+/// any [`MultiplierSpec`] — by default only the segmented family (plus
+/// the accurate design, which is its `t = 0` point), with the CPU
+/// backend overriding it to evaluate every implemented design.
 pub trait EvalBackend {
     fn name(&self) -> &'static str;
     /// Preferred operand-batch size.
     fn max_batch(&self) -> usize;
     /// Whether this backend can evaluate bit-width `n`.
     fn supports(&self, n: u32) -> bool;
-    /// Evaluate one batch (`a.len() == b.len()`, any length ≤ max_batch).
+    /// Evaluate one batch of the paper's segmented design
+    /// (`a.len() == b.len()`, any length ≤ max_batch).
     fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats>;
+
+    /// Whether this backend can evaluate `design`. The default covers
+    /// exactly what the default [`Self::eval_design`] can run.
+    fn supports_design(&self, design: &MultiplierSpec) -> bool {
+        design.has_segmented_lowering() && self.supports(design.n())
+    }
+
+    /// Evaluate one batch of an arbitrary design. Defaults to routing the
+    /// segmented family through [`Self::eval_batch`] (the accurate design
+    /// is segmented `t = 0`) and rejecting everything else.
+    fn eval_design(&mut self, design: &MultiplierSpec, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
+        match *design {
+            MultiplierSpec::Segmented { n, t, fix } => self.eval_batch(n, t, fix, a, b),
+            MultiplierSpec::Accurate { n } => self.eval_batch(n, 0, false, a, b),
+            ref other => Err(anyhow!(
+                "backend {} does not support design {}",
+                self.name(),
+                other.name()
+            )),
+        }
+    }
 }
 
 /// Pure-Rust word-level backend (always available, any n ≤ 32). A thin
 /// wrapper over the batched streaming engine: each call runs the same
 /// monomorphized kernels + block-resident `BatchAccumulator` the
-/// standalone evaluators use — no per-pair dispatch anywhere.
+/// standalone evaluators use — no per-pair dispatch anywhere. The only
+/// backend that evaluates **every** [`MultiplierSpec`]: non-segmented
+/// designs run through evaluators built once per spec and cached for the
+/// backend's lifetime (a netlist build amortizes across all its chunks).
 pub struct CpuBackend {
     batch: usize,
+    /// Built evaluators for non-segmented designs, keyed by spec.
+    designs: HashMap<MultiplierSpec, Box<dyn BatchMultiplier>>,
 }
 
 impl CpuBackend {
     pub fn new() -> Self {
-        Self { batch: 1 << 16 }
+        Self { batch: 1 << 16, designs: HashMap::new() }
     }
 }
 
@@ -67,6 +100,27 @@ impl EvalBackend for CpuBackend {
         let mut acc = BatchAccumulator::new(&m);
         acc.eval_pairs(a, b);
         Ok(acc.finish())
+    }
+
+    fn supports_design(&self, design: &MultiplierSpec) -> bool {
+        design.validate().is_ok()
+    }
+
+    fn eval_design(&mut self, design: &MultiplierSpec, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
+        match *design {
+            // The segmented fast path stays byte-for-byte the old route.
+            MultiplierSpec::Segmented { n, t, fix } => self.eval_batch(n, t, fix, a, b),
+            ref other => {
+                anyhow::ensure!(a.len() == b.len());
+                let m = match self.designs.entry(*other) {
+                    Entry::Occupied(e) => e.into_mut(),
+                    Entry::Vacant(v) => v.insert(other.build_batch()?),
+                };
+                let mut acc = BatchAccumulator::new(m.as_ref());
+                acc.eval_pairs(a, b);
+                Ok(acc.finish())
+            }
+        }
     }
 }
 
@@ -149,5 +203,71 @@ mod tests {
         let be = CpuBackend::new();
         assert!(be.supports(1) && be.supports(32));
         assert!(!be.supports(0) && !be.supports(33));
+    }
+
+    #[test]
+    fn cpu_backend_evaluates_every_design() {
+        let mut be = CpuBackend::new();
+        let mut rng = Xoshiro256::seed_from_u64(7);
+        let a: Vec<u64> = (0..300).map(|_| rng.next_bits(8)).collect();
+        let b: Vec<u64> = (0..300).map(|_| rng.next_bits(8)).collect();
+        for spec in MultiplierSpec::registry_examples(8) {
+            assert!(be.supports_design(&spec), "{}", spec.name());
+            let got = be.eval_design(&spec, &a, &b).unwrap();
+            assert_eq!(got.count, 300, "{}", spec.name());
+            // Reference: drive the same evaluator directly.
+            let m = spec.build_batch().unwrap();
+            let mut acc = BatchAccumulator::new(m.as_ref());
+            acc.eval_pairs(&a, &b);
+            assert_eq!(got, acc.finish(), "{}", spec.name());
+        }
+        // Segmented routing through eval_design == eval_batch.
+        let spec = MultiplierSpec::Segmented { n: 8, t: 4, fix: true };
+        let via_design = be.eval_design(&spec, &a, &b).unwrap();
+        let via_batch = be.eval_batch(8, 4, true, &a, &b).unwrap();
+        assert_eq!(via_design, via_batch);
+    }
+
+    #[test]
+    fn default_eval_design_rejects_non_segmented() {
+        // A backend relying on the trait defaults (like the PJRT one for
+        // unsupported designs) accepts segmented + accurate, rejects the
+        // rest with a typed-out message.
+        struct SegOnly;
+        impl EvalBackend for SegOnly {
+            fn name(&self) -> &'static str {
+                "segonly"
+            }
+            fn max_batch(&self) -> usize {
+                16
+            }
+            fn supports(&self, n: u32) -> bool {
+                (1..=32).contains(&n)
+            }
+            fn eval_batch(
+                &mut self,
+                n: u32,
+                t: u32,
+                fix: bool,
+                a: &[u64],
+                b: &[u64],
+            ) -> Result<ErrorStats> {
+                CpuBackend::new().eval_batch(n, t, fix, a, b)
+            }
+        }
+        let mut be = SegOnly;
+        assert!(be.supports_design(&MultiplierSpec::Segmented { n: 8, t: 2, fix: false }));
+        assert!(be.supports_design(&MultiplierSpec::Accurate { n: 8 }));
+        assert!(!be.supports_design(&MultiplierSpec::Mitchell { n: 8 }));
+        let a = [3u64, 5];
+        let b = [7u64, 9];
+        // Accurate routes through the exact t=0 segmented path.
+        let s = be.eval_design(&MultiplierSpec::Accurate { n: 8 }, &a, &b).unwrap();
+        assert_eq!(s.err_count, 0);
+        let err = be
+            .eval_design(&MultiplierSpec::Mitchell { n: 8 }, &a, &b)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("mitchell"), "{err}");
     }
 }

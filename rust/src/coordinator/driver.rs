@@ -59,19 +59,20 @@ pub struct ChunkPlan {
 
 impl ChunkPlan {
     pub fn new(job: &EvalJob, batch: usize) -> Self {
+        let n = job.n();
         let chunk = (batch.max(1)) as u64;
         let total = match &job.spec {
             WorkSpec::Exhaustive => {
                 // `EvalJob::validate` enforces this for every driver path;
                 // asserted here too so the invariant is local (n = 32
                 // would shift-overflow the u64 index space).
-                assert!(job.n <= 16, "exhaustive chunk plan requires n <= 16 (n={})", job.n);
-                1u64 << (2 * job.n)
+                assert!(n <= 16, "exhaustive chunk plan requires n <= 16 (n={n})");
+                1u64 << (2 * n)
             }
             WorkSpec::MonteCarlo { samples, .. } => *samples,
             WorkSpec::Adaptive { max_samples, .. } => *max_samples,
         };
-        ChunkPlan { n: job.n, spec: job.spec.clone(), chunk, total, n_chunks: total.div_ceil(chunk) }
+        ChunkPlan { n, spec: job.spec.clone(), chunk, total, n_chunks: total.div_ceil(chunk) }
     }
 
     pub fn n_chunks(&self) -> u64 {
@@ -115,22 +116,28 @@ impl ChunkPlan {
 pub fn run_job(backend: &mut dyn EvalBackend, job: &EvalJob) -> Result<JobResult> {
     job.validate()?;
     anyhow::ensure!(
-        backend.supports(job.n),
+        backend.supports(job.n()),
         "backend {} does not support n={}",
         backend.name(),
-        job.n
+        job.n()
+    );
+    anyhow::ensure!(
+        backend.supports_design(&job.design),
+        "backend {} does not support design {}",
+        backend.name(),
+        job.design.name()
     );
     let started = Instant::now();
     let plan = ChunkPlan::new(job, backend.max_batch());
     let conv = plan.convergence();
-    let mut total = ErrorStats::new(job.n);
+    let mut total = ErrorStats::new(job.n());
     let mut batches = 0u64;
     let mut a = Vec::with_capacity(backend.max_batch());
     let mut b = Vec::with_capacity(backend.max_batch());
 
     for chunk_id in 0..plan.n_chunks() {
         plan.fill(chunk_id, &mut a, &mut b);
-        total.merge(&backend.eval_batch(job.n, job.t, job.fix, &a, &b)?);
+        total.merge(&backend.eval_design(&job.design, &a, &b)?);
         batches += 1;
         if let Some(c) = &conv {
             if c.converged(&total) {
@@ -180,9 +187,7 @@ mod tests {
     fn adaptive_stops_early() {
         let mut be = CpuBackend::new();
         let job = EvalJob {
-            n: 8,
-            t: 4,
-            fix: true,
+            design: crate::multiplier::MultiplierSpec::Segmented { n: 8, t: 4, fix: true },
             spec: WorkSpec::Adaptive {
                 max_samples: 1 << 24,
                 seed: 7,

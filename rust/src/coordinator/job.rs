@@ -2,7 +2,9 @@
 
 use std::time::Duration;
 
+use crate::error::SegmulError;
 use crate::error::metrics::{ErrorMetrics, ErrorStats};
+use crate::multiplier::MultiplierSpec;
 
 /// Workload specification for one evaluation job.
 #[derive(Clone, Debug)]
@@ -16,15 +18,15 @@ pub enum WorkSpec {
     Adaptive { max_samples: u64, seed: u64, target_rel_stderr: f64 },
 }
 
-/// One evaluation request.
+/// One evaluation request: a design under a workload. Any
+/// [`MultiplierSpec`] — the paper's segmented multiplier, the accurate
+/// reference, the related-work baselines, the bit-level oracle, or the
+/// netlist simulator — runs through the same drivers, shard pool, and
+/// cache.
 #[derive(Clone, Debug)]
 pub struct EvalJob {
-    /// Operand bit-width (must have a lowered artifact for the PJRT path).
-    pub n: u32,
-    /// Splitting point, `0 <= t < n`; 0 = accurate.
-    pub t: u32,
-    /// Enable fix-to-1 compensation.
-    pub fix: bool,
+    /// The multiplier design under evaluation.
+    pub design: MultiplierSpec,
     pub spec: WorkSpec,
 }
 
@@ -37,9 +39,10 @@ pub struct EvalJob {
 /// whole lifetime, which is what makes its cache sound.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct JobKey {
-    pub n: u32,
-    pub t: u32,
-    pub fix: bool,
+    /// The canonical design representative (see
+    /// [`MultiplierSpec::canonical`]): specs computing the same product
+    /// function share one entry.
+    pub design: MultiplierSpec,
     pub spec: SpecKey,
 }
 
@@ -53,18 +56,35 @@ pub enum SpecKey {
 }
 
 impl EvalJob {
+    pub fn new(design: MultiplierSpec, spec: WorkSpec) -> Self {
+        EvalJob { design, spec }
+    }
+
+    /// Monte-Carlo job for the paper's segmented design (back-compat
+    /// shorthand; use [`EvalJob::new`] for other designs).
     pub fn mc(n: u32, t: u32, fix: bool, samples: u64, seed: u64) -> Self {
-        EvalJob { n, t, fix, spec: WorkSpec::MonteCarlo { samples, seed } }
+        EvalJob {
+            design: MultiplierSpec::Segmented { n, t, fix },
+            spec: WorkSpec::MonteCarlo { samples, seed },
+        }
     }
 
+    /// Exhaustive job for the paper's segmented design.
     pub fn exhaustive(n: u32, t: u32, fix: bool) -> Self {
-        EvalJob { n, t, fix, spec: WorkSpec::Exhaustive }
+        EvalJob { design: MultiplierSpec::Segmented { n, t, fix }, spec: WorkSpec::Exhaustive }
     }
 
-    /// The job's cache key. `t == 0` is the accurate multiplier whose
-    /// zero-bit LSP adder can never raise the carry that fix-to-1
-    /// compensates, so `fix` is canonicalized to `false` there and
-    /// `(n, 0, false)` / `(n, 0, true)` share one cache entry.
+    /// Operand bit-width of the design under evaluation.
+    pub fn n(&self) -> u32 {
+        self.design.n()
+    }
+
+    /// The job's cache key: the canonical design representative plus the
+    /// workload. `t = 0` segmented configurations collapse across fix
+    /// modes *and* onto the accurate design — the zero-bit LSP adder can
+    /// never raise the carry that fix-to-1 compensates, so all three
+    /// describe the same product function (see
+    /// [`MultiplierSpec::canonical`]).
     pub fn key(&self) -> JobKey {
         let spec = match &self.spec {
             WorkSpec::Exhaustive => SpecKey::Exhaustive,
@@ -77,21 +97,31 @@ impl EvalJob {
                 target_bits: target_rel_stderr.to_bits(),
             },
         };
-        JobKey { n: self.n, t: self.t, fix: if self.t == 0 { false } else { self.fix }, spec }
+        JobKey { design: self.design.canonical(), spec }
     }
 
-    pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.n >= 1 && self.n <= 32, "n={} out of range", self.n);
-        anyhow::ensure!(self.t < self.n, "t={} out of range for n={}", self.t, self.n);
+    pub fn validate(&self) -> Result<(), SegmulError> {
+        self.design.validate()?;
         match &self.spec {
             WorkSpec::Exhaustive => {
-                anyhow::ensure!(self.n <= 16, "exhaustive limited to n <= 16 (n={})", self.n)
+                if self.n() > 16 {
+                    return Err(SegmulError::workload(format!(
+                        "exhaustive limited to n <= 16 (n={})",
+                        self.n()
+                    )));
+                }
             }
             WorkSpec::MonteCarlo { samples, .. } => {
-                anyhow::ensure!(*samples > 0, "samples must be positive")
+                if *samples == 0 {
+                    return Err(SegmulError::workload("samples must be positive"));
+                }
             }
             WorkSpec::Adaptive { max_samples, target_rel_stderr, .. } => {
-                anyhow::ensure!(*max_samples > 0 && *target_rel_stderr > 0.0, "bad adaptive spec")
+                if *max_samples == 0 || *target_rel_stderr <= 0.0 || target_rel_stderr.is_nan() {
+                    return Err(SegmulError::workload(format!(
+                        "bad adaptive spec (max_samples={max_samples}, target={target_rel_stderr})"
+                    )));
+                }
             }
         }
         Ok(())
@@ -133,12 +163,13 @@ mod tests {
         assert!(EvalJob::exhaustive(18, 4, true).validate().is_err());
         assert!(EvalJob::mc(8, 4, true, 0, 1).validate().is_err());
         let bad = EvalJob {
-            n: 8,
-            t: 1,
-            fix: false,
+            design: MultiplierSpec::Segmented { n: 8, t: 1, fix: false },
             spec: WorkSpec::Adaptive { max_samples: 0, seed: 1, target_rel_stderr: 0.1 },
         };
         assert!(bad.validate().is_err());
+        // Typed error classes on the public surface.
+        assert_eq!(EvalJob::mc(8, 8, true, 100, 1).validate().unwrap_err().kind(), "spec");
+        assert_eq!(EvalJob::mc(8, 4, true, 0, 1).validate().unwrap_err().kind(), "workload");
     }
 
     #[test]
@@ -152,6 +183,16 @@ mod tests {
             EvalJob::exhaustive(8, 4, true).key(),
             EvalJob::mc(8, 4, true, 100, 1).key()
         );
+        // Cross-design keys are distinct for distinct product functions.
+        let mc = WorkSpec::MonteCarlo { samples: 100, seed: 1 };
+        assert_ne!(
+            EvalJob::new(MultiplierSpec::Mitchell { n: 8 }, mc.clone()).key(),
+            EvalJob::new(MultiplierSpec::Kulkarni { n: 8 }, mc.clone()).key()
+        );
+        assert_ne!(
+            EvalJob::new(MultiplierSpec::Truncated { n: 8, k: 2 }, mc.clone()).key(),
+            EvalJob::new(MultiplierSpec::Truncated { n: 8, k: 4 }, mc).key()
+        );
     }
 
     #[test]
@@ -159,6 +200,11 @@ mod tests {
         // t=0 is accurate: fix-to-1 can never trigger, so both variants
         // share one cache identity...
         assert_eq!(EvalJob::exhaustive(8, 0, true).key(), EvalJob::exhaustive(8, 0, false).key());
+        // ...which is the accurate design's identity...
+        assert_eq!(
+            EvalJob::exhaustive(8, 0, true).key(),
+            EvalJob::new(MultiplierSpec::Accurate { n: 8 }, WorkSpec::Exhaustive).key()
+        );
         // ...but at t>0 fix is a real configuration axis.
         assert_ne!(EvalJob::exhaustive(8, 4, true).key(), EvalJob::exhaustive(8, 4, false).key());
     }

@@ -2,15 +2,21 @@
 //!
 //! The paper's contribution is an arithmetic unit; the system a downstream
 //! user adopts around it is an *evaluation platform*: submit
-//! (bit-width, splitting point, fix, workload) jobs, get error metrics
-//! back, with the heavy batched evaluation running on the AOT-compiled
-//! PJRT executables (python never on the request path) and a pure-Rust
-//! word-level backend as fallback / cross-check.
+//! (design, workload) jobs — any [`crate::multiplier::MultiplierSpec`],
+//! from the paper's segmented multiplier to the related-work baselines,
+//! the bit-level oracle, and the gate-level netlist — and get error
+//! metrics back, with the heavy batched evaluation running on the
+//! AOT-compiled PJRT executables (python never on the request path) and a
+//! pure-Rust word-level backend as fallback / cross-check.
+//!
+//! This module is the machinery layer; the public entry point for
+//! library users, the CLI, and benches is the [`crate::api`] facade.
 //!
 //! * [`job`]         — job/result types and the workload specs
 //!   (exhaustive, fixed-budget Monte-Carlo, adaptive CI-targeted MC).
 //! * [`backend`]     — the evaluation backends: [`backend::CpuBackend`]
-//!   (word-level model) and [`backend::PjrtBackend`] (the compiled stats
+//!   (word-level model + every non-segmented design via cached batch
+//!   evaluators) and [`backend::PjrtBackend`] (the compiled stats
 //!   modules, with pad-and-correct batching to the lowered batch size).
 //! * [`driver`]      — the deterministic chunk decomposition
 //!   ([`driver::ChunkPlan`]) and the sequential driver; the MC
@@ -19,17 +25,23 @@
 //! * [`sharded`]     — intra-job parallelism: N workers steal chunks
 //!   from a shared cursor and an ordered merge keeps results
 //!   bit-identical to the sequential driver for any worker count.
+//! * [`pool`]        — the persistent shard pool: long-lived worker
+//!   threads own one backend each **across jobs** (the facade's session
+//!   executor; replaces per-job backend construction).
 //! * [`sweep`]       — design-space sweep orchestration over the paper
-//!   grid, with a `(config, seed, samples)` result cache.
+//!   grid and the cross-design comparative grids, with a canonical
+//!   `(design, workload, seed)` result cache.
 //! * [`convergence`] — CI-based early stopping for adaptive jobs.
-//! * [`service`]     — the threaded service: a pool of executor threads
-//!   owns the (non-Send) PJRT runtimes; clients submit jobs over a
-//!   shared channel and receive tickets.
+//! * [`service`]     — the threaded job service: a pool of executor
+//!   threads owns the (non-Send) PJRT runtimes and schedules whole jobs
+//!   per worker; clients submit over a shared channel and receive
+//!   tickets.
 
 pub mod backend;
 pub mod convergence;
 pub mod driver;
 pub mod job;
+pub mod pool;
 pub mod service;
 pub mod sharded;
 pub mod sweep;
@@ -38,6 +50,7 @@ pub use backend::{CpuBackend, EvalBackend, PjrtBackend};
 pub use convergence::Convergence;
 pub use driver::{run_job, ChunkPlan};
 pub use job::{EvalJob, JobKey, JobResult, SpecKey, WorkSpec};
+pub use pool::WorkerPool;
 pub use service::{EvalService, ServiceTelemetry};
-pub use sharded::run_job_sharded;
+pub use sharded::{run_job_sharded, ChunkEvent};
 pub use sweep::{SweepGrid, SweepOutcome, SweepRunner};

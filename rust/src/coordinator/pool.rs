@@ -1,0 +1,426 @@
+//! The persistent shard pool: long-lived worker threads that own a
+//! backend **across jobs**.
+//!
+//! [`super::sharded::run_job_sharded`] spawns scoped workers per job and
+//! has each build a fresh backend — trivial for the CPU backend, but a
+//! real cost for artifact-heavy backends (PJRT executable loading,
+//! netlist construction) and the reason the ROADMAP called for a
+//! persistent pool. [`WorkerPool`] moves the worker lifetime up to the
+//! session: N threads are spawned once, each constructs its backend
+//! in-thread exactly once (the PJRT FFI types are not `Send`, so the
+//! backend can never migrate out), and every submitted job is broadcast
+//! to all of them. Workers steal chunks from the job's shared atomic
+//! cursor exactly as the scoped runner does, and the submitting thread
+//! folds the per-chunk results through the same in-order merge
+//! ([`super::sharded::merge_chunk_stream`]) — so pool results are
+//! **bit-identical** to both the scoped sharded runner and the
+//! sequential driver, for any worker count and completion schedule.
+//!
+//! Construction counting is observable ([`WorkerPool::backend_builds`]):
+//! a session that runs a thousand jobs still reports exactly
+//! `pool_size()` builds, which is the facade's per-worker-per-session
+//! contract (`tests/api_facade.rs` proves it with a counting factory).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::error::metrics::ErrorStats;
+use crate::error::SegmulError;
+
+use super::backend::EvalBackend;
+use super::driver::ChunkPlan;
+use super::job::{EvalJob, JobResult};
+use super::sharded::{finish_merge, merge_chunk_stream, ChunkEvent};
+
+/// Shared per-job scheduling state (one per submitted job; workers hold
+/// an `Arc` until their chunk loop for that job ends).
+struct ActiveJob {
+    job: EvalJob,
+    plan: ChunkPlan,
+    n_chunks: u64,
+    /// Next unclaimed chunk id.
+    next: AtomicU64,
+    /// Raised by the merge loop on convergence / failure: workers stop
+    /// claiming chunks.
+    stop: AtomicBool,
+}
+
+enum Request {
+    /// Evaluate chunks of this job, streaming `(chunk id, stats)` back
+    /// over the provided sender.
+    Run(Arc<ActiveJob>, Sender<(u64, Result<ErrorStats>)>),
+    /// Capability preflight: can the worker's backend run this job?
+    /// (The submitting thread holds no backend — PJRT handles are not
+    /// `Send` — so support questions round-trip to a worker.)
+    Probe(EvalJob, Sender<Result<(), SegmulError>>),
+    Shutdown,
+}
+
+/// A pool of long-lived executor threads, each owning one backend for the
+/// pool's whole lifetime. Jobs are sharded **across** the pool (intra-job
+/// parallelism with a deterministic merge); for a pool scheduling whole
+/// jobs per worker see [`super::service::EvalService`].
+pub struct WorkerPool {
+    /// One request channel per worker (jobs are broadcast to all).
+    txs: Vec<Sender<Request>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Batch size reported by the workers' backends (homogeneous: all
+    /// workers build from the same factory).
+    batch: usize,
+    backend_name: &'static str,
+    builds: Arc<AtomicU64>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` executor threads. `factory` runs once in each
+    /// worker's thread; startup fails if any backend fails to build.
+    pub fn start<F>(factory: F, workers: usize) -> Result<WorkerPool>
+    where
+        F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
+    {
+        let workers = workers.max(1);
+        let factory = Arc::new(factory);
+        let builds = Arc::new(AtomicU64::new(0));
+        let (ready_tx, ready_rx) = channel::<Result<(usize, &'static str)>>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Request>();
+            let factory = factory.clone();
+            let builds = builds.clone();
+            let ready_tx = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("segmul-pool-{i}"))
+                .spawn(move || {
+                    // Exactly one backend construction per worker, for
+                    // the lifetime of the pool.
+                    let mut backend = match factory() {
+                        Ok(b) => {
+                            builds.fetch_add(1, Ordering::SeqCst);
+                            let _ = ready_tx.send(Ok((b.max_batch(), b.name())));
+                            b
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    let mut a: Vec<u64> = Vec::new();
+                    let mut b: Vec<u64> = Vec::new();
+                    loop {
+                        match rx.recv() {
+                            Err(_) | Ok(Request::Shutdown) => break,
+                            Ok(Request::Probe(job, reply)) => {
+                                let r = if !backend.supports(job.n()) {
+                                    Err(SegmulError::backend(format!(
+                                        "backend {} does not support n={}",
+                                        backend.name(),
+                                        job.n()
+                                    )))
+                                } else if !backend.supports_design(&job.design) {
+                                    Err(SegmulError::backend(format!(
+                                        "backend {} does not support design {}",
+                                        backend.name(),
+                                        job.design.name()
+                                    )))
+                                } else {
+                                    Ok(())
+                                };
+                                let _ = reply.send(r);
+                            }
+                            Ok(Request::Run(shared, results)) => {
+                                while !shared.stop.load(Ordering::Relaxed) {
+                                    let id = shared.next.fetch_add(1, Ordering::Relaxed);
+                                    if id >= shared.n_chunks {
+                                        break;
+                                    }
+                                    shared.plan.fill(id, &mut a, &mut b);
+                                    let r = backend.eval_design(&shared.job.design, &a, &b);
+                                    if results.send((id, r)).is_err() {
+                                        break; // job decided; stop early
+                                    }
+                                }
+                                // `results` drops here: the merge loop's
+                                // receiver unblocks once every worker is
+                                // done with this job.
+                            }
+                        }
+                    }
+                })?;
+            txs.push(tx);
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        let mut batch = 0usize;
+        let mut backend_name = "";
+        for _ in 0..workers {
+            // On failure, dropping the channels (and the handles)
+            // unblocks the already-started workers, which exit on the
+            // closed channel.
+            let (b, name) = ready_rx
+                .recv()
+                .map_err(|_| anyhow!("pool worker died during startup"))??;
+            batch = b;
+            backend_name = name;
+        }
+        Ok(WorkerPool { txs, handles, batch, backend_name, builds })
+    }
+
+    /// Number of executor threads.
+    pub fn pool_size(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Total backend constructions since startup (the per-worker-per-
+    /// session contract: stays equal to [`Self::pool_size`] no matter how
+    /// many jobs run).
+    pub fn backend_builds(&self) -> u64 {
+        self.builds.load(Ordering::SeqCst)
+    }
+
+    /// The workers' backend batch size (chunk granularity).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Name of the backend the workers hold.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend_name
+    }
+
+    /// Validate `job` and check it against a live worker backend (one
+    /// message round trip; workers are idle between jobs). Fails fast
+    /// with the same wording as the sequential driver's preflight, but
+    /// typed — a capability failure is [`SegmulError::Backend`], never a
+    /// per-chunk eval error.
+    pub fn preflight(&self, job: &EvalJob) -> Result<(), SegmulError> {
+        job.validate()?;
+        let (tx, rx) = channel();
+        let wtx = self
+            .txs
+            .first()
+            .ok_or_else(|| SegmulError::backend("pool has no workers"))?;
+        wtx.send(Request::Probe(job.clone(), tx))
+            .map_err(|_| SegmulError::backend("pool worker gone"))?;
+        rx.recv().map_err(|_| SegmulError::backend("pool worker died during preflight"))?
+    }
+
+    /// Execute `job` sharded across the pool's persistent workers.
+    pub fn run_job(&self, job: &EvalJob) -> Result<JobResult> {
+        self.run_job_observed(job, &mut |_| {})
+    }
+
+    /// [`Self::run_job`], streaming one [`ChunkEvent`] per in-order merge
+    /// step to `observer` (called on the submitting thread).
+    pub fn run_job_observed(
+        &self,
+        job: &EvalJob,
+        observer: &mut dyn FnMut(ChunkEvent),
+    ) -> Result<JobResult> {
+        self.preflight(job)?;
+        let started = Instant::now();
+        let plan = ChunkPlan::new(job, self.batch);
+        let n_chunks = plan.n_chunks();
+        let conv = plan.convergence();
+        let shared = Arc::new(ActiveJob {
+            job: job.clone(),
+            plan,
+            n_chunks,
+            next: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let (tx, rx) = channel::<(u64, Result<ErrorStats>)>();
+        for wtx in &self.txs {
+            // A worker gone mid-session surfaces as an incomplete merge
+            // below, not as a submit error.
+            let _ = wtx.send(Request::Run(shared.clone(), tx.clone()));
+        }
+        drop(tx); // workers hold the remaining senders
+        let (merger, converged) =
+            merge_chunk_stream(&rx, job.n(), n_chunks, conv.as_ref(), &shared.stop, observer)?;
+        let (stats, batches) = finish_merge(merger, n_chunks, converged)?;
+        Ok(JobResult {
+            job: job.clone(),
+            stats,
+            backend: self.backend_name,
+            wall: started.elapsed(),
+            batches,
+        })
+    }
+
+    /// Graceful shutdown (also runs on drop).
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Request::Shutdown);
+        }
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::CpuBackend;
+    use crate::coordinator::driver::run_job;
+    use crate::coordinator::job::WorkSpec;
+    use crate::multiplier::MultiplierSpec;
+
+    fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static {
+        || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+    }
+
+    fn sequential(job: &EvalJob) -> JobResult {
+        let mut be = CpuBackend::new();
+        run_job(&mut be, job).unwrap()
+    }
+
+    #[test]
+    fn pool_results_bit_identical_to_sequential() {
+        let jobs = [
+            EvalJob::exhaustive(10, 4, true),
+            EvalJob::mc(12, 5, false, 300_000, 99),
+            EvalJob::new(
+                MultiplierSpec::Truncated { n: 10, k: 3 },
+                WorkSpec::MonteCarlo { samples: 200_000, seed: 3 },
+            ),
+        ];
+        for workers in [1usize, 2, 7] {
+            let pool = WorkerPool::start(cpu_factory(), workers).unwrap();
+            for job in &jobs {
+                let want = sequential(job);
+                let got = pool.run_job(job).unwrap();
+                assert_eq!(got.stats, want.stats, "workers={workers}");
+                assert_eq!(got.batches, want.batches, "workers={workers}");
+                assert_eq!(got.backend, "cpu");
+            }
+            pool.shutdown();
+        }
+    }
+
+    #[test]
+    fn backends_built_once_per_worker_across_jobs() {
+        let pool = WorkerPool::start(cpu_factory(), 3).unwrap();
+        assert_eq!(pool.pool_size(), 3);
+        assert_eq!(pool.backend_builds(), 3);
+        for seed in 0..5u64 {
+            pool.run_job(&EvalJob::mc(8, 3, true, 100_000, seed)).unwrap();
+        }
+        assert_eq!(pool.backend_builds(), 3, "persistent workers must not rebuild");
+    }
+
+    #[test]
+    fn adaptive_same_stopping_point_as_sequential() {
+        let job = EvalJob {
+            design: MultiplierSpec::Segmented { n: 8, t: 4, fix: true },
+            spec: WorkSpec::Adaptive { max_samples: 1 << 24, seed: 7, target_rel_stderr: 0.05 },
+        };
+        let want = sequential(&job);
+        let pool = WorkerPool::start(cpu_factory(), 4).unwrap();
+        let got = pool.run_job(&job).unwrap();
+        assert_eq!(got.stats, want.stats);
+        assert_eq!(got.batches, want.batches);
+        // The pool must stay usable after an early-stopped job.
+        let again = pool.run_job(&EvalJob::mc(8, 2, false, 100_000, 1)).unwrap();
+        assert_eq!(again.stats.count, 100_000);
+    }
+
+    #[test]
+    fn observer_sees_every_merge_step() {
+        let pool = WorkerPool::start(cpu_factory(), 2).unwrap();
+        let job = EvalJob::mc(8, 3, true, 300_000, 2);
+        let mut events: Vec<ChunkEvent> = Vec::new();
+        let r = pool.run_job_observed(&job, &mut |e| events.push(e)).unwrap();
+        assert_eq!(events.len() as u64, r.batches);
+        // Merged counts are strictly increasing, samples monotone, and
+        // the last event covers the full budget.
+        for (i, e) in events.iter().enumerate() {
+            assert_eq!(e.merged, i as u64 + 1);
+            assert_eq!(e.n_chunks, r.batches);
+        }
+        assert_eq!(events.last().unwrap().samples, 300_000);
+    }
+
+    #[test]
+    fn invalid_jobs_rejected_and_pool_stays_usable() {
+        let pool = WorkerPool::start(cpu_factory(), 2).unwrap();
+        assert!(pool.run_job(&EvalJob::mc(8, 9, false, 10, 1)).is_err());
+        assert!(pool.run_job(&EvalJob::exhaustive(20, 2, false)).is_err());
+        let ok = pool.run_job(&EvalJob::mc(8, 2, false, 10_000, 1)).unwrap();
+        assert_eq!(ok.stats.count, 10_000);
+    }
+
+    #[test]
+    fn factory_failure_fails_startup() {
+        let r = WorkerPool::start(|| Err(anyhow!("boom")), 3);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn preflight_rejects_unsupported_designs_with_typed_backend_error() {
+        // A backend on the trait defaults (like PJRT) evaluates only the
+        // segmented family; the pool must reject other designs up front
+        // — typed, and with the driver's wording — instead of surfacing
+        // per-chunk eval errors.
+        struct SegOnly;
+        impl EvalBackend for SegOnly {
+            fn name(&self) -> &'static str {
+                "segonly"
+            }
+            fn max_batch(&self) -> usize {
+                256
+            }
+            fn supports(&self, n: u32) -> bool {
+                (1..=32).contains(&n)
+            }
+            fn eval_batch(
+                &mut self,
+                n: u32,
+                t: u32,
+                fix: bool,
+                a: &[u64],
+                b: &[u64],
+            ) -> Result<ErrorStats> {
+                CpuBackend::new().eval_batch(n, t, fix, a, b)
+            }
+        }
+        let pool =
+            WorkerPool::start(|| Ok(Box::new(SegOnly) as Box<dyn EvalBackend>), 2).unwrap();
+        let bad = EvalJob::new(
+            MultiplierSpec::Mitchell { n: 8 },
+            WorkSpec::MonteCarlo { samples: 100, seed: 1 },
+        );
+        let e = pool.preflight(&bad).unwrap_err();
+        assert_eq!(e.kind(), "backend");
+        assert!(e.to_string().contains("mitchell"), "{e}");
+        assert!(pool.run_job(&bad).is_err());
+        // Segmented (and accurate) jobs still pass the same preflight.
+        pool.preflight(&EvalJob::mc(8, 2, true, 1000, 1)).unwrap();
+        let ok = pool.run_job(&EvalJob::mc(8, 2, true, 1000, 1)).unwrap();
+        assert_eq!(ok.stats.count, 1000);
+    }
+
+    #[test]
+    fn drop_shuts_down_cleanly() {
+        let pool = WorkerPool::start(cpu_factory(), 2).unwrap();
+        let _ = pool.run_job(&EvalJob::mc(4, 1, false, 100, 1)).unwrap();
+        drop(pool); // must not hang
+    }
+}

@@ -14,7 +14,12 @@
 //! Per-job results are independent of which worker ran them (the chunk
 //! decomposition in [`super::driver::ChunkPlan`] depends only on the job
 //! and the backend batch size), so pooling changes throughput, never
-//! statistics. For intra-job parallelism see [`super::sharded`].
+//! statistics. Jobs carry a [`crate::multiplier::MultiplierSpec`], so any
+//! design the worker's backend supports — not just the paper's — flows
+//! through this service unchanged. For intra-job parallelism see
+//! [`super::sharded`]; for a pool whose workers keep their backend across
+//! jobs with intra-job sharding, see [`super::pool::WorkerPool`] (what
+//! the [`crate::api::Session`] facade runs on).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
@@ -261,7 +266,7 @@ mod tests {
         for (job, ticket) in jobs.iter().zip(pool_tickets) {
             let p = ticket.wait().unwrap();
             let s = single.eval(job.clone()).unwrap();
-            assert_eq!(p.stats, s.stats, "t={}", job.t);
+            assert_eq!(p.stats, s.stats, "design={}", job.design.name());
         }
     }
 

@@ -17,14 +17,15 @@
 //! worker or sixteen evaluated the stream. Chunks evaluated beyond the
 //! stopping point are discarded, never merged.
 //!
-//! Backends are constructed per job, not kept in a persistent pool: the
-//! non-`Send` PJRT handles cannot migrate out of the scoped worker
-//! threads that a job's lifetime bounds. That build cost is trivial for
-//! the CPU backend and amortized over a job's chunk work; a persistent
-//! shard pool for artifact-heavy backends is future work (see ROADMAP).
+//! [`run_job_sharded`] spawns scoped workers per job and builds their
+//! backends per job — the one-shot path. The persistent
+//! [`super::pool::WorkerPool`] reuses the same chunk-steal protocol and
+//! the same merge loop ([`merge_chunk_stream`]) over long-lived worker
+//! threads that keep a backend across jobs; both therefore produce
+//! identical statistics for identical jobs.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::channel;
+use std::sync::mpsc::{channel, Receiver};
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -33,8 +34,133 @@ use crate::error::metrics::ErrorStats;
 use crate::error::stream::OrderedMerger;
 
 use super::backend::EvalBackend;
+use super::convergence::Convergence;
 use super::driver::{run_job, ChunkPlan};
 use super::job::{EvalJob, JobResult};
+
+/// One in-order merge step, streamed to observers: chunk `merged - 1`
+/// just folded into the prefix.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkEvent {
+    /// Chunks folded into the in-order prefix so far.
+    pub merged: u64,
+    /// Total chunks in the job's plan (adaptive jobs may stop earlier).
+    pub n_chunks: u64,
+    /// Samples accumulated in the prefix.
+    pub samples: u64,
+}
+
+/// Fold the per-chunk result stream `rx` in chunk-id order, checking
+/// adaptive convergence on every in-order prefix and reporting each merge
+/// step to `observer`. Shared by the scoped per-job runner and the
+/// persistent worker pool — the merge decision (and therefore the result)
+/// is identical wherever the chunks were evaluated. Returns the merger
+/// plus whether the adaptive stopping rule fired (`false` for fixed
+/// workloads and for adaptive runs that exhausted their budget).
+///
+/// Error parity with the sequential driver: a chunk's eval error only
+/// fails the job when the in-order prefix actually *needs* that chunk —
+/// an adaptive job that converges on earlier chunks returns Ok exactly as
+/// a one-worker run would, and with several errored chunks the one
+/// sequential execution would hit first (lowest id) is the one reported.
+pub(crate) fn merge_chunk_stream(
+    rx: &Receiver<(u64, Result<ErrorStats>)>,
+    n: u32,
+    n_chunks: u64,
+    conv: Option<&Convergence>,
+    stop: &AtomicBool,
+    observer: &mut dyn FnMut(ChunkEvent),
+) -> Result<(OrderedMerger, bool)> {
+    enum Decision {
+        Pending,
+        Converged,
+        Failed(anyhow::Error),
+    }
+    let mut merger = OrderedMerger::new(n);
+    let mut chunk_errs: std::collections::BTreeMap<u64, anyhow::Error> =
+        std::collections::BTreeMap::new();
+    let mut decision = Decision::Pending;
+    while let Ok((id, r)) = rx.recv() {
+        if !matches!(decision, Decision::Pending) {
+            continue; // draining: result already decided
+        }
+        match r {
+            Err(e) => {
+                chunk_errs.entry(id).or_insert(e);
+            }
+            Ok(s) => merger.offer(id, s),
+        }
+        // Advance the prefix one chunk at a time so adaptive convergence
+        // sees every prefix a sequential run would see, failing the
+        // moment the prefix reaches an errored chunk.
+        loop {
+            if let Some(e) = chunk_errs.remove(&merger.merged()) {
+                decision = Decision::Failed(e);
+                stop.store(true, Ordering::Relaxed);
+                break;
+            }
+            if !merger.step() {
+                break;
+            }
+            observer(ChunkEvent {
+                merged: merger.merged(),
+                n_chunks,
+                samples: merger.prefix().count,
+            });
+            if let Some(c) = conv {
+                if c.converged(merger.prefix()) {
+                    decision = Decision::Converged;
+                    stop.store(true, Ordering::Relaxed);
+                    break;
+                }
+            }
+        }
+    }
+    match decision {
+        Decision::Failed(e) => Err(e),
+        Decision::Converged => Ok((merger, true)),
+        Decision::Pending => {
+            // Stream ended naturally. An incomplete prefix means an
+            // errored chunk (or a failed factory, id = u64::MAX with no
+            // worker left to cover the space) blocked it.
+            if merger.merged() < n_chunks {
+                if let Some((_, e)) = chunk_errs.into_iter().next() {
+                    return Err(e);
+                }
+            }
+            Ok((merger, false))
+        }
+    }
+}
+
+/// Turn a finished merger into the job's statistics, with the same
+/// accounting as the sequential driver (`batches` counts folded chunks).
+/// `converged` is the merge's adaptive stopping decision: without it,
+/// every chunk of the plan must have been folded — a worker that died
+/// mid-job (dropping its sender without an error result) must fail the
+/// job, never silently truncate it.
+pub(crate) fn finish_merge(
+    merger: OrderedMerger,
+    n_chunks: u64,
+    converged: bool,
+) -> Result<(ErrorStats, u64)> {
+    let batches = merger.merged();
+    let stats = if converged {
+        merger.into_prefix()
+    } else {
+        anyhow::ensure!(
+            merger.merged() == n_chunks,
+            "sharded run folded {} of {} chunks",
+            merger.merged(),
+            n_chunks
+        );
+        merger.finish()
+    };
+    if stats.count == 0 {
+        return Err(anyhow!("sharded run produced no samples"));
+    }
+    Ok((stats, batches))
+}
 
 /// Execute `job` across `workers` threads, each running a backend built
 /// by `factory` in-thread. With `workers == 1` this is exactly
@@ -58,10 +184,16 @@ where
     let (batch, backend_name) = {
         let probe = factory()?;
         anyhow::ensure!(
-            probe.supports(job.n),
+            probe.supports(job.n()),
             "backend {} does not support n={}",
             probe.name(),
-            job.n
+            job.n()
+        );
+        anyhow::ensure!(
+            probe.supports_design(&job.design),
+            "backend {} does not support design {}",
+            probe.name(),
+            job.design.name()
         );
         (probe.max_batch(), probe.name())
     };
@@ -75,7 +207,7 @@ where
     let stop = AtomicBool::new(false);
     let (tx, rx) = channel::<(u64, Result<ErrorStats>)>();
 
-    let merged: Result<OrderedMerger> = std::thread::scope(|scope| {
+    let merged: Result<(OrderedMerger, bool)> = std::thread::scope(|scope| {
         for _ in 0..workers {
             let tx = tx.clone();
             let (plan, next, stop) = (&plan, &next, &stop);
@@ -95,7 +227,7 @@ where
                         break;
                     }
                     plan.fill(id, &mut a, &mut b);
-                    let r = backend.eval_batch(job.n, job.t, job.fix, &a, &b);
+                    let r = backend.eval_design(&job.design, &a, &b);
                     if tx.send((id, r)).is_err() {
                         break;
                     }
@@ -104,85 +236,10 @@ where
         }
         drop(tx); // workers hold the remaining senders
 
-        // Error parity with the sequential driver: a chunk's eval error
-        // only fails the job when the in-order prefix actually *needs*
-        // that chunk — an adaptive job that converges on earlier chunks
-        // returns Ok exactly as a one-worker run would, and with several
-        // errored chunks the one sequential execution would hit first
-        // (lowest id) is the one reported.
-        enum Decision {
-            Pending,
-            Converged,
-            Failed(anyhow::Error),
-        }
-        let mut merger = OrderedMerger::new(job.n);
-        let mut chunk_errs: std::collections::BTreeMap<u64, anyhow::Error> =
-            std::collections::BTreeMap::new();
-        let mut decision = Decision::Pending;
-        while let Ok((id, r)) = rx.recv() {
-            if !matches!(decision, Decision::Pending) {
-                continue; // draining: result already decided
-            }
-            match r {
-                Err(e) => {
-                    chunk_errs.entry(id).or_insert(e);
-                }
-                Ok(s) => merger.offer(id, s),
-            }
-            // Advance the prefix one chunk at a time so adaptive
-            // convergence sees every prefix a sequential run would see,
-            // failing the moment the prefix reaches an errored chunk.
-            loop {
-                if let Some(e) = chunk_errs.remove(&merger.merged()) {
-                    decision = Decision::Failed(e);
-                    stop.store(true, Ordering::Relaxed);
-                    break;
-                }
-                if !merger.step() {
-                    break;
-                }
-                if let Some(c) = &conv {
-                    if c.converged(merger.prefix()) {
-                        decision = Decision::Converged;
-                        stop.store(true, Ordering::Relaxed);
-                        break;
-                    }
-                }
-            }
-        }
-        match decision {
-            Decision::Failed(e) => Err(e),
-            Decision::Converged => Ok(merger),
-            Decision::Pending => {
-                // Stream ended naturally. An incomplete prefix means an
-                // errored chunk (or a failed factory, id = u64::MAX with
-                // no worker left to cover the space) blocked it.
-                if merger.merged() < n_chunks {
-                    if let Some((_, e)) = chunk_errs.into_iter().next() {
-                        return Err(e);
-                    }
-                }
-                Ok(merger)
-            }
-        }
+        merge_chunk_stream(&rx, job.n(), n_chunks, conv.as_ref(), &stop, &mut |_| {})
     });
-    let merger = merged?;
-
-    let batches = merger.merged();
-    let stats = if conv.is_some() {
-        merger.into_prefix()
-    } else {
-        anyhow::ensure!(
-            merger.merged() == n_chunks,
-            "sharded run folded {} of {} chunks",
-            merger.merged(),
-            n_chunks
-        );
-        merger.finish()
-    };
-    if stats.count == 0 {
-        return Err(anyhow!("sharded run produced no samples"));
-    }
+    let (merger, converged) = merged?;
+    let (stats, batches) = finish_merge(merger, n_chunks, converged)?;
     Ok(JobResult { job: job.clone(), stats, backend: backend_name, wall: started.elapsed(), batches })
 }
 
@@ -191,6 +248,7 @@ mod tests {
     use super::*;
     use crate::coordinator::backend::CpuBackend;
     use crate::coordinator::job::WorkSpec;
+    use crate::multiplier::MultiplierSpec;
 
     fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Sync {
         || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
@@ -227,11 +285,24 @@ mod tests {
     }
 
     #[test]
+    fn non_segmented_design_bit_identical_across_worker_counts() {
+        // Cross-design sharding: a related-work baseline runs through the
+        // same chunk-steal + ordered-merge path.
+        let job = EvalJob::new(
+            MultiplierSpec::Mitchell { n: 10 },
+            WorkSpec::MonteCarlo { samples: 300_000, seed: 5 },
+        );
+        let want = sequential(&job);
+        for workers in [2usize, 5] {
+            let got = run_job_sharded(&cpu_factory(), &job, workers).unwrap();
+            assert_eq!(got.stats, want.stats, "workers={workers}");
+        }
+    }
+
+    #[test]
     fn adaptive_same_stopping_point() {
         let job = EvalJob {
-            n: 8,
-            t: 4,
-            fix: true,
+            design: MultiplierSpec::Segmented { n: 8, t: 4, fix: true },
             spec: WorkSpec::Adaptive { max_samples: 1 << 24, seed: 7, target_rel_stderr: 0.05 },
         };
         let want = sequential(&job);
@@ -336,9 +407,7 @@ mod tests {
             Ok(Box::new(Flaky { inner: CpuBackend::new(), first0 }))
         };
         let job = EvalJob {
-            n,
-            t: 4,
-            fix: true,
+            design: MultiplierSpec::Segmented { n, t: 4, fix: true },
             spec: WorkSpec::Adaptive {
                 max_samples: 5 * (1 << 16),
                 seed,

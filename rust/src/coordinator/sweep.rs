@@ -1,31 +1,41 @@
-//! Design-space sweep orchestration: the full paper grid, cached.
+//! Design-space sweep orchestration: the full paper grid — and the
+//! cross-design comparative grids — cached and sharded.
 //!
-//! A sweep enumerates every `(n, t, fix)` point of the configured design
-//! space — bit-widths × carry-chain split points × accumulation modes —
-//! and evaluates each through the sharded parallel runner
-//! ([`super::sharded::run_job_sharded`]), so per-config results are
+//! A sweep enumerates every design point of the configured space: for
+//! each bit-width, the configured [`DesignSet`] (the paper's
+//! `(n, t, fix)` grid, the accurate reference, the related-work
+//! baselines, bit-level / netlist spot checks, or all of them) under the
+//! configured workload. Every point is evaluated through the persistent
+//! [`WorkerPool`] — worker threads hold their backend across all grid
+//! points, and the chunk-ordered merge keeps per-config results
 //! bit-identical for any worker count. A result cache keyed by
-//! [`JobKey`] (config + workload + seed/sample budget) dedups repeated
-//! configs across the sweep: the `t = 0` accurate points collapse across
-//! fix modes, and re-running a grid against a warm runner costs nothing.
+//! [`JobKey`] (canonical design + workload + seed/sample budget) dedups
+//! repeated configs across the sweep: the `t = 0` accurate points
+//! collapse across fix modes *and* onto the accurate-design baseline,
+//! and re-running a grid against a warm runner costs nothing.
 
 use std::collections::HashMap;
 
 use anyhow::Result;
 
 use crate::config::Config;
+use crate::multiplier::DesignSet;
 
 use super::backend::EvalBackend;
 use super::job::{EvalJob, JobKey, JobResult, WorkSpec};
-use super::sharded::run_job_sharded;
+use super::pool::WorkerPool;
+use super::sharded::ChunkEvent;
 
 /// The sweep grid: which design points to evaluate and under which
-/// workload. Split points always cover `t ∈ 0..n` (0 = accurate) and
-/// both fix-to-1 modes, matching the paper's axes.
+/// workload. The paper set covers split points `t ∈ 0..n` (0 = accurate)
+/// and both fix-to-1 modes, matching the paper's axes; other sets add
+/// the comparative designs of Fig. 2.
 #[derive(Clone, Debug)]
 pub struct SweepGrid {
     /// Operand bit-widths (paper grid: 4, 8, 16, 32).
     pub bitwidths: Vec<u32>,
+    /// Design family swept per bit-width.
+    pub designs: DesignSet,
     /// Evaluate exhaustively for `n <=` this (capped at 16), MC above.
     pub exhaustive_max_n: u32,
     /// Force Monte-Carlo even below the exhaustive threshold.
@@ -37,20 +47,22 @@ pub struct SweepGrid {
 }
 
 impl SweepGrid {
-    /// The full paper grid from the shared [`Config`].
-    pub fn from_config(cfg: &Config) -> Self {
-        SweepGrid {
+    /// The configured grid from the shared [`Config`] (designs come from
+    /// `[sweep] designs`, default the paper set).
+    pub fn from_config(cfg: &Config) -> Result<Self, crate::error::SegmulError> {
+        Ok(SweepGrid {
             bitwidths: cfg.sweep_bitwidths.clone(),
+            designs: DesignSet::parse(&cfg.sweep_designs)?,
             exhaustive_max_n: cfg.exhaustive_max_n,
             force_mc: false,
             mc_samples: cfg.mc_samples,
             seed: cfg.seed,
-        }
+        })
     }
 
     /// A single-bit-width slice of the grid.
-    pub fn single(n: u32, cfg: &Config) -> Self {
-        SweepGrid { bitwidths: vec![n], ..Self::from_config(cfg) }
+    pub fn single(n: u32, cfg: &Config) -> Result<Self, crate::error::SegmulError> {
+        Ok(SweepGrid { bitwidths: vec![n], ..Self::from_config(cfg)? })
     }
 
     /// Workload for one bit-width.
@@ -63,14 +75,13 @@ impl SweepGrid {
     }
 
     /// Materialize the jobs, in deterministic grid order: for each
-    /// bit-width, every split point, both accumulation modes.
+    /// bit-width, every design point of the configured set (the paper
+    /// set keeps the legacy order: every split point, both modes).
     pub fn jobs(&self) -> Vec<EvalJob> {
         let mut out = Vec::new();
         for &n in &self.bitwidths {
-            for t in 0..n {
-                for fix in [false, true] {
-                    out.push(EvalJob { n, t, fix, spec: self.spec(n) });
-                }
+            for design in self.designs.specs(n) {
+                out.push(EvalJob { design, spec: self.spec(n) });
             }
         }
         out
@@ -87,14 +98,16 @@ pub struct SweepOutcome {
     pub cached: bool,
 }
 
-/// Sweep executor: sharded parallel evaluation + the result cache.
+/// Sweep executor: the persistent shard pool + the result cache.
 ///
-/// The cache is sound because one runner holds one backend factory for
-/// its whole lifetime: [`JobKey`] identity only implies identical stats
-/// for a fixed backend batch size (see its docs).
-pub struct SweepRunner<F> {
-    factory: F,
-    workers: usize,
+/// Workers are spawned once per runner and hold their backend across
+/// every grid point (replacing the old per-job backend construction of
+/// `run_job_sharded`). The cache is sound because one runner holds one
+/// backend factory for its whole lifetime: [`JobKey`] identity only
+/// implies identical stats for a fixed backend batch size (see its docs).
+pub struct SweepRunner {
+    pool: WorkerPool,
+    cache_enabled: bool,
     cache: HashMap<JobKey, JobResult>,
     /// Jobs served from the cache (no evaluation).
     pub cache_hits: u64,
@@ -102,34 +115,64 @@ pub struct SweepRunner<F> {
     pub jobs_evaluated: u64,
 }
 
-impl<F> SweepRunner<F>
-where
-    F: Fn() -> Result<Box<dyn EvalBackend>> + Sync,
-{
-    pub fn new(factory: F, workers: usize) -> Self {
-        SweepRunner {
-            factory,
-            workers: workers.max(1),
+impl SweepRunner {
+    /// Spawn the persistent pool (`workers` threads; `factory` runs once
+    /// in each worker's thread).
+    pub fn new<F>(factory: F, workers: usize) -> Result<Self>
+    where
+        F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
+    {
+        Ok(SweepRunner {
+            pool: WorkerPool::start(factory, workers)?,
+            cache_enabled: true,
             cache: HashMap::new(),
             cache_hits: 0,
             jobs_evaluated: 0,
-        }
+        })
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.pool.pool_size()
+    }
+
+    /// The persistent pool backing this runner.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Disable (or re-enable) the result cache — every job re-evaluates.
+    pub fn set_cache_enabled(&mut self, enabled: bool) {
+        self.cache_enabled = enabled;
     }
 
     /// Evaluate one job, consulting the cache first.
     pub fn run(&mut self, job: &EvalJob) -> Result<SweepOutcome> {
+        self.run_observed(job, &mut |_| {})
+    }
+
+    /// [`Self::run`], streaming in-order chunk merges to `observer`
+    /// (cache hits complete without chunk events).
+    pub fn run_observed(
+        &mut self,
+        job: &EvalJob,
+        observer: &mut dyn FnMut(ChunkEvent),
+    ) -> Result<SweepOutcome> {
         let key = job.key();
-        if let Some(hit) = self.cache.get(&key) {
-            self.cache_hits += 1;
-            return Ok(SweepOutcome { job: job.clone(), result: hit.clone(), cached: true });
+        if self.cache_enabled {
+            if let Some(hit) = self.cache.get(&key) {
+                self.cache_hits += 1;
+                // The entry may have been evaluated under an equivalent
+                // design (canonicalization); report the requested one.
+                let mut result = hit.clone();
+                result.job = job.clone();
+                return Ok(SweepOutcome { job: job.clone(), result, cached: true });
+            }
         }
-        let result = run_job_sharded(&self.factory, job, self.workers)?;
+        let result = self.pool.run_job_observed(job, observer)?;
         self.jobs_evaluated += 1;
-        self.cache.insert(key, result.clone());
+        if self.cache_enabled {
+            self.cache.insert(key, result.clone());
+        }
         Ok(SweepOutcome { job: job.clone(), result, cached: false })
     }
 
@@ -158,10 +201,16 @@ mod tests {
 
     use super::*;
     use crate::coordinator::backend::CpuBackend;
+    use crate::multiplier::MultiplierSpec;
+
+    fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static {
+        || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+    }
 
     fn tiny_grid() -> SweepGrid {
         SweepGrid {
             bitwidths: vec![4, 6],
+            designs: DesignSet::Paper,
             exhaustive_max_n: 6,
             force_mc: false,
             mc_samples: 10_000,
@@ -180,10 +229,20 @@ mod tests {
     }
 
     #[test]
+    fn cross_design_grid_enumerates_every_family() {
+        let grid = SweepGrid { designs: DesignSet::All, bitwidths: vec![4], ..tiny_grid() };
+        let jobs = grid.jobs();
+        // paper (8) + accurate (1) + baselines (5: n=4 is a power of two)
+        // + oracle (1) + netlist (1).
+        assert_eq!(jobs.len(), 16);
+        assert!(jobs.iter().any(|j| matches!(j.design, MultiplierSpec::Mitchell { .. })));
+        assert!(jobs.iter().any(|j| matches!(j.design, MultiplierSpec::Netlist { .. })));
+    }
+
+    #[test]
     fn cache_dedups_t0_modes_and_repeats() {
         let grid = tiny_grid();
-        let mut runner =
-            SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), 2);
+        let mut runner = SweepRunner::new(cpu_factory(), 2).unwrap();
         let outcomes = runner.run_grid(&grid, |_, _, _| {}).unwrap();
         assert_eq!(outcomes.len(), 20);
         // Each bit-width's (t=0, fix=true) point is served from the
@@ -199,6 +258,21 @@ mod tests {
         for (a, b) in outcomes.iter().zip(&again) {
             assert_eq!(a.result.stats, b.result.stats);
         }
+    }
+
+    #[test]
+    fn cache_dedups_accurate_design_against_t0_points() {
+        // Cross-design canonicalization: the accurate baseline shares the
+        // paper grid's t=0 entry.
+        let mut runner = SweepRunner::new(cpu_factory(), 1).unwrap();
+        let t0 = runner.run(&EvalJob::exhaustive(6, 0, true)).unwrap();
+        assert!(!t0.cached);
+        let accurate = runner
+            .run(&EvalJob::new(MultiplierSpec::Accurate { n: 6 }, WorkSpec::Exhaustive))
+            .unwrap();
+        assert!(accurate.cached, "accurate must be served from the t=0 entry");
+        assert_eq!(accurate.result.stats, t0.result.stats);
+        assert_eq!(runner.jobs_evaluated, 1);
     }
 
     #[test]
@@ -236,7 +310,7 @@ mod tests {
             Ok(Box::new(Counting { inner: CpuBackend::new(), evals: counter.clone() })
                 as Box<dyn EvalBackend>)
         };
-        let mut runner = SweepRunner::new(factory, 1);
+        let mut runner = SweepRunner::new(factory, 1).unwrap();
         let job = EvalJob::mc(8, 4, true, 50_000, 1);
         let first = runner.run(&job).unwrap();
         let after_first = evals.load(Ordering::Relaxed);
@@ -248,18 +322,42 @@ mod tests {
     }
 
     #[test]
+    fn cache_can_be_disabled() {
+        let mut runner = SweepRunner::new(cpu_factory(), 1).unwrap();
+        runner.set_cache_enabled(false);
+        let job = EvalJob::mc(8, 4, true, 20_000, 1);
+        let a = runner.run(&job).unwrap();
+        let b = runner.run(&job).unwrap();
+        assert!(!a.cached && !b.cached);
+        assert_eq!(runner.jobs_evaluated, 2);
+        assert_eq!(runner.cache_hits, 0);
+        assert_eq!(a.result.stats, b.result.stats);
+    }
+
+    #[test]
     fn grid_results_deterministic_across_worker_counts() {
         // > 2 chunks of 2^16 per config so the stealing cursor interleaves.
         let grid = SweepGrid { force_mc: true, mc_samples: 150_000, ..tiny_grid() };
         let run = |workers| {
-            let mut r =
-                SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), workers);
+            let mut r = SweepRunner::new(cpu_factory(), workers).unwrap();
             r.run_grid(&grid, |_, _, _| {}).unwrap()
         };
         let w1 = run(1);
         let w3 = run(3);
         for (a, b) in w1.iter().zip(&w3) {
-            assert_eq!(a.result.stats, b.result.stats, "n={} t={}", a.job.n, a.job.t);
+            assert_eq!(
+                a.result.stats,
+                b.result.stats,
+                "design={}",
+                a.job.design.name()
+            );
         }
+    }
+
+    #[test]
+    fn runner_backends_persist_across_grid_points() {
+        let mut runner = SweepRunner::new(cpu_factory(), 2).unwrap();
+        runner.run_grid(&tiny_grid(), |_, _, _| {}).unwrap();
+        assert_eq!(runner.pool().backend_builds(), 2, "one build per worker, ever");
     }
 }

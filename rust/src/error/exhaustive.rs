@@ -20,7 +20,9 @@ use super::stream::BatchAccumulator;
 /// Specialized on the batched word-level kernel (no dyn dispatch in the
 /// inner loop).
 pub fn exhaustive_stats(n: u32, t: u32, fix: bool) -> ErrorStats {
-    exhaustive_stats_workers(n, t, fix, default_workers())
+    // Infallible convenience: an invalid SEGMUL_WORKERS is surfaced as a
+    // typed error by the api facade / CLI; here it degrades to 1 worker.
+    exhaustive_stats_workers(n, t, fix, default_workers().unwrap_or(1))
 }
 
 /// As [`exhaustive_stats`] with an explicit worker count.

@@ -1,0 +1,131 @@
+//! The typed error taxonomy of the public API surface.
+//!
+//! Defined here in the core layer (validation lives in `multiplier::spec`,
+//! `coordinator::job`, and `util::threadpool`, all below the facade) and
+//! re-exported through [`crate::api`]. Internal machinery keeps using
+//! `anyhow` where enumerating failure shapes gains nothing, but
+//! everything exported through the facade — spec validation, builders,
+//! session startup, job execution — reports a [`SegmulError`] so callers
+//! can branch on the failure class instead of parsing strings.
+//! `SegmulError` implements [`std::error::Error`], so `?` converts it
+//! into `anyhow::Error` at the machinery boundary, and
+//! [`From<anyhow::Error>`] converts the other way at the facade boundary.
+
+use std::fmt;
+
+/// Public-surface error classes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SegmulError {
+    /// Invalid configuration: environment variables (`SEGMUL_WORKERS`),
+    /// config-file values, or builder settings.
+    Config(String),
+    /// An invalid [`crate::multiplier::spec::MultiplierSpec`].
+    Spec {
+        /// Display name of the offending design.
+        design: String,
+        reason: String,
+    },
+    /// An invalid workload (sample budget, exhaustive range, CI target).
+    Workload(String),
+    /// Backend construction or capability failure.
+    Backend(String),
+    /// Evaluation failed at run time.
+    Eval(String),
+    /// Report / persistence I/O failure.
+    Io(String),
+}
+
+impl SegmulError {
+    pub fn config(msg: impl Into<String>) -> Self {
+        SegmulError::Config(msg.into())
+    }
+
+    pub fn spec(design: impl Into<String>, reason: impl Into<String>) -> Self {
+        SegmulError::Spec { design: design.into(), reason: reason.into() }
+    }
+
+    pub fn workload(msg: impl Into<String>) -> Self {
+        SegmulError::Workload(msg.into())
+    }
+
+    pub fn backend(msg: impl Into<String>) -> Self {
+        SegmulError::Backend(msg.into())
+    }
+
+    /// Short class tag (stable across message rewording).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            SegmulError::Config(_) => "config",
+            SegmulError::Spec { .. } => "spec",
+            SegmulError::Workload(_) => "workload",
+            SegmulError::Backend(_) => "backend",
+            SegmulError::Eval(_) => "eval",
+            SegmulError::Io(_) => "io",
+        }
+    }
+}
+
+impl fmt::Display for SegmulError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SegmulError::Config(m) => write!(f, "configuration error: {m}"),
+            SegmulError::Spec { design, reason } => {
+                write!(f, "invalid design {design}: {reason}")
+            }
+            SegmulError::Workload(m) => write!(f, "invalid workload: {m}"),
+            SegmulError::Backend(m) => write!(f, "backend error: {m}"),
+            SegmulError::Eval(m) => write!(f, "evaluation error: {m}"),
+            SegmulError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for SegmulError {}
+
+/// Machinery errors crossing the facade boundary default to the `Eval`
+/// class. The vendored `anyhow` shim flattens errors to strings (no
+/// downcast), so facade entry points validate **before** handing work to
+/// anyhow-typed machinery — this conversion only ever sees genuine
+/// run-time evaluation failures.
+impl From<anyhow::Error> for SegmulError {
+    fn from(e: anyhow::Error) -> Self {
+        SegmulError::Eval(e.to_string())
+    }
+}
+
+impl From<std::io::Error> for SegmulError {
+    fn from(e: std::io::Error) -> Self {
+        SegmulError::Io(e.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_class_and_message() {
+        let e = SegmulError::config("SEGMUL_WORKERS=0");
+        assert!(e.to_string().contains("configuration"));
+        assert!(e.to_string().contains("SEGMUL_WORKERS=0"));
+        assert_eq!(e.kind(), "config");
+        let e = SegmulError::spec("segmul(n=8,t=9)", "t out of range");
+        assert!(e.to_string().contains("segmul(n=8,t=9)"));
+        assert_eq!(e.kind(), "spec");
+    }
+
+    #[test]
+    fn converts_both_ways_across_the_anyhow_boundary() {
+        // typed -> anyhow (machinery `?`)
+        fn machinery() -> anyhow::Result<()> {
+            Err(SegmulError::workload("samples must be positive"))?;
+            Ok(())
+        }
+        let msg = machinery().unwrap_err().to_string();
+        assert!(msg.contains("samples must be positive"), "{msg}");
+        // anyhow -> typed (facade boundary)
+        let typed = SegmulError::from(anyhow::anyhow!("backend exploded"));
+        assert_eq!(typed.kind(), "eval");
+        assert!(typed.to_string().contains("backend exploded"));
+    }
+}

@@ -16,15 +16,20 @@
 //!   form, and latency/adder-count formulas from §III/§IV.
 //! * [`probprop`]    — the §V-B polynomial-time probability-propagation
 //!   estimator for ER (the remedy to Theorem 1/2's #P-completeness).
+//! * [`fault`]       — the typed [`SegmulError`] taxonomy the public
+//!   [`crate::api`] facade reports (defined here so the layers below the
+//!   facade can construct it without depending upward).
 
 pub mod closed_form;
 pub mod exhaustive;
+pub mod fault;
 pub mod metrics;
 pub mod montecarlo;
 pub mod probprop;
 pub mod stream;
 
 pub use exhaustive::exhaustive_stats;
+pub use fault::SegmulError;
 pub use metrics::{ErrorMetrics, ErrorStats};
 pub use montecarlo::{mc_stats, InputDist, McConfig};
 pub use stream::BatchAccumulator;

@@ -104,7 +104,10 @@ impl McConfig {
             chunk: 1 << 16,
             dist_a: InputDist::Uniform,
             dist_b: InputDist::Uniform,
-            workers: default_workers(),
+            // Infallible convenience: an invalid SEGMUL_WORKERS is
+            // surfaced as a typed error by the api facade / CLI; here it
+            // degrades to a single worker.
+            workers: default_workers().unwrap_or(1),
         }
     }
 }

@@ -14,6 +14,11 @@
 //!   ([`error`]), and an asynchronous evaluation service that batches work
 //!   onto the AOT-compiled PJRT executables ([`coordinator`], [`runtime`]).
 //!
+//! Library users start at the [`api`] facade: design-agnostic
+//! [`api::MultiplierSpec`]s, builder-configured [`api::Session`]s over a
+//! persistent worker pool, typed [`api::SegmulError`]s, and streaming
+//! progress callbacks.
+//!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 //!
@@ -21,6 +26,7 @@
 //! paper-vs-measured results.
 
 
+pub mod api;
 pub mod bench;
 pub mod config;
 pub mod coordinator;

@@ -1,8 +1,14 @@
 //! `segmul` — CLI for the segmented-carry sequential multiplier platform.
 //!
+//! Built on the [`segmul::api`] facade: a design-agnostic
+//! [`MultiplierSpec`], builder-configured [`Session`]s over a persistent
+//! worker pool (backends built once per worker, never per job), typed
+//! errors, and streaming progress.
+//!
 //! Subcommands:
-//!   eval     — evaluate one (n, t, fix) configuration's error metrics
-//!   sweep    — sweep t for a bit-width, printing the metric table
+//!   eval     — evaluate one design configuration's error metrics
+//!   sweep    — design-space sweep (paper grid and cross-design sets),
+//!              writing sweep.csv + BENCH_sweep.json
 //!   hw       — hardware figures (FPGA + ASIC models) for one config
 //!   figures  — regenerate paper artifacts (fig2|mae|fig3a|fig3b|probprop|
 //!              headline|seqcomb|all) into the results directory
@@ -16,15 +22,16 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use segmul::config::Config;
-use segmul::coordinator::{
-    run_job, CpuBackend, EvalBackend, EvalJob, PjrtBackend, SweepGrid, SweepRunner, WorkSpec,
+use segmul::api::{
+    BackendChoice, DesignSet, EvalJob, JobResult, MultiplierSpec, Session, SweepGrid,
 };
+use segmul::config::Config;
 use segmul::error::probprop;
 use segmul::netlist::generators::seq_mult::seq_mult;
 use segmul::report;
 use segmul::tech::{measure_activity, AsicModel, FpgaModel};
 use segmul::util::cli::Args;
+use segmul::util::threadpool::default_workers;
 
 fn main() {
     if let Err(e) = run() {
@@ -56,29 +63,68 @@ fn load_config(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
-fn make_backend(args: &Args, cfg: &Config) -> Result<Box<dyn EvalBackend>> {
-    backend_factory(args, cfg)?()
+/// The single worker-count policy: `--workers` (0 is rejected), else
+/// the config (which honors `SEGMUL_WORKERS`; an invalid env override
+/// is a typed configuration error, not a silent clamp).
+fn workers_from(args: &Args, cfg: &Config) -> Result<usize> {
+    match args.opt_u64("workers")? {
+        Some(0) => bail!("--workers 0: at least one worker is required"),
+        Some(w) => Ok(w as usize),
+        None => {
+            // Surface an invalid SEGMUL_WORKERS before any work runs
+            // (Config::default falls back silently to stay infallible).
+            let _ = default_workers()?;
+            Ok(cfg.workers)
+        }
+    }
 }
 
-fn job_from_args(args: &Args, cfg: &Config, n: u32, t: u32) -> Result<EvalJob> {
+/// The single backend-selection policy: `--backend cpu|pjrt`, else PJRT
+/// exactly when artifacts exist.
+fn backend_choice(args: &Args, cfg: &Config) -> Result<BackendChoice> {
+    Ok(match args.opt("backend") {
+        Some("cpu") => BackendChoice::Cpu,
+        Some("pjrt") => BackendChoice::Pjrt(cfg.artifacts_dir.clone()),
+        Some(other) => bail!("unknown backend {other:?} (cpu|pjrt)"),
+        None => {
+            if !cfg.artifacts_dir.join("manifest.json").exists() {
+                eprintln!("note: no artifacts found, using cpu backend");
+                BackendChoice::Cpu
+            } else {
+                BackendChoice::Auto(cfg.artifacts_dir.clone())
+            }
+        }
+    })
+}
+
+/// Build the session every evaluating subcommand runs on: persistent
+/// worker pool, the given backend, session-wide seed policy.
+fn make_session(choice: BackendChoice, cfg: &Config, workers: usize) -> Result<Session> {
+    Ok(Session::builder()
+        .workers(workers)
+        .backend(choice)
+        .seed(cfg.seed)
+        .build()?)
+}
+
+fn job_from_args(args: &Args, cfg: &Config, session: &Session, n: u32, t: u32) -> Result<EvalJob> {
     let fix = args.flag("fix");
-    let spec = if args.flag("exhaustive") || (n <= cfg.exhaustive_max_n && !args.flag("mc")) {
-        WorkSpec::Exhaustive
+    let builder = session.job(MultiplierSpec::Segmented { n, t, fix });
+    let builder = if args.flag("exhaustive") || (n <= cfg.exhaustive_max_n && !args.flag("mc")) {
+        builder.exhaustive()
     } else if let Some(target) = args.opt_f64("target-stderr")? {
-        WorkSpec::Adaptive { max_samples: cfg.mc_samples, seed: cfg.seed, target_rel_stderr: target }
+        builder.adaptive(cfg.mc_samples, target)
     } else {
-        WorkSpec::MonteCarlo { samples: cfg.mc_samples, seed: cfg.seed }
+        builder.monte_carlo(cfg.mc_samples)
     };
-    Ok(EvalJob { n, t, fix, spec })
+    Ok(builder.build()?)
 }
 
-fn print_metrics(job: &EvalJob, result: &segmul::coordinator::JobResult) {
+fn print_metrics(job: &EvalJob, result: &JobResult) {
     let m = result.metrics();
     println!(
-        "n={} t={} fix={} backend={} samples={} ({} batches, {:.2} Mpairs/s)",
-        job.n,
-        job.t,
-        job.fix,
+        "{} backend={} samples={} ({} batches, {:.2} Mpairs/s)",
+        job.design.name(),
         result.backend,
         m.samples,
         result.batches,
@@ -100,84 +146,74 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let n = args.req_u32("n")?;
     let t = args.opt_u32("t")?.unwrap_or(n / 2);
-    let mut backend = make_backend(args, &cfg)?;
-    let job = job_from_args(args, &cfg, n, t)?;
-    let result = run_job(backend.as_mut(), &job)?;
+    let workers = workers_from(args, &cfg)?;
+    let mut session = make_session(backend_choice(args, &cfg)?, &cfg, workers)?;
+    let job = job_from_args(args, &cfg, &session, n, t)?;
+    let result = session.run(&job)?;
     print_metrics(&job, &result);
     Ok(())
 }
 
-/// The single worker-count policy: `--workers` (clamped to ≥ 1), else
-/// the config (which itself honors `SEGMUL_WORKERS`).
-fn workers_from(args: &Args, cfg: &Config) -> Result<usize> {
-    Ok(match args.opt_u64("workers")? {
-        Some(w) => (w as usize).max(1),
-        None => cfg.workers,
-    })
-}
-
-/// The single backend-selection policy (`--backend cpu|pjrt`, else PJRT
-/// when artifacts exist), returned as a shareable factory: the sharded
-/// runner and the service pool build one backend per worker thread from
-/// it, and [`make_backend`] calls it once.
-fn backend_factory(
-    args: &Args,
-    cfg: &Config,
-) -> Result<impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static> {
-    let artifacts = cfg.artifacts_dir.clone();
-    let use_cpu = match args.opt("backend") {
-        Some("cpu") => true,
-        Some("pjrt") => false,
-        Some(other) => bail!("unknown backend {other:?} (cpu|pjrt)"),
-        None => {
-            if !artifacts.join("manifest.json").exists() {
-                eprintln!("note: no artifacts found, using cpu backend");
-                true
-            } else {
-                false
-            }
-        }
-    };
-    Ok(move || -> Result<Box<dyn EvalBackend>> {
-        if use_cpu {
-            Ok(Box::new(CpuBackend::new()))
-        } else {
-            Ok(Box::new(PjrtBackend::load(&artifacts)?))
-        }
-    })
-}
-
-/// Run the design-space sweep: the full paper grid by default, or a
-/// single bit-width slice with `--n`. Chunks of every config are sharded
-/// across workers (`--workers` / `SEGMUL_WORKERS` / config) with a
-/// deterministic merge, so results are bit-identical for any worker
-/// count; repeated configs are served from the result cache.
+/// Run the design-space sweep: the paper grid by default, a cross-design
+/// comparative grid with `--designs all` (paper × accurate × baselines ×
+/// oracle/netlist spot checks), or a single bit-width slice with `--n`.
+/// Chunks of every config are sharded across the session's persistent
+/// workers with a deterministic merge, so results are bit-identical for
+/// any worker count; repeated and provably-equivalent configs are served
+/// from the canonical result cache.
 fn cmd_sweep(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let workers = workers_from(args, &cfg)?;
     let mut grid = match args.opt_u32("n")? {
-        Some(n) => SweepGrid::single(n, &cfg),
-        None => SweepGrid::from_config(&cfg),
+        Some(n) => SweepGrid::single(n, &cfg)?,
+        None => SweepGrid::from_config(&cfg)?,
     };
+    if let Some(designs) = args.opt("designs") {
+        grid.designs = DesignSet::parse(designs)?;
+    }
     if args.flag("mc") {
         grid.force_mc = true;
     }
-    let factory = backend_factory(args, &cfg)?;
-    let mut runner = SweepRunner::new(factory, workers);
+    // Cross-design grids include designs with no PJRT lowering; only the
+    // CPU backend evaluates those. Fall back silently-but-audibly under
+    // Auto selection, and reject an explicit --backend pjrt up front
+    // rather than failing mid-sweep.
+    let mut choice = backend_choice(args, &cfg)?;
+    if grid.jobs().iter().any(|j| !j.design.has_segmented_lowering()) {
+        match choice {
+            BackendChoice::Auto(_) => {
+                eprintln!(
+                    "note: design set '{}' includes designs without PJRT lowerings; \
+                     using cpu backend",
+                    grid.designs.name()
+                );
+                choice = BackendChoice::Cpu;
+            }
+            BackendChoice::Pjrt(_) => bail!(
+                "--backend pjrt cannot evaluate design set '{}': only the segmented \
+                 and accurate designs have PJRT lowerings (use --backend cpu)",
+                grid.designs.name()
+            ),
+            BackendChoice::Cpu => {}
+        }
+    }
+    let mut session = make_session(choice, &cfg, workers)?;
     let total = grid.jobs().len();
     println!(
-        "sweep: {} configs over n ∈ {:?} ({} workers, seed {})",
-        total, grid.bitwidths, workers, grid.seed
+        "sweep: {} configs over n ∈ {:?}, designs={} ({} workers, seed {})",
+        total,
+        grid.bitwidths,
+        grid.designs.name(),
+        session.workers(),
+        grid.seed
     );
     let started = std::time::Instant::now();
-    let outcomes = runner.run_grid(&grid, |i, total, o| {
+    let outcomes = session.run_grid(&grid, |i, total, o| {
         let m = o.result.metrics();
         println!(
-            "  [{:>3}/{total}] n={:>2} t={:>2} fix={:<5} {:>10} samples  ER={:.6}  MED={:<12.4} {}",
+            "  [{:>3}/{total}] {:<24} {:>10} samples  ER={:.6}  MED={:<12.4} {}",
             i + 1,
-            o.job.n,
-            o.job.t,
-            o.job.fix,
+            o.job.design.name(),
             m.samples,
             m.er,
             m.med_abs,
@@ -191,22 +227,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let wall = started.elapsed();
     println!("\n{}", report::sweep::sweep_table(&outcomes).to_text());
     let info = report::sweep::SweepRunInfo {
-        workers,
-        cache_hits: runner.cache_hits,
-        jobs_evaluated: runner.jobs_evaluated,
+        workers: session.workers(),
+        cache_hits: session.cache_hits(),
+        jobs_evaluated: session.jobs_evaluated(),
         wall,
-        // Every grid point ran on the same selection policy; the first
-        // result carries the name (no throwaway backend build needed).
-        backend: outcomes.first().map(|o| o.result.backend).unwrap_or("cpu").to_string(),
+        backend: session.backend_name().to_string(),
     };
     let (csv_path, json_path) = report::sweep::write_sweep_reports(&cfg.results_dir, &outcomes, &info)?;
     println!(
-        "{} configs in {:.2} s ({} evaluated, {} cache hits, {} workers)",
+        "{} configs in {:.2} s ({} evaluated, {} cache hits, {} workers, {} backend builds)",
         total,
         wall.as_secs_f64(),
-        runner.jobs_evaluated,
-        runner.cache_hits,
-        workers
+        session.jobs_evaluated(),
+        session.cache_hits(),
+        session.workers(),
+        session.backend_builds()
     );
     println!("wrote {csv_path:?} and {json_path:?}");
     Ok(())
@@ -245,7 +280,9 @@ fn cmd_hw(args: &Args) -> Result<()> {
 fn cmd_figures(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
-    let mut backend = make_backend(args, &cfg)?;
+    // The figure generators drive a backend directly (their tables mix
+    // simulation with closed-form columns).
+    let mut backend = backend_choice(args, &cfg)?.into_factory()()?;
     let run = |name: &str, which: &str| which == "all" || which == name;
     if run("fig2", which) {
         println!("== Fig. 2 (error metrics) ==");
@@ -287,13 +324,14 @@ fn cmd_figures(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use segmul::coordinator::EvalService;
+    use segmul::api::EvalService;
     let cfg = load_config(args)?;
     let jobs = args.opt_u64("jobs")?.unwrap_or(16);
     let n = args.opt_u32("n")?.unwrap_or(16);
     let samples = cfg.mc_samples;
     let workers = workers_from(args, &cfg)?;
-    let svc = EvalService::start_pool(backend_factory(args, &cfg)?, workers)?;
+    let factory = backend_choice(args, &cfg)?.into_factory();
+    let svc = EvalService::start_pool(factory, workers)?;
     println!(
         "service up ({} executors); submitting {jobs} jobs (n={n}, {samples} samples each)",
         svc.pool_size()
@@ -309,9 +347,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let r = ticket.wait()?;
         let m = r.metrics();
         println!(
-            "  job {i:>3}: t={} fix={} ER={:.5} MED={:.2} ({:.1} ms)",
-            r.job.t,
-            r.job.fix,
+            "  job {i:>3}: {} ER={:.5} MED={:.2} ({:.1} ms)",
+            r.job.design.name(),
             m.er,
             m.med_abs,
             r.wall.as_secs_f64() * 1e3
@@ -345,8 +382,9 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 fn usage() -> &'static str {
     "usage: segmul <eval|sweep|hw|figures|serve|estimate> [options]
   eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
-  sweep    [--n N] [--mc] [--workers W] [--samples S] [--seed S] [--results DIR]
-           (no --n: full paper grid; writes sweep.csv + BENCH_sweep.json)
+  sweep    [--n N] [--mc] [--designs paper|accurate|baselines|oracle|netlist|all]
+           [--workers W] [--samples S] [--seed S] [--results DIR]
+           (no --n: full configured grid; writes sweep.csv + BENCH_sweep.json)
   hw       --n N [--t T] [--hw-vectors V]
   figures  [fig2|mae|fig3a|fig3b|probprop|headline|seqcomb|all] [--results DIR]
   serve    [--jobs J] [--n N] [--workers W] [--backend cpu|pjrt]

@@ -11,6 +11,9 @@
 //! * [`baselines`] — re-implemented approximate multipliers from the
 //!   related work plotted in Fig. 2 (truncation / broken-array, Mitchell's
 //!   logarithmic multiplier, Kulkarni's 2x2-block multiplier).
+//! * [`spec`] — the design-agnostic [`MultiplierSpec`] registry: every
+//!   implemented design as plain hashable data, with canonicalization for
+//!   cache dedup and [`spec::DesignSet`] naming the sweepable families.
 //! * [`batch`] — the batched evaluation kernels: [`batch::BatchMultiplier`]
 //!   evaluates operand *slices* with a monomorphized, branch-free,
 //!   4-wide-unrolled inner loop (one virtual call per slice instead of one
@@ -22,11 +25,13 @@
 pub mod baselines;
 pub mod batch;
 pub mod bitlevel;
+pub mod spec;
 pub mod wide;
 pub mod wordlevel;
 
 pub use batch::{approx_seq_mul_batch, exact_mul_batch, BatchMultiplier, ScalarBatch};
 pub use bitlevel::approx_seq_mul_bitlevel;
+pub use spec::{DesignSet, MultiplierSpec};
 pub use wide::U512;
 pub use wordlevel::{approx_seq_mul, approx_seq_mul_u128, approx_seq_mul_wide, exact_mul};
 

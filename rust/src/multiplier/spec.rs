@@ -1,0 +1,601 @@
+//! Design-agnostic multiplier specification: the registry the public API
+//! sweeps, caches, and shards over.
+//!
+//! [`MultiplierSpec`] is a plain-data description of every multiplier the
+//! crate implements — the paper's segmented sequential design, the
+//! accurate reference, each related-work baseline ([`super::baselines`]),
+//! the bit-level `Ŝ/Ĉ` oracle ([`super::bitlevel`]), and the gate-level
+//! netlist simulator ([`crate::netlist::generators::seq_mult`]). It is
+//! `Copy + Eq + Hash`, so any design is a cache / dedup key; evaluation
+//! machinery turns it into a concrete [`BatchMultiplier`] with
+//! [`MultiplierSpec::build_batch`].
+//!
+//! [`MultiplierSpec::canonical`] generalizes the coordinator's old
+//! `t = 0` fix-mode dedup: configurations that provably compute the same
+//! product function for every operand pair map to one representative, so
+//! the sweep cache collapses them (`t = 0` segmented ≡ accurate, `k = 0`
+//! truncation ≡ accurate, `hbl = 0` broken-array ≡ truncation, ...).
+//!
+//! [`DesignSet`] names the sweep families the CLI exposes
+//! (`segmul sweep --designs all`): the paper grid, the accurate
+//! reference, the Fig. 2 baselines, and bit-level / netlist spot checks.
+
+use crate::error::SegmulError;
+use crate::netlist::generators::seq_mult::{run_batch, seq_mult, SeqMultCircuit};
+use crate::netlist::sim::SeqSim;
+
+use super::baselines::{BrokenArrayMul, Kulkarni2x2, MitchellLog, TruncatedMul};
+use super::batch::BatchMultiplier;
+use super::bitlevel::approx_seq_mul_bitlevel;
+use super::wide::U512;
+use super::{AccurateMul, Multiplier, SegmentedSeqMul};
+
+/// Every implemented multiplier design, as plain hashable data.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MultiplierSpec {
+    /// The paper's accuracy-configurable segmented-carry sequential
+    /// multiplier (word-level fast path; PJRT-lowerable).
+    Segmented { n: u32, t: u32, fix: bool },
+    /// The exact reference multiplier.
+    Accurate { n: u32 },
+    /// Vertical partial-product truncation (columns `< k` dropped).
+    Truncated { n: u32, k: u32 },
+    /// Broken-array multiplier (rows `< hbl`, columns `< vbl` dropped).
+    BrokenArray { n: u32, hbl: u32, vbl: u32 },
+    /// Mitchell's logarithmic multiplier.
+    Mitchell { n: u32 },
+    /// Kulkarni's underdesigned 2×2-block multiplier (`n` a power of two).
+    Kulkarni { n: u32 },
+    /// The paper's Boolean `Ŝ/Ĉ` recurrences — the bit-level oracle.
+    BitLevel { n: u32, t: u32, fix: bool },
+    /// The generated gate-level netlist, simulated cycle-accurately
+    /// (64 operand pairs per bit-parallel pass).
+    Netlist { n: u32, t: u32, fix: bool },
+}
+
+impl MultiplierSpec {
+    /// Operand bit-width.
+    pub fn n(&self) -> u32 {
+        match *self {
+            MultiplierSpec::Segmented { n, .. }
+            | MultiplierSpec::Accurate { n }
+            | MultiplierSpec::Truncated { n, .. }
+            | MultiplierSpec::BrokenArray { n, .. }
+            | MultiplierSpec::Mitchell { n }
+            | MultiplierSpec::Kulkarni { n }
+            | MultiplierSpec::BitLevel { n, .. }
+            | MultiplierSpec::Netlist { n, .. } => n,
+        }
+    }
+
+    /// Carry-chain split point, for the designs that have one.
+    pub fn split_point(&self) -> Option<u32> {
+        match *self {
+            MultiplierSpec::Segmented { t, .. }
+            | MultiplierSpec::BitLevel { t, .. }
+            | MultiplierSpec::Netlist { t, .. } => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Fix-to-1 compensation mode, for the designs that have one.
+    pub fn fix_mode(&self) -> Option<bool> {
+        match *self {
+            MultiplierSpec::Segmented { fix, .. }
+            | MultiplierSpec::BitLevel { fix, .. }
+            | MultiplierSpec::Netlist { fix, .. } => Some(fix),
+            _ => None,
+        }
+    }
+
+    /// Display name (matches the underlying model's `Multiplier::name`).
+    pub fn name(&self) -> String {
+        fn fx(fix: bool) -> &'static str {
+            if fix {
+                ",fix"
+            } else {
+                ""
+            }
+        }
+        match *self {
+            MultiplierSpec::Segmented { n, t, fix } => format!("segmul(n={n},t={t}{})", fx(fix)),
+            MultiplierSpec::Accurate { n } => format!("accurate(n={n})"),
+            MultiplierSpec::Truncated { n, k } => format!("trunc(n={n},k={k})"),
+            MultiplierSpec::BrokenArray { n, hbl, vbl } => {
+                format!("bam(n={n},hbl={hbl},vbl={vbl})")
+            }
+            MultiplierSpec::Mitchell { n } => format!("mitchell(n={n})"),
+            MultiplierSpec::Kulkarni { n } => format!("kulkarni(n={n})"),
+            MultiplierSpec::BitLevel { n, t, fix } => format!("bitlevel(n={n},t={t}{})", fx(fix)),
+            MultiplierSpec::Netlist { n, t, fix } => format!("netlist(n={n},t={t}{})", fx(fix)),
+        }
+    }
+
+    /// Validate the design parameters.
+    pub fn validate(&self) -> Result<(), SegmulError> {
+        let n = self.n();
+        if !(1..=32).contains(&n) {
+            return Err(SegmulError::spec(self.name(), format!("n={n} out of range 1..=32")));
+        }
+        match *self {
+            MultiplierSpec::Segmented { t, .. }
+            | MultiplierSpec::BitLevel { t, .. }
+            | MultiplierSpec::Netlist { t, .. } => {
+                if t >= n {
+                    return Err(SegmulError::spec(
+                        self.name(),
+                        format!("split point t={t} must satisfy 0 <= t < n={n}"),
+                    ));
+                }
+            }
+            MultiplierSpec::Truncated { k, .. } => {
+                if k > n {
+                    return Err(SegmulError::spec(self.name(), format!("k={k} exceeds n={n}")));
+                }
+            }
+            MultiplierSpec::BrokenArray { hbl, vbl, .. } => {
+                if hbl > n || vbl > n {
+                    return Err(SegmulError::spec(
+                        self.name(),
+                        format!("break lines (hbl={hbl}, vbl={vbl}) exceed n={n}"),
+                    ));
+                }
+            }
+            MultiplierSpec::Kulkarni { .. } => {
+                if !n.is_power_of_two() || n < 2 {
+                    return Err(SegmulError::spec(
+                        self.name(),
+                        format!("n={n} must be a power of two >= 2"),
+                    ));
+                }
+            }
+            MultiplierSpec::Accurate { .. } | MultiplierSpec::Mitchell { .. } => {}
+        }
+        Ok(())
+    }
+
+    /// The canonical cache representative of this design: specs whose
+    /// product function is provably identical for **every** operand pair
+    /// map to one value, so [`crate::coordinator::JobKey`]s collapse and
+    /// the sweep cache serves them from one entry.
+    ///
+    /// * `Segmented { t: 0 }` (either fix mode — the zero-bit LSP adder
+    ///   can never raise the compensated carry) is the accurate design.
+    /// * `Truncated { k: 0 }` drops nothing: accurate.
+    /// * `BrokenArray { hbl: 0 }` is exactly `Truncated { k: vbl }`.
+    /// * `BitLevel` / `Netlist` at `t = 0` canonicalize only their dead
+    ///   `fix` flag: they stay distinct families on purpose, because
+    ///   evaluating the oracle / the gate-level netlist *is* the point of
+    ///   requesting them.
+    pub fn canonical(&self) -> MultiplierSpec {
+        match *self {
+            MultiplierSpec::Segmented { n, t: 0, .. } => MultiplierSpec::Accurate { n },
+            MultiplierSpec::Truncated { n, k: 0 } => MultiplierSpec::Accurate { n },
+            MultiplierSpec::BrokenArray { n, hbl: 0, vbl } => {
+                MultiplierSpec::Truncated { n, k: vbl }.canonical()
+            }
+            MultiplierSpec::BitLevel { n, t: 0, .. } => {
+                MultiplierSpec::BitLevel { n, t: 0, fix: false }
+            }
+            MultiplierSpec::Netlist { n, t: 0, .. } => {
+                MultiplierSpec::Netlist { n, t: 0, fix: false }
+            }
+            other => other,
+        }
+    }
+
+    /// Whether the paper's segmented fast path evaluates this design
+    /// (everything else goes through the generic batched adapter).
+    pub fn is_segmented(&self) -> bool {
+        matches!(self, MultiplierSpec::Segmented { .. })
+    }
+
+    /// Whether this design is covered by the segmented kernel family that
+    /// the PJRT artifacts lower (`Segmented`, plus `Accurate` — its
+    /// `t = 0` point). Everything else needs a backend with generic
+    /// design support, i.e. the CPU backend.
+    pub fn has_segmented_lowering(&self) -> bool {
+        matches!(
+            self,
+            MultiplierSpec::Segmented { .. } | MultiplierSpec::Accurate { .. }
+        )
+    }
+
+    /// Construct the batched evaluator for this design. The spec is
+    /// validated first, so the error surface is typed; construction cost
+    /// ranges from trivial (word-level models) to a full netlist build —
+    /// backends cache the result per spec (see
+    /// [`crate::coordinator::CpuBackend`]).
+    pub fn build_batch(&self) -> Result<Box<dyn BatchMultiplier>, SegmulError> {
+        self.validate()?;
+        Ok(match *self {
+            MultiplierSpec::Segmented { n, t, fix } => Box::new(SegmentedSeqMul::new(n, t, fix)),
+            MultiplierSpec::Accurate { n } => Box::new(AccurateMul { n }),
+            MultiplierSpec::Truncated { n, k } => {
+                Box::new(OwnedScalarBatch(TruncatedMul { n, k }))
+            }
+            MultiplierSpec::BrokenArray { n, hbl, vbl } => {
+                Box::new(OwnedScalarBatch(BrokenArrayMul { n, hbl, vbl }))
+            }
+            MultiplierSpec::Mitchell { n } => Box::new(OwnedScalarBatch(MitchellLog { n })),
+            MultiplierSpec::Kulkarni { n } => Box::new(OwnedScalarBatch(Kulkarni2x2 { n })),
+            MultiplierSpec::BitLevel { n, t, fix } => {
+                Box::new(OwnedScalarBatch(BitLevelMul { n, t, fix }))
+            }
+            MultiplierSpec::Netlist { n, t, fix } => Box::new(NetlistMul::new(n, t, fix)),
+        })
+    }
+
+    /// One spec of every design family (used by registry round-trip
+    /// tests and documentation).
+    pub fn registry_examples(n: u32) -> Vec<MultiplierSpec> {
+        vec![
+            MultiplierSpec::Segmented { n, t: n / 2, fix: true },
+            MultiplierSpec::Accurate { n },
+            MultiplierSpec::Truncated { n, k: n / 4 },
+            MultiplierSpec::BrokenArray { n, hbl: n / 4, vbl: n / 2 },
+            MultiplierSpec::Mitchell { n },
+            MultiplierSpec::Kulkarni { n },
+            MultiplierSpec::BitLevel { n, t: n / 2, fix: true },
+            MultiplierSpec::Netlist { n, t: n / 2, fix: true },
+        ]
+    }
+}
+
+/// Scalar model of the paper's Boolean recurrences, adapted to the
+/// [`Multiplier`] trait so the oracle can be swept like any design.
+#[derive(Clone, Copy, Debug)]
+struct BitLevelMul {
+    n: u32,
+    t: u32,
+    fix: bool,
+}
+
+impl Multiplier for BitLevelMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn mul(&self, a: u64, b: u64) -> u64 {
+        approx_seq_mul_bitlevel(a, b, self.n, self.t, self.fix)
+    }
+
+    fn name(&self) -> String {
+        format!("bitlevel(n={},t={}{})", self.n, self.t, if self.fix { ",fix" } else { "" })
+    }
+}
+
+/// Owning counterpart of [`super::batch::ScalarBatch`]: runs a scalar
+/// [`Multiplier`] under the batched interface (one call per pair).
+struct OwnedScalarBatch<M: Multiplier>(M);
+
+impl<M: Multiplier> BatchMultiplier for OwnedScalarBatch<M> {
+    fn n(&self) -> u32 {
+        self.0.n()
+    }
+
+    fn name(&self) -> String {
+        self.0.name()
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+        assert_eq!(a.len(), out.len(), "output slice must match operand length");
+        for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+            *o = self.0.mul(x, y);
+        }
+    }
+}
+
+/// Gate-level netlist-backed batch multiplier: simulates the generated
+/// sequential circuit cycle-accurately, 64 operand pairs per bit-parallel
+/// pass. The circuit is built once (in [`MultiplierSpec::build_batch`] —
+/// backends cache it per spec); the simulator is re-created per call and
+/// reset per 64-lane group, so products are state-independent.
+pub struct NetlistMul {
+    c: SeqMultCircuit,
+    fix: bool,
+}
+
+impl NetlistMul {
+    pub fn new(n: u32, t: u32, fix: bool) -> Self {
+        NetlistMul { c: seq_mult(n, t, fix && t >= 1), fix }
+    }
+}
+
+impl BatchMultiplier for NetlistMul {
+    fn n(&self) -> u32 {
+        self.c.n
+    }
+
+    fn name(&self) -> String {
+        MultiplierSpec::Netlist { n: self.c.n, t: self.c.t, fix: self.fix }.name()
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+        assert_eq!(a.len(), out.len(), "output slice must match operand length");
+        let mut sim = SeqSim::new(&self.c.nl);
+        for ((ca, cb), co) in a.chunks(64).zip(b.chunks(64)).zip(out.chunks_mut(64)) {
+            sim.reset();
+            let aw: Vec<U512> = ca.iter().map(|&x| U512::from_u64(x)).collect();
+            let bw: Vec<U512> = cb.iter().map(|&x| U512::from_u64(x)).collect();
+            let prods = run_batch(&self.c, &mut sim, &aw, &bw, self.fix);
+            for (o, p) in co.iter_mut().zip(&prods) {
+                // n <= 32: the 2n-bit product fits the low limb.
+                *o = p.limb(0);
+            }
+        }
+    }
+}
+
+/// A named family of design points, swept per bit-width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DesignSet {
+    /// The paper grid: every split point `t ∈ 0..n`, both fix modes.
+    Paper,
+    /// The accurate reference only.
+    Accurate,
+    /// The Fig. 2 related-work baselines (truncation, broken-array,
+    /// Mitchell, Kulkarni where `n` is a power of two).
+    Baselines,
+    /// Bit-level oracle spot check at `t = n/2` (n ≤ 16 — the per-pair
+    /// transcription is orders of magnitude slower than the word model).
+    Oracle,
+    /// Gate-level netlist spot check at `t = n/2` (n ≤ 8 — cycle-accurate
+    /// simulation; costs grow with gates × cycles).
+    Netlist,
+    /// The cross-design comparative sweep: paper grid ∪ accurate ∪
+    /// baselines ∪ oracle ∪ netlist spots.
+    All,
+}
+
+impl DesignSet {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DesignSet::Paper => "paper",
+            DesignSet::Accurate => "accurate",
+            DesignSet::Baselines => "baselines",
+            DesignSet::Oracle => "oracle",
+            DesignSet::Netlist => "netlist",
+            DesignSet::All => "all",
+        }
+    }
+
+    /// Parse a CLI / config name.
+    pub fn parse(s: &str) -> Result<DesignSet, SegmulError> {
+        match s.trim() {
+            "paper" => Ok(DesignSet::Paper),
+            "accurate" => Ok(DesignSet::Accurate),
+            "baselines" => Ok(DesignSet::Baselines),
+            "oracle" => Ok(DesignSet::Oracle),
+            "netlist" => Ok(DesignSet::Netlist),
+            "all" => Ok(DesignSet::All),
+            other => Err(SegmulError::config(format!(
+                "unknown design set {other:?} (paper|accurate|baselines|oracle|netlist|all)"
+            ))),
+        }
+    }
+
+    /// The design points of this family at bit-width `n`, in
+    /// deterministic sweep order.
+    pub fn specs(&self, n: u32) -> Vec<MultiplierSpec> {
+        match self {
+            DesignSet::Paper => {
+                let mut out = Vec::new();
+                for t in 0..n {
+                    for fix in [false, true] {
+                        out.push(MultiplierSpec::Segmented { n, t, fix });
+                    }
+                }
+                out
+            }
+            DesignSet::Accurate => vec![MultiplierSpec::Accurate { n }],
+            DesignSet::Baselines => {
+                let mut out = vec![
+                    MultiplierSpec::Truncated { n, k: n / 4 },
+                    MultiplierSpec::Truncated { n, k: n / 2 },
+                    MultiplierSpec::BrokenArray { n, hbl: n / 4, vbl: n / 2 },
+                    MultiplierSpec::Mitchell { n },
+                ];
+                if n.is_power_of_two() && n >= 2 {
+                    out.push(MultiplierSpec::Kulkarni { n });
+                }
+                out
+            }
+            DesignSet::Oracle => {
+                if n <= 16 {
+                    vec![MultiplierSpec::BitLevel { n, t: n / 2, fix: true }]
+                } else {
+                    Vec::new()
+                }
+            }
+            DesignSet::Netlist => {
+                if n <= 8 {
+                    vec![MultiplierSpec::Netlist { n, t: n / 2, fix: true }]
+                } else {
+                    Vec::new()
+                }
+            }
+            DesignSet::All => {
+                let mut out = DesignSet::Paper.specs(n);
+                out.extend(DesignSet::Accurate.specs(n));
+                out.extend(DesignSet::Baselines.specs(n));
+                out.extend(DesignSet::Oracle.specs(n));
+                out.extend(DesignSet::Netlist.specs(n));
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::wordlevel::approx_seq_mul;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn names_match_model_names() {
+        assert_eq!(
+            MultiplierSpec::Segmented { n: 8, t: 3, fix: true }.name(),
+            Multiplier::name(&SegmentedSeqMul::new(8, 3, true))
+        );
+        assert_eq!(
+            MultiplierSpec::Truncated { n: 8, k: 2 }.name(),
+            TruncatedMul { n: 8, k: 2 }.name()
+        );
+        assert_eq!(MultiplierSpec::Accurate { n: 8 }.name(), AccurateMul { n: 8 }.name());
+    }
+
+    #[test]
+    fn validation_catches_bad_parameters() {
+        assert!(MultiplierSpec::Segmented { n: 8, t: 8, fix: false }.validate().is_err());
+        assert!(MultiplierSpec::Segmented { n: 40, t: 2, fix: false }.validate().is_err());
+        assert!(MultiplierSpec::Kulkarni { n: 12 }.validate().is_err());
+        assert!(MultiplierSpec::Truncated { n: 8, k: 9 }.validate().is_err());
+        assert!(MultiplierSpec::BrokenArray { n: 8, hbl: 9, vbl: 0 }.validate().is_err());
+        for spec in MultiplierSpec::registry_examples(8) {
+            assert!(spec.validate().is_ok(), "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn canonicalization_merges_equal_product_functions() {
+        // The generalized t=0 dedup: both fix modes AND the accurate
+        // design share one representative.
+        let a = MultiplierSpec::Segmented { n: 8, t: 0, fix: true }.canonical();
+        let b = MultiplierSpec::Segmented { n: 8, t: 0, fix: false }.canonical();
+        assert_eq!(a, b);
+        assert_eq!(a, MultiplierSpec::Accurate { n: 8 });
+        // Degenerate baselines collapse too.
+        assert_eq!(
+            MultiplierSpec::Truncated { n: 8, k: 0 }.canonical(),
+            MultiplierSpec::Accurate { n: 8 }
+        );
+        assert_eq!(
+            MultiplierSpec::BrokenArray { n: 8, hbl: 0, vbl: 3 }.canonical(),
+            MultiplierSpec::Truncated { n: 8, k: 3 }
+        );
+        assert_eq!(
+            MultiplierSpec::BrokenArray { n: 8, hbl: 0, vbl: 0 }.canonical(),
+            MultiplierSpec::Accurate { n: 8 }
+        );
+        // t > 0 stays a real configuration axis.
+        let c = MultiplierSpec::Segmented { n: 8, t: 4, fix: true };
+        assert_eq!(c.canonical(), c);
+        // Oracle / netlist families stay distinct (only the dead fix flag
+        // canonicalizes at t = 0).
+        assert_eq!(
+            MultiplierSpec::BitLevel { n: 8, t: 0, fix: true }.canonical(),
+            MultiplierSpec::BitLevel { n: 8, t: 0, fix: false }
+        );
+        assert_ne!(
+            MultiplierSpec::BitLevel { n: 8, t: 0, fix: true }.canonical(),
+            MultiplierSpec::Accurate { n: 8 }.canonical()
+        );
+    }
+
+    #[test]
+    fn canonical_is_idempotent() {
+        let mut specs = MultiplierSpec::registry_examples(8);
+        specs.push(MultiplierSpec::Segmented { n: 8, t: 0, fix: true });
+        specs.push(MultiplierSpec::BrokenArray { n: 8, hbl: 0, vbl: 0 });
+        for s in specs {
+            assert_eq!(s.canonical(), s.canonical().canonical(), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn built_evaluators_match_reference_models() {
+        let n = 8u32;
+        let mut rng = Xoshiro256::seed_from_u64(0x5EC);
+        let a: Vec<u64> = (0..200).map(|_| rng.next_bits(n)).collect();
+        let b: Vec<u64> = (0..200).map(|_| rng.next_bits(n)).collect();
+        for spec in MultiplierSpec::registry_examples(n) {
+            let m = spec.build_batch().unwrap();
+            assert_eq!(m.n(), n);
+            assert_eq!(m.name(), spec.name());
+            let mut out = vec![0u64; a.len()];
+            m.mul_batch(&a, &b, &mut out);
+            // Cross-check the segmented-family specs against the scalar
+            // word-level model (the oracle tests cover the rest).
+            if let (Some(t), Some(fix)) = (spec.split_point(), spec.fix_mode()) {
+                for i in 0..a.len() {
+                    assert_eq!(
+                        out[i],
+                        approx_seq_mul(a[i], b[i], n, t, fix),
+                        "{} i={i}",
+                        spec.name()
+                    );
+                }
+            }
+            if let MultiplierSpec::Accurate { .. } = spec {
+                for i in 0..a.len() {
+                    assert_eq!(out[i], a[i] * b[i]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_batch_handles_ragged_groups() {
+        // > 64 pairs exercises the 64-lane grouping; products must match
+        // the word model regardless of group boundaries.
+        let (n, t, fix) = (6u32, 3u32, true);
+        let m = NetlistMul::new(n, t, fix);
+        let mut rng = Xoshiro256::seed_from_u64(9);
+        let a: Vec<u64> = (0..130).map(|_| rng.next_bits(n)).collect();
+        let b: Vec<u64> = (0..130).map(|_| rng.next_bits(n)).collect();
+        let mut out = vec![0u64; a.len()];
+        m.mul_batch(&a, &b, &mut out);
+        for i in 0..a.len() {
+            assert_eq!(out[i], approx_seq_mul(a[i], b[i], n, t, fix), "i={i}");
+        }
+    }
+
+    #[test]
+    fn design_sets_enumerate_expected_points() {
+        assert_eq!(DesignSet::Paper.specs(4).len(), 8); // t in 0..4 x 2 fix modes
+        assert_eq!(DesignSet::Accurate.specs(4).len(), 1);
+        // n=4 is a power of two: 4 fixed baselines + kulkarni.
+        assert_eq!(DesignSet::Baselines.specs(4).len(), 5);
+        assert_eq!(DesignSet::Baselines.specs(12).len(), 4);
+        assert_eq!(DesignSet::Oracle.specs(8).len(), 1);
+        assert_eq!(DesignSet::Oracle.specs(32).len(), 0);
+        assert_eq!(DesignSet::Netlist.specs(8).len(), 1);
+        assert_eq!(DesignSet::Netlist.specs(16).len(), 0);
+        assert_eq!(
+            DesignSet::All.specs(8).len(),
+            DesignSet::Paper.specs(8).len() + 1 + 5 + 1 + 1
+        );
+        // Paper ordering is the legacy sweep order: t-major, fix-minor.
+        let paper = DesignSet::Paper.specs(2);
+        assert_eq!(
+            paper,
+            vec![
+                MultiplierSpec::Segmented { n: 2, t: 0, fix: false },
+                MultiplierSpec::Segmented { n: 2, t: 0, fix: true },
+                MultiplierSpec::Segmented { n: 2, t: 1, fix: false },
+                MultiplierSpec::Segmented { n: 2, t: 1, fix: true },
+            ]
+        );
+    }
+
+    #[test]
+    fn design_set_parsing() {
+        assert_eq!(DesignSet::parse("all").unwrap(), DesignSet::All);
+        assert_eq!(DesignSet::parse(" paper ").unwrap(), DesignSet::Paper);
+        assert!(DesignSet::parse("everything").is_err());
+        for set in [
+            DesignSet::Paper,
+            DesignSet::Accurate,
+            DesignSet::Baselines,
+            DesignSet::Oracle,
+            DesignSet::Netlist,
+            DesignSet::All,
+        ] {
+            assert_eq!(DesignSet::parse(set.name()).unwrap(), set);
+        }
+    }
+}

@@ -21,9 +21,12 @@ fn workload_name(spec: &WorkSpec) -> &'static str {
     }
 }
 
-/// Render the per-config metric table (also the CSV layout).
+/// Render the per-config metric table (also the CSV layout). The `t` and
+/// `fix` columns are the segmented-family configuration axes; designs
+/// without them (baselines, accurate) carry `-`.
 pub fn sweep_table(outcomes: &[SweepOutcome]) -> Table {
     let mut table = Table::new(&[
+        "design",
         "n",
         "t",
         "fix",
@@ -41,9 +44,10 @@ pub fn sweep_table(outcomes: &[SweepOutcome]) -> Table {
     for o in outcomes {
         let m = o.result.metrics();
         table.row(vec![
-            o.job.n.to_string(),
-            o.job.t.to_string(),
-            o.job.fix.to_string(),
+            o.job.design.name(),
+            o.job.n().to_string(),
+            o.job.design.split_point().map(|t| t.to_string()).unwrap_or_else(|| "-".into()),
+            o.job.design.fix_mode().map(|f| f.to_string()).unwrap_or_else(|| "-".into()),
             workload_name(&o.job.spec).to_string(),
             m.samples.to_string(),
             f(m.er),
@@ -80,10 +84,17 @@ pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Json {
         .iter()
         .map(|o| {
             let m = o.result.metrics();
-            obj(vec![
-                ("n", Json::from(o.job.n as u64)),
-                ("t", Json::from(o.job.t as u64)),
-                ("fix", Json::from(o.job.fix)),
+            let mut fields = vec![
+                ("design", Json::from(o.job.design.name().as_str())),
+                ("n", Json::from(o.job.n() as u64)),
+            ];
+            if let Some(t) = o.job.design.split_point() {
+                fields.push(("t", Json::from(t as u64)));
+            }
+            if let Some(fix) = o.job.design.fix_mode() {
+                fields.push(("fix", Json::from(fix)));
+            }
+            fields.extend([
                 ("workload", Json::from(workload_name(&o.job.spec))),
                 ("samples", Json::from(m.samples)),
                 ("er", Json::from(m.er)),
@@ -94,7 +105,8 @@ pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Json {
                 ("mean_ber", Json::from(m.mean_ber())),
                 ("wall_s", Json::from(o.result.wall.as_secs_f64())),
                 ("cached", Json::from(o.cached)),
-            ])
+            ]);
+            obj(fields)
         })
         .collect();
     obj(vec![
@@ -141,13 +153,15 @@ mod tests {
     fn outcomes() -> (Vec<SweepOutcome>, SweepRunInfo) {
         let grid = SweepGrid {
             bitwidths: vec![4],
+            designs: crate::multiplier::DesignSet::Paper,
             exhaustive_max_n: 6,
             force_mc: false,
             mc_samples: 1000,
             seed: 1,
         };
         let mut runner =
-            SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), 1);
+            SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), 1)
+                .unwrap();
         let outs = runner.run_grid(&grid, |_, _, _| {}).unwrap();
         let info = SweepRunInfo {
             workers: 1,
@@ -179,6 +193,11 @@ mod tests {
         let results = parsed.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), outs.len());
         assert_eq!(results[0].get("workload").unwrap().as_str(), Some("exhaustive"));
+        // Cross-design identification: every row names its design.
+        assert_eq!(
+            results[0].get("design").unwrap().as_str(),
+            Some(outs[0].job.design.name().as_str())
+        );
     }
 
     #[test]
@@ -187,7 +206,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("segmul_sweep_report_{}", std::process::id()));
         let (csv, json) = write_sweep_reports(&dir, &outs, &info).unwrap();
         let csv_text = std::fs::read_to_string(&csv).unwrap();
-        assert!(csv_text.starts_with("n,t,fix,workload"));
+        assert!(csv_text.starts_with("design,n,t,fix,workload"));
         let parsed = Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("sweep"));
         let _ = std::fs::remove_dir_all(&dir);

@@ -5,23 +5,42 @@
 //! partial results. On the 1-core CI box this degenerates gracefully to a
 //! sequential loop (no thread spawn when `workers == 1`).
 
-/// Parse a `SEGMUL_WORKERS`-style override. Returns `None` when the
-/// value is absent or unparsable; parsed values clamp to ≥ 1 so an
-/// explicit `0` pins a single worker instead of panicking downstream.
-pub fn workers_override(value: Option<&str>) -> Option<usize> {
-    value.and_then(|v| v.trim().parse::<usize>().ok()).map(|w| w.max(1))
+use crate::error::SegmulError;
+
+/// Parse a `SEGMUL_WORKERS`-style override. Absent or blank values mean
+/// "no override" (`Ok(None)`); `0` and unparsable values are rejected
+/// with a typed [`SegmulError::Config`] instead of being silently
+/// clamped — a pinned-but-impossible worker count is a configuration
+/// bug the caller must see.
+pub fn workers_override(value: Option<&str>) -> Result<Option<usize>, SegmulError> {
+    let Some(v) = value else { return Ok(None) };
+    let v = v.trim();
+    if v.is_empty() {
+        return Ok(None);
+    }
+    match v.parse::<usize>() {
+        Ok(0) => Err(SegmulError::config(
+            "SEGMUL_WORKERS=0: worker count must be >= 1",
+        )),
+        Ok(w) => Ok(Some(w)),
+        Err(_) => Err(SegmulError::config(format!(
+            "SEGMUL_WORKERS={v:?} is not a positive integer"
+        ))),
+    }
 }
 
 /// Number of worker threads to use by default: the `SEGMUL_WORKERS`
 /// environment variable when set (so CI and benches can pin worker
 /// counts deterministically), else the machine's available parallelism.
-pub fn default_workers() -> usize {
+/// An invalid override (`0`, non-numeric) is a typed configuration
+/// error, surfaced by the CLI and by [`crate::api::SessionBuilder`].
+pub fn default_workers() -> Result<usize, SegmulError> {
     if let Ok(v) = std::env::var("SEGMUL_WORKERS") {
-        if let Some(w) = workers_override(Some(&v)) {
-            return w;
+        if let Some(w) = workers_override(Some(&v))? {
+            return Ok(w);
         }
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    Ok(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
 }
 
 /// Split `[0, len)` into `parts` near-equal contiguous chunks.
@@ -119,18 +138,28 @@ mod tests {
 
     #[test]
     fn workers_override_parsing() {
-        assert_eq!(workers_override(None), None);
-        assert_eq!(workers_override(Some("")), None);
-        assert_eq!(workers_override(Some("abc")), None);
-        assert_eq!(workers_override(Some("-2")), None);
-        assert_eq!(workers_override(Some("4")), Some(4));
-        assert_eq!(workers_override(Some(" 7 ")), Some(7));
-        // 0 clamps to 1 rather than producing a zero-worker pool.
-        assert_eq!(workers_override(Some("0")), Some(1));
+        assert_eq!(workers_override(None).unwrap(), None);
+        assert_eq!(workers_override(Some("")).unwrap(), None);
+        assert_eq!(workers_override(Some("4")).unwrap(), Some(4));
+        assert_eq!(workers_override(Some(" 7 ")).unwrap(), Some(7));
+    }
+
+    #[test]
+    fn workers_override_rejects_zero_with_typed_config_error() {
+        // Regression: an explicit 0 used to clamp silently to 1; it must
+        // now surface as a typed configuration error.
+        let e = workers_override(Some("0")).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("SEGMUL_WORKERS=0"), "{e}");
+        // Unparsable values are configuration errors too.
+        assert_eq!(workers_override(Some("abc")).unwrap_err().kind(), "config");
+        assert_eq!(workers_override(Some("-2")).unwrap_err().kind(), "config");
     }
 
     #[test]
     fn default_workers_is_positive() {
-        assert!(default_workers() >= 1);
+        // CI pins SEGMUL_WORKERS to a valid value; locally the env is
+        // either unset or valid, so this must produce >= 1.
+        assert!(default_workers().unwrap() >= 1);
     }
 }

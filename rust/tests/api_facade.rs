@@ -1,0 +1,344 @@
+//! Facade contract tests: the persistent worker pool, bit-identical
+//! sharded results, the design-agnostic spec registry, and the typed
+//! error surface.
+//!
+//! The load-bearing assertions:
+//! * **Persistent pool** — a session reused across ≥ 3 jobs constructs
+//!   its backends exactly once per worker (counting factory), never per
+//!   job (the old `run_job_sharded` behavior this facade replaces).
+//! * **Determinism** — session results are bit-identical to PR 2's
+//!   `sweep_determinism` expectations (the sequential driver reference)
+//!   for any worker count.
+//! * **Registry** — every `MultiplierSpec` variant round-trips through
+//!   `JobKey`, and the cross-design sweep runs ≥ 2 non-paper designs
+//!   through the shared cache/shard path.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use segmul::api::{
+    BackendChoice, DesignSet, EvalJob, JobBuilder, MultiplierSpec, ProgressEvent, SegmulError,
+    Session, SweepGrid, WorkSpec,
+};
+use segmul::coordinator::{run_job, CpuBackend, EvalBackend};
+
+/// A factory that counts backend constructions and batch evaluations.
+fn counting_factory(
+    builds: Arc<AtomicUsize>,
+    evals: Arc<AtomicUsize>,
+) -> impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static {
+    struct Counting {
+        inner: CpuBackend,
+        evals: Arc<AtomicUsize>,
+    }
+    impl EvalBackend for Counting {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+        fn supports(&self, n: u32) -> bool {
+            self.inner.supports(n)
+        }
+        fn eval_batch(
+            &mut self,
+            n: u32,
+            t: u32,
+            fix: bool,
+            a: &[u64],
+            b: &[u64],
+        ) -> Result<segmul::error::metrics::ErrorStats> {
+            self.evals.fetch_add(1, Ordering::Relaxed);
+            self.inner.eval_batch(n, t, fix, a, b)
+        }
+        fn supports_design(&self, design: &MultiplierSpec) -> bool {
+            self.inner.supports_design(design)
+        }
+        fn eval_design(
+            &mut self,
+            design: &MultiplierSpec,
+            a: &[u64],
+            b: &[u64],
+        ) -> Result<segmul::error::metrics::ErrorStats> {
+            self.evals.fetch_add(1, Ordering::Relaxed);
+            self.inner.eval_design(design, a, b)
+        }
+    }
+    move || {
+        builds.fetch_add(1, Ordering::SeqCst);
+        Ok(Box::new(Counting { inner: CpuBackend::new(), evals: evals.clone() })
+            as Box<dyn EvalBackend>)
+    }
+}
+
+#[test]
+fn session_reuse_builds_backends_once_per_worker() {
+    let builds = Arc::new(AtomicUsize::new(0));
+    let evals = Arc::new(AtomicUsize::new(0));
+    let mut session = Session::builder()
+        .workers(3)
+        .backend_factory(counting_factory(builds.clone(), evals.clone()))
+        .build()
+        .unwrap();
+    assert_eq!(builds.load(Ordering::SeqCst), 3, "one construction per worker at startup");
+
+    // ≥ 3 distinct jobs through the same session: the persistent pool
+    // must evaluate them all without a single re-construction.
+    let jobs = [
+        EvalJob::mc(8, 2, false, 150_000, 1),
+        EvalJob::mc(8, 4, true, 150_000, 2),
+        EvalJob::exhaustive(8, 3, true),
+        EvalJob::mc(10, 5, false, 150_000, 3),
+    ];
+    for job in &jobs {
+        let r = session.run(job).unwrap();
+        assert!(r.stats.count > 0);
+    }
+    assert!(evals.load(Ordering::Relaxed) > 0);
+    assert_eq!(
+        builds.load(Ordering::SeqCst),
+        3,
+        "backends are constructed once per worker per session, not per job"
+    );
+    assert_eq!(session.backend_builds(), 3);
+
+    // A cache hit does not touch the backends either.
+    let before = evals.load(Ordering::Relaxed);
+    let _ = session.run(&jobs[0]).unwrap();
+    assert_eq!(evals.load(Ordering::Relaxed), before);
+    assert_eq!(session.cache_hits(), 1);
+}
+
+#[test]
+fn session_results_bit_identical_to_sequential_driver() {
+    // The PR 2 sweep_determinism expectation, now through the facade:
+    // for every config, stats equal the sequential driver bit-for-bit —
+    // integer fields AND the order-sensitive f64 sum_red.
+    let jobs = [
+        EvalJob::exhaustive(10, 4, true),
+        EvalJob::mc(12, 5, false, 300_000, 0x5EED),
+        EvalJob::new(
+            MultiplierSpec::Mitchell { n: 12 },
+            WorkSpec::MonteCarlo { samples: 200_000, seed: 0x5EED },
+        ),
+        EvalJob::new(
+            MultiplierSpec::Truncated { n: 10, k: 3 },
+            WorkSpec::Exhaustive,
+        ),
+    ];
+    let reference: Vec<_> = jobs
+        .iter()
+        .map(|job| {
+            let mut be = CpuBackend::new();
+            run_job(&mut be, job).unwrap()
+        })
+        .collect();
+    for workers in [1usize, 2, 7] {
+        let mut session = Session::builder()
+            .workers(workers)
+            .backend(BackendChoice::Cpu)
+            .build()
+            .unwrap();
+        for (job, want) in jobs.iter().zip(&reference) {
+            let got = session.run(job).unwrap();
+            assert_eq!(
+                got.stats,
+                want.stats,
+                "workers={workers} design={}",
+                job.design.name()
+            );
+            assert_eq!(got.batches, want.batches, "workers={workers}");
+        }
+    }
+}
+
+#[test]
+fn every_spec_variant_round_trips_through_job_key() {
+    let specs = MultiplierSpec::registry_examples(8);
+    assert_eq!(specs.len(), 8, "registry must cover every design family");
+    let mut keys = Vec::new();
+    for spec in &specs {
+        let j1 = JobBuilder::new(*spec).monte_carlo(1000).seed(3).build().unwrap();
+        let j2 = JobBuilder::new(*spec).monte_carlo(1000).seed(3).build().unwrap();
+        assert_eq!(j1.key(), j2.key(), "{} key must be stable", spec.name());
+        assert_eq!(j1.key().design, spec.canonical());
+        keys.push(j1.key());
+    }
+    // The registry examples are pairwise distinct product functions, so
+    // their keys must be pairwise distinct.
+    for i in 0..keys.len() {
+        for j in (i + 1)..keys.len() {
+            assert_ne!(keys[i], keys[j], "{} vs {}", specs[i].name(), specs[j].name());
+        }
+    }
+}
+
+#[test]
+fn cross_design_sweep_runs_non_paper_designs_through_shared_path() {
+    // `segmul sweep --designs all` reduced to a test-sized grid: ≥ 2
+    // non-paper designs must be *evaluated* (not cache-served) through
+    // the same session cache/shard path as the paper grid.
+    let builds = Arc::new(AtomicUsize::new(0));
+    let evals = Arc::new(AtomicUsize::new(0));
+    let mut session = Session::builder()
+        .workers(2)
+        .backend_factory(counting_factory(builds.clone(), evals.clone()))
+        .build()
+        .unwrap();
+    let grid = SweepGrid {
+        bitwidths: vec![4],
+        designs: DesignSet::All,
+        exhaustive_max_n: 8,
+        force_mc: false,
+        mc_samples: 10_000,
+        seed: 1,
+    };
+    let outcomes = session.run_grid(&grid, |_, _, _| {}).unwrap();
+    let non_paper_evaluated = outcomes
+        .iter()
+        .filter(|o| !o.cached && !matches!(o.job.design, MultiplierSpec::Segmented { .. }))
+        .count();
+    assert!(
+        non_paper_evaluated >= 2,
+        "expected >= 2 non-paper designs evaluated, got {non_paper_evaluated}"
+    );
+    // Canonical dedup across designs: the accurate baseline is served
+    // from the paper grid's t=0 entry (evaluated earlier in grid order).
+    let accurate = outcomes
+        .iter()
+        .find(|o| matches!(o.job.design, MultiplierSpec::Accurate { .. }))
+        .expect("grid contains the accurate design");
+    assert!(accurate.cached, "accurate must dedup against the t=0 paper points");
+    let t0 = outcomes
+        .iter()
+        .find(|o| o.job.design == MultiplierSpec::Segmented { n: 4, t: 0, fix: false })
+        .unwrap();
+    assert_eq!(accurate.result.stats, t0.result.stats);
+    // Everything ran on the persistent pool: 2 builds, ever.
+    assert_eq!(builds.load(Ordering::SeqCst), 2);
+}
+
+#[test]
+fn progress_callback_streams_chunk_completion() {
+    let events: Arc<Mutex<Vec<ProgressEvent>>> = Arc::new(Mutex::new(Vec::new()));
+    let sink = events.clone();
+    let mut session = Session::builder()
+        .workers(2)
+        .on_progress(move |e| sink.lock().unwrap().push(e))
+        .build()
+        .unwrap();
+    // 300k samples over 2^16-pair chunks => 5 chunk merges.
+    let job = EvalJob::mc(8, 3, true, 300_000, 7);
+    let r = session.run(&job).unwrap();
+    let log = events.lock().unwrap();
+    let merges: Vec<(u64, u64)> = log
+        .iter()
+        .filter_map(|e| match e {
+            ProgressEvent::ChunkMerged { merged, samples, .. } => Some((*merged, *samples)),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(merges.len() as u64, r.batches, "one event per in-order merge");
+    for (i, (merged, _)) in merges.iter().enumerate() {
+        assert_eq!(*merged, i as u64 + 1, "merges arrive in prefix order");
+    }
+    assert_eq!(merges.last().unwrap().1, 300_000, "final event covers the full budget");
+}
+
+#[test]
+fn typed_errors_on_the_facade_surface() {
+    // Config: zero workers.
+    let e = Session::builder().workers(0).build().unwrap_err();
+    assert!(matches!(e, SegmulError::Config(_)), "{e}");
+    // Spec: invalid design parameters.
+    let e = JobBuilder::new(MultiplierSpec::Kulkarni { n: 12 })
+        .monte_carlo(10)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SegmulError::Spec { .. }), "{e}");
+    // Workload: zero samples.
+    let e = JobBuilder::new(MultiplierSpec::Accurate { n: 8 })
+        .monte_carlo(0)
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SegmulError::Workload(_)), "{e}");
+    // Backend: factory failure at session build.
+    let e = Session::builder()
+        .workers(2)
+        .backend_factory(|| anyhow::bail!("no such accelerator"))
+        .build()
+        .unwrap_err();
+    assert!(matches!(e, SegmulError::Backend(_)), "{e}");
+    assert!(e.to_string().contains("no such accelerator"), "{e}");
+
+    // Backend: capability preflight — a backend on the trait defaults
+    // (like PJRT) cannot run non-segmented designs, and the facade must
+    // report that as a typed Backend error before any chunk work.
+    struct SegOnly;
+    impl EvalBackend for SegOnly {
+        fn name(&self) -> &'static str {
+            "segonly"
+        }
+        fn max_batch(&self) -> usize {
+            256
+        }
+        fn supports(&self, n: u32) -> bool {
+            (1..=32).contains(&n)
+        }
+        fn eval_batch(
+            &mut self,
+            n: u32,
+            t: u32,
+            fix: bool,
+            a: &[u64],
+            b: &[u64],
+        ) -> Result<segmul::error::metrics::ErrorStats> {
+            CpuBackend::new().eval_batch(n, t, fix, a, b)
+        }
+    }
+    let mut s = Session::builder()
+        .workers(1)
+        .backend_factory(|| Ok(Box::new(SegOnly) as Box<dyn EvalBackend>))
+        .build()
+        .unwrap();
+    let job = JobBuilder::new(MultiplierSpec::Mitchell { n: 8 })
+        .monte_carlo(100)
+        .build()
+        .unwrap();
+    let e = s.run(&job).unwrap_err();
+    assert!(matches!(e, SegmulError::Backend(_)), "{e}");
+    assert!(e.to_string().contains("mitchell"), "{e}");
+    // The segmented family still runs on the same session.
+    let ok = s
+        .run(&JobBuilder::new(MultiplierSpec::Accurate { n: 8 }).monte_carlo(100).build().unwrap())
+        .unwrap();
+    assert_eq!(ok.stats.count, 100);
+}
+
+#[test]
+fn session_seed_policy_flows_into_jobs() {
+    let session = Session::builder().workers(1).seed(0xABCD).build().unwrap();
+    let job = session
+        .job(MultiplierSpec::Segmented { n: 8, t: 2, fix: false })
+        .monte_carlo(100)
+        .build()
+        .unwrap();
+    match job.spec {
+        WorkSpec::MonteCarlo { seed, .. } => assert_eq!(seed, 0xABCD),
+        _ => panic!("expected MC workload"),
+    }
+    // Explicit seed overrides the session policy.
+    let job = session
+        .job(MultiplierSpec::Segmented { n: 8, t: 2, fix: false })
+        .monte_carlo(100)
+        .seed(5)
+        .build()
+        .unwrap();
+    match job.spec {
+        WorkSpec::MonteCarlo { seed, .. } => assert_eq!(seed, 5),
+        _ => panic!("expected MC workload"),
+    }
+}

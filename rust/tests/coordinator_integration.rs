@@ -79,9 +79,7 @@ fn adaptive_job_on_pjrt() {
     let Some(dir) = artifacts_dir() else { return };
     let mut pjrt = PjrtBackend::load(&dir).unwrap();
     let job = EvalJob {
-        n: 16,
-        t: 4,
-        fix: false,
+        design: segmul::multiplier::MultiplierSpec::Segmented { n: 16, t: 4, fix: false },
         spec: WorkSpec::Adaptive { max_samples: 1 << 22, seed: 3, target_rel_stderr: 0.02 },
     };
     let r = run_job(&mut pjrt, &job).unwrap();

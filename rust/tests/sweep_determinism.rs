@@ -3,8 +3,10 @@
 //! The contract under test: for every config in a grid, MC and
 //! exhaustive sweeps produce **bit-identical** `ErrorStats` — every
 //! integer field and the order-sensitive f64 `sum_red` — for workers
-//! ∈ {1, 2, 7}, and the `(config, seed, samples)` result cache serves
-//! repeats without re-evaluating.
+//! ∈ {1, 2, 7}, and the `(design, seed, samples)` result cache serves
+//! repeats without re-evaluating. Since PR 3 the runner executes on the
+//! persistent worker pool (backends built once per worker, not per job);
+//! the determinism expectations are unchanged from PR 2.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -14,16 +16,18 @@ use anyhow::Result;
 use segmul::coordinator::{
     run_job, run_job_sharded, CpuBackend, EvalBackend, EvalJob, SweepGrid, SweepRunner,
 };
+use segmul::multiplier::DesignSet;
 
 const WORKER_COUNTS: [usize; 3] = [1, 2, 7];
 
-fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Sync {
+fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static {
     || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
 }
 
 fn exhaustive_grid() -> SweepGrid {
     SweepGrid {
         bitwidths: vec![4, 8],
+        designs: DesignSet::Paper,
         exhaustive_max_n: 12,
         force_mc: false,
         mc_samples: 1 << 16,
@@ -34,6 +38,7 @@ fn exhaustive_grid() -> SweepGrid {
 fn mc_grid() -> SweepGrid {
     SweepGrid {
         bitwidths: vec![8, 12],
+        designs: DesignSet::Paper,
         exhaustive_max_n: 12,
         force_mc: true,
         // > one chunk (2^16) per config so sharding actually interleaves.
@@ -55,15 +60,16 @@ fn assert_grid_deterministic(grid: &SweepGrid) {
         })
         .collect();
     for workers in WORKER_COUNTS {
-        let mut runner = SweepRunner::new(cpu_factory(), workers);
+        let mut runner = SweepRunner::new(cpu_factory(), workers).unwrap();
         let outcomes = runner.run_grid(grid, |_, _, _| {}).unwrap();
         for (outcome, want) in outcomes.iter().zip(&reference) {
             // Full equality: count, err_count, sums, bitflips AND the
             // accumulation-order-sensitive sum_red.
             assert_eq!(
-                &outcome.result.stats, want,
-                "workers={workers} n={} t={} fix={}",
-                outcome.job.n, outcome.job.t, outcome.job.fix
+                &outcome.result.stats,
+                want,
+                "workers={workers} design={}",
+                outcome.job.design.name()
             );
         }
     }
@@ -77,6 +83,20 @@ fn exhaustive_grid_bit_identical_across_worker_counts() {
 #[test]
 fn mc_grid_bit_identical_across_worker_counts() {
     assert_grid_deterministic(&mc_grid());
+}
+
+#[test]
+fn cross_design_grid_bit_identical_across_worker_counts() {
+    // The comparative sweep (paper × accurate × baselines × oracle ×
+    // netlist spots) must obey the same determinism contract.
+    assert_grid_deterministic(&SweepGrid {
+        bitwidths: vec![4],
+        designs: DesignSet::All,
+        exhaustive_max_n: 12,
+        force_mc: false,
+        mc_samples: 1 << 16,
+        seed: 0x5EED,
+    });
 }
 
 #[test]
@@ -129,7 +149,7 @@ fn cache_serves_repeats_without_reevaluating() {
             as Box<dyn EvalBackend>)
     };
     let grid = exhaustive_grid();
-    let mut runner = SweepRunner::new(factory, 2);
+    let mut runner = SweepRunner::new(factory, 2).unwrap();
     let first = runner.run_grid(&grid, |_, _, _| {}).unwrap();
     let evals_after_first_pass = calls.load(Ordering::Relaxed);
     // t=0 fix=true is served from the t=0 fix=false entry per bit-width.
@@ -145,6 +165,9 @@ fn cache_serves_repeats_without_reevaluating() {
     for (a, b) in first.iter().zip(&second) {
         assert_eq!(a.result.stats, b.result.stats);
     }
+    // The persistent pool built exactly one backend per worker for the
+    // whole two-pass run.
+    assert_eq!(runner.pool().backend_builds(), 2);
 }
 
 #[test]
@@ -152,7 +175,9 @@ fn segmul_workers_env_contract() {
     // The env override is parsed through this pure helper (process-global
     // env mutation is racy under the parallel test harness).
     use segmul::util::threadpool::workers_override;
-    assert_eq!(workers_override(Some("4")), Some(4));
-    assert_eq!(workers_override(Some("0")), Some(1), "clamped to >= 1");
-    assert_eq!(workers_override(Some("junk")), None);
+    assert_eq!(workers_override(Some("4")).unwrap(), Some(4));
+    // Since PR 3 an explicit 0 is a typed configuration error instead of
+    // a silent clamp, and so is junk.
+    assert_eq!(workers_override(Some("0")).unwrap_err().kind(), "config");
+    assert_eq!(workers_override(Some("junk")).unwrap_err().kind(), "config");
 }
