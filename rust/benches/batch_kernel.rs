@@ -13,13 +13,22 @@
 //! for the CI bench-regression gate (`bench-gate` vs
 //! `ci/bench_baseline.json`).
 //! Target: batched ≥ 3x over scalar/dyn on the n=8 exhaustive sweep.
+//!
+//! The second half sweeps **every registry design** (n = 16): the per-pair
+//! scalar reference (`MultiplierSpec::build_scalar_reference`) against the
+//! branch-free batch kernel (`MultiplierSpec::build_batch`), printing a
+//! per-design speedup summary and writing `BENCH_kernels.json` with
+//! `<design>_pairs_per_s` / `<design>_speedup_vs_scalar` metrics — the
+//! cross-design throughput trajectory the CI gate tracks.
+//! Target: baseline-family batched ≥ 5x over the scalar adapters.
 
 use segmul::bench::{bench, section, speedup, throughput, Summary};
 use segmul::error::metrics::ErrorStats;
 use segmul::error::stream::BatchAccumulator;
 use segmul::multiplier::batch::approx_seq_mul_batch;
 use segmul::multiplier::wordlevel::approx_seq_mul;
-use segmul::multiplier::{Multiplier, SegmentedSeqMul};
+use segmul::multiplier::{BatchMultiplier, Multiplier, MultiplierSpec, SegmentedSeqMul};
+use segmul::util::rng::Xoshiro256;
 
 fn main() {
     let (n, t, fix) = (8u32, 4u32, true);
@@ -114,4 +123,72 @@ fn main() {
         .metric("sweep_speedup_batched_vs_static", speedup(&s_batch, &s_static))
         .metric("batched_sweep_melem_per_s", throughput(&s_batch).unwrap_or(0.0) / 1e6);
     summary.write().expect("write bench summary");
+
+    // ---- per-design kernels: every registry family, scalar reference vs
+    // batch kernel. The bit-level oracle's per-pair transcription is
+    // orders of magnitude slower than the word-level models, so it runs
+    // on a smaller operand set (the rates stay comparable: both sides
+    // report pairs/s).
+    section("per-design kernels: scalar adapter vs batch kernel (n=16)");
+    let n16 = 16u32;
+    let designs: [(&str, MultiplierSpec, usize); 6] = [
+        ("segmented", MultiplierSpec::Segmented { n: n16, t: 8, fix: true }, 1 << 16),
+        ("trunc", MultiplierSpec::Truncated { n: n16, k: 4 }, 1 << 16),
+        ("bam", MultiplierSpec::BrokenArray { n: n16, hbl: 4, vbl: 8 }, 1 << 16),
+        ("mitchell", MultiplierSpec::Mitchell { n: n16 }, 1 << 16),
+        ("kulkarni", MultiplierSpec::Kulkarni { n: n16 }, 1 << 16),
+        ("bitlevel", MultiplierSpec::BitLevel { n: n16, t: 8, fix: true }, 1 << 12),
+    ];
+    let mut kernels = Summary::new("kernels");
+    let mut rows: Vec<(&str, f64, f64)> = Vec::new();
+    for (key, spec, len) in &designs {
+        let mut rng = Xoshiro256::seed_from_u64(0xD5 ^ *len as u64);
+        let a: Vec<u64> = (0..*len).map(|_| rng.next_bits(n16)).collect();
+        let b: Vec<u64> = (0..*len).map(|_| rng.next_bits(n16)).collect();
+        let mut buf = vec![0u64; a.len()];
+        let batch_m = spec.build_batch().expect("build batch kernel");
+        let scalar_m = spec.build_scalar_reference().expect("build scalar reference");
+        let pairs = *len as f64;
+        let r_scalar = bench(&format!("{key:>9} scalar/per-pair reference"), Some(pairs), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                scalar_m.mul_batch(&a, &b, &mut buf);
+                for &o in &buf {
+                    acc ^= o;
+                }
+            }
+            acc
+        });
+        let r_batch = bench(&format!("{key:>9} batched kernel"), Some(pairs), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                batch_m.mul_batch(&a, &b, &mut buf);
+                for &o in &buf {
+                    acc ^= o;
+                }
+            }
+            acc
+        });
+        let sp = speedup(&r_batch, &r_scalar);
+        let pps = throughput(&r_batch).unwrap_or(0.0);
+        kernels
+            .metric(&format!("{key}_pairs_per_s"), pps)
+            .metric(&format!("{key}_speedup_vs_scalar"), sp);
+        rows.push((*key, sp, pps));
+    }
+    // Baseline family = everything except the segmented design (which had
+    // its kernel since PR 1).
+    let family: Vec<&(&str, f64, f64)> =
+        rows.iter().filter(|(k, _, _)| *k != "segmented").collect();
+    let geomean =
+        (family.iter().map(|(_, sp, _)| sp.ln()).sum::<f64>() / family.len() as f64).exp();
+
+    println!();
+    println!("per-design batched-over-scalar speedups (baseline-family target >= 5x):");
+    for (key, sp, pps) in &rows {
+        println!("  {key:>9}: {sp:>7.2}x   ({:>8.1} Mpairs/s batched)", pps / 1e6);
+    }
+    println!("  baseline-family geomean: {geomean:.2}x");
+    kernels.metric("baseline_family_speedup_geomean", geomean);
+    kernels.write().expect("write kernels summary");
 }

@@ -51,4 +51,4 @@ pub use crate::coordinator::{
     ChunkEvent, EvalBackend, EvalJob, EvalService, JobKey, JobResult, SweepGrid, SweepOutcome,
     WorkSpec, WorkerPool,
 };
-pub use crate::multiplier::{DesignSet, MultiplierSpec};
+pub use crate::multiplier::{DesignSet, DispatchClass, MultiplierSpec};

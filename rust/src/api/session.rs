@@ -8,7 +8,7 @@ use crate::coordinator::{
     ChunkEvent, ChunkPlan, CpuBackend, EvalBackend, EvalJob, JobResult, PjrtBackend, SweepGrid,
     SweepOutcome, SweepRunner,
 };
-use crate::multiplier::MultiplierSpec;
+use crate::multiplier::{DispatchClass, MultiplierSpec};
 use crate::util::threadpool::default_workers;
 
 use crate::error::SegmulError;
@@ -76,6 +76,24 @@ pub struct SessionTelemetry {
     /// session's lifetime (the persistent-pool contract).
     pub backend_builds: u64,
     pub workers: usize,
+    /// Kernel tier per evaluated design (union over the pool's workers,
+    /// name-sorted): [`DispatchClass::Batched`] for a true batch kernel,
+    /// [`DispatchClass::Scalar`] for a per-pair fallback. Every registry
+    /// design runs batched on the CPU backend; a `Scalar` entry here
+    /// means a sweep silently regressed to per-pair dispatch.
+    pub kernel_dispatch: Vec<(String, DispatchClass)>,
+}
+
+impl SessionTelemetry {
+    /// Designs that ran on a per-pair scalar fallback (empty on a healthy
+    /// sweep).
+    pub fn scalar_fallbacks(&self) -> Vec<&str> {
+        self.kernel_dispatch
+            .iter()
+            .filter(|(_, c)| *c == DispatchClass::Scalar)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
 }
 
 type ProgressCallback = Box<dyn Fn(ProgressEvent) + Send + Sync>;
@@ -244,6 +262,12 @@ impl Session {
         self.runner.jobs_evaluated
     }
 
+    /// Kernel tier per evaluated design, unioned over the pool's workers
+    /// (see [`SessionTelemetry::kernel_dispatch`]).
+    pub fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
+        self.runner.pool().kernel_dispatch()
+    }
+
     pub fn telemetry(&self) -> SessionTelemetry {
         SessionTelemetry {
             jobs_completed: self.jobs_completed,
@@ -252,6 +276,7 @@ impl Session {
             pairs_evaluated: self.pairs_evaluated,
             backend_builds: self.backend_builds(),
             workers: self.workers(),
+            kernel_dispatch: self.kernel_dispatch(),
         }
     }
 
@@ -355,6 +380,27 @@ mod tests {
         let mut be = CpuBackend::new();
         let want = run_job(&mut be, &job).unwrap();
         assert_eq!(r1.stats, want.stats);
+    }
+
+    #[test]
+    fn telemetry_reports_kernel_dispatch_per_design() {
+        let mut s = Session::builder().workers(2).seed(4).build().unwrap();
+        for design in [
+            MultiplierSpec::Segmented { n: 8, t: 3, fix: false },
+            MultiplierSpec::Truncated { n: 8, k: 2 },
+            MultiplierSpec::Kulkarni { n: 8 },
+        ] {
+            let job = s.job(design).monte_carlo(100_000).build().unwrap();
+            s.run(&job).unwrap();
+        }
+        let t = s.telemetry();
+        assert_eq!(t.kernel_dispatch.len(), 3);
+        assert!(
+            t.scalar_fallbacks().is_empty(),
+            "no registry design may run per-pair: {:?}",
+            t.kernel_dispatch
+        );
+        assert!(t.kernel_dispatch.iter().all(|(_, c)| *c == DispatchClass::Batched));
     }
 
     #[test]

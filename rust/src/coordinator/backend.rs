@@ -7,14 +7,14 @@
 //! `coordinator_integration`.
 
 use std::collections::hash_map::Entry;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 use anyhow::{anyhow, Result};
 
 use crate::error::metrics::ErrorStats;
 use crate::error::stream::BatchAccumulator;
-use crate::multiplier::{BatchMultiplier, MultiplierSpec, SegmentedSeqMul};
+use crate::multiplier::{BatchMultiplier, DispatchClass, MultiplierSpec, SegmentedSeqMul};
 use crate::runtime::Runtime;
 
 /// A batch evaluator. The segmented fast path ([`Self::eval_batch`]) is
@@ -52,6 +52,15 @@ pub trait EvalBackend {
             )),
         }
     }
+
+    /// Which kernel tier each design evaluated so far ran on, as
+    /// `(design name, class)` pairs. Backends that only run the lowered
+    /// segmented fast path (PJRT) report nothing; the CPU backend reports
+    /// every design it evaluated, so sweeps can prove nothing silently
+    /// regressed to per-pair dispatch.
+    fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
+        Vec::new()
+    }
 }
 
 /// Pure-Rust word-level backend (always available, any n ≤ 32). A thin
@@ -65,11 +74,14 @@ pub struct CpuBackend {
     batch: usize,
     /// Built evaluators for non-segmented designs, keyed by spec.
     designs: HashMap<MultiplierSpec, Box<dyn BatchMultiplier>>,
+    /// Kernel tier each evaluated design ran on, keyed by design name
+    /// (BTreeMap: deterministic report order).
+    dispatch: BTreeMap<String, DispatchClass>,
 }
 
 impl CpuBackend {
     pub fn new() -> Self {
-        Self { batch: 1 << 16, designs: HashMap::new() }
+        Self { batch: 1 << 16, designs: HashMap::new(), dispatch: BTreeMap::new() }
     }
 }
 
@@ -97,6 +109,9 @@ impl EvalBackend for CpuBackend {
         anyhow::ensure!((1..=32).contains(&n), "n={n} out of range");
         anyhow::ensure!(t < n, "t={t} out of range for n={n}");
         let m = SegmentedSeqMul::new(n, t, fix);
+        self.dispatch
+            .entry(BatchMultiplier::name(&m))
+            .or_insert_with(|| BatchMultiplier::dispatch_class(&m));
         let mut acc = BatchAccumulator::new(&m);
         acc.eval_pairs(a, b);
         Ok(acc.finish())
@@ -116,11 +131,16 @@ impl EvalBackend for CpuBackend {
                     Entry::Occupied(e) => e.into_mut(),
                     Entry::Vacant(v) => v.insert(other.build_batch()?),
                 };
+                self.dispatch.entry(other.name()).or_insert_with(|| m.dispatch_class());
                 let mut acc = BatchAccumulator::new(m.as_ref());
                 acc.eval_pairs(a, b);
                 Ok(acc.finish())
             }
         }
+    }
+
+    fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
+        self.dispatch.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 }
 
@@ -226,6 +246,26 @@ mod tests {
         let via_design = be.eval_design(&spec, &a, &b).unwrap();
         let via_batch = be.eval_batch(8, 4, true, &a, &b).unwrap();
         assert_eq!(via_design, via_batch);
+    }
+
+    #[test]
+    fn cpu_backend_reports_batch_kernel_dispatch_for_every_design() {
+        let mut be = CpuBackend::new();
+        assert!(be.kernel_dispatch().is_empty(), "nothing evaluated yet");
+        let mut rng = Xoshiro256::seed_from_u64(11);
+        let a: Vec<u64> = (0..100).map(|_| rng.next_bits(8)).collect();
+        let b: Vec<u64> = (0..100).map(|_| rng.next_bits(8)).collect();
+        for spec in MultiplierSpec::registry_examples(8) {
+            be.eval_design(&spec, &a, &b).unwrap();
+        }
+        let log = be.kernel_dispatch();
+        assert_eq!(log.len(), MultiplierSpec::registry_examples(8).len());
+        for (name, class) in &log {
+            assert_eq!(*class, DispatchClass::Batched, "{name} fell back to per-pair dispatch");
+        }
+        // Repeat evaluations don't duplicate entries.
+        be.eval_design(&MultiplierSpec::Mitchell { n: 8 }, &a, &b).unwrap();
+        assert_eq!(be.kernel_dispatch().len(), log.len());
     }
 
     #[test]

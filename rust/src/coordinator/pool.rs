@@ -31,6 +31,7 @@ use anyhow::{anyhow, Result};
 
 use crate::error::metrics::ErrorStats;
 use crate::error::SegmulError;
+use crate::multiplier::DispatchClass;
 
 use super::backend::EvalBackend;
 use super::driver::ChunkPlan;
@@ -58,6 +59,9 @@ enum Request {
     /// (The submitting thread holds no backend — PJRT handles are not
     /// `Send` — so support questions round-trip to a worker.)
     Probe(EvalJob, Sender<Result<(), SegmulError>>),
+    /// Collect the worker backend's kernel-dispatch log (which designs
+    /// ran on a true batch kernel vs a per-pair scalar fallback).
+    Dispatch(Sender<Vec<(String, DispatchClass)>>),
     Shutdown,
 }
 
@@ -133,6 +137,9 @@ impl WorkerPool {
                                 };
                                 let _ = reply.send(r);
                             }
+                            Ok(Request::Dispatch(reply)) => {
+                                let _ = reply.send(backend.kernel_dispatch());
+                            }
                             Ok(Request::Run(shared, results)) => {
                                 while !shared.stop.load(Ordering::Relaxed) {
                                     let id = shared.next.fetch_add(1, Ordering::Relaxed);
@@ -191,6 +198,31 @@ impl WorkerPool {
     /// Name of the backend the workers hold.
     pub fn backend_name(&self) -> &'static str {
         self.backend_name
+    }
+
+    /// Union of every worker's kernel-dispatch log: which designs ran on
+    /// a true batch kernel vs a per-pair scalar fallback, in
+    /// deterministic (name-sorted) order. A scalar sighting on *any*
+    /// worker wins the merge, so a sweep cannot silently regress to
+    /// per-pair dispatch on a subset of its workers.
+    pub fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
+        let mut merged: std::collections::BTreeMap<String, DispatchClass> =
+            std::collections::BTreeMap::new();
+        for wtx in &self.txs {
+            let (tx, rx) = channel();
+            if wtx.send(Request::Dispatch(tx)).is_err() {
+                continue;
+            }
+            if let Ok(log) = rx.recv() {
+                for (name, class) in log {
+                    let slot = merged.entry(name).or_insert(class);
+                    if class == DispatchClass::Scalar {
+                        *slot = DispatchClass::Scalar;
+                    }
+                }
+            }
+        }
+        merged.into_iter().collect()
     }
 
     /// Validate `job` and check it against a live worker backend (one
@@ -415,6 +447,28 @@ mod tests {
         pool.preflight(&EvalJob::mc(8, 2, true, 1000, 1)).unwrap();
         let ok = pool.run_job(&EvalJob::mc(8, 2, true, 1000, 1)).unwrap();
         assert_eq!(ok.stats.count, 1000);
+    }
+
+    #[test]
+    fn kernel_dispatch_reports_batch_kernels_across_workers() {
+        let pool = WorkerPool::start(cpu_factory(), 3).unwrap();
+        assert!(pool.kernel_dispatch().is_empty(), "nothing evaluated yet");
+        pool.run_job(&EvalJob::mc(8, 3, true, 200_000, 5)).unwrap();
+        pool.run_job(&EvalJob::new(
+            MultiplierSpec::Mitchell { n: 8 },
+            WorkSpec::MonteCarlo { samples: 200_000, seed: 5 },
+        ))
+        .unwrap();
+        let log = pool.kernel_dispatch();
+        // Chunk stealing spreads both jobs over the workers; the union
+        // must contain each design exactly once, on a batch kernel.
+        assert_eq!(
+            log.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["mitchell(n=8)", "segmul(n=8,t=3,fix)"]
+        );
+        for (name, class) in &log {
+            assert_eq!(*class, crate::multiplier::DispatchClass::Batched, "{name}");
+        }
     }
 
     #[test]

@@ -243,6 +243,26 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         session.workers(),
         session.backend_builds()
     );
+    // Kernel-dispatch audit: every design must have run on a true batch
+    // kernel — a scalar fallback means the sweep silently regressed to
+    // per-pair dispatch, so name the offenders loudly.
+    let telemetry = session.telemetry();
+    let scalar = telemetry.scalar_fallbacks();
+    if scalar.is_empty() {
+        if !telemetry.kernel_dispatch.is_empty() {
+            println!(
+                "kernel dispatch: all {} evaluated designs ran on batch kernels",
+                telemetry.kernel_dispatch.len()
+            );
+        }
+    } else {
+        eprintln!(
+            "warning: {} of {} designs fell back to per-pair scalar dispatch: {}",
+            scalar.len(),
+            telemetry.kernel_dispatch.len(),
+            scalar.join(", ")
+        );
+    }
     println!("wrote {csv_path:?} and {json_path:?}");
     Ok(())
 }

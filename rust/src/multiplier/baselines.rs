@@ -152,20 +152,10 @@ impl Multiplier for Kulkarni2x2 {
     }
 }
 
-/// The baseline set plotted alongside our design in Fig. 2, with a spread
-/// of aggressiveness comparable to the cited works' configurations.
-pub fn fig2_baselines(n: u32) -> Vec<Box<dyn Multiplier>> {
-    let mut v: Vec<Box<dyn Multiplier>> = vec![
-        Box::new(TruncatedMul { n, k: n / 4 }),
-        Box::new(TruncatedMul { n, k: n / 2 }),
-        Box::new(BrokenArrayMul { n, hbl: n / 4, vbl: n / 2 }),
-        Box::new(MitchellLog { n }),
-    ];
-    if n.is_power_of_two() {
-        v.push(Box::new(Kulkarni2x2 { n }));
-    }
-    v
-}
+// The Fig. 2 baseline set itself is defined once, as specs, in
+// `super::spec::DesignSet::Baselines` — the figure generator and the
+// sweeps both enumerate it from there and evaluate through the batched
+// kernels of `super::batch_baselines`.
 
 #[cfg(test)]
 mod tests {
@@ -256,10 +246,10 @@ mod tests {
     }
 
     #[test]
-    fn fig2_set_nonempty_and_distinct_names() {
-        let set = fig2_baselines(8);
+    fn baseline_design_set_nonempty_and_distinct_names() {
+        let set = crate::multiplier::DesignSet::Baselines.specs(8);
         assert!(set.len() >= 4);
-        let mut names: Vec<String> = set.iter().map(|m| m.name()).collect();
+        let mut names: Vec<String> = set.iter().map(|s| s.name()).collect();
         names.sort();
         names.dedup();
         assert_eq!(names.len(), set.len());

@@ -20,6 +20,29 @@
 use super::wordlevel::MulWord;
 use super::{AccurateMul, Multiplier, SegmentedSeqMul};
 
+/// Which dispatch tier a [`BatchMultiplier`]'s `mul_batch` runs on.
+/// Telemetry only — the class never affects results, but sweeps surface
+/// it so a design silently regressing to per-pair dispatch is visible
+/// (see `SessionTelemetry::kernel_dispatch`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DispatchClass {
+    /// A true batch kernel: monomorphized inner loop, branch-free /
+    /// uniform latency per pair, no per-pair virtual calls.
+    Batched,
+    /// A per-pair adapter: one `Multiplier::mul` virtual call per operand
+    /// pair. Only the differential-test reference evaluators report this.
+    Scalar,
+}
+
+impl DispatchClass {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DispatchClass::Batched => "batched",
+            DispatchClass::Scalar => "scalar",
+        }
+    }
+}
+
 /// A (possibly approximate) n-bit multiplier evaluated over operand
 /// slices. `mul_batch` must satisfy `out[i] = mul(a[i], b[i])` for the
 /// corresponding scalar model; implementations amortize dispatch and
@@ -32,6 +55,11 @@ pub trait BatchMultiplier: Sync {
     /// Batched products: `out[i] = mul(a[i], b[i])`. All three slices must
     /// have equal length.
     fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]);
+    /// The dispatch tier of [`Self::mul_batch`] — [`DispatchClass::Batched`]
+    /// unless the implementation is a per-pair scalar adapter.
+    fn dispatch_class(&self) -> DispatchClass {
+        DispatchClass::Batched
+    }
 }
 
 /// One branch-free segmented-carry multiply (the generic word-level
@@ -134,9 +162,10 @@ impl BatchMultiplier for AccurateMul {
 }
 
 /// Adapter running any scalar [`Multiplier`] under the batched interface
-/// (one virtual call per pair — used for the Fig. 2 related-work baselines,
-/// which have no batched kernels; the paper's design never goes through
-/// this).
+/// (one virtual call per pair). Since every registry design now has a
+/// true batch kernel (`batch_baselines`), this survives only as the
+/// differential-test reference and for ad-hoc user-defined scalar models;
+/// no production sweep path dispatches through it.
 pub struct ScalarBatch<'a, M: Multiplier + ?Sized>(pub &'a M);
 
 impl<M: Multiplier + ?Sized> BatchMultiplier for ScalarBatch<'_, M> {
@@ -146,6 +175,10 @@ impl<M: Multiplier + ?Sized> BatchMultiplier for ScalarBatch<'_, M> {
 
     fn name(&self) -> String {
         self.0.name()
+    }
+
+    fn dispatch_class(&self) -> DispatchClass {
+        DispatchClass::Scalar
     }
 
     fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
@@ -270,5 +303,14 @@ mod tests {
     fn rejects_mismatched_lengths() {
         let mut out = [0u64; 2];
         approx_seq_mul_batch(&[1, 2, 3], &[1, 2], &mut out, 4, 1, false);
+    }
+
+    #[test]
+    fn dispatch_classes() {
+        let m = SegmentedSeqMul::new(8, 3, false);
+        assert_eq!(BatchMultiplier::dispatch_class(&m), DispatchClass::Batched);
+        assert_eq!(ScalarBatch(&m).dispatch_class(), DispatchClass::Scalar);
+        assert_eq!(DispatchClass::Batched.name(), "batched");
+        assert_eq!(DispatchClass::Scalar.name(), "scalar");
     }
 }

@@ -1,0 +1,572 @@
+//! Branch-free batched kernels for the related-work baseline multipliers
+//! and the bit-level oracle.
+//!
+//! PR 1 gave the paper's segmented design a monomorphized, 4-wide-unrolled
+//! batch kernel; this module extends the same contract to every other
+//! design in the [`super::spec::MultiplierSpec`] registry, so a
+//! cross-design sweep (`--designs all`) never pays one virtual call per
+//! operand pair. The scalar models in [`super::baselines`] are written
+//! with data-dependent control flow (skip-on-zero-bit loops, Mitchell's
+//! two antilog cases, Kulkarni's recursion); each kernel here is an
+//! algebraic restructuring of the same product function into a
+//! branch-free, uniform-latency recurrence, bit-exact against its scalar
+//! model (`tests/kernel_differential.rs` checks every registry design):
+//!
+//! * **Truncation** — partial products split at column `k`: rows `j >= k`
+//!   collapse into one hardware multiply `a * (b >> k << k)`; rows
+//!   `j < k` contribute `k` masked adds (`(a >> (k-j)) << k`, AND-masked
+//!   by the sign-extended `b_j`).
+//! * **Broken-array** — same split at `max(hbl, vbl)`, with the
+//!   `hbl <= j < vbl` window as masked adds.
+//! * **Mitchell** — the leading-one detect becomes `leading_zeros` (a
+//!   single `lzcnt`-class instruction), the zero-operand early-out an
+//!   AND mask, and the two piecewise-antilog cases a mask select on the
+//!   mantissa-sum carry bit.
+//! * **Kulkarni** — the 2×2-block recursion composes sub-products with
+//!   exact additions, so the only approximation is the base block
+//!   `3 × 3 = 7` (error `-2`). Summing over all digit pairs:
+//!   `kul(a, b) = a*b - 2 * f(a) * f(b)` where
+//!   `f(x) = Σ_i [digit_i(x) = 3] · 4^i`, and `f` is one SWAR expression
+//!   (`x & (x >> 1) & 0x5555…`, the marker bit landing exactly at `4^i`).
+//!   Two hardware multiplies replace the whole recursion.
+//! * **Bit-level oracle** — [`BitSlicedBitLevel`] transposes 64 operand
+//!   pairs into bit planes (word `i` = bit `i` of all 64 lanes) and runs
+//!   the paper's `Ŝ/Ĉ` recurrences once with `u64` bitwise ops, i.e. 64
+//!   pairs per pass instead of one — the same trick the gate-level
+//!   netlist simulator uses.
+//!
+//! The word-level kernels are unrolled four pairs wide like
+//! [`super::batch::approx_seq_mul_batch`]: the lanes carry no data
+//! dependencies, so independent multiplications overlap in flight.
+
+use super::baselines::{BrokenArrayMul, Kulkarni2x2, MitchellLog, TruncatedMul};
+use super::batch::BatchMultiplier;
+use super::Multiplier;
+
+/// Apply a branch-free per-pair kernel over equal-length slices, unrolled
+/// four pairs wide (monomorphized per call site via the closure type).
+#[inline(always)]
+fn batch_unrolled<F: Fn(u64, u64) -> u64>(a: &[u64], b: &[u64], out: &mut [u64], f: F) {
+    assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+    assert_eq!(a.len(), out.len(), "output slice must match operand length");
+    let mut ac = a.chunks_exact(4);
+    let mut bc = b.chunks_exact(4);
+    let mut oc = out.chunks_exact_mut(4);
+    for ((ca, cb), co) in (&mut ac).zip(&mut bc).zip(&mut oc) {
+        co[0] = f(ca[0], cb[0]);
+        co[1] = f(ca[1], cb[1]);
+        co[2] = f(ca[2], cb[2]);
+        co[3] = f(ca[3], cb[3]);
+    }
+    for ((&ai, &bi), o) in ac.remainder().iter().zip(bc.remainder()).zip(oc.into_remainder()) {
+        *o = f(ai, bi);
+    }
+}
+
+/// One branch-free vertically-truncated multiply (columns `< k` dropped).
+/// The loop trip count depends only on the configuration, never the data.
+#[inline(always)]
+fn trunc_mul_one(a: u64, b: u64, k: u32) -> u64 {
+    // Rows j >= k keep all their columns: one hardware multiply.
+    let mut p = a * ((b >> k) << k);
+    // Rows j < k keep only the bits landing in columns >= k.
+    let mut j = 0u32;
+    while j < k {
+        p += ((a >> (k - j)) << k) & ((b >> j) & 1).wrapping_neg();
+        j += 1;
+    }
+    p
+}
+
+/// Batched [`TruncatedMul`] products, bit-exact with the scalar model.
+/// Requirements: equal slice lengths, `1 <= n <= 32`, `k <= n`, operands
+/// `< 2^n`.
+pub fn trunc_mul_batch(a: &[u64], b: &[u64], out: &mut [u64], n: u32, k: u32) {
+    assert!(n >= 1 && n <= 32, "trunc_mul_batch supports 1 <= n <= 32");
+    assert!(k <= n, "truncation column k={k} must satisfy k <= n={n}");
+    debug_assert!(a.iter().chain(b).all(|&x| x >> n == 0), "operands must be < 2^n");
+    batch_unrolled(a, b, out, |x, y| trunc_mul_one(x, y, k));
+}
+
+/// One branch-free broken-array multiply (rows `< hbl`, columns `< vbl`
+/// dropped).
+#[inline(always)]
+fn bam_mul_one(a: u64, b: u64, hbl: u32, vbl: u32) -> u64 {
+    // Rows j >= max(hbl, vbl) keep all their columns.
+    let cut = hbl.max(vbl);
+    let mut p = a * ((b >> cut) << cut);
+    // Surviving rows below the vertical break line.
+    let mut j = hbl;
+    while j < vbl {
+        p += ((a >> (vbl - j)) << vbl) & ((b >> j) & 1).wrapping_neg();
+        j += 1;
+    }
+    p
+}
+
+/// Batched [`BrokenArrayMul`] products, bit-exact with the scalar model.
+/// Requirements: equal slice lengths, `1 <= n <= 32`, `hbl <= n`,
+/// `vbl <= n`, operands `< 2^n`.
+pub fn bam_mul_batch(a: &[u64], b: &[u64], out: &mut [u64], n: u32, hbl: u32, vbl: u32) {
+    assert!(n >= 1 && n <= 32, "bam_mul_batch supports 1 <= n <= 32");
+    assert!(hbl <= n && vbl <= n, "break lines (hbl={hbl}, vbl={vbl}) must not exceed n={n}");
+    debug_assert!(a.iter().chain(b).all(|&x| x >> n == 0), "operands must be < 2^n");
+    batch_unrolled(a, b, out, |x, y| bam_mul_one(x, y, hbl, vbl));
+}
+
+/// One branch-free Mitchell logarithmic multiply.
+#[inline(always)]
+fn mitchell_mul_one(a: u64, b: u64) -> u64 {
+    // All-ones when both operands are nonzero, zero otherwise: the scalar
+    // model's early-out, as a mask applied at the end.
+    let nz = (((a != 0) & (b != 0)) as u64).wrapping_neg();
+    let am = a & nz;
+    let bm = b & nz;
+    // Characteristic via leading_zeros (one lzcnt-class instruction); the
+    // `| 1` only guards the zeroed case and never changes the MSB of a
+    // nonzero word. The mantissa drops the MSB — as a bit-clear, so the
+    // zeroed case (k = 0, bit 0 unset) yields 0 without underflow.
+    let k1 = 63 - (am | 1).leading_zeros();
+    let k2 = 63 - (bm | 1).leading_zeros();
+    let x1 = am & !(1u64 << k1);
+    let x2 = bm & !(1u64 << k2);
+    let k = k1 + k2;
+    // S = 2^K (f1 + f2) with f1, f2 < 1, so S < 2^(K+1): bit K of S is
+    // exactly the `f1 + f2 >= 1` case split, selecting between the two
+    // piecewise antilog forms without a data-dependent branch.
+    let s = (x1 << k2) + (x2 << k1);
+    let over = ((s >> k) & 1).wrapping_neg();
+    ((((1u64 << k) + s) & !over) | ((s << 1) & over)) & nz
+}
+
+/// Batched [`MitchellLog`] products, bit-exact with the scalar model.
+/// Requirements: equal slice lengths, `1 <= n <= 32`, operands `< 2^n`.
+pub fn mitchell_mul_batch(a: &[u64], b: &[u64], out: &mut [u64], n: u32) {
+    assert!(n >= 1 && n <= 32, "mitchell_mul_batch supports 1 <= n <= 32");
+    debug_assert!(a.iter().chain(b).all(|&x| x >> n == 0), "operands must be < 2^n");
+    batch_unrolled(a, b, out, mitchell_mul_one);
+}
+
+/// One branch-free Kulkarni 2×2-block multiply: `a*b - 2 f(a) f(b)`.
+///
+/// The recursion composes half-width sub-products with exact adds, so
+/// errors from the `3 × 3 = 7` base blocks (−2 each, at bit `4^(i+j)` for
+/// digit pair `(i, j)`) sum linearly:
+/// `error = −2 Σ_{i,j} [a_i = 3][b_j = 3] 4^(i+j) = −2 f(a) f(b)` with
+/// `f(x) = Σ_i [x_i = 3] 4^i = x & (x >> 1) & 0b…0101` (the AND of each
+/// digit's two bits lands on bit `2i`, which *is* `4^i`).
+#[inline(always)]
+fn kulkarni_mul_one(a: u64, b: u64, m3: u64) -> u64 {
+    let fa = a & (a >> 1) & m3;
+    let fb = b & (b >> 1) & m3;
+    // No underflow: a >= 3 f(a) and b >= 3 f(b), so a*b >= 9 f(a) f(b).
+    a * b - 2 * fa * fb
+}
+
+/// Batched [`Kulkarni2x2`] products, bit-exact with the scalar recursion.
+/// Requirements: equal slice lengths, `n` a power of two in `2..=32`,
+/// operands `< 2^n`.
+pub fn kulkarni_mul_batch(a: &[u64], b: &[u64], out: &mut [u64], n: u32) {
+    assert!(
+        n.is_power_of_two() && (2..=32).contains(&n),
+        "kulkarni_mul_batch needs a power-of-two n in 2..=32"
+    );
+    debug_assert!(a.iter().chain(b).all(|&x| x >> n == 0), "operands must be < 2^n");
+    let m3 = 0x5555_5555_5555_5555u64 & ((1u64 << n) - 1);
+    batch_unrolled(a, b, out, |x, y| kulkarni_mul_one(x, y, m3));
+}
+
+impl BatchMultiplier for TruncatedMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        Multiplier::name(self)
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        trunc_mul_batch(a, b, out, self.n, self.k);
+    }
+}
+
+impl BatchMultiplier for BrokenArrayMul {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        Multiplier::name(self)
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        bam_mul_batch(a, b, out, self.n, self.hbl, self.vbl);
+    }
+}
+
+impl BatchMultiplier for MitchellLog {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        Multiplier::name(self)
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        mitchell_mul_batch(a, b, out, self.n);
+    }
+}
+
+impl BatchMultiplier for Kulkarni2x2 {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        Multiplier::name(self)
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        kulkarni_mul_batch(a, b, out, self.n);
+    }
+}
+
+/// Word-parallel (bit-sliced) evaluator of the paper's Boolean `Ŝ/Ĉ`
+/// recurrences: 64 operand pairs per pass.
+///
+/// Layout: operands are transposed into *bit planes* — plane `i` is a
+/// `u64` whose lane-`l` bit is bit `i` of pair `l`'s operand. The
+/// recurrence of [`super::bitlevel::approx_seq_mul_bitlevel`] then runs
+/// once per pass with every `u8` cell widened to a 64-lane `u64` plane
+/// (AND/XOR/OR are lane-wise), and the 2n product planes are transposed
+/// back. Partial groups pad with `(0, 0)` lanes, which evaluate to 0 and
+/// are never written back.
+///
+/// This keeps the oracle a *literal* transcription of the paper's
+/// equations — same recurrence order, same `i = t` D-FF case, same
+/// fix-to-1 product patch — while making oracle cross-checks at n = 16
+/// roughly the cost of the word-level models instead of ~n² bit
+/// operations per pair.
+#[derive(Clone, Copy, Debug)]
+pub struct BitSlicedBitLevel {
+    n: u32,
+    t: u32,
+    fix: bool,
+}
+
+impl BitSlicedBitLevel {
+    pub fn new(n: u32, t: u32, fix: bool) -> Self {
+        assert!(n >= 1 && n <= 32, "BitSlicedBitLevel supports 1 <= n <= 32");
+        assert!(t < n, "splitting point must satisfy 0 <= t < n");
+        BitSlicedBitLevel { n, t, fix }
+    }
+}
+
+/// One <= 64-lane bit-sliced pass, monomorphized over the fix-to-1 flag.
+fn bitlevel_group<const FIX: bool>(a: &[u64], b: &[u64], out: &mut [u64], n: usize, t: usize) {
+    // Transpose operands into bit planes (lanes beyond a.len() stay 0).
+    let mut abit = [0u64; 32];
+    let mut bbit = [0u64; 32];
+    for (l, (&av, &bv)) in a.iter().zip(b).enumerate() {
+        for i in 0..n {
+            abit[i] |= ((av >> i) & 1) << l;
+            bbit[i] |= ((bv >> i) & 1) << l;
+        }
+    }
+
+    // Product planes p[r], r in 0..2n.
+    let mut p = [0u64; 64];
+    // S planes of the previous row; index n holds the carry-out C_{n-1}^j.
+    let mut s_prev = [0u64; 33];
+    let mut s_cur = [0u64; 33];
+    // j = 0: S^0 = a & -b_0; no carries yet.
+    for i in 0..n {
+        s_prev[i] = abit[i] & bbit[0];
+    }
+    s_prev[n] = 0;
+    if n >= 2 {
+        // p_0 = S_0^0 (the r < n-1 product case, row 0).
+        p[0] = s_prev[0];
+    }
+
+    // D-FF'd LSP carry-out plane from the previous row: Ĉ_{t-1}^{j-1}.
+    let mut c_dff = 0u64;
+    for j in 1..n {
+        // This row's Ĉ_{t-1}^j plane (captured when the ripple passes
+        // bit t-1; stays 0 for t = 0, where the D-FF path is dead).
+        let mut c_tm1 = 0u64;
+        // i = 0: S = Ŝ_1^{j-1} ^ pp, C = Ŝ_1^{j-1} & pp.
+        let pp0 = abit[0] & bbit[j];
+        s_cur[0] = s_prev[1] ^ pp0;
+        let mut c_prev = s_prev[1] & pp0;
+        if t == 1 {
+            c_tm1 = c_prev;
+        }
+        for i in 1..n {
+            let pp = abit[i] & bbit[j];
+            // The segmentation: bit t consumes the previous-cycle LSP
+            // carry-out; all other bits ripple in-cycle.
+            let cin = if i == t { c_dff } else { c_prev };
+            let sp = s_prev[i + 1];
+            s_cur[i] = sp ^ cin ^ pp;
+            c_prev = ((sp ^ pp) & cin) | (sp & pp);
+            if i + 1 == t {
+                c_tm1 = c_prev;
+            }
+        }
+        // i = n: Ŝ_n^j = Ĉ_{n-1}^j.
+        s_cur[n] = c_prev;
+        if j < n - 1 {
+            // p_r = S_0^r for r < n-1.
+            p[j] = s_cur[0];
+        }
+        std::mem::swap(&mut s_prev, &mut s_cur);
+        c_dff = c_tm1;
+    }
+
+    // p_r = Ŝ_{r+1-n}^{n-1} for r in n-1..2n (row n-1 now in s_prev;
+    // for n = 1 that is row 0, matching the scalar transcription).
+    for i in 0..=n {
+        p[n - 1 + i] = s_prev[i];
+    }
+
+    // Fix-to-1: lanes with Ĉ_{t-1}^{n-1} = 1 force the n+t LSBs to 1.
+    if FIX && t >= 1 && n >= 2 {
+        for pr in p[..n + t].iter_mut() {
+            *pr |= c_dff;
+        }
+    }
+
+    // Transpose the product planes back into per-lane words.
+    for (l, o) in out.iter_mut().enumerate() {
+        let mut v = 0u64;
+        for (r, &pr) in p[..2 * n].iter().enumerate() {
+            v |= ((pr >> l) & 1) << r;
+        }
+        *o = v;
+    }
+}
+
+impl BatchMultiplier for BitSlicedBitLevel {
+    fn n(&self) -> u32 {
+        self.n
+    }
+
+    fn name(&self) -> String {
+        format!("bitlevel(n={},t={}{})", self.n, self.t, if self.fix { ",fix" } else { "" })
+    }
+
+    fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+        assert_eq!(a.len(), out.len(), "output slice must match operand length");
+        let (n, t) = (self.n as usize, self.t as usize);
+        for ((ca, cb), co) in a.chunks(64).zip(b.chunks(64)).zip(out.chunks_mut(64)) {
+            if self.fix {
+                bitlevel_group::<true>(ca, cb, co, n, t);
+            } else {
+                bitlevel_group::<false>(ca, cb, co, n, t);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::bitlevel::approx_seq_mul_bitlevel;
+    use crate::util::prop::Cases;
+
+    /// Every ragged tail length through the 4-wide unroll, for each
+    /// word-level baseline kernel.
+    #[test]
+    fn batch_matches_scalar_all_tail_lengths() {
+        let n = 8u32;
+        for len in 0..=9usize {
+            let a: Vec<u64> = (0..len as u64).map(|i| (i * 41) & 0xFF).collect();
+            let b: Vec<u64> = (0..len as u64).map(|i| (i * 89 + 3) & 0xFF).collect();
+            let mut out = vec![0u64; len];
+            let models: Vec<(Box<dyn Multiplier>, Box<dyn BatchMultiplier>)> = vec![
+                (
+                    Box::new(TruncatedMul { n, k: 3 }),
+                    Box::new(TruncatedMul { n, k: 3 }),
+                ),
+                (
+                    Box::new(BrokenArrayMul { n, hbl: 2, vbl: 4 }),
+                    Box::new(BrokenArrayMul { n, hbl: 2, vbl: 4 }),
+                ),
+                (Box::new(MitchellLog { n }), Box::new(MitchellLog { n })),
+                (Box::new(Kulkarni2x2 { n }), Box::new(Kulkarni2x2 { n })),
+            ];
+            for (scalar, batch) in &models {
+                batch.mul_batch(&a, &b, &mut out);
+                for i in 0..len {
+                    assert_eq!(
+                        out[i],
+                        scalar.mul(a[i], b[i]),
+                        "{} len={len} i={i}",
+                        BatchMultiplier::name(batch.as_ref())
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_trunc_matches_scalar_random() {
+        Cases::new(0x7A11C, 200).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let k = rng.next_below(n as u64 + 1) as u32;
+            let len = 1 + rng.next_below(70) as usize;
+            let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let mut out = vec![0u64; len];
+            trunc_mul_batch(&a, &b, &mut out, n, k);
+            let m = TruncatedMul { n, k };
+            for i in 0..len {
+                assert_eq!(out[i], m.mul(a[i], b[i]), "n={n} k={k} i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_bam_matches_scalar_random() {
+        Cases::new(0xBA40, 200).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let hbl = rng.next_below(n as u64 + 1) as u32;
+            let vbl = rng.next_below(n as u64 + 1) as u32;
+            let len = 1 + rng.next_below(70) as usize;
+            let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let mut out = vec![0u64; len];
+            bam_mul_batch(&a, &b, &mut out, n, hbl, vbl);
+            let m = BrokenArrayMul { n, hbl, vbl };
+            for i in 0..len {
+                assert_eq!(out[i], m.mul(a[i], b[i]), "n={n} hbl={hbl} vbl={vbl} i={i}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mitchell_matches_scalar_random() {
+        Cases::new(0x317C, 200).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let len = 1 + rng.next_below(70) as usize;
+            // Bias some operands to 0 and powers of two (the scalar
+            // model's special paths).
+            let gen = |rng: &mut crate::util::rng::Xoshiro256| match rng.next_below(8) {
+                0 => 0u64,
+                1 => 1u64 << rng.next_below(n as u64),
+                _ => rng.next_bits(n),
+            };
+            let a: Vec<u64> = (0..len).map(|_| gen(rng)).collect();
+            let b: Vec<u64> = (0..len).map(|_| gen(rng)).collect();
+            let mut out = vec![0u64; len];
+            mitchell_mul_batch(&a, &b, &mut out, n);
+            let m = MitchellLog { n };
+            for i in 0..len {
+                assert_eq!(out[i], m.mul(a[i], b[i]), "n={n} a={} b={} i={i}", a[i], b[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn kulkarni_closed_form_matches_recursion_exhaustive_n4() {
+        let m = Kulkarni2x2 { n: 4 };
+        let a: Vec<u64> = (0..256u64).map(|i| i & 0xF).collect();
+        let b: Vec<u64> = (0..256u64).map(|i| i >> 4).collect();
+        let mut out = vec![0u64; 256];
+        kulkarni_mul_batch(&a, &b, &mut out, 4);
+        for i in 0..256 {
+            assert_eq!(out[i], m.mul(a[i], b[i]), "a={} b={}", a[i], b[i]);
+        }
+    }
+
+    #[test]
+    fn prop_kulkarni_matches_recursion_random() {
+        Cases::new(0x2317, 200).run(|rng, _| {
+            let n = 1u32 << (1 + rng.next_below(5)); // 2, 4, 8, 16, 32
+            let len = 1 + rng.next_below(70) as usize;
+            let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let mut out = vec![0u64; len];
+            kulkarni_mul_batch(&a, &b, &mut out, n);
+            let m = Kulkarni2x2 { n };
+            for i in 0..len {
+                assert_eq!(out[i], m.mul(a[i], b[i]), "n={n} a={} b={} i={i}", a[i], b[i]);
+            }
+        });
+    }
+
+    #[test]
+    fn bitsliced_oracle_matches_scalar_transcription_exhaustive_small() {
+        for n in [1u32, 2, 4, 5] {
+            for t in 0..n {
+                for fix in [false, true] {
+                    let m = BitSlicedBitLevel::new(n, t, fix);
+                    let space = 1u64 << (2 * n);
+                    let mask = (1u64 << n) - 1;
+                    let a: Vec<u64> = (0..space).map(|i| i & mask).collect();
+                    let b: Vec<u64> = (0..space).map(|i| i >> n).collect();
+                    let mut out = vec![0u64; a.len()];
+                    m.mul_batch(&a, &b, &mut out);
+                    for i in 0..a.len() {
+                        assert_eq!(
+                            out[i],
+                            approx_seq_mul_bitlevel(a[i], b[i], n, t, fix),
+                            "n={n} t={t} fix={fix} a={} b={}",
+                            a[i],
+                            b[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_bitsliced_oracle_matches_scalar_random() {
+        Cases::new(0xB17B, 60).run(|rng, _| {
+            let n = 1 + rng.next_below(32) as u32;
+            let t = rng.next_below(n as u64) as u32;
+            let fix = rng.next_bits(1) == 1;
+            // Ragged lengths around the 64-lane group size.
+            let len = 1 + rng.next_below(150) as usize;
+            let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+            let m = BitSlicedBitLevel::new(n, t, fix);
+            let mut out = vec![0u64; len];
+            m.mul_batch(&a, &b, &mut out);
+            for i in 0..len {
+                assert_eq!(
+                    out[i],
+                    approx_seq_mul_bitlevel(a[i], b[i], n, t, fix),
+                    "n={n} t={t} fix={fix} i={i} a={} b={}",
+                    a[i],
+                    b[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn batch_trait_names_match_scalar_names() {
+        let t = TruncatedMul { n: 8, k: 2 };
+        assert_eq!(BatchMultiplier::name(&t), Multiplier::name(&t));
+        let bam = BrokenArrayMul { n: 8, hbl: 1, vbl: 3 };
+        assert_eq!(BatchMultiplier::name(&bam), Multiplier::name(&bam));
+        let mi = MitchellLog { n: 8 };
+        assert_eq!(BatchMultiplier::name(&mi), Multiplier::name(&mi));
+        let ku = Kulkarni2x2 { n: 8 };
+        assert_eq!(BatchMultiplier::name(&ku), Multiplier::name(&ku));
+        assert_eq!(BitSlicedBitLevel::new(8, 3, true).name(), "bitlevel(n=8,t=3,fix)");
+        assert_eq!(BitSlicedBitLevel::new(8, 3, false).name(), "bitlevel(n=8,t=3)");
+    }
+
+    #[test]
+    #[should_panic(expected = "equal length")]
+    fn rejects_mismatched_lengths() {
+        let mut out = [0u64; 2];
+        trunc_mul_batch(&[1, 2, 3], &[1, 2], &mut out, 4, 1);
+    }
+}

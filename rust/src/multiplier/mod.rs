@@ -19,19 +19,32 @@
 //!   4-wide-unrolled inner loop (one virtual call per slice instead of one
 //!   per pair). This is what the exhaustive / Monte-Carlo sweeps and the
 //!   coordinator's CPU backend actually run; the scalar [`Multiplier`]
-//!   trait remains for single multiplies and the related-work baselines
-//!   (adapted via [`batch::ScalarBatch`]).
+//!   trait remains for single multiplies and as the differential-test
+//!   reference (adapted via [`batch::ScalarBatch`] /
+//!   [`spec::OwnedScalarBatch`]).
+//! * [`batch_baselines`] — branch-free batch kernels for the baseline
+//!   family (truncation / broken-array collapse to one hardware multiply
+//!   plus masked adds, Mitchell goes branch-free via `leading_zeros` and
+//!   a mask select, Kulkarni to `a*b - 2 f(a) f(b)` with a SWAR digit
+//!   marker) and the bit-sliced 64-lane oracle
+//!   ([`batch_baselines::BitSlicedBitLevel`]) — so every design in the
+//!   [`spec::MultiplierSpec`] registry evaluates through a true batch
+//!   kernel ([`batch::DispatchClass::Batched`]).
 
 pub mod baselines;
 pub mod batch;
+pub mod batch_baselines;
 pub mod bitlevel;
 pub mod spec;
 pub mod wide;
 pub mod wordlevel;
 
-pub use batch::{approx_seq_mul_batch, exact_mul_batch, BatchMultiplier, ScalarBatch};
+pub use batch::{approx_seq_mul_batch, exact_mul_batch, BatchMultiplier, DispatchClass, ScalarBatch};
+pub use batch_baselines::{
+    bam_mul_batch, kulkarni_mul_batch, mitchell_mul_batch, trunc_mul_batch, BitSlicedBitLevel,
+};
 pub use bitlevel::approx_seq_mul_bitlevel;
-pub use spec::{DesignSet, MultiplierSpec};
+pub use spec::{DesignSet, MultiplierSpec, OwnedScalarBatch};
 pub use wide::U512;
 pub use wordlevel::{approx_seq_mul, approx_seq_mul_u128, approx_seq_mul_wide, exact_mul};
 
@@ -126,6 +139,6 @@ mod tests {
     fn trait_dispatch_matches_fn() {
         let m = SegmentedSeqMul::new(8, 3, true);
         assert_eq!(m.mul(200, 100), wordlevel::approx_seq_mul(200, 100, 8, 3, true));
-        assert_eq!(m.name(), "segmul(n=8,t=3,fix)");
+        assert_eq!(Multiplier::name(&m), "segmul(n=8,t=3,fix)");
     }
 }

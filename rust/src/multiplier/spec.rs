@@ -25,7 +25,8 @@ use crate::netlist::generators::seq_mult::{run_batch, seq_mult, SeqMultCircuit};
 use crate::netlist::sim::SeqSim;
 
 use super::baselines::{BrokenArrayMul, Kulkarni2x2, MitchellLog, TruncatedMul};
-use super::batch::BatchMultiplier;
+use super::batch::{BatchMultiplier, DispatchClass};
+use super::batch_baselines::BitSlicedBitLevel;
 use super::bitlevel::approx_seq_mul_bitlevel;
 use super::wide::U512;
 use super::{AccurateMul, Multiplier, SegmentedSeqMul};
@@ -206,11 +207,48 @@ impl MultiplierSpec {
     /// ranges from trivial (word-level models) to a full netlist build —
     /// backends cache the result per spec (see
     /// [`crate::coordinator::CpuBackend`]).
+    ///
+    /// Every design family resolves to a true batch kernel
+    /// ([`DispatchClass::Batched`]): the segmented/accurate fast paths and
+    /// the branch-free baseline kernels of
+    /// [`super::batch_baselines`], the bit-sliced 64-lane oracle, and the
+    /// bit-parallel netlist simulator. The per-pair scalar adapters exist
+    /// only behind [`MultiplierSpec::build_scalar_reference`].
     pub fn build_batch(&self) -> Result<Box<dyn BatchMultiplier>, SegmulError> {
         self.validate()?;
         Ok(match *self {
             MultiplierSpec::Segmented { n, t, fix } => Box::new(SegmentedSeqMul::new(n, t, fix)),
             MultiplierSpec::Accurate { n } => Box::new(AccurateMul { n }),
+            MultiplierSpec::Truncated { n, k } => Box::new(TruncatedMul { n, k }),
+            MultiplierSpec::BrokenArray { n, hbl, vbl } => {
+                Box::new(BrokenArrayMul { n, hbl, vbl })
+            }
+            MultiplierSpec::Mitchell { n } => Box::new(MitchellLog { n }),
+            MultiplierSpec::Kulkarni { n } => Box::new(Kulkarni2x2 { n }),
+            MultiplierSpec::BitLevel { n, t, fix } => Box::new(BitSlicedBitLevel::new(n, t, fix)),
+            MultiplierSpec::Netlist { n, t, fix } => Box::new(NetlistMul::new(n, t, fix)),
+        })
+    }
+
+    /// Construct the **per-pair scalar reference** for this design: the
+    /// scalar model wrapped in [`OwnedScalarBatch`], one virtual call per
+    /// operand pair. This is the differential-test baseline the batch
+    /// kernels of [`Self::build_batch`] are checked bit-exact against
+    /// (`tests/kernel_differential.rs`), and the slow side of the
+    /// scalar-vs-batched comparison in `benches/batch_kernel.rs` — it is
+    /// never dispatched on a production sweep path.
+    ///
+    /// The netlist design has no scalar software model; its reference is
+    /// the scalar word-level fast path (`approx_seq_mul`), which computes
+    /// the same product function (so the returned evaluator's *name*
+    /// reports the word-level model, not the netlist).
+    pub fn build_scalar_reference(&self) -> Result<Box<dyn BatchMultiplier>, SegmulError> {
+        self.validate()?;
+        Ok(match *self {
+            MultiplierSpec::Segmented { n, t, fix } => {
+                Box::new(OwnedScalarBatch(SegmentedSeqMul::new(n, t, fix)))
+            }
+            MultiplierSpec::Accurate { n } => Box::new(OwnedScalarBatch(AccurateMul { n })),
             MultiplierSpec::Truncated { n, k } => {
                 Box::new(OwnedScalarBatch(TruncatedMul { n, k }))
             }
@@ -222,7 +260,9 @@ impl MultiplierSpec {
             MultiplierSpec::BitLevel { n, t, fix } => {
                 Box::new(OwnedScalarBatch(BitLevelMul { n, t, fix }))
             }
-            MultiplierSpec::Netlist { n, t, fix } => Box::new(NetlistMul::new(n, t, fix)),
+            MultiplierSpec::Netlist { n, t, fix } => {
+                Box::new(OwnedScalarBatch(SegmentedSeqMul::new(n, t, fix)))
+            }
         })
     }
 
@@ -267,7 +307,12 @@ impl Multiplier for BitLevelMul {
 
 /// Owning counterpart of [`super::batch::ScalarBatch`]: runs a scalar
 /// [`Multiplier`] under the batched interface (one call per pair).
-struct OwnedScalarBatch<M: Multiplier>(M);
+///
+/// Survives only as the differential-test reference
+/// ([`MultiplierSpec::build_scalar_reference`]) — every registry design's
+/// production evaluator is a true batch kernel, and `kernel_differential`
+/// checks the two bit-exact against each other.
+pub struct OwnedScalarBatch<M: Multiplier>(pub M);
 
 impl<M: Multiplier> BatchMultiplier for OwnedScalarBatch<M> {
     fn n(&self) -> u32 {
@@ -276,6 +321,10 @@ impl<M: Multiplier> BatchMultiplier for OwnedScalarBatch<M> {
 
     fn name(&self) -> String {
         self.0.name()
+    }
+
+    fn dispatch_class(&self) -> DispatchClass {
+        DispatchClass::Scalar
     }
 
     fn mul_batch(&self, a: &[u64], b: &[u64], out: &mut [u64]) {
@@ -443,9 +492,12 @@ mod tests {
         );
         assert_eq!(
             MultiplierSpec::Truncated { n: 8, k: 2 }.name(),
-            TruncatedMul { n: 8, k: 2 }.name()
+            Multiplier::name(&TruncatedMul { n: 8, k: 2 })
         );
-        assert_eq!(MultiplierSpec::Accurate { n: 8 }.name(), AccurateMul { n: 8 }.name());
+        assert_eq!(
+            MultiplierSpec::Accurate { n: 8 }.name(),
+            Multiplier::name(&AccurateMul { n: 8 })
+        );
     }
 
     #[test]
@@ -535,6 +587,41 @@ mod tests {
                     assert_eq!(out[i], a[i] * b[i]);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn every_registry_design_builds_a_true_batch_kernel() {
+        // The acceptance contract of the batched-kernel layer: no
+        // production evaluator is a per-pair scalar adapter, while every
+        // scalar *reference* reports exactly that.
+        for spec in MultiplierSpec::registry_examples(8) {
+            let batch = spec.build_batch().unwrap();
+            assert_eq!(
+                batch.dispatch_class(),
+                DispatchClass::Batched,
+                "{} must not fall back to per-pair dispatch",
+                spec.name()
+            );
+            let reference = spec.build_scalar_reference().unwrap();
+            assert_eq!(reference.dispatch_class(), DispatchClass::Scalar, "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn batch_kernels_match_scalar_references() {
+        let n = 8u32;
+        let mut rng = Xoshiro256::seed_from_u64(0xD1F);
+        let a: Vec<u64> = (0..300).map(|_| rng.next_bits(n)).collect();
+        let b: Vec<u64> = (0..300).map(|_| rng.next_bits(n)).collect();
+        for spec in MultiplierSpec::registry_examples(n) {
+            let batch = spec.build_batch().unwrap();
+            let reference = spec.build_scalar_reference().unwrap();
+            let mut got = vec![0u64; a.len()];
+            let mut want = vec![0u64; a.len()];
+            batch.mul_batch(&a, &b, &mut got);
+            reference.mul_batch(&a, &b, &mut want);
+            assert_eq!(got, want, "{}", spec.name());
         }
     }
 

@@ -7,11 +7,11 @@ use anyhow::Result;
 use crate::config::Config;
 use crate::coordinator::{run_job, EvalBackend, EvalJob};
 use crate::error::closed_form;
-use crate::error::exhaustive::{exhaustive_stats, exhaustive_stats_mul};
+use crate::error::exhaustive::{exhaustive_stats, exhaustive_stats_batch};
 use crate::error::metrics::ErrorMetrics;
-use crate::error::montecarlo::{mc_stats_mul, McConfig};
+use crate::error::montecarlo::{mc_stats_batch, McConfig};
 use crate::error::probprop;
-use crate::multiplier::baselines::fig2_baselines;
+use crate::multiplier::DesignSet;
 use crate::netlist::generators::seq_mult::seq_mult;
 use crate::tech::{measure_activity, AsicModel, FpgaModel, HwFigures};
 
@@ -55,15 +55,18 @@ pub fn fig2(cfg: &Config, backend: &mut dyn EvalBackend) -> Result<Table> {
                 table.row(metrics_row(name, n, Some(t), &m));
             }
         }
-        // baselines (n <= 32; Kulkarni needs power-of-two)
-        for bl in fig2_baselines(n) {
+        // baselines (n <= 32; Kulkarni needs power-of-two) — evaluated
+        // through the same branch-free batch kernels the sweeps run, not
+        // the per-pair scalar adapters.
+        for spec in DesignSet::Baselines.specs(n) {
+            let bl = spec.build_batch()?;
             let m = if exhaustive {
-                exhaustive_stats_mul(bl.as_ref(), cfg.workers).metrics()
+                exhaustive_stats_batch(bl.as_ref(), cfg.workers).metrics()
             } else {
                 let mc = McConfig::uniform(cfg.mc_samples, cfg.seed ^ 0xB15E);
-                mc_stats_mul(bl.as_ref(), &mc).metrics()
+                mc_stats_batch(bl.as_ref(), &mc).metrics()
             };
-            table.row(metrics_row(&bl.name(), n, None, &m));
+            table.row(metrics_row(&spec.name(), n, None, &m));
         }
     }
     table.write(&cfg.results_dir.join("fig2_error_metrics.csv"))?;

@@ -23,7 +23,9 @@ use segmul::error::metrics::ErrorStats;
 use segmul::error::stream::{BatchAccumulator, BLOCK};
 use segmul::multiplier::batch::approx_seq_mul_batch;
 use segmul::multiplier::wordlevel::{approx_seq_mul, approx_seq_mul_generic};
-use segmul::multiplier::{approx_seq_mul_bitlevel, SegmentedSeqMul, U512};
+use segmul::multiplier::{
+    approx_seq_mul_bitlevel, BatchMultiplier, DispatchClass, MultiplierSpec, SegmentedSeqMul, U512,
+};
 use segmul::netlist::generators::seq_mult::{run_batch, seq_mult};
 use segmul::netlist::SeqSim;
 use segmul::util::prop::Cases;
@@ -226,5 +228,143 @@ fn trait_object_batch_path_matches_specialized() {
         let via_obj = exhaustive_stats_batch(&m, 2);
         let direct = exhaustive_stats(n, t, fix);
         assert!(via_obj.approx_eq(&direct), "n={n} t={t} fix={fix}");
+    }
+}
+
+/// The design points the cross-registry differential tests sweep: every
+/// registry family, plus extra parameter points so each baseline kernel's
+/// configuration axes (truncation column, both break-line orders, fix
+/// modes) are exercised — not just the registry examples.
+fn differential_specs(n: u32) -> Vec<MultiplierSpec> {
+    let mut specs = MultiplierSpec::registry_examples(n);
+    specs.push(MultiplierSpec::Segmented { n, t: 1, fix: false });
+    specs.push(MultiplierSpec::Truncated { n, k: n / 2 });
+    specs.push(MultiplierSpec::Truncated { n, k: n });
+    specs.push(MultiplierSpec::BrokenArray { n, hbl: n / 2, vbl: n / 4 });
+    specs.push(MultiplierSpec::BitLevel { n, t: 1, fix: false });
+    specs.push(MultiplierSpec::Netlist { n, t: n - 1, fix: false });
+    specs
+}
+
+/// Every registry design's batch kernel ≡ its per-pair scalar reference,
+/// exhaustively over the full 2^(2n) input space at n ∈ {4, 8}. This is
+/// the contract that lets `OwnedScalarBatch` survive only as the
+/// differential-test reference: the production evaluators are proven
+/// bit-exact against it here.
+#[test]
+fn every_registry_design_batched_equals_scalar_exhaustive_small() {
+    for n in [4u32, 8] {
+        let space = 1u64 << (2 * n);
+        let mask = (1u64 << n) - 1;
+        let a: Vec<u64> = (0..space).map(|i| i & mask).collect();
+        let b: Vec<u64> = (0..space).map(|i| i >> n).collect();
+        for spec in differential_specs(n) {
+            let batch = spec.build_batch().unwrap();
+            let reference = spec.build_scalar_reference().unwrap();
+            assert_eq!(batch.dispatch_class(), DispatchClass::Batched, "{}", spec.name());
+            assert_eq!(reference.dispatch_class(), DispatchClass::Scalar, "{}", spec.name());
+            let mut got = vec![0u64; a.len()];
+            let mut want = vec![0u64; a.len()];
+            batch.mul_batch(&a, &b, &mut got);
+            reference.mul_batch(&a, &b, &mut want);
+            for i in 0..a.len() {
+                assert_eq!(got[i], want[i], "{} n={n} a={} b={}", spec.name(), a[i], b[i]);
+            }
+        }
+    }
+}
+
+/// Monte-Carlo differential at n = 16 (exhaustive is 2^32 pairs): every
+/// registry design, seeded random operands, batched ≡ scalar reference.
+#[test]
+fn every_registry_design_batched_equals_scalar_mc_n16() {
+    let n = 16u32;
+    let mut rng = Xoshiro256::seed_from_u64(0xD1FF16);
+    let len = 4096usize;
+    let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+    let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+    for spec in differential_specs(n) {
+        let batch = spec.build_batch().unwrap();
+        let reference = spec.build_scalar_reference().unwrap();
+        let mut got = vec![0u64; len];
+        let mut want = vec![0u64; len];
+        batch.mul_batch(&a, &b, &mut got);
+        reference.mul_batch(&a, &b, &mut want);
+        for i in 0..len {
+            assert_eq!(got[i], want[i], "{} a={} b={}", spec.name(), a[i], b[i]);
+        }
+    }
+}
+
+/// Chunked-merge bit-exactness through `error::stream` for the baseline
+/// kernels: partial `ErrorStats` folded from ragged chunkings equal the
+/// sequential accumulation on every integer field, for each design family
+/// that gained a batch kernel in this layer. Also pins that the streaming
+/// engine over the batch kernel produces *identical* stats — floats
+/// included — to the same engine over the scalar reference (same products
+/// in the same order).
+#[test]
+fn baseline_kernels_chunked_merge_bit_exact_through_stream() {
+    let n = 8u32;
+    let mut rng = Xoshiro256::seed_from_u64(0xBA5E);
+    let len = 10_000usize;
+    let a: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+    let b: Vec<u64> = (0..len).map(|_| rng.next_bits(n)).collect();
+    for spec in [
+        MultiplierSpec::Truncated { n, k: 3 },
+        MultiplierSpec::BrokenArray { n, hbl: 2, vbl: 4 },
+        MultiplierSpec::Mitchell { n },
+        MultiplierSpec::Kulkarni { n },
+        MultiplierSpec::BitLevel { n, t: 4, fix: true },
+    ] {
+        let m = spec.build_batch().unwrap();
+        let mut whole = BatchAccumulator::new(m.as_ref());
+        whole.eval_pairs(&a, &b);
+        let whole = whole.finish();
+
+        // Streaming over the scalar reference: same order, same stats,
+        // f64 fields included.
+        let reference = spec.build_scalar_reference().unwrap();
+        let mut via_scalar = BatchAccumulator::new(reference.as_ref());
+        via_scalar.eval_pairs(&a, &b);
+        assert_eq!(via_scalar.finish(), whole, "{}", spec.name());
+
+        // Ragged chunkings fold bit-exactly on the integer fields.
+        for pieces in [3usize, 7, 64] {
+            let piece_len = len.div_ceil(pieces);
+            let mut folded = ErrorStats::new(n);
+            for (ca, cb) in a.chunks(piece_len).zip(b.chunks(piece_len)) {
+                let mut part = BatchAccumulator::new(m.as_ref());
+                part.eval_pairs(ca, cb);
+                folded.merge(&part.finish());
+            }
+            assert_eq!(folded.count, whole.count, "{} pieces={pieces}", spec.name());
+            assert_eq!(folded.err_count, whole.err_count, "{} pieces={pieces}", spec.name());
+            assert_eq!(folded.sum_ed, whole.sum_ed, "{} pieces={pieces}", spec.name());
+            assert_eq!(folded.sum_abs_ed, whole.sum_abs_ed, "{} pieces={pieces}", spec.name());
+            assert_eq!(folded.max_abs_ed, whole.max_abs_ed, "{} pieces={pieces}", spec.name());
+            assert_eq!(folded.bitflips, whole.bitflips, "{} pieces={pieces}", spec.name());
+            assert!(folded.approx_eq(&whole), "{} pieces={pieces}", spec.name());
+        }
+    }
+}
+
+/// The CPU backend evaluates every design of a cross-design grid on a
+/// true batch kernel and says so: zero scalar-fallback dispatches outside
+/// the differential-test references.
+#[test]
+fn cpu_backend_cross_design_dispatch_is_fully_batched() {
+    use segmul::multiplier::DesignSet;
+    let mut be = CpuBackend::new();
+    let mut rng = Xoshiro256::seed_from_u64(0xA11);
+    let a: Vec<u64> = (0..500).map(|_| rng.next_bits(4)).collect();
+    let b: Vec<u64> = (0..500).map(|_| rng.next_bits(4)).collect();
+    for spec in DesignSet::All.specs(4) {
+        be.eval_design(&spec, &a, &b).unwrap();
+    }
+    let log = be.kernel_dispatch();
+    assert!(!log.is_empty());
+    for (name, class) in &log {
+        assert_eq!(*class, DispatchClass::Batched, "{name} regressed to per-pair dispatch");
     }
 }
