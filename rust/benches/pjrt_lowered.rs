@@ -1,0 +1,66 @@
+//! Lowered-module dispatch throughput on the PJRT backend.
+//!
+//! Emits a fresh artifact set (`segmul lower`'s library entry point) for
+//! every registry design at n = 16, then measures `eval_design` through
+//! the lowered modules — the exact path a `--designs all` sweep runs on
+//! the accelerator backend. Bit-exactness against the CPU batched backend
+//! is asserted before anything is timed. The summary publishes one
+//! `pjrt_<family>_pairs_per_s` metric per design family plus the
+//! dispatch-coverage count for the CI bench-regression gate
+//! (`BENCH_pjrt.json`).
+
+use segmul::bench::{bench, section, throughput, Summary};
+use segmul::coordinator::{CpuBackend, EvalBackend, PjrtBackend};
+use segmul::multiplier::{DispatchClass, MultiplierSpec};
+use segmul::runtime::emit_artifacts;
+use segmul::util::rng::Xoshiro256;
+
+const N: u32 = 16;
+const BATCH: usize = 8192;
+
+fn main() {
+    let dir = std::env::temp_dir().join(format!("segmul_bench_pjrt_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let specs = MultiplierSpec::registry_examples(N);
+    emit_artifacts(&dir, &specs, BATCH).expect("emit lowered artifacts");
+    let mut pjrt = PjrtBackend::load(&dir).expect("load lowered artifacts");
+    let mut cpu = CpuBackend::new();
+
+    let mut rng = Xoshiro256::seed_from_u64(0xBE7C);
+    let a: Vec<u64> = (0..BATCH).map(|_| rng.next_bits(N)).collect();
+    let b: Vec<u64> = (0..BATCH).map(|_| rng.next_bits(N)).collect();
+
+    section(&format!("pjrt lowered-module dispatch (n={N}, batch {BATCH})"));
+    let mut summary = Summary::new("pjrt");
+    for spec in &specs {
+        assert!(pjrt.supports_design(spec), "{}", spec.name());
+        // Bit-exact against the CPU batched backend before timing.
+        let sp = pjrt.eval_design(spec, &a, &b).expect("pjrt eval");
+        let sc = cpu.eval_design(spec, &a, &b).expect("cpu eval");
+        assert_eq!(sp, sc, "pjrt diverged from cpu for {}", spec.name());
+
+        let r = bench(&format!("pjrt {}", spec.name()), Some(BATCH as f64), |iters| {
+            let mut acc = 0u64;
+            for _ in 0..iters {
+                acc ^= pjrt.eval_design(spec, &a, &b).unwrap().err_count;
+            }
+            acc
+        });
+        summary.metric(
+            &format!("pjrt_{}_pairs_per_s", spec.family()),
+            throughput(&r).unwrap_or(0.0),
+        );
+    }
+
+    // Dispatch-coverage audit: every registry design must have run
+    // through a lowered module (the `--require-pjrt` contract).
+    let log = pjrt.kernel_dispatch();
+    let lowered = log.iter().filter(|(_, c)| *c == DispatchClass::Pjrt).count();
+    assert_eq!(lowered, specs.len(), "designs missing from the lowered dispatch log: {log:?}");
+    println!();
+    println!("dispatch coverage: {lowered}/{} registry designs via lowered modules", specs.len());
+    summary.metric("pjrt_design_coverage", lowered as f64);
+    summary.write().expect("write bench summary");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

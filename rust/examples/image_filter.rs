@@ -88,9 +88,15 @@ fn main() {
     let artifacts = PathBuf::from("artifacts");
     let mut runtime = if artifacts.join("manifest.json").exists() {
         match Runtime::load(&artifacts) {
-            Ok(rt) => {
+            // This example drives the value-returning prod module; a
+            // lowered-only manifest (`segmul lower`) has none.
+            Ok(rt) if rt.has(n, segmul::runtime::ModuleKind::Prod) => {
                 println!("PJRT runtime loaded — cross-checking every multiply on the compiled kernel");
                 Some(rt)
+            }
+            Ok(_) => {
+                println!("artifacts carry no prod module for n={n} — CPU word-level only");
+                None
             }
             Err(e) => {
                 println!("PJRT unavailable ({e}); CPU word-level only");

@@ -78,9 +78,13 @@ pub struct SessionTelemetry {
     pub workers: usize,
     /// Kernel tier per evaluated design (union over the pool's workers,
     /// name-sorted): [`DispatchClass::Batched`] for a true batch kernel,
+    /// [`DispatchClass::Pjrt`] for a lowered accelerator module, and
     /// [`DispatchClass::Scalar`] for a per-pair fallback. Every registry
-    /// design runs batched on the CPU backend; a `Scalar` entry here
-    /// means a sweep silently regressed to per-pair dispatch.
+    /// design runs batched on the CPU backend and lowered on the PJRT
+    /// backend (after `segmul lower`); a `Scalar` entry here means a
+    /// sweep silently regressed to per-pair dispatch, and a non-`Pjrt`
+    /// entry on an accelerator sweep means a design fell back to the CPU
+    /// tier (`segmul sweep --require-pjrt` gates on both).
     pub kernel_dispatch: Vec<(String, DispatchClass)>,
 }
 
@@ -91,6 +95,26 @@ impl SessionTelemetry {
         self.kernel_dispatch
             .iter()
             .filter(|(_, c)| *c == DispatchClass::Scalar)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    /// Designs dispatched through a lowered PJRT module.
+    pub fn pjrt_dispatches(&self) -> Vec<&str> {
+        self.kernel_dispatch
+            .iter()
+            .filter(|(_, c)| *c == DispatchClass::Pjrt)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    /// Designs that did **not** dispatch through a lowered PJRT module —
+    /// the offenders a `--require-pjrt` sweep names (empty when the whole
+    /// sweep ran on lowered modules).
+    pub fn non_pjrt_dispatches(&self) -> Vec<&str> {
+        self.kernel_dispatch
+            .iter()
+            .filter(|(_, c)| *c != DispatchClass::Pjrt)
             .map(|(n, _)| n.as_str())
             .collect()
     }

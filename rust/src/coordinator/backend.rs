@@ -1,10 +1,13 @@
 //! Evaluation backends.
 //!
 //! A backend turns an operand batch into an [`ErrorStats`]. The CPU backend
-//! runs the word-level model; the PJRT backend executes the AOT-compiled
-//! stats module (one `execute` per batch, O(1) host transfer). Both produce
-//! identical integer statistics for identical inputs — property-tested in
-//! `coordinator_integration`.
+//! runs the word-level model; the PJRT backend executes lowered modules —
+//! the AOT-compiled stats modules of the segmented family (one `execute`
+//! per batch, O(1) host transfer) and the design-lowered modules of every
+//! registry design (`segmul lower`). Both backends produce identical
+//! statistics for identical inputs — the design-lowered path bit-exactly
+//! (`tests/pjrt_lowered_differential.rs`), the f64 stats-vector path up to
+//! integer equality (`coordinator_integration`).
 
 use std::collections::hash_map::Entry;
 use std::collections::{BTreeMap, HashMap};
@@ -18,10 +21,12 @@ use crate::multiplier::{BatchMultiplier, DispatchClass, MultiplierSpec, Segmente
 use crate::runtime::Runtime;
 
 /// A batch evaluator. The segmented fast path ([`Self::eval_batch`]) is
-/// what the PJRT artifacts lower; [`Self::eval_design`] generalizes to
-/// any [`MultiplierSpec`] — by default only the segmented family (plus
-/// the accurate design, which is its `t = 0` point), with the CPU
-/// backend overriding it to evaluate every implemented design.
+/// what the legacy AOT stats modules lower; [`Self::eval_design`]
+/// generalizes to any [`MultiplierSpec`] — by default only the segmented
+/// family (plus the accurate design, which is its `t = 0` point), with
+/// the CPU backend overriding it to evaluate every implemented design
+/// and the PJRT backend overriding it to dispatch any design that has a
+/// `segmul lower` module.
 pub trait EvalBackend {
     fn name(&self) -> &'static str;
     /// Preferred operand-batch size.
@@ -54,10 +59,12 @@ pub trait EvalBackend {
     }
 
     /// Which kernel tier each design evaluated so far ran on, as
-    /// `(design name, class)` pairs. Backends that only run the lowered
-    /// segmented fast path (PJRT) report nothing; the CPU backend reports
-    /// every design it evaluated, so sweeps can prove nothing silently
-    /// regressed to per-pair dispatch.
+    /// `(design name, class)` pairs. The CPU backend reports
+    /// [`DispatchClass::Batched`] per design, the PJRT backend
+    /// [`DispatchClass::Pjrt`] per lowered dispatch — so sweeps can prove
+    /// both that nothing silently regressed to per-pair dispatch and that
+    /// an accelerator sweep never fell back to the CPU tier
+    /// (`segmul sweep --require-pjrt`).
     fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
         Vec::new()
     }
@@ -144,24 +151,59 @@ impl EvalBackend for CpuBackend {
     }
 }
 
-/// PJRT backend over the AOT artifacts. Short batches are padded with
-/// `(0, 0)` pairs — exact products that perturb only the sample count,
-/// which is corrected after execution.
+/// PJRT backend over the AOT artifacts: the legacy stats modules of the
+/// segmented family (`make artifacts`) plus the design-lowered modules of
+/// every registry design (`segmul lower`), so `--designs all` sweeps run
+/// fully on the accelerator backend. Short batches are padded with
+/// `(0, 0)` pairs — exact products that never reach the statistics (the
+/// lowered path truncates them; the stats path corrects `count`).
+///
+/// Every design evaluated here reports [`DispatchClass::Pjrt`] in the
+/// kernel-dispatch telemetry, which is what the sweep audit
+/// (`segmul sweep --require-pjrt`) gates on.
 pub struct PjrtBackend {
     runtime: Runtime,
+    /// Kernel tier per evaluated design (BTreeMap: deterministic order).
+    dispatch: BTreeMap<String, DispatchClass>,
 }
 
 impl PjrtBackend {
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
-        Ok(Self { runtime: Runtime::load(artifacts_dir)? })
+        Ok(Self::from_runtime(Runtime::load(artifacts_dir)?))
     }
 
     pub fn from_runtime(runtime: Runtime) -> Self {
-        Self { runtime }
+        Self { runtime, dispatch: BTreeMap::new() }
     }
 
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
+    }
+
+    /// Execute `design` through its lowered module and fold the products
+    /// into [`ErrorStats`] host-side — bit-identical accumulation to the
+    /// CPU backend over the same operand slice (`record_batch` in input
+    /// order; the lowered integer sums are exact, never f64-rounded).
+    fn eval_lowered(&mut self, design: &MultiplierSpec, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
+        anyhow::ensure!(a.len() == b.len());
+        anyhow::ensure!(a.len() <= self.runtime.batch(), "batch too large");
+        let batch = self.runtime.batch();
+        let phat = if a.len() == batch {
+            self.runtime.exec_lowered(design, a, b)?
+        } else {
+            // Pad to the static batch shape; pad products are dropped
+            // before any statistic sees them.
+            let mut ap = a.to_vec();
+            let mut bp = b.to_vec();
+            ap.resize(batch, 0);
+            bp.resize(batch, 0);
+            self.runtime.exec_lowered(design, &ap, &bp)?
+        };
+        let mut prod = vec![0u64; a.len()];
+        crate::multiplier::exact_mul_batch(a, b, &mut prod);
+        let mut stats = ErrorStats::new(design.n());
+        stats.record_batch(&prod, &phat[..a.len()]);
+        Ok(stats)
     }
 }
 
@@ -175,12 +217,22 @@ impl EvalBackend for PjrtBackend {
     }
 
     fn supports(&self, n: u32) -> bool {
-        self.runtime.has(n, crate::runtime::ModuleKind::Stats)
+        self.runtime.supports_bitwidth(n)
     }
 
     fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
         anyhow::ensure!(a.len() == b.len());
         anyhow::ensure!(a.len() <= self.runtime.batch(), "batch too large");
+        if !self.runtime.has(n, crate::runtime::ModuleKind::Stats) {
+            // No legacy stats module: serve the segmented point from its
+            // design-lowered module when one exists.
+            let spec = MultiplierSpec::Segmented { n, t, fix };
+            if self.runtime.has_lowered(&spec) {
+                let stats = self.eval_lowered(&spec, a, b)?;
+                self.dispatch.entry(spec.name()).or_insert(DispatchClass::Pjrt);
+                return Ok(stats);
+            }
+        }
         let pad = self.runtime.batch() - a.len();
         let v = if pad == 0 {
             self.runtime.exec_stats(n, a, b, t as u64, fix)?
@@ -191,10 +243,40 @@ impl EvalBackend for PjrtBackend {
             bp.resize(self.runtime.batch(), 0);
             self.runtime.exec_stats(n, &ap, &bp, t as u64, fix)?
         };
+        self.dispatch
+            .entry(MultiplierSpec::Segmented { n, t, fix }.name())
+            .or_insert(DispatchClass::Pjrt);
         let mut stats = ErrorStats::from_f64_vec(n, &v)?;
         // (0,0) pads are exact: only `count` needs correcting.
         stats.count -= pad as u64;
         Ok(stats)
+    }
+
+    fn supports_design(&self, design: &MultiplierSpec) -> bool {
+        design.validate().is_ok()
+            && (self.runtime.has_lowered(design)
+                || (design.has_segmented_lowering()
+                    && self.runtime.has(design.n(), crate::runtime::ModuleKind::Stats)))
+    }
+
+    fn eval_design(&mut self, design: &MultiplierSpec, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
+        if self.runtime.has_lowered(design) {
+            let stats = self.eval_lowered(design, a, b)?;
+            self.dispatch.entry(design.name()).or_insert(DispatchClass::Pjrt);
+            return Ok(stats);
+        }
+        match *design {
+            MultiplierSpec::Segmented { n, t, fix } => self.eval_batch(n, t, fix, a, b),
+            MultiplierSpec::Accurate { n } => self.eval_batch(n, 0, false, a, b),
+            ref other => Err(anyhow!(
+                "backend pjrt has no lowered module for design {} (run `segmul lower`)",
+                other.name()
+            )),
+        }
+    }
+
+    fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
+        self.dispatch.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 }
 
@@ -266,6 +348,49 @@ mod tests {
         // Repeat evaluations don't duplicate entries.
         be.eval_design(&MultiplierSpec::Mitchell { n: 8 }, &a, &b).unwrap();
         assert_eq!(be.kernel_dispatch().len(), log.len());
+    }
+
+    #[test]
+    fn pjrt_backend_dispatches_every_design_through_lowered_modules() {
+        let dir = std::env::temp_dir().join(format!("segmul_pjrt_backend_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let specs = MultiplierSpec::registry_examples(8);
+        crate::runtime::emit_artifacts(&dir, &specs, 512).unwrap();
+        let mut pjrt = PjrtBackend::load(&dir).unwrap();
+        let mut cpu = CpuBackend::new();
+        assert_eq!(pjrt.max_batch(), 512);
+        assert!(pjrt.supports(8) && !pjrt.supports(16));
+        let mut rng = Xoshiro256::seed_from_u64(21);
+        // Ragged length: exercises the pad-and-truncate path.
+        let a: Vec<u64> = (0..300).map(|_| rng.next_bits(8)).collect();
+        let b: Vec<u64> = (0..300).map(|_| rng.next_bits(8)).collect();
+        for spec in &specs {
+            assert!(pjrt.supports_design(spec), "{}", spec.name());
+            let sp = pjrt.eval_design(spec, &a, &b).unwrap();
+            let sc = cpu.eval_design(spec, &a, &b).unwrap();
+            // Bit-exact, f64 fields and approx_sums flag included.
+            assert_eq!(sp, sc, "{}", spec.name());
+            assert_eq!(sp.count, 300);
+        }
+        // The segmented fast path routes through the lowered module when
+        // no legacy stats module exists.
+        let via_batch = pjrt.eval_batch(8, 4, true, &a, &b).unwrap();
+        let via_cpu = cpu.eval_batch(8, 4, true, &a, &b).unwrap();
+        assert_eq!(via_batch, via_cpu);
+        // Every dispatch is audited as the pjrt class.
+        let log = pjrt.kernel_dispatch();
+        assert_eq!(log.len(), specs.len());
+        for (name, class) in &log {
+            assert_eq!(*class, DispatchClass::Pjrt, "{name}");
+        }
+        // Unlowered designs carry the `segmul lower` hint.
+        let e = pjrt
+            .eval_design(&MultiplierSpec::Mitchell { n: 16 }, &a, &b)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("segmul lower"), "{e}");
+        assert!(!pjrt.supports_design(&MultiplierSpec::Mitchell { n: 16 }));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -201,10 +201,13 @@ impl WorkerPool {
     }
 
     /// Union of every worker's kernel-dispatch log: which designs ran on
-    /// a true batch kernel vs a per-pair scalar fallback, in
+    /// a true batch kernel, a lowered PJRT module
+    /// ([`DispatchClass::Pjrt`]), or a per-pair scalar fallback, in
     /// deterministic (name-sorted) order. A scalar sighting on *any*
     /// worker wins the merge, so a sweep cannot silently regress to
-    /// per-pair dispatch on a subset of its workers.
+    /// per-pair dispatch on a subset of its workers. (Workers are
+    /// homogeneous — one factory per pool — so batched-vs-pjrt never
+    /// mixes for one design.)
     pub fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
         let mut merged: std::collections::BTreeMap<String, DispatchClass> =
             std::collections::BTreeMap::new();

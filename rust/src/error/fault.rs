@@ -27,6 +27,16 @@ pub enum SegmulError {
     },
     /// An invalid workload (sample budget, exhaustive range, CI target).
     Workload(String),
+    /// An invalid or inconsistent AOT-artifact manifest / lowered module
+    /// (`artifacts/manifest.json`, written by `segmul lower` or
+    /// `make artifacts`): malformed JSON, unsupported schema version,
+    /// missing module files, or per-module metadata that contradicts the
+    /// manifest (wrong bit-width, wrong batch shape, duplicate designs).
+    Artifact {
+        /// The offending file (manifest or module), display form.
+        path: String,
+        reason: String,
+    },
     /// Backend construction or capability failure.
     Backend(String),
     /// Evaluation failed at run time.
@@ -52,12 +62,17 @@ impl SegmulError {
         SegmulError::Backend(msg.into())
     }
 
+    pub fn artifact(path: impl Into<String>, reason: impl Into<String>) -> Self {
+        SegmulError::Artifact { path: path.into(), reason: reason.into() }
+    }
+
     /// Short class tag (stable across message rewording).
     pub fn kind(&self) -> &'static str {
         match self {
             SegmulError::Config(_) => "config",
             SegmulError::Spec { .. } => "spec",
             SegmulError::Workload(_) => "workload",
+            SegmulError::Artifact { .. } => "artifact",
             SegmulError::Backend(_) => "backend",
             SegmulError::Eval(_) => "eval",
             SegmulError::Io(_) => "io",
@@ -73,6 +88,9 @@ impl fmt::Display for SegmulError {
                 write!(f, "invalid design {design}: {reason}")
             }
             SegmulError::Workload(m) => write!(f, "invalid workload: {m}"),
+            SegmulError::Artifact { path, reason } => {
+                write!(f, "invalid artifact {path}: {reason}")
+            }
             SegmulError::Backend(m) => write!(f, "backend error: {m}"),
             SegmulError::Eval(m) => write!(f, "evaluation error: {m}"),
             SegmulError::Io(m) => write!(f, "io error: {m}"),
@@ -112,6 +130,10 @@ mod tests {
         let e = SegmulError::spec("segmul(n=8,t=9)", "t out of range");
         assert!(e.to_string().contains("segmul(n=8,t=9)"));
         assert_eq!(e.kind(), "spec");
+        let e = SegmulError::artifact("artifacts/manifest.json", "module batch 4 != manifest batch 8");
+        assert!(e.to_string().contains("manifest.json"));
+        assert!(e.to_string().contains("batch"));
+        assert_eq!(e.kind(), "artifact");
     }
 
     #[test]

@@ -8,7 +8,11 @@
 //! Subcommands:
 //!   eval     — evaluate one design configuration's error metrics
 //!   sweep    — design-space sweep (paper grid and cross-design sets),
-//!              writing sweep.csv + BENCH_sweep.json
+//!              writing sweep.csv + BENCH_sweep.json; `--require-pjrt`
+//!              fails unless every design dispatched via lowered modules
+//!   lower    — emit lowered PJRT modules for every registry design
+//!              (schema-v2 manifest; enables full `--designs all` sweeps
+//!              on the PJRT backend with zero CPU fallbacks)
 //!   hw       — hardware figures (FPGA + ASIC models) for one config
 //!   figures  — regenerate paper artifacts (fig2|mae|fig3a|fig3b|probprop|
 //!              headline|seqcomb|all) into the results directory
@@ -29,6 +33,7 @@ use segmul::config::Config;
 use segmul::error::probprop;
 use segmul::netlist::generators::seq_mult::seq_mult;
 use segmul::report;
+use segmul::runtime::{emit_artifacts, Manifest};
 use segmul::tech::{measure_activity, AsicModel, FpgaModel};
 use segmul::util::cli::Args;
 use segmul::util::threadpool::default_workers;
@@ -174,27 +179,50 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.flag("mc") {
         grid.force_mc = true;
     }
-    // Cross-design grids include designs with no PJRT lowering; only the
-    // CPU backend evaluates those. Fall back silently-but-audibly under
-    // Auto selection, and reject an explicit --backend pjrt up front
-    // rather than failing mid-sweep.
+    // PJRT coverage preflight: the manifest must dispatch every grid
+    // design (a lowered module from `segmul lower`, or a legacy stats
+    // module for the segmented family). Fall back loudly to the CPU
+    // backend under Auto selection; reject an explicit --backend pjrt up
+    // front with the uncovered designs named, rather than failing
+    // mid-sweep.
     let mut choice = backend_choice(args, &cfg)?;
-    if grid.jobs().iter().any(|j| !j.design.has_segmented_lowering()) {
-        match choice {
-            BackendChoice::Auto(_) => {
-                eprintln!(
-                    "note: design set '{}' includes designs without PJRT lowerings; \
-                     using cpu backend",
-                    grid.designs.name()
-                );
-                choice = BackendChoice::Cpu;
+    let explicit_pjrt = matches!(choice, BackendChoice::Pjrt(_));
+    let pjrt_dir = match &choice {
+        BackendChoice::Pjrt(dir) | BackendChoice::Auto(dir) => Some(dir.clone()),
+        BackendChoice::Cpu => None,
+    };
+    if let Some(dir) = pjrt_dir {
+        let uncovered: Vec<String> = match Manifest::load(&dir) {
+            Ok(manifest) => {
+                let mut missing: Vec<String> = grid
+                    .jobs()
+                    .iter()
+                    .filter(|j| !manifest.covers_design(&j.design))
+                    .map(|j| j.design.name())
+                    .collect();
+                missing.dedup();
+                missing
             }
-            BackendChoice::Pjrt(_) => bail!(
-                "--backend pjrt cannot evaluate design set '{}': only the segmented \
-                 and accurate designs have PJRT lowerings (use --backend cpu)",
-                grid.designs.name()
-            ),
-            BackendChoice::Cpu => {}
+            Err(e) if explicit_pjrt => return Err(e.into()),
+            Err(e) => vec![format!("(manifest unreadable: {e})")],
+        };
+        if !uncovered.is_empty() {
+            let shown = uncovered.iter().take(4).cloned().collect::<Vec<_>>().join(", ");
+            let hint = format!("run `segmul lower --designs {}` to lower them", grid.designs.name());
+            if explicit_pjrt {
+                bail!(
+                    "--backend pjrt cannot dispatch {} of {} grid designs ({shown}, ...); {hint}",
+                    uncovered.len(),
+                    grid.jobs().len()
+                );
+            }
+            eprintln!(
+                "note: {} of {} grid designs have no PJRT lowering ({shown}, ...); \
+                 using cpu backend — {hint}",
+                uncovered.len(),
+                grid.jobs().len()
+            );
+            choice = BackendChoice::Cpu;
         }
     }
     let mut session = make_session(choice, &cfg, workers)?;
@@ -226,12 +254,18 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     })?;
     let wall = started.elapsed();
     println!("\n{}", report::sweep::sweep_table(&outcomes).to_text());
+    let telemetry = session.telemetry();
     let info = report::sweep::SweepRunInfo {
         workers: session.workers(),
         cache_hits: session.cache_hits(),
         jobs_evaluated: session.jobs_evaluated(),
         wall,
         backend: session.backend_name().to_string(),
+        kernel_dispatch: telemetry
+            .kernel_dispatch
+            .iter()
+            .map(|(design, class)| (design.clone(), class.name().to_string()))
+            .collect(),
     };
     let (csv_path, json_path) = report::sweep::write_sweep_reports(&cfg.results_dir, &outcomes, &info)?;
     println!(
@@ -244,26 +278,95 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         session.backend_builds()
     );
     // Kernel-dispatch audit: every design must have run on a true batch
-    // kernel — a scalar fallback means the sweep silently regressed to
-    // per-pair dispatch, so name the offenders loudly.
-    let telemetry = session.telemetry();
+    // kernel or a lowered PJRT module — a scalar fallback means the sweep
+    // silently regressed to per-pair dispatch, so name the offenders
+    // loudly.
     let scalar = telemetry.scalar_fallbacks();
+    let total = telemetry.kernel_dispatch.len();
     if scalar.is_empty() {
-        if !telemetry.kernel_dispatch.is_empty() {
+        if total > 0 {
             println!(
-                "kernel dispatch: all {} evaluated designs ran on batch kernels",
-                telemetry.kernel_dispatch.len()
+                "kernel dispatch: all {} evaluated designs ran on batch kernels ({} via lowered pjrt modules)",
+                total,
+                telemetry.pjrt_dispatches().len()
             );
         }
     } else {
         eprintln!(
             "warning: {} of {} designs fell back to per-pair scalar dispatch: {}",
             scalar.len(),
-            telemetry.kernel_dispatch.len(),
+            total,
             scalar.join(", ")
         );
     }
+    // --require-pjrt: the CI contract for accelerator sweeps — fail
+    // unless the whole grid dispatched through lowered PJRT modules (no
+    // scalar fallbacks, no CPU-tier fallback for any registry design).
+    if args.flag("require-pjrt") {
+        if session.backend_name() != "pjrt" {
+            bail!(
+                "--require-pjrt: sweep ran on the '{}' backend, not pjrt \
+                 (run `segmul lower --designs {}` and retry with --backend pjrt)",
+                session.backend_name(),
+                grid.designs.name()
+            );
+        }
+        if total == 0 {
+            bail!("--require-pjrt: no designs were evaluated");
+        }
+        let offenders = telemetry.non_pjrt_dispatches();
+        if !offenders.is_empty() {
+            bail!(
+                "--require-pjrt: {} of {total} evaluated designs fell back from the lowered pjrt path: {}",
+                offenders.len(),
+                offenders.join(", ")
+            );
+        }
+        println!("--require-pjrt: all {total} evaluated designs dispatched via lowered pjrt modules");
+    }
     println!("wrote {csv_path:?} and {json_path:?}");
+    Ok(())
+}
+
+/// Lower every design point of the requested set × bit-widths into the
+/// artifacts directory: one branch-free `.segir` module per design plus a
+/// schema-v2 `manifest.json` — after which `segmul sweep --designs <set>
+/// --backend pjrt` dispatches every design through a lowered module
+/// (zero CPU/scalar fallbacks; prove it with `--require-pjrt`).
+fn cmd_lower(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let designs = match args.opt("designs") {
+        Some(s) => DesignSet::parse(s)?,
+        None => DesignSet::All,
+    };
+    let bitwidths = match args.opt_u32("n")? {
+        Some(n) => vec![n],
+        None => cfg.sweep_bitwidths.clone(),
+    };
+    let batch = args.opt_u64("batch")?.unwrap_or(8192) as usize;
+    let mut specs: Vec<MultiplierSpec> = Vec::new();
+    for &n in &bitwidths {
+        specs.extend(designs.specs(n));
+    }
+    if specs.is_empty() {
+        bail!("design set '{}' is empty over n ∈ {:?}", designs.name(), bitwidths);
+    }
+    let started = std::time::Instant::now();
+    let manifest = emit_artifacts(&cfg.artifacts_dir, &specs, batch)?;
+    println!(
+        "lowered {} modules (designs={}, n ∈ {:?}, batch {}) into {:?} in {:.2} s",
+        manifest.lowered.len(),
+        designs.name(),
+        bitwidths,
+        batch,
+        cfg.artifacts_dir,
+        started.elapsed().as_secs_f64()
+    );
+    println!(
+        "manifest schema v{}: `segmul sweep --designs {} --backend pjrt` now dispatches every design via lowered modules",
+        manifest.schema,
+        designs.name()
+    );
     Ok(())
 }
 
@@ -400,11 +503,14 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 }
 
 fn usage() -> &'static str {
-    "usage: segmul <eval|sweep|hw|figures|serve|estimate> [options]
+    "usage: segmul <eval|sweep|lower|hw|figures|serve|estimate> [options]
   eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
   sweep    [--n N] [--mc] [--designs paper|accurate|baselines|oracle|netlist|all]
-           [--workers W] [--samples S] [--seed S] [--results DIR]
-           (no --n: full configured grid; writes sweep.csv + BENCH_sweep.json)
+           [--workers W] [--samples S] [--seed S] [--results DIR] [--require-pjrt]
+           (no --n: full configured grid; writes sweep.csv + BENCH_sweep.json;
+            --require-pjrt fails unless every design ran via a lowered PJRT module)
+  lower    [--n N] [--designs SET] [--batch B] [--artifacts DIR]
+           (emit lowered PJRT modules; default: the full sweep grid, batch 8192)
   hw       --n N [--t T] [--hw-vectors V]
   figures  [fig2|mae|fig3a|fig3b|probprop|headline|seqcomb|all] [--results DIR]
   serve    [--jobs J] [--n N] [--workers W] [--backend cpu|pjrt]
@@ -416,6 +522,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("eval") => cmd_eval(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("lower") => cmd_lower(&args),
         Some("hw") => cmd_hw(&args),
         Some("figures") => cmd_figures(&args),
         Some("serve") => cmd_serve(&args),

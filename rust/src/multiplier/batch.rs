@@ -29,6 +29,11 @@ pub enum DispatchClass {
     /// A true batch kernel: monomorphized inner loop, branch-free /
     /// uniform latency per pair, no per-pair virtual calls.
     Batched,
+    /// A lowered accelerator module: the design executed through the PJRT
+    /// backend's artifact path (an AOT-compiled stats module or a
+    /// `segmul lower` module) — one execution per operand batch, never a
+    /// host-side per-pair loop. Only the PJRT backend reports this.
+    Pjrt,
     /// A per-pair adapter: one `Multiplier::mul` virtual call per operand
     /// pair. Only the differential-test reference evaluators report this.
     Scalar,
@@ -38,6 +43,7 @@ impl DispatchClass {
     pub fn name(&self) -> &'static str {
         match self {
             DispatchClass::Batched => "batched",
+            DispatchClass::Pjrt => "pjrt",
             DispatchClass::Scalar => "scalar",
         }
     }
@@ -311,6 +317,7 @@ mod tests {
         assert_eq!(BatchMultiplier::dispatch_class(&m), DispatchClass::Batched);
         assert_eq!(ScalarBatch(&m).dispatch_class(), DispatchClass::Scalar);
         assert_eq!(DispatchClass::Batched.name(), "batched");
+        assert_eq!(DispatchClass::Pjrt.name(), "pjrt");
         assert_eq!(DispatchClass::Scalar.name(), "scalar");
     }
 }

@@ -23,6 +23,7 @@
 use crate::error::SegmulError;
 use crate::netlist::generators::seq_mult::{run_batch, seq_mult, SeqMultCircuit};
 use crate::netlist::sim::SeqSim;
+use crate::util::json::{obj, Json};
 
 use super::baselines::{BrokenArrayMul, Kulkarni2x2, MitchellLog, TruncatedMul};
 use super::batch::{BatchMultiplier, DispatchClass};
@@ -185,6 +186,104 @@ impl MultiplierSpec {
         }
     }
 
+    /// The design-tag family name used by the artifact manifest
+    /// ([`Self::to_json`] / [`Self::from_json`]) and the per-design bench
+    /// metrics (`pjrt_<family>_pairs_per_s`).
+    pub fn family(&self) -> &'static str {
+        match self {
+            MultiplierSpec::Segmented { .. } => "segmented",
+            MultiplierSpec::Accurate { .. } => "accurate",
+            MultiplierSpec::Truncated { .. } => "truncated",
+            MultiplierSpec::BrokenArray { .. } => "broken_array",
+            MultiplierSpec::Mitchell { .. } => "mitchell",
+            MultiplierSpec::Kulkarni { .. } => "kulkarni",
+            MultiplierSpec::BitLevel { .. } => "bitlevel",
+            MultiplierSpec::Netlist { .. } => "netlist",
+        }
+    }
+
+    /// Serialize as the manifest's design tag: a JSON object carrying the
+    /// family name plus every configuration axis. Round-trips exactly
+    /// through [`Self::from_json`] for every registry design.
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("family", Json::from(self.family())),
+            ("n", Json::from(self.n() as u64)),
+        ];
+        match *self {
+            MultiplierSpec::Segmented { t, fix, .. }
+            | MultiplierSpec::BitLevel { t, fix, .. }
+            | MultiplierSpec::Netlist { t, fix, .. } => {
+                fields.push(("t", Json::from(t as u64)));
+                fields.push(("fix", Json::from(fix)));
+            }
+            MultiplierSpec::Truncated { k, .. } => fields.push(("k", Json::from(k as u64))),
+            MultiplierSpec::BrokenArray { hbl, vbl, .. } => {
+                fields.push(("hbl", Json::from(hbl as u64)));
+                fields.push(("vbl", Json::from(vbl as u64)));
+            }
+            MultiplierSpec::Accurate { .. }
+            | MultiplierSpec::Mitchell { .. }
+            | MultiplierSpec::Kulkarni { .. } => {}
+        }
+        obj(fields)
+    }
+
+    /// Parse a manifest design tag. The error is a plain reason string;
+    /// the artifact loader wraps it into [`SegmulError::Artifact`] with
+    /// the offending path.
+    pub fn from_json(j: &Json) -> Result<MultiplierSpec, String> {
+        let family = j
+            .get("family")
+            .and_then(Json::as_str)
+            .ok_or_else(|| "design tag missing string 'family'".to_string())?;
+        let num = |key: &str| -> Result<u32, String> {
+            j.get(key)
+                .and_then(Json::as_u64)
+                .and_then(|v| u32::try_from(v).ok())
+                .ok_or_else(|| format!("design tag ({family}) missing numeric '{key}'"))
+        };
+        let flag = |key: &str| -> Result<bool, String> {
+            j.get(key)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| format!("design tag ({family}) missing boolean '{key}'"))
+        };
+        let n = num("n")?;
+        Ok(match family {
+            "segmented" => MultiplierSpec::Segmented { n, t: num("t")?, fix: flag("fix")? },
+            "accurate" => MultiplierSpec::Accurate { n },
+            "truncated" => MultiplierSpec::Truncated { n, k: num("k")? },
+            "broken_array" => MultiplierSpec::BrokenArray { n, hbl: num("hbl")?, vbl: num("vbl")? },
+            "mitchell" => MultiplierSpec::Mitchell { n },
+            "kulkarni" => MultiplierSpec::Kulkarni { n },
+            "bitlevel" => MultiplierSpec::BitLevel { n, t: num("t")?, fix: flag("fix")? },
+            "netlist" => MultiplierSpec::Netlist { n, t: num("t")?, fix: flag("fix")? },
+            other => return Err(format!("unknown design family {other:?}")),
+        })
+    }
+
+    /// Filesystem-safe stem for this design's lowered-module artifact,
+    /// unique per spec (`segmented_n8_t3_fix`, `truncated_n8_k2`, ...).
+    pub fn artifact_stem(&self) -> String {
+        fn fx(fix: bool) -> &'static str {
+            if fix {
+                "_fix"
+            } else {
+                ""
+            }
+        }
+        match *self {
+            MultiplierSpec::Segmented { n, t, fix } => format!("segmented_n{n}_t{t}{}", fx(fix)),
+            MultiplierSpec::Accurate { n } => format!("accurate_n{n}"),
+            MultiplierSpec::Truncated { n, k } => format!("truncated_n{n}_k{k}"),
+            MultiplierSpec::BrokenArray { n, hbl, vbl } => format!("broken_array_n{n}_h{hbl}_v{vbl}"),
+            MultiplierSpec::Mitchell { n } => format!("mitchell_n{n}"),
+            MultiplierSpec::Kulkarni { n } => format!("kulkarni_n{n}"),
+            MultiplierSpec::BitLevel { n, t, fix } => format!("bitlevel_n{n}_t{t}{}", fx(fix)),
+            MultiplierSpec::Netlist { n, t, fix } => format!("netlist_n{n}_t{t}{}", fx(fix)),
+        }
+    }
+
     /// Whether the paper's segmented fast path evaluates this design
     /// (everything else goes through the generic batched adapter).
     pub fn is_segmented(&self) -> bool {
@@ -192,9 +291,10 @@ impl MultiplierSpec {
     }
 
     /// Whether this design is covered by the segmented kernel family that
-    /// the PJRT artifacts lower (`Segmented`, plus `Accurate` — its
-    /// `t = 0` point). Everything else needs a backend with generic
-    /// design support, i.e. the CPU backend.
+    /// the **legacy** AOT stats modules lower (`Segmented`, plus
+    /// `Accurate` — its `t = 0` point). Everything else needs either the
+    /// CPU backend's generic design support or a design-lowered module
+    /// from `segmul lower` (`crate::runtime::lower`).
     pub fn has_segmented_lowering(&self) -> bool {
         matches!(
             self,
@@ -667,6 +767,48 @@ mod tests {
                 MultiplierSpec::Segmented { n: 2, t: 1, fix: true },
             ]
         );
+    }
+
+    #[test]
+    fn design_tags_round_trip_for_every_registry_spec() {
+        let mut specs = MultiplierSpec::registry_examples(8);
+        specs.extend(MultiplierSpec::registry_examples(16));
+        specs.push(MultiplierSpec::Segmented { n: 8, t: 0, fix: false });
+        for spec in specs {
+            let j = spec.to_json();
+            // Serialized → reparsed → identical spec (through text too).
+            let back = MultiplierSpec::from_json(&j).unwrap();
+            assert_eq!(back, spec, "{}", spec.name());
+            let reparsed = crate::util::json::Json::parse(&j.to_string_compact()).unwrap();
+            assert_eq!(MultiplierSpec::from_json(&reparsed).unwrap(), spec);
+            assert_eq!(j.get("family").unwrap().as_str(), Some(spec.family()));
+        }
+    }
+
+    #[test]
+    fn design_tag_parse_errors_are_reasons_not_panics() {
+        let bad = crate::util::json::Json::parse(r#"{"family":"warp","n":8}"#).unwrap();
+        assert!(MultiplierSpec::from_json(&bad).unwrap_err().contains("warp"));
+        let missing = crate::util::json::Json::parse(r#"{"family":"segmented","n":8}"#).unwrap();
+        assert!(MultiplierSpec::from_json(&missing).unwrap_err().contains("'t'"));
+        let nofam = crate::util::json::Json::parse(r#"{"n":8}"#).unwrap();
+        assert!(MultiplierSpec::from_json(&nofam).unwrap_err().contains("family"));
+    }
+
+    #[test]
+    fn artifact_stems_are_unique_and_filesystem_safe() {
+        let mut specs = MultiplierSpec::registry_examples(8);
+        specs.extend(MultiplierSpec::registry_examples(16));
+        specs.push(MultiplierSpec::Segmented { n: 8, t: 4, fix: false });
+        let mut seen = std::collections::HashSet::new();
+        for spec in &specs {
+            let stem = spec.artifact_stem();
+            assert!(seen.insert(stem.clone()), "duplicate stem {stem}");
+            assert!(
+                stem.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "unsafe stem {stem}"
+            );
+        }
     }
 
     #[test]

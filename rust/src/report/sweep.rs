@@ -70,6 +70,10 @@ pub struct SweepRunInfo {
     pub jobs_evaluated: u64,
     pub wall: Duration,
     pub backend: String,
+    /// Kernel-dispatch audit: `(design name, dispatch class name)` per
+    /// evaluated design (`batched` / `pjrt` / `scalar`), so the shipped
+    /// `BENCH_sweep.json` itself proves which tier every design ran on.
+    pub kernel_dispatch: Vec<(String, String)>,
 }
 
 /// Build the `BENCH_sweep.json` document: run totals (what the CI gate
@@ -109,9 +113,15 @@ pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Json {
             obj(fields)
         })
         .collect();
+    let dispatch: std::collections::BTreeMap<String, Json> = info
+        .kernel_dispatch
+        .iter()
+        .map(|(design, class)| (design.clone(), Json::from(class.as_str())))
+        .collect();
     obj(vec![
         ("bench", Json::from("sweep")),
         ("backend", Json::from(info.backend.as_str())),
+        ("kernel_dispatch", Json::Obj(dispatch)),
         ("workers", Json::from(info.workers as u64)),
         ("configs", Json::from(outcomes.len() as u64)),
         ("jobs_evaluated", Json::from(info.jobs_evaluated)),
@@ -169,6 +179,12 @@ mod tests {
             jobs_evaluated: runner.jobs_evaluated,
             wall: Duration::from_millis(10),
             backend: "cpu".into(),
+            kernel_dispatch: runner
+                .pool()
+                .kernel_dispatch()
+                .into_iter()
+                .map(|(design, class)| (design, class.name().to_string()))
+                .collect(),
         };
         (outs, info)
     }
@@ -190,6 +206,13 @@ mod tests {
         assert_eq!(parsed.get("configs").unwrap().as_u64(), Some(outs.len() as u64));
         assert_eq!(parsed.get("cache_hits").unwrap().as_u64(), Some(info.cache_hits));
         assert!(parsed.get("metrics").unwrap().get("sweep_mpairs_per_s").is_some());
+        // The dispatch audit ships with the summary: the paper grid runs
+        // on batch kernels under the CPU backend.
+        let dispatch = parsed.get("kernel_dispatch").unwrap();
+        assert_eq!(
+            dispatch.get("segmul(n=4,t=1,fix)").and_then(|c| c.as_str()),
+            Some("batched")
+        );
         let results = parsed.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), outs.len());
         assert_eq!(results[0].get("workload").unwrap().as_str(), Some("exhaustive"));

@@ -1,13 +1,35 @@
-//! Artifact manifest: `artifacts/manifest.json` written by `python -m
-//! compile.aot`, describing each lowered HLO module (shapes, dtypes, batch).
+//! Artifact manifest: `artifacts/manifest.json`, describing every lowered
+//! module the PJRT runtime can execute.
+//!
+//! Two module classes share one manifest:
+//!
+//! * **Legacy HLO modules** (`modules`, schema v1) — written by
+//!   `python -m compile.aot` (`make artifacts`): per-bit-width stats /
+//!   prod modules of the segmented family, lowered to HLO text and
+//!   compiled through the real PJRT bindings.
+//! * **Design-lowered modules** (`lowered`, schema v2) — written by
+//!   `segmul lower` ([`crate::runtime::lower`]): one branch-free straight-
+//!   line module per [`MultiplierSpec`] registry design, executable by the
+//!   stub PJRT client, so `--designs all` sweeps run fully on the
+//!   accelerator backend with zero CPU fallbacks.
+//!
+//! The schema is versioned (`schema_version`, absent = 1) and validation
+//! failures are typed [`SegmulError::Artifact`] values — malformed JSON,
+//! unsupported schema, missing files, wrong bit-width, wrong batch shape,
+//! and duplicate designs all name the offending file and reason instead
+//! of panicking or flattening into strings.
 
+use std::collections::HashSet;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::SegmulError;
+use crate::multiplier::MultiplierSpec;
 use crate::util::json::Json;
 
-/// What a lowered module computes.
+/// Highest manifest schema this build understands.
+pub const SCHEMA_VERSION: u64 = 2;
+
+/// What a legacy (HLO) lowered module computes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ModuleKind {
     /// f64[6+2n] statistics vector (the evaluation-service hot path).
@@ -17,16 +39,16 @@ pub enum ModuleKind {
 }
 
 impl ModuleKind {
-    pub fn parse(s: &str) -> Result<Self> {
+    pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "stats" => Ok(ModuleKind::Stats),
             "prod" => Ok(ModuleKind::Prod),
-            other => bail!("unknown module kind {other:?}"),
+            other => Err(format!("unknown module kind {other:?}")),
         }
     }
 }
 
-/// One AOT-lowered HLO module.
+/// One AOT-lowered HLO module (legacy, segmented family only).
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
     pub name: String,
@@ -41,67 +63,204 @@ pub struct ModuleSpec {
     pub out_len: usize,
 }
 
+/// One design-lowered module (`segmul lower`): a branch-free straight-line
+/// program computing `design`'s approximate products over a static batch.
+#[derive(Clone, Debug)]
+pub struct LoweredSpec {
+    pub name: String,
+    /// The registry design this module computes.
+    pub design: MultiplierSpec,
+    /// Operand bit-width (must equal `design.n()`).
+    pub n: u32,
+    /// Static batch size (must equal the manifest batch).
+    pub batch: usize,
+    /// Module text file (`.segir`), relative to the artifacts dir.
+    pub file: PathBuf,
+}
+
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// Manifest schema version (1 = legacy HLO-only, 2 adds `lowered`).
+    pub schema: u64,
     pub batch: usize,
+    /// Legacy HLO modules (may be empty in a `segmul lower` manifest).
     pub modules: Vec<ModuleSpec>,
+    /// Design-lowered modules (empty in a legacy v1 manifest).
+    pub lowered: Vec<LoweredSpec>,
+}
+
+/// Shorthand: a typed artifact error naming `path`.
+fn err(path: &Path, reason: impl Into<String>) -> SegmulError {
+    SegmulError::artifact(path.display().to_string(), reason)
 }
 
 impl Manifest {
-    /// Load and validate `<dir>/manifest.json`.
-    pub fn load(dir: &Path) -> Result<Manifest> {
+    /// Load and validate `<dir>/manifest.json`. Every failure is a typed
+    /// [`SegmulError::Artifact`] naming the offending file.
+    pub fn load(dir: &Path) -> Result<Manifest, SegmulError> {
         let path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} — did you run `make artifacts`?"))?;
-        let json = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            err(&path, format!("reading manifest: {e} — run `segmul lower` or `make artifacts`"))
+        })?;
+        let json = Json::parse(&text).map_err(|e| err(&path, format!("malformed JSON: {e}")))?;
+        let schema = match json.get("schema_version") {
+            None => 1,
+            Some(v) => v
+                .as_u64()
+                .ok_or_else(|| err(&path, "'schema_version' must be a non-negative integer"))?,
+        };
+        if schema == 0 || schema > SCHEMA_VERSION {
+            return Err(err(
+                &path,
+                format!("unsupported schema_version {schema} (this build understands 1..={SCHEMA_VERSION})"),
+            ));
+        }
         let batch = json
             .get("batch")
             .and_then(Json::as_u64)
-            .ok_or_else(|| anyhow!("manifest missing numeric 'batch'"))? as usize;
+            .ok_or_else(|| err(&path, "manifest missing numeric 'batch'"))? as usize;
+        if batch == 0 {
+            return Err(err(&path, "manifest batch must be positive"));
+        }
+
         let mut modules = Vec::new();
-        for m in json
-            .get("modules")
-            .and_then(Json::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing 'modules' array"))?
-        {
-            let name = m
-                .get("name")
-                .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("module missing 'name'"))?
-                .to_string();
-            let kind = ModuleKind::parse(
-                m.get("kind").and_then(Json::as_str).ok_or_else(|| anyhow!("module {name}: missing kind"))?,
-            )?;
-            let n = m
-                .get("n")
-                .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("module {name}: missing n"))? as u32;
-            let file = PathBuf::from(
-                m.get("file").and_then(Json::as_str).ok_or_else(|| anyhow!("module {name}: missing file"))?,
-            );
-            let out_len = m
-                .get("output")
-                .and_then(|o| o.get("shape"))
-                .and_then(Json::as_arr)
-                .and_then(|s| s.first())
-                .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("module {name}: missing output shape"))? as usize;
-            if !dir.join(&file).exists() {
-                bail!("module {name}: artifact file {:?} not found in {dir:?}", file);
+        if let Some(arr) = json.get("modules") {
+            let arr = arr.as_arr().ok_or_else(|| err(&path, "'modules' must be an array"))?;
+            for m in arr {
+                modules.push(Self::parse_module(dir, &path, m, batch)?);
             }
-            modules.push(ModuleSpec { name, kind, n, file, batch, out_len });
         }
-        if modules.is_empty() {
-            bail!("manifest has no modules");
+
+        let mut lowered = Vec::new();
+        if let Some(arr) = json.get("lowered") {
+            if schema < 2 {
+                return Err(err(&path, "'lowered' modules require schema_version >= 2"));
+            }
+            let arr = arr.as_arr().ok_or_else(|| err(&path, "'lowered' must be an array"))?;
+            let mut seen: HashSet<MultiplierSpec> = HashSet::new();
+            for m in arr {
+                let spec = Self::parse_lowered(dir, &path, m, batch)?;
+                if !seen.insert(spec.design) {
+                    return Err(err(
+                        &path,
+                        format!("duplicate lowered module for design {}", spec.design.name()),
+                    ));
+                }
+                lowered.push(spec);
+            }
         }
-        Ok(Manifest { dir: dir.to_path_buf(), batch, modules })
+
+        if modules.is_empty() && lowered.is_empty() {
+            return Err(err(&path, "manifest has no modules"));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), schema, batch, modules, lowered })
     }
 
-    /// Find a module by bit-width and kind.
+    fn parse_module(dir: &Path, path: &Path, m: &Json, batch: usize) -> Result<ModuleSpec, SegmulError> {
+        let name = m
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err(path, "module missing 'name'"))?
+            .to_string();
+        let kind = m
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err(path, format!("module {name}: missing kind")))
+            .and_then(|s| ModuleKind::parse(s).map_err(|e| err(path, format!("module {name}: {e}"))))?;
+        let n = m
+            .get("n")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| err(path, format!("module {name}: missing n")))? as u32;
+        let file = PathBuf::from(
+            m.get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err(path, format!("module {name}: missing file")))?,
+        );
+        let out_len = m
+            .get("output")
+            .and_then(|o| o.get("shape"))
+            .and_then(Json::as_arr)
+            .and_then(|s| s.first())
+            .and_then(Json::as_u64)
+            .ok_or_else(|| err(path, format!("module {name}: missing output shape")))? as usize;
+        if !dir.join(&file).exists() {
+            return Err(err(path, format!("module {name}: artifact file {file:?} not found in {dir:?}")));
+        }
+        Ok(ModuleSpec { name, kind, n, file, batch, out_len })
+    }
+
+    fn parse_lowered(dir: &Path, path: &Path, m: &Json, batch: usize) -> Result<LoweredSpec, SegmulError> {
+        let name = m
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| err(path, "lowered module missing 'name'"))?
+            .to_string();
+        let design_json = m
+            .get("design")
+            .ok_or_else(|| err(path, format!("lowered module {name}: missing design tag")))?;
+        let design = MultiplierSpec::from_json(design_json)
+            .map_err(|e| err(path, format!("lowered module {name}: {e}")))?;
+        design
+            .validate()
+            .map_err(|e| err(path, format!("lowered module {name}: invalid design: {e}")))?;
+        let n = m
+            .get("n")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| err(path, format!("lowered module {name}: missing n")))? as u32;
+        if n != design.n() {
+            return Err(err(
+                path,
+                format!(
+                    "lowered module {name}: bit-width n={n} contradicts design {} (n={})",
+                    design.name(),
+                    design.n()
+                ),
+            ));
+        }
+        let module_batch = m
+            .get("batch")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| err(path, format!("lowered module {name}: missing batch")))? as usize;
+        if module_batch != batch {
+            return Err(err(
+                path,
+                format!("lowered module {name}: batch {module_batch} != manifest batch {batch}"),
+            ));
+        }
+        let file = PathBuf::from(
+            m.get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| err(path, format!("lowered module {name}: missing file")))?,
+        );
+        if !dir.join(&file).exists() {
+            return Err(err(path, format!("lowered module {name}: artifact file {file:?} not found in {dir:?}")));
+        }
+        Ok(LoweredSpec { name, design, n, batch, file })
+    }
+
+    /// Find a legacy module by bit-width and kind.
     pub fn find(&self, n: u32, kind: ModuleKind) -> Option<&ModuleSpec> {
         self.modules.iter().find(|m| m.n == n && m.kind == kind)
+    }
+
+    /// Find a design-lowered module: exact spec first, then the canonical
+    /// representative (`t = 0` segmented → accurate, ...).
+    pub fn find_lowered(&self, design: &MultiplierSpec) -> Option<&LoweredSpec> {
+        self.lowered
+            .iter()
+            .find(|m| m.design == *design)
+            .or_else(|| self.lowered.iter().find(|m| m.design == design.canonical()))
+    }
+
+    /// Whether the PJRT backend can dispatch `design` from this manifest:
+    /// a lowered module exists for it (exactly or canonically), or it is
+    /// in the segmented family and a legacy stats module covers its
+    /// bit-width.
+    pub fn covers_design(&self, design: &MultiplierSpec) -> bool {
+        self.find_lowered(design).is_some()
+            || (design.has_segmented_lowering() && self.find(design.n(), ModuleKind::Stats).is_some())
     }
 
     /// Bit-widths with a stats module available.
@@ -147,14 +306,21 @@ mod tests {
         write_fake(&dir);
         let m = Manifest::load(&dir).unwrap();
         assert_eq!(m.batch, 8);
+        assert_eq!(m.schema, 1);
+        assert!(m.lowered.is_empty());
         let spec = m.find(4, ModuleKind::Stats).unwrap();
         assert_eq!(spec.out_len, 14);
         assert!(m.find(4, ModuleKind::Prod).is_none());
         assert_eq!(m.stats_bitwidths(), vec![4]);
+        // A v1 stats module covers exactly the segmented family at its n.
+        assert!(m.covers_design(&MultiplierSpec::Segmented { n: 4, t: 2, fix: true }));
+        assert!(m.covers_design(&MultiplierSpec::Accurate { n: 4 }));
+        assert!(!m.covers_design(&MultiplierSpec::Mitchell { n: 4 }));
+        assert!(!m.covers_design(&MultiplierSpec::Segmented { n: 8, t: 2, fix: true }));
     }
 
     #[test]
-    fn missing_file_is_error() {
+    fn missing_file_is_typed_artifact_error() {
         let dir = std::env::temp_dir().join("segmul_manifest_missing");
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(
@@ -165,7 +331,20 @@ mod tests {
             ]}"#,
         )
         .unwrap();
-        assert!(Manifest::load(&dir).is_err());
+        let e = Manifest::load(&dir).unwrap_err();
+        assert_eq!(e.kind(), "artifact");
+        assert!(e.to_string().contains("nope.hlo.txt"), "{e}");
+    }
+
+    #[test]
+    fn unsupported_schema_rejected() {
+        let dir = std::env::temp_dir().join("segmul_manifest_schema");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"schema_version": 99, "batch": 8, "modules": []}"#)
+            .unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert_eq!(e.kind(), "artifact");
+        assert!(e.to_string().contains("schema_version 99"), "{e}");
     }
 
     #[test]
@@ -174,8 +353,10 @@ mod tests {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if dir.join("manifest.json").exists() {
             let m = Manifest::load(&dir).unwrap();
-            assert!(m.find(8, ModuleKind::Stats).is_some());
-            assert_eq!(m.find(8, ModuleKind::Stats).unwrap().out_len, 6 + 16);
+            if m.schema == 1 {
+                assert!(m.find(8, ModuleKind::Stats).is_some());
+                assert_eq!(m.find(8, ModuleKind::Stats).unwrap().out_len, 6 + 16);
+            }
         }
     }
 }

@@ -1,10 +1,16 @@
 //! The PJRT client wrapper: compile-once, execute-many.
 //!
 //! Adapted from `/opt/xla-example/src/bin/load_hlo.rs`. One
-//! `PjRtLoadedExecutable` per manifest module; executions are synchronous
-//! on the calling thread (the coordinator owns a dedicated executor thread
-//! and feeds it through channels — the FFI types are kept off other
-//! threads).
+//! `PjRtLoadedExecutable` per legacy manifest module; executions are
+//! synchronous on the calling thread (the coordinator owns dedicated
+//! executor threads and feeds them through channels — the FFI types are
+//! kept off other threads).
+//!
+//! Design-lowered modules (`segmul lower`) compile to the in-process
+//! software executor instead ([`super::lower::LoweredExec`]) — the stub
+//! PJRT client. The real `xla` client is only constructed when the
+//! manifest actually contains legacy HLO modules, so a lowered-only
+//! artifact set loads and executes even where the bindings are stubbed.
 
 use std::collections::HashMap;
 use std::path::Path;
@@ -12,7 +18,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::multiplier::MultiplierSpec;
+
 use super::artifact::{Manifest, ModuleKind, ModuleSpec};
+use super::lower::{LoweredExec, Program};
 
 /// Execution telemetry for one runtime instance.
 #[derive(Clone, Debug, Default)]
@@ -25,9 +34,12 @@ pub struct RuntimeStats {
 
 /// Loaded-and-compiled artifact set.
 pub struct Runtime {
+    /// Constructed only when legacy HLO modules are present.
     #[allow(dead_code)]
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
     modules: HashMap<(u32, ModuleKind), LoadedModule>,
+    /// Design-lowered modules, keyed by their exact design spec.
+    lowered: HashMap<MultiplierSpec, LoweredModule>,
     batch: usize,
     stats: RuntimeStats,
 }
@@ -37,8 +49,15 @@ struct LoadedModule {
     exe: xla::PjRtLoadedExecutable,
 }
 
+struct LoweredModule {
+    name: String,
+    exec: LoweredExec,
+}
+
 impl Runtime {
-    /// Create a CPU PJRT client and compile every module in the manifest.
+    /// Create the runtime from `<dir>/manifest.json`, compiling every
+    /// module (legacy modules through the PJRT client, lowered modules
+    /// through the software executor).
     pub fn load(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         Self::from_manifest(&manifest)
@@ -46,24 +65,48 @@ impl Runtime {
 
     /// Compile every module of an already-parsed manifest.
     pub fn from_manifest(manifest: &Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
-        let mut modules = HashMap::new();
         let mut compile_time = Duration::ZERO;
-        for spec in &manifest.modules {
-            let path = manifest.dir.join(&spec.file);
+        let mut modules = HashMap::new();
+        let client = if manifest.modules.is_empty() {
+            None
+        } else {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PjRtClient::cpu: {e}"))?;
+            for spec in &manifest.modules {
+                let path = manifest.dir.join(&spec.file);
+                let started = Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+                compile_time += started.elapsed();
+                modules.insert((spec.n, spec.kind), LoadedModule { spec: spec.clone(), exe });
+            }
+            Some(client)
+        };
+        let mut lowered = HashMap::new();
+        for ls in &manifest.lowered {
+            let path = manifest.dir.join(&ls.file);
             let started = Instant::now();
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing HLO text {path:?}: {e}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+            let text = std::fs::read_to_string(&path)
+                .map_err(|e| anyhow!("reading lowered module {path:?}: {e}"))?;
+            let prog = Program::parse(&text)
+                .map_err(|e| anyhow!("parsing lowered module {path:?}: {e}"))?;
+            if prog.n != ls.n {
+                bail!(
+                    "lowered module {path:?}: program bit-width n={} contradicts manifest n={}",
+                    prog.n,
+                    ls.n
+                );
+            }
             compile_time += started.elapsed();
-            modules.insert((spec.n, spec.kind), LoadedModule { spec: spec.clone(), exe });
+            lowered.insert(ls.design, LoweredModule { name: ls.name.clone(), exec: LoweredExec::new(prog) });
         }
         Ok(Self {
             client,
             modules,
+            lowered,
             batch: manifest.batch,
             stats: RuntimeStats { compile_time, ..Default::default() },
         })
@@ -90,9 +133,58 @@ impl Runtime {
         self.modules.contains_key(&(n, kind))
     }
 
+    /// Whether a design-lowered module can serve `design` (exact spec, or
+    /// its canonical representative — `t = 0` segmented ≡ accurate, ...).
+    pub fn has_lowered(&self, design: &MultiplierSpec) -> bool {
+        self.lowered.contains_key(design) || self.lowered.contains_key(&design.canonical())
+    }
+
+    /// Whether any module (legacy or lowered) serves bit-width `n`.
+    pub fn supports_bitwidth(&self, n: u32) -> bool {
+        self.has(n, ModuleKind::Stats) || self.lowered.keys().any(|d| d.n() == n)
+    }
+
+    /// Designs with a lowered module, in deterministic (name) order.
+    pub fn lowered_designs(&self) -> Vec<MultiplierSpec> {
+        let mut v: Vec<MultiplierSpec> = self.lowered.keys().copied().collect();
+        v.sort_by_key(|d| d.name());
+        v
+    }
+
+    /// Number of design-lowered modules compiled.
+    pub fn lowered_len(&self) -> usize {
+        self.lowered.len()
+    }
+
     /// Telemetry snapshot.
     pub fn stats(&self) -> RuntimeStats {
         self.stats.clone()
+    }
+
+    /// Execute the lowered module for `design` (exact spec first, then
+    /// canonical): returns the approximate products. Operand length must
+    /// equal the lowered batch — callers pad (see the PJRT backend).
+    pub fn exec_lowered(&mut self, design: &MultiplierSpec, a: &[u64], b: &[u64]) -> Result<Vec<u64>> {
+        let key = if self.lowered.contains_key(design) { *design } else { design.canonical() };
+        let module = self
+            .lowered
+            .get_mut(&key)
+            .ok_or_else(|| anyhow!("no lowered module for design {} (run `segmul lower`)", design.name()))?;
+        if a.len() != b.len() || a.len() != self.batch {
+            bail!(
+                "operand length {} != lowered batch {} (module {})",
+                a.len(),
+                self.batch,
+                module.name
+            );
+        }
+        let started = Instant::now();
+        let mut out = vec![0u64; a.len()];
+        module.exec.run(a, b, &mut out);
+        self.stats.executions += 1;
+        self.stats.pairs_evaluated += a.len() as u64;
+        self.stats.exec_time += started.elapsed();
+        Ok(out)
     }
 
     fn execute(&mut self, n: u32, kind: ModuleKind, a: &[u64], b: &[u64], t: u64, fix: bool) -> Result<(xla::Literal, usize)> {
@@ -156,5 +248,76 @@ impl Runtime {
             bail!("product length {} != manifest {}", v.len(), out_len);
         }
         Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::wordlevel::approx_seq_mul;
+    use crate::runtime::lower::emit_artifacts;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn lowered_only_runtime_loads_and_executes_without_xla() {
+        // The vendored xla stub cannot construct a client; a lowered-only
+        // manifest must not need one.
+        let dir = std::env::temp_dir().join(format!("segmul_runtime_lowered_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let specs = MultiplierSpec::registry_examples(8);
+        emit_artifacts(&dir, &specs, 128).unwrap();
+        let mut rt = Runtime::load(&dir).unwrap();
+        assert_eq!(rt.batch(), 128);
+        assert_eq!(rt.lowered_len(), specs.len());
+        assert!(rt.supports_bitwidth(8));
+        assert!(!rt.supports_bitwidth(16));
+        assert!(rt.stats_bitwidths().is_empty(), "no legacy stats modules");
+
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let a: Vec<u64> = (0..128).map(|_| rng.next_bits(8)).collect();
+        let b: Vec<u64> = (0..128).map(|_| rng.next_bits(8)).collect();
+        let got = rt.exec_lowered(&MultiplierSpec::Segmented { n: 8, t: 4, fix: true }, &a, &b).unwrap();
+        for i in 0..a.len() {
+            assert_eq!(got[i], approx_seq_mul(a[i], b[i], 8, 4, true), "i={i}");
+        }
+        // Canonical fallback: t=0 segmented served by the accurate module.
+        assert!(rt.has_lowered(&MultiplierSpec::Segmented { n: 8, t: 0, fix: true }));
+        let t0 = rt.exec_lowered(&MultiplierSpec::Segmented { n: 8, t: 0, fix: false }, &a, &b).unwrap();
+        for i in 0..a.len() {
+            assert_eq!(t0[i], a[i] * b[i], "i={i}");
+        }
+        // Telemetry counted the lowered executions.
+        let stats = rt.stats();
+        assert_eq!(stats.executions, 2);
+        assert_eq!(stats.pairs_evaluated, 256);
+
+        // Wrong batch is rejected; unknown designs name `segmul lower`.
+        assert!(rt.exec_lowered(&MultiplierSpec::Mitchell { n: 8 }, &a[..10], &b[..10]).is_err());
+        let e = rt
+            .exec_lowered(&MultiplierSpec::Truncated { n: 16, k: 2 }, &a, &b)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("segmul lower"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_manifest_still_requires_the_xla_client() {
+        // A v1 manifest with HLO modules must keep failing against the
+        // stub bindings (graceful CPU fallback at the call sites).
+        let dir = std::env::temp_dir().join(format!("segmul_runtime_legacy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule fake").unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"batch": 8, "modules": [
+                {"name":"seqmul_stats_n4","kind":"stats","n":4,"file":"m.hlo.txt",
+                 "output":{"dtype":"f64","shape":[14]}}
+            ]}"#,
+        )
+        .unwrap();
+        let e = Runtime::load(&dir).unwrap_err().to_string();
+        assert!(e.contains("unavailable"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,769 @@
+//! Design-agnostic artifact lowering: every [`MultiplierSpec`] registry
+//! family → a lowered, branch-free module executable on the PJRT backend.
+//!
+//! The AOT pipeline (`make artifacts`) lowers only the segmented family;
+//! this module closes the gap for the rest of the registry so a
+//! `--designs all` sweep never falls back to the CPU backend. Each design
+//! is lowered to a **straight-line program** over a tiny lane-wise tensor
+//! IR ("segir"): two `u64[batch]` inputs, a sequence of SSA instructions
+//! (wrapping arithmetic, bitwise ops, immediate and lane-variable shifts,
+//! `lzcnt`, zero-tests), and one return register. Loops are fully
+//! unrolled at lowering time — every configuration axis (`n`, `t`, `k`,
+//! break lines, fix mode) is baked into the module, exactly like the HLO
+//! artifacts bake theirs — so the program has uniform latency and no
+//! data-dependent control flow, the same contract the batch kernels of
+//! [`crate::multiplier::batch_baselines`] satisfy:
+//!
+//! * **Truncation / broken-array** — one wide multiply over the surviving
+//!   high rows plus `k` masked adds.
+//! * **Mitchell** — leading-one detect via `clz`, the two piecewise
+//!   antilog cases as a mask select on the mantissa-sum carry.
+//! * **Kulkarni** — the closed form `a*b − 2·f(a)·f(b)` with the SWAR
+//!   digit marker `f(x) = x & (x>>1) & 0x5555…`.
+//! * **Segmented / accurate** — the branch-free word-level recurrence of
+//!   [`crate::multiplier::batch`], unrolled over `j ∈ 1..n`.
+//! * **Bit-level / netlist** — lowered to the same word-level recurrence:
+//!   all three compute the identical product function (the paper's §IV
+//!   equivalence, pinned for every `(n, t, fix)` by
+//!   `tests/kernel_differential.rs` and re-pinned PJRT-vs-CPU by
+//!   `tests/pjrt_lowered_differential.rs`).
+//!
+//! Modules serialize to a versioned text format (`segir 1`) referenced by
+//! the schema-v2 manifest ([`super::artifact`]); [`emit_artifacts`] is the
+//! emitter behind `segmul lower`. [`LoweredExec`] is the software
+//! executor the stub PJRT client dispatches through — it interprets the
+//! program tile-by-tile over the operand batch (one pass per instruction,
+//! lane-parallel within a tile), which keeps the register file L1-resident
+//! while preserving the one-execution-per-batch accounting of the real
+//! PJRT path.
+
+use std::path::Path;
+
+use crate::error::SegmulError;
+use crate::multiplier::MultiplierSpec;
+use crate::util::json::{obj, Json};
+
+use super::artifact::{Manifest, SCHEMA_VERSION};
+
+/// SSA register index: `%0` = operand `a`, `%1` = operand `b`,
+/// instruction `i` writes `%(2+i)`.
+pub type Reg = u32;
+
+/// One lane-wise instruction. All arithmetic wraps; shift-by-register
+/// amounts are masked to `& 63`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Op {
+    /// Broadcast an immediate into every lane.
+    Const(u64),
+    Mul(Reg, Reg),
+    Add(Reg, Reg),
+    Sub(Reg, Reg),
+    And(Reg, Reg),
+    Or(Reg, Reg),
+    Xor(Reg, Reg),
+    /// Shift by a lowering-time immediate (`imm < 64`).
+    Shl(Reg, u32),
+    Shr(Reg, u32),
+    /// Shift by a lane-wise register amount (masked `& 63`).
+    Shlv(Reg, Reg),
+    Shrv(Reg, Reg),
+    Not(Reg),
+    /// Two's-complement negation — turns a 0/1 lane into a 0/all-ones mask.
+    Neg(Reg),
+    /// 1 when the lane is nonzero, else 0.
+    Nez(Reg),
+    /// `leading_zeros` as a lane value (0..=64).
+    Clz(Reg),
+}
+
+/// A lowered straight-line module: `ret = f(a, b)` lane-wise.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Program {
+    /// Operand bit-width the module was lowered for (operands `< 2^n`).
+    pub n: u32,
+    pub ops: Vec<Op>,
+    pub ret: Reg,
+}
+
+// ---------------------------------------------------------------------------
+// Lowering (emission)
+// ---------------------------------------------------------------------------
+
+/// SSA builder with constant memoization.
+struct Lowerer {
+    ops: Vec<Op>,
+    consts: std::collections::BTreeMap<u64, Reg>,
+}
+
+const A: Reg = 0;
+const B: Reg = 1;
+
+impl Lowerer {
+    fn new() -> Self {
+        Lowerer { ops: Vec::new(), consts: std::collections::BTreeMap::new() }
+    }
+
+    fn push(&mut self, op: Op) -> Reg {
+        if let Op::Shl(_, s) | Op::Shr(_, s) = op {
+            debug_assert!(s < 64, "immediate shift out of range");
+        }
+        self.ops.push(op);
+        1 + self.ops.len() as Reg
+    }
+
+    fn konst(&mut self, v: u64) -> Reg {
+        if let Some(&r) = self.consts.get(&v) {
+            return r;
+        }
+        let r = self.push(Op::Const(v));
+        self.consts.insert(v, r);
+        r
+    }
+
+    fn mul(&mut self, x: Reg, y: Reg) -> Reg {
+        self.push(Op::Mul(x, y))
+    }
+    fn add(&mut self, x: Reg, y: Reg) -> Reg {
+        self.push(Op::Add(x, y))
+    }
+    fn sub(&mut self, x: Reg, y: Reg) -> Reg {
+        self.push(Op::Sub(x, y))
+    }
+    fn and(&mut self, x: Reg, y: Reg) -> Reg {
+        self.push(Op::And(x, y))
+    }
+    fn or(&mut self, x: Reg, y: Reg) -> Reg {
+        self.push(Op::Or(x, y))
+    }
+    fn shl(&mut self, x: Reg, s: u32) -> Reg {
+        self.push(Op::Shl(x, s))
+    }
+    fn shr(&mut self, x: Reg, s: u32) -> Reg {
+        self.push(Op::Shr(x, s))
+    }
+    fn shlv(&mut self, x: Reg, s: Reg) -> Reg {
+        self.push(Op::Shlv(x, s))
+    }
+    fn shrv(&mut self, x: Reg, s: Reg) -> Reg {
+        self.push(Op::Shrv(x, s))
+    }
+    fn not(&mut self, x: Reg) -> Reg {
+        self.push(Op::Not(x))
+    }
+    fn neg(&mut self, x: Reg) -> Reg {
+        self.push(Op::Neg(x))
+    }
+    fn nez(&mut self, x: Reg) -> Reg {
+        self.push(Op::Nez(x))
+    }
+    fn clz(&mut self, x: Reg) -> Reg {
+        self.push(Op::Clz(x))
+    }
+
+    /// All-ones mask of bit `j` of `x` (the AND-mask form of the scalar
+    /// models' `((x >> j) & 1).wrapping_neg()`).
+    fn bit_mask(&mut self, x: Reg, j: u32) -> Reg {
+        let one = self.konst(1);
+        let b = self.shr(x, j);
+        let b1 = self.and(b, one);
+        self.neg(b1)
+    }
+
+    fn finish(self, n: u32, ret: Reg) -> Program {
+        Program { n, ops: self.ops, ret }
+    }
+}
+
+/// The branch-free segmented-carry recurrence of
+/// [`crate::multiplier::batch::approx_seq_mul_batch`], unrolled over
+/// `j ∈ 1..n` (also the lowering of the accurate design at `t = 0`).
+fn lower_segmented(l: &mut Lowerer, n: u32, t: u32, fix: bool) -> Reg {
+    let one = l.konst(1);
+    let mt = l.konst((1u64 << t) - 1);
+    // s = a & -(b & 1)
+    let b0 = l.and(B, one);
+    let m0 = l.neg(b0);
+    let mut s = l.and(A, m0);
+    let mut cff = l.konst(0);
+    let mut low = l.konst(0);
+    for j in 1..n {
+        let sbit = l.and(s, one);
+        let sl = l.shl(sbit, j - 1);
+        low = l.or(low, sl);
+        let x = l.shr(s, 1);
+        let ppm = l.bit_mask(B, j);
+        let pp = l.and(A, ppm);
+        let xm = l.and(x, mt);
+        let ppl = l.and(pp, mt);
+        let lsum = l.add(xm, ppl);
+        let lst = l.shr(lsum, t);
+        let clsp = l.and(lst, one);
+        let xh = l.shr(x, t);
+        let pph = l.shr(pp, t);
+        let mh = l.add(xh, pph);
+        let msum = l.add(mh, cff);
+        let msh = l.shl(msum, t);
+        let lsl = l.and(lsum, mt);
+        s = l.or(msh, lsl);
+        cff = clsp;
+    }
+    let sh = l.shl(s, n - 1);
+    let mut phat = l.or(sh, low);
+    if fix {
+        // Lanes with the compensated carry raised force the n+t LSBs to 1.
+        let fm = l.neg(cff);
+        let bits = l.konst((1u64 << (n + t)) - 1);
+        let fbits = l.and(fm, bits);
+        phat = l.or(phat, fbits);
+    }
+    phat
+}
+
+/// Vertical truncation: one wide multiply over rows `j >= k` plus `k`
+/// masked adds (mirrors `trunc_mul_one`).
+fn lower_truncated(l: &mut Lowerer, k: u32) -> Reg {
+    let bh = l.shr(B, k);
+    let bh2 = l.shl(bh, k);
+    let mut p = l.mul(A, bh2);
+    for j in 0..k {
+        let av = l.shr(A, k - j);
+        let avs = l.shl(av, k);
+        let m = l.bit_mask(B, j);
+        let term = l.and(avs, m);
+        p = l.add(p, term);
+    }
+    p
+}
+
+/// Broken-array: rows `< hbl` and columns `< vbl` dropped (mirrors
+/// `bam_mul_one`).
+fn lower_broken_array(l: &mut Lowerer, hbl: u32, vbl: u32) -> Reg {
+    let cut = hbl.max(vbl);
+    let bh = l.shr(B, cut);
+    let bh2 = l.shl(bh, cut);
+    let mut p = l.mul(A, bh2);
+    for j in hbl..vbl {
+        let av = l.shr(A, vbl - j);
+        let avs = l.shl(av, vbl);
+        let m = l.bit_mask(B, j);
+        let term = l.and(avs, m);
+        p = l.add(p, term);
+    }
+    p
+}
+
+/// Mitchell's logarithmic multiplier: `clz` leading-one detect, zero
+/// operands as an AND mask, the piecewise antilog as a mask select
+/// (mirrors `mitchell_mul_one`).
+fn lower_mitchell(l: &mut Lowerer) -> Reg {
+    let one = l.konst(1);
+    let nza = l.nez(A);
+    let nzb = l.nez(B);
+    let both = l.and(nza, nzb);
+    let nz = l.neg(both);
+    let am = l.and(A, nz);
+    let bm = l.and(B, nz);
+    let c63 = l.konst(63);
+    let a1 = l.or(am, one);
+    let b1 = l.or(bm, one);
+    let lza = l.clz(a1);
+    let lzb = l.clz(b1);
+    let k1 = l.sub(c63, lza);
+    let k2 = l.sub(c63, lzb);
+    let bit1 = l.shlv(one, k1);
+    let nb1 = l.not(bit1);
+    let x1 = l.and(am, nb1);
+    let bit2 = l.shlv(one, k2);
+    let nb2 = l.not(bit2);
+    let x2 = l.and(bm, nb2);
+    let k = l.add(k1, k2);
+    let s1 = l.shlv(x1, k2);
+    let s2 = l.shlv(x2, k1);
+    let s = l.add(s1, s2);
+    let sk = l.shrv(s, k);
+    let skb = l.and(sk, one);
+    let over = l.neg(skb);
+    let pk = l.shlv(one, k);
+    let base = l.add(pk, s);
+    let nover = l.not(over);
+    let r1 = l.and(base, nover);
+    let s2x = l.shl(s, 1);
+    let r2 = l.and(s2x, over);
+    let r = l.or(r1, r2);
+    l.and(r, nz)
+}
+
+/// Kulkarni's closed form `a*b − 2·f(a)·f(b)` (mirrors `kulkarni_mul_one`).
+fn lower_kulkarni(l: &mut Lowerer, n: u32) -> Reg {
+    let m3 = l.konst(0x5555_5555_5555_5555u64 & (((1u128 << n) - 1) as u64));
+    let a1 = l.shr(A, 1);
+    let fa0 = l.and(A, a1);
+    let fa = l.and(fa0, m3);
+    let b1 = l.shr(B, 1);
+    let fb0 = l.and(B, b1);
+    let fb = l.and(fb0, m3);
+    let ab = l.mul(A, B);
+    let ff = l.mul(fa, fb);
+    let ff2 = l.shl(ff, 1);
+    l.sub(ab, ff2)
+}
+
+/// Lower one registry design to its straight-line module. The spec is
+/// validated first, so malformed designs surface as typed
+/// [`SegmulError::Spec`] — never as a bad program.
+pub fn lower_design(spec: &MultiplierSpec) -> Result<Program, SegmulError> {
+    spec.validate()?;
+    let n = spec.n();
+    let mut l = Lowerer::new();
+    let ret = match *spec {
+        MultiplierSpec::Segmented { t, fix, .. } => lower_segmented(&mut l, n, t, fix),
+        MultiplierSpec::Accurate { .. } => lower_segmented(&mut l, n, 0, false),
+        MultiplierSpec::Truncated { k, .. } => lower_truncated(&mut l, k),
+        MultiplierSpec::BrokenArray { hbl, vbl, .. } => lower_broken_array(&mut l, hbl, vbl),
+        MultiplierSpec::Mitchell { .. } => lower_mitchell(&mut l),
+        MultiplierSpec::Kulkarni { .. } => lower_kulkarni(&mut l, n),
+        // Same product function as the word-level recurrence (§IV
+        // equivalence, pinned by the differential tests).
+        MultiplierSpec::BitLevel { t, fix, .. } | MultiplierSpec::Netlist { t, fix, .. } => {
+            lower_segmented(&mut l, n, t, fix)
+        }
+    };
+    Ok(l.finish(n, ret))
+}
+
+// ---------------------------------------------------------------------------
+// Text serialization ("segir 1")
+// ---------------------------------------------------------------------------
+
+impl Program {
+    /// Serialize to the versioned `segir 1` text form.
+    pub fn to_text(&self) -> String {
+        use std::fmt::Write;
+        let mut text = String::new();
+        text.push_str("segir 1\n");
+        let _ = writeln!(text, "n {}", self.n);
+        text.push_str("input %0 a\ninput %1 b\n");
+        for (i, op) in self.ops.iter().enumerate() {
+            let d = 2 + i;
+            let line = match *op {
+                Op::Const(v) => format!("%{d} = const {v}"),
+                Op::Mul(x, y) => format!("%{d} = mul %{x} %{y}"),
+                Op::Add(x, y) => format!("%{d} = add %{x} %{y}"),
+                Op::Sub(x, y) => format!("%{d} = sub %{x} %{y}"),
+                Op::And(x, y) => format!("%{d} = and %{x} %{y}"),
+                Op::Or(x, y) => format!("%{d} = or %{x} %{y}"),
+                Op::Xor(x, y) => format!("%{d} = xor %{x} %{y}"),
+                Op::Shl(x, s) => format!("%{d} = shl %{x} {s}"),
+                Op::Shr(x, s) => format!("%{d} = shr %{x} {s}"),
+                Op::Shlv(x, y) => format!("%{d} = shlv %{x} %{y}"),
+                Op::Shrv(x, y) => format!("%{d} = shrv %{x} %{y}"),
+                Op::Not(x) => format!("%{d} = not %{x}"),
+                Op::Neg(x) => format!("%{d} = neg %{x}"),
+                Op::Nez(x) => format!("%{d} = nez %{x}"),
+                Op::Clz(x) => format!("%{d} = clz %{x}"),
+            };
+            text.push_str(&line);
+            text.push('\n');
+        }
+        let _ = writeln!(text, "ret %{}", self.ret);
+        text
+    }
+
+    /// Parse the `segir 1` text form, validating SSA discipline (each
+    /// instruction writes the next register, operands reference earlier
+    /// registers only) and shift-immediate ranges. The error is a plain
+    /// reason string; callers wrap it with the file path.
+    pub fn parse(text: &str) -> Result<Program, String> {
+        fn reg(tok: &str, limit: u32) -> Result<Reg, String> {
+            let idx = tok
+                .strip_prefix('%')
+                .and_then(|v| v.parse::<u32>().ok())
+                .ok_or_else(|| format!("expected register, got {tok:?}"))?;
+            if idx >= limit {
+                return Err(format!("register %{idx} references a not-yet-defined value"));
+            }
+            Ok(idx)
+        }
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        match lines.next() {
+            Some("segir 1") => {}
+            Some(other) => return Err(format!("unsupported module header {other:?} (expected \"segir 1\")")),
+            None => return Err("empty module".to_string()),
+        }
+        let mut n: Option<u32> = None;
+        let mut inputs = 0u32;
+        let mut ops: Vec<Op> = Vec::new();
+        let mut ret: Option<Reg> = None;
+        for line in lines {
+            if ret.is_some() {
+                return Err(format!("instruction after 'ret': {line:?}"));
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let defined = 2 + ops.len() as u32;
+            match toks.as_slice() {
+                ["n", v] => {
+                    let bits = v.parse::<u32>().map_err(|_| format!("bad bit-width {v:?}"))?;
+                    if !(1..=32).contains(&bits) {
+                        return Err(format!("bit-width n={bits} out of range 1..=32"));
+                    }
+                    n = Some(bits);
+                }
+                ["input", r, name] => {
+                    let idx = reg(r, 2)?;
+                    let want = ["a", "b"];
+                    if idx != inputs || inputs >= 2 || *name != want[inputs as usize] {
+                        return Err(format!("unexpected input declaration {line:?}"));
+                    }
+                    inputs += 1;
+                }
+                ["ret", r] => ret = Some(reg(r, defined)?),
+                [dst, "=", body @ ..] => {
+                    if inputs != 2 {
+                        return Err("instructions before both input declarations".to_string());
+                    }
+                    let d = dst
+                        .strip_prefix('%')
+                        .and_then(|v| v.parse::<u32>().ok())
+                        .ok_or_else(|| format!("bad destination {dst:?}"))?;
+                    if d != defined {
+                        return Err(format!("instruction writes %{d}, expected %{defined}"));
+                    }
+                    let imm = |tok: &str| -> Result<u32, String> {
+                        let s = tok
+                            .parse::<u32>()
+                            .map_err(|_| format!("expected shift immediate, got {tok:?}"))?;
+                        if s >= 64 {
+                            return Err(format!("shift immediate {s} out of range 0..64"));
+                        }
+                        Ok(s)
+                    };
+                    let op = match *body {
+                        ["const", v] => {
+                            Op::Const(v.parse::<u64>().map_err(|_| format!("bad constant {v:?}"))?)
+                        }
+                        ["mul", x, y] => Op::Mul(reg(x, defined)?, reg(y, defined)?),
+                        ["add", x, y] => Op::Add(reg(x, defined)?, reg(y, defined)?),
+                        ["sub", x, y] => Op::Sub(reg(x, defined)?, reg(y, defined)?),
+                        ["and", x, y] => Op::And(reg(x, defined)?, reg(y, defined)?),
+                        ["or", x, y] => Op::Or(reg(x, defined)?, reg(y, defined)?),
+                        ["xor", x, y] => Op::Xor(reg(x, defined)?, reg(y, defined)?),
+                        ["shl", x, s] => Op::Shl(reg(x, defined)?, imm(s)?),
+                        ["shr", x, s] => Op::Shr(reg(x, defined)?, imm(s)?),
+                        ["shlv", x, y] => Op::Shlv(reg(x, defined)?, reg(y, defined)?),
+                        ["shrv", x, y] => Op::Shrv(reg(x, defined)?, reg(y, defined)?),
+                        ["not", x] => Op::Not(reg(x, defined)?),
+                        ["neg", x] => Op::Neg(reg(x, defined)?),
+                        ["nez", x] => Op::Nez(reg(x, defined)?),
+                        ["clz", x] => Op::Clz(reg(x, defined)?),
+                        _ => return Err(format!("unparsable instruction {line:?}")),
+                    };
+                    ops.push(op);
+                }
+                _ => return Err(format!("unparsable line {line:?}")),
+            }
+        }
+        let n = n.ok_or_else(|| "module missing 'n' declaration".to_string())?;
+        if inputs != 2 {
+            return Err("module missing input declarations".to_string());
+        }
+        let ret = ret.ok_or_else(|| "module missing 'ret'".to_string())?;
+        Ok(Program { n, ops, ret })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution (the stub PJRT client's software executor)
+// ---------------------------------------------------------------------------
+
+/// Lanes evaluated per interpreter pass: the register file stays
+/// L1/L2-resident (`(2 + ops) × TILE × 8` bytes) while each instruction
+/// runs as one tight lane loop.
+pub const TILE: usize = 1024;
+
+/// A compiled-for-execution lowered module: the program plus a reusable
+/// tile-register scratch file.
+pub struct LoweredExec {
+    prog: Program,
+    regs: Vec<u64>,
+}
+
+impl LoweredExec {
+    pub fn new(prog: Program) -> Self {
+        let slots = (2 + prog.ops.len()) * TILE;
+        LoweredExec { prog, regs: vec![0; slots] }
+    }
+
+    pub fn program(&self) -> &Program {
+        &self.prog
+    }
+
+    /// Execute the module: `out[i] = f(a[i], b[i])` for every lane. Any
+    /// length; processed in [`TILE`]-lane passes.
+    pub fn run(&mut self, a: &[u64], b: &[u64], out: &mut [u64]) {
+        assert_eq!(a.len(), b.len(), "operand slices must have equal length");
+        assert_eq!(a.len(), out.len(), "output slice must match operand length");
+        for ((ca, cb), co) in a.chunks(TILE).zip(b.chunks(TILE)).zip(out.chunks_mut(TILE)) {
+            run_tile(&self.prog, &mut self.regs, ca, cb, co);
+        }
+    }
+}
+
+fn bin(d: &mut [u64], x: &[u64], y: &[u64], f: impl Fn(u64, u64) -> u64) {
+    for ((o, &a), &b) in d.iter_mut().zip(x).zip(y) {
+        *o = f(a, b);
+    }
+}
+
+fn un(d: &mut [u64], x: &[u64], f: impl Fn(u64) -> u64) {
+    for (o, &a) in d.iter_mut().zip(x) {
+        *o = f(a);
+    }
+}
+
+fn run_tile(prog: &Program, regs: &mut [u64], a: &[u64], b: &[u64], out: &mut [u64]) {
+    let w = a.len();
+    regs[..w].copy_from_slice(a);
+    regs[TILE..TILE + w].copy_from_slice(b);
+    for (i, op) in prog.ops.iter().enumerate() {
+        let dst = (2 + i) * TILE;
+        // SSA: operands always reference earlier registers, so the
+        // destination tile is disjoint from every source tile.
+        let (src, rest) = regs.split_at_mut(dst);
+        let d = &mut rest[..w];
+        let r = |reg: Reg| &src[reg as usize * TILE..reg as usize * TILE + w];
+        match *op {
+            Op::Const(v) => d.fill(v),
+            Op::Mul(x, y) => bin(d, r(x), r(y), |a, b| a.wrapping_mul(b)),
+            Op::Add(x, y) => bin(d, r(x), r(y), |a, b| a.wrapping_add(b)),
+            Op::Sub(x, y) => bin(d, r(x), r(y), |a, b| a.wrapping_sub(b)),
+            Op::And(x, y) => bin(d, r(x), r(y), |a, b| a & b),
+            Op::Or(x, y) => bin(d, r(x), r(y), |a, b| a | b),
+            Op::Xor(x, y) => bin(d, r(x), r(y), |a, b| a ^ b),
+            Op::Shl(x, s) => un(d, r(x), |a| a << s),
+            Op::Shr(x, s) => un(d, r(x), |a| a >> s),
+            Op::Shlv(x, y) => bin(d, r(x), r(y), |a, s| a << (s & 63)),
+            Op::Shrv(x, y) => bin(d, r(x), r(y), |a, s| a >> (s & 63)),
+            Op::Not(x) => un(d, r(x), |a| !a),
+            Op::Neg(x) => un(d, r(x), |a| a.wrapping_neg()),
+            Op::Nez(x) => un(d, r(x), |a| (a != 0) as u64),
+            Op::Clz(x) => un(d, r(x), |a| a.leading_zeros() as u64),
+        }
+    }
+    let ret = prog.ret as usize * TILE;
+    out.copy_from_slice(&regs[ret..ret + w]);
+}
+
+// ---------------------------------------------------------------------------
+// The artifact emitter (`segmul lower`)
+// ---------------------------------------------------------------------------
+
+/// Lower every spec (deduplicated, order-preserving) into `dir`: one
+/// `<stem>.segir` module per design plus a schema-v2 `manifest.json`.
+/// Returns the manifest **re-loaded through the validating parser**, so a
+/// successful emit is also a proven round-trip.
+pub fn emit_artifacts(
+    dir: &Path,
+    specs: &[MultiplierSpec],
+    batch: usize,
+) -> Result<Manifest, SegmulError> {
+    if batch == 0 {
+        return Err(SegmulError::config("lowered batch must be positive"));
+    }
+    if specs.is_empty() {
+        return Err(SegmulError::config("no designs to lower"));
+    }
+    std::fs::create_dir_all(dir)?;
+    let mut seen = std::collections::HashSet::new();
+    let mut entries = Vec::new();
+    for spec in specs {
+        if !seen.insert(*spec) {
+            continue;
+        }
+        let prog = lower_design(spec)?;
+        let stem = spec.artifact_stem();
+        let file = format!("{stem}.segir");
+        std::fs::write(dir.join(&file), prog.to_text())?;
+        entries.push(obj(vec![
+            ("name", Json::from(stem.as_str())),
+            ("design", spec.to_json()),
+            ("n", Json::from(spec.n() as u64)),
+            ("batch", Json::from(batch as u64)),
+            ("file", Json::from(file.as_str())),
+            ("ops", Json::from(prog.ops.len() as u64)),
+        ]));
+    }
+    let manifest = obj(vec![
+        ("schema_version", Json::from(SCHEMA_VERSION)),
+        ("generator", Json::from("segmul lower")),
+        ("batch", Json::from(batch as u64)),
+        ("lowered", Json::Arr(entries)),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string_pretty())?;
+    Manifest::load(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multiplier::wordlevel::approx_seq_mul;
+    use crate::multiplier::BatchMultiplier;
+    use crate::util::rng::Xoshiro256;
+
+    fn operands(n: u32, len: usize, seed: u64) -> (Vec<u64>, Vec<u64>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        // Bias toward 0 and powers of two (Mitchell's special paths).
+        let sample = |rng: &mut Xoshiro256| match rng.next_below(8) {
+            0 => 0u64,
+            1 => 1u64 << rng.next_below(n as u64),
+            _ => rng.next_bits(n),
+        };
+        let a: Vec<u64> = (0..len).map(|_| sample(&mut rng)).collect();
+        let b: Vec<u64> = (0..len).map(|_| sample(&mut rng)).collect();
+        (a, b)
+    }
+
+    /// Every registry design's lowered module computes the exact product
+    /// function of its production batch kernel, across a TILE boundary.
+    #[test]
+    fn lowered_modules_match_batch_kernels() {
+        for n in [4u32, 8, 16] {
+            let (a, b) = operands(n, TILE + 137, 0x10 + n as u64);
+            for spec in MultiplierSpec::registry_examples(n) {
+                let prog = lower_design(&spec).unwrap();
+                assert_eq!(prog.n, n);
+                let mut exec = LoweredExec::new(prog);
+                let mut got = vec![0u64; a.len()];
+                exec.run(&a, &b, &mut got);
+                let kernel = spec.build_batch().unwrap();
+                let mut want = vec![0u64; a.len()];
+                kernel.mul_batch(&a, &b, &mut want);
+                assert_eq!(got, want, "{}", spec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn segmented_lowering_matches_scalar_model_every_config() {
+        for n in [1u32, 2, 5, 8] {
+            for t in 0..n {
+                for fix in [false, true] {
+                    let spec = MultiplierSpec::Segmented { n, t, fix };
+                    let mut exec = LoweredExec::new(lower_design(&spec).unwrap());
+                    let (a, b) = operands(n, 300, (n as u64) << 8 | t as u64);
+                    let mut got = vec![0u64; a.len()];
+                    exec.run(&a, &b, &mut got);
+                    for i in 0..a.len() {
+                        assert_eq!(
+                            got[i],
+                            approx_seq_mul(a[i], b[i], n, t, fix),
+                            "n={n} t={t} fix={fix} a={} b={}",
+                            a[i],
+                            b[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn widest_configs_lower_and_execute() {
+        // n = 32 stresses the shift-immediate extremes (n + t = 63, k = n).
+        for spec in [
+            MultiplierSpec::Segmented { n: 32, t: 31, fix: true },
+            MultiplierSpec::Truncated { n: 32, k: 32 },
+            MultiplierSpec::BrokenArray { n: 32, hbl: 32, vbl: 32 },
+            MultiplierSpec::Kulkarni { n: 32 },
+            MultiplierSpec::Mitchell { n: 32 },
+        ] {
+            let mut exec = LoweredExec::new(lower_design(&spec).unwrap());
+            let (a, b) = operands(32, 200, 0xFF);
+            let mut got = vec![0u64; a.len()];
+            exec.run(&a, &b, &mut got);
+            let kernel = spec.build_batch().unwrap();
+            let mut want = vec![0u64; a.len()];
+            kernel.mul_batch(&a, &b, &mut want);
+            assert_eq!(got, want, "{}", spec.name());
+        }
+    }
+
+    #[test]
+    fn text_round_trip_preserves_program_and_semantics() {
+        for spec in MultiplierSpec::registry_examples(8) {
+            let prog = lower_design(&spec).unwrap();
+            let text = prog.to_text();
+            let back = Program::parse(&text).unwrap();
+            assert_eq!(back, prog, "{}", spec.name());
+            let (a, b) = operands(8, 100, 7);
+            let (mut x, mut y) = (vec![0u64; 100], vec![0u64; 100]);
+            LoweredExec::new(prog).run(&a, &b, &mut x);
+            LoweredExec::new(back).run(&a, &b, &mut y);
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn parse_rejects_malformed_modules() {
+        assert!(Program::parse("").unwrap_err().contains("empty"));
+        assert!(Program::parse("hlo 7\n").unwrap_err().contains("header"));
+        let head = "segir 1\nn 8\ninput %0 a\ninput %1 b\n";
+        // Wrong destination index.
+        assert!(Program::parse(&format!("{head}%5 = const 1\nret %5\n")).is_err());
+        // Operand referencing a later register.
+        assert!(Program::parse(&format!("{head}%2 = add %3 %0\nret %2\n")).is_err());
+        // Shift immediate out of range.
+        assert!(Program::parse(&format!("{head}%2 = shl %0 64\nret %2\n")).is_err());
+        // Unknown mnemonic.
+        assert!(Program::parse(&format!("{head}%2 = frob %0\nret %2\n")).is_err());
+        // Missing ret.
+        assert!(Program::parse(&format!("{head}%2 = const 1\n")).unwrap_err().contains("ret"));
+        // Bad bit-width.
+        assert!(Program::parse("segir 1\nn 40\ninput %0 a\ninput %1 b\nret %0\n").is_err());
+        // Minimal valid module parses.
+        let ok = Program::parse(&format!("{head}%2 = mul %0 %1\nret %2\n")).unwrap();
+        assert_eq!(ok.ops.len(), 1);
+        assert_eq!(ok.ret, 2);
+    }
+
+    #[test]
+    fn emit_artifacts_round_trips_through_validating_loader() {
+        let dir = std::env::temp_dir().join(format!("segmul_lower_emit_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut specs = MultiplierSpec::registry_examples(8);
+        specs.push(specs[0]); // duplicates collapse
+        let m = emit_artifacts(&dir, &specs, 256).unwrap();
+        assert_eq!(m.schema, 2);
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.lowered.len(), MultiplierSpec::registry_examples(8).len());
+        for spec in MultiplierSpec::registry_examples(8) {
+            assert!(m.covers_design(&spec), "{}", spec.name());
+            let ls = m.find_lowered(&spec).unwrap();
+            assert_eq!(ls.design, spec);
+            assert_eq!(ls.n, spec.n());
+            let text = std::fs::read_to_string(m.dir.join(&ls.file)).unwrap();
+            assert_eq!(Program::parse(&text).unwrap().n, spec.n());
+        }
+        // Canonical fallback: the t=0 segmented point is served by the
+        // accurate module.
+        assert!(m.covers_design(&MultiplierSpec::Segmented { n: 8, t: 0, fix: true }));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn emit_rejects_degenerate_requests() {
+        let dir = std::env::temp_dir().join("segmul_lower_reject");
+        assert_eq!(
+            emit_artifacts(&dir, &[MultiplierSpec::Accurate { n: 8 }], 0).unwrap_err().kind(),
+            "config"
+        );
+        assert_eq!(emit_artifacts(&dir, &[], 16).unwrap_err().kind(), "config");
+        // Invalid specs surface as typed spec errors.
+        assert_eq!(
+            emit_artifacts(&dir, &[MultiplierSpec::Kulkarni { n: 12 }], 16).unwrap_err().kind(),
+            "spec"
+        );
+    }
+}

@@ -1,13 +1,26 @@
-//! PJRT runtime: loads the AOT-compiled HLO-text artifacts produced by
-//! `make artifacts` and executes them on the CPU PJRT client.
+//! PJRT runtime: loads lowered artifacts and executes them on the PJRT
+//! backend.
 //!
-//! This is the only place the `xla` crate is touched. The interchange
-//! format is HLO *text* (not serialized HloModuleProto) — jax ≥ 0.5 emits
-//! protos with 64-bit instruction ids that xla_extension 0.5.1 rejects;
-//! the text parser reassigns ids (see /opt/xla-example/README.md).
+//! Two artifact classes are served:
+//!
+//! * **Legacy HLO modules** (`make artifacts`, schema v1): AOT-compiled
+//!   stats/prod modules of the segmented family, executed through the
+//!   `xla` crate. This is the only place `xla` is touched; the
+//!   interchange format is HLO *text* (not serialized HloModuleProto) —
+//!   jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//!   /opt/xla-example/README.md).
+//! * **Design-lowered modules** (`segmul lower`, schema v2): one
+//!   branch-free [`lower::Program`] per registry design
+//!   ([`crate::multiplier::MultiplierSpec`]), executed by the stub PJRT
+//!   client's software executor ([`lower::LoweredExec`]) — so every
+//!   registry design dispatches on the PJRT backend even where the real
+//!   bindings are stubbed out.
 
 pub mod artifact;
 pub mod client;
+pub mod lower;
 
-pub use artifact::{Manifest, ModuleKind, ModuleSpec};
+pub use artifact::{LoweredSpec, Manifest, ModuleKind, ModuleSpec};
 pub use client::Runtime;
+pub use lower::{emit_artifacts, lower_design, LoweredExec, Program};

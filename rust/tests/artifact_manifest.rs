@@ -1,0 +1,184 @@
+//! Artifact-manifest validation contract: every malformed, missing,
+//! wrong-bit-width, or wrong-batch manifest produces a **typed**
+//! [`SegmulError::Artifact`] (kind `"artifact"`) — never a panic and never
+//! a stringly `anyhow` blob — and a `segmul lower` emission round-trips
+//! through the validating loader for every registry [`MultiplierSpec`].
+
+use std::path::{Path, PathBuf};
+
+use segmul::api::{MultiplierSpec, SegmulError};
+use segmul::runtime::{emit_artifacts, Manifest};
+
+/// A fresh scratch dir per test (parallel test threads must not collide).
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("segmul_manifest_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn write_manifest(dir: &Path, text: &str) {
+    std::fs::write(dir.join("manifest.json"), text).unwrap();
+}
+
+/// Load must fail with an `artifact`-class error whose message mentions
+/// every given needle.
+fn assert_artifact_error(dir: &Path, needles: &[&str]) {
+    let e = Manifest::load(dir).unwrap_err();
+    assert_eq!(e.kind(), "artifact", "{e}");
+    assert!(matches!(e, SegmulError::Artifact { .. }));
+    let msg = e.to_string();
+    for needle in needles {
+        assert!(msg.contains(needle), "missing {needle:?} in {msg:?}");
+    }
+}
+
+#[test]
+fn missing_manifest_is_typed_with_a_hint() {
+    let dir = scratch("absent");
+    assert_artifact_error(&dir, &["manifest.json", "segmul lower"]);
+}
+
+#[test]
+fn malformed_json_is_typed() {
+    let dir = scratch("malformed");
+    write_manifest(&dir, "{not json");
+    assert_artifact_error(&dir, &["malformed JSON"]);
+}
+
+#[test]
+fn missing_batch_and_empty_manifests_are_typed() {
+    let dir = scratch("nobatch");
+    write_manifest(&dir, r#"{"schema_version": 2, "lowered": []}"#);
+    assert_artifact_error(&dir, &["batch"]);
+    write_manifest(&dir, r#"{"schema_version": 2, "batch": 16, "lowered": [], "modules": []}"#);
+    assert_artifact_error(&dir, &["no modules"]);
+    write_manifest(&dir, r#"{"schema_version": 2, "batch": 0, "lowered": []}"#);
+    assert_artifact_error(&dir, &["batch must be positive"]);
+}
+
+#[test]
+fn unsupported_schema_and_v1_lowered_are_typed() {
+    let dir = scratch("schema");
+    write_manifest(&dir, r#"{"schema_version": 3, "batch": 16, "lowered": []}"#);
+    assert_artifact_error(&dir, &["schema_version 3"]);
+    // `lowered` entries need schema >= 2.
+    write_manifest(&dir, r#"{"batch": 16, "lowered": []}"#);
+    assert_artifact_error(&dir, &["schema_version >= 2"]);
+}
+
+/// A valid single-entry v2 manifest body, with substitution points for
+/// the tamper tests.
+fn lowered_manifest(n: u32, module_batch: u32, design: &str) -> String {
+    format!(
+        r#"{{"schema_version": 2, "batch": 16, "lowered": [
+            {{"name": "m", "design": {design}, "n": {n}, "batch": {module_batch},
+              "file": "m.segir"}}
+        ]}}"#
+    )
+}
+
+const SEG_DESIGN: &str = r#"{"family": "segmented", "n": 8, "t": 3, "fix": true}"#;
+
+fn write_module(dir: &Path) {
+    // Content is only probed for existence by the manifest loader.
+    std::fs::write(dir.join("m.segir"), "segir 1\nn 8\ninput %0 a\ninput %1 b\nret %0\n").unwrap();
+}
+
+#[test]
+fn wrong_bit_width_is_typed() {
+    let dir = scratch("wrongn");
+    write_module(&dir);
+    // Entry n=16 contradicts the design tag's n=8.
+    write_manifest(&dir, &lowered_manifest(16, 16, SEG_DESIGN));
+    assert_artifact_error(&dir, &["n=16", "segmul(n=8,t=3,fix)"]);
+}
+
+#[test]
+fn wrong_batch_is_typed() {
+    let dir = scratch("wrongbatch");
+    write_module(&dir);
+    // Module batch 4 contradicts the manifest batch 16.
+    write_manifest(&dir, &lowered_manifest(8, 4, SEG_DESIGN));
+    assert_artifact_error(&dir, &["batch 4", "manifest batch 16"]);
+}
+
+#[test]
+fn bad_design_tags_are_typed() {
+    let dir = scratch("badtag");
+    write_module(&dir);
+    write_manifest(&dir, &lowered_manifest(8, 16, r#"{"family": "warp", "n": 8}"#));
+    assert_artifact_error(&dir, &["warp"]);
+    // Structurally valid but semantically invalid design parameters.
+    write_manifest(&dir, &lowered_manifest(12, 16, r#"{"family": "kulkarni", "n": 12}"#));
+    assert_artifact_error(&dir, &["invalid design"]);
+    // Missing the design tag entirely.
+    write_manifest(
+        &dir,
+        r#"{"schema_version": 2, "batch": 16, "lowered": [
+            {"name": "m", "n": 8, "batch": 16, "file": "m.segir"}
+        ]}"#,
+    );
+    assert_artifact_error(&dir, &["design tag"]);
+}
+
+#[test]
+fn missing_module_file_and_duplicates_are_typed() {
+    let dir = scratch("misc");
+    // File referenced but absent.
+    write_manifest(&dir, &lowered_manifest(8, 16, SEG_DESIGN));
+    assert_artifact_error(&dir, &["m.segir", "not found"]);
+    // Duplicate design entries.
+    write_module(&dir);
+    write_manifest(
+        &dir,
+        &format!(
+            r#"{{"schema_version": 2, "batch": 16, "lowered": [
+                {{"name": "m", "design": {SEG_DESIGN}, "n": 8, "batch": 16, "file": "m.segir"}},
+                {{"name": "m2", "design": {SEG_DESIGN}, "n": 8, "batch": 16, "file": "m.segir"}}
+            ]}}"#
+        ),
+    );
+    assert_artifact_error(&dir, &["duplicate", "segmul(n=8,t=3,fix)"]);
+}
+
+#[test]
+fn valid_lowered_manifest_loads_and_covers() {
+    let dir = scratch("valid");
+    write_module(&dir);
+    write_manifest(&dir, &lowered_manifest(8, 16, SEG_DESIGN));
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.schema, 2);
+    assert_eq!(m.batch, 16);
+    assert_eq!(m.lowered.len(), 1);
+    let spec = MultiplierSpec::Segmented { n: 8, t: 3, fix: true };
+    assert_eq!(m.find_lowered(&spec).unwrap().design, spec);
+    assert!(m.covers_design(&spec));
+    assert!(!m.covers_design(&MultiplierSpec::Segmented { n: 8, t: 3, fix: false }));
+}
+
+/// The emitter round-trip over **every** registry `MultiplierSpec`: emit →
+/// validating load → per-entry design/bit-width/batch/file agreement.
+#[test]
+fn emitted_manifest_round_trips_every_registry_spec() {
+    let dir = scratch("roundtrip");
+    let mut specs = Vec::new();
+    for n in [4u32, 8, 16] {
+        specs.extend(MultiplierSpec::registry_examples(n));
+    }
+    let emitted = emit_artifacts(&dir, &specs, 64).unwrap();
+    let reloaded = Manifest::load(&dir).unwrap();
+    assert_eq!(reloaded.schema, 2);
+    assert_eq!(reloaded.batch, 64);
+    assert_eq!(reloaded.lowered.len(), specs.len());
+    assert_eq!(emitted.lowered.len(), reloaded.lowered.len());
+    for spec in &specs {
+        let entry = reloaded.find_lowered(spec).unwrap();
+        assert_eq!(entry.design, *spec, "{}", spec.name());
+        assert_eq!(entry.n, spec.n());
+        assert_eq!(entry.batch, 64);
+        assert!(reloaded.dir.join(&entry.file).exists(), "{}", spec.name());
+        assert!(reloaded.covers_design(spec), "{}", spec.name());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,208 @@
+//! PJRT lowered-module differential contract: for **every** registry
+//! design, the PJRT backend's lowered-module path, the CPU batched
+//! backend, and the per-pair scalar reference produce **bit-identical**
+//! [`ErrorStats`] (f64 fields and flags included) over identical operand
+//! slices — exhaustively at n ∈ {4, 8} and Monte-Carlo at n = 16 — and a
+//! cross-design sweep through the `api::Session` dispatches every design
+//! via a lowered module with zero scalar/CPU fallbacks (the
+//! `--require-pjrt` CI contract).
+
+use std::path::PathBuf;
+
+use segmul::api::{BackendChoice, DesignSet, DispatchClass, MultiplierSpec, Session, SweepGrid};
+use segmul::coordinator::{CpuBackend, EvalBackend, PjrtBackend};
+use segmul::error::metrics::ErrorStats;
+use segmul::multiplier::{exact_mul_batch, BatchMultiplier};
+use segmul::runtime::emit_artifacts;
+use segmul::util::rng::Xoshiro256;
+
+const BATCH: usize = 4096;
+
+/// Emit lowered artifacts for every design the tests touch, once per
+/// scratch dir.
+fn emit(tag: &str, bitwidths: &[u32]) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("segmul_pjrt_diff_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut specs = Vec::new();
+    for &n in bitwidths {
+        specs.extend(DesignSet::All.specs(n));
+        specs.extend(MultiplierSpec::registry_examples(n));
+    }
+    emit_artifacts(&dir, &specs, BATCH).unwrap();
+    dir
+}
+
+/// Per-chunk scalar reference: the per-pair adapter's products folded in
+/// the exact accumulation order the backends use.
+fn scalar_chunk(spec: &MultiplierSpec, a: &[u64], b: &[u64]) -> ErrorStats {
+    let reference = spec.build_scalar_reference().unwrap();
+    let mut phat = vec![0u64; a.len()];
+    reference.mul_batch(a, b, &mut phat);
+    let mut prod = vec![0u64; a.len()];
+    exact_mul_batch(a, b, &mut prod);
+    let mut stats = ErrorStats::new(spec.n());
+    stats.record_batch(&prod, &phat);
+    stats
+}
+
+/// Drive `spec` over the operand stream in BATCH-sized chunks through all
+/// three evaluators, asserting bit-exact equality chunk-by-chunk and on
+/// the in-order merged totals.
+fn assert_three_way(
+    pjrt: &mut PjrtBackend,
+    cpu: &mut CpuBackend,
+    spec: &MultiplierSpec,
+    a: &[u64],
+    b: &[u64],
+) {
+    let mut pjrt_total = ErrorStats::new(spec.n());
+    let mut cpu_total = ErrorStats::new(spec.n());
+    for (ca, cb) in a.chunks(BATCH).zip(b.chunks(BATCH)) {
+        let sp = pjrt.eval_design(spec, ca, cb).unwrap();
+        let sc = cpu.eval_design(spec, ca, cb).unwrap();
+        let sr = scalar_chunk(spec, ca, cb);
+        assert_eq!(sp, sc, "pjrt != cpu for {}", spec.name());
+        assert_eq!(sc, sr, "cpu != scalar reference for {}", spec.name());
+        pjrt_total.merge(&sp);
+        cpu_total.merge(&sc);
+    }
+    assert_eq!(pjrt_total, cpu_total, "{}", spec.name());
+    assert_eq!(pjrt_total.count, a.len() as u64, "{}", spec.name());
+}
+
+#[test]
+fn exhaustive_bit_exactness_n4_n8_every_registry_design() {
+    let dir = emit("exh", &[4, 8]);
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut cpu = CpuBackend::new();
+    for n in [4u32, 8] {
+        // The full 2^(2n) input space, in the canonical index order.
+        let mask = (1u64 << n) - 1;
+        let space = 1u64 << (2 * n);
+        let a: Vec<u64> = (0..space).map(|i| i & mask).collect();
+        let b: Vec<u64> = (0..space).map(|i| i >> n).collect();
+        for spec in MultiplierSpec::registry_examples(n) {
+            assert!(pjrt.supports_design(&spec), "{}", spec.name());
+            assert_three_way(&mut pjrt, &mut cpu, &spec, &a, &b);
+        }
+        // The paper grid's own axes, beyond the registry examples.
+        for t in 0..n {
+            for fix in [false, true] {
+                let spec = MultiplierSpec::Segmented { n, t, fix };
+                assert_three_way(&mut pjrt, &mut cpu, &spec, &a, &b);
+            }
+        }
+    }
+    // Every design dispatched through the lowered pjrt path.
+    for (name, class) in pjrt.kernel_dispatch() {
+        assert_eq!(class, DispatchClass::Pjrt, "{name}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn monte_carlo_bit_exactness_n16_every_registry_design() {
+    let dir = emit("mc", &[16]);
+    let mut pjrt = PjrtBackend::load(&dir).unwrap();
+    let mut cpu = CpuBackend::new();
+    let mut rng = Xoshiro256::seed_from_u64(0x9_16_16);
+    let len = 3 * BATCH + 517; // ragged tail exercises the padded path
+    let a: Vec<u64> = (0..len).map(|_| rng.next_bits(16)).collect();
+    let b: Vec<u64> = (0..len).map(|_| rng.next_bits(16)).collect();
+    for spec in MultiplierSpec::registry_examples(16) {
+        assert!(pjrt.supports_design(&spec), "{}", spec.name());
+        assert_three_way(&mut pjrt, &mut cpu, &spec, &a, &b);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The `--require-pjrt` sweep contract, end-to-end through the facade: a
+/// cross-design `--designs all` grid on the PJRT backend evaluates every
+/// design via a lowered module (zero scalar/CPU fallbacks) and matches
+/// the CPU sweep bit-for-bit.
+#[test]
+fn cross_design_sweep_runs_fully_lowered_and_matches_cpu() {
+    let dir = emit("sweep", &[4]);
+    let grid = SweepGrid {
+        bitwidths: vec![4],
+        designs: DesignSet::All,
+        exhaustive_max_n: 8,
+        force_mc: false,
+        mc_samples: 10_000,
+        seed: 7,
+    };
+    let mut pjrt_session = Session::builder()
+        .workers(2)
+        .backend(BackendChoice::Pjrt(dir.clone()))
+        .seed(7)
+        .build()
+        .unwrap();
+    let mut cpu_session = Session::builder()
+        .workers(2)
+        .backend(BackendChoice::Cpu)
+        .seed(7)
+        .build()
+        .unwrap();
+    let pjrt_out = pjrt_session.run_grid(&grid, |_, _, _| {}).unwrap();
+    let cpu_out = cpu_session.run_grid(&grid, |_, _, _| {}).unwrap();
+    assert_eq!(pjrt_out.len(), cpu_out.len());
+    for (p, c) in pjrt_out.iter().zip(&cpu_out) {
+        assert_eq!(p.job.design, c.job.design);
+        // n=4 exhaustive fits one backend chunk on both backends, so the
+        // accumulation order is identical: full bitwise equality.
+        assert_eq!(p.result.stats, c.result.stats, "{}", p.job.design.name());
+        if !p.cached {
+            assert_eq!(p.result.backend, "pjrt", "{}", p.job.design.name());
+        }
+    }
+    let telemetry = pjrt_session.telemetry();
+    assert_eq!(pjrt_session.backend_name(), "pjrt");
+    assert!(telemetry.scalar_fallbacks().is_empty(), "{:?}", telemetry.kernel_dispatch);
+    assert!(
+        telemetry.non_pjrt_dispatches().is_empty(),
+        "designs fell back from the lowered path: {:?}",
+        telemetry.kernel_dispatch
+    );
+    assert!(!telemetry.pjrt_dispatches().is_empty());
+    // The t=0 ≡ accurate dedup still collapses across designs on PJRT.
+    assert!(telemetry.cache_hits > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Capability preflight: a design without a lowered module is rejected by
+/// the pool with a typed backend error, before any chunk runs.
+#[test]
+fn uncovered_designs_fail_preflight_with_typed_error() {
+    let dir = emit("uncov", &[4]);
+    let mut session = Session::builder()
+        .workers(1)
+        .backend(BackendChoice::Pjrt(dir.clone()))
+        .build()
+        .unwrap();
+    // n=8 was never lowered into this artifact set.
+    let job = session
+        .job(MultiplierSpec::Mitchell { n: 8 })
+        .monte_carlo(1000)
+        .build()
+        .unwrap();
+    let e = session.run(&job).unwrap_err();
+    assert_eq!(e.kind(), "backend");
+    assert!(e.to_string().contains("n=8"), "{e}");
+    // A covered bit-width but an unlowered design point.
+    let job = session
+        .job(MultiplierSpec::Truncated { n: 4, k: 3 })
+        .monte_carlo(1000)
+        .build()
+        .unwrap();
+    let e = session.run(&job).unwrap_err();
+    assert_eq!(e.kind(), "backend");
+    assert!(e.to_string().contains("trunc(n=4,k=3)"), "{e}");
+    // The session stays usable for covered designs.
+    let ok = session
+        .job(MultiplierSpec::Mitchell { n: 4 })
+        .monte_carlo(1000)
+        .build()
+        .unwrap();
+    assert_eq!(session.run(&ok).unwrap().stats.count, 1000);
+    let _ = std::fs::remove_dir_all(&dir);
+}
