@@ -1,0 +1,85 @@
+//! Bench: the analytic answer-source fast path.
+//!
+//! Measures how fast the `error::analytic` registry answers the full
+//! paper sweep grid (every design of `DesignSet::All` over the configured
+//! bit-widths) in closed form — the workload `segmul sweep --analytic
+//! require` serves with zero pool dispatches. The simulated equivalent
+//! costs ~2^{2n} kernel evaluations per grid point; the analytic path
+//! answers each point in microseconds.
+//!
+//! Writes `BENCH_analytic.json` with the two gated metrics:
+//!   - `analytic_grid_answers_per_s` — full-grid answer throughput
+//!   - `analytic_design_coverage`    — registry families with a model (8)
+
+use segmul::api::{analytic_stats, DesignSet, MultiplierSpec};
+use segmul::bench::{bench, section, Summary};
+
+fn paper_grid() -> Vec<MultiplierSpec> {
+    // The configured default sweep grid: DesignSet::All over the paper's
+    // bit-widths (Config::default().sweep_bitwidths).
+    let mut specs = Vec::new();
+    for n in [4u32, 8, 16, 32] {
+        specs.extend(DesignSet::All.specs(n));
+    }
+    specs
+}
+
+fn main() {
+    let grid = paper_grid();
+    let modeled = grid.iter().filter(|s| analytic_stats(s).is_some()).count();
+    assert_eq!(
+        modeled,
+        grid.len(),
+        "every grid design must have an analytic model (--analytic require contract)"
+    );
+
+    // Registry-family coverage: one representative per spec variant, all
+    // eight families must be modeled.
+    let coverage = MultiplierSpec::registry_examples(8)
+        .iter()
+        .filter(|s| analytic_stats(s).is_some())
+        .count();
+
+    section(&format!(
+        "analytic answer source — {} grid points, {} registry families",
+        grid.len(),
+        coverage
+    ));
+    let full = bench("full paper grid, closed form", Some(grid.len() as f64), |iters| {
+        let mut acc = 0.0f64;
+        for _ in 0..iters {
+            for spec in &grid {
+                let s = analytic_stats(spec).unwrap();
+                acc += s.er + s.med_abs;
+            }
+        }
+        acc
+    });
+    // Per-family single-answer latency (informational).
+    for spec in [
+        MultiplierSpec::Segmented { n: 32, t: 16, fix: true },
+        MultiplierSpec::Truncated { n: 32, k: 16 },
+        MultiplierSpec::BrokenArray { n: 32, hbl: 8, vbl: 16 },
+        MultiplierSpec::Mitchell { n: 32 },
+        MultiplierSpec::Kulkarni { n: 32 },
+    ] {
+        bench(&format!("single answer {}", spec.name()), Some(1.0), |iters| {
+            let mut acc = 0.0f64;
+            for _ in 0..iters {
+                acc += analytic_stats(&spec).unwrap().med_abs;
+            }
+            acc
+        });
+    }
+
+    let answers_per_s = grid.len() as f64 / (full.ns_per_iter * 1e-9);
+    let mut summary = Summary::new("analytic");
+    summary
+        .metric("analytic_grid_answers_per_s", answers_per_s)
+        .metric("analytic_design_coverage", coverage as f64)
+        .metric("analytic_grid_points", grid.len() as f64);
+    match summary.write() {
+        Ok(path) => println!("\nwrote {path:?}"),
+        Err(e) => println!("\nsummary not written: {e}"),
+    }
+}

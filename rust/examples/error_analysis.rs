@@ -18,7 +18,7 @@ fn main() {
     );
     for t in 1..=n / 2 {
         for fix in [false, true] {
-            let m = exhaustive_stats(n, t, fix).metrics();
+            let m = exhaustive_stats(n, t, fix).metrics().expect("nonempty");
             println!(
                 "{:>3} {:>5} {:>10.6} {:>12.3} {:>9} {:>11.3e} {:>11.3e}",
                 t, fix, m.er, m.med_abs, m.mae, m.nmed, m.mred
@@ -50,7 +50,7 @@ fn main() {
     println!("{:>3} {:>3} {:>12} {:>12} {:>9}", "n", "t", "ER exact", "ER est", "rel err");
     for n in [6u32, 8, 10] {
         for t in 1..=n / 2 {
-            let exact = exhaustive_stats(n, t, false).metrics().er;
+            let exact = exhaustive_stats(n, t, false).metrics().expect("nonempty").er;
             let est = probprop::propagate(n, t).er_estimate();
             println!(
                 "{:>3} {:>3} {:>12.6} {:>12.6} {:>8.1}%",
@@ -65,8 +65,8 @@ fn main() {
 
     // --- MC vs exhaustive sanity -----------------------------------------
     let (n, t) = (12u32, 6u32);
-    let exact = exhaustive_stats(n, t, true).metrics();
-    let mc = mc_stats(n, t, true, &McConfig::uniform(1 << 20, 0xF00D)).metrics();
+    let exact = exhaustive_stats(n, t, true).metrics().expect("nonempty");
+    let mc = mc_stats(n, t, true, &McConfig::uniform(1 << 20, 0xF00D)).metrics().expect("nonempty");
     println!("\nMC (2^20 samples) vs exhaustive at n={n}, t={t}, fix:");
     println!("  ER  : {:.6} vs {:.6}", mc.er, exact.er);
     println!("  MED : {:.2} vs {:.2}", mc.med_abs, exact.med_abs);

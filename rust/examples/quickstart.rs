@@ -24,7 +24,7 @@ fn main() {
     println!("\nexhaustive metrics at n = 8 (all 65 536 input pairs):");
     println!("{:>3} {:>10} {:>12} {:>8} {:>12}", "t", "ER", "MED|ED|", "MAE", "MRED");
     for t in 0..=4u32 {
-        let s = exhaustive_stats(8, t, t >= 1).metrics();
+        let s = exhaustive_stats(8, t, t >= 1).metrics().expect("nonempty");
         println!("{:>3} {:>10.6} {:>12.4} {:>8} {:>12.3e}", t, s.er, s.med_abs, s.mae, s.mred);
     }
     println!("(t = 0 is the fully accurate sequential multiplier)");
@@ -40,7 +40,10 @@ fn main() {
     println!("  exhaustive MAE (nofix) = {}", exhaustive_stats(n, t, false).max_abs_ed);
     let lat = probprop::propagate(n, t);
     println!("  ER estimate (Sec V-B)  = {:.4}", lat.er_estimate());
-    println!("  ER exhaustive          = {:.4}", exhaustive_stats(n, t, false).metrics().er);
+    println!(
+        "  ER exhaustive          = {:.4}",
+        exhaustive_stats(n, t, false).metrics().expect("nonempty").er
+    );
 
     // --- 4. Why bother: the hardware win --------------------------------
     println!("\ncarry-chain length (the critical path driver):");

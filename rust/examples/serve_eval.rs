@@ -42,7 +42,7 @@ fn main() -> anyhow::Result<()> {
         let r = ticket.wait()?;
         let lat = t_submit.elapsed().as_secs_f64() * 1e3;
         latencies_ms.push(lat);
-        let m = r.metrics();
+        let m = r.metrics()?;
         if i < 4 || i as u64 == jobs - 1 {
             println!(
                 "  job {i:>2}: {} ER={:.5} NMED={:.3e} [{:.0} ms]",

@@ -48,7 +48,8 @@ pub use session::{
 };
 
 pub use crate::coordinator::{
-    ChunkEvent, EvalBackend, EvalJob, EvalService, JobKey, JobResult, SweepGrid, SweepOutcome,
-    WorkSpec, WorkerPool,
+    AnalyticMode, Answer, ChunkEvent, EvalBackend, EvalJob, EvalService, JobKey, JobResult,
+    SweepGrid, SweepOutcome, WorkSpec, WorkerPool,
 };
+pub use crate::error::analytic::{analytic_stats, AnalyticStats};
 pub use crate::multiplier::{DesignSet, DispatchClass, MultiplierSpec};

@@ -5,8 +5,8 @@ use std::path::PathBuf;
 use std::time::Duration;
 
 use crate::coordinator::{
-    ChunkEvent, ChunkPlan, CpuBackend, EvalBackend, EvalJob, JobResult, PjrtBackend, SweepGrid,
-    SweepOutcome, SweepRunner,
+    AnalyticMode, Answer, ChunkEvent, ChunkPlan, CpuBackend, EvalBackend, EvalJob, JobResult,
+    PjrtBackend, SweepGrid, SweepOutcome, SweepRunner,
 };
 use crate::multiplier::{DispatchClass, MultiplierSpec};
 use crate::util::threadpool::default_workers;
@@ -71,6 +71,9 @@ pub struct SessionTelemetry {
     pub jobs_completed: u64,
     pub cache_hits: u64,
     pub jobs_evaluated: u64,
+    /// Jobs answered from the analytic model registry — no pool
+    /// dispatch, counted separately from `cache_hits`.
+    pub analytic_answers: u64,
     pub pairs_evaluated: u64,
     /// Backend constructions since startup — stays at `workers` for the
     /// session's lifetime (the persistent-pool contract).
@@ -131,6 +134,7 @@ pub struct SessionBuilder {
     backend: BackendChoice,
     factory: Option<BackendFactory>,
     cache: bool,
+    analytic: AnalyticMode,
     seed: u64,
     progress: Option<ProgressCallback>,
 }
@@ -142,6 +146,7 @@ impl SessionBuilder {
             backend: BackendChoice::Cpu,
             factory: None,
             cache: true,
+            analytic: AnalyticMode::Off,
             seed: 0,
             progress: None,
         }
@@ -175,6 +180,17 @@ impl SessionBuilder {
     /// Enable or disable the result cache (default: enabled).
     pub fn cache(mut self, enabled: bool) -> Self {
         self.cache = enabled;
+        self
+    }
+
+    /// Answer-source policy (default [`AnalyticMode::Off`]): `Auto`
+    /// serves exactly-modeled designs from closed forms without touching
+    /// the pool; `Require` serves every modeled design — the
+    /// zero-dispatch mode for design-space queries. Analytic answers
+    /// surface through [`Session::run_outcome`] / [`Session::run_grid`]
+    /// and are counted in [`SessionTelemetry::analytic_answers`].
+    pub fn analytic(mut self, mode: AnalyticMode) -> Self {
+        self.analytic = mode;
         self
     }
 
@@ -214,6 +230,7 @@ impl SessionBuilder {
         let mut runner = SweepRunner::new(factory, workers)
             .map_err(|e| SegmulError::Backend(e.to_string()))?;
         runner.set_cache_enabled(self.cache);
+        runner.set_analytic_mode(self.analytic);
         Ok(Session {
             runner,
             seed: self.seed,
@@ -242,7 +259,7 @@ impl SessionBuilder {
 ///     .monte_carlo(1 << 20)
 ///     .build()?;
 /// let result = session.run(&job)?;
-/// println!("ER = {}", result.metrics().er);
+/// println!("ER = {}", result.metrics()?.er);
 /// # Ok::<(), segmul::api::SegmulError>(())
 /// ```
 pub struct Session {
@@ -286,6 +303,16 @@ impl Session {
         self.runner.jobs_evaluated
     }
 
+    /// Jobs answered from the analytic model registry.
+    pub fn analytic_answers(&self) -> u64 {
+        self.runner.analytic_answers
+    }
+
+    /// The configured answer-source policy.
+    pub fn analytic_mode(&self) -> AnalyticMode {
+        self.runner.analytic_mode()
+    }
+
     /// Kernel tier per evaluated design, unioned over the pool's workers
     /// (see [`SessionTelemetry::kernel_dispatch`]).
     pub fn kernel_dispatch(&self) -> Vec<(String, DispatchClass)> {
@@ -297,6 +324,7 @@ impl Session {
             jobs_completed: self.jobs_completed,
             cache_hits: self.runner.cache_hits,
             jobs_evaluated: self.runner.jobs_evaluated,
+            analytic_answers: self.runner.analytic_answers,
             pairs_evaluated: self.pairs_evaluated,
             backend_builds: self.backend_builds(),
             workers: self.workers(),
@@ -305,22 +333,44 @@ impl Session {
     }
 
     /// Evaluate one job through the cache and the persistent pool,
-    /// streaming progress to the registered callback.
+    /// streaming progress to the registered callback. Requires a
+    /// *simulated* answer: if the session's [`AnalyticMode`] elects to
+    /// answer analytically, this reports a typed config error — consume
+    /// analytic answers through [`Self::run_outcome`].
     pub fn run(&mut self, job: &EvalJob) -> Result<JobResult, SegmulError> {
-        Ok(self.run_outcome(job)?.result)
+        let outcome = self.run_outcome(job)?;
+        match outcome.answer {
+            Answer::Simulated(r) => Ok(r),
+            Answer::Analytic { .. } => Err(SegmulError::config(format!(
+                "job {} was answered analytically (mode {}); use run_outcome() for analytic answers",
+                job.design.name(),
+                self.runner.analytic_mode().name()
+            ))),
+        }
     }
 
-    /// [`Self::run`], additionally reporting whether the cache served it.
+    /// [`Self::run`], additionally reporting the answer source and
+    /// whether the cache served it.
     pub fn run_outcome(&mut self, job: &EvalJob) -> Result<SweepOutcome, SegmulError> {
         // Validate and capability-check here, before anything is wrapped
         // in `anyhow`, so the caller sees the precise Spec / Workload /
         // Backend class (the vendored anyhow shim flattens messages and
         // cannot downcast).
         job.validate()?;
-        self.runner.pool().preflight(job)?;
+        let analytic = self.runner.will_answer_analytically(job);
+        if !analytic {
+            // Points the analytic layer answers never reach the pool, so
+            // backend capability (e.g. a missing lowered module) is
+            // irrelevant for them.
+            self.runner.pool().preflight(job)?;
+        }
         let progress = self.progress.as_deref();
         if let Some(cb) = progress {
-            let chunks = ChunkPlan::new(job, self.runner.pool().batch()).n_chunks();
+            let chunks = if analytic {
+                0
+            } else {
+                ChunkPlan::new(job, self.runner.pool().batch()).n_chunks()
+            };
             cb(ProgressEvent::JobStarted { design: job.design.name(), chunks });
         }
         let outcome = self
@@ -336,15 +386,17 @@ impl Session {
             })
             .map_err(SegmulError::from)?;
         self.jobs_completed += 1;
-        if !outcome.cached {
-            self.pairs_evaluated += outcome.result.stats.count;
+        if let Some(r) = outcome.result() {
+            if !outcome.cached {
+                self.pairs_evaluated += r.stats.count;
+            }
         }
         if let Some(cb) = progress {
             cb(ProgressEvent::JobFinished {
                 design: job.design.name(),
                 cached: outcome.cached,
-                samples: outcome.result.stats.count,
-                wall: outcome.result.wall,
+                samples: outcome.result().map_or(0, |r| r.stats.count),
+                wall: outcome.wall(),
             });
         }
         Ok(outcome)
@@ -425,6 +477,37 @@ mod tests {
             t.kernel_dispatch
         );
         assert!(t.kernel_dispatch.iter().all(|(_, c)| *c == DispatchClass::Batched));
+    }
+
+    #[test]
+    fn analytic_auto_serves_exact_designs_without_dispatch() {
+        let mut s = Session::builder()
+            .workers(1)
+            .analytic(AnalyticMode::Auto)
+            .build()
+            .unwrap();
+        let job = s.job(MultiplierSpec::Truncated { n: 8, k: 4 }).exhaustive().build().unwrap();
+        let outcome = s.run_outcome(&job).unwrap();
+        assert_eq!(outcome.source(), "analytic");
+        assert_eq!(outcome.metrics().unwrap().er, 0.8125);
+        let t = s.telemetry();
+        assert_eq!(t.analytic_answers, 1);
+        assert_eq!(t.jobs_evaluated, 0);
+        assert_eq!(t.pairs_evaluated, 0, "analytic answers evaluate nothing");
+        // run() demands a simulated answer — typed error instead.
+        let e = s.run(&job).unwrap_err();
+        assert_eq!(e.kind(), "config");
+        assert!(e.to_string().contains("run_outcome"), "{e}");
+    }
+
+    #[test]
+    fn analytic_off_by_default() {
+        let mut s = Session::builder().workers(1).build().unwrap();
+        assert_eq!(s.analytic_mode(), AnalyticMode::Off);
+        let job = s.job(MultiplierSpec::Truncated { n: 6, k: 2 }).exhaustive().build().unwrap();
+        let outcome = s.run_outcome(&job).unwrap();
+        assert_eq!(outcome.source(), "simulated");
+        assert_eq!(s.analytic_answers(), 0);
     }
 
     #[test]

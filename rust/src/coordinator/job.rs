@@ -141,7 +141,10 @@ pub struct JobResult {
 }
 
 impl JobResult {
-    pub fn metrics(&self) -> ErrorMetrics {
+    /// Derived metric set. Errs (typed `Stats`) only if the accumulator
+    /// is empty — impossible for results produced by the drivers, which
+    /// validate the workload to be non-empty before evaluating.
+    pub fn metrics(&self) -> Result<ErrorMetrics, SegmulError> {
         self.stats.metrics()
     }
 

@@ -13,18 +13,69 @@
 //! repeated configs across the sweep: the `t = 0` accurate points
 //! collapse across fix modes *and* onto the accurate-design baseline,
 //! and re-running a grid against a warm runner costs nothing.
+//!
+//! Above the cache sits the **answer-source layer**: when an
+//! [`AnalyticMode`] is enabled, grid points whose design has a
+//! registered analytic model ([`crate::error::analytic`]) are answered
+//! in O(1) from closed forms — no pool dispatch, no cache entry, counted
+//! separately in [`SweepRunner::analytic_answers`]. `auto` serves only
+//! `exact: true` models (bit-consistent with exhaustive evaluation);
+//! `require` serves every modeled design and errs on unmodeled ones —
+//! the zero-dispatch mode for million-config design-space queries.
 
 use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::config::Config;
+use crate::error::analytic::{analytic_stats, AnalyticStats};
+use crate::error::metrics::ErrorMetrics;
+use crate::error::SegmulError;
 use crate::multiplier::DesignSet;
 
 use super::backend::EvalBackend;
 use super::job::{EvalJob, JobKey, JobResult, WorkSpec};
 use super::pool::WorkerPool;
 use super::sharded::ChunkEvent;
+
+/// Where sweep answers may come from (CLI: `--analytic {auto,require,off}`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AnalyticMode {
+    /// Never answer analytically — every point simulates (default; keeps
+    /// the sweep a measurement of the evaluation backends).
+    #[default]
+    Off,
+    /// Answer from the analytic registry when the model is **exact**
+    /// (`AnalyticStats::exact`); estimate-only families still simulate.
+    Auto,
+    /// Answer every modeled design analytically (estimates included) and
+    /// fail with a typed error on designs without a model: the
+    /// zero-dispatch mode.
+    Require,
+}
+
+impl AnalyticMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AnalyticMode::Off => "off",
+            AnalyticMode::Auto => "auto",
+            AnalyticMode::Require => "require",
+        }
+    }
+
+    /// Parse a CLI / config name.
+    pub fn parse(s: &str) -> Result<AnalyticMode, SegmulError> {
+        match s.trim() {
+            "off" => Ok(AnalyticMode::Off),
+            "auto" => Ok(AnalyticMode::Auto),
+            "require" => Ok(AnalyticMode::Require),
+            other => Err(SegmulError::config(format!(
+                "unknown analytic mode {other:?} (auto|require|off)"
+            ))),
+        }
+    }
+}
 
 /// The sweep grid: which design points to evaluate and under which
 /// workload. The paper set covers split points `t ∈ 0..n` (0 = accurate)
@@ -88,14 +139,72 @@ impl SweepGrid {
     }
 }
 
-/// One evaluated (or cache-served) grid point.
+/// The answer for one grid point: a pool-evaluated (or cache-served)
+/// simulation result, or an O(1) closed-form answer from the analytic
+/// registry.
+#[derive(Clone, Debug)]
+pub enum Answer {
+    Simulated(JobResult),
+    Analytic {
+        stats: AnalyticStats,
+        /// Time spent computing the model (microseconds — the bench
+        /// `BENCH_analytic.json` gates on this staying so).
+        wall: Duration,
+    },
+}
+
+/// One answered grid point.
 #[derive(Clone, Debug)]
 pub struct SweepOutcome {
     /// The job as requested by the grid (cache canonicalization may have
     /// served it from an equivalent config's entry).
     pub job: EvalJob,
-    pub result: JobResult,
+    pub answer: Answer,
+    /// Served from the result cache (always `false` for analytic
+    /// answers — those are counted in [`SweepRunner::analytic_answers`]).
     pub cached: bool,
+}
+
+impl SweepOutcome {
+    /// The derived metric set, whichever source answered.
+    pub fn metrics(&self) -> Result<ErrorMetrics, SegmulError> {
+        match &self.answer {
+            Answer::Simulated(r) => r.metrics(),
+            Answer::Analytic { stats, .. } => Ok(stats.to_metrics()),
+        }
+    }
+
+    /// The simulation result, when this point was simulated.
+    pub fn result(&self) -> Option<&JobResult> {
+        match &self.answer {
+            Answer::Simulated(r) => Some(r),
+            Answer::Analytic { .. } => None,
+        }
+    }
+
+    /// The analytic answer, when this point was served from the registry.
+    pub fn analytic(&self) -> Option<&AnalyticStats> {
+        match &self.answer {
+            Answer::Simulated(_) => None,
+            Answer::Analytic { stats, .. } => Some(stats),
+        }
+    }
+
+    /// Answer-source tag for reports: `"simulated"` or `"analytic"`.
+    pub fn source(&self) -> &'static str {
+        match &self.answer {
+            Answer::Simulated(_) => "simulated",
+            Answer::Analytic { .. } => "analytic",
+        }
+    }
+
+    /// Wall time spent answering this point.
+    pub fn wall(&self) -> Duration {
+        match &self.answer {
+            Answer::Simulated(r) => r.wall,
+            Answer::Analytic { wall, .. } => *wall,
+        }
+    }
 }
 
 /// Sweep executor: the persistent shard pool + the result cache.
@@ -109,10 +218,13 @@ pub struct SweepRunner {
     pool: WorkerPool,
     cache_enabled: bool,
     cache: HashMap<JobKey, JobResult>,
+    analytic: AnalyticMode,
     /// Jobs served from the cache (no evaluation).
     pub cache_hits: u64,
     /// Jobs actually evaluated.
     pub jobs_evaluated: u64,
+    /// Jobs answered from the analytic registry (no dispatch, no cache).
+    pub analytic_answers: u64,
 }
 
 impl SweepRunner {
@@ -126,8 +238,10 @@ impl SweepRunner {
             pool: WorkerPool::start(factory, workers)?,
             cache_enabled: true,
             cache: HashMap::new(),
+            analytic: AnalyticMode::default(),
             cache_hits: 0,
             jobs_evaluated: 0,
+            analytic_answers: 0,
         })
     }
 
@@ -145,18 +259,64 @@ impl SweepRunner {
         self.cache_enabled = enabled;
     }
 
-    /// Evaluate one job, consulting the cache first.
+    /// Set the answer-source policy (default [`AnalyticMode::Off`]).
+    pub fn set_analytic_mode(&mut self, mode: AnalyticMode) {
+        self.analytic = mode;
+    }
+
+    pub fn analytic_mode(&self) -> AnalyticMode {
+        self.analytic
+    }
+
+    /// Evaluate one job, consulting the analytic registry and the cache
+    /// first.
     pub fn run(&mut self, job: &EvalJob) -> Result<SweepOutcome> {
         self.run_observed(job, &mut |_| {})
     }
 
+    /// The analytic answer for `job` under the configured mode, if that
+    /// mode elects to serve it. `Require` turns a missing model into a
+    /// typed config error naming the design.
+    fn analytic_answer(&self, job: &EvalJob) -> Result<Option<AnalyticStats>, SegmulError> {
+        match self.analytic {
+            AnalyticMode::Off => Ok(None),
+            AnalyticMode::Auto => {
+                Ok(analytic_stats(&job.design).filter(|s| s.exact))
+            }
+            AnalyticMode::Require => match analytic_stats(&job.design) {
+                Some(s) => Ok(Some(s)),
+                None => Err(SegmulError::config(format!(
+                    "--analytic require: no analytic model for design {}",
+                    job.design.name()
+                ))),
+            },
+        }
+    }
+
+    /// Whether the configured mode will answer `job` analytically (so
+    /// callers can skip backend preflight for points that never reach
+    /// the pool). `Require` failures surface at [`Self::run`].
+    pub fn will_answer_analytically(&self, job: &EvalJob) -> bool {
+        matches!(self.analytic_answer(job), Ok(Some(_)))
+    }
+
     /// [`Self::run`], streaming in-order chunk merges to `observer`
-    /// (cache hits complete without chunk events).
+    /// (analytic answers and cache hits complete without chunk events).
     pub fn run_observed(
         &mut self,
         job: &EvalJob,
         observer: &mut dyn FnMut(ChunkEvent),
     ) -> Result<SweepOutcome> {
+        // Answer-source layer: closed forms beat both cache and pool.
+        let analytic_start = Instant::now();
+        if let Some(stats) = self.analytic_answer(job)? {
+            self.analytic_answers += 1;
+            return Ok(SweepOutcome {
+                job: job.clone(),
+                answer: Answer::Analytic { stats, wall: analytic_start.elapsed() },
+                cached: false,
+            });
+        }
         let key = job.key();
         if self.cache_enabled {
             if let Some(hit) = self.cache.get(&key) {
@@ -165,7 +325,11 @@ impl SweepRunner {
                 // design (canonicalization); report the requested one.
                 let mut result = hit.clone();
                 result.job = job.clone();
-                return Ok(SweepOutcome { job: job.clone(), result, cached: true });
+                return Ok(SweepOutcome {
+                    job: job.clone(),
+                    answer: Answer::Simulated(result),
+                    cached: true,
+                });
             }
         }
         let result = self.pool.run_job_observed(job, observer)?;
@@ -173,7 +337,7 @@ impl SweepRunner {
         if self.cache_enabled {
             self.cache.insert(key, result.clone());
         }
-        Ok(SweepOutcome { job: job.clone(), result, cached: false })
+        Ok(SweepOutcome { job: job.clone(), answer: Answer::Simulated(result), cached: false })
     }
 
     /// Run a whole grid in order, streaming progress through `progress`
@@ -256,8 +420,11 @@ mod tests {
         assert!(again.iter().all(|o| o.cached));
         // Cached results are the same statistics objects.
         for (a, b) in outcomes.iter().zip(&again) {
-            assert_eq!(a.result.stats, b.result.stats);
+            assert_eq!(a.result().unwrap().stats, b.result().unwrap().stats);
         }
+        // No analytic mode configured: every answer is a simulation.
+        assert_eq!(runner.analytic_answers, 0);
+        assert!(outcomes.iter().all(|o| o.source() == "simulated"));
     }
 
     #[test]
@@ -271,7 +438,7 @@ mod tests {
             .run(&EvalJob::new(MultiplierSpec::Accurate { n: 6 }, WorkSpec::Exhaustive))
             .unwrap();
         assert!(accurate.cached, "accurate must be served from the t=0 entry");
-        assert_eq!(accurate.result.stats, t0.result.stats);
+        assert_eq!(accurate.result().unwrap().stats, t0.result().unwrap().stats);
         assert_eq!(runner.jobs_evaluated, 1);
     }
 
@@ -318,7 +485,7 @@ mod tests {
         let second = runner.run(&job).unwrap();
         assert!(second.cached);
         assert_eq!(evals.load(Ordering::Relaxed), after_first, "cache hit re-evaluated");
-        assert_eq!(first.result.stats, second.result.stats);
+        assert_eq!(first.result().unwrap().stats, second.result().unwrap().stats);
     }
 
     #[test]
@@ -331,7 +498,7 @@ mod tests {
         assert!(!a.cached && !b.cached);
         assert_eq!(runner.jobs_evaluated, 2);
         assert_eq!(runner.cache_hits, 0);
-        assert_eq!(a.result.stats, b.result.stats);
+        assert_eq!(a.result().unwrap().stats, b.result().unwrap().stats);
     }
 
     #[test]
@@ -346,8 +513,8 @@ mod tests {
         let w3 = run(3);
         for (a, b) in w1.iter().zip(&w3) {
             assert_eq!(
-                a.result.stats,
-                b.result.stats,
+                a.result().unwrap().stats,
+                b.result().unwrap().stats,
                 "design={}",
                 a.job.design.name()
             );
@@ -359,5 +526,91 @@ mod tests {
         let mut runner = SweepRunner::new(cpu_factory(), 2).unwrap();
         runner.run_grid(&tiny_grid(), |_, _, _| {}).unwrap();
         assert_eq!(runner.pool().backend_builds(), 2, "one build per worker, ever");
+    }
+
+    #[test]
+    fn analytic_mode_parsing() {
+        assert_eq!(AnalyticMode::parse("auto").unwrap(), AnalyticMode::Auto);
+        assert_eq!(AnalyticMode::parse(" require ").unwrap(), AnalyticMode::Require);
+        assert_eq!(AnalyticMode::parse("off").unwrap(), AnalyticMode::Off);
+        assert_eq!(AnalyticMode::parse("maybe").unwrap_err().kind(), "config");
+        for mode in [AnalyticMode::Off, AnalyticMode::Auto, AnalyticMode::Require] {
+            assert_eq!(AnalyticMode::parse(mode.name()).unwrap(), mode);
+        }
+        assert_eq!(AnalyticMode::default(), AnalyticMode::Off);
+    }
+
+    #[test]
+    fn analytic_auto_serves_exact_models_only() {
+        let mut runner = SweepRunner::new(cpu_factory(), 1).unwrap();
+        runner.set_analytic_mode(AnalyticMode::Auto);
+        // Exact closed form (truncation, n <= 16): answered analytically.
+        let trunc = runner
+            .run(&EvalJob::new(MultiplierSpec::Truncated { n: 8, k: 4 }, WorkSpec::Exhaustive))
+            .unwrap();
+        assert_eq!(trunc.source(), "analytic");
+        assert!(!trunc.cached);
+        assert!(trunc.result().is_none());
+        assert_eq!(trunc.analytic().unwrap().wce, 49);
+        // Estimate-only family (segmented, t > 0): still simulated.
+        let seg = runner.run(&EvalJob::exhaustive(6, 3, true)).unwrap();
+        assert_eq!(seg.source(), "simulated");
+        assert_eq!(runner.analytic_answers, 1);
+        assert_eq!(runner.jobs_evaluated, 1);
+        // Analytic answers bypass the cache entirely.
+        runner.run(&EvalJob::new(MultiplierSpec::Truncated { n: 8, k: 4 }, WorkSpec::Exhaustive))
+            .unwrap();
+        assert_eq!(runner.analytic_answers, 2);
+        assert_eq!(runner.cache_hits, 0);
+    }
+
+    #[test]
+    fn analytic_auto_matches_exhaustive_exactly_for_closed_form_families() {
+        // The acceptance contract: an auto-served row is bit-consistent
+        // with the simulated row for the exactly-modeled metrics.
+        let job = EvalJob::new(MultiplierSpec::Truncated { n: 6, k: 3 }, WorkSpec::Exhaustive);
+        let mut sim = SweepRunner::new(cpu_factory(), 2).unwrap();
+        let simulated = sim.run(&job).unwrap().metrics().unwrap();
+        let mut fast = SweepRunner::new(cpu_factory(), 1).unwrap();
+        fast.set_analytic_mode(AnalyticMode::Auto);
+        let analytic = fast.run(&job).unwrap().metrics().unwrap();
+        assert_eq!(fast.jobs_evaluated, 0);
+        assert_eq!(analytic.er, simulated.er);
+        assert_eq!(analytic.med_abs, simulated.med_abs);
+        assert_eq!(analytic.mae, simulated.mae);
+        assert_eq!(analytic.samples, simulated.samples);
+        assert!((analytic.mred - simulated.mred).abs() <= 1e-9 * simulated.mred);
+    }
+
+    #[test]
+    fn analytic_require_answers_full_grid_with_zero_dispatch() {
+        let grid = SweepGrid {
+            bitwidths: vec![4, 8],
+            designs: DesignSet::All,
+            ..tiny_grid()
+        };
+        let mut runner = SweepRunner::new(cpu_factory(), 1).unwrap();
+        runner.set_analytic_mode(AnalyticMode::Require);
+        let outcomes = runner.run_grid(&grid, |_, _, _| {}).unwrap();
+        assert_eq!(runner.jobs_evaluated, 0, "require mode must not dispatch");
+        assert_eq!(runner.cache_hits, 0);
+        assert_eq!(runner.analytic_answers, outcomes.len() as u64);
+        assert!(outcomes.iter().all(|o| o.source() == "analytic"));
+        // Every answer derives a finite metric set.
+        for o in &outcomes {
+            let m = o.metrics().unwrap();
+            assert!(m.er.is_finite() && m.mred.is_finite(), "{}", o.job.design.name());
+        }
+    }
+
+    #[test]
+    fn analytic_require_rejects_unmodeled_designs() {
+        let mut runner = SweepRunner::new(cpu_factory(), 1).unwrap();
+        runner.set_analytic_mode(AnalyticMode::Require);
+        // Invalid spec => no model => typed config error naming it.
+        let bad = EvalJob::new(MultiplierSpec::Kulkarni { n: 12 }, WorkSpec::Exhaustive);
+        let err = runner.run(&bad).unwrap_err().to_string();
+        assert!(err.contains("kulkarni(n=12)"), "{err}");
+        assert!(err.contains("analytic"), "{err}");
     }
 }

@@ -41,6 +41,10 @@ pub enum SegmulError {
     Backend(String),
     /// Evaluation failed at run time.
     Eval(String),
+    /// Metric derivation from an unusable statistics accumulator (e.g.
+    /// deriving `ErrorMetrics` from zero accumulated samples, which would
+    /// otherwise silently poison merged sweep rows with NaN/∞).
+    Stats(String),
     /// Report / persistence I/O failure.
     Io(String),
 }
@@ -66,6 +70,10 @@ impl SegmulError {
         SegmulError::Artifact { path: path.into(), reason: reason.into() }
     }
 
+    pub fn stats(msg: impl Into<String>) -> Self {
+        SegmulError::Stats(msg.into())
+    }
+
     /// Short class tag (stable across message rewording).
     pub fn kind(&self) -> &'static str {
         match self {
@@ -75,6 +83,7 @@ impl SegmulError {
             SegmulError::Artifact { .. } => "artifact",
             SegmulError::Backend(_) => "backend",
             SegmulError::Eval(_) => "eval",
+            SegmulError::Stats(_) => "stats",
             SegmulError::Io(_) => "io",
         }
     }
@@ -93,6 +102,7 @@ impl fmt::Display for SegmulError {
             }
             SegmulError::Backend(m) => write!(f, "backend error: {m}"),
             SegmulError::Eval(m) => write!(f, "evaluation error: {m}"),
+            SegmulError::Stats(m) => write!(f, "statistics error: {m}"),
             SegmulError::Io(m) => write!(f, "io error: {m}"),
         }
     }
@@ -134,6 +144,10 @@ mod tests {
         assert!(e.to_string().contains("manifest.json"));
         assert!(e.to_string().contains("batch"));
         assert_eq!(e.kind(), "artifact");
+        let e = SegmulError::stats("no samples accumulated");
+        assert!(e.to_string().contains("statistics"));
+        assert!(e.to_string().contains("no samples"));
+        assert_eq!(e.kind(), "stats");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! evaluation merges partials (merge is associative and commutative —
 //! property-tested), and `ErrorMetrics` derives the paper's §III-B metrics.
 
+use crate::error::fault::SegmulError;
 use crate::multiplier::wordlevel::error_distance;
 
 /// Raw accumulated statistics for one (design, workload) evaluation.
@@ -140,15 +141,25 @@ impl ErrorStats {
                 <= 1e-9 * self.sum_red.abs().max(other.sum_red.abs()).max(1.0)
     }
 
-    /// Derive the paper's metrics. `count` must be nonzero.
-    pub fn metrics(&self) -> ErrorMetrics {
-        assert!(self.count > 0, "no samples accumulated");
+    /// Derive the paper's metrics.
+    ///
+    /// An empty accumulator has no defined metrics — every mean divides
+    /// by `count` — so rather than silently poisoning merged sweep rows
+    /// with NaN/∞, deriving from zero samples reports a typed
+    /// [`SegmulError::Stats`].
+    pub fn metrics(&self) -> Result<ErrorMetrics, SegmulError> {
+        if self.count == 0 {
+            return Err(SegmulError::stats(format!(
+                "cannot derive metrics from an empty accumulator (n={})",
+                self.n
+            )));
+        }
         let cnt = self.count as f64;
         let max_p = {
             let m = (1u64 << self.n) - 1;
             (m as f64) * (m as f64)
         };
-        ErrorMetrics {
+        Ok(ErrorMetrics {
             n: self.n,
             samples: self.count,
             er: self.err_count as f64 / cnt,
@@ -158,7 +169,7 @@ impl ErrorStats {
             nmed: (self.sum_abs_ed as f64 / cnt) / max_p,
             mred: self.sum_red / cnt,
             ber: self.bitflips.iter().map(|&f| f as f64 / cnt).collect(),
-        }
+        })
     }
 }
 
@@ -184,8 +195,13 @@ pub struct ErrorMetrics {
 }
 
 impl ErrorMetrics {
-    /// Mean BER across all 2n output bits.
+    /// Mean BER across all 2n output bits. Analytic metric sets carry no
+    /// per-bit flip model (`ber` is empty); that yields `NaN` rather than
+    /// a silent division panic — report layers render it as `-`.
     pub fn mean_ber(&self) -> f64 {
+        if self.ber.is_empty() {
+            return f64::NAN;
+        }
         self.ber.iter().sum::<f64>() / self.ber.len() as f64
     }
 }
@@ -202,8 +218,46 @@ mod tests {
         s.record(100, 100);
         assert_eq!(s.count, 1);
         assert_eq!(s.err_count, 0);
-        assert_eq!(s.metrics().er, 0.0);
-        assert_eq!(s.metrics().mae, 0);
+        assert_eq!(s.metrics().unwrap().er, 0.0);
+        assert_eq!(s.metrics().unwrap().mae, 0);
+    }
+
+    #[test]
+    fn empty_accumulator_reports_typed_stats_error() {
+        let s = ErrorStats::new(8);
+        let err = s.metrics().unwrap_err();
+        assert_eq!(err.kind(), "stats");
+        assert!(err.to_string().contains("empty accumulator"), "{err}");
+    }
+
+    #[test]
+    fn single_record_metrics_are_finite_and_exact() {
+        let mut s = ErrorStats::new(4);
+        s.record(200, 190); // ED = +10
+        let m = s.metrics().unwrap();
+        assert_eq!(m.samples, 1);
+        assert_eq!(m.er, 1.0);
+        assert_eq!(m.med_signed, 10.0);
+        assert_eq!(m.med_abs, 10.0);
+        assert_eq!(m.mae, 10);
+        assert!((m.nmed - 10.0 / 225.0).abs() < 1e-12);
+        assert!((m.mred - 0.05).abs() < 1e-12);
+        assert!(m.mean_ber().is_finite());
+        // And a single exact record: all-zero metrics, no NaN anywhere.
+        let mut z = ErrorStats::new(4);
+        z.record(9, 9);
+        let m = z.metrics().unwrap();
+        assert_eq!((m.er, m.med_abs, m.mae, m.mred), (0.0, 0.0, 0, 0.0));
+        assert_eq!(m.mean_ber(), 0.0);
+    }
+
+    #[test]
+    fn mean_ber_nan_on_empty_bit_model() {
+        let mut s = ErrorStats::new(4);
+        s.record(1, 2);
+        let mut m = s.metrics().unwrap();
+        m.ber.clear(); // analytic metric sets carry no per-bit model
+        assert!(m.mean_ber().is_nan());
     }
 
     #[test]
@@ -214,7 +268,7 @@ mod tests {
         assert_eq!(s.sum_ed, 0);
         assert_eq!(s.sum_abs_ed, 20);
         assert_eq!(s.max_abs_ed, 10);
-        let m = s.metrics();
+        let m = s.metrics().unwrap();
         assert_eq!(m.med_signed, 0.0);
         assert_eq!(m.med_abs, 10.0);
         assert_eq!(m.er, 1.0);
@@ -233,11 +287,11 @@ mod tests {
     fn mred_uses_exact_denominator() {
         let mut s = ErrorStats::new(8);
         s.record(200, 100);
-        assert!((s.metrics().mred - 0.5).abs() < 1e-12);
+        assert!((s.metrics().unwrap().mred - 0.5).abs() < 1e-12);
         // p = 0 clamps denominator to 1
         let mut z = ErrorStats::new(8);
         z.record(0, 3);
-        assert!((z.metrics().mred - 3.0).abs() < 1e-12);
+        assert!((z.metrics().unwrap().mred - 3.0).abs() < 1e-12);
     }
 
     #[test]
@@ -353,7 +407,7 @@ mod tests {
     fn nmed_normalization() {
         let mut s = ErrorStats::new(4);
         s.record(225, 0); // max |ED| at n=4: (2^4-1)^2
-        let m = s.metrics();
+        let m = s.metrics().unwrap();
         assert!((m.nmed - 1.0).abs() < 1e-12);
     }
 }

@@ -12,14 +12,20 @@
 //! * [`montecarlo`]  — sampled evaluation (the paper uses 2^32 patterns;
 //!   sample count is configurable here) with uniform or weighted operand
 //!   distributions, batched per chunk.
-//! * [`closed_form`] — Eq. (11) MAE closed form, the corrected measured
-//!   form, and latency/adder-count formulas from §III/§IV.
+//! * [`closed_form`] — Eq. (11) MAE closed form reconciled with the
+//!   measured form (exact overshoot WCE vs two-sided MAE), the fix-to-1
+//!   residue identity and its tight envelope, and latency/adder-count
+//!   formulas from §III/§IV.
 //! * [`probprop`]    — the §V-B polynomial-time probability-propagation
 //!   estimator for ER (the remedy to Theorem 1/2's #P-completeness).
+//! * [`analytic`]    — the per-family analytic model registry
+//!   ([`AnalyticStats`]): simulation-free ER/MED/NMED/MRED/WCE for every
+//!   registry design, serving the sweep's `--analytic` fast path.
 //! * [`fault`]       — the typed [`SegmulError`] taxonomy the public
 //!   [`crate::api`] facade reports (defined here so the layers below the
 //!   facade can construct it without depending upward).
 
+pub mod analytic;
 pub mod closed_form;
 pub mod exhaustive;
 pub mod fault;
@@ -28,6 +34,7 @@ pub mod montecarlo;
 pub mod probprop;
 pub mod stream;
 
+pub use analytic::{analytic_stats, AnalyticStats};
 pub use exhaustive::exhaustive_stats;
 pub use fault::SegmulError;
 pub use metrics::{ErrorMetrics, ErrorStats};

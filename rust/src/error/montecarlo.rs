@@ -228,8 +228,8 @@ mod tests {
     fn mc_converges_to_exhaustive() {
         // ER from 2^20 samples must be within ~3 sigma of the exhaustive ER.
         let (n, t) = (8u32, 4u32);
-        let exact = exhaustive_stats(n, t, true).metrics();
-        let mc = mc_stats(n, t, true, &McConfig::uniform(1 << 20, 11)).metrics();
+        let exact = exhaustive_stats(n, t, true).metrics().unwrap();
+        let mc = mc_stats(n, t, true, &McConfig::uniform(1 << 20, 11)).metrics().unwrap();
         let sigma = (exact.er * (1.0 - exact.er) / (1u64 << 20) as f64).sqrt();
         assert!(
             (mc.er - exact.er).abs() < 4.0 * sigma + 1e-9,

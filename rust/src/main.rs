@@ -27,7 +27,8 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use segmul::api::{
-    BackendChoice, DesignSet, EvalJob, JobResult, MultiplierSpec, Session, SweepGrid,
+    analytic_stats, AnalyticMode, BackendChoice, DesignSet, EvalJob, JobResult, MultiplierSpec,
+    Session, SweepGrid,
 };
 use segmul::config::Config;
 use segmul::error::probprop;
@@ -103,12 +104,19 @@ fn backend_choice(args: &Args, cfg: &Config) -> Result<BackendChoice> {
 }
 
 /// Build the session every evaluating subcommand runs on: persistent
-/// worker pool, the given backend, session-wide seed policy.
-fn make_session(choice: BackendChoice, cfg: &Config, workers: usize) -> Result<Session> {
+/// worker pool, the given backend, session-wide seed policy, and the
+/// analytic answer-source mode (off everywhere except `sweep --analytic`).
+fn make_session(
+    choice: BackendChoice,
+    cfg: &Config,
+    workers: usize,
+    analytic: AnalyticMode,
+) -> Result<Session> {
     Ok(Session::builder()
         .workers(workers)
         .backend(choice)
         .seed(cfg.seed)
+        .analytic(analytic)
         .build()?)
 }
 
@@ -125,8 +133,8 @@ fn job_from_args(args: &Args, cfg: &Config, session: &Session, n: u32, t: u32) -
     Ok(builder.build()?)
 }
 
-fn print_metrics(job: &EvalJob, result: &JobResult) {
-    let m = result.metrics();
+fn print_metrics(job: &EvalJob, result: &JobResult) -> Result<()> {
+    let m = result.metrics()?;
     println!(
         "{} backend={} samples={} ({} batches, {:.2} Mpairs/s)",
         job.design.name(),
@@ -145,6 +153,7 @@ fn print_metrics(job: &EvalJob, result: &JobResult) {
         m.mred,
         m.mean_ber()
     );
+    Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
@@ -152,10 +161,11 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let n = args.req_u32("n")?;
     let t = args.opt_u32("t")?.unwrap_or(n / 2);
     let workers = workers_from(args, &cfg)?;
-    let mut session = make_session(backend_choice(args, &cfg)?, &cfg, workers)?;
+    let mut session =
+        make_session(backend_choice(args, &cfg)?, &cfg, workers, AnalyticMode::Off)?;
     let job = job_from_args(args, &cfg, &session, n, t)?;
     let result = session.run(&job)?;
-    print_metrics(&job, &result);
+    print_metrics(&job, &result)?;
     Ok(())
 }
 
@@ -179,17 +189,30 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if args.flag("mc") {
         grid.force_mc = true;
     }
+    let analytic = match args.opt("analytic") {
+        Some(s) => AnalyticMode::parse(s)?,
+        None => AnalyticMode::Off,
+    };
+    // Mirror of the runner's answer-source policy, usable before the
+    // session exists: will this grid point be served analytically?
+    let analytic_serves = |job: &EvalJob| match analytic {
+        AnalyticMode::Off => false,
+        AnalyticMode::Auto => analytic_stats(&job.design).is_some_and(|s| s.exact),
+        AnalyticMode::Require => analytic_stats(&job.design).is_some(),
+    };
     // PJRT coverage preflight: the manifest must dispatch every grid
     // design (a lowered module from `segmul lower`, or a legacy stats
-    // module for the segmented family). Fall back loudly to the CPU
-    // backend under Auto selection; reject an explicit --backend pjrt up
-    // front with the uncovered designs named, rather than failing
-    // mid-sweep.
+    // module for the segmented family). Grid points served analytically
+    // never reach the pool, so they don't need a lowering. Fall back
+    // loudly to the CPU backend under Auto selection; reject an explicit
+    // --backend pjrt up front with the uncovered designs named, rather
+    // than failing mid-sweep.
     let mut choice = backend_choice(args, &cfg)?;
     let explicit_pjrt = matches!(choice, BackendChoice::Pjrt(_));
+    let all_analytic = grid.jobs().iter().all(|j| analytic_serves(j));
     let pjrt_dir = match &choice {
-        BackendChoice::Pjrt(dir) | BackendChoice::Auto(dir) => Some(dir.clone()),
-        BackendChoice::Cpu => None,
+        BackendChoice::Pjrt(dir) | BackendChoice::Auto(dir) if !all_analytic => Some(dir.clone()),
+        _ => None,
     };
     if let Some(dir) = pjrt_dir {
         let uncovered: Vec<String> = match Manifest::load(&dir) {
@@ -197,7 +220,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 let mut missing: Vec<String> = grid
                     .jobs()
                     .iter()
-                    .filter(|j| !manifest.covers_design(&j.design))
+                    .filter(|j| !analytic_serves(j) && !manifest.covers_design(&j.design))
                     .map(|j| j.design.name())
                     .collect();
                 missing.dedup();
@@ -225,19 +248,20 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             choice = BackendChoice::Cpu;
         }
     }
-    let mut session = make_session(choice, &cfg, workers)?;
+    let mut session = make_session(choice, &cfg, workers, analytic)?;
     let total = grid.jobs().len();
     println!(
-        "sweep: {} configs over n ∈ {:?}, designs={} ({} workers, seed {})",
+        "sweep: {} configs over n ∈ {:?}, designs={} ({} workers, seed {}, analytic {})",
         total,
         grid.bitwidths,
         grid.designs.name(),
         session.workers(),
-        grid.seed
+        grid.seed,
+        analytic.name()
     );
     let started = std::time::Instant::now();
     let outcomes = session.run_grid(&grid, |i, total, o| {
-        let m = o.result.metrics();
+        let Ok(m) = o.metrics() else { return };
         println!(
             "  [{:>3}/{total}] {:<24} {:>10} samples  ER={:.6}  MED={:<12.4} {}",
             i + 1,
@@ -245,20 +269,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             m.samples,
             m.er,
             m.med_abs,
-            if o.cached {
-                "(cached)".to_string()
-            } else {
-                format!("({:.1} Mpairs/s)", o.result.throughput() / 1e6)
+            match o.result() {
+                None => "(analytic)".to_string(),
+                Some(_) if o.cached => "(cached)".to_string(),
+                Some(r) => format!("({:.1} Mpairs/s)", r.throughput() / 1e6),
             }
         );
     })?;
     let wall = started.elapsed();
-    println!("\n{}", report::sweep::sweep_table(&outcomes).to_text());
+    println!("\n{}", report::sweep::sweep_table(&outcomes)?.to_text());
     let telemetry = session.telemetry();
     let info = report::sweep::SweepRunInfo {
         workers: session.workers(),
         cache_hits: session.cache_hits(),
         jobs_evaluated: session.jobs_evaluated(),
+        analytic_answers: session.analytic_answers(),
         wall,
         backend: session.backend_name().to_string(),
         kernel_dispatch: telemetry
@@ -269,14 +294,27 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
     let (csv_path, json_path) = report::sweep::write_sweep_reports(&cfg.results_dir, &outcomes, &info)?;
     println!(
-        "{} configs in {:.2} s ({} evaluated, {} cache hits, {} workers, {} backend builds)",
+        "{} configs in {:.2} s ({} evaluated, {} cache hits, {} analytic, {} workers, {} backend builds)",
         total,
         wall.as_secs_f64(),
         session.jobs_evaluated(),
         session.cache_hits(),
+        session.analytic_answers(),
         session.workers(),
         session.backend_builds()
     );
+    if session.analytic_answers() > 0 {
+        println!(
+            "analytic: {} of {} configs answered in closed form (O(1), no simulation){}",
+            session.analytic_answers(),
+            total,
+            if session.jobs_evaluated() == 0 && session.cache_hits() == 0 {
+                " — zero pool dispatches"
+            } else {
+                ""
+            }
+        );
+    }
     // Kernel-dispatch audit: every design must have run on a true batch
     // kernel or a lowered PJRT module — a scalar fallback means the sweep
     // silently regressed to per-pair dispatch, so name the offenders
@@ -303,6 +341,17 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     // unless the whole grid dispatched through lowered PJRT modules (no
     // scalar fallbacks, no CPU-tier fallback for any registry design).
     if args.flag("require-pjrt") {
+        if total == 0 && session.analytic_answers() > 0 {
+            // `--analytic` answered the whole grid in closed form:
+            // nothing dispatched, so there is nothing for PJRT to prove
+            // (whatever backend tier the idle pool holds).
+            println!(
+                "--require-pjrt: all {} configs answered analytically; no pjrt dispatches to audit",
+                session.analytic_answers()
+            );
+            println!("wrote {csv_path:?} and {json_path:?}");
+            return Ok(());
+        }
         if session.backend_name() != "pjrt" {
             bail!(
                 "--require-pjrt: sweep ran on the '{}' backend, not pjrt \
@@ -468,7 +517,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .collect();
     for (i, ticket) in tickets.into_iter().enumerate() {
         let r = ticket.wait()?;
-        let m = r.metrics();
+        let m = r.metrics()?;
         println!(
             "  job {i:>3}: {} ER={:.5} MED={:.2} ({:.1} ms)",
             r.job.design.name(),
@@ -507,8 +556,11 @@ fn usage() -> &'static str {
   eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
   sweep    [--n N] [--mc] [--designs paper|accurate|baselines|oracle|netlist|all]
            [--workers W] [--samples S] [--seed S] [--results DIR] [--require-pjrt]
+           [--analytic off|auto|require]
            (no --n: full configured grid; writes sweep.csv + BENCH_sweep.json;
-            --require-pjrt fails unless every design ran via a lowered PJRT module)
+            --require-pjrt fails unless every design ran via a lowered PJRT module;
+            --analytic auto serves exact closed-form designs in O(1) without
+            simulation, require answers the whole grid analytically or fails)
   lower    [--n N] [--designs SET] [--batch B] [--artifacts DIR]
            (emit lowered PJRT modules; default: the full sweep grid, batch 8192)
   hw       --n N [--t T] [--hw-vectors V]

@@ -50,7 +50,7 @@ pub fn fig2(cfg: &Config, backend: &mut dyn EvalBackend) -> Result<Table> {
                 } else {
                     EvalJob::mc(n, t, fix, cfg.mc_samples, cfg.seed ^ (n as u64) << 8 ^ t as u64)
                 };
-                let m = run_job(backend, &job)?.metrics();
+                let m = run_job(backend, &job)?.metrics()?;
                 let name = if fix { "segmul+fix" } else { "segmul" };
                 table.row(metrics_row(name, n, Some(t), &m));
             }
@@ -61,10 +61,10 @@ pub fn fig2(cfg: &Config, backend: &mut dyn EvalBackend) -> Result<Table> {
         for spec in DesignSet::Baselines.specs(n) {
             let bl = spec.build_batch()?;
             let m = if exhaustive {
-                exhaustive_stats_batch(bl.as_ref(), cfg.workers).metrics()
+                exhaustive_stats_batch(bl.as_ref(), cfg.workers).metrics()?
             } else {
                 let mc = McConfig::uniform(cfg.mc_samples, cfg.seed ^ 0xB15E);
-                mc_stats_batch(bl.as_ref(), &mc).metrics()
+                mc_stats_batch(bl.as_ref(), &mc).metrics()?
             };
             table.row(metrics_row(&spec.name(), n, None, &m));
         }
@@ -77,7 +77,7 @@ pub fn fig2(cfg: &Config, backend: &mut dyn EvalBackend) -> Result<Table> {
 pub fn mae_table(cfg: &Config) -> Result<Table> {
     let mut table = Table::new(&[
         "n", "t", "mae_eq11", "mae_measured_nofix", "mae_closed_nofix", "mae_measured_fix",
-        "fix_upper_bound", "eq11_matches", "closed_matches",
+        "fix_envelope", "eq11_matches", "closed_matches", "envelope_holds",
     ]);
     for n in 4..=cfg.exhaustive_max_n.min(12) {
         for t in 1..=n / 2 {
@@ -85,6 +85,7 @@ pub fn mae_table(cfg: &Config) -> Result<Table> {
             let fix = exhaustive_stats(n, t, true).max_abs_ed;
             let eq11 = closed_form::mae_eq11(n, t);
             let closed = closed_form::mae_measured_nofix(n, t);
+            let envelope = closed_form::mae_fix_envelope(n, t);
             table.row(vec![
                 n.to_string(),
                 t.to_string(),
@@ -92,9 +93,10 @@ pub fn mae_table(cfg: &Config) -> Result<Table> {
                 nofix.to_string(),
                 closed.to_string(),
                 fix.to_string(),
-                closed_form::mae_fix_upper_bound(n, t).to_string(),
+                envelope.to_string(),
                 (eq11 == nofix).to_string(),
                 (closed == nofix).to_string(),
+                (fix <= envelope).to_string(),
             ]);
         }
     }
@@ -233,7 +235,7 @@ pub fn probprop_accuracy(cfg: &Config) -> Result<Table> {
     ]);
     for n in 4..=cfg.exhaustive_max_n.min(10) {
         for t in 1..=n / 2 {
-            let exact = exhaustive_stats(n, t, false).metrics();
+            let exact = exhaustive_stats(n, t, false).metrics()?;
             let lat = probprop::propagate(n, t);
             let er_est = lat.er_estimate();
             let med_est = lat.med_estimate();
@@ -338,10 +340,12 @@ mod tests {
     fn mae_table_confirms_correction() {
         let cfg = tiny_cfg();
         let t = mae_table(&cfg).unwrap();
-        // every row: closed_matches == true, eq11_matches == false
+        // every row: closed_matches == true, eq11_matches == false, and the
+        // tight fix envelope dominates the measured fix MAE.
         for row in &t.rows {
             assert_eq!(row[8], "true", "closed form must match measurement");
             assert_eq!(row[7], "false", "Eq.11 understates (paper discrepancy)");
+            assert_eq!(row[9], "true", "fix envelope must dominate measurement");
         }
     }
 

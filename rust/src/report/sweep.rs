@@ -23,8 +23,12 @@ fn workload_name(spec: &WorkSpec) -> &'static str {
 
 /// Render the per-config metric table (also the CSV layout). The `t` and
 /// `fix` columns are the segmented-family configuration axes; designs
-/// without them (baselines, accurate) carry `-`.
-pub fn sweep_table(outcomes: &[SweepOutcome]) -> Table {
+/// without them (baselines, accurate) carry `-`. The `source` column
+/// distinguishes `simulated` rows from O(1) `analytic` answers (which
+/// carry no throughput or per-bit BER — rendered `-`). Errs (typed
+/// `Stats`, surfaced through anyhow) only on an empty accumulator, which
+/// the drivers never produce.
+pub fn sweep_table(outcomes: &[SweepOutcome]) -> Result<Table> {
     let mut table = Table::new(&[
         "design",
         "n",
@@ -40,9 +44,11 @@ pub fn sweep_table(outcomes: &[SweepOutcome]) -> Table {
         "mean_ber",
         "mpairs_per_s",
         "cached",
+        "source",
     ]);
     for o in outcomes {
-        let m = o.result.metrics();
+        let m = o.metrics()?;
+        let mean_ber = m.mean_ber();
         table.row(vec![
             o.job.design.name(),
             o.job.n().to_string(),
@@ -55,12 +61,16 @@ pub fn sweep_table(outcomes: &[SweepOutcome]) -> Table {
             m.mae.to_string(),
             f(m.nmed),
             f(m.mred),
-            f(m.mean_ber()),
-            f(o.result.throughput() / 1e6),
+            if mean_ber.is_nan() { "-".into() } else { f(mean_ber) },
+            match o.result() {
+                Some(r) => f(r.throughput() / 1e6),
+                None => "-".into(),
+            },
             o.cached.to_string(),
+            o.source().to_string(),
         ]);
     }
-    table
+    Ok(table)
 }
 
 /// Aggregate run facts for the JSON summary.
@@ -68,6 +78,9 @@ pub struct SweepRunInfo {
     pub workers: usize,
     pub cache_hits: u64,
     pub jobs_evaluated: u64,
+    /// Grid points served by closed-form analytic models instead of
+    /// simulation (counted separately from `cache_hits`).
+    pub analytic_answers: u64,
     pub wall: Duration,
     pub backend: String,
     /// Kernel-dispatch audit: `(design name, dispatch class name)` per
@@ -78,47 +91,54 @@ pub struct SweepRunInfo {
 
 /// Build the `BENCH_sweep.json` document: run totals (what the CI gate
 /// reads) plus the full per-config result array.
-pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Json {
-    // Cached configs cost no evaluation time: totals count fresh runs.
-    let pairs: u64 = outcomes.iter().filter(|o| !o.cached).map(|o| o.result.stats.count).sum();
-    let busy: f64 =
-        outcomes.iter().filter(|o| !o.cached).map(|o| o.result.wall.as_secs_f64()).sum();
-    let wall = info.wall.as_secs_f64();
-    let results: Vec<Json> = outcomes
+pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Result<Json> {
+    // Cached and analytic configs cost no evaluation time: throughput
+    // totals count fresh simulated runs only.
+    let pairs: u64 =
+        outcomes.iter().filter(|o| !o.cached).filter_map(|o| o.result()).map(|r| r.stats.count).sum();
+    let busy: f64 = outcomes
         .iter()
-        .map(|o| {
-            let m = o.result.metrics();
-            let mut fields = vec![
-                ("design", Json::from(o.job.design.name().as_str())),
-                ("n", Json::from(o.job.n() as u64)),
-            ];
-            if let Some(t) = o.job.design.split_point() {
-                fields.push(("t", Json::from(t as u64)));
-            }
-            if let Some(fix) = o.job.design.fix_mode() {
-                fields.push(("fix", Json::from(fix)));
-            }
-            fields.extend([
-                ("workload", Json::from(workload_name(&o.job.spec))),
-                ("samples", Json::from(m.samples)),
-                ("er", Json::from(m.er)),
-                ("med_abs", Json::from(m.med_abs)),
-                ("mae", Json::from(m.mae)),
-                ("nmed", Json::from(m.nmed)),
-                ("mred", Json::from(m.mred)),
-                ("mean_ber", Json::from(m.mean_ber())),
-                ("wall_s", Json::from(o.result.wall.as_secs_f64())),
-                ("cached", Json::from(o.cached)),
-            ]);
-            obj(fields)
-        })
-        .collect();
+        .filter(|o| !o.cached)
+        .filter_map(|o| o.result())
+        .map(|r| r.wall.as_secs_f64())
+        .sum();
+    let wall = info.wall.as_secs_f64();
+    let mut results: Vec<Json> = Vec::with_capacity(outcomes.len());
+    for o in outcomes {
+        let m = o.metrics()?;
+        let mean_ber = m.mean_ber();
+        let mut fields = vec![
+            ("design", Json::from(o.job.design.name().as_str())),
+            ("n", Json::from(o.job.n() as u64)),
+        ];
+        if let Some(t) = o.job.design.split_point() {
+            fields.push(("t", Json::from(t as u64)));
+        }
+        if let Some(fix) = o.job.design.fix_mode() {
+            fields.push(("fix", Json::from(fix)));
+        }
+        fields.extend([
+            ("workload", Json::from(workload_name(&o.job.spec))),
+            ("samples", Json::from(m.samples)),
+            ("er", Json::from(m.er)),
+            ("med_abs", Json::from(m.med_abs)),
+            ("mae", Json::from(m.mae)),
+            ("nmed", Json::from(m.nmed)),
+            ("mred", Json::from(m.mred)),
+            // Analytic answers carry no per-bit BER accumulator: null.
+            ("mean_ber", if mean_ber.is_nan() { Json::Null } else { Json::from(mean_ber) }),
+            ("wall_s", Json::from(o.wall().as_secs_f64())),
+            ("cached", Json::from(o.cached)),
+            ("source", Json::from(o.source())),
+        ]);
+        results.push(obj(fields));
+    }
     let dispatch: std::collections::BTreeMap<String, Json> = info
         .kernel_dispatch
         .iter()
         .map(|(design, class)| (design.clone(), Json::from(class.as_str())))
         .collect();
-    obj(vec![
+    Ok(obj(vec![
         ("bench", Json::from("sweep")),
         ("backend", Json::from(info.backend.as_str())),
         ("kernel_dispatch", Json::Obj(dispatch)),
@@ -126,6 +146,7 @@ pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Json {
         ("configs", Json::from(outcomes.len() as u64)),
         ("jobs_evaluated", Json::from(info.jobs_evaluated)),
         ("cache_hits", Json::from(info.cache_hits)),
+        ("analytic_answers", Json::from(info.analytic_answers)),
         ("pairs_evaluated", Json::from(pairs)),
         ("wall_s", Json::from(wall)),
         ("eval_busy_s", Json::from(busy)),
@@ -137,7 +158,7 @@ pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Json {
             )]),
         ),
         ("results", Json::Arr(results)),
-    ])
+    ]))
 }
 
 /// Write `sweep.csv` and `BENCH_sweep.json` into `results_dir`; returns
@@ -149,9 +170,9 @@ pub fn write_sweep_reports(
 ) -> Result<(PathBuf, PathBuf)> {
     std::fs::create_dir_all(results_dir)?;
     let csv_path = results_dir.join("sweep.csv");
-    sweep_table(outcomes).write(&csv_path)?;
+    sweep_table(outcomes)?.write(&csv_path)?;
     let json_path = results_dir.join("BENCH_sweep.json");
-    std::fs::write(&json_path, sweep_json(outcomes, info).to_string_pretty())?;
+    std::fs::write(&json_path, sweep_json(outcomes, info)?.to_string_pretty())?;
     Ok((csv_path, json_path))
 }
 
@@ -177,6 +198,7 @@ mod tests {
             workers: 1,
             cache_hits: runner.cache_hits,
             jobs_evaluated: runner.jobs_evaluated,
+            analytic_answers: runner.analytic_answers,
             wall: Duration::from_millis(10),
             backend: "cpu".into(),
             kernel_dispatch: runner
@@ -192,15 +214,17 @@ mod tests {
     #[test]
     fn table_has_one_row_per_config() {
         let (outs, _) = outcomes();
-        let table = sweep_table(&outs);
+        let table = sweep_table(&outs).unwrap();
         assert_eq!(table.rows.len(), outs.len());
         assert_eq!(table.header.len(), table.rows[0].len());
+        // Simulated rows carry the simulated source tag.
+        assert!(table.rows.iter().all(|r| r.last().map(String::as_str) == Some("simulated")));
     }
 
     #[test]
     fn json_roundtrips_and_carries_totals() {
         let (outs, info) = outcomes();
-        let j = sweep_json(&outs, &info);
+        let j = sweep_json(&outs, &info).unwrap();
         let parsed = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("sweep"));
         assert_eq!(parsed.get("configs").unwrap().as_u64(), Some(outs.len() as u64));
@@ -238,16 +262,71 @@ mod tests {
     #[test]
     fn cached_outcomes_excluded_from_throughput_totals() {
         let (mut outs, info) = outcomes();
-        let pairs_fresh = outs.iter().map(|o| o.result.stats.count).sum::<u64>();
+        let pairs_fresh =
+            outs.iter().map(|o| o.result().unwrap().stats.count).sum::<u64>();
         // Duplicate every outcome as a cache hit: totals must not change.
         let dupes: Vec<SweepOutcome> = outs
             .iter()
             .map(|o| SweepOutcome { cached: true, ..o.clone() })
             .collect();
         outs.extend(dupes);
-        let j = sweep_json(&outs, &info);
+        let j = sweep_json(&outs, &info).unwrap();
         assert_eq!(j.get("pairs_evaluated").unwrap().as_u64(), Some(pairs_fresh));
         assert_eq!(j.get("configs").unwrap().as_u64(), Some(outs.len() as u64));
+    }
+
+    #[test]
+    fn analytic_rows_render_without_throughput_or_ber() {
+        use crate::coordinator::AnalyticMode;
+        let grid = SweepGrid {
+            bitwidths: vec![8],
+            designs: crate::multiplier::DesignSet::Baselines,
+            exhaustive_max_n: 8,
+            force_mc: false,
+            mc_samples: 1000,
+            seed: 1,
+        };
+        let mut runner =
+            SweepRunner::new(|| Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>), 1)
+                .unwrap();
+        runner.set_analytic_mode(AnalyticMode::Auto);
+        let outs = runner.run_grid(&grid, |_, _, _| {}).unwrap();
+        let info = SweepRunInfo {
+            workers: 1,
+            cache_hits: runner.cache_hits,
+            jobs_evaluated: runner.jobs_evaluated,
+            analytic_answers: runner.analytic_answers,
+            wall: Duration::from_millis(10),
+            backend: "cpu".into(),
+            kernel_dispatch: vec![],
+        };
+        assert!(info.analytic_answers > 0);
+        let table = sweep_table(&outs).unwrap();
+        let src = table.header.iter().position(|h| h == "source").unwrap();
+        let tput = table.header.iter().position(|h| h == "mpairs_per_s").unwrap();
+        let ber = table.header.iter().position(|h| h == "mean_ber").unwrap();
+        let analytic_rows: Vec<_> =
+            table.rows.iter().filter(|r| r[src] == "analytic").collect();
+        assert_eq!(analytic_rows.len() as u64, info.analytic_answers);
+        for row in &analytic_rows {
+            assert_eq!(row[tput], "-");
+            assert_eq!(row[ber], "-");
+        }
+        let j = sweep_json(&outs, &info).unwrap();
+        assert_eq!(
+            j.get("analytic_answers").unwrap().as_u64(),
+            Some(info.analytic_answers)
+        );
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        let analytic_json: Vec<_> = results
+            .iter()
+            .filter(|r| r.get("source").and_then(|s| s.as_str()) == Some("analytic"))
+            .collect();
+        assert_eq!(analytic_json.len() as u64, info.analytic_answers);
+        for r in analytic_json {
+            assert!(matches!(r.get("mean_ber"), Some(Json::Null)));
+            assert!(r.get("er").unwrap().as_f64().is_some());
+        }
     }
 
     #[test]

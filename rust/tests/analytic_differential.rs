@@ -1,0 +1,258 @@
+//! Three-way differential validation of the analytic error-model
+//! registry (`error::analytic`).
+//!
+//! Tier 1 — exact ground truth: for every modeled design family at
+//! n ∈ {4, 8, 10} the analytic statistics must agree with exhaustive
+//! evaluation of all `2^{2n}` input pairs — bit-for-bit for the
+//! closed-form combinational families (truncation, broken-array,
+//! Mitchell, Kulkarni), within the documented calibration bounds for the
+//! segmented lattice estimates (both fix modes).
+//!
+//! Tier 2 — statistical: at n ∈ {16, 32} exhaustive evaluation is
+//! infeasible, so the models are checked against Monte-Carlo sampling
+//! within confidence-interval-scale tolerances.
+//!
+//! Tier 3 — sweep-level: `--analytic require` over a full cross-design
+//! grid must answer every row in closed form (zero pool dispatches) and
+//! produce rows consistent with a fully simulated run of the same grid.
+
+use segmul::api::{
+    analytic_stats, AnalyticMode, BackendChoice, DesignSet, MultiplierSpec, Session, SweepGrid,
+};
+use segmul::error::exhaustive::{exhaustive_stats, exhaustive_stats_batch};
+use segmul::error::montecarlo::{mc_stats, mc_stats_batch, McConfig};
+
+/// The combinational baseline families with fully closed-form models at
+/// one bit-width (Kulkarni requires a power-of-two width).
+fn combinational_designs(n: u32) -> Vec<MultiplierSpec> {
+    let mut out = vec![
+        MultiplierSpec::Truncated { n, k: n / 4 },
+        MultiplierSpec::Truncated { n, k: n / 2 },
+        MultiplierSpec::BrokenArray { n, hbl: n / 4, vbl: n / 2 },
+        MultiplierSpec::Mitchell { n },
+    ];
+    if n.is_power_of_two() {
+        out.push(MultiplierSpec::Kulkarni { n });
+    }
+    out
+}
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        a.abs()
+    } else {
+        (a - b).abs() / b.abs()
+    }
+}
+
+#[test]
+fn combinational_models_match_exhaustive_exactly() {
+    for n in [4u32, 8, 10] {
+        for spec in combinational_designs(n) {
+            let a = analytic_stats(&spec).expect("modeled design");
+            assert!(a.exact, "{} must be exact at n={n}", spec.name());
+            let bl = spec.build_batch().unwrap();
+            let m = exhaustive_stats_batch(bl.as_ref(), 2).metrics().unwrap();
+            assert_eq!(m.samples, 1u64 << (2 * n), "{}", spec.name());
+            assert!(
+                (a.er - m.er).abs() < 1e-12,
+                "{} ER analytic {} vs exhaustive {}",
+                spec.name(),
+                a.er,
+                m.er
+            );
+            assert!(
+                (a.med_abs - m.med_abs).abs() < 1e-6 * (1.0 + m.med_abs),
+                "{} MED analytic {} vs exhaustive {}",
+                spec.name(),
+                a.med_abs,
+                m.med_abs
+            );
+            assert!(
+                (a.med_signed - m.med_signed).abs() < 1e-6 * (1.0 + m.med_signed.abs()),
+                "{} signed MED analytic {} vs exhaustive {}",
+                spec.name(),
+                a.med_signed,
+                m.med_signed
+            );
+            assert_eq!(a.wce, m.mae, "{} WCE", spec.name());
+            assert!(
+                rel_err(a.mred, m.mred) < 1e-5,
+                "{} MRED analytic {} vs exhaustive {}",
+                spec.name(),
+                a.mred,
+                m.mred
+            );
+        }
+    }
+}
+
+#[test]
+fn segmented_model_tracks_exhaustive_within_calibration_bounds() {
+    use segmul::error::closed_form::{mae_fix_envelope, mae_measured_nofix};
+    for n in [4u32, 8, 10] {
+        for t in 1..=n / 2 {
+            for fix in [false, true] {
+                let spec = MultiplierSpec::Segmented { n, t, fix };
+                let a = analytic_stats(&spec).expect("segmented is modeled");
+                assert!(!a.exact, "segmented estimates must not claim exactness");
+                let m = exhaustive_stats(n, t, fix).metrics().unwrap();
+                let scale = (1u64 << (n + t - 1)) as f64;
+                assert!(
+                    rel_err(a.er, m.er) <= 0.6,
+                    "n={n} t={t} fix={fix}: ER est {} vs exact {}",
+                    a.er,
+                    m.er
+                );
+                let signed_tol = if fix { 0.06 } else { 0.01 };
+                assert!(
+                    (a.med_signed - m.med_signed).abs() <= signed_tol * scale,
+                    "n={n} t={t} fix={fix}: signed MED est {} vs exact {} (scale {scale})",
+                    a.med_signed,
+                    m.med_signed
+                );
+                let abs_tol = if fix { 0.15 } else { 0.35 };
+                assert!(
+                    rel_err(a.med_abs, m.med_abs) <= abs_tol,
+                    "n={n} t={t} fix={fix}: MED est {} vs exact {}",
+                    a.med_abs,
+                    m.med_abs
+                );
+                assert!(
+                    a.mred >= m.mred / 4.0 && a.mred <= m.mred * 4.0,
+                    "n={n} t={t} fix={fix}: MRED est {} vs exact {}",
+                    a.mred,
+                    m.mred
+                );
+                if fix {
+                    // The fix WCE is a tight envelope: it dominates the
+                    // measurement but by less than a factor of two.
+                    assert_eq!(a.wce, mae_fix_envelope(n, t));
+                    assert!(m.mae <= a.wce, "n={n} t={t}: envelope violated");
+                    assert!(m.mae > a.wce / 2, "n={n} t={t}: envelope loose");
+                } else {
+                    assert_eq!(a.wce, mae_measured_nofix(n, t));
+                    assert_eq!(a.wce, m.mae, "n={n} t={t}: no-fix WCE is exact");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn large_n_models_agree_with_monte_carlo() {
+    const SAMPLES: u64 = 1 << 18;
+    for n in [16u32, 32] {
+        // Combinational families: the closed-form (n = 16) and hybrid
+        // (n = 32) tiers against MC with CI-scale tolerances.
+        for spec in combinational_designs(n) {
+            let a = analytic_stats(&spec).expect("modeled design");
+            let bl = spec.build_batch().unwrap();
+            let mc = McConfig::uniform(SAMPLES, 0xD1FF ^ n as u64);
+            let m = mc_stats_batch(bl.as_ref(), &mc).metrics().unwrap();
+            assert!(
+                (a.er - m.er).abs() < 0.01,
+                "{} ER analytic {} vs MC {}",
+                spec.name(),
+                a.er,
+                m.er
+            );
+            assert!(
+                rel_err(a.med_abs, m.med_abs) < 0.05,
+                "{} MED analytic {} vs MC {}",
+                spec.name(),
+                a.med_abs,
+                m.med_abs
+            );
+        }
+        // Segmented estimates at the paper's t = n/2 point.
+        let t = n / 2;
+        for fix in [false, true] {
+            let a = analytic_stats(&MultiplierSpec::Segmented { n, t, fix }).unwrap();
+            let m = mc_stats(n, t, fix, &McConfig::uniform(SAMPLES, 0x5E6)).metrics().unwrap();
+            assert!(
+                rel_err(a.er, m.er) <= 0.4,
+                "n={n} t={t} fix={fix}: ER est {} vs MC {}",
+                a.er,
+                m.er
+            );
+        }
+    }
+}
+
+#[test]
+fn analytic_require_sweep_is_dispatch_free_and_consistent_with_simulation() {
+    let grid = SweepGrid {
+        bitwidths: vec![4, 8],
+        designs: DesignSet::All,
+        exhaustive_max_n: 8,
+        force_mc: false,
+        mc_samples: 1 << 14,
+        seed: 9,
+    };
+    let mut simulated = Session::builder()
+        .workers(2)
+        .backend(BackendChoice::Cpu)
+        .seed(9)
+        .build()
+        .unwrap();
+    let sim = simulated.run_grid(&grid, |_, _, _| {}).unwrap();
+
+    let mut fast = Session::builder()
+        .workers(2)
+        .backend(BackendChoice::Cpu)
+        .seed(9)
+        .analytic(AnalyticMode::Require)
+        .build()
+        .unwrap();
+    let ana = fast.run_grid(&grid, |_, _, _| {}).unwrap();
+
+    // Zero pool dispatches: nothing evaluated, nothing cached, every row
+    // answered analytically.
+    assert_eq!(fast.jobs_evaluated(), 0);
+    assert_eq!(fast.cache_hits(), 0);
+    assert_eq!(fast.analytic_answers(), ana.len() as u64);
+    assert_eq!(fast.telemetry().analytic_answers, ana.len() as u64);
+
+    // Row identity: same grid, same order; per-row metrics consistent
+    // with simulation — bit-consistent where the model is exact, inside
+    // the documented calibration bounds where it is an estimate.
+    assert_eq!(sim.len(), ana.len());
+    for (s, a) in sim.iter().zip(&ana) {
+        assert_eq!(s.job.design, a.job.design);
+        assert_eq!(s.source(), "simulated");
+        assert_eq!(a.source(), "analytic");
+        let stats = a.analytic().expect("analytic answer carries its stats");
+        let sm = s.metrics().unwrap();
+        let am = a.metrics().unwrap();
+        assert_eq!(sm.samples, am.samples, "{}", s.job.design.name());
+        if stats.exact {
+            assert!(
+                (sm.er - am.er).abs() < 1e-12 && (sm.med_abs - am.med_abs).abs() < 1e-6,
+                "{}: exact row diverged (ER {} vs {}, MED {} vs {})",
+                s.job.design.name(),
+                sm.er,
+                am.er,
+                sm.med_abs,
+                am.med_abs
+            );
+            assert_eq!(sm.mae, am.mae, "{}", s.job.design.name());
+        } else {
+            assert!(
+                rel_err(am.er, sm.er) <= 0.6,
+                "{}: ER est {} vs simulated {}",
+                s.job.design.name(),
+                am.er,
+                sm.er
+            );
+            assert!(
+                rel_err(am.med_abs, sm.med_abs) <= 0.35,
+                "{}: MED est {} vs simulated {}",
+                s.job.design.name(),
+                am.med_abs,
+                sm.med_abs
+            );
+            assert!(sm.mae <= am.mae, "{}: WCE must dominate", s.job.design.name());
+        }
+    }
+}

@@ -216,7 +216,7 @@ fn cross_design_sweep_runs_non_paper_designs_through_shared_path() {
         .iter()
         .find(|o| o.job.design == MultiplierSpec::Segmented { n: 4, t: 0, fix: false })
         .unwrap();
-    assert_eq!(accurate.result.stats, t0.result.stats);
+    assert_eq!(accurate.result().unwrap().stats, t0.result().unwrap().stats);
     // Everything ran on the persistent pool: 2 builds, ever.
     assert_eq!(builds.load(Ordering::SeqCst), 2);
 }

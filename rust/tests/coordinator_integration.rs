@@ -67,7 +67,7 @@ fn service_with_pjrt_backend() {
         .unwrap();
     assert_eq!(r.backend, "pjrt");
     assert_eq!(r.stats.count, 1 << 17);
-    assert!(r.metrics().er > 0.0);
+    assert!(r.metrics().unwrap().er > 0.0);
     let t = svc.telemetry();
     assert_eq!(t.jobs_completed, 1);
     assert_eq!(t.pairs_evaluated, 1 << 17);

@@ -150,9 +150,14 @@ fn cross_design_sweep_runs_fully_lowered_and_matches_cpu() {
         assert_eq!(p.job.design, c.job.design);
         // n=4 exhaustive fits one backend chunk on both backends, so the
         // accumulation order is identical: full bitwise equality.
-        assert_eq!(p.result.stats, c.result.stats, "{}", p.job.design.name());
+        assert_eq!(
+            p.result().unwrap().stats,
+            c.result().unwrap().stats,
+            "{}",
+            p.job.design.name()
+        );
         if !p.cached {
-            assert_eq!(p.result.backend, "pjrt", "{}", p.job.design.name());
+            assert_eq!(p.result().unwrap().backend, "pjrt", "{}", p.job.design.name());
         }
     }
     let telemetry = pjrt_session.telemetry();

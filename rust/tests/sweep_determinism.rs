@@ -66,7 +66,7 @@ fn assert_grid_deterministic(grid: &SweepGrid) {
             // Full equality: count, err_count, sums, bitflips AND the
             // accumulation-order-sensitive sum_red.
             assert_eq!(
-                &outcome.result.stats,
+                &outcome.result().unwrap().stats,
                 want,
                 "workers={workers} design={}",
                 outcome.job.design.name()
@@ -163,7 +163,7 @@ fn cache_serves_repeats_without_reevaluating() {
         "cache hits must not re-evaluate"
     );
     for (a, b) in first.iter().zip(&second) {
-        assert_eq!(a.result.stats, b.result.stats);
+        assert_eq!(a.result().unwrap().stats, b.result().unwrap().stats);
     }
     // The persistent pool built exactly one backend per worker for the
     // whole two-pass run.
