@@ -1,0 +1,89 @@
+#!/usr/bin/env bash
+# Resume gauntlet: prove the result store's two headline guarantees
+# end-to-end, against the real binary, with a real SIGKILL.
+#
+#   1. Kill-and-resume — a sweep SIGKILLed mid-grid and resumed with
+#      `--resume` (on a different worker count) writes byte-identical
+#      reports to an uninterrupted reference run.
+#   2. Sharding — two concurrent processes claiming disjoint shards of
+#      the grid (`--shard 0/2` / `--shard 1/2`) into one shared store,
+#      followed by a merge run, reproduce the reference bytes with zero
+#      duplicate evaluations across all three processes.
+#
+# All runs use --deterministic-report so sweep.csv + BENCH_sweep.json
+# carry no wall-clock fields and can be compared with `cmp`.
+#
+# Usage: ci/resume_gauntlet.sh   (from the repo root; needs a release
+# build — set SEGMUL to override the binary path, SAMPLES/DESIGNS to
+# resize the workload).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+SEGMUL="${SEGMUL:-target/release/segmul}"
+SAMPLES="${SAMPLES:-2000000}"
+DESIGNS="${DESIGNS:-paper}"
+WORK="$(mktemp -d)"
+trap 'rm -rf "$WORK"' EXIT
+
+sweep() {
+    "$SEGMUL" sweep --designs "$DESIGNS" --mc --samples "$SAMPLES" --seed 42 \
+        --deterministic-report "$@"
+}
+
+# Pull the "N evaluated" count out of a sweep summary line.
+evaluated() {
+    sed -n 's/.* s (\([0-9][0-9]*\) evaluated,.*/\1/p' "$1" | tail -n 1
+}
+
+echo "== reference: uninterrupted, no store, 2 workers =="
+sweep --workers 2 --results "$WORK/ref" | tee "$WORK/ref.log"
+
+echo "== victim: store-backed, SIGKILLed mid-grid =="
+STORE="$WORK/store"
+sweep --workers 2 --store "$STORE" --results "$WORK/victim" >"$WORK/victim.log" 2>&1 &
+VICTIM=$!
+blobs=0
+for _ in $(seq 1 300); do
+    blobs=$(find "$STORE/blobs" -name '*.json' 2>/dev/null | wc -l)
+    [ "$blobs" -ge 3 ] && break
+    kill -0 "$VICTIM" 2>/dev/null || break
+    sleep 0.1
+done
+if kill -9 "$VICTIM" 2>/dev/null; then
+    echo "SIGKILLed victim with $blobs results committed"
+else
+    echo "victim finished before the kill landed ($blobs results committed)"
+fi
+wait "$VICTIM" 2>/dev/null || true
+
+echo "== resume: same store, 7 workers =="
+sweep --workers 7 --store "$STORE" --resume --results "$WORK/resume" | tee "$WORK/resume.log"
+cmp "$WORK/ref/sweep.csv" "$WORK/resume/sweep.csv"
+cmp "$WORK/ref/BENCH_sweep.json" "$WORK/resume/BENCH_sweep.json"
+echo "PASS: resumed reports are byte-identical to the uninterrupted reference"
+
+echo "== sharded: two concurrent processes, disjoint shards, one store =="
+STORE2="$WORK/store2"
+sweep --workers 2 --store "$STORE2" --shard 0/2 --results "$WORK/shard0" \
+    >"$WORK/shard0.log" 2>&1 &
+SHARD0=$!
+sweep --workers 2 --store "$STORE2" --shard 1/2 --results "$WORK/shard1" | tee "$WORK/shard1.log"
+wait "$SHARD0"
+cat "$WORK/shard0.log"
+
+echo "== merge: same store, no shard — must be pure store hits =="
+sweep --workers 2 --store "$STORE2" --resume --results "$WORK/merge" | tee "$WORK/merge.log"
+cmp "$WORK/ref/sweep.csv" "$WORK/merge/sweep.csv"
+cmp "$WORK/ref/BENCH_sweep.json" "$WORK/merge/BENCH_sweep.json"
+
+ref_evals=$(evaluated "$WORK/ref.log")
+shard0_evals=$(evaluated "$WORK/shard0.log")
+shard1_evals=$(evaluated "$WORK/shard1.log")
+merge_evals=$(evaluated "$WORK/merge.log")
+echo "evaluations: reference=$ref_evals shard0=$shard0_evals shard1=$shard1_evals merge=$merge_evals"
+[ "$merge_evals" -eq 0 ] || { echo "FAIL: merge run re-evaluated $merge_evals jobs"; exit 1; }
+[ $((shard0_evals + shard1_evals)) -eq "$ref_evals" ] || {
+    echo "FAIL: shards evaluated $((shard0_evals + shard1_evals)) jobs, reference needed $ref_evals"
+    exit 1
+}
+echo "PASS: sharded runs merged to reference bytes with zero duplicate evaluations"

@@ -1,0 +1,76 @@
+//! Result-store answer latency: warm store hits vs fresh evaluation.
+//!
+//! A warm [`ResultStore`] turns a sweep point into a blob load + seal
+//! check instead of a Monte-Carlo evaluation. This bench measures the
+//! store-hit answer rate with the in-memory cache disabled (so every
+//! `run` goes to disk) and the wall-clock ratio of a cold evaluation to
+//! a warm store hit. Bit-identity between the evaluated and store-served
+//! results is asserted before anything is timed; the summary writes
+//! `BENCH_store.json` for the CI bench-regression gate.
+
+use std::path::{Path, PathBuf};
+
+use segmul::api::{BackendChoice, EvalJob, Session};
+use segmul::bench::{bench, section, speedup, throughput, Summary};
+use segmul::util::threadpool::default_workers;
+
+fn session(store: Option<&Path>, workers: usize) -> Session {
+    let mut builder = Session::builder()
+        .workers(workers)
+        .backend(BackendChoice::Cpu)
+        .cache(false); // measure the store path, not the in-memory cache
+    if let Some(dir) = store {
+        builder = builder.store(dir);
+    }
+    builder.build().expect("session startup")
+}
+
+fn main() {
+    let workers = default_workers().expect("invalid SEGMUL_WORKERS").max(2);
+    let job = EvalJob::mc(8, 3, true, 1 << 14, 42);
+    let dir: PathBuf = std::env::temp_dir().join(format!("segmul-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Populate the store once, then prove a fresh session answers the
+    // same job from disk bit-identically before timing anything.
+    let mut writer = session(Some(&dir), workers);
+    let evaluated = writer.run(&job).unwrap();
+    assert_eq!(writer.jobs_evaluated(), 1, "first run must evaluate");
+    drop(writer);
+    let mut warm = session(Some(&dir), workers);
+    let served = warm.run(&job).unwrap();
+    assert_eq!(warm.store_hits(), 1, "second session must answer from the store");
+    assert_eq!(evaluated.stats, served.stats, "store hit diverged from evaluation");
+
+    section(&format!("result store ({workers} workers, cache disabled)"));
+    let s_hit = bench("warm store hit (blob load + unseal)", Some(1.0), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= warm.run(&job).unwrap().stats.err_count;
+        }
+        acc
+    });
+    let mut cold = session(None, workers);
+    let s_eval = bench("cold evaluation (no store)", Some(1.0), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= cold.run(&job).unwrap().stats.err_count;
+        }
+        acc
+    });
+
+    let hits_per_s = throughput(&s_hit).unwrap_or(0.0);
+    let cold_vs_warm = speedup(&s_hit, &s_eval);
+    println!();
+    println!("store-hit answer rate                   : {hits_per_s:>10.0} answers/s");
+    println!("cold-vs-warm wall-clock ratio           : {cold_vs_warm:>9.2}x");
+    assert_eq!(warm.jobs_evaluated(), 0, "warm session must never re-evaluate");
+
+    let mut summary = Summary::new("store");
+    summary
+        .metric("store_hit_answers_per_s", hits_per_s)
+        .metric("store_cold_vs_warm_ratio", cold_vs_warm);
+    summary.write().expect("write bench summary");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

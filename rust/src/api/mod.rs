@@ -33,6 +33,12 @@
 //! * **Determinism**: results are bit-identical — order-sensitive f64
 //!   fields included — across worker counts and scheduling, inherited
 //!   from the coordinator's ordered merge.
+//! * **Persistence**: attach a content-addressed on-disk
+//!   [`ResultStore`] with [`SessionBuilder::store`] — committed results
+//!   answer later sessions, running jobs checkpoint per chunk so a
+//!   killed sweep resumes bit-identically, and per-key leases let N
+//!   processes shard one grid ([`Shard`]) with zero duplicate
+//!   evaluations.
 //!
 //! Machinery re-exports ([`EvalJob`], [`SweepGrid`], [`EvalService`],
 //! ...) come from [`crate::coordinator`]; reach into that module only
@@ -49,7 +55,8 @@ pub use session::{
 
 pub use crate::coordinator::{
     AnalyticMode, Answer, ChunkEvent, EvalBackend, EvalJob, EvalService, JobKey, JobResult,
-    SweepGrid, SweepOutcome, WorkSpec, WorkerPool,
+    Shard, SweepGrid, SweepOutcome, WorkSpec, WorkerPool,
 };
 pub use crate::error::analytic::{analytic_stats, AnalyticStats};
 pub use crate::multiplier::{DesignSet, DispatchClass, MultiplierSpec};
+pub use crate::store::{ResultStore, StoreKey, StoredResult, STORE_SCHEMA};

@@ -9,6 +9,7 @@ use crate::coordinator::{
     PjrtBackend, SweepGrid, SweepOutcome, SweepRunner,
 };
 use crate::multiplier::{DispatchClass, MultiplierSpec};
+use crate::store::ResultStore;
 use crate::util::threadpool::default_workers;
 
 use crate::error::SegmulError;
@@ -74,6 +75,12 @@ pub struct SessionTelemetry {
     /// Jobs answered from the analytic model registry — no pool
     /// dispatch, counted separately from `cache_hits`.
     pub analytic_answers: u64,
+    /// Jobs answered from a committed blob of the persistent result
+    /// store — no evaluation, counted separately from `cache_hits`.
+    pub store_hits: u64,
+    /// Store degradations recovered from: resumed or discarded chunk
+    /// journals and corrupt blobs demoted to re-evaluation.
+    pub store_recoveries: u64,
     pub pairs_evaluated: u64,
     /// Backend constructions since startup — stays at `workers` for the
     /// session's lifetime (the persistent-pool contract).
@@ -135,6 +142,8 @@ pub struct SessionBuilder {
     factory: Option<BackendFactory>,
     cache: bool,
     analytic: AnalyticMode,
+    store: Option<PathBuf>,
+    store_wait: Option<Duration>,
     seed: u64,
     progress: Option<ProgressCallback>,
 }
@@ -147,6 +156,8 @@ impl SessionBuilder {
             factory: None,
             cache: true,
             analytic: AnalyticMode::Off,
+            store: None,
+            store_wait: None,
             seed: 0,
             progress: None,
         }
@@ -194,6 +205,25 @@ impl SessionBuilder {
         self
     }
 
+    /// Attach a persistent on-disk result store rooted at `dir`
+    /// ([`crate::store::ResultStore`], opened at [`Self::build`]):
+    /// committed results answer future sessions without re-evaluation,
+    /// running jobs checkpoint per chunk so a killed sweep resumes
+    /// bit-identically (`segmul sweep --resume`), and per-key leases
+    /// keep cooperating processes (`--shard i/n`) from evaluating a key
+    /// twice.
+    pub fn store(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.store = Some(dir.into());
+        self
+    }
+
+    /// Bound the wait on another live process's store lease (default
+    /// 600 s); past it this session evaluates without exclusion.
+    pub fn store_wait(mut self, wait: Duration) -> Self {
+        self.store_wait = Some(wait);
+        self
+    }
+
     /// Default RNG seed applied to jobs built through [`Session::job`].
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
@@ -231,6 +261,12 @@ impl SessionBuilder {
             .map_err(|e| SegmulError::Backend(e.to_string()))?;
         runner.set_cache_enabled(self.cache);
         runner.set_analytic_mode(self.analytic);
+        if let Some(dir) = self.store {
+            runner.set_store(ResultStore::open(dir)?);
+        }
+        if let Some(wait) = self.store_wait {
+            runner.set_store_wait(wait);
+        }
         Ok(Session {
             runner,
             seed: self.seed,
@@ -308,6 +344,22 @@ impl Session {
         self.runner.analytic_answers
     }
 
+    /// Jobs answered from a committed blob of the persistent store.
+    pub fn store_hits(&self) -> u64 {
+        self.runner.store_hits
+    }
+
+    /// Store degradations recovered from (resumed / discarded journals,
+    /// corrupt blobs demoted to re-evaluation).
+    pub fn store_recoveries(&self) -> u64 {
+        self.runner.store_recoveries
+    }
+
+    /// The attached persistent store, if the builder configured one.
+    pub fn store(&self) -> Option<&ResultStore> {
+        self.runner.store()
+    }
+
     /// The configured answer-source policy.
     pub fn analytic_mode(&self) -> AnalyticMode {
         self.runner.analytic_mode()
@@ -325,6 +377,8 @@ impl Session {
             cache_hits: self.runner.cache_hits,
             jobs_evaluated: self.runner.jobs_evaluated,
             analytic_answers: self.runner.analytic_answers,
+            store_hits: self.runner.store_hits,
+            store_recoveries: self.runner.store_recoveries,
             pairs_evaluated: self.pairs_evaluated,
             backend_builds: self.backend_builds(),
             workers: self.workers(),
@@ -402,14 +456,16 @@ impl Session {
         Ok(outcome)
     }
 
-    /// Run a whole sweep grid in order through the shared cache/shard
-    /// path, calling `progress` once per completed point.
-    pub fn run_grid(
+    /// Run an explicit job list in order through the shared cache /
+    /// store / pool path, calling `progress` once per completed point —
+    /// the sharded path: each cooperating process runs its
+    /// [`crate::coordinator::Shard`] slice of the grid against the
+    /// shared store.
+    pub fn run_jobs(
         &mut self,
-        grid: &SweepGrid,
+        jobs: &[EvalJob],
         mut progress: impl FnMut(usize, usize, &SweepOutcome),
     ) -> Result<Vec<SweepOutcome>, SegmulError> {
-        let jobs = grid.jobs();
         let total = jobs.len();
         let mut out = Vec::with_capacity(total);
         for (i, job) in jobs.iter().enumerate() {
@@ -418,6 +474,16 @@ impl Session {
             out.push(outcome);
         }
         Ok(out)
+    }
+
+    /// Run a whole sweep grid in order ([`Self::run_jobs`] over
+    /// [`SweepGrid::jobs`]).
+    pub fn run_grid(
+        &mut self,
+        grid: &SweepGrid,
+        progress: impl FnMut(usize, usize, &SweepOutcome),
+    ) -> Result<Vec<SweepOutcome>, SegmulError> {
+        self.run_jobs(&grid.jobs(), progress)
     }
 }
 
@@ -508,6 +574,33 @@ mod tests {
         let outcome = s.run_outcome(&job).unwrap();
         assert_eq!(outcome.source(), "simulated");
         assert_eq!(s.analytic_answers(), 0);
+    }
+
+    #[test]
+    fn store_round_trips_results_across_sessions() {
+        let dir = std::env::temp_dir()
+            .join(format!("segmul-session-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut first = Session::builder().workers(2).seed(3).store(&dir).build().unwrap();
+        let job = first
+            .job(MultiplierSpec::Segmented { n: 8, t: 3, fix: true })
+            .monte_carlo(120_000)
+            .build()
+            .unwrap();
+        let a = first.run(&job).unwrap();
+        assert_eq!(first.jobs_evaluated(), 1);
+        assert_eq!(first.store_hits(), 0);
+        // A separate session (fresh pool, cold cache) over the same store
+        // answers from the committed blob, bit for bit, with zero
+        // evaluation.
+        let mut second = Session::builder().workers(1).seed(3).store(&dir).build().unwrap();
+        let b = second.run(&job).unwrap();
+        assert_eq!(second.jobs_evaluated(), 0);
+        assert_eq!(second.telemetry().store_hits, 1);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.stats.sum_red.to_bits(), b.stats.sum_red.to_bits());
+        assert_eq!(a.batches, b.batches);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

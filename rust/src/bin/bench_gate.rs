@@ -55,14 +55,19 @@ fn run() -> Result<bool> {
         bail!("baseline {} defines no metrics", baseline.display());
     }
 
-    let mut table = Table::new(&["metric", "baseline", "floor", "current", "status"]);
     let fmt = |v: f64| format!("{v:.3}");
+    let delta = |c: &GateCheck| match c.current {
+        Some(cur) if c.baseline != 0.0 => format!("{:+.1}%", (cur - c.baseline) / c.baseline * 100.0),
+        _ => "-".into(),
+    };
+    let mut table = Table::new(&["metric", "baseline", "floor", "current", "delta", "status"]);
     for c in &checks {
         table.row(vec![
             c.metric.clone(),
             fmt(c.baseline),
             if c.gated { fmt(c.floor) } else { "-".into() },
             c.current.map(fmt).unwrap_or_else(|| "MISSING".into()),
+            delta(c),
             match (c.gated, c.pass) {
                 (false, _) => "info".into(),
                 (true, true) => "ok".into(),
@@ -73,14 +78,29 @@ fn run() -> Result<bool> {
     println!("{}", table.to_text());
 
     let failures: Vec<&GateCheck> = checks.iter().filter(|c| !c.pass).collect();
-    for c in &failures {
-        match c.current {
-            Some(cur) => eprintln!(
-                "bench-gate: {} regressed: {cur:.3} < floor {:.3} (baseline {:.3})",
-                c.metric, c.floor, c.baseline
-            ),
-            None => eprintln!("bench-gate: {} missing from the current summaries", c.metric),
+    if !failures.is_empty() {
+        eprintln!(
+            "bench-gate: {} of {} gated metrics failed against baseline {}:",
+            failures.len(),
+            checks.iter().filter(|c| c.gated).count(),
+            baseline.display()
+        );
+        let mut failed = Table::new(&["metric", "current", "baseline", "delta", "floor"]);
+        for c in &failures {
+            failed.row(vec![
+                c.metric.clone(),
+                c.current.map(fmt).unwrap_or_else(|| "MISSING".into()),
+                fmt(c.baseline),
+                delta(*c),
+                fmt(c.floor),
+            ]);
         }
+        eprint!("{}", failed.to_text());
+        eprintln!(
+            "bench-gate: a metric fails when current < floor = baseline * (1 - tolerance) or is missing; \
+             refresh {} deliberately if the regression is intended",
+            baseline.display()
+        );
     }
     Ok(failures.is_empty())
 }

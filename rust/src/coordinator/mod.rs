@@ -30,8 +30,10 @@
 //!   executor; replaces per-job backend construction).
 //! * [`sweep`]       — design-space sweep orchestration over the paper
 //!   grid and the cross-design comparative grids, with a canonical
-//!   `(design, workload, seed)` result cache and an analytic
-//!   answer-source layer serving closed-form grid points in O(1).
+//!   `(design, workload, seed)` result cache, an analytic
+//!   answer-source layer serving closed-form grid points in O(1), and
+//!   an optional persistent [`crate::store::ResultStore`] making sweeps
+//!   checkpointed, resumable, and shardable across processes.
 //! * [`convergence`] — CI-based early stopping for adaptive jobs.
 //! * [`service`]     — the threaded job service: a pool of executor
 //!   threads owns the (non-Send) PJRT runtimes and schedules whole jobs
@@ -54,4 +56,4 @@ pub use job::{EvalJob, JobKey, JobResult, SpecKey, WorkSpec};
 pub use pool::WorkerPool;
 pub use service::{EvalService, ServiceTelemetry};
 pub use sharded::{run_job_sharded, ChunkEvent};
-pub use sweep::{AnalyticMode, Answer, SweepGrid, SweepOutcome, SweepRunner};
+pub use sweep::{AnalyticMode, Answer, Shard, SweepGrid, SweepOutcome, SweepRunner};

@@ -30,6 +30,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Result};
 
 use crate::error::metrics::ErrorStats;
+use crate::error::stream::OrderedMerger;
 use crate::error::SegmulError;
 use crate::multiplier::DispatchClass;
 
@@ -257,27 +258,75 @@ impl WorkerPool {
         job: &EvalJob,
         observer: &mut dyn FnMut(ChunkEvent),
     ) -> Result<JobResult> {
+        self.run_job_checkpointed(job, &[], observer, None)
+    }
+
+    /// [`Self::run_job_observed`] with checkpoint/restore.
+    ///
+    /// `resume` holds the in-order per-chunk stats recovered from a prior
+    /// run's chunk journal (entry `i` is chunk `i`). They are re-folded
+    /// through the same [`OrderedMerger`] — observer events and adaptive
+    /// convergence checks included, exactly as if the chunks had just
+    /// been evaluated — before anything is dispatched; the shared chunk
+    /// cursor then starts at the first unevaluated chunk. A job whose
+    /// prefix already covers the plan (or already satisfies the adaptive
+    /// stopping rule) completes without dispatching at all. The result is
+    /// therefore **bit-identical** — `sum_red`, `batches` accounting and
+    /// all — to an uninterrupted run of the same job.
+    ///
+    /// `sink` receives every *newly* merged chunk in chunk-id order at
+    /// the moment it folds into the prefix (the journaling hook; resumed
+    /// chunks are not re-reported — they are already checkpointed).
+    pub fn run_job_checkpointed(
+        &self,
+        job: &EvalJob,
+        resume: &[ErrorStats],
+        observer: &mut dyn FnMut(ChunkEvent),
+        sink: Option<&mut dyn FnMut(u64, &ErrorStats)>,
+    ) -> Result<JobResult> {
         self.preflight(job)?;
         let started = Instant::now();
         let plan = ChunkPlan::new(job, self.batch);
         let n_chunks = plan.n_chunks();
         let conv = plan.convergence();
-        let shared = Arc::new(ActiveJob {
-            job: job.clone(),
-            plan,
-            n_chunks,
-            next: AtomicU64::new(0),
-            stop: AtomicBool::new(false),
-        });
-        let (tx, rx) = channel::<(u64, Result<ErrorStats>)>();
-        for wtx in &self.txs {
-            // A worker gone mid-session surfaces as an incomplete merge
-            // below, not as a submit error.
-            let _ = wtx.send(Request::Run(shared.clone(), tx.clone()));
+        let mut merger = OrderedMerger::new(job.n());
+        let mut converged = false;
+        for stats in resume.iter().take(n_chunks as usize) {
+            merger.offer(merger.merged(), stats.clone());
+            let stepped = merger.step();
+            debug_assert!(stepped, "seeded chunks merge in order by construction");
+            observer(ChunkEvent {
+                merged: merger.merged(),
+                n_chunks,
+                samples: merger.prefix().count,
+            });
+            if let Some(c) = conv.as_ref() {
+                if c.converged(merger.prefix()) {
+                    converged = true;
+                    break;
+                }
+            }
         }
-        drop(tx); // workers hold the remaining senders
-        let (merger, converged) =
-            merge_chunk_stream(&rx, job.n(), n_chunks, conv.as_ref(), &shared.stop, observer)?;
+        if !converged && merger.merged() < n_chunks {
+            let shared = Arc::new(ActiveJob {
+                job: job.clone(),
+                plan,
+                n_chunks,
+                next: AtomicU64::new(merger.merged()),
+                stop: AtomicBool::new(false),
+            });
+            let (tx, rx) = channel::<(u64, Result<ErrorStats>)>();
+            for wtx in &self.txs {
+                // A worker gone mid-session surfaces as an incomplete
+                // merge below, not as a submit error.
+                let _ = wtx.send(Request::Run(shared.clone(), tx.clone()));
+            }
+            drop(tx); // workers hold the remaining senders
+            let (m, c) =
+                merge_chunk_stream(&rx, merger, n_chunks, conv.as_ref(), &shared.stop, observer, sink)?;
+            merger = m;
+            converged = c;
+        }
         let (stats, batches) = finish_merge(merger, n_chunks, converged)?;
         Ok(JobResult {
             job: job.clone(),
@@ -391,6 +440,34 @@ mod tests {
             assert_eq!(e.n_chunks, r.batches);
         }
         assert_eq!(events.last().unwrap().samples, 300_000);
+    }
+
+    #[test]
+    fn checkpointed_resume_is_bit_identical_from_any_prefix() {
+        let job = EvalJob::mc(8, 3, true, 300_000, 9);
+        let pool = WorkerPool::start(cpu_factory(), 2).unwrap();
+        let want = pool.run_job(&job).unwrap();
+        // Capture the per-chunk stream through the sink: it must arrive
+        // in chunk-id order, one call per folded chunk.
+        let mut chunks: Vec<ErrorStats> = Vec::new();
+        {
+            let mut sink = |id: u64, s: &ErrorStats| {
+                assert_eq!(id as usize, chunks.len(), "sink must run in chunk order");
+                chunks.push(s.clone());
+            };
+            pool.run_job_checkpointed(&job, &[], &mut |_| {}, Some(&mut sink)).unwrap();
+        }
+        assert_eq!(chunks.len() as u64, want.batches);
+        // Resuming from any journaled prefix — none, one chunk, half, or
+        // the whole plan (which dispatches nothing) — reproduces the
+        // uninterrupted result bit for bit.
+        for cut in [0usize, 1, chunks.len() / 2, chunks.len()] {
+            let got =
+                pool.run_job_checkpointed(&job, &chunks[..cut], &mut |_| {}, None).unwrap();
+            assert_eq!(got.stats, want.stats, "cut={cut}");
+            assert_eq!(got.stats.sum_red.to_bits(), want.stats.sum_red.to_bits(), "cut={cut}");
+            assert_eq!(got.batches, want.batches, "cut={cut}");
+        }
     }
 
     #[test]

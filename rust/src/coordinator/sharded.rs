@@ -58,6 +58,14 @@ pub struct ChunkEvent {
 /// plus whether the adaptive stopping rule fired (`false` for fixed
 /// workloads and for adaptive runs that exhausted their budget).
 ///
+/// `merger` is supplied by the caller so a checkpointed run can pre-seed
+/// it with journaled chunks (see `WorkerPool::run_job_checkpointed`);
+/// the stream then only carries chunk ids from the resumed cursor up.
+/// When `sink` is present it receives `(chunk_id, stats)` for every chunk
+/// **in merge (= chunk-id) order, at the moment it folds into the
+/// prefix** — the chunk-journal hook: a checkpoint written from here is
+/// always a valid in-order prefix, whatever instant the process dies.
+///
 /// Error parity with the sequential driver: a chunk's eval error only
 /// fails the job when the in-order prefix actually *needs* that chunk —
 /// an adaptive job that converges on earlier chunks returns Ok exactly as
@@ -65,19 +73,24 @@ pub struct ChunkEvent {
 /// sequential execution would hit first (lowest id) is the one reported.
 pub(crate) fn merge_chunk_stream(
     rx: &Receiver<(u64, Result<ErrorStats>)>,
-    n: u32,
+    mut merger: OrderedMerger,
     n_chunks: u64,
     conv: Option<&Convergence>,
     stop: &AtomicBool,
     observer: &mut dyn FnMut(ChunkEvent),
+    mut sink: Option<&mut dyn FnMut(u64, &ErrorStats)>,
 ) -> Result<(OrderedMerger, bool)> {
     enum Decision {
         Pending,
         Converged,
         Failed(anyhow::Error),
     }
-    let mut merger = OrderedMerger::new(n);
     let mut chunk_errs: std::collections::BTreeMap<u64, anyhow::Error> =
+        std::collections::BTreeMap::new();
+    // Side copies for the sink: the merger consumes stats on `step()`,
+    // so the journal hook keeps its own pending map (only when a sink is
+    // attached; one small clone per chunk).
+    let mut sink_pending: std::collections::BTreeMap<u64, ErrorStats> =
         std::collections::BTreeMap::new();
     let mut decision = Decision::Pending;
     while let Ok((id, r)) = rx.recv() {
@@ -88,7 +101,12 @@ pub(crate) fn merge_chunk_stream(
             Err(e) => {
                 chunk_errs.entry(id).or_insert(e);
             }
-            Ok(s) => merger.offer(id, s),
+            Ok(s) => {
+                if sink.is_some() {
+                    sink_pending.insert(id, s.clone());
+                }
+                merger.offer(id, s);
+            }
         }
         // Advance the prefix one chunk at a time so adaptive convergence
         // sees every prefix a sequential run would see, failing the
@@ -101,6 +119,12 @@ pub(crate) fn merge_chunk_stream(
             }
             if !merger.step() {
                 break;
+            }
+            let merged_id = merger.merged() - 1;
+            if let Some(sink) = sink.as_mut() {
+                if let Some(s) = sink_pending.remove(&merged_id) {
+                    sink(merged_id, &s);
+                }
             }
             observer(ChunkEvent {
                 merged: merger.merged(),
@@ -236,7 +260,15 @@ where
         }
         drop(tx); // workers hold the remaining senders
 
-        merge_chunk_stream(&rx, job.n(), n_chunks, conv.as_ref(), &stop, &mut |_| {})
+        merge_chunk_stream(
+            &rx,
+            OrderedMerger::new(job.n()),
+            n_chunks,
+            conv.as_ref(),
+            &stop,
+            &mut |_| {},
+            None,
+        )
     });
     let (merger, converged) = merged?;
     let (stats, batches) = finish_merge(merger, n_chunks, converged)?;

@@ -30,9 +30,10 @@ use anyhow::Result;
 
 use crate::config::Config;
 use crate::error::analytic::{analytic_stats, AnalyticStats};
-use crate::error::metrics::ErrorMetrics;
+use crate::error::metrics::{ErrorMetrics, ErrorStats};
 use crate::error::SegmulError;
 use crate::multiplier::DesignSet;
+use crate::store::{Claim, ResultStore, StoreKey, StoredResult};
 
 use super::backend::EvalBackend;
 use super::job::{EvalJob, JobKey, JobResult, WorkSpec};
@@ -74,6 +75,67 @@ impl AnalyticMode {
                 "unknown analytic mode {other:?} (auto|require|off)"
             ))),
         }
+    }
+}
+
+/// One process's slice of a sweep grid (CLI: `--shard i/n`).
+///
+/// Sharding assigns whole *canonical* job keys, not raw grid rows: the
+/// `j`-th distinct [`JobKey`] in grid order belongs to shard
+/// `j mod count`. Equivalent rows (the `t = 0` twins, the accurate
+/// baseline) therefore land in the same shard and dedup through that
+/// shard's cache instead of being evaluated once per shard — N
+/// cooperating processes evaluate every key exactly once between them,
+/// and the store-backed merge run folds their blobs with zero duplicate
+/// evaluations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    /// This process's shard index, `0 <= index < count`.
+    pub index: u32,
+    /// Total number of cooperating shards.
+    pub count: u32,
+}
+
+impl Shard {
+    /// Parse the CLI form `"i/n"` (e.g. `--shard 0/2`, `--shard 1/2`).
+    pub fn parse(s: &str) -> Result<Shard, SegmulError> {
+        let (i, n) = s
+            .trim()
+            .split_once('/')
+            .ok_or_else(|| SegmulError::config(format!("bad shard {s:?} (want i/n)")))?;
+        let index = i
+            .trim()
+            .parse::<u32>()
+            .map_err(|e| SegmulError::config(format!("bad shard index in {s:?}: {e}")))?;
+        let count = n
+            .trim()
+            .parse::<u32>()
+            .map_err(|e| SegmulError::config(format!("bad shard count in {s:?}: {e}")))?;
+        if count == 0 {
+            return Err(SegmulError::config(format!("bad shard {s:?}: count must be >= 1")));
+        }
+        if index >= count {
+            return Err(SegmulError::config(format!(
+                "bad shard {s:?}: index {index} must be < count {count}"
+            )));
+        }
+        Ok(Shard { index, count })
+    }
+
+    /// The subset of `jobs` owned by this shard, in original grid order.
+    pub fn select(&self, jobs: &[EvalJob]) -> Vec<EvalJob> {
+        let mut owner: HashMap<JobKey, u32> = HashMap::new();
+        let mut out = Vec::new();
+        for job in jobs {
+            // Deterministic: ownership follows first-appearance order of
+            // the canonical key, which is fixed by the grid itself.
+            let next = owner.len() as u32 % self.count;
+            let shard = *owner.entry(job.key()).or_insert(next);
+            if shard == self.index {
+                out.push(job.clone());
+            }
+        }
+        out
     }
 }
 
@@ -219,12 +281,22 @@ pub struct SweepRunner {
     cache_enabled: bool,
     cache: HashMap<JobKey, JobResult>,
     analytic: AnalyticMode,
+    /// The persistent result store, when attached ([`Self::set_store`]).
+    store: Option<ResultStore>,
+    /// How long to wait on another process's lease before evaluating
+    /// without exclusion (the duplicate is then deduped at blob commit).
+    store_wait: Duration,
     /// Jobs served from the cache (no evaluation).
     pub cache_hits: u64,
     /// Jobs actually evaluated.
     pub jobs_evaluated: u64,
     /// Jobs answered from the analytic registry (no dispatch, no cache).
     pub analytic_answers: u64,
+    /// Jobs answered from a committed store blob (no evaluation).
+    pub store_hits: u64,
+    /// Store degradations recovered from: resumed or discarded chunk
+    /// journals and unreadable blobs demoted to re-evaluation.
+    pub store_recoveries: u64,
 }
 
 impl SweepRunner {
@@ -239,9 +311,13 @@ impl SweepRunner {
             cache_enabled: true,
             cache: HashMap::new(),
             analytic: AnalyticMode::default(),
+            store: None,
+            store_wait: Duration::from_secs(600),
             cache_hits: 0,
             jobs_evaluated: 0,
             analytic_answers: 0,
+            store_hits: 0,
+            store_recoveries: 0,
         })
     }
 
@@ -266,6 +342,26 @@ impl SweepRunner {
 
     pub fn analytic_mode(&self) -> AnalyticMode {
         self.analytic
+    }
+
+    /// Attach a persistent result store: committed blobs answer before
+    /// the pool, chunk journals checkpoint every running job (so a
+    /// killed sweep resumes bit-identically), and per-key leases keep
+    /// cooperating processes from evaluating a key twice.
+    pub fn set_store(&mut self, store: ResultStore) {
+        self.store = Some(store);
+    }
+
+    /// The attached store, if any.
+    pub fn store(&self) -> Option<&ResultStore> {
+        self.store.as_ref()
+    }
+
+    /// Bound the wait on another live process's lease (default 600 s);
+    /// past it this process evaluates without exclusion — correct either
+    /// way, the lease only prevents duplicated work.
+    pub fn set_store_wait(&mut self, wait: Duration) {
+        self.store_wait = wait;
     }
 
     /// Evaluate one job, consulting the analytic registry and the cache
@@ -332,6 +428,9 @@ impl SweepRunner {
                 });
             }
         }
+        if self.store.is_some() {
+            return self.run_via_store(job, key, observer);
+        }
         let result = self.pool.run_job_observed(job, observer)?;
         self.jobs_evaluated += 1;
         if self.cache_enabled {
@@ -340,14 +439,130 @@ impl SweepRunner {
         Ok(SweepOutcome { job: job.clone(), answer: Answer::Simulated(result), cached: false })
     }
 
-    /// Run a whole grid in order, streaming progress through `progress`
-    /// (called once per completed point with `(index, total, outcome)`).
-    pub fn run_grid(
+    /// Load the committed blob for `skey`, degrading any corruption
+    /// (truncation, bit flip, schema or key mismatch — a typed
+    /// [`SegmulError::Store`]) to a counted miss: the job re-evaluates
+    /// and the store can never serve a silently wrong answer.
+    fn store_probe(&mut self, skey: &StoreKey) -> Option<StoredResult> {
+        match self.store.as_ref()?.load(skey) {
+            Ok(hit) => hit,
+            Err(e) => {
+                eprintln!("warning: {e}; treating the entry as a miss and re-evaluating");
+                self.store_recoveries += 1;
+                None
+            }
+        }
+    }
+
+    /// Present a committed store blob as this runner's answer. It seeds
+    /// the in-memory cache (so canonical twins of the key still register
+    /// as `cached`, keeping cache accounting identical to an
+    /// uninterrupted run) but itself reports `cached: false` — a store
+    /// hit *is* the persisted evaluation, not a repeat of one.
+    fn outcome_from_store(&mut self, job: &EvalJob, key: JobKey, hit: StoredResult) -> SweepOutcome {
+        let result = JobResult {
+            job: job.clone(),
+            stats: hit.stats,
+            // Sound: the backend name is part of the store key, so the
+            // blob was produced by a backend of this very name.
+            backend: self.pool.backend_name(),
+            wall: hit.wall,
+            batches: hit.batches,
+        };
+        if self.cache_enabled {
+            self.cache.insert(key, result.clone());
+        }
+        SweepOutcome { job: job.clone(), answer: Answer::Simulated(result), cached: false }
+    }
+
+    /// The store-backed evaluation path: blob fast path, per-key lease,
+    /// journal-checkpointed (and journal-resumed) pool run, atomic blob
+    /// commit.
+    fn run_via_store(
         &mut self,
-        grid: &SweepGrid,
+        job: &EvalJob,
+        key: JobKey,
+        observer: &mut dyn FnMut(ChunkEvent),
+    ) -> Result<SweepOutcome> {
+        let skey = StoreKey::new(job, self.pool.backend_name(), self.pool.batch());
+        // Fast path: a previously committed blob answers without pool
+        // dispatch (and without the lease).
+        if let Some(hit) = self.store_probe(&skey) {
+            self.store_hits += 1;
+            return Ok(self.outcome_from_store(job, key, hit));
+        }
+        // Claim the key's lease; while another live process holds it,
+        // poll for that process's commit instead of duplicating the
+        // evaluation.
+        let deadline = Instant::now() + self.store_wait;
+        let mut guard = None;
+        loop {
+            match self.store.as_ref().expect("store-backed path").claim(&skey) {
+                Ok(Claim::Acquired(g)) => {
+                    guard = Some(g);
+                    break;
+                }
+                Ok(Claim::Busy) => {
+                    if let Some(hit) = self.store_probe(&skey) {
+                        self.store_hits += 1;
+                        return Ok(self.outcome_from_store(job, key, hit));
+                    }
+                    if Instant::now() >= deadline {
+                        eprintln!(
+                            "warning: lease wait for key {} expired; evaluating without exclusion",
+                            skey.address()
+                        );
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => {
+                    eprintln!("warning: lease unavailable ({e}); evaluating without exclusion");
+                    break;
+                }
+            }
+        }
+        // Resume from the key's checkpointed chunk prefix (empty for a
+        // fresh key) and journal every newly merged chunk, in merge
+        // order, behind the cursor.
+        let store = self.store.as_ref().expect("store-backed path");
+        let journal = store.recover_journal(&skey);
+        if !journal.chunks.is_empty() || journal.discarded_bytes > 0 {
+            self.store_recoveries += 1;
+        }
+        let mut writer = match store.journal_writer(&skey, journal.valid_len) {
+            Ok(w) => Some(w),
+            Err(e) => {
+                eprintln!("warning: run will not checkpoint: {e}");
+                None
+            }
+        };
+        let mut sink = |chunk_id: u64, stats: &ErrorStats| {
+            if let Some(w) = writer.as_mut() {
+                w.append(chunk_id, stats);
+            }
+        };
+        let result = self.pool.run_job_checkpointed(job, &journal.chunks, observer, Some(&mut sink))?;
+        self.jobs_evaluated += 1;
+        if let Err(e) = store.commit(&skey, &result) {
+            eprintln!("warning: {e}; result stays correct but was not persisted");
+        }
+        drop(guard);
+        if self.cache_enabled {
+            self.cache.insert(key, result.clone());
+        }
+        Ok(SweepOutcome { job: job.clone(), answer: Answer::Simulated(result), cached: false })
+    }
+
+    /// Run an explicit job list in order, streaming progress through
+    /// `progress` (called once per completed point with
+    /// `(index, total, outcome)`). This is the grid path and the sharded
+    /// path — each cooperating process runs its [`Shard::select`] slice.
+    pub fn run_jobs(
+        &mut self,
+        jobs: &[EvalJob],
         mut progress: impl FnMut(usize, usize, &SweepOutcome),
     ) -> Result<Vec<SweepOutcome>> {
-        let jobs = grid.jobs();
         let total = jobs.len();
         let mut out = Vec::with_capacity(total);
         for (i, job) in jobs.iter().enumerate() {
@@ -356,6 +571,15 @@ impl SweepRunner {
             out.push(outcome);
         }
         Ok(out)
+    }
+
+    /// Run a whole grid in order ([`Self::run_jobs`] over [`SweepGrid::jobs`]).
+    pub fn run_grid(
+        &mut self,
+        grid: &SweepGrid,
+        progress: impl FnMut(usize, usize, &SweepOutcome),
+    ) -> Result<Vec<SweepOutcome>> {
+        self.run_jobs(&grid.jobs(), progress)
     }
 }
 
@@ -526,6 +750,78 @@ mod tests {
         let mut runner = SweepRunner::new(cpu_factory(), 2).unwrap();
         runner.run_grid(&tiny_grid(), |_, _, _| {}).unwrap();
         assert_eq!(runner.pool().backend_builds(), 2, "one build per worker, ever");
+    }
+
+    #[test]
+    fn shard_parsing() {
+        assert_eq!(Shard::parse("0/2").unwrap(), Shard { index: 0, count: 2 });
+        assert_eq!(Shard::parse(" 1/2 ").unwrap(), Shard { index: 1, count: 2 });
+        assert_eq!(Shard::parse("0/1").unwrap(), Shard { index: 0, count: 1 });
+        for bad in ["", "1", "2/2", "3/2", "-1/2", "0/0", "a/b", "1/2/3"] {
+            assert_eq!(Shard::parse(bad).unwrap_err().kind(), "config", "{bad}");
+        }
+    }
+
+    #[test]
+    fn shards_partition_canonical_keys_exactly() {
+        let grid = tiny_grid();
+        let jobs = grid.jobs();
+        for count in [1u32, 2, 3, 7] {
+            let mut seen: HashMap<JobKey, u32> = HashMap::new();
+            let mut total = 0usize;
+            for index in 0..count {
+                let slice = Shard { index, count }.select(&jobs);
+                total += slice.len();
+                for job in &slice {
+                    // A canonical key never appears in two shards: the
+                    // t=0 twins travel together, so no key is ever
+                    // evaluated by two cooperating processes.
+                    let owner = seen.entry(job.key()).or_insert(index);
+                    assert_eq!(*owner, index, "count={count} key in two shards");
+                }
+            }
+            // Every grid row lands in exactly one shard.
+            assert_eq!(total, jobs.len(), "count={count}");
+            let distinct: std::collections::HashSet<_> =
+                jobs.iter().map(|j| j.key()).collect();
+            assert_eq!(seen.len(), distinct.len(), "count={count}");
+        }
+        // One shard is the whole grid, in order.
+        let all = Shard { index: 0, count: 1 }.select(&jobs);
+        assert_eq!(all.len(), jobs.len());
+    }
+
+    #[test]
+    fn store_serves_committed_results_across_runners() {
+        let dir =
+            std::env::temp_dir().join(format!("segmul-sweep-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let job = EvalJob::mc(8, 4, true, 120_000, 5);
+        let mut first = SweepRunner::new(cpu_factory(), 2).unwrap();
+        first.set_store(ResultStore::open(&dir).unwrap());
+        let a = first.run(&job).unwrap();
+        assert_eq!(first.jobs_evaluated, 1);
+        assert_eq!(first.store_hits, 0);
+        // A brand-new runner (cold in-memory cache) answers from the
+        // committed blob without touching the pool.
+        let mut second = SweepRunner::new(cpu_factory(), 3).unwrap();
+        second.set_store(ResultStore::open(&dir).unwrap());
+        let b = second.run(&job).unwrap();
+        assert_eq!(second.jobs_evaluated, 0);
+        assert_eq!(second.store_hits, 1);
+        assert!(!b.cached, "store hits present as fresh answers");
+        assert_eq!(a.result().unwrap().stats, b.result().unwrap().stats);
+        assert_eq!(
+            a.result().unwrap().stats.sum_red.to_bits(),
+            b.result().unwrap().stats.sum_red.to_bits()
+        );
+        // The store hit seeded the in-memory cache, so a repeat is a
+        // cache hit — cache accounting stays identical to an
+        // uninterrupted run.
+        let c = second.run(&job).unwrap();
+        assert!(c.cached);
+        assert_eq!(second.cache_hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -45,6 +45,16 @@ pub enum SegmulError {
     /// deriving `ErrorMetrics` from zero accumulated samples, which would
     /// otherwise silently poison merged sweep rows with NaN/∞).
     Stats(String),
+    /// A persistent-result-store failure (`crate::store`): an unreadable
+    /// store directory, or a blob that is truncated, bit-flipped, schema-
+    /// mismatched, or keyed to a different job. Consumers treat a `Store`
+    /// error on load as a miss and re-evaluate — corruption must never
+    /// become a silent wrong answer.
+    Store {
+        /// The offending store path (directory or blob), display form.
+        path: String,
+        reason: String,
+    },
     /// Report / persistence I/O failure.
     Io(String),
 }
@@ -74,6 +84,10 @@ impl SegmulError {
         SegmulError::Stats(msg.into())
     }
 
+    pub fn store(path: impl Into<String>, reason: impl Into<String>) -> Self {
+        SegmulError::Store { path: path.into(), reason: reason.into() }
+    }
+
     /// Short class tag (stable across message rewording).
     pub fn kind(&self) -> &'static str {
         match self {
@@ -84,6 +98,7 @@ impl SegmulError {
             SegmulError::Backend(_) => "backend",
             SegmulError::Eval(_) => "eval",
             SegmulError::Stats(_) => "stats",
+            SegmulError::Store { .. } => "store",
             SegmulError::Io(_) => "io",
         }
     }
@@ -103,6 +118,9 @@ impl fmt::Display for SegmulError {
             SegmulError::Backend(m) => write!(f, "backend error: {m}"),
             SegmulError::Eval(m) => write!(f, "evaluation error: {m}"),
             SegmulError::Stats(m) => write!(f, "statistics error: {m}"),
+            SegmulError::Store { path, reason } => {
+                write!(f, "result store error at {path}: {reason}")
+            }
             SegmulError::Io(m) => write!(f, "io error: {m}"),
         }
     }
@@ -148,6 +166,10 @@ mod tests {
         assert!(e.to_string().contains("statistics"));
         assert!(e.to_string().contains("no samples"));
         assert_eq!(e.kind(), "stats");
+        let e = SegmulError::store("store/blobs/ab.json", "integrity check mismatch");
+        assert!(e.to_string().contains("store/blobs/ab.json"));
+        assert!(e.to_string().contains("integrity"));
+        assert_eq!(e.kind(), "store");
     }
 
     #[test]

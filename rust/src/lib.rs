@@ -35,5 +35,6 @@ pub mod multiplier;
 pub mod netlist;
 pub mod report;
 pub mod runtime;
+pub mod store;
 pub mod tech;
 pub mod util;

@@ -28,7 +28,7 @@ use anyhow::{bail, Result};
 
 use segmul::api::{
     analytic_stats, AnalyticMode, BackendChoice, DesignSet, EvalJob, JobResult, MultiplierSpec,
-    Session, SweepGrid,
+    Session, Shard, SweepGrid,
 };
 use segmul::config::Config;
 use segmul::error::probprop;
@@ -111,13 +111,17 @@ fn make_session(
     cfg: &Config,
     workers: usize,
     analytic: AnalyticMode,
+    store: Option<PathBuf>,
 ) -> Result<Session> {
-    Ok(Session::builder()
+    let mut builder = Session::builder()
         .workers(workers)
         .backend(choice)
         .seed(cfg.seed)
-        .analytic(analytic)
-        .build()?)
+        .analytic(analytic);
+    if let Some(dir) = store {
+        builder = builder.store(dir);
+    }
+    Ok(builder.build()?)
 }
 
 fn job_from_args(args: &Args, cfg: &Config, session: &Session, n: u32, t: u32) -> Result<EvalJob> {
@@ -162,7 +166,7 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let t = args.opt_u32("t")?.unwrap_or(n / 2);
     let workers = workers_from(args, &cfg)?;
     let mut session =
-        make_session(backend_choice(args, &cfg)?, &cfg, workers, AnalyticMode::Off)?;
+        make_session(backend_choice(args, &cfg)?, &cfg, workers, AnalyticMode::Off, None)?;
     let job = job_from_args(args, &cfg, &session, n, t)?;
     let result = session.run(&job)?;
     print_metrics(&job, &result)?;
@@ -193,6 +197,24 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         Some(s) => AnalyticMode::parse(s)?,
         None => AnalyticMode::Off,
     };
+    let store_dir = args.opt("store").map(PathBuf::from);
+    let resume = args.flag("resume");
+    let shard = match args.opt("shard") {
+        Some(s) => Some(Shard::parse(s)?),
+        None => None,
+    };
+    let deterministic = args.flag("deterministic-report");
+    if resume {
+        let Some(dir) = &store_dir else {
+            bail!("--resume requires --store DIR (the store holds the checkpoints to resume from)");
+        };
+        if !dir.is_dir() {
+            bail!("--resume: store {dir:?} does not exist — nothing to resume (drop --resume for a fresh run)");
+        }
+    }
+    if shard.is_some() && store_dir.is_none() {
+        bail!("--shard requires --store DIR (shards coordinate through the shared store)");
+    }
     // Mirror of the runner's answer-source policy, usable before the
     // session exists: will this grid point be served analytically?
     let analytic_serves = |job: &EvalJob| match analytic {
@@ -248,19 +270,39 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             choice = BackendChoice::Cpu;
         }
     }
-    let mut session = make_session(choice, &cfg, workers, analytic)?;
-    let total = grid.jobs().len();
+    let mut session = make_session(choice, &cfg, workers, analytic, store_dir.clone())?;
+    let all_jobs = grid.jobs();
+    let jobs = match shard {
+        Some(s) => s.select(&all_jobs),
+        None => all_jobs.clone(),
+    };
+    let total = jobs.len();
     println!(
         "sweep: {} configs over n ∈ {:?}, designs={} ({} workers, seed {}, analytic {})",
-        total,
+        all_jobs.len(),
         grid.bitwidths,
         grid.designs.name(),
         session.workers(),
         grid.seed,
         analytic.name()
     );
+    if let Some(s) = shard {
+        println!(
+            "shard {}/{}: this process owns {} of {} grid configs (disjoint by canonical job key)",
+            s.index,
+            s.count,
+            total,
+            all_jobs.len()
+        );
+    }
+    if let Some(dir) = &store_dir {
+        println!(
+            "store: {dir:?} ({})",
+            if resume { "resuming from committed results and chunk checkpoints" } else { "persisting results" }
+        );
+    }
     let started = std::time::Instant::now();
-    let outcomes = session.run_grid(&grid, |i, total, o| {
+    let outcomes = session.run_jobs(&jobs, |i, total, o| {
         let Ok(m) = o.metrics() else { return };
         println!(
             "  [{:>3}/{total}] {:<24} {:>10} samples  ER={:.6}  MED={:<12.4} {}",
@@ -277,13 +319,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         );
     })?;
     let wall = started.elapsed();
-    println!("\n{}", report::sweep::sweep_table(&outcomes)?.to_text());
+    println!("\n{}", report::sweep::sweep_table(&outcomes, deterministic)?.to_text());
     let telemetry = session.telemetry();
     let info = report::sweep::SweepRunInfo {
         workers: session.workers(),
         cache_hits: session.cache_hits(),
         jobs_evaluated: session.jobs_evaluated(),
         analytic_answers: session.analytic_answers(),
+        store_hits: session.store_hits(),
+        deterministic,
         wall,
         backend: session.backend_name().to_string(),
         kernel_dispatch: telemetry
@@ -294,10 +338,11 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
     let (csv_path, json_path) = report::sweep::write_sweep_reports(&cfg.results_dir, &outcomes, &info)?;
     println!(
-        "{} configs in {:.2} s ({} evaluated, {} cache hits, {} analytic, {} workers, {} backend builds)",
+        "{} configs in {:.2} s ({} evaluated, {} store hits, {} cache hits, {} analytic, {} workers, {} backend builds)",
         total,
         wall.as_secs_f64(),
         session.jobs_evaluated(),
+        session.store_hits(),
         session.cache_hits(),
         session.analytic_answers(),
         session.workers(),
@@ -556,11 +601,17 @@ fn usage() -> &'static str {
   eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
   sweep    [--n N] [--mc] [--designs paper|accurate|baselines|oracle|netlist|all]
            [--workers W] [--samples S] [--seed S] [--results DIR] [--require-pjrt]
-           [--analytic off|auto|require]
+           [--analytic off|auto|require] [--store DIR] [--resume] [--shard I/N]
+           [--deterministic-report]
            (no --n: full configured grid; writes sweep.csv + BENCH_sweep.json;
             --require-pjrt fails unless every design ran via a lowered PJRT module;
             --analytic auto serves exact closed-form designs in O(1) without
-            simulation, require answers the whole grid analytically or fails)
+            simulation, require answers the whole grid analytically or fails;
+            --store persists results + per-chunk checkpoints so a killed sweep
+            resumes bit-identically with --resume; --shard I/N claims a disjoint
+            slice of the grid so N processes share one store with zero duplicate
+            evaluations; --deterministic-report omits wall-clock fields so
+            reports byte-compare across runs)
   lower    [--n N] [--designs SET] [--batch B] [--artifacts DIR]
            (emit lowered PJRT modules; default: the full sweep grid, batch 8192)
   hw       --n N [--t T] [--hw-vectors V]

@@ -25,10 +25,13 @@ fn workload_name(spec: &WorkSpec) -> &'static str {
 /// `fix` columns are the segmented-family configuration axes; designs
 /// without them (baselines, accurate) carry `-`. The `source` column
 /// distinguishes `simulated` rows from O(1) `analytic` answers (which
-/// carry no throughput or per-bit BER — rendered `-`). Errs (typed
-/// `Stats`, surfaced through anyhow) only on an empty accumulator, which
-/// the drivers never produce.
-pub fn sweep_table(outcomes: &[SweepOutcome]) -> Result<Table> {
+/// carry no throughput or per-bit BER — rendered `-`). With
+/// `deterministic` set every timing-derived cell renders `-`, so two
+/// runs producing the same statistics produce byte-identical CSVs (the
+/// resume gauntlet's compare surface). Errs (typed `Stats`, surfaced
+/// through anyhow) only on an empty accumulator, which the drivers never
+/// produce.
+pub fn sweep_table(outcomes: &[SweepOutcome], deterministic: bool) -> Result<Table> {
     let mut table = Table::new(&[
         "design",
         "n",
@@ -63,8 +66,8 @@ pub fn sweep_table(outcomes: &[SweepOutcome]) -> Result<Table> {
             f(m.mred),
             if mean_ber.is_nan() { "-".into() } else { f(mean_ber) },
             match o.result() {
-                Some(r) => f(r.throughput() / 1e6),
-                None => "-".into(),
+                Some(r) if !deterministic => f(r.throughput() / 1e6),
+                _ => "-".into(),
             },
             o.cached.to_string(),
             o.source().to_string(),
@@ -81,12 +84,22 @@ pub struct SweepRunInfo {
     /// Grid points served by closed-form analytic models instead of
     /// simulation (counted separately from `cache_hits`).
     pub analytic_answers: u64,
+    /// Grid points answered from the persistent result store's committed
+    /// blobs (counted separately from `cache_hits`).
+    pub store_hits: u64,
     pub wall: Duration,
     pub backend: String,
     /// Kernel-dispatch audit: `(design name, dispatch class name)` per
     /// evaluated design (`batched` / `pjrt` / `scalar`), so the shipped
     /// `BENCH_sweep.json` itself proves which tier every design ran on.
     pub kernel_dispatch: Vec<(String, String)>,
+    /// Deterministic-report mode (`--deterministic-report`): drop every
+    /// field that depends on timing or on *where* answers came from
+    /// (wall clocks, throughput, evaluated/hit counters, dispatch audit,
+    /// worker count), keeping only the statistics surface — so an
+    /// uninterrupted run, a kill-and-resume run, and an N-process
+    /// sharded merge over the same grid emit **byte-identical** reports.
+    pub deterministic: bool,
 }
 
 /// Build the `BENCH_sweep.json` document: run totals (what the CI gate
@@ -127,38 +140,48 @@ pub fn sweep_json(outcomes: &[SweepOutcome], info: &SweepRunInfo) -> Result<Json
             ("mred", Json::from(m.mred)),
             // Analytic answers carry no per-bit BER accumulator: null.
             ("mean_ber", if mean_ber.is_nan() { Json::Null } else { Json::from(mean_ber) }),
-            ("wall_s", Json::from(o.wall().as_secs_f64())),
-            ("cached", Json::from(o.cached)),
-            ("source", Json::from(o.source())),
         ]);
+        if !info.deterministic {
+            fields.push(("wall_s", Json::from(o.wall().as_secs_f64())));
+        }
+        fields.push(("cached", Json::from(o.cached)));
+        fields.push(("source", Json::from(o.source())));
         results.push(obj(fields));
     }
-    let dispatch: std::collections::BTreeMap<String, Json> = info
-        .kernel_dispatch
-        .iter()
-        .map(|(design, class)| (design.clone(), Json::from(class.as_str())))
-        .collect();
-    Ok(obj(vec![
+    let mut doc = vec![
         ("bench", Json::from("sweep")),
         ("backend", Json::from(info.backend.as_str())),
-        ("kernel_dispatch", Json::Obj(dispatch)),
-        ("workers", Json::from(info.workers as u64)),
         ("configs", Json::from(outcomes.len() as u64)),
-        ("jobs_evaluated", Json::from(info.jobs_evaluated)),
         ("cache_hits", Json::from(info.cache_hits)),
         ("analytic_answers", Json::from(info.analytic_answers)),
         ("pairs_evaluated", Json::from(pairs)),
-        ("wall_s", Json::from(wall)),
-        ("eval_busy_s", Json::from(busy)),
-        (
-            "metrics",
-            obj(vec![(
-                "sweep_mpairs_per_s",
-                Json::from(pairs as f64 / wall.max(1e-9) / 1e6),
-            )]),
-        ),
-        ("results", Json::Arr(results)),
-    ]))
+    ];
+    if info.deterministic {
+        doc.push(("deterministic", Json::from(true)));
+    } else {
+        let dispatch: std::collections::BTreeMap<String, Json> = info
+            .kernel_dispatch
+            .iter()
+            .map(|(design, class)| (design.clone(), Json::from(class.as_str())))
+            .collect();
+        doc.extend([
+            ("kernel_dispatch", Json::Obj(dispatch)),
+            ("workers", Json::from(info.workers as u64)),
+            ("jobs_evaluated", Json::from(info.jobs_evaluated)),
+            ("store_hits", Json::from(info.store_hits)),
+            ("wall_s", Json::from(wall)),
+            ("eval_busy_s", Json::from(busy)),
+            (
+                "metrics",
+                obj(vec![(
+                    "sweep_mpairs_per_s",
+                    Json::from(pairs as f64 / wall.max(1e-9) / 1e6),
+                )]),
+            ),
+        ]);
+    }
+    doc.push(("results", Json::Arr(results)));
+    Ok(obj(doc))
 }
 
 /// Write `sweep.csv` and `BENCH_sweep.json` into `results_dir`; returns
@@ -170,7 +193,7 @@ pub fn write_sweep_reports(
 ) -> Result<(PathBuf, PathBuf)> {
     std::fs::create_dir_all(results_dir)?;
     let csv_path = results_dir.join("sweep.csv");
-    sweep_table(outcomes)?.write(&csv_path)?;
+    sweep_table(outcomes, info.deterministic)?.write(&csv_path)?;
     let json_path = results_dir.join("BENCH_sweep.json");
     std::fs::write(&json_path, sweep_json(outcomes, info)?.to_string_pretty())?;
     Ok((csv_path, json_path))
@@ -199,6 +222,7 @@ mod tests {
             cache_hits: runner.cache_hits,
             jobs_evaluated: runner.jobs_evaluated,
             analytic_answers: runner.analytic_answers,
+            store_hits: runner.store_hits,
             wall: Duration::from_millis(10),
             backend: "cpu".into(),
             kernel_dispatch: runner
@@ -207,6 +231,7 @@ mod tests {
                 .into_iter()
                 .map(|(design, class)| (design, class.name().to_string()))
                 .collect(),
+            deterministic: false,
         };
         (outs, info)
     }
@@ -214,7 +239,7 @@ mod tests {
     #[test]
     fn table_has_one_row_per_config() {
         let (outs, _) = outcomes();
-        let table = sweep_table(&outs).unwrap();
+        let table = sweep_table(&outs, false).unwrap();
         assert_eq!(table.rows.len(), outs.len());
         assert_eq!(table.header.len(), table.rows[0].len());
         // Simulated rows carry the simulated source tag.
@@ -296,12 +321,14 @@ mod tests {
             cache_hits: runner.cache_hits,
             jobs_evaluated: runner.jobs_evaluated,
             analytic_answers: runner.analytic_answers,
+            store_hits: runner.store_hits,
             wall: Duration::from_millis(10),
             backend: "cpu".into(),
             kernel_dispatch: vec![],
+            deterministic: false,
         };
         assert!(info.analytic_answers > 0);
-        let table = sweep_table(&outs).unwrap();
+        let table = sweep_table(&outs, false).unwrap();
         let src = table.header.iter().position(|h| h == "source").unwrap();
         let tput = table.header.iter().position(|h| h == "mpairs_per_s").unwrap();
         let ber = table.header.iter().position(|h| h == "mean_ber").unwrap();
@@ -327,6 +354,33 @@ mod tests {
             assert!(matches!(r.get("mean_ber"), Some(Json::Null)));
             assert!(r.get("er").unwrap().as_f64().is_some());
         }
+    }
+
+    #[test]
+    fn deterministic_reports_omit_volatile_fields() {
+        let (outs, mut info) = outcomes();
+        info.deterministic = true;
+        // CSV: the throughput column is the only timing-derived cell.
+        let table = sweep_table(&outs, true).unwrap();
+        let tput = table.header.iter().position(|h| h == "mpairs_per_s").unwrap();
+        assert!(table.rows.iter().all(|r| r[tput] == "-"));
+        // JSON: everything timing- or provenance-dependent is gone...
+        let j = sweep_json(&outs, &info).unwrap();
+        for volatile in
+            ["wall_s", "eval_busy_s", "jobs_evaluated", "store_hits", "kernel_dispatch", "workers", "metrics"]
+        {
+            assert!(j.get(volatile).is_none(), "{volatile} must be omitted");
+        }
+        assert_eq!(j.get("deterministic").and_then(Json::as_bool), Some(true));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert!(results.iter().all(|r| r.get("wall_s").is_none()));
+        // ...while the statistics surface stays intact and stable.
+        assert_eq!(j.get("configs").unwrap().as_u64(), Some(outs.len() as u64));
+        assert!(j.get("cache_hits").is_some());
+        assert!(j.get("pairs_evaluated").is_some());
+        assert!(results.iter().all(|r| r.get("er").is_some() && r.get("cached").is_some()));
+        // Byte determinism of the rendering itself: serialize twice.
+        assert_eq!(j.to_string_pretty(), sweep_json(&outs, &info).unwrap().to_string_pretty());
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Blob encoding: one committed job result per store key, self-checking.
+//!
+//! A blob is a JSON object carrying the schema version, the full
+//! canonical key string, the exact [`ErrorStats`], the accounting fields
+//! (`batches`, wall time in nanoseconds), and an FNV-1a integrity hash
+//! over the canonical compact serialization of everything else. Exactness
+//! rules: the JSON codec's only number type is f64, so every u64/i128/
+//! u128 field is encoded as a decimal string and `sum_red` is persisted
+//! as the hex of its IEEE-754 bit pattern — a loaded blob reproduces the
+//! original statistics *bit for bit*, which is what makes store-served
+//! sweep rows byte-identical to evaluated ones.
+//!
+//! Decoding is strict: parse failure (truncation), integrity mismatch
+//! (bit flips), schema mismatch, and key mismatch (an address collision
+//! or a tampered file) are all errors — the caller falls back to
+//! re-evaluation, never to a silently wrong answer.
+
+use std::time::Duration;
+
+use crate::coordinator::JobResult;
+use crate::error::metrics::ErrorStats;
+use crate::util::json::{obj, Json};
+
+use super::{fnv1a64, StoreKey, STORE_SCHEMA};
+
+/// A blob's payload: everything needed to reconstruct a
+/// [`JobResult`] (the backend tag is implied by the key, which pins the
+/// backend name; the job itself is supplied by the requester).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StoredResult {
+    pub stats: ErrorStats,
+    /// Backend batch executions performed by the original run.
+    pub batches: u64,
+    /// Wall time of the original run (exact nanoseconds).
+    pub wall: Duration,
+}
+
+/// Exact JSON image of an [`ErrorStats`] (shared by blobs and journal
+/// lines).
+pub(crate) fn stats_to_json(s: &ErrorStats) -> Json {
+    obj(vec![
+        ("approx_sums", Json::from(s.approx_sums)),
+        ("bitflips", Json::Arr(s.bitflips.iter().map(|f| Json::Str(f.to_string())).collect())),
+        ("count", Json::Str(s.count.to_string())),
+        ("err_count", Json::Str(s.err_count.to_string())),
+        ("max_abs_ed", Json::Str(s.max_abs_ed.to_string())),
+        ("n", Json::from(s.n as u64)),
+        ("sum_abs_ed", Json::Str(s.sum_abs_ed.to_string())),
+        ("sum_ed", Json::Str(s.sum_ed.to_string())),
+        ("sum_red_bits", Json::Str(format!("{:016x}", s.sum_red.to_bits()))),
+    ])
+}
+
+/// Strict inverse of [`stats_to_json`]. The error is a plain reason
+/// string; callers wrap it into [`crate::error::SegmulError::Store`] with
+/// the offending path.
+pub(crate) fn stats_from_json(j: &Json) -> Result<ErrorStats, String> {
+    let n = j
+        .get("n")
+        .and_then(Json::as_u64)
+        .and_then(|v| u32::try_from(v).ok())
+        .ok_or("stats missing numeric 'n'")?;
+    if !(1..=32).contains(&n) {
+        return Err(format!("stats n={n} out of range"));
+    }
+    let text = |key: &str| -> Result<&str, String> {
+        j.get(key)
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("stats missing string '{key}'"))
+    };
+    let flips = j.get("bitflips").and_then(Json::as_arr).ok_or("stats missing 'bitflips'")?;
+    if flips.len() != 2 * n as usize {
+        return Err(format!("stats bitflips length {} != {}", flips.len(), 2 * n));
+    }
+    let mut bitflips = Vec::with_capacity(flips.len());
+    for f in flips {
+        let v = f
+            .as_str()
+            .ok_or("bitflip entry is not a string")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad bitflip count: {e}"))?;
+        bitflips.push(v);
+    }
+    let sum_red_bits = u64::from_str_radix(text("sum_red_bits")?, 16)
+        .map_err(|e| format!("bad sum_red_bits: {e}"))?;
+    Ok(ErrorStats {
+        n,
+        count: text("count")?.parse().map_err(|e| format!("bad count: {e}"))?,
+        err_count: text("err_count")?.parse().map_err(|e| format!("bad err_count: {e}"))?,
+        sum_ed: text("sum_ed")?.parse().map_err(|e| format!("bad sum_ed: {e}"))?,
+        sum_abs_ed: text("sum_abs_ed")?.parse().map_err(|e| format!("bad sum_abs_ed: {e}"))?,
+        max_abs_ed: text("max_abs_ed")?.parse().map_err(|e| format!("bad max_abs_ed: {e}"))?,
+        sum_red: f64::from_bits(sum_red_bits),
+        bitflips,
+        approx_sums: j
+            .get("approx_sums")
+            .and_then(Json::as_bool)
+            .ok_or("stats missing boolean 'approx_sums'")?,
+    })
+}
+
+/// Attach the integrity hash: FNV-1a over the canonical compact
+/// serialization of the object *without* its `check` field (object keys
+/// are BTreeMap-sorted, so the serialization is deterministic whatever
+/// formatting the file on disk uses).
+pub(crate) fn seal(mut payload: Json) -> Json {
+    let check = fnv1a64(payload.to_string_compact().as_bytes());
+    if let Json::Obj(m) = &mut payload {
+        m.insert("check".to_string(), Json::Str(format!("{check:016x}")));
+    }
+    payload
+}
+
+/// Verify and strip the integrity hash attached by [`seal`], returning
+/// the checked body.
+pub(crate) fn unseal(parsed: Json) -> Result<Json, String> {
+    let mut m = match parsed {
+        Json::Obj(m) => m,
+        _ => return Err("not a JSON object".to_string()),
+    };
+    let found = match m.remove("check") {
+        Some(Json::Str(s)) => s,
+        _ => return Err("missing integrity check".to_string()),
+    };
+    let body = Json::Obj(m);
+    let want = format!("{:016x}", fnv1a64(body.to_string_compact().as_bytes()));
+    if found != want {
+        return Err(format!("integrity check mismatch (found {found}, computed {want})"));
+    }
+    Ok(body)
+}
+
+/// Serialize one committed result as a blob file.
+pub(crate) fn encode(key: &StoreKey, result: &JobResult) -> String {
+    let payload = obj(vec![
+        ("batches", Json::Str(result.batches.to_string())),
+        ("key", Json::from(key.canonical())),
+        ("schema", Json::from(STORE_SCHEMA as u64)),
+        ("stats", stats_to_json(&result.stats)),
+        ("wall_ns", Json::Str(result.wall.as_nanos().to_string())),
+    ]);
+    let mut text = seal(payload).to_string_pretty();
+    text.push('\n');
+    text
+}
+
+/// Strictly decode a blob file for `key`.
+pub(crate) fn decode(text: &str, key: &StoreKey) -> Result<StoredResult, String> {
+    let parsed = Json::parse(text).map_err(|e| format!("unreadable blob: {e}"))?;
+    let body = unseal(parsed)?;
+    let schema = body.get("schema").and_then(Json::as_u64).ok_or("blob missing 'schema'")?;
+    if schema != STORE_SCHEMA as u64 {
+        return Err(format!("blob schema {schema} != supported {STORE_SCHEMA}"));
+    }
+    let stored_key = body.get("key").and_then(Json::as_str).ok_or("blob missing 'key'")?;
+    if stored_key != key.canonical() {
+        return Err(
+            "blob key does not match the requested job (address collision or foreign file)"
+                .to_string(),
+        );
+    }
+    let stats = stats_from_json(body.get("stats").ok_or("blob missing 'stats'")?)?;
+    let batches = body
+        .get("batches")
+        .and_then(Json::as_str)
+        .ok_or("blob missing string 'batches'")?
+        .parse::<u64>()
+        .map_err(|e| format!("bad batches: {e}"))?;
+    let wall_ns = body
+        .get("wall_ns")
+        .and_then(Json::as_str)
+        .ok_or("blob missing string 'wall_ns'")?
+        .parse::<u128>()
+        .map_err(|e| format!("bad wall_ns: {e}"))?;
+    let wall = Duration::new(
+        (wall_ns / 1_000_000_000) as u64,
+        (wall_ns % 1_000_000_000) as u32,
+    );
+    Ok(StoredResult { stats, batches, wall })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EvalJob;
+
+    fn sample_stats() -> ErrorStats {
+        let mut s = ErrorStats::new(6);
+        // Force interesting field values, including a negative signed sum
+        // and a sum_red with a long mantissa.
+        s.record(63 * 63, 0);
+        s.record(5, 9);
+        s.record(100, 100);
+        s.sum_red += 0.1234567890123456789;
+        s
+    }
+
+    fn sample_blob() -> (StoreKey, JobResult, String) {
+        let job = EvalJob::mc(6, 2, true, 1000, 0xDEAD_BEEF_CAFE_F00D);
+        let key = StoreKey::new(&job, "cpu", 512);
+        let result = JobResult {
+            job: job.clone(),
+            stats: sample_stats(),
+            backend: "cpu",
+            wall: Duration::new(3, 141_592_653),
+            batches: 2,
+        };
+        let text = encode(&key, &result);
+        (key, result, text)
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let (key, result, text) = sample_blob();
+        let hit = decode(&text, &key).unwrap();
+        assert_eq!(hit.stats, result.stats);
+        assert_eq!(hit.stats.sum_red.to_bits(), result.stats.sum_red.to_bits());
+        assert_eq!(hit.batches, result.batches);
+        assert_eq!(hit.wall, result.wall);
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let (key, _, text) = sample_blob();
+        for cut in [0, 1, text.len() / 2, text.len() - 2] {
+            assert!(decode(&text[..cut], &key).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn every_content_bit_flip_is_detected_or_harmless() {
+        // The corruption property at the codec level: flipping any single
+        // bit of the blob either fails decoding (typed at the store
+        // layer) or — when the flip lands in formatting whitespace —
+        // leaves the decoded content exactly equal to the original.
+        // There is no third outcome.
+        let (key, result, text) = sample_blob();
+        let bytes = text.as_bytes();
+        for pos in 0..bytes.len() {
+            let mut corrupt = bytes.to_vec();
+            corrupt[pos] ^= 1 << (pos % 8);
+            let corrupt = match String::from_utf8(corrupt) {
+                Ok(s) => s,
+                Err(_) => continue, // fs::read_to_string would refuse it
+            };
+            if let Ok(hit) = decode(&corrupt, &key) {
+                assert_eq!(hit.stats, result.stats, "silent corruption at byte {pos}");
+                assert_eq!(hit.batches, result.batches, "silent corruption at byte {pos}");
+                assert_eq!(hit.wall, result.wall, "silent corruption at byte {pos}");
+            }
+        }
+    }
+
+    #[test]
+    fn schema_and_key_mismatches_are_detected() {
+        let (key, _, text) = sample_blob();
+        // Schema bump: re-seal so only the schema check can object.
+        let body = unseal(Json::parse(&text).unwrap()).unwrap();
+        let mut m = match body {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("schema".to_string(), Json::from(9999u64));
+        let resealed = seal(Json::Obj(m)).to_string_pretty();
+        let err = decode(&resealed, &key).unwrap_err();
+        assert!(err.contains("schema"), "{err}");
+        // Foreign key: a valid blob for a different job must be refused.
+        let other = EvalJob::mc(6, 2, true, 1000, 1);
+        let other_key = StoreKey::new(&other, "cpu", 512);
+        let err = decode(&text, &other_key).unwrap_err();
+        assert!(err.contains("key"), "{err}");
+    }
+}

@@ -1,0 +1,177 @@
+//! The append-only chunk journal: the store's checkpointed chunk cursor.
+//!
+//! One file per store key, one line per chunk, written strictly in
+//! chunk-id order by the pool's ordered merge at the moment the chunk
+//! folds into the in-order prefix. Each line is a compact JSON record
+//! `{chunk, stats, check}` sealed with the same FNV-1a scheme as blobs.
+//!
+//! Recovery is lenient by construction: it returns the **longest valid
+//! prefix** of records with chunk ids `0, 1, 2, …`. A process killed
+//! mid-append leaves at most one torn tail line; a corrupt interior
+//! record (or any out-of-order id) cuts the prefix right there. Either
+//! way the discarded chunks are simply re-evaluated — recovery can lose
+//! work but can never fabricate or reorder it, which is what keeps a
+//! resumed run bit-identical to an uninterrupted one.
+//!
+//! Durability model: appends go straight to the file descriptor (no
+//! user-space buffering), so a SIGKILL loses nothing already appended.
+//! There is deliberately no per-chunk fsync — an OS crash may drop the
+//! cache tail, which recovery handles like any other torn tail.
+
+use std::fs;
+use std::io::{Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::metrics::ErrorStats;
+use crate::error::SegmulError;
+use crate::util::json::{obj, Json};
+
+use super::blob::{seal, stats_from_json, stats_to_json, unseal};
+
+/// The recovered checkpoint for one store key.
+#[derive(Debug)]
+pub struct RecoveredJournal {
+    /// Per-chunk stats of the longest valid in-order prefix: entry `i`
+    /// is chunk `i`, exactly as the original run merged it.
+    pub chunks: Vec<ErrorStats>,
+    /// Byte length of that valid prefix — where [`JournalWriter`]
+    /// resumes appending (anything beyond is truncated away).
+    pub valid_len: u64,
+    /// Bytes discarded beyond the valid prefix (torn tail, corruption).
+    pub discarded_bytes: u64,
+}
+
+fn encode_line(chunk_id: u64, stats: &ErrorStats) -> String {
+    let payload = obj(vec![
+        ("chunk", Json::Str(chunk_id.to_string())),
+        ("stats", stats_to_json(stats)),
+    ]);
+    let mut line = seal(payload).to_string_compact();
+    line.push('\n');
+    line
+}
+
+fn decode_line(body: &str, expect_id: u64) -> Result<ErrorStats, String> {
+    let parsed = Json::parse(body).map_err(|e| format!("unreadable journal line: {e}"))?;
+    let checked = unseal(parsed)?;
+    let id = checked
+        .get("chunk")
+        .and_then(Json::as_str)
+        .ok_or("journal line missing 'chunk'")?
+        .parse::<u64>()
+        .map_err(|e| format!("bad chunk id: {e}"))?;
+    if id != expect_id {
+        return Err(format!("journal line holds chunk {id}, expected {expect_id}"));
+    }
+    stats_from_json(checked.get("stats").ok_or("journal line missing 'stats'")?)
+}
+
+/// Recover the longest valid in-order prefix of the journal at `path`.
+/// A missing or empty file is an empty (zero-chunk) checkpoint.
+pub(crate) fn recover(path: &Path) -> RecoveredJournal {
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            return RecoveredJournal { chunks: Vec::new(), valid_len: 0, discarded_bytes: 0 }
+        }
+    };
+    let mut chunks = Vec::new();
+    let mut valid_len = 0usize;
+    for line in text.split_inclusive('\n') {
+        if !line.ends_with('\n') {
+            break; // torn tail: the normal SIGKILL artifact
+        }
+        match decode_line(line.trim_end_matches(['\n', '\r']), chunks.len() as u64) {
+            Ok(stats) => {
+                valid_len += line.len();
+                chunks.push(stats);
+            }
+            Err(_) => break, // corruption cuts the prefix, soundly
+        }
+    }
+    RecoveredJournal {
+        chunks,
+        valid_len: valid_len as u64,
+        discarded_bytes: (text.len() - valid_len) as u64,
+    }
+}
+
+/// Appends checkpoint lines as chunks merge. A write failure (disk full,
+/// revoked mount) disables the writer with one warning — resumability
+/// degrades, the run itself continues and stays correct.
+pub struct JournalWriter {
+    file: fs::File,
+    path: PathBuf,
+    failed: bool,
+}
+
+impl JournalWriter {
+    pub(crate) fn open(path: PathBuf, valid_len: u64) -> Result<JournalWriter, SegmulError> {
+        let wrap = |e: std::io::Error| SegmulError::store(path.display().to_string(), e.to_string());
+        let mut file = fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(false)
+            .open(&path)
+            .map_err(wrap)?;
+        // Cut away any invalid tail behind the recovered prefix before
+        // appending, so one torn line can never corrupt the next run's
+        // records.
+        file.set_len(valid_len).map_err(wrap)?;
+        file.seek(SeekFrom::End(0)).map_err(wrap)?;
+        Ok(JournalWriter { file, path, failed: false })
+    }
+
+    /// Append the checkpoint line for `chunk_id` (callers append in
+    /// chunk-id order; recovery enforces it).
+    pub fn append(&mut self, chunk_id: u64, stats: &ErrorStats) {
+        if self.failed {
+            return;
+        }
+        let line = encode_line(chunk_id, stats);
+        if let Err(e) = self.file.write_all(line.as_bytes()) {
+            eprintln!("warning: chunk journal {} disabled: {e}", self.path.display());
+            self.failed = true;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(i: u64) -> ErrorStats {
+        let mut s = ErrorStats::new(4);
+        s.record(10 + i, 3);
+        s.sum_red += i as f64 * 0.3333333333333333;
+        s
+    }
+
+    #[test]
+    fn line_roundtrip_is_exact() {
+        for i in [0u64, 1, 77] {
+            let s = stats(i);
+            let line = encode_line(i, &s);
+            let back = decode_line(line.trim_end(), i).unwrap();
+            assert_eq!(back, s);
+            assert_eq!(back.sum_red.to_bits(), s.sum_red.to_bits());
+        }
+    }
+
+    #[test]
+    fn out_of_order_and_flipped_lines_are_rejected() {
+        let line = encode_line(3, &stats(3));
+        assert!(decode_line(line.trim_end(), 4).is_err());
+        let flipped = line.replacen("\"count\":\"1\"", "\"count\":\"2\"", 1);
+        assert_ne!(flipped, line, "test premise: a count field exists to flip");
+        assert!(decode_line(flipped.trim_end(), 3).is_err());
+    }
+
+    #[test]
+    fn recover_missing_file_is_empty() {
+        let rec = recover(Path::new("/nonexistent/segmul/journal.jsonl"));
+        assert!(rec.chunks.is_empty());
+        assert_eq!(rec.valid_len, 0);
+        assert_eq!(rec.discarded_bytes, 0);
+    }
+}

@@ -1,0 +1,150 @@
+//! Atomic lease files: multi-process mutual exclusion per store key.
+//!
+//! The claim primitive is `O_CREAT | O_EXCL` (`create_new`), which is
+//! atomic on local filesystems and on NFSv3+ — exactly one of N
+//! processes racing for a key wins and writes its pid into the lease.
+//! Losers report [`Claim::Busy`] and poll for the winner's blob commit
+//! instead of duplicating the evaluation.
+//!
+//! Stale-lease eviction: a lease whose recorded pid is provably dead
+//! (no `/proc/<pid>` on Linux) is *renamed away* to a unique tombstone —
+//! renames of one source path succeed for exactly one evictor — deleted,
+//! and the claim retried. An unreadable lease (a claimant between
+//! `create_new` and its pid write, or a non-Linux host where liveness
+//! cannot be probed) is conservatively treated as live; the caller's
+//! wait timeout bounds the damage to one duplicated evaluation, which
+//! the keyed blob commit then dedups — correctness never depends on the
+//! lease.
+
+use std::fs;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+
+use crate::error::SegmulError;
+
+/// Outcome of a claim attempt.
+pub enum Claim {
+    /// This process now holds the lease (released when the guard drops).
+    Acquired(LeaseGuard),
+    /// Another live process holds it: poll for its committed blob.
+    Busy,
+}
+
+/// Holds a claimed lease; dropping it removes the lease file.
+pub struct LeaseGuard {
+    path: PathBuf,
+}
+
+impl LeaseGuard {
+    /// Explicit release (identical to drop; named for call-site clarity).
+    pub fn release(self) {}
+}
+
+impl Drop for LeaseGuard {
+    fn drop(&mut self) {
+        let _ = fs::remove_file(&self.path);
+    }
+}
+
+/// Is the recorded holder provably dead? Only a parseable pid with no
+/// live process says yes; everything else is conservatively "alive".
+fn holder_is_dead(lease: &Path) -> bool {
+    let pid = match fs::read_to_string(lease) {
+        Ok(text) => match text.trim().parse::<u32>() {
+            Ok(pid) => pid,
+            Err(_) => return false,
+        },
+        Err(_) => return false,
+    };
+    if pid == std::process::id() {
+        // Our own pid in a lease we failed to create: a previous claim of
+        // this process (or a pid-reused corpse); treat as stale.
+        return true;
+    }
+    #[cfg(target_os = "linux")]
+    {
+        !Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        false
+    }
+}
+
+pub(crate) fn claim(path: &Path) -> Result<Claim, SegmulError> {
+    // Bounded retry: each loop either claims, reports Busy, or evicts a
+    // provably dead holder; pathological churn (leases dying faster than
+    // we can claim) gives up as Busy rather than spinning forever.
+    for _ in 0..64 {
+        match fs::OpenOptions::new().write(true).create_new(true).open(path) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{}", std::process::id());
+                return Ok(Claim::Acquired(LeaseGuard { path: path.to_path_buf() }));
+            }
+            Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {
+                if !holder_is_dead(path) {
+                    return Ok(Claim::Busy);
+                }
+                // Evict: rename the corpse to a unique tombstone. Exactly
+                // one racing evictor's rename succeeds; everyone retries
+                // the atomic create either way.
+                let tomb =
+                    path.with_extension(format!("stale.{}", std::process::id()));
+                if fs::rename(path, &tomb).is_ok() {
+                    let _ = fs::remove_file(&tomb);
+                }
+            }
+            Err(e) => {
+                return Err(SegmulError::store(path.display().to_string(), e.to_string()))
+            }
+        }
+    }
+    Ok(Claim::Busy)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmplease(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("segmul-lease-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        fs::create_dir_all(&dir).unwrap();
+        dir.join("key.lease")
+    }
+
+    #[test]
+    fn claim_release_reclaim() {
+        let path = tmplease("basic");
+        let g = match claim(&path).unwrap() {
+            Claim::Acquired(g) => g,
+            Claim::Busy => panic!("fresh path must claim"),
+        };
+        assert!(path.exists());
+        drop(g);
+        assert!(!path.exists(), "drop must remove the lease");
+        match claim(&path).unwrap() {
+            Claim::Acquired(g) => g.release(),
+            Claim::Busy => panic!("released path must re-claim"),
+        }
+    }
+
+    #[test]
+    fn own_pid_lease_is_reclaimed() {
+        // A lease recorded under our own pid (a crashed previous claim of
+        // this very process id) must not deadlock us.
+        let path = tmplease("own");
+        fs::write(&path, format!("{}\n", std::process::id())).unwrap();
+        match claim(&path).unwrap() {
+            Claim::Acquired(g) => g.release(),
+            Claim::Busy => panic!("own-pid lease must be evicted"),
+        }
+    }
+
+    #[test]
+    fn garbage_lease_is_conservatively_busy() {
+        let path = tmplease("garbage");
+        fs::write(&path, "not-a-pid\n").unwrap();
+        assert!(matches!(claim(&path).unwrap(), Claim::Busy));
+    }
+}

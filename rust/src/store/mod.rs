@@ -1,0 +1,452 @@
+//! The persistent, content-addressed result store.
+//!
+//! A sweep used to live and die with one process and its in-memory
+//! [`crate::coordinator::JobKey`] cache. [`ResultStore`] moves the cache
+//! onto disk so results survive preemption and can be produced by many
+//! cooperating processes over a shared filesystem:
+//!
+//! * **Blobs** (`blobs/<addr>.json`, [`blob`]): one committed
+//!   [`crate::coordinator::JobResult`] per canonical store key, written
+//!   atomically (temp file + rename) with an FNV-1a integrity hash and
+//!   the full key string embedded for collision/tamper detection. Loading
+//!   is *lazy* (one file open per query, no directory scans) and
+//!   *strict*: a truncated, bit-flipped, or schema-mismatched blob is a
+//!   typed [`SegmulError::Store`], never a silently wrong answer.
+//! * **Chunk journals** (`journal/<addr>.jsonl`, [`journal`]): the
+//!   checkpointed chunk cursor. The pool's ordered merge appends one
+//!   self-checking line per chunk, *in chunk-id order*, the moment the
+//!   chunk folds into the in-order prefix. A killed process therefore
+//!   leaves exactly a valid prefix (plus at most one torn tail line,
+//!   discarded on recovery), and a resumed run re-folds that prefix
+//!   through the same [`crate::error::stream::OrderedMerger`] — so the
+//!   resumed result is **bit-identical** (f64 `sum_red` included) to an
+//!   uninterrupted run.
+//! * **Leases** (`leases/<addr>.lease`, [`lease`]): multi-process
+//!   mutual exclusion via atomic `create_new`, so N processes sharding
+//!   one grid never evaluate the same key twice; stale leases from dead
+//!   processes are evicted by an atomic rename.
+//!
+//! The store key ([`StoreKey`]) extends the in-memory `JobKey` with the
+//! backend name and batch size: `JobKey`'s own docs warn that the MC
+//! operand multiset depends on the backend's chunk-to-stream layout, so
+//! a *persistent* key must pin both — two runners only share blobs when
+//! their chunk plans are identical.
+
+mod blob;
+mod journal;
+mod lease;
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::{EvalJob, JobResult, SpecKey};
+use crate::error::SegmulError;
+use crate::util::json::{obj, Json};
+
+pub use blob::StoredResult;
+pub use journal::{JournalWriter, RecoveredJournal};
+pub use lease::{Claim, LeaseGuard};
+
+/// On-disk layout version. Bump on any incompatible change to the blob /
+/// journal encoding; [`ResultStore::open`] refuses directories written by
+/// a different schema, and CI keys its `actions/cache` entry on this.
+pub const STORE_SCHEMA: u32 = 1;
+
+/// FNV-1a 64-bit — the store's self-contained content/integrity hash (no
+/// external crypto in this offline build; collision resistance is not a
+/// goal, which is why blobs also embed and verify the full key string).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The persistent identity of one evaluation: the canonical
+/// [`crate::coordinator::JobKey`] (canonical design + workload + seed /
+/// sample budget) plus the backend name and batch size that fix the
+/// chunk layout. Serialized as deterministic compact JSON; the FNV-1a
+/// hash of that string is the blob address.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreKey {
+    canonical: String,
+    hash: u64,
+}
+
+impl StoreKey {
+    pub fn new(job: &EvalJob, backend: &str, batch: usize) -> StoreKey {
+        let key = job.key();
+        // u64 fields (seeds especially) are serialized as decimal strings:
+        // the JSON codec's numbers are f64 and would round above 2^53.
+        let workload = match &key.spec {
+            SpecKey::Exhaustive => obj(vec![("kind", Json::from("exhaustive"))]),
+            SpecKey::MonteCarlo { samples, seed } => obj(vec![
+                ("kind", Json::from("mc")),
+                ("samples", Json::Str(samples.to_string())),
+                ("seed", Json::Str(seed.to_string())),
+            ]),
+            SpecKey::Adaptive { max_samples, seed, target_bits } => obj(vec![
+                ("kind", Json::from("adaptive")),
+                ("max_samples", Json::Str(max_samples.to_string())),
+                ("seed", Json::Str(seed.to_string())),
+                ("target_bits", Json::Str(format!("{target_bits:016x}"))),
+            ]),
+        };
+        let id = obj(vec![
+            ("backend", Json::from(backend)),
+            ("batch", Json::from(batch as u64)),
+            ("design", key.design.to_json()),
+            ("schema", Json::from(STORE_SCHEMA as u64)),
+            ("workload", workload),
+        ]);
+        let canonical = id.to_string_compact();
+        let hash = fnv1a64(canonical.as_bytes());
+        StoreKey { canonical, hash }
+    }
+
+    /// The full canonical identity string (embedded in blobs and verified
+    /// on load, so an address collision can never serve a foreign result).
+    pub fn canonical(&self) -> &str {
+        &self.canonical
+    }
+
+    /// The content address: hex FNV-1a of [`Self::canonical`], used as
+    /// the blob / journal / lease file stem.
+    pub fn address(&self) -> String {
+        format!("{:016x}", self.hash)
+    }
+}
+
+/// The on-disk store. Cheap to open (four `mkdir -p` plus one schema
+/// sentinel check); every query is lazy — one file open per key, no
+/// directory scans, so a million-blob store costs nothing until read.
+pub struct ResultStore {
+    root: PathBuf,
+}
+
+impl ResultStore {
+    /// Open (creating if needed) the store rooted at `root`. Refuses a
+    /// directory written by a different [`STORE_SCHEMA`].
+    pub fn open(root: impl Into<PathBuf>) -> Result<ResultStore, SegmulError> {
+        let root = root.into();
+        for sub in ["blobs", "journal", "leases", "tmp"] {
+            let dir = root.join(sub);
+            fs::create_dir_all(&dir).map_err(|e| {
+                SegmulError::store(dir.display().to_string(), format!("cannot create: {e}"))
+            })?;
+        }
+        let sentinel = root.join("STORE_SCHEMA");
+        match fs::read_to_string(&sentinel) {
+            Ok(text) => {
+                let found = text.trim().to_string();
+                if found != STORE_SCHEMA.to_string() {
+                    return Err(SegmulError::store(
+                        sentinel.display().to_string(),
+                        format!("store schema {found:?} != supported {STORE_SCHEMA}"),
+                    ));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::NotFound => {
+                fs::write(&sentinel, format!("{STORE_SCHEMA}\n")).map_err(|e| {
+                    SegmulError::store(sentinel.display().to_string(), e.to_string())
+                })?;
+            }
+            Err(e) => {
+                return Err(SegmulError::store(sentinel.display().to_string(), e.to_string()))
+            }
+        }
+        Ok(ResultStore { root })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The blob path for `key` (exposed so tests can corrupt it).
+    pub fn blob_path(&self, key: &StoreKey) -> PathBuf {
+        self.root.join("blobs").join(format!("{}.json", key.address()))
+    }
+
+    fn journal_path(&self, key: &StoreKey) -> PathBuf {
+        self.root.join("journal").join(format!("{}.jsonl", key.address()))
+    }
+
+    /// The lease path for `key` (exposed for tests and diagnostics).
+    pub fn lease_path(&self, key: &StoreKey) -> PathBuf {
+        self.root.join("leases").join(format!("{}.lease", key.address()))
+    }
+
+    /// Load the committed result for `key`, if any. Strict: any
+    /// corruption (torn write, bit flip, wrong schema, key mismatch
+    /// behind a colliding address) is a typed [`SegmulError::Store`] —
+    /// callers treat it as a miss and re-evaluate.
+    pub fn load(&self, key: &StoreKey) -> Result<Option<StoredResult>, SegmulError> {
+        let path = self.blob_path(key);
+        let text = match fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(SegmulError::store(path.display().to_string(), e.to_string())),
+        };
+        blob::decode(&text, key)
+            .map(Some)
+            .map_err(|reason| SegmulError::store(path.display().to_string(), reason))
+    }
+
+    /// Commit a finished result: written to `tmp/`, then atomically
+    /// renamed into `blobs/` — readers only ever see absent or complete
+    /// blobs. The chunk journal is superseded and removed.
+    pub fn commit(&self, key: &StoreKey, result: &JobResult) -> Result<(), SegmulError> {
+        let text = blob::encode(key, result);
+        let tmp = self
+            .root
+            .join("tmp")
+            .join(format!("{}.{}.tmp", key.address(), std::process::id()));
+        let path = self.blob_path(key);
+        fs::write(&tmp, text.as_bytes())
+            .and_then(|_| fs::rename(&tmp, &path))
+            .map_err(|e| {
+                SegmulError::store(path.display().to_string(), format!("commit failed: {e}"))
+            })?;
+        let _ = fs::remove_file(self.journal_path(key));
+        Ok(())
+    }
+
+    /// Recover the checkpointed chunk prefix for `key`: the longest valid
+    /// in-order journal prefix (a torn tail line — the normal SIGKILL
+    /// artifact — and anything after a corrupt record is discarded and
+    /// simply re-evaluated, so recovery is always sound).
+    pub fn recover_journal(&self, key: &StoreKey) -> RecoveredJournal {
+        journal::recover(&self.journal_path(key))
+    }
+
+    /// Open the chunk journal for appending at `valid_len` (from
+    /// [`RecoveredJournal::valid_len`]; any invalid tail beyond it is
+    /// truncated away first).
+    pub fn journal_writer(
+        &self,
+        key: &StoreKey,
+        valid_len: u64,
+    ) -> Result<JournalWriter, SegmulError> {
+        JournalWriter::open(self.journal_path(key), valid_len)
+    }
+
+    /// Try to claim the evaluation lease for `key` (multi-process mutual
+    /// exclusion). See [`lease`] for the protocol.
+    pub fn claim(&self, key: &StoreKey) -> Result<Claim, SegmulError> {
+        lease::claim(&self.lease_path(key))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WorkSpec;
+    use crate::multiplier::MultiplierSpec;
+    use std::time::Duration;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("segmul-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn mc_job(seed: u64) -> EvalJob {
+        EvalJob::mc(8, 3, true, 50_000, seed)
+    }
+
+    fn result_for(job: &EvalJob) -> JobResult {
+        use crate::coordinator::{run_job, CpuBackend};
+        let mut be = CpuBackend::new();
+        run_job(&mut be, job).unwrap()
+    }
+
+    #[test]
+    fn fnv_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn key_canonicalizes_like_the_cache_and_pins_the_runner() {
+        let fix_t0 = EvalJob::exhaustive(8, 0, true);
+        let nofix_t0 = EvalJob::exhaustive(8, 0, false);
+        let accurate =
+            EvalJob::new(MultiplierSpec::Accurate { n: 8 }, WorkSpec::Exhaustive);
+        // Same canonicalization as JobKey: the t=0 twins and the accurate
+        // design share one persistent identity.
+        assert_eq!(StoreKey::new(&fix_t0, "cpu", 64), StoreKey::new(&nofix_t0, "cpu", 64));
+        assert_eq!(StoreKey::new(&fix_t0, "cpu", 64), StoreKey::new(&accurate, "cpu", 64));
+        // ...but the backend name and batch size are part of the key:
+        // persisted results never cross runners with different chunk
+        // layouts (the JobKey soundness caveat).
+        assert_ne!(StoreKey::new(&fix_t0, "cpu", 64), StoreKey::new(&fix_t0, "pjrt", 64));
+        assert_ne!(StoreKey::new(&fix_t0, "cpu", 64), StoreKey::new(&fix_t0, "cpu", 128));
+        // Distinct workloads and seeds are distinct keys, even above 2^53.
+        let huge_seed = EvalJob::mc(8, 3, true, 50_000, (1u64 << 60) + 1);
+        let huge_seed2 = EvalJob::mc(8, 3, true, 50_000, (1u64 << 60) + 2);
+        assert_ne!(
+            StoreKey::new(&huge_seed, "cpu", 64).address(),
+            StoreKey::new(&huge_seed2, "cpu", 64).address()
+        );
+    }
+
+    #[test]
+    fn blob_roundtrip_is_exact() {
+        let dir = tmpdir("roundtrip");
+        let store = ResultStore::open(&dir).unwrap();
+        let job = mc_job(7);
+        let key = StoreKey::new(&job, "cpu", 1 << 13);
+        assert!(store.load(&key).unwrap().is_none());
+        let result = result_for(&job);
+        store.commit(&key, &result).unwrap();
+        let hit = store.load(&key).unwrap().expect("committed blob must load");
+        // Bit-exact round trip: every integer field, the f64 sum_red bit
+        // pattern, and the accounting fields.
+        assert_eq!(hit.stats, result.stats);
+        assert_eq!(hit.stats.sum_red.to_bits(), result.stats.sum_red.to_bits());
+        assert_eq!(hit.batches, result.batches);
+        assert_eq!(hit.wall, result.wall);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_checks_schema_sentinel() {
+        let dir = tmpdir("schema");
+        ResultStore::open(&dir).unwrap();
+        // Same schema: reopen fine.
+        ResultStore::open(&dir).unwrap();
+        fs::write(dir.join("STORE_SCHEMA"), "999\n").unwrap();
+        let err = ResultStore::open(&dir).unwrap_err();
+        assert_eq!(err.kind(), "store");
+        assert!(err.to_string().contains("999"), "{err}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_roundtrip_and_torn_tail_recovery() {
+        let dir = tmpdir("journal");
+        let store = ResultStore::open(&dir).unwrap();
+        let job = mc_job(3);
+        let key = StoreKey::new(&job, "cpu", 1 << 13);
+        let empty = store.recover_journal(&key);
+        assert!(empty.chunks.is_empty());
+        assert_eq!(empty.valid_len, 0);
+
+        // Append three chunks, in order.
+        let mut chunks = Vec::new();
+        for i in 0..3u64 {
+            let mut s = crate::error::metrics::ErrorStats::new(8);
+            s.record(100 + i, 90);
+            chunks.push(s);
+        }
+        let mut w = store.journal_writer(&key, 0).unwrap();
+        for (i, s) in chunks.iter().enumerate() {
+            w.append(i as u64, s);
+        }
+        drop(w);
+        let rec = store.recover_journal(&key);
+        assert_eq!(rec.chunks, chunks);
+        assert_eq!(rec.discarded_bytes, 0);
+
+        // A torn tail line (the SIGKILL artifact) is discarded; the valid
+        // prefix survives and the writer truncates the tear away.
+        let path = dir.join("journal").join(format!("{}.jsonl", key.address()));
+        let mut bytes = fs::read(&path).unwrap();
+        let tear = bytes.len() as u64;
+        bytes.extend_from_slice(b"{\"chunk\":\"3\",\"stats\":{\"n\":8,");
+        fs::write(&path, &bytes).unwrap();
+        let rec = store.recover_journal(&key);
+        assert_eq!(rec.chunks, chunks);
+        assert_eq!(rec.valid_len, tear);
+        assert!(rec.discarded_bytes > 0);
+        let mut w = store.journal_writer(&key, rec.valid_len).unwrap();
+        let mut s3 = crate::error::metrics::ErrorStats::new(8);
+        s3.record(7, 7);
+        w.append(3, &s3);
+        drop(w);
+        let rec = store.recover_journal(&key);
+        assert_eq!(rec.chunks.len(), 4);
+        assert_eq!(rec.chunks[3], s3);
+
+        // A corrupt *interior* record cuts the prefix there, soundly.
+        let text = fs::read_to_string(&path).unwrap();
+        let flipped = text.replacen("\"chunk\":\"1\"", "\"chunk\":\"9\"", 1);
+        fs::write(&path, flipped).unwrap();
+        let rec = store.recover_journal(&key);
+        assert_eq!(rec.chunks.len(), 1, "prefix must stop at the bad record");
+        assert_eq!(rec.chunks[0], chunks[0]);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn commit_supersedes_journal() {
+        let dir = tmpdir("supersede");
+        let store = ResultStore::open(&dir).unwrap();
+        let job = mc_job(9);
+        let key = StoreKey::new(&job, "cpu", 1 << 13);
+        let mut w = store.journal_writer(&key, 0).unwrap();
+        let mut s = crate::error::metrics::ErrorStats::new(8);
+        s.record(3, 2);
+        w.append(0, &s);
+        drop(w);
+        assert_eq!(store.recover_journal(&key).chunks.len(), 1);
+        store.commit(&key, &result_for(&job)).unwrap();
+        assert!(store.recover_journal(&key).chunks.is_empty(), "journal removed on commit");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lease_excludes_live_holders_and_evicts_dead_ones() {
+        let dir = tmpdir("lease");
+        let store = ResultStore::open(&dir).unwrap();
+        let job = mc_job(11);
+        let key = StoreKey::new(&job, "cpu", 1 << 13);
+        // First claim wins...
+        let guard = match store.claim(&key).unwrap() {
+            Claim::Acquired(g) => g,
+            Claim::Busy => panic!("fresh lease must be acquirable"),
+        };
+        // ...and excludes a second claimant while this (live) process
+        // holds it.
+        assert!(matches!(store.claim(&key).unwrap(), Claim::Busy));
+        drop(guard);
+        // Released: claimable again.
+        let guard = match store.claim(&key).unwrap() {
+            Claim::Acquired(g) => g,
+            Claim::Busy => panic!("released lease must be acquirable"),
+        };
+        guard.release();
+        // A lease left behind by a dead process (a pid that cannot exist)
+        // is evicted and re-claimed.
+        fs::write(store.lease_path(&key), "4294967295\n").unwrap();
+        match store.claim(&key).unwrap() {
+            Claim::Acquired(g) => g.release(),
+            Claim::Busy => panic!("stale lease must be evicted"),
+        }
+        // An unreadable lease (no pid yet: a claimant between create and
+        // write) is conservatively treated as live.
+        fs::write(store.lease_path(&key), "").unwrap();
+        assert!(matches!(store.claim(&key).unwrap(), Claim::Busy));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wall_roundtrips_exact_nanos() {
+        let dir = tmpdir("wall");
+        let store = ResultStore::open(&dir).unwrap();
+        let job = mc_job(13);
+        let key = StoreKey::new(&job, "cpu", 1 << 13);
+        let mut result = result_for(&job);
+        result.wall = Duration::new(1234, 567_891_234);
+        store.commit(&key, &result).unwrap();
+        let hit = store.load(&key).unwrap().unwrap();
+        assert_eq!(hit.wall, result.wall);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,186 @@
+//! Corruption properties of the persistent result store.
+//!
+//! The invariant under test: **no corrupted store entry is ever served**.
+//! Truncations, bit flips, and schema mismatches surface as the typed
+//! `SegmulError::Store` (kind `"store"`) at the store layer, and the
+//! sweep runner degrades every such error to a counted miss — the job
+//! re-evaluates and the answer is bit-identical to a fresh-store run.
+//! Never a panic, never a silently wrong answer.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use segmul::coordinator::{CpuBackend, EvalBackend, EvalJob, SweepRunner};
+use segmul::store::{ResultStore, StoreKey};
+
+fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static {
+    || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+}
+
+fn tmp_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("segmul-store-corrupt-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn job() -> EvalJob {
+    EvalJob::mc(8, 3, true, 200_000, 42)
+}
+
+/// Evaluate `job()` through a store-backed runner, committing its blob,
+/// and return the store dir, the key, and the runner's result stats.
+fn committed_store(tag: &str) -> (PathBuf, StoreKey, segmul::error::metrics::ErrorStats) {
+    let dir = tmp_store(tag);
+    let mut runner = SweepRunner::new(cpu_factory(), 2).unwrap();
+    runner.set_store(ResultStore::open(&dir).unwrap());
+    let out = runner.run_jobs(&[job()], |_, _, _| {}).unwrap();
+    let stats = out[0].result().unwrap().stats.clone();
+    let skey = StoreKey::new(&job(), "cpu", runner.pool().batch());
+    assert!(runner.store().unwrap().load(&skey).unwrap().is_some(), "blob must be committed");
+    (dir, skey, stats)
+}
+
+/// After corrupting the blob with `mutate`, the store must report a
+/// typed `"store"` error (or a clean miss), and a fresh runner must
+/// re-evaluate to the bit-identical answer and heal the entry.
+fn assert_recovers(tag: &str, mutate: impl FnOnce(&[u8]) -> Vec<u8>) {
+    let (dir, skey, want) = committed_store(tag);
+    let store = ResultStore::open(&dir).unwrap();
+    let blob_path = store.blob_path(&skey);
+    let original = std::fs::read(&blob_path).unwrap();
+    std::fs::write(&blob_path, mutate(&original)).unwrap();
+
+    // Layer 1: the raw load is a typed error, never a panic and never a
+    // decoded result.
+    match store.load(&skey) {
+        Err(e) => assert_eq!(e.kind(), "store", "{tag}: {e}"),
+        Ok(None) => {} // an empty/removed file degrades to a plain miss
+        Ok(Some(_)) => panic!("{tag}: corrupted blob was served"),
+    }
+
+    // Layer 2: the runner degrades the error to a re-evaluation that is
+    // bit-identical to the fresh-store run.
+    let mut runner = SweepRunner::new(cpu_factory(), 2).unwrap();
+    runner.set_store(store);
+    let out = runner.run_jobs(&[job()], |_, _, _| {}).unwrap();
+    let got = &out[0].result().unwrap().stats;
+    assert_eq!(got, &want, "{tag}: re-evaluation diverged");
+    assert_eq!(got.sum_red.to_bits(), want.sum_red.to_bits(), "{tag}: sum_red bits");
+    assert_eq!(runner.store_hits, 0, "{tag}: a corrupt entry must not count as a hit");
+    assert_eq!(runner.jobs_evaluated, 1, "{tag}");
+
+    // Layer 3: the re-evaluation healed the entry — the blob now loads.
+    let healed = runner.store().unwrap().load(&skey).unwrap().expect("healed blob");
+    assert_eq!(healed.stats, want, "{tag}: healed blob diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_blob_recovers_at_every_cut_depth() {
+    // Property: for a spread of truncation lengths (including zero, one
+    // byte, and one-byte-short-of-valid), the entry is never served.
+    for frac in [0usize, 1, 4] {
+        assert_recovers(&format!("trunc-num-{frac}"), move |orig| {
+            orig[..orig.len() * frac / 8].to_vec()
+        });
+    }
+    assert_recovers("trunc-tail", |orig| orig[..orig.len() - 1].to_vec());
+    assert_recovers("trunc-one", |orig| orig[..1.min(orig.len())].to_vec());
+}
+
+#[test]
+fn bit_flipped_blob_recovers_at_every_probed_position() {
+    // Property: flip one bit at a spread of positions across the blob —
+    // the seal (a content hash over the serialized record) must reject
+    // every variant; none may decode to a wrong answer.
+    let (dir, skey, _) = committed_store("flip-probe");
+    let store = ResultStore::open(&dir).unwrap();
+    let original = std::fs::read(store.blob_path(&skey)).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+    let positions: Vec<usize> = (0..original.len()).step_by(7.max(original.len() / 40)).collect();
+    for pos in positions {
+        assert_recovers(&format!("flip-{pos}"), move |orig| {
+            let mut bytes = orig.to_vec();
+            bytes[pos] ^= 1u8 << (pos % 8);
+            bytes
+        });
+    }
+}
+
+#[test]
+fn garbage_and_wrong_record_blobs_recover() {
+    assert_recovers("garbage", |_| b"not json at all".to_vec());
+    assert_recovers("empty-obj", |_| b"{}".to_vec());
+    // A structurally valid record whose seal does not match its content.
+    assert_recovers("forged-check", |orig| {
+        let text = String::from_utf8(orig.to_vec()).unwrap();
+        text.replacen("\"check\":\"", "\"check\":\"0", 1).into_bytes()
+    });
+}
+
+#[test]
+fn schema_mismatched_store_is_a_typed_error_not_a_wrong_answer() {
+    let (dir, _skey, _want) = committed_store("schema");
+    // A future (or past) process with a different on-disk schema must
+    // refuse the whole store with a typed error at open — entries are
+    // never reinterpreted across schema versions.
+    std::fs::write(dir.join("STORE_SCHEMA"), "999").unwrap();
+    let err = ResultStore::open(&dir).unwrap_err();
+    assert_eq!(err.kind(), "store");
+    assert!(err.to_string().contains("schema"), "unhelpful error: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn corrupted_journal_resumes_from_the_longest_valid_prefix() {
+    // A torn or bit-flipped journal must cut at the damage point and
+    // resume bit-identically from the surviving prefix.
+    let reference = {
+        let mut runner = SweepRunner::new(cpu_factory(), 2).unwrap();
+        runner.run_jobs(&[job()], |_, _, _| {}).unwrap()[0].result().unwrap().stats.clone()
+    };
+    for (tag, damage) in [
+        ("tear", 0usize),   // torn tail: drop the last half-line
+        ("midflip", 1),     // bit flip in a middle record
+        ("headflip", 2),    // bit flip in the first record
+    ] {
+        let dir = tmp_store(&format!("journal-{tag}"));
+        let store = ResultStore::open(&dir).unwrap();
+        // Capture the job's per-chunk stats and write them as a full
+        // journal, as a checkpointed run would have before dying.
+        let capture = SweepRunner::new(cpu_factory(), 2).unwrap();
+        let mut chunks = Vec::new();
+        let mut sink = |id: u64, s: &segmul::error::metrics::ErrorStats| chunks.push((id, s.clone()));
+        capture.pool().run_job_checkpointed(&job(), &[], &mut |_| {}, Some(&mut sink)).unwrap();
+        let skey = StoreKey::new(&job(), "cpu", capture.pool().batch());
+        let mut writer = store.journal_writer(&skey, 0).unwrap();
+        for (id, stats) in &chunks {
+            writer.append(*id, stats);
+        }
+        drop(writer);
+        let jpath = dir.join("journal").join(format!("{}.jsonl", skey.address()));
+        let mut bytes = std::fs::read(&jpath).unwrap();
+        match damage {
+            0 => bytes.truncate(bytes.len() - bytes.len() / (2 * chunks.len())),
+            1 => {
+                let mid = bytes.len() / 2;
+                bytes[mid] ^= 0x10;
+            }
+            _ => bytes[8] ^= 0x10,
+        }
+        std::fs::write(&jpath, &bytes).unwrap();
+
+        let mut resumed = SweepRunner::new(cpu_factory(), 2).unwrap();
+        resumed.set_store(store);
+        let got = resumed.run_jobs(&[job()], |_, _, _| {}).unwrap()[0]
+            .result()
+            .unwrap()
+            .stats
+            .clone();
+        assert_eq!(got, reference, "journal-{tag}: resumed stats diverged");
+        assert_eq!(got.sum_red.to_bits(), reference.sum_red.to_bits(), "journal-{tag}");
+        assert!(resumed.store_recoveries >= 1, "journal-{tag}: damage must be counted");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

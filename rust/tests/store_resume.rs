@@ -1,0 +1,277 @@
+//! Resume and sharding guarantees of the persistent result store.
+//!
+//! The contracts under test, end-to-end through `SweepRunner`:
+//!
+//! * a sweep that stopped between jobs (committed blobs) or mid-job
+//!   (a checkpointed chunk journal) resumes **bit-identically** — every
+//!   integer field and the order-sensitive f64 `sum_red` — for workers
+//!   ∈ {1, 2, 7}, with and without the analytic answer source;
+//! * N processes claiming disjoint [`Shard`]s of one grid into a shared
+//!   store perform zero duplicate evaluations, and a merge pass over the
+//!   full grid reproduces the single-process results from store hits
+//!   alone.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use segmul::coordinator::{
+    AnalyticMode, CpuBackend, EvalBackend, EvalJob, Shard, SweepGrid, SweepOutcome, SweepRunner,
+};
+use segmul::error::metrics::ErrorStats;
+use segmul::multiplier::DesignSet;
+use segmul::store::{ResultStore, StoreKey};
+
+const WORKER_COUNTS: [usize; 3] = [1, 2, 7];
+
+fn cpu_factory() -> impl Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static {
+    || Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+}
+
+fn tmp_store(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("segmul-store-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn mc_grid() -> SweepGrid {
+    SweepGrid {
+        bitwidths: vec![8, 12],
+        designs: DesignSet::Paper,
+        exhaustive_max_n: 12,
+        force_mc: true,
+        // > one chunk per config so mid-job checkpoints are non-trivial.
+        mc_samples: 300_000,
+        seed: 0x5EED,
+    }
+}
+
+fn assert_outcomes_bit_identical(got: &[SweepOutcome], want: &[SweepOutcome], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: outcome count");
+    for (g, w) in got.iter().zip(want) {
+        assert_eq!(g.job.design.name(), w.job.design.name(), "{ctx}: job order");
+        match (g.result(), w.result()) {
+            (Some(gr), Some(wr)) => {
+                // Full equality including the accumulation-order-
+                // sensitive sum_red, plus the exact f64 bit pattern.
+                assert_eq!(gr.stats, wr.stats, "{ctx}: {}", g.job.design.name());
+                assert_eq!(
+                    gr.stats.sum_red.to_bits(),
+                    wr.stats.sum_red.to_bits(),
+                    "{ctx}: sum_red bits for {}",
+                    g.job.design.name()
+                );
+                assert_eq!(gr.batches, wr.batches, "{ctx}: {}", g.job.design.name());
+            }
+            (None, None) => {} // both analytic
+            _ => panic!("{ctx}: answer source diverged for {}", g.job.design.name()),
+        }
+    }
+}
+
+/// A sweep preempted between jobs: the committed prefix answers from the
+/// store and the remainder evaluates fresh, for every worker count, with
+/// bytes identical to an uninterrupted no-store run.
+#[test]
+fn resume_between_jobs_bit_identical_across_worker_counts() {
+    let grid = mc_grid();
+    let jobs = grid.jobs();
+    assert!(jobs.len() >= 4, "grid too small to interrupt meaningfully");
+    let mut reference = SweepRunner::new(cpu_factory(), 2).unwrap();
+    let want = reference.run_grid(&grid, |_, _, _| {}).unwrap();
+
+    for workers in WORKER_COUNTS {
+        let dir = tmp_store(&format!("between-{workers}"));
+        // The victim evaluates only a prefix of the grid, then "dies".
+        let cut = jobs.len() / 2;
+        let mut victim = SweepRunner::new(cpu_factory(), workers).unwrap();
+        victim.set_store(ResultStore::open(&dir).unwrap());
+        victim.run_jobs(&jobs[..cut], |_, _, _| {}).unwrap();
+        let committed = victim.jobs_evaluated;
+        assert!(committed > 0);
+        drop(victim);
+
+        // A fresh process resumes the full grid against the same store.
+        let mut resumed = SweepRunner::new(cpu_factory(), workers).unwrap();
+        resumed.set_store(ResultStore::open(&dir).unwrap());
+        let got = resumed.run_jobs(&jobs, |_, _, _| {}).unwrap();
+        assert_eq!(resumed.store_hits, committed, "workers={workers}");
+        assert_eq!(
+            resumed.jobs_evaluated + resumed.store_hits + resumed.cache_hits,
+            jobs.len() as u64,
+            "workers={workers}"
+        );
+        assert_outcomes_bit_identical(&got, &want, &format!("workers={workers}"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A sweep preempted mid-job: the journal holds a strict prefix of the
+/// job's chunks, and the resumed run folds that prefix through the same
+/// ordered merge, so the result is bit-identical from any cut point at
+/// any worker count.
+#[test]
+fn resume_mid_job_from_journal_prefix_bit_identical() {
+    let job = EvalJob::mc(8, 3, true, 500_000, 42);
+    // Capture the job's per-chunk stats in merge order.
+    let capture = SweepRunner::new(cpu_factory(), 2).unwrap();
+    let mut chunks: Vec<(u64, ErrorStats)> = Vec::new();
+    let mut sink = |id: u64, s: &ErrorStats| chunks.push((id, s.clone()));
+    let want = capture
+        .pool()
+        .run_job_checkpointed(&job, &[], &mut |_| {}, Some(&mut sink))
+        .unwrap();
+    let batch = capture.pool().batch();
+    assert!(chunks.len() >= 4, "need several chunks to cut between");
+    assert!(chunks.iter().enumerate().all(|(i, (id, _))| *id == i as u64));
+
+    for workers in WORKER_COUNTS {
+        for cut in [1, chunks.len() / 2, chunks.len() - 1] {
+            let dir = tmp_store(&format!("midjob-{workers}-{cut}"));
+            let store = ResultStore::open(&dir).unwrap();
+            let skey = StoreKey::new(&job, "cpu", batch);
+            let mut writer = store.journal_writer(&skey, 0).unwrap();
+            for (id, stats) in &chunks[..cut] {
+                writer.append(*id, stats);
+            }
+            drop(writer);
+
+            let mut resumed = SweepRunner::new(cpu_factory(), workers).unwrap();
+            resumed.set_store(store);
+            let got = resumed.run_jobs(std::slice::from_ref(&job), |_, _, _| {}).unwrap();
+            assert_eq!(resumed.store_recoveries, 1, "workers={workers} cut={cut}");
+            assert_eq!(resumed.jobs_evaluated, 1, "workers={workers} cut={cut}");
+            let result = got[0].result().unwrap();
+            assert_eq!(result.stats, want.stats, "workers={workers} cut={cut}");
+            assert_eq!(
+                result.stats.sum_red.to_bits(),
+                want.stats.sum_red.to_bits(),
+                "workers={workers} cut={cut}"
+            );
+            assert_eq!(result.batches, want.batches, "workers={workers} cut={cut}");
+            // The resumed run committed the blob; the journal is gone.
+            let reread = resumed.store().unwrap().load(&skey).unwrap().expect("committed blob");
+            assert_eq!(reread.stats, want.stats);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+/// The analytic answer source composes with the store: closed-form
+/// answers never touch the disk, simulated ones round-trip through it,
+/// and a resumed `--analytic auto` sweep is bit-identical.
+#[test]
+fn resume_with_analytic_auto_bit_identical() {
+    let grid = SweepGrid {
+        bitwidths: vec![8],
+        designs: DesignSet::All,
+        exhaustive_max_n: 12,
+        force_mc: true,
+        mc_samples: 200_000,
+        seed: 0x5EED,
+    };
+    let mut reference = SweepRunner::new(cpu_factory(), 2).unwrap();
+    reference.set_analytic_mode(AnalyticMode::Auto);
+    let want = reference.run_grid(&grid, |_, _, _| {}).unwrap();
+    assert!(reference.analytic_answers > 0, "grid must exercise the analytic source");
+    assert!(reference.jobs_evaluated > 0, "grid must exercise the pool");
+
+    let dir = tmp_store("analytic");
+    let mut first = SweepRunner::new(cpu_factory(), 2).unwrap();
+    first.set_analytic_mode(AnalyticMode::Auto);
+    first.set_store(ResultStore::open(&dir).unwrap());
+    first.run_grid(&grid, |_, _, _| {}).unwrap();
+    let committed = first.jobs_evaluated;
+    drop(first);
+
+    for workers in WORKER_COUNTS {
+        let mut resumed = SweepRunner::new(cpu_factory(), workers).unwrap();
+        resumed.set_analytic_mode(AnalyticMode::Auto);
+        resumed.set_store(ResultStore::open(&dir).unwrap());
+        let got = resumed.run_grid(&grid, |_, _, _| {}).unwrap();
+        assert_eq!(resumed.jobs_evaluated, 0, "workers={workers}: store must answer");
+        assert_eq!(resumed.store_hits, committed, "workers={workers}");
+        assert_eq!(resumed.analytic_answers, reference.analytic_answers, "workers={workers}");
+        assert_outcomes_bit_identical(&got, &want, &format!("analytic workers={workers}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Two shard "processes" sharing one store evaluate disjoint halves of
+/// the grid with zero duplicate backend work, and a merge pass over the
+/// full grid answers entirely from the store, bit-identical to a
+/// single-process run.
+#[test]
+fn sharded_runs_merge_to_single_process_results_with_zero_duplicates() {
+    // Counting backend: every eval_batch call is recorded.
+    struct Counting {
+        inner: CpuBackend,
+        calls: Arc<AtomicUsize>,
+    }
+    impl EvalBackend for Counting {
+        fn name(&self) -> &'static str {
+            "cpu" // present as cpu so store keys match across runners
+        }
+        fn max_batch(&self) -> usize {
+            self.inner.max_batch()
+        }
+        fn supports(&self, n: u32) -> bool {
+            self.inner.supports(n)
+        }
+        fn eval_batch(&mut self, n: u32, t: u32, fix: bool, a: &[u64], b: &[u64]) -> Result<ErrorStats> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.inner.eval_batch(n, t, fix, a, b)
+        }
+    }
+    let counting_factory = |calls: &Arc<AtomicUsize>| {
+        let calls = calls.clone();
+        move || {
+            Ok(Box::new(Counting { inner: CpuBackend::new(), calls: calls.clone() })
+                as Box<dyn EvalBackend>)
+        }
+    };
+
+    let grid = mc_grid();
+    let jobs = grid.jobs();
+    let single_calls = Arc::new(AtomicUsize::new(0));
+    let mut single = SweepRunner::new(counting_factory(&single_calls), 2).unwrap();
+    let want = single.run_jobs(&jobs, |_, _, _| {}).unwrap();
+    let single_evals = single.jobs_evaluated;
+
+    let dir = tmp_store("shards");
+    let sharded_calls = Arc::new(AtomicUsize::new(0));
+    let mut evals_by_shard = Vec::new();
+    for index in 0..2 {
+        let shard = Shard { index, count: 2 };
+        let mine = shard.select(&jobs);
+        assert!(!mine.is_empty(), "shard {index} owns no jobs");
+        let mut runner = SweepRunner::new(counting_factory(&sharded_calls), 2).unwrap();
+        runner.set_store(ResultStore::open(&dir).unwrap());
+        runner.run_jobs(&mine, |_, _, _| {}).unwrap();
+        assert_eq!(runner.store_hits, 0, "shards are disjoint: no cross-shard hits expected");
+        evals_by_shard.push(runner.jobs_evaluated);
+    }
+    assert_eq!(
+        evals_by_shard.iter().sum::<u64>(),
+        single_evals,
+        "shards must evaluate exactly the single-process set, no duplicates"
+    );
+    assert_eq!(
+        sharded_calls.load(Ordering::Relaxed),
+        single_calls.load(Ordering::Relaxed),
+        "duplicate backend batches across shards"
+    );
+
+    // Merge pass: the full grid from the shared store, zero evaluations.
+    let merge_calls = Arc::new(AtomicUsize::new(0));
+    let mut merge = SweepRunner::new(counting_factory(&merge_calls), 2).unwrap();
+    merge.set_store(ResultStore::open(&dir).unwrap());
+    let got = merge.run_jobs(&jobs, |_, _, _| {}).unwrap();
+    assert_eq!(merge.jobs_evaluated, 0, "merge must be pure store hits");
+    assert_eq!(merge.store_hits, single_evals);
+    assert_eq!(merge_calls.load(Ordering::Relaxed), 0);
+    assert_outcomes_bit_identical(&got, &want, "sharded merge");
+    let _ = std::fs::remove_dir_all(&dir);
+}
