@@ -1,0 +1,176 @@
+#!/usr/bin/env bash
+# Serve smoke: prove the HTTP front end's headline behavior end-to-end,
+# against the real release binary, with real sockets.
+#
+#   1. Every endpoint answers: /healthz, /v1/designs, /metrics, /v1/eval,
+#      /v1/sweep (chunked ndjson), /v1/shutdown.
+#   2. The backend identity is machine-readable: the CLI prints a
+#      `backend: <name>` line and /metrics carries `serve_backend`.
+#   3. A burst of identical eval requests coalesces: strictly fewer pool
+#      dispatches than requests on /metrics.
+#   4. Malformed requests get typed JSON 4xx errors; the server survives.
+#   5. A saturating burst against a tiny --max-inflight budget yields
+#      typed 429s — never a hang, never a 5xx crash.
+#   6. Graceful drain: POST /v1/shutdown and SIGTERM both complete
+#      in-flight work and exit 0 with a drain summary.
+#
+# The byte-level malformed battery (truncated heads, header bombs, bogus
+# content-lengths) lives in rust/tests/serve_wire.rs where the client can
+# half-close sockets; this script exercises what curl can express.
+#
+# Usage: ci/serve_smoke.sh   (from the repo root; needs a release build —
+# set SEGMUL to override the binary path, PORT/PORT2 to rebind).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+SEGMUL="${SEGMUL:-target/release/segmul}"
+PORT="${PORT:-18787}"
+PORT2="${PORT2:-18788}"
+BASE="http://127.0.0.1:$PORT"
+WORK="$(mktemp -d)"
+SERVER_PID=""
+cleanup() {
+    [ -n "$SERVER_PID" ] && kill "$SERVER_PID" 2>/dev/null
+    rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+status() { curl -s -o "$WORK/body" -w '%{http_code}' "$@"; }
+body() { cat "$WORK/body"; }
+
+wait_healthy() {
+    local base=$1
+    for _ in $(seq 1 100); do
+        if [ "$(status "$base/healthz" || true)" = 200 ]; then return 0; fi
+        sleep 0.1
+    done
+    echo "FAIL: server at $base never became healthy"
+    exit 1
+}
+
+expect() {
+    local want=$1 got=$2 what=$3
+    if [ "$got" != "$want" ]; then
+        echo "FAIL: $what: expected $want, got $got ($(body))"
+        exit 1
+    fi
+    echo "ok: $what -> $got"
+}
+
+expect_body() {
+    local needle=$1 what=$2
+    if ! grep -q "$needle" "$WORK/body"; then
+        echo "FAIL: $what: body lacks $needle: $(body)"
+        exit 1
+    fi
+}
+
+echo "== boot: $SEGMUL serve on $BASE =="
+"$SEGMUL" serve --addr "127.0.0.1:$PORT" --workers 2 >"$WORK/server.log" 2>&1 &
+SERVER_PID=$!
+wait_healthy "$BASE"
+grep -q '^backend: ' "$WORK/server.log" || {
+    echo "FAIL: CLI did not print a machine-readable backend line"
+    cat "$WORK/server.log"
+    exit 1
+}
+echo "ok: $(grep '^backend: ' "$WORK/server.log")"
+
+echo "== every endpoint answers =="
+expect 200 "$(status "$BASE/healthz")" "GET /healthz"
+expect_body '"status":"ok"' "/healthz status field"
+expect 200 "$(status "$BASE/v1/designs")" "GET /v1/designs"
+expect_body '"segmented"' "/v1/designs carries the paper family"
+EVAL='{"design":{"family":"segmented","n":8,"t":3,"fix":true},"workload":{"kind":"mc","samples":200000,"seed":7}}'
+expect 200 "$(status -d "$EVAL" "$BASE/v1/eval")" "POST /v1/eval"
+expect_body '"source":"simulated"' "eval answer source"
+expect_body '"backend"' "eval answer backend identity"
+expect 200 "$(status -d '{"designs":"paper","bitwidths":[4]}' "$BASE/v1/sweep")" "POST /v1/sweep"
+expect_body '"status":"complete"' "sweep stream trailer"
+expect 200 "$(status "$BASE/metrics")" "GET /metrics"
+expect_body '^serve_backend ' "/metrics backend identity"
+
+echo "== coalesced burst: identical requests share one dispatch =="
+BURST='{"design":{"family":"segmented","n":8,"t":2,"fix":false},"workload":{"kind":"mc","samples":2000000,"seed":99}}'
+for i in $(seq 1 6); do
+    curl -s -o "$WORK/burst$i" -w '%{http_code}\n' -d "$BURST" "$BASE/v1/eval" >>"$WORK/burst.codes" &
+done
+wait
+sort -u "$WORK/burst.codes" | grep -qx 200 || { echo "FAIL: burst requests failed"; cat "$WORK/burst.codes"; exit 1; }
+[ "$(sort -u "$WORK/burst.codes" | wc -l)" = 1 ] || { echo "FAIL: non-200 in burst"; cat "$WORK/burst.codes"; exit 1; }
+status "$BASE/metrics" >/dev/null
+requests=$(awk '/^serve_coalesce_requests /{print $2}' "$WORK/body")
+dispatched=$(awk '/^serve_coalesce_dispatched /{print $2}' "$WORK/body")
+echo "coalescing: $requests eval requests -> $dispatched pool dispatches"
+[ "$dispatched" -lt "$requests" ] || {
+    echo "FAIL: identical burst did not coalesce ($dispatched dispatches for $requests requests)"
+    exit 1
+}
+# Only `cached`/`wall_ms` may differ between a dispatch and a cache hit;
+# the metrics object must be byte-identical across the whole burst.
+m1=$(grep -o '"metrics":{[^}]*}' "$WORK/burst1")
+for i in $(seq 2 6); do
+    mi=$(grep -o '"metrics":{[^}]*}' "$WORK/burst$i")
+    [ -n "$m1" ] && [ "$m1" = "$mi" ] || { echo "FAIL: coalesced answers differ"; exit 1; }
+done
+
+echo "== malformed battery: typed JSON 4xx, server survives =="
+expect 400 "$(status -d 'not json' "$BASE/v1/eval")" "garbage body"
+expect_body '"kind":"serve"' "garbage body error kind"
+expect 400 "$(status -d '{}' "$BASE/v1/eval")" "missing fields"
+expect 400 "$(status -d '{"design":{"family":"warp","n":8},"workload":{"kind":"exhaustive"}}' "$BASE/v1/eval")" "unknown family"
+expect 400 "$(status -d '{"design":{"family":"segmented","n":8,"t":9,"fix":false},"workload":{"kind":"exhaustive"}}' "$BASE/v1/eval")" "invalid segment count"
+expect_body '"kind":"spec"' "spec validation error kind"
+expect 404 "$(status "$BASE/nope")" "unknown route"
+expect 405 "$(status -X DELETE "$BASE/metrics")" "wrong method"
+head -c 1200000 /dev/zero | tr '\0' 'a' >"$WORK/huge"
+expect 413 "$(status --data-binary "@$WORK/huge" "$BASE/v1/eval")" "oversized payload"
+expect 200 "$(status "$BASE/healthz")" "health after the battery"
+
+echo "== graceful drain via POST /v1/shutdown =="
+expect 200 "$(status -d '{}' "$BASE/v1/shutdown")" "POST /v1/shutdown"
+expect_body '"status":"draining"' "shutdown acknowledgement"
+wait "$SERVER_PID"
+SERVER_PID=""
+grep -q '^drained: ' "$WORK/server.log" || {
+    echo "FAIL: no drain summary in the server log"
+    cat "$WORK/server.log"
+    exit 1
+}
+echo "ok: $(grep '^drained: ' "$WORK/server.log")"
+
+echo "== saturating burst against --max-inflight 2: typed 429s, no hangs =="
+BASE2="http://127.0.0.1:$PORT2"
+"$SEGMUL" serve --addr "127.0.0.1:$PORT2" --workers 2 --max-inflight 2 >"$WORK/server2.log" 2>&1 &
+SERVER_PID=$!
+wait_healthy "$BASE2"
+: >"$WORK/sat.codes"
+for i in $(seq 1 8); do
+    curl -s -o /dev/null -w '%{http_code}\n' \
+        -d '{"design":{"family":"segmented","n":16,"t":5,"fix":true},"workload":{"kind":"mc","samples":8000000,"seed":'"$i"'}}' \
+        "$BASE2/v1/eval" >>"$WORK/sat.codes" &
+done
+wait
+sort "$WORK/sat.codes" | uniq -c
+grep -qx 200 "$WORK/sat.codes" || { echo "FAIL: saturation burst: nothing was admitted"; exit 1; }
+grep -qx 429 "$WORK/sat.codes" || { echo "FAIL: saturation burst: no typed 429 rejection"; exit 1; }
+if grep -vqx -e 200 -e 429 "$WORK/sat.codes"; then
+    echo "FAIL: unexpected status in saturation burst"
+    exit 1
+fi
+status "$BASE2/metrics" >/dev/null
+rejected=$(awk '/^serve_rejected_429 /{print $2}' "$WORK/body")
+echo "admission control: $rejected requests rejected with 429"
+[ "$rejected" -ge 1 ] || { echo "FAIL: serve_rejected_429 not counted"; exit 1; }
+
+echo "== graceful drain via SIGTERM =="
+kill -TERM "$SERVER_PID"
+wait "$SERVER_PID"
+SERVER_PID=""
+grep -q '^drained: ' "$WORK/server2.log" || {
+    echo "FAIL: no drain summary after SIGTERM"
+    cat "$WORK/server2.log"
+    exit 1
+}
+echo "ok: $(grep '^drained: ' "$WORK/server2.log")"
+echo "PASS: serve smoke"

@@ -1,0 +1,121 @@
+//! Serving-path latency and coalescing: loopback HTTP clients against an
+//! in-process `segmul serve` server.
+//!
+//! Each round posts one heavy "primer" eval (which occupies the engine
+//! thread) and then a burst of identical small evals; the burst queues
+//! behind the primer and the coalescer answers it with a single pool
+//! dispatch. The summary writes `BENCH_serve.json` for the CI
+//! bench-regression gate:
+//!
+//! - `serve_reqs_per_s`        end-to-end request throughput (gated floor)
+//! - `serve_coalesce_ratio`    requests per pool dispatch (gated floor)
+//! - `serve_p99_ms`            client-observed p99 latency (informational;
+//!   lower is better, so it is never gated by the higher-is-better rule)
+//!
+//! `SEGMUL_BENCH_FAST=1` shrinks rounds and sample counts for smoke runs.
+
+use std::time::Instant;
+
+use segmul::api::BackendChoice;
+use segmul::bench::{section, Summary};
+use segmul::report::percentile;
+use segmul::serve::{client, metrics::metric_value, ServeConfig, Server};
+use segmul::util::json::Json;
+use segmul::util::threadpool::default_workers;
+
+fn eval_body(t: u32, samples: u64, seed: u64) -> Json {
+    let text = format!(
+        r#"{{"design":{{"family":"segmented","n":16,"t":{t},"fix":true}},
+            "workload":{{"kind":"mc","samples":{samples},"seed":{seed}}}}}"#
+    );
+    Json::parse(&text).expect("static request body")
+}
+
+fn main() {
+    let fast = std::env::var_os("SEGMUL_BENCH_FAST").is_some();
+    let workers = default_workers().expect("invalid SEGMUL_WORKERS").max(2);
+    let rounds: u64 = if fast { 3 } else { 8 };
+    let burst: u64 = 8;
+    let primer_samples: u64 = if fast { 1 << 15 } else { 1 << 17 };
+    let burst_samples: u64 = if fast { 1 << 12 } else { 1 << 14 };
+
+    let server = Server::start(ServeConfig {
+        backend: BackendChoice::Cpu,
+        workers: Some(workers),
+        ..ServeConfig::default()
+    })
+    .expect("server startup");
+    let addr = server.addr();
+
+    // Warm the engine (first-request costs: thread spawn, pool build).
+    let warm = client::post_json(addr, "/v1/eval", &eval_body(1, 1 << 10, 1)).expect("warm-up");
+    assert_eq!(warm.status, 200, "warm-up failed: {}", warm.text());
+
+    section(&format!(
+        "serve latency ({workers} workers, {rounds} rounds x {burst}-client coalesced bursts)"
+    ));
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    for round in 0..rounds {
+        // The primer keeps the engine busy so the burst piles up in the
+        // admission queue and is answered by one coalesced dispatch.
+        let primer = std::thread::spawn(move || {
+            client::post_json(addr, "/v1/eval", &eval_body(7, primer_samples, 100 + round))
+        });
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let clients: Vec<_> = (0..burst)
+            .map(|_| {
+                std::thread::spawn(move || {
+                    let started = Instant::now();
+                    let resp = client::post_json(
+                        addr,
+                        "/v1/eval",
+                        &eval_body(3, burst_samples, 1000 + round),
+                    )?;
+                    Ok::<_, segmul::api::SegmulError>((
+                        resp.status,
+                        started.elapsed().as_secs_f64() * 1e3,
+                    ))
+                })
+            })
+            .collect();
+        for handle in clients {
+            let (status, lat) = handle.join().expect("client thread").expect("burst request");
+            assert_eq!(status, 200, "burst request failed");
+            latencies_ms.push(lat);
+        }
+        let primed = primer.join().expect("primer thread").expect("primer request");
+        assert_eq!(primed.status, 200, "primer request failed");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let requests = rounds * (burst + 1);
+    let reqs_per_s = requests as f64 / wall;
+
+    let scrape = client::get(addr, "/metrics").expect("/metrics scrape");
+    let doc = scrape.text();
+    let coalesce_ratio: f64 = metric_value(&doc, "serve_coalesce_ratio")
+        .and_then(|v| v.parse().ok())
+        .expect("serve_coalesce_ratio in /metrics");
+
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+    let p50 = percentile(&latencies_ms, 0.50);
+    let p99 = percentile(&latencies_ms, 0.99);
+    println!("request throughput            : {reqs_per_s:>9.1} reqs/s ({requests} requests)");
+    println!("coalesce ratio                : {coalesce_ratio:>9.2} requests/dispatch");
+    println!("burst latency p50 / p99       : {p50:>6.1} ms / {p99:.1} ms");
+
+    let down = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default()))
+        .expect("shutdown");
+    assert_eq!(down.status, 200, "shutdown failed");
+    let summary = server.join();
+    assert!(
+        summary.telemetry.jobs_completed >= 1,
+        "server answered no jobs"
+    );
+
+    let mut out = Summary::new("serve");
+    out.metric("serve_reqs_per_s", reqs_per_s)
+        .metric("serve_coalesce_ratio", coalesce_ratio)
+        .metric("serve_p99_ms", p99);
+    out.write().expect("write bench summary");
+}

@@ -1,54 +1,89 @@
-//! Serving demo: batched evaluation requests through the coordinator with
-//! the PJRT backend (the request path never touches python), reporting
-//! per-job latency percentiles and end-to-end throughput.
+//! Serving demo: concurrent loopback clients against an in-process
+//! `segmul serve` server — the same HTTP front end, coalescer, and
+//! admission control the CLI runs, exercised end-to-end with latency
+//! percentiles and a `/metrics` scrape.
+//!
+//! The backend identity is printed machine-readably (`backend: <name>`)
+//! and checkable: set `SEGMUL_EXPECT_BACKEND=pjrt` (or `cpu`) to make
+//! the demo exit non-zero when the server silently fell back to a
+//! different backend — the old demo only mentioned the fallback on
+//! stderr and still exited 0.
 //!
 //! Run: `cargo run --release --example serve_eval`
 
 use std::path::PathBuf;
 use std::time::Instant;
 
-use segmul::coordinator::{CpuBackend, EvalBackend, EvalJob, EvalService, PjrtBackend};
+use segmul::api::BackendChoice;
+use segmul::report::percentile;
+use segmul::serve::{client, metrics::metric_value, ServeConfig, Server};
+use segmul::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     let artifacts = PathBuf::from("artifacts");
-    let use_pjrt = artifacts.join("manifest.json").exists();
-    let svc = EvalService::start(move || {
-        if use_pjrt {
-            Ok(Box::new(PjrtBackend::load(&artifacts)?) as Box<dyn EvalBackend>)
-        } else {
-            eprintln!("no artifacts/ — falling back to the CPU backend");
-            Ok(Box::new(CpuBackend::new()) as Box<dyn EvalBackend>)
+    let server = Server::start(ServeConfig {
+        backend: BackendChoice::Auto(artifacts),
+        ..ServeConfig::default()
+    })
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let addr = server.addr();
+    let backend = server.backend_name().to_string();
+    println!("server on http://{addr}");
+    println!("backend: {backend}");
+    if let Ok(expected) = std::env::var("SEGMUL_EXPECT_BACKEND") {
+        if backend != expected {
+            eprintln!("error: expected the {expected} backend, got {backend}");
+            std::process::exit(1);
         }
-    })?;
+    }
 
-    let jobs = 24u64;
+    let jobs = 24u32;
     let samples = 1u64 << 17;
     let n = 16u32;
-    println!(
-        "submitting {jobs} evaluation jobs (n={n}, {samples} samples each) to the {} backend",
-        if use_pjrt { "pjrt" } else { "cpu" }
-    );
+    println!("submitting {jobs} concurrent eval requests (n={n}, {samples} samples each)");
 
     let t0 = Instant::now();
-    let submitted: Vec<_> = (0..jobs)
+    let handles: Vec<_> = (0..jobs)
         .map(|i| {
-            let t = 1 + (i as u32 % (n / 2));
-            (Instant::now(), svc.submit(EvalJob::mc(n, t, i % 2 == 0, samples, 1000 + i)))
+            std::thread::spawn(move || {
+                let t = 1 + (i % (n / 2));
+                // Three clients per (t, fix) point ask the exact same
+                // question — the coalescer answers them with one pool
+                // evaluation each.
+                let body = format!(
+                    r#"{{"design":{{"family":"segmented","n":{n},"t":{t},"fix":{}}},
+                        "workload":{{"kind":"mc","samples":{samples},"seed":{}}}}}"#,
+                    i % 2 == 0,
+                    1000 + u64::from(i % 8),
+                );
+                let t_submit = Instant::now();
+                let resp = client::post_json(addr, "/v1/eval", &Json::parse(&body).unwrap())?;
+                Ok::<_, segmul::api::SegmulError>((
+                    resp,
+                    t_submit.elapsed().as_secs_f64() * 1e3,
+                ))
+            })
         })
         .collect();
 
     let mut latencies_ms: Vec<f64> = Vec::new();
-    for (i, (t_submit, ticket)) in submitted.into_iter().enumerate() {
-        let r = ticket.wait()?;
-        let lat = t_submit.elapsed().as_secs_f64() * 1e3;
+    for (i, handle) in handles.into_iter().enumerate() {
+        let (resp, lat) = handle.join().expect("client thread panicked")?;
+        anyhow::ensure!(resp.status == 200, "request {i}: http {}: {}", resp.status, resp.text());
+        let row = resp.json().map_err(|e| anyhow::anyhow!("{e}"))?;
         latencies_ms.push(lat);
-        let m = r.metrics()?;
-        if i < 4 || i as u64 == jobs - 1 {
+        if i < 4 || i as u32 == jobs - 1 {
+            let m = row.get("metrics").expect("metrics field");
             println!(
-                "  job {i:>2}: {} ER={:.5} NMED={:.3e} [{:.0} ms]",
-                r.job.design.name(),
-                m.er,
-                m.nmed,
+                "  req {i:>2}: {} ER={:.5} NMED={:.3e} {} [{:.0} ms]",
+                row.get("name").and_then(Json::as_str).unwrap_or("?"),
+                m.get("er").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                m.get("nmed").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                if row.get("cached").and_then(Json::as_bool) == Some(true) {
+                    "(cached)"
+                } else {
+                    ""
+                },
                 lat
             );
         } else if i == 4 {
@@ -57,22 +92,35 @@ fn main() -> anyhow::Result<()> {
     }
     let wall = t0.elapsed();
     latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pct = |p: f64| latencies_ms[((latencies_ms.len() - 1) as f64 * p) as usize];
-    let tele = svc.telemetry();
+
+    let scrape = client::get(addr, "/metrics").map_err(|e| anyhow::anyhow!("{e}"))?;
+    let doc = scrape.text();
+    let metric = |k: &str| metric_value(&doc, k).unwrap_or_else(|| "?".into());
     println!("\nresults:");
-    println!("  jobs      : {} completed, {} failed", tele.jobs_completed, tele.jobs_failed);
-    println!("  pairs     : {} ({} batches)", tele.pairs_evaluated, tele.batches_executed);
+    println!("  requests  : {} ({} ok)", metric("serve_requests_total"), metric("serve_responses_2xx"));
+    println!(
+        "  coalescing: {} requests -> {} pool dispatches (ratio {})",
+        metric("serve_coalesce_requests"),
+        metric("serve_coalesce_dispatched"),
+        metric("serve_coalesce_ratio")
+    );
+    println!("  pairs     : {}", metric("session_pairs_evaluated"));
     println!("  wall      : {:.2} s", wall.as_secs_f64());
     println!(
-        "  throughput: {:.2} Mpairs/s end-to-end",
-        tele.pairs_evaluated as f64 / wall.as_secs_f64() / 1e6
+        "  latency   : p50 {:.0} ms / p90 {:.0} ms / p99 {:.0} ms (client-observed)",
+        percentile(&latencies_ms, 0.50),
+        percentile(&latencies_ms, 0.90),
+        percentile(&latencies_ms, 0.99)
     );
+    println!("  server p99: {} ms (from /metrics)", metric("serve_latency_p99_ms"));
+
+    let down = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default()))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    anyhow::ensure!(down.status == 200, "shutdown failed: http {}", down.status);
+    let summary = server.join();
     println!(
-        "  latency   : p50 {:.0} ms / p90 {:.0} ms / p99 {:.0} ms (queue + execute)",
-        pct(0.50),
-        pct(0.90),
-        pct(0.99)
+        "drained: {} jobs completed, {} evaluated on the {} backend",
+        summary.telemetry.jobs_completed, summary.telemetry.jobs_evaluated, summary.backend
     );
-    svc.shutdown();
     Ok(())
 }

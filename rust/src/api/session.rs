@@ -331,6 +331,12 @@ impl Session {
         self.runner.pool().backend_name()
     }
 
+    /// Chunk batch size of the pool's backend (fixes the MC
+    /// chunk-to-stream layout, and with it the store-key identity).
+    pub fn batch(&self) -> usize {
+        self.runner.pool().batch()
+    }
+
     pub fn cache_hits(&self) -> u64 {
         self.runner.cache_hits
     }

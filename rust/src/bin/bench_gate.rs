@@ -6,7 +6,13 @@
 //! metric regresses past its tolerance (default 15%) or disappears.
 //!
 //!     bench-gate --baseline ci/bench_baseline.json [--tolerance 0.15] \
+//!                [--only PREFIX ...] \
 //!                target/bench-json/BENCH_batch_kernel.json [more.json ...]
+//!
+//! `--only PREFIX` (repeatable) restricts the gate to baseline metrics
+//! whose names start with a prefix — for jobs that run a subset of the
+//! benches (e.g. the serve-smoke job gates only `serve_` metrics without
+//! the other benches' summaries counting as MISSING failures).
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -26,6 +32,7 @@ fn load_json(path: &Path) -> Result<Json> {
 fn run() -> Result<bool> {
     let mut baseline: Option<PathBuf> = None;
     let mut tolerance = 0.15f64;
+    let mut onlys: Vec<String> = Vec::new();
     let mut currents: Vec<PathBuf> = Vec::new();
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -39,6 +46,9 @@ fn run() -> Result<bool> {
                 let v = it.next().ok_or_else(|| anyhow!("--tolerance needs a value"))?;
                 tolerance = v.parse().map_err(|_| anyhow!("bad tolerance {v:?}"))?;
             }
+            "--only" => {
+                onlys.push(it.next().ok_or_else(|| anyhow!("--only needs a metric prefix"))?);
+            }
             other if other.starts_with("--") => bail!("unknown option {other}"),
             other => currents.push(PathBuf::from(other)),
         }
@@ -50,9 +60,19 @@ fn run() -> Result<bool> {
 
     let base_doc = load_json(&baseline)?;
     let current_docs: Vec<Json> = currents.iter().map(|p| load_json(p)).collect::<Result<_>>()?;
-    let checks = gate_compare(&base_doc, &current_docs, tolerance);
+    let mut checks = gate_compare(&base_doc, &current_docs, tolerance);
     if checks.is_empty() {
         bail!("baseline {} defines no metrics", baseline.display());
+    }
+    if !onlys.is_empty() {
+        checks.retain(|c| onlys.iter().any(|p| c.metric.starts_with(p.as_str())));
+        if checks.is_empty() {
+            bail!(
+                "--only {:?} matches no metric in baseline {}",
+                onlys,
+                baseline.display()
+            );
+        }
     }
 
     let fmt = |v: f64| format!("{v:.3}");

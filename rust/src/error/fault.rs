@@ -57,6 +57,16 @@ pub enum SegmulError {
     },
     /// Report / persistence I/O failure.
     Io(String),
+    /// A serving-layer failure (`crate::serve`): an admission rejection
+    /// (429 over-budget, 503 draining), a deadline expiry (504), or a
+    /// malformed wire request (400/404/405/413/431). Carries the HTTP
+    /// status the wire layer maps it to, so the rejection class survives
+    /// a trip through `anyhow` and back.
+    Serve {
+        /// HTTP status code of the wire mapping.
+        status: u16,
+        reason: String,
+    },
 }
 
 impl SegmulError {
@@ -88,6 +98,10 @@ impl SegmulError {
         SegmulError::Store { path: path.into(), reason: reason.into() }
     }
 
+    pub fn serve(status: u16, reason: impl Into<String>) -> Self {
+        SegmulError::Serve { status, reason: reason.into() }
+    }
+
     /// Short class tag (stable across message rewording).
     pub fn kind(&self) -> &'static str {
         match self {
@@ -100,6 +114,7 @@ impl SegmulError {
             SegmulError::Stats(_) => "stats",
             SegmulError::Store { .. } => "store",
             SegmulError::Io(_) => "io",
+            SegmulError::Serve { .. } => "serve",
         }
     }
 }
@@ -122,6 +137,9 @@ impl fmt::Display for SegmulError {
                 write!(f, "result store error at {path}: {reason}")
             }
             SegmulError::Io(m) => write!(f, "io error: {m}"),
+            SegmulError::Serve { status, reason } => {
+                write!(f, "serve error (http {status}): {reason}")
+            }
         }
     }
 }
@@ -170,6 +188,11 @@ mod tests {
         assert!(e.to_string().contains("store/blobs/ab.json"));
         assert!(e.to_string().contains("integrity"));
         assert_eq!(e.kind(), "store");
+        let e = SegmulError::serve(429, "in-flight budget exhausted");
+        assert!(e.to_string().contains("429"));
+        assert!(e.to_string().contains("budget"));
+        assert_eq!(e.kind(), "serve");
+        assert_eq!(e, SegmulError::Serve { status: 429, reason: "in-flight budget exhausted".into() });
     }
 
     #[test]

@@ -35,6 +35,7 @@ pub mod multiplier;
 pub mod netlist;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod store;
 pub mod tech;
 pub mod util;

@@ -16,7 +16,9 @@
 //!   hw       — hardware figures (FPGA + ASIC models) for one config
 //!   figures  — regenerate paper artifacts (fig2|mae|fig3a|fig3b|probprop|
 //!              headline|seqcomb|all) into the results directory
-//!   serve    — demo of the evaluation service (batched jobs, telemetry)
+//!   serve    — HTTP evaluation service (typed /v1/eval + /v1/sweep,
+//!              request coalescing, admission control, latency telemetry,
+//!              graceful drain)
 //!   estimate — probability-propagation ER/MED estimates (no simulation)
 //!
 //! Global options: --artifacts DIR, --results DIR, --config FILE,
@@ -540,48 +542,59 @@ fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Run the HTTP evaluation service: typed `/v1/eval` + `/v1/sweep`
+/// endpoints over the session layers (cache, analytic registry,
+/// persistent store), with request coalescing, an in-flight admission
+/// budget (typed 429/503), per-request deadlines, and a graceful drain
+/// on SIGINT/SIGTERM or `POST /v1/shutdown`.
 fn cmd_serve(args: &Args) -> Result<()> {
-    use segmul::api::EvalService;
+    use segmul::serve::{install_drain_signals, ServeConfig, Server};
     let cfg = load_config(args)?;
-    let jobs = args.opt_u64("jobs")?.unwrap_or(16);
-    let n = args.opt_u32("n")?.unwrap_or(16);
-    let samples = cfg.mc_samples;
     let workers = workers_from(args, &cfg)?;
-    let factory = backend_choice(args, &cfg)?.into_factory();
-    let svc = EvalService::start_pool(factory, workers)?;
-    println!(
-        "service up ({} executors); submitting {jobs} jobs (n={n}, {samples} samples each)",
-        svc.pool_size()
-    );
-    let started = std::time::Instant::now();
-    let tickets: Vec<_> = (0..jobs)
-        .map(|i| {
-            let t = 1 + (i as u32 % (n / 2).max(1));
-            svc.submit(EvalJob::mc(n, t, i % 2 == 0, samples, cfg.seed + i))
-        })
-        .collect();
-    for (i, ticket) in tickets.into_iter().enumerate() {
-        let r = ticket.wait()?;
-        let m = r.metrics()?;
-        println!(
-            "  job {i:>3}: {} ER={:.5} MED={:.2} ({:.1} ms)",
-            r.job.design.name(),
-            m.er,
-            m.med_abs,
-            r.wall.as_secs_f64() * 1e3
-        );
+    let analytic = match args.opt("analytic") {
+        Some(s) => AnalyticMode::parse(s)?,
+        None => AnalyticMode::Off,
+    };
+    let max_inflight = args.opt_u64("max-inflight")?.unwrap_or(64) as usize;
+    if max_inflight == 0 {
+        bail!("--max-inflight 0: the server must admit at least one work item");
     }
-    let wall = started.elapsed();
-    let t = svc.telemetry();
+    let serve_cfg = ServeConfig {
+        addr: args.opt("addr").unwrap_or("127.0.0.1:8787").to_string(),
+        workers: Some(workers),
+        backend: backend_choice(args, &cfg)?,
+        analytic,
+        store: args.opt("store").map(PathBuf::from),
+        seed: cfg.seed,
+        mc_samples: cfg.mc_samples,
+        exhaustive_max_n: cfg.exhaustive_max_n,
+        max_inflight,
+        default_deadline: std::time::Duration::from_millis(
+            args.opt_u64("deadline-ms")?.unwrap_or(30_000).max(1),
+        ),
+        limits: Default::default(),
+    };
+    install_drain_signals();
+    let server = Server::start(serve_cfg)?;
+    println!("listening on http://{}", server.addr());
+    // Machine-readable backend identity (also served in /healthz,
+    // /metrics, and every eval response) — scripts assert on this line
+    // instead of scraping the stderr fallback note.
+    println!("backend: {}", server.backend_name());
+    println!("endpoints: GET /healthz /v1/designs /metrics | POST /v1/eval /v1/sweep /v1/shutdown");
+    println!("drain: SIGINT/SIGTERM or POST /v1/shutdown");
+    let summary = server.join();
+    let t = &summary.telemetry;
     println!(
-        "done: {} jobs, {} pairs in {:.2} s ({:.2} Mpairs/s end-to-end, {} batches)",
+        "drained: {} requests, {} jobs ({} evaluated, {} cache hits, {} store hits, {} analytic) on the {} backend",
+        summary.requests_total,
         t.jobs_completed,
-        t.pairs_evaluated,
-        wall.as_secs_f64(),
-        t.pairs_evaluated as f64 / wall.as_secs_f64() / 1e6,
-        t.batches_executed
+        t.jobs_evaluated,
+        t.cache_hits,
+        t.store_hits,
+        t.analytic_answers,
+        summary.backend
     );
-    svc.shutdown();
     Ok(())
 }
 
@@ -616,7 +629,14 @@ fn usage() -> &'static str {
            (emit lowered PJRT modules; default: the full sweep grid, batch 8192)
   hw       --n N [--t T] [--hw-vectors V]
   figures  [fig2|mae|fig3a|fig3b|probprop|headline|seqcomb|all] [--results DIR]
-  serve    [--jobs J] [--n N] [--workers W] [--backend cpu|pjrt]
+  serve    [--addr HOST:PORT] [--workers W] [--backend cpu|pjrt] [--store DIR]
+           [--analytic off|auto|require] [--max-inflight K] [--deadline-ms D]
+           (HTTP evaluation service, default 127.0.0.1:8787: POST /v1/eval and
+            /v1/sweep (chunked ndjson stream), GET /healthz /v1/designs /metrics;
+            identical concurrent requests coalesce into one pool evaluation,
+            typed 429 past the in-flight budget, 503 while draining, 504 past a
+            request deadline; graceful drain on SIGINT/SIGTERM or POST
+            /v1/shutdown)
   estimate --n N [--t T]"
 }
 

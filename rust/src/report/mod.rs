@@ -6,6 +6,8 @@
 
 pub mod csv;
 pub mod figures;
+pub mod percentile;
 pub mod sweep;
 
 pub use figures::*;
+pub use percentile::percentile;

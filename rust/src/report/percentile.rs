@@ -1,0 +1,60 @@
+//! Shared nearest-rank percentile — the one latency-percentile
+//! definition used by the serving layer (`/metrics`, `BENCH_serve.json`)
+//! and the loopback example.
+//!
+//! The previous per-example helper used a floor-biased index
+//! (`(len - 1) * p as usize`), which under-reports upper percentiles on
+//! small sample sets: for 10 samples it returned the 9th value as "p99"
+//! instead of the maximum. Nearest-rank is the standard fix: the p-th
+//! percentile of N sorted samples is the value at rank `ceil(p * N)`
+//! (1-based), so p99 of 10 samples is the 10th — the tail is never
+//! rounded away.
+
+/// Nearest-rank percentile of an **ascending-sorted** sample slice.
+///
+/// `p` is a fraction in `(0, 1]` (`0.99` for p99); values outside the
+/// range are clamped. Returns `NaN` for an empty slice — the report
+/// layers render that as `-` rather than panicking.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let p = p.clamp(f64::MIN_POSITIVE, 1.0);
+    let rank = (p * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_rank_definition() {
+        let v: Vec<f64> = (1..=10).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 5.0);
+        assert_eq!(percentile(&v, 0.90), 9.0);
+        // The old floor-biased index returned 9.0 here; nearest-rank
+        // keeps the tail: p99 of 10 samples is the maximum.
+        assert_eq!(percentile(&v, 0.99), 10.0);
+        assert_eq!(percentile(&v, 1.0), 10.0);
+    }
+
+    #[test]
+    fn small_and_degenerate_inputs() {
+        assert!(percentile(&[], 0.5).is_nan());
+        assert_eq!(percentile(&[7.0], 0.01), 7.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        let two = [1.0, 2.0];
+        assert_eq!(percentile(&two, 0.50), 1.0);
+        assert_eq!(percentile(&two, 0.51), 2.0);
+        // Out-of-range p clamps instead of indexing out of bounds.
+        assert_eq!(percentile(&two, -1.0), 1.0);
+        assert_eq!(percentile(&two, 2.0), 2.0);
+    }
+
+    #[test]
+    fn p50_of_even_count_is_lower_median() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.5), 2.0);
+    }
+}

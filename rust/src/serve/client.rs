@@ -1,0 +1,197 @@
+//! Minimal blocking loopback HTTP client.
+//!
+//! Shared by the integration tests, the latency bench, and the
+//! `serve_eval` example so none of them hand-roll socket code. One
+//! request per connection (matching the server's `Connection: close`
+//! policy); chunked response bodies are decoded transparently.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::error::SegmulError;
+use crate::util::json::Json;
+
+/// A fully read response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    /// Header name (lowercased) / value pairs.
+    pub headers: Vec<(String, String)>,
+    /// Body bytes, de-chunked if the response was chunk-encoded.
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    pub fn json(&self) -> Result<Json, SegmulError> {
+        Json::parse(&self.text())
+            .map_err(|e| SegmulError::Io(format!("response body is not JSON: {e}")))
+    }
+
+    /// Non-empty body lines, each parsed as JSON (ndjson streams).
+    pub fn json_lines(&self) -> Result<Vec<Json>, SegmulError> {
+        self.text()
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| {
+                Json::parse(l).map_err(|e| SegmulError::Io(format!("bad ndjson line {l:?}: {e}")))
+            })
+            .collect()
+    }
+}
+
+fn io(e: std::io::Error, what: &str) -> SegmulError {
+    SegmulError::Io(format!("{what}: {e}"))
+}
+
+/// `GET path`.
+pub fn get(addr: SocketAddr, path: &str) -> Result<Response, SegmulError> {
+    request(addr, "GET", path, None)
+}
+
+/// `POST path` with a JSON body.
+pub fn post_json(addr: SocketAddr, path: &str, body: &Json) -> Result<Response, SegmulError> {
+    request(addr, "POST", path, Some(body.to_string_compact().into_bytes()))
+}
+
+/// `POST path` with verbatim body bytes (malformed-payload tests).
+pub fn post_bytes(addr: SocketAddr, path: &str, body: &[u8]) -> Result<Response, SegmulError> {
+    request(addr, "POST", path, Some(body.to_vec()))
+}
+
+/// A well-formed one-shot request.
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<Vec<u8>>,
+) -> Result<Response, SegmulError> {
+    let body = body.unwrap_or_default();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: segmul\r\nContent-Length: {}\r\n\r\n",
+        body.len()
+    );
+    let mut raw = head.into_bytes();
+    raw.extend_from_slice(&body);
+    send_bytes(addr, &raw)
+}
+
+/// Write raw bytes — malformed on purpose or otherwise — and read back
+/// whatever the server answers. The write side is half-closed after the
+/// payload so the server sees EOF instead of a stalled read.
+pub fn send_bytes(addr: SocketAddr, raw: &[u8]) -> Result<Response, SegmulError> {
+    let mut stream =
+        TcpStream::connect(addr).map_err(|e| io(e, &format!("connect {addr}")))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(120)))
+        .map_err(|e| io(e, "set_read_timeout"))?;
+    let _ = stream.set_nodelay(true);
+    stream.write_all(raw).map_err(|e| io(e, "write request"))?;
+    stream.flush().map_err(|e| io(e, "flush request"))?;
+    let _ = stream.shutdown(Shutdown::Write);
+    let mut buf = Vec::new();
+    stream.read_to_end(&mut buf).map_err(|e| io(e, "read response"))?;
+    parse_response(&buf)
+}
+
+/// Parse a complete response byte buffer (head + body, chunked or not).
+pub fn parse_response(buf: &[u8]) -> Result<Response, SegmulError> {
+    let head_end = buf
+        .windows(4)
+        .position(|w| w == b"\r\n\r\n")
+        .ok_or_else(|| SegmulError::Io("response head never terminated".into()))?;
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| SegmulError::Io("response head is not UTF-8".into()))?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or_default();
+    let status = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| SegmulError::Io(format!("bad status line {status_line:?}")))?;
+    let mut headers = Vec::new();
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(SegmulError::Io(format!("bad response header {line:?}")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let mut resp = Response { status, headers, body: buf[head_end + 4..].to_vec() };
+    let chunked = resp
+        .header("transfer-encoding")
+        .is_some_and(|v| v.eq_ignore_ascii_case("chunked"));
+    if chunked {
+        resp.body = dechunk(&resp.body)?;
+    }
+    Ok(resp)
+}
+
+/// Decode a chunked transfer-encoding body.
+fn dechunk(mut rest: &[u8]) -> Result<Vec<u8>, SegmulError> {
+    let mut out = Vec::with_capacity(rest.len());
+    loop {
+        let line_end = rest
+            .windows(2)
+            .position(|w| w == b"\r\n")
+            .ok_or_else(|| SegmulError::Io("chunk size line never terminated".into()))?;
+        let size_text = std::str::from_utf8(&rest[..line_end])
+            .map_err(|_| SegmulError::Io("chunk size line is not UTF-8".into()))?;
+        let size = usize::from_str_radix(size_text.trim(), 16)
+            .map_err(|_| SegmulError::Io(format!("bad chunk size {size_text:?}")))?;
+        rest = &rest[line_end + 2..];
+        if size == 0 {
+            return Ok(out);
+        }
+        if rest.len() < size + 2 {
+            return Err(SegmulError::Io(format!(
+                "truncated chunk: want {size} bytes + CRLF, have {}",
+                rest.len()
+            )));
+        }
+        out.extend_from_slice(&rest[..size]);
+        rest = &rest[size + 2..];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_fixed_length_response() {
+        let raw = b"HTTP/1.1 404 Not Found\r\nContent-Type: application/json\r\nContent-Length: 2\r\n\r\n{}";
+        let r = parse_response(raw).unwrap();
+        assert_eq!(r.status, 404);
+        assert_eq!(r.header("content-type"), Some("application/json"));
+        assert_eq!(r.body, b"{}");
+    }
+
+    #[test]
+    fn dechunks_a_streamed_body() {
+        let raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n4\r\nab\r\n\r\n6\r\ncd\r\nef\r\n0\r\n\r\n";
+        let r = parse_response(raw).unwrap();
+        assert_eq!(r.body, b"ab\r\ncd\r\nef");
+        // ndjson framing: each json_line chunk is one line.
+        let raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\n8\r\n{\"a\":1}\n\r\n8\r\n{\"b\":2}\n\r\n0\r\n\r\n";
+        let lines = parse_response(raw).unwrap().json_lines().unwrap();
+        assert_eq!(lines.len(), 2);
+        assert_eq!(lines[0].get("a").unwrap().as_u64(), Some(1));
+    }
+
+    #[test]
+    fn truncated_chunk_streams_are_typed_errors() {
+        let raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\nff\r\nab";
+        assert!(parse_response(raw).is_err());
+        let raw = b"HTTP/1.1 200 OK\r\nTransfer-Encoding: chunked\r\n\r\nzz\r\n";
+        assert!(parse_response(raw).is_err());
+    }
+}

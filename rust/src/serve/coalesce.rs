@@ -1,0 +1,164 @@
+//! Request coalescing: merge compatible concurrent eval requests into
+//! shared pool jobs.
+//!
+//! The engine drains its bounded queue in batches; before dispatching, a
+//! batch of eval requests is grouped by **coalesce class** — the
+//! persistent [`StoreKey`] identity *modulo seed and sample budget*
+//! (canonical design, workload kind, backend name, batch size). Within a
+//! class, requests with the *exact* same [`StoreKey`] are provably the
+//! same evaluation (the pool's ordered merge is deterministic), so one
+//! pool job answers all of them; distinct keys of one class run
+//! back-to-back against the same warm kernels. Concurrent clients
+//! asking the service the same question therefore cost one backend
+//! dispatch, not N.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::EvalJob;
+use crate::store::StoreKey;
+use crate::util::json::{obj, Json};
+
+/// The coalesce-class key: the [`StoreKey`] identity with the seed and
+/// sample budget erased. Two jobs in one class evaluate the same
+/// canonical design under the same workload *kind* on the same backend
+/// and chunk layout — the compatibility condition for sharing a drain
+/// batch's warm dispatch.
+pub fn class_key(job: &EvalJob, backend: &str, batch: usize) -> String {
+    let key = job.key();
+    let kind = match key.spec {
+        crate::coordinator::SpecKey::Exhaustive => "exhaustive",
+        crate::coordinator::SpecKey::MonteCarlo { .. } => "mc",
+        crate::coordinator::SpecKey::Adaptive { .. } => "adaptive",
+    };
+    obj(vec![
+        ("backend", Json::from(backend)),
+        ("batch", Json::from(batch as u64)),
+        ("design", key.design.to_json()),
+        ("workload_kind", Json::from(kind)),
+    ])
+    .to_string_compact()
+}
+
+/// One dispatch group: a single job to evaluate plus the indexes (into
+/// the drained batch) of every request it answers.
+#[derive(Clone, Debug)]
+pub struct Group {
+    pub job: EvalJob,
+    pub requests: Vec<usize>,
+}
+
+/// The dispatch plan for one drained batch of eval requests.
+#[derive(Clone, Debug, Default)]
+pub struct CoalescePlan {
+    /// Unique evaluations, in first-arrival order of (class, key).
+    pub groups: Vec<Group>,
+    /// Requests answered by another request's evaluation in this batch.
+    pub merged: u64,
+}
+
+/// Plan a drained batch: group by coalesce class, dedupe exact
+/// [`StoreKey`] duplicates within each class, and order groups so one
+/// class's jobs dispatch consecutively (warm-kernel locality). Ordering
+/// is deterministic: classes by first arrival, jobs within a class by
+/// first arrival.
+pub fn plan(jobs: &[EvalJob], backend: &str, batch: usize) -> CoalescePlan {
+    let mut class_order: Vec<String> = Vec::new();
+    // class -> (exact key -> group index in `groups`)
+    let mut classes: BTreeMap<String, BTreeMap<String, usize>> = BTreeMap::new();
+    // class -> groups in first-arrival order
+    let mut per_class: BTreeMap<String, Vec<Group>> = BTreeMap::new();
+    let mut merged = 0u64;
+    for (idx, job) in jobs.iter().enumerate() {
+        let class = class_key(job, backend, batch);
+        let exact = StoreKey::new(job, backend, batch).canonical().to_string();
+        if !classes.contains_key(&class) {
+            class_order.push(class.clone());
+        }
+        let keys = classes.entry(class.clone()).or_default();
+        let groups = per_class.entry(class).or_default();
+        match keys.get(&exact) {
+            Some(&g) => {
+                groups[g].requests.push(idx);
+                merged += 1;
+            }
+            None => {
+                keys.insert(exact, groups.len());
+                groups.push(Group { job: job.clone(), requests: vec![idx] });
+            }
+        }
+    }
+    let mut groups = Vec::with_capacity(jobs.len());
+    for class in class_order {
+        groups.extend(per_class.remove(&class).unwrap_or_default());
+    }
+    CoalescePlan { groups, merged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mc(n: u32, t: u32, samples: u64, seed: u64) -> EvalJob {
+        EvalJob::mc(n, t, false, samples, seed)
+    }
+
+    #[test]
+    fn exact_duplicates_share_one_group() {
+        let jobs = vec![mc(8, 3, 100, 1), mc(8, 3, 100, 1), mc(8, 3, 100, 1)];
+        let plan = plan(&jobs, "cpu", 4096);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.groups[0].requests, vec![0, 1, 2]);
+        assert_eq!(plan.merged, 2);
+    }
+
+    #[test]
+    fn seed_and_samples_stay_distinct_jobs_but_one_class() {
+        // Same class (design + workload kind + backend + batch), three
+        // distinct exact keys: three groups, zero merged, and the class
+        // key is identical for all — they dispatch consecutively.
+        let jobs = vec![mc(8, 3, 100, 1), mc(8, 3, 100, 2), mc(8, 3, 200, 1)];
+        let plan = plan(&jobs, "cpu", 4096);
+        assert_eq!(plan.groups.len(), 3);
+        assert_eq!(plan.merged, 0);
+        let classes: Vec<String> =
+            jobs.iter().map(|j| class_key(j, "cpu", 4096)).collect();
+        assert_eq!(classes[0], classes[1]);
+        assert_eq!(classes[0], classes[2]);
+    }
+
+    #[test]
+    fn class_key_separates_design_backend_batch_and_kind() {
+        let a = mc(8, 3, 100, 1);
+        assert_ne!(class_key(&a, "cpu", 4096), class_key(&mc(8, 4, 100, 1), "cpu", 4096));
+        assert_ne!(class_key(&a, "cpu", 4096), class_key(&a, "pjrt", 4096));
+        assert_ne!(class_key(&a, "cpu", 4096), class_key(&a, "cpu", 8192));
+        let ex = EvalJob::exhaustive(8, 3, false);
+        assert_ne!(class_key(&a, "cpu", 4096), class_key(&ex, "cpu", 4096));
+    }
+
+    #[test]
+    fn canonical_designs_coalesce_across_spellings() {
+        // t=0 segmented is canonically the accurate design: identical
+        // exhaustive workloads coalesce into one evaluation.
+        let a = EvalJob::exhaustive(8, 0, true);
+        let b = EvalJob::exhaustive(8, 0, false);
+        let plan = plan(&[a, b], "cpu", 4096);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.merged, 1);
+    }
+
+    #[test]
+    fn group_order_clusters_classes_by_first_arrival() {
+        let jobs = vec![
+            mc(8, 3, 100, 1), // class A
+            mc(8, 5, 100, 1), // class B
+            mc(8, 3, 100, 2), // class A again, distinct key
+        ];
+        let plan = plan(&jobs, "cpu", 4096);
+        assert_eq!(plan.groups.len(), 3);
+        // Class A's two jobs dispatch consecutively.
+        assert_eq!(plan.groups[0].requests, vec![0]);
+        assert_eq!(plan.groups[1].requests, vec![2]);
+        assert_eq!(plan.groups[2].requests, vec![1]);
+    }
+}

@@ -1,0 +1,328 @@
+//! Hand-rolled HTTP/1.1 request parsing and response writing.
+//!
+//! The build is fully offline (no hyper/tokio), so the wire protocol is
+//! implemented directly on [`std::net::TcpStream`] with strict limits:
+//! every malformed input — truncated head or body, oversized payload,
+//! bogus content-length, unsupported transfer encoding — becomes a typed
+//! [`SegmulError::Serve`] carrying the 4xx status the router writes
+//! back. Nothing in this module panics on attacker-controlled bytes.
+//!
+//! Responses always carry `Connection: close`: one request per
+//! connection keeps the state machine trivially correct under pipelined
+//! garbage (whatever follows the first request is never interpreted).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use crate::error::SegmulError;
+use crate::util::json::Json;
+
+/// Hard parser limits. Defaults are generous for the JSON bodies this
+/// API carries while keeping a hostile peer from ballooning memory.
+#[derive(Clone, Debug)]
+pub struct Limits {
+    /// Maximum bytes of request line + headers.
+    pub max_head: usize,
+    /// Maximum header count.
+    pub max_headers: usize,
+    /// Maximum request-body bytes (413 beyond).
+    pub max_body: usize,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_head: 8 * 1024, max_headers: 64, max_body: 1 << 20 }
+    }
+}
+
+/// One parsed request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path only (any `?query` suffix is split off and ignored).
+    pub path: String,
+    /// Header name (lowercased) / value pairs, in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value by case-insensitive name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+fn bad(status: u16, reason: impl Into<String>) -> SegmulError {
+    SegmulError::serve(status, reason)
+}
+
+fn io_reason(e: &std::io::Error) -> SegmulError {
+    if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) {
+        bad(408, "request read timed out")
+    } else {
+        bad(400, format!("connection error while reading request: {e}"))
+    }
+}
+
+/// Read and parse exactly one request from the stream, enforcing
+/// `limits`. The caller is expected to have set a read timeout on the
+/// stream; a timeout surfaces as a typed 408, never a hung thread.
+pub fn read_request(stream: &mut TcpStream, limits: &Limits) -> Result<Request, SegmulError> {
+    // -- head: byte-wise until CRLFCRLF, bounded by max_head ------------
+    let mut head: Vec<u8> = Vec::with_capacity(512);
+    let mut byte = [0u8; 1];
+    loop {
+        match stream.read(&mut byte) {
+            Ok(0) => {
+                if head.is_empty() {
+                    return Err(bad(400, "empty request (peer closed before any bytes)"));
+                }
+                return Err(bad(400, "truncated request head (peer closed mid-headers)"));
+            }
+            Ok(_) => head.push(byte[0]),
+            Err(e) => return Err(io_reason(&e)),
+        }
+        if head.len() > limits.max_head {
+            return Err(bad(431, format!("request head exceeds {} bytes", limits.max_head)));
+        }
+        if head.ends_with(b"\r\n\r\n") {
+            break;
+        }
+    }
+    let head = std::str::from_utf8(&head).map_err(|_| bad(400, "request head is not UTF-8"))?;
+    let mut lines = head.trim_end_matches("\r\n").split("\r\n");
+
+    // -- request line ---------------------------------------------------
+    let request_line = lines.next().unwrap_or_default();
+    let mut parts = request_line.split(' ');
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+            _ => return Err(bad(400, format!("malformed request line {request_line:?}"))),
+        };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(bad(400, format!("unsupported protocol version {version:?}")));
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    if !path.starts_with('/') {
+        return Err(bad(400, format!("request target {target:?} is not an absolute path")));
+    }
+
+    // -- headers ----------------------------------------------------------
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        if headers.len() >= limits.max_headers {
+            return Err(bad(431, format!("more than {} headers", limits.max_headers)));
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(bad(400, format!("malformed header line {line:?}")));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    // -- body -------------------------------------------------------------
+    let mut req = Request { method: method.to_string(), path, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(bad(400, "transfer-encoding request bodies are not supported"));
+    }
+    let content_length = match req.header("content-length") {
+        None => 0usize,
+        Some(raw) => raw
+            .parse::<u64>()
+            .ok()
+            .and_then(|v| usize::try_from(v).ok())
+            .ok_or_else(|| bad(400, format!("bogus content-length {raw:?}")))?,
+    };
+    if content_length > limits.max_body {
+        return Err(bad(
+            413,
+            format!("payload of {content_length} bytes exceeds the {}-byte limit", limits.max_body),
+        ));
+    }
+    if content_length > 0 {
+        let mut body = vec![0u8; content_length];
+        let mut read = 0usize;
+        while read < content_length {
+            match stream.read(&mut body[read..]) {
+                Ok(0) => {
+                    return Err(bad(
+                        400,
+                        format!("truncated body: got {read} of {content_length} declared bytes"),
+                    ))
+                }
+                Ok(k) => read += k,
+                Err(e) => return Err(io_reason(&e)),
+            }
+        }
+        req.body = body;
+    }
+    Ok(req)
+}
+
+/// Canonical reason phrase for the statuses this server emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Response",
+    }
+}
+
+/// Write one fixed-length response and flush. `Connection: close` always.
+pub fn write_response(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        status_text(status),
+        content_type,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Write a JSON response body.
+pub fn write_json(stream: &mut TcpStream, status: u16, body: &Json) -> std::io::Result<()> {
+    let mut text = body.to_string_compact();
+    text.push('\n');
+    write_response(stream, status, "application/json", text.as_bytes())
+}
+
+/// Chunked transfer-encoding writer for streamed responses
+/// (`POST /v1/sweep` progress). One `chunk` per payload line; `finish`
+/// writes the terminating zero-chunk.
+pub struct ChunkedWriter<'a> {
+    stream: &'a mut TcpStream,
+}
+
+impl<'a> ChunkedWriter<'a> {
+    /// Write the response head and return the writer.
+    pub fn start(
+        stream: &'a mut TcpStream,
+        status: u16,
+        content_type: &str,
+    ) -> std::io::Result<ChunkedWriter<'a>> {
+        let head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nTransfer-Encoding: chunked\r\nConnection: close\r\n\r\n",
+            status,
+            status_text(status),
+            content_type
+        );
+        stream.write_all(head.as_bytes())?;
+        stream.flush()?;
+        Ok(ChunkedWriter { stream })
+    }
+
+    /// Write one chunk (empty payloads are skipped: a zero-length chunk
+    /// would terminate the stream).
+    pub fn chunk(&mut self, payload: &[u8]) -> std::io::Result<()> {
+        if payload.is_empty() {
+            return Ok(());
+        }
+        write!(self.stream, "{:x}\r\n", payload.len())?;
+        self.stream.write_all(payload)?;
+        self.stream.write_all(b"\r\n")?;
+        self.stream.flush()
+    }
+
+    /// One JSON value as one newline-terminated chunk (ndjson framing).
+    pub fn json_line(&mut self, value: &Json) -> std::io::Result<()> {
+        let mut text = value.to_string_compact();
+        text.push('\n');
+        self.chunk(text.as_bytes())
+    }
+
+    /// Terminate the chunked body.
+    pub fn finish(self) -> std::io::Result<()> {
+        self.stream.write_all(b"0\r\n\r\n")?;
+        self.stream.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::{TcpListener, TcpStream};
+
+    /// Feed raw bytes through a real socket pair into the parser.
+    fn parse(raw: &[u8]) -> Result<Request, SegmulError> {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        client.write_all(raw).unwrap();
+        client.flush().unwrap();
+        // Half-close so reads past the payload see EOF, not a hang.
+        client.shutdown(std::net::Shutdown::Write).unwrap();
+        let (mut server_side, _) = listener.accept().unwrap();
+        server_side
+            .set_read_timeout(Some(std::time::Duration::from_secs(2)))
+            .unwrap();
+        read_request(&mut server_side, &Limits::default())
+    }
+
+    #[test]
+    fn parses_a_post_with_body() {
+        let req = parse(b"POST /v1/eval HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd").unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/eval");
+        assert_eq!(req.body, b"abcd");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"));
+    }
+
+    #[test]
+    fn strips_query_and_tolerates_http10() {
+        let req = parse(b"GET /metrics?x=1 HTTP/1.0\r\n\r\n").unwrap();
+        assert_eq!(req.path, "/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn typed_errors_for_malformed_requests() {
+        let status = |raw: &[u8]| match parse(raw).unwrap_err() {
+            SegmulError::Serve { status, .. } => status,
+            other => panic!("expected serve error, got {other:?}"),
+        };
+        // Truncated head / empty connection.
+        assert_eq!(status(b""), 400);
+        assert_eq!(status(b"GET /x HT"), 400);
+        // Malformed request line and versions.
+        assert_eq!(status(b"NONSENSE\r\n\r\n"), 400);
+        assert_eq!(status(b"GET /x HTTP/3.0\r\n\r\n"), 400);
+        assert_eq!(status(b"GET x HTTP/1.1\r\n\r\n"), 400);
+        // Bogus content lengths.
+        assert_eq!(status(b"POST / HTTP/1.1\r\nContent-Length: abc\r\n\r\n"), 400);
+        assert_eq!(status(b"POST / HTTP/1.1\r\nContent-Length: -5\r\n\r\n"), 400);
+        assert_eq!(
+            status(b"POST / HTTP/1.1\r\nContent-Length: 99999999999999999999\r\n\r\n"),
+            400
+        );
+        // Truncated body: fewer bytes than declared.
+        assert_eq!(status(b"POST / HTTP/1.1\r\nContent-Length: 10\r\n\r\nab"), 400);
+        // Oversized payload is refused from the declared length alone.
+        assert_eq!(status(b"POST / HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n"), 413);
+        // Chunked request bodies are unsupported.
+        assert_eq!(status(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n"), 400);
+        // Header bombs.
+        let mut bomb = b"GET / HTTP/1.1\r\n".to_vec();
+        bomb.extend(vec![b'a'; 9000]);
+        assert_eq!(status(&bomb), 431);
+    }
+}

@@ -1,0 +1,238 @@
+//! Server-side counters and the `/metrics` text rendition.
+//!
+//! Everything is lock-light: counters are atomics bumped on the
+//! connection threads; the latency reservoir is a small mutex-guarded
+//! ring (the percentile math runs only when `/metrics` is scraped).
+//! Rendition is plain `key value` lines — greppable from CI and the
+//! loopback bench without a metrics client.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::api::SessionTelemetry;
+use crate::report::percentile;
+
+/// Queue-depth histogram bucket upper bounds (inclusive); the last
+/// bucket is unbounded.
+const QUEUE_BUCKETS: [usize; 6] = [0, 1, 2, 4, 8, 16];
+
+/// Latency reservoir size: enough for stable p99 on smoke/bench runs
+/// without unbounded growth on long-lived servers.
+const LATENCY_RING: usize = 4096;
+
+/// Aggregate server counters, shared by every connection thread.
+#[derive(Default)]
+pub struct ServerMetrics {
+    pub requests_total: AtomicU64,
+    pub responses_2xx: AtomicU64,
+    pub responses_4xx: AtomicU64,
+    pub responses_5xx: AtomicU64,
+    /// Admission rejections: in-flight budget exhausted.
+    pub rejected_429: AtomicU64,
+    /// Admission rejections: draining.
+    pub rejected_503: AtomicU64,
+    /// Requests whose deadline expired before the engine answered.
+    pub deadline_timeouts: AtomicU64,
+    /// Eval requests answered (the coalesce numerator).
+    pub coalesce_requests: AtomicU64,
+    /// Pool evaluations actually dispatched for them (the denominator):
+    /// batch-deduped jobs that were neither cache, store, nor analytic
+    /// answers.
+    pub coalesce_dispatched: AtomicU64,
+    /// Queue depth observed at each admission, histogrammed.
+    queue_depth: [AtomicU64; QUEUE_BUCKETS.len() + 1],
+    /// Request latencies (ms), overwriting ring.
+    latencies_ms: Mutex<Vec<f64>>,
+    latency_cursor: AtomicU64,
+}
+
+impl ServerMetrics {
+    /// Classify a finished response by status family.
+    pub fn observe_response(&self, status: u16) {
+        self.requests_total.fetch_add(1, Ordering::Relaxed);
+        let family = match status {
+            200..=299 => &self.responses_2xx,
+            400..=499 => &self.responses_4xx,
+            _ => &self.responses_5xx,
+        };
+        family.fetch_add(1, Ordering::Relaxed);
+        match status {
+            429 => {
+                self.rejected_429.fetch_add(1, Ordering::Relaxed);
+            }
+            503 => {
+                self.rejected_503.fetch_add(1, Ordering::Relaxed);
+            }
+            _ => {}
+        }
+    }
+
+    /// Record one request's wall latency.
+    pub fn record_latency(&self, ms: f64) {
+        let mut ring = self.latencies_ms.lock().unwrap();
+        if ring.len() < LATENCY_RING {
+            ring.push(ms);
+        } else {
+            let at = self.latency_cursor.fetch_add(1, Ordering::Relaxed) as usize;
+            ring[at % LATENCY_RING] = ms;
+        }
+    }
+
+    /// Record the queue depth seen when a request was admitted.
+    pub fn record_queue_depth(&self, depth: usize) {
+        let bucket = QUEUE_BUCKETS
+            .iter()
+            .position(|&le| depth <= le)
+            .unwrap_or(QUEUE_BUCKETS.len());
+        self.queue_depth[bucket].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// (p50, p90, p99) of the recorded latencies, in ms (NaN when empty).
+    pub fn latency_percentiles(&self) -> (f64, f64, f64) {
+        let mut v = self.latencies_ms.lock().unwrap().clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (percentile(&v, 0.50), percentile(&v, 0.90), percentile(&v, 0.99))
+    }
+
+    /// Eval requests answered per pool evaluation dispatched (>= 1; the
+    /// batch dedupe and the cache/store/analytic layers both contribute).
+    /// Defined as the request count itself while nothing has dispatched.
+    pub fn coalesce_ratio(&self) -> f64 {
+        let requests = self.coalesce_requests.load(Ordering::Relaxed) as f64;
+        let dispatched = self.coalesce_dispatched.load(Ordering::Relaxed) as f64;
+        if dispatched == 0.0 {
+            requests.max(1.0)
+        } else {
+            requests / dispatched
+        }
+    }
+
+    /// Render the full `/metrics` document: server counters, latency
+    /// percentiles, the queue-depth histogram, and the session telemetry
+    /// (including the backend identity, so clients and CI can assert
+    /// which backend actually served — not just a stderr note).
+    pub fn render(
+        &self,
+        session: &SessionTelemetry,
+        backend: &str,
+        draining: bool,
+        queue_depth: usize,
+    ) -> String {
+        let (p50, p90, p99) = self.latency_percentiles();
+        let load = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let mut out = String::with_capacity(1024);
+        let mut line = |k: &str, v: String| {
+            out.push_str(k);
+            out.push(' ');
+            out.push_str(&v);
+            out.push('\n');
+        };
+        let f3 = |v: f64| if v.is_nan() { "NaN".to_string() } else { format!("{v:.3}") };
+        line("serve_backend", backend.to_string());
+        line("serve_draining", u64::from(draining).to_string());
+        line("serve_queue_depth", queue_depth.to_string());
+        line("serve_requests_total", load(&self.requests_total).to_string());
+        line("serve_responses_2xx", load(&self.responses_2xx).to_string());
+        line("serve_responses_4xx", load(&self.responses_4xx).to_string());
+        line("serve_responses_5xx", load(&self.responses_5xx).to_string());
+        line("serve_rejected_429", load(&self.rejected_429).to_string());
+        line("serve_rejected_503", load(&self.rejected_503).to_string());
+        line("serve_deadline_timeouts", load(&self.deadline_timeouts).to_string());
+        line("serve_coalesce_requests", load(&self.coalesce_requests).to_string());
+        line("serve_coalesce_dispatched", load(&self.coalesce_dispatched).to_string());
+        line("serve_coalesce_ratio", f3(self.coalesce_ratio()));
+        line("serve_latency_p50_ms", f3(p50));
+        line("serve_latency_p90_ms", f3(p90));
+        line("serve_latency_p99_ms", f3(p99));
+        for (i, le) in QUEUE_BUCKETS.iter().enumerate() {
+            line(&format!("serve_queue_depth_le_{le}"), load(&self.queue_depth[i]).to_string());
+        }
+        line(
+            "serve_queue_depth_le_inf",
+            load(&self.queue_depth[QUEUE_BUCKETS.len()]).to_string(),
+        );
+        line("session_jobs_completed", session.jobs_completed.to_string());
+        line("session_jobs_evaluated", session.jobs_evaluated.to_string());
+        line("session_cache_hits", session.cache_hits.to_string());
+        line("session_analytic_answers", session.analytic_answers.to_string());
+        line("session_store_hits", session.store_hits.to_string());
+        line("session_store_recoveries", session.store_recoveries.to_string());
+        line("session_pairs_evaluated", session.pairs_evaluated.to_string());
+        line("session_backend_builds", session.backend_builds.to_string());
+        line("session_workers", session.workers.to_string());
+        out
+    }
+}
+
+/// Parse one `key value` line out of a rendered `/metrics` document —
+/// shared by the loopback bench, the example, and the smoke tests.
+pub fn metric_value(doc: &str, key: &str) -> Option<String> {
+    doc.lines()
+        .find_map(|l| l.strip_prefix(key).and_then(|rest| rest.strip_prefix(' ')))
+        .map(|v| v.trim().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn response_families_and_rejections() {
+        let m = ServerMetrics::default();
+        for s in [200, 200, 400, 429, 503, 500, 504] {
+            m.observe_response(s);
+        }
+        assert_eq!(m.requests_total.load(Ordering::Relaxed), 7);
+        assert_eq!(m.responses_2xx.load(Ordering::Relaxed), 2);
+        assert_eq!(m.responses_4xx.load(Ordering::Relaxed), 2);
+        assert_eq!(m.responses_5xx.load(Ordering::Relaxed), 3);
+        assert_eq!(m.rejected_429.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected_503.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn latency_percentiles_use_nearest_rank() {
+        let m = ServerMetrics::default();
+        for i in 1..=10 {
+            m.record_latency(i as f64);
+        }
+        let (p50, p90, p99) = m.latency_percentiles();
+        assert_eq!((p50, p90, p99), (5.0, 9.0, 10.0));
+    }
+
+    #[test]
+    fn queue_histogram_buckets() {
+        let m = ServerMetrics::default();
+        for depth in [0, 1, 2, 3, 5, 9, 17, 1000] {
+            m.record_queue_depth(depth);
+        }
+        let counts: Vec<u64> =
+            m.queue_depth.iter().map(|c| c.load(Ordering::Relaxed)).collect();
+        assert_eq!(counts, vec![1, 1, 1, 1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn coalesce_ratio_floors_at_one() {
+        let m = ServerMetrics::default();
+        assert_eq!(m.coalesce_ratio(), 1.0);
+        m.coalesce_requests.store(12, Ordering::Relaxed);
+        m.coalesce_dispatched.store(3, Ordering::Relaxed);
+        assert_eq!(m.coalesce_ratio(), 4.0);
+    }
+
+    #[test]
+    fn render_emits_greppable_lines() {
+        let m = ServerMetrics::default();
+        m.observe_response(200);
+        m.record_latency(3.0);
+        m.record_queue_depth(2);
+        let doc = m.render(&SessionTelemetry::default(), "cpu", false, 0);
+        assert_eq!(metric_value(&doc, "serve_backend").as_deref(), Some("cpu"));
+        assert_eq!(metric_value(&doc, "serve_requests_total").as_deref(), Some("1"));
+        assert_eq!(metric_value(&doc, "serve_latency_p99_ms").as_deref(), Some("3.000"));
+        assert_eq!(metric_value(&doc, "serve_queue_depth_le_2").as_deref(), Some("1"));
+        assert_eq!(metric_value(&doc, "session_workers").as_deref(), Some("0"));
+        // Prefix keys must not shadow longer keys.
+        assert_eq!(metric_value(&doc, "serve_queue_depth").as_deref(), Some("0"));
+    }
+}

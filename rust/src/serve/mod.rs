@@ -1,0 +1,533 @@
+//! `segmul serve`: evaluation-as-a-service over HTTP.
+//!
+//! A dependency-free HTTP/1.1 front end (std::net only — the build is
+//! fully offline) for the evaluation engine: clients POST a design +
+//! workload to `/v1/eval` and get the same [`crate::error::ErrorMetrics`]
+//! a local `segmul sweep` would compute — bit-identically, through the
+//! same session layers (result cache, analytic registry, persistent
+//! store).
+//!
+//! ## Architecture
+//!
+//! One **engine thread** owns the [`Session`] (and with it the
+//! persistent worker pool); connection threads never touch it. Work
+//! flows over a bounded queue:
+//!
+//! ```text
+//! acceptor ─ thread-per-connection ─ admission ─▶ queue ─▶ engine ─▶ Session
+//!                  │ 429 budget / 503 draining        │  coalesce
+//!                  ◀──────── reply channel ◀──────────┘
+//! ```
+//!
+//! The engine drains the whole queue each cycle and plans the batch
+//! through [`coalesce::plan`]: concurrent requests for the same
+//! [`crate::store::StoreKey`] share one pool evaluation. Sweep jobs
+//! advance one grid point per cycle and re-enqueue themselves, so a
+//! long sweep never starves interactive evals.
+//!
+//! ## Backpressure and shutdown
+//!
+//! Admission is a state machine with three states: **accepting** (queue
+//! below `max_inflight`), **saturated** (typed 429 until the engine
+//! drains), and **draining** (typed 503 for new work; in-flight work
+//! completes, then the engine and acceptor exit). Draining is entered
+//! by `POST /v1/shutdown`, [`Server::begin_drain`], or — in the CLI —
+//! SIGINT/SIGTERM via [`install_drain_signals`]. Per-request deadlines
+//! are enforced on the connection thread (`recv_timeout` on the reply
+//! channel → typed 504) and propagated to the engine through a
+//! cancellation flag so abandoned work is skipped, not evaluated.
+
+pub mod client;
+pub mod coalesce;
+pub mod http;
+pub mod metrics;
+pub mod router;
+pub mod wire;
+
+use std::collections::VecDeque;
+use std::net::{SocketAddr, TcpListener};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Sender, SyncSender};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::api::{BackendChoice, Session, SessionTelemetry};
+use crate::config::Config;
+use crate::coordinator::{AnalyticMode, EvalJob, SweepOutcome};
+use crate::error::SegmulError;
+
+use self::http::Limits;
+use self::metrics::ServerMetrics;
+
+/// Server configuration. [`Default`] binds an ephemeral loopback port
+/// with the CPU backend and the shared [`Config`] defaults for seed and
+/// sample budget.
+#[derive(Debug)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Worker threads for the session pool (`None`: session default).
+    pub workers: Option<usize>,
+    pub backend: BackendChoice,
+    pub analytic: AnalyticMode,
+    /// Persistent result store directory, if any.
+    pub store: Option<PathBuf>,
+    /// Default RNG seed for requests that omit one.
+    pub seed: u64,
+    /// Default MC sample budget for `/v1/sweep` requests that omit one.
+    pub mc_samples: u64,
+    /// Exhaustive-vs-MC threshold for `/v1/sweep` grids.
+    pub exhaustive_max_n: u32,
+    /// Admission budget: queued work items beyond which new requests
+    /// are rejected with a typed 429.
+    pub max_inflight: usize,
+    /// Deadline applied to requests that don't carry `deadline_ms`.
+    pub default_deadline: Duration,
+    pub limits: Limits,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        let cfg = Config::default();
+        ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            workers: None,
+            backend: BackendChoice::Cpu,
+            analytic: AnalyticMode::Off,
+            store: None,
+            seed: cfg.seed,
+            mc_samples: cfg.mc_samples,
+            exhaustive_max_n: cfg.exhaustive_max_n,
+            max_inflight: 64,
+            default_deadline: Duration::from_secs(30),
+            limits: Limits::default(),
+        }
+    }
+}
+
+/// One queued eval request.
+pub(crate) struct EvalWork {
+    pub job: EvalJob,
+    pub reply: SyncSender<Result<SweepOutcome, SegmulError>>,
+    pub cancelled: Arc<AtomicBool>,
+}
+
+/// One queued (possibly partially completed) sweep: the engine runs one
+/// grid point per cycle and re-enqueues the remainder.
+pub(crate) struct SweepWork {
+    pub jobs: VecDeque<EvalJob>,
+    pub events: Sender<SweepEvent>,
+    pub cancelled: Arc<AtomicBool>,
+}
+
+pub(crate) enum Work {
+    Eval(EvalWork),
+    Sweep(SweepWork),
+}
+
+/// Engine → connection-thread stream events for `/v1/sweep`.
+pub(crate) enum SweepEvent {
+    Row(Box<SweepOutcome>),
+    Failed(SegmulError),
+    Done,
+}
+
+/// State shared between the acceptor, connection threads, and the
+/// engine.
+pub(crate) struct Shared {
+    pub cfg: ServeConfig,
+    pub metrics: ServerMetrics,
+    pub queue: Mutex<VecDeque<Work>>,
+    pub ready: Condvar,
+    pub draining: AtomicBool,
+    pub engine_done: AtomicBool,
+    pub conn_active: AtomicUsize,
+    /// Backend identity, published by the engine at startup — served in
+    /// `/metrics`, `/healthz`, and every eval response so clients can
+    /// assert which backend actually answered.
+    pub backend: OnceLock<&'static str>,
+    pub batch: OnceLock<usize>,
+    /// Telemetry snapshot, refreshed by the engine after every cycle.
+    pub telemetry: Mutex<SessionTelemetry>,
+}
+
+impl Shared {
+    fn new(cfg: ServeConfig) -> Self {
+        Shared {
+            cfg,
+            metrics: ServerMetrics::default(),
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            draining: AtomicBool::new(false),
+            engine_done: AtomicBool::new(false),
+            conn_active: AtomicUsize::new(0),
+            backend: OnceLock::new(),
+            batch: OnceLock::new(),
+            telemetry: Mutex::new(SessionTelemetry::default()),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.get().copied().unwrap_or("starting")
+    }
+
+    /// Admission control: reject with a typed 503 while draining, a
+    /// typed 429 when the in-flight budget is exhausted; otherwise
+    /// enqueue and wake the engine.
+    pub fn admit(&self, work: Work) -> Result<(), SegmulError> {
+        if self.draining.load(Ordering::SeqCst) {
+            return Err(SegmulError::serve(
+                503,
+                "server is draining; in-flight work completes but no new work is admitted",
+            ));
+        }
+        let mut q = self.queue.lock().unwrap();
+        if q.len() >= self.cfg.max_inflight {
+            return Err(SegmulError::serve(
+                429,
+                format!("in-flight budget of {} work items is exhausted; retry later", q.len()),
+            ));
+        }
+        self.metrics.record_queue_depth(q.len());
+        q.push_back(work);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.lock().unwrap().len()
+    }
+}
+
+/// Drain summary returned by [`Server::join`].
+#[derive(Clone, Debug)]
+pub struct ServeSummary {
+    pub telemetry: SessionTelemetry,
+    pub requests_total: u64,
+    pub backend: String,
+    /// The final `/metrics` document.
+    pub metrics_doc: String,
+}
+
+/// A running server: an acceptor thread, an engine thread, and the
+/// shared state between them. Dropping the handle does **not** stop the
+/// server — call [`Server::begin_drain`] (or hit `POST /v1/shutdown`)
+/// and then [`Server::join`].
+pub struct Server {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptor: JoinHandle<()>,
+    engine: JoinHandle<()>,
+}
+
+impl Server {
+    /// Bind, build the session (backend factories run now — a missing
+    /// artifact directory fails here, not on the first request), and
+    /// spawn the engine + acceptor threads.
+    pub fn start(cfg: ServeConfig) -> Result<Server, SegmulError> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| SegmulError::serve(500, format!("cannot bind {}: {e}", cfg.addr)))?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| SegmulError::serve(500, format!("cannot resolve bound address: {e}")))?;
+        let mut builder = Session::builder()
+            .backend(cfg.backend.clone())
+            .seed(cfg.seed)
+            .analytic(cfg.analytic);
+        if let Some(w) = cfg.workers {
+            builder = builder.workers(w);
+        }
+        if let Some(dir) = &cfg.store {
+            builder = builder.store(dir.clone());
+        }
+        let session = builder.build()?;
+        let shared = Arc::new(Shared::new(cfg));
+        // Publish identity before any thread runs, so the CLI can print
+        // the backend deterministically right after start().
+        let _ = shared.backend.set(session.backend_name());
+        let _ = shared.batch.set(session.batch());
+        *shared.telemetry.lock().unwrap() = session.telemetry();
+        let engine = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("segmul-serve-engine".into())
+                .spawn(move || engine_loop(&shared, session))
+                .map_err(|e| SegmulError::serve(500, format!("cannot spawn engine: {e}")))?
+        };
+        let acceptor = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("segmul-serve-acceptor".into())
+                .spawn(move || acceptor_loop(&shared, listener))
+                .map_err(|e| SegmulError::serve(500, format!("cannot spawn acceptor: {e}")))?
+        };
+        Ok(Server { shared, addr, acceptor, engine })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Identity of the backend the engine's session holds.
+    pub fn backend_name(&self) -> &'static str {
+        self.shared.backend_name()
+    }
+
+    /// Enter the draining state: new work is rejected with 503,
+    /// in-flight work completes, then the threads exit.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+        self.shared.ready.notify_all();
+    }
+
+    /// Whether a drain has been requested (by handle, endpoint, or
+    /// signal).
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Wait for the drain to complete and return the final summary.
+    /// Blocks until a drain is requested; in-flight work finishes,
+    /// lingering connection threads get a bounded grace period.
+    pub fn join(self) -> ServeSummary {
+        let _ = self.engine.join();
+        let _ = self.acceptor.join();
+        let grace = Instant::now();
+        while self.shared.conn_active.load(Ordering::SeqCst) > 0
+            && grace.elapsed() < Duration::from_secs(5)
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let telemetry = self.shared.telemetry.lock().unwrap().clone();
+        let backend = self.shared.backend_name().to_string();
+        let metrics_doc = self.shared.metrics.render(&telemetry, &backend, true, 0);
+        ServeSummary {
+            requests_total: self.shared.metrics.requests_total.load(Ordering::Relaxed),
+            telemetry,
+            backend,
+            metrics_doc,
+        }
+    }
+}
+
+/// The engine: the only thread that touches the [`Session`]. Drains the
+/// queue in batches, coalesces eval requests, advances sweeps one grid
+/// point at a time, and exits once draining is requested and the queue
+/// is empty.
+fn engine_loop(shared: &Arc<Shared>, mut session: Session) {
+    let _ = shared.backend.set(session.backend_name());
+    let _ = shared.batch.set(session.batch());
+    *shared.telemetry.lock().unwrap() = session.telemetry();
+    loop {
+        let batch: Vec<Work> = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break q.drain(..).collect();
+                }
+                if shared.draining.load(Ordering::SeqCst) {
+                    shared.engine_done.store(true, Ordering::SeqCst);
+                    return;
+                }
+                let (guard, _) =
+                    shared.ready.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+        };
+        let mut evals: Vec<EvalWork> = Vec::new();
+        let mut sweeps: Vec<SweepWork> = Vec::new();
+        for work in batch {
+            match work {
+                Work::Eval(e) => {
+                    if !e.cancelled.load(Ordering::SeqCst) {
+                        evals.push(e);
+                    }
+                }
+                Work::Sweep(s) => {
+                    if !s.cancelled.load(Ordering::SeqCst) {
+                        sweeps.push(s);
+                    }
+                }
+            }
+        }
+        run_evals(shared, &mut session, &evals);
+        run_sweeps(shared, &mut session, sweeps);
+        *shared.telemetry.lock().unwrap() = session.telemetry();
+    }
+}
+
+/// Plan and dispatch one drained batch of eval requests: exact-key
+/// duplicates share a single evaluation, groups of one coalesce class
+/// run consecutively.
+fn run_evals(shared: &Arc<Shared>, session: &mut Session, evals: &[EvalWork]) {
+    if evals.is_empty() {
+        return;
+    }
+    let backend = session.backend_name();
+    let batch_size = session.batch();
+    let jobs: Vec<EvalJob> = evals.iter().map(|e| e.job.clone()).collect();
+    let plan = coalesce::plan(&jobs, backend, batch_size);
+    shared.metrics.coalesce_requests.fetch_add(evals.len() as u64, Ordering::Relaxed);
+    for group in plan.groups {
+        // Skip work every waiter has abandoned (deadline expiry).
+        if group.requests.iter().all(|&i| evals[i].cancelled.load(Ordering::SeqCst)) {
+            continue;
+        }
+        let result = session.run_outcome(&group.job);
+        if let Ok(o) = &result {
+            // A pool dispatch happened only for fresh simulated answers;
+            // cache/store/analytic answers amortize like merged requests.
+            if o.source() == "simulated" && !o.cached {
+                shared.metrics.coalesce_dispatched.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        for &i in &group.requests {
+            let _ = evals[i].reply.send(result.clone());
+        }
+    }
+}
+
+/// Advance each live sweep by one grid point; unfinished sweeps go back
+/// to the queue so interactive evals interleave with long grids.
+fn run_sweeps(shared: &Arc<Shared>, session: &mut Session, sweeps: Vec<SweepWork>) {
+    for mut sweep in sweeps {
+        let Some(job) = sweep.jobs.pop_front() else {
+            let _ = sweep.events.send(SweepEvent::Done);
+            continue;
+        };
+        match session.run_outcome(&job) {
+            Ok(outcome) => {
+                if sweep.events.send(SweepEvent::Row(Box::new(outcome))).is_err() {
+                    continue; // client gone: drop the sweep
+                }
+                if sweep.jobs.is_empty() {
+                    let _ = sweep.events.send(SweepEvent::Done);
+                } else {
+                    // Re-enqueue directly: the sweep was already admitted
+                    // once and must be able to finish during a drain.
+                    let mut q = shared.queue.lock().unwrap();
+                    q.push_back(Work::Sweep(sweep));
+                }
+            }
+            Err(e) => {
+                let _ = sweep.events.send(SweepEvent::Failed(e));
+            }
+        }
+    }
+}
+
+/// The acceptor: non-blocking accept loop, one detached thread per
+/// connection. Keeps answering during a drain (so late clients get
+/// typed 503s and `/metrics` stays scrapeable) and exits once the
+/// engine has finished.
+fn acceptor_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    if listener.set_nonblocking(true).is_err() {
+        return;
+    }
+    loop {
+        if drain_requested() {
+            shared.draining.store(true, Ordering::SeqCst);
+        }
+        if shared.engine_done.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                shared.conn_active.fetch_add(1, Ordering::SeqCst);
+                let shared = shared.clone();
+                let _ = std::thread::Builder::new()
+                    .name("segmul-serve-conn".into())
+                    .spawn(move || {
+                        router::handle(&shared, stream);
+                        shared.conn_active.fetch_sub(1, Ordering::SeqCst);
+                    });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(25)),
+        }
+    }
+}
+
+/// Process-wide drain request, set by the signal handler (the acceptor
+/// polls it and folds it into the server's draining state).
+static GLOBAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Whether SIGINT/SIGTERM requested a drain.
+pub fn drain_requested() -> bool {
+    GLOBAL_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Install SIGINT/SIGTERM handlers that request a graceful drain. The
+/// handler is async-signal-safe: it only stores to an atomic. Unix
+/// only; a no-op elsewhere. Installed by the CLI, never by tests (which
+/// drain via `POST /v1/shutdown`).
+#[cfg(unix)]
+pub fn install_drain_signals() {
+    extern "C" fn on_signal(_sig: i32) {
+        GLOBAL_DRAIN.store(true, Ordering::SeqCst);
+    }
+    // std links libc on unix; declaring `signal` directly avoids a
+    // dependency on a signal crate (the build is offline).
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(2, on_signal as usize); // SIGINT
+        signal(15, on_signal as usize); // SIGTERM
+    }
+}
+
+#[cfg(not(unix))]
+pub fn install_drain_signals() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    /// End-to-end loopback smoke: boot, health, one eval, drain, join.
+    #[test]
+    fn boots_serves_and_drains() {
+        let cfg = ServeConfig {
+            workers: Some(2),
+            max_inflight: 8,
+            default_deadline: Duration::from_secs(30),
+            ..ServeConfig::default()
+        };
+        let server = Server::start(cfg).unwrap();
+        let addr = server.addr();
+
+        let health = client::get(addr, "/healthz").unwrap();
+        assert_eq!(health.status, 200);
+        let body = health.json().unwrap();
+        assert_eq!(body.get("status").and_then(Json::as_str), Some("ok"));
+
+        let eval = client::post_json(
+            addr,
+            "/v1/eval",
+            &Json::parse(
+                r#"{"design":{"family":"segmented","n":8,"t":3,"fix":true},
+                    "workload":{"kind":"mc","samples":50000,"seed":7}}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(eval.status, 200, "{}", eval.text());
+        let row = eval.json().unwrap();
+        assert_eq!(row.get("source").and_then(Json::as_str), Some("simulated"));
+        assert_eq!(row.get("backend").and_then(Json::as_str), Some("cpu"));
+        assert!(row.get("metrics").unwrap().get("mae").unwrap().as_f64().unwrap() > 0.0);
+
+        let down = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+        assert_eq!(down.status, 200);
+        let summary = server.join();
+        assert_eq!(summary.backend, "cpu");
+        assert!(summary.requests_total >= 3);
+        assert_eq!(summary.telemetry.jobs_completed, 1);
+    }
+}

@@ -1,0 +1,245 @@
+//! Request dispatch: one connection = one request = one typed response.
+//!
+//! | Method | Path           | Body                | Response                          |
+//! |--------|----------------|---------------------|-----------------------------------|
+//! | GET    | `/healthz`     | —                   | `{"status","backend"}` (503 drain)|
+//! | GET    | `/v1/designs`  | —                   | registry design tags              |
+//! | GET    | `/metrics`     | —                   | text `key value` counters         |
+//! | POST   | `/v1/eval`     | design + workload   | one answered job (JSON)           |
+//! | POST   | `/v1/sweep`    | grid request        | chunked ndjson stream             |
+//! | POST   | `/v1/shutdown` | —                   | `{"status":"draining"}`           |
+//!
+//! Every error path funnels through [`wire::error_wire`], so the full
+//! [`SegmulError`] taxonomy maps onto HTTP statuses in exactly one
+//! place.
+
+use std::io::Read;
+use std::net::{Shutdown, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, sync_channel, RecvTimeoutError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::SweepGrid;
+use crate::error::SegmulError;
+use crate::multiplier::MultiplierSpec;
+use crate::util::json::{obj, Json};
+
+use super::http::{self, ChunkedWriter, Request};
+use super::{wire, EvalWork, Shared, SweepEvent, SweepWork, Work};
+
+/// Serve one connection: parse, dispatch, record latency + status.
+pub(crate) fn handle(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let start = Instant::now();
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(10)));
+    let status = serve_one(shared, &mut stream);
+    // Lingering close: half-close the write side, then drain whatever
+    // the peer already sent (e.g. pipelined bytes this server never
+    // parses) so the final close cannot RST the response out of the
+    // peer's receive buffer. Bounded by a short read timeout.
+    let _ = stream.shutdown(Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut sink = [0u8; 512];
+    while matches!(stream.read(&mut sink), Ok(n) if n > 0) {}
+    shared.metrics.observe_response(status);
+    shared.metrics.record_latency(start.elapsed().as_secs_f64() * 1e3);
+}
+
+fn serve_one(shared: &Arc<Shared>, stream: &mut TcpStream) -> u16 {
+    let req = match http::read_request(stream, &shared.cfg.limits) {
+        Ok(r) => r,
+        Err(e) => return write_error(stream, &e),
+    };
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => healthz(shared, stream),
+        ("GET", "/v1/designs") => designs(stream),
+        ("GET", "/metrics") => metrics_doc(shared, stream),
+        ("POST", "/v1/eval") => eval(shared, stream, &req),
+        ("POST", "/v1/sweep") => sweep(shared, stream, &req),
+        ("POST", "/v1/shutdown") => shutdown(shared, stream),
+        (m, p @ ("/healthz" | "/v1/designs" | "/metrics" | "/v1/eval" | "/v1/sweep"
+        | "/v1/shutdown")) => {
+            write_error(stream, &SegmulError::serve(405, format!("method {m} not allowed on {p}")))
+        }
+        (_, p) => write_error(stream, &SegmulError::serve(404, format!("no route {p:?}"))),
+    }
+}
+
+fn write_error(stream: &mut TcpStream, e: &SegmulError) -> u16 {
+    let (status, body) = wire::error_wire(e);
+    let _ = http::write_json(stream, status, &body);
+    status
+}
+
+fn healthz(shared: &Arc<Shared>, stream: &mut TcpStream) -> u16 {
+    let draining = shared.draining.load(Ordering::SeqCst);
+    let status = if draining { 503 } else { 200 };
+    let body = obj(vec![
+        ("status", Json::from(if draining { "draining" } else { "ok" })),
+        ("backend", Json::from(shared.backend_name())),
+    ]);
+    let _ = http::write_json(stream, status, &body);
+    status
+}
+
+fn designs(stream: &mut TcpStream) -> u16 {
+    let rows: Vec<Json> = MultiplierSpec::registry_examples(8)
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("design", s.to_json()),
+                ("name", Json::from(s.name().as_str())),
+                ("family", Json::from(s.family())),
+            ])
+        })
+        .collect();
+    let _ = http::write_json(stream, 200, &obj(vec![("designs", Json::Arr(rows))]));
+    200
+}
+
+fn metrics_doc(shared: &Arc<Shared>, stream: &mut TcpStream) -> u16 {
+    let telemetry = shared.telemetry.lock().unwrap().clone();
+    let doc = shared.metrics.render(
+        &telemetry,
+        shared.backend_name(),
+        shared.draining.load(Ordering::SeqCst),
+        shared.queue_depth(),
+    );
+    let _ = http::write_response(stream, 200, "text/plain; charset=utf-8", doc.as_bytes());
+    200
+}
+
+fn shutdown(shared: &Arc<Shared>, stream: &mut TcpStream) -> u16 {
+    shared.draining.store(true, Ordering::SeqCst);
+    shared.ready.notify_all();
+    let _ = http::write_json(stream, 200, &obj(vec![("status", Json::from("draining"))]));
+    200
+}
+
+fn eval(shared: &Arc<Shared>, stream: &mut TcpStream, req: &Request) -> u16 {
+    let parsed = match wire::parse_eval(&req.body, shared.cfg.seed) {
+        Ok(p) => p,
+        Err(e) => return write_error(stream, &e),
+    };
+    let deadline = parsed.deadline.unwrap_or(shared.cfg.default_deadline);
+    let (reply, answer) = sync_channel(1);
+    let cancelled = Arc::new(AtomicBool::new(false));
+    let work = EvalWork { job: parsed.job, reply, cancelled: cancelled.clone() };
+    if let Err(e) = shared.admit(Work::Eval(work)) {
+        return write_error(stream, &e);
+    }
+    match answer.recv_timeout(deadline) {
+        Ok(Ok(outcome)) => match wire::outcome_json(&outcome, shared.backend_name()) {
+            Ok(body) => {
+                let _ = http::write_json(stream, 200, &body);
+                200
+            }
+            Err(e) => write_error(stream, &e),
+        },
+        Ok(Err(e)) => write_error(stream, &e),
+        Err(RecvTimeoutError::Timeout) => {
+            cancelled.store(true, Ordering::SeqCst);
+            shared.metrics.deadline_timeouts.fetch_add(1, Ordering::Relaxed);
+            write_error(
+                stream,
+                &SegmulError::serve(
+                    504,
+                    format!("deadline of {} ms elapsed before the engine answered", deadline.as_millis()),
+                ),
+            )
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            write_error(stream, &SegmulError::serve(500, "engine exited before answering"))
+        }
+    }
+}
+
+fn sweep(shared: &Arc<Shared>, stream: &mut TcpStream, req: &Request) -> u16 {
+    let parsed = match wire::parse_sweep(&req.body, shared.cfg.mc_samples) {
+        Ok(p) => p,
+        Err(e) => return write_error(stream, &e),
+    };
+    let grid = SweepGrid {
+        bitwidths: parsed.bitwidths,
+        designs: parsed.designs,
+        exhaustive_max_n: shared.cfg.exhaustive_max_n,
+        force_mc: parsed.force_mc,
+        mc_samples: parsed.mc_samples,
+        seed: parsed.seed.unwrap_or(shared.cfg.seed),
+    };
+    let jobs: std::collections::VecDeque<_> = grid.jobs().into();
+    let total = jobs.len() as u64;
+    let deadline = parsed.deadline.unwrap_or(shared.cfg.default_deadline);
+    // Unbounded events channel: the engine never blocks on a slow
+    // client; a vanished client is detected by the failed send instead.
+    let (events, rows) = channel();
+    let cancelled = Arc::new(AtomicBool::new(false));
+    let work = SweepWork { jobs, events, cancelled: cancelled.clone() };
+    if let Err(e) = shared.admit(Work::Sweep(work)) {
+        return write_error(stream, &e);
+    }
+    let start = Instant::now();
+    let Ok(mut writer) = ChunkedWriter::start(stream, 200, "application/x-ndjson") else {
+        cancelled.store(true, Ordering::SeqCst);
+        return 200; // head may be half-written; the socket is dead anyway
+    };
+    let mut done = 0u64;
+    loop {
+        let remaining = deadline.saturating_sub(start.elapsed());
+        match rows.recv_timeout(remaining) {
+            Ok(SweepEvent::Row(outcome)) => {
+                done += 1;
+                let line = match wire::outcome_json(&outcome, shared.backend_name()) {
+                    Ok(row) => obj(vec![
+                        ("row", row),
+                        ("done", Json::from(done)),
+                        ("total", Json::from(total)),
+                    ]),
+                    Err(e) => wire::error_wire(&e).1,
+                };
+                if writer.json_line(&line).is_err() {
+                    cancelled.store(true, Ordering::SeqCst);
+                    return 200;
+                }
+            }
+            Ok(SweepEvent::Done) => {
+                let _ = writer.json_line(&obj(vec![
+                    ("status", Json::from("complete")),
+                    ("done", Json::from(done)),
+                    ("total", Json::from(total)),
+                ]));
+                let _ = writer.finish();
+                return 200;
+            }
+            Ok(SweepEvent::Failed(e)) => {
+                let _ = writer.json_line(&wire::error_wire(&e).1);
+                let _ = writer.finish();
+                return 200;
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                // The stream already committed a 200 head; the timeout is
+                // delivered in-band as a typed error row, and the engine
+                // drops the remaining grid via the cancellation flag.
+                cancelled.store(true, Ordering::SeqCst);
+                shared.metrics.deadline_timeouts.fetch_add(1, Ordering::Relaxed);
+                let e = SegmulError::serve(
+                    504,
+                    format!(
+                        "deadline of {} ms elapsed after {done}/{total} grid points",
+                        deadline.as_millis()
+                    ),
+                );
+                let _ = writer.json_line(&wire::error_wire(&e).1);
+                let _ = writer.finish();
+                return 200;
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                let e = SegmulError::serve(500, "engine exited mid-sweep");
+                let _ = writer.json_line(&wire::error_wire(&e).1);
+                let _ = writer.finish();
+                return 200;
+            }
+        }
+    }
+}

@@ -1,0 +1,364 @@
+//! Typed JSON wire formats: request extraction and response encoding.
+//!
+//! Request parsing is strict and total: every malformed body — invalid
+//! JSON, wrong-typed fields, unknown design families, out-of-range
+//! parameters — maps to a typed [`SegmulError`] (and from there, through
+//! [`error_wire`], to a 4xx JSON error body). The design tag reuses the
+//! artifact manifest's schema ([`MultiplierSpec::to_json`] /
+//! [`MultiplierSpec::from_json`]), so a design is written identically in
+//! `artifacts/manifest.json`, the result store, and on the wire.
+//!
+//! `u64` fields that can exceed 2^53 (seeds, sample budgets) are
+//! accepted as JSON numbers *or* decimal strings, mirroring the store's
+//! key encoding.
+
+use std::time::Duration;
+
+use crate::coordinator::SweepOutcome;
+use crate::error::{ErrorMetrics, SegmulError};
+use crate::multiplier::{DesignSet, MultiplierSpec};
+use crate::util::json::{obj, Json};
+
+/// One `/v1/eval` request: a design + workload, with an optional
+/// per-request deadline.
+#[derive(Clone, Debug)]
+pub struct EvalRequest {
+    pub job: crate::coordinator::EvalJob,
+    pub deadline: Option<Duration>,
+}
+
+/// One `/v1/sweep` request: a design-set grid streamed back as ndjson.
+#[derive(Clone, Debug)]
+pub struct SweepRequest {
+    pub designs: DesignSet,
+    pub bitwidths: Vec<u32>,
+    pub mc_samples: u64,
+    pub force_mc: bool,
+    pub seed: Option<u64>,
+    pub deadline: Option<Duration>,
+}
+
+fn bad(reason: impl Into<String>) -> SegmulError {
+    SegmulError::serve(400, reason)
+}
+
+fn parse_body(body: &[u8]) -> Result<Json, SegmulError> {
+    let text = std::str::from_utf8(body).map_err(|_| bad("request body is not UTF-8"))?;
+    Json::parse(text).map_err(|e| bad(format!("invalid json body: {e}")))
+}
+
+/// Accept `u64` as a JSON number or a decimal string (the codec's
+/// numbers are f64 and would round seeds above 2^53).
+fn num_u64(j: &Json, field: &str) -> Result<u64, SegmulError> {
+    match j {
+        Json::Num(_) => j
+            .as_u64()
+            .ok_or_else(|| bad(format!("field '{field}' must be a non-negative integer"))),
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| bad(format!("field '{field}' is not a decimal u64: {s:?}"))),
+        _ => Err(bad(format!("field '{field}' must be an integer or decimal string"))),
+    }
+}
+
+fn opt_u64(j: &Json, field: &str) -> Result<Option<u64>, SegmulError> {
+    match j.get(field) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => num_u64(v, field).map(Some),
+    }
+}
+
+fn deadline_of(j: &Json) -> Result<Option<Duration>, SegmulError> {
+    Ok(opt_u64(j, "deadline_ms")?.map(Duration::from_millis))
+}
+
+/// Parse a `/v1/eval` body:
+/// `{"design": {...}, "workload": {...}, "deadline_ms": 500}` where the
+/// design tag is the manifest schema and the workload is one of
+/// `{"kind":"exhaustive"}`, `{"kind":"mc","samples":N,"seed":S}`, or
+/// `{"kind":"adaptive","max_samples":N,"seed":S,"target_rel_stderr":T}`.
+pub fn parse_eval(body: &[u8], default_seed: u64) -> Result<EvalRequest, SegmulError> {
+    let j = parse_body(body)?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(bad("request body must be a JSON object"));
+    }
+    let design_tag = j.get("design").ok_or_else(|| bad("missing object field 'design'"))?;
+    if !matches!(design_tag, Json::Obj(_)) {
+        return Err(bad("field 'design' must be a design-tag object"));
+    }
+    let design = MultiplierSpec::from_json(design_tag).map_err(bad)?;
+    let workload = j.get("workload").ok_or_else(|| bad("missing object field 'workload'"))?;
+    let kind = workload
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| bad("workload missing string field 'kind'"))?;
+    let seed = opt_u64(workload, "seed")?.unwrap_or(default_seed);
+    let builder = crate::api::JobBuilder::new(design).seed(seed);
+    let builder = match kind {
+        "exhaustive" => builder.exhaustive(),
+        "mc" => {
+            let samples = opt_u64(workload, "samples")?
+                .ok_or_else(|| bad("mc workload missing field 'samples'"))?;
+            builder.monte_carlo(samples)
+        }
+        "adaptive" => {
+            let max = opt_u64(workload, "max_samples")?
+                .ok_or_else(|| bad("adaptive workload missing field 'max_samples'"))?;
+            let target = workload
+                .get("target_rel_stderr")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| bad("adaptive workload missing numeric 'target_rel_stderr'"))?;
+            builder.adaptive(max, target)
+        }
+        other => return Err(bad(format!("unknown workload kind {other:?} (exhaustive|mc|adaptive)"))),
+    };
+    // Spec/workload validation errors keep their own typed kinds (both
+    // map to 400 on the wire, with kind "spec"/"workload" in the body).
+    let job = builder.build()?;
+    Ok(EvalRequest { job, deadline: deadline_of(&j)? })
+}
+
+/// Parse a `/v1/sweep` body:
+/// `{"designs":"paper","bitwidths":[4,8],"samples":N,"mc":true,
+///   "seed":S,"deadline_ms":D}` — all fields optional except none; the
+/// defaults mirror `segmul sweep` (paper set over the configured grid).
+pub fn parse_sweep(body: &[u8], default_samples: u64) -> Result<SweepRequest, SegmulError> {
+    let j = if body.is_empty() { Json::Obj(Default::default()) } else { parse_body(body)? };
+    if !matches!(j, Json::Obj(_)) {
+        return Err(bad("request body must be a JSON object"));
+    }
+    let designs = match j.get("designs") {
+        None | Some(Json::Null) => DesignSet::parse("paper")?,
+        Some(Json::Str(s)) => DesignSet::parse(s)?,
+        Some(_) => return Err(bad("field 'designs' must be a design-set name string")),
+    };
+    let bitwidths = match j.get("bitwidths") {
+        None | Some(Json::Null) => vec![4, 8],
+        Some(Json::Arr(a)) => {
+            let mut out = Vec::with_capacity(a.len());
+            for v in a {
+                let n = v
+                    .as_u64()
+                    .and_then(|n| u32::try_from(n).ok())
+                    .ok_or_else(|| bad("field 'bitwidths' must be an array of integers"))?;
+                out.push(n);
+            }
+            if out.is_empty() {
+                return Err(bad("field 'bitwidths' must not be empty"));
+            }
+            out
+        }
+        Some(_) => return Err(bad("field 'bitwidths' must be an array of integers")),
+    };
+    Ok(SweepRequest {
+        designs,
+        bitwidths,
+        mc_samples: opt_u64(&j, "samples")?.unwrap_or(default_samples),
+        force_mc: match j.get("mc") {
+            None | Some(Json::Null) => false,
+            Some(Json::Bool(b)) => *b,
+            Some(_) => return Err(bad("field 'mc' must be a boolean")),
+        },
+        seed: opt_u64(&j, "seed")?,
+        deadline: deadline_of(&j)?,
+    })
+}
+
+/// The total `SegmulError → HTTP status` mapping. Client-caused classes
+/// are 4xx, capability problems 503, everything else 500; the serving
+/// layer's own rejections carry their status explicitly.
+pub fn status_of(e: &SegmulError) -> u16 {
+    match e {
+        SegmulError::Serve { status, .. } => *status,
+        SegmulError::Config(_) | SegmulError::Spec { .. } | SegmulError::Workload(_) => 400,
+        SegmulError::Backend(_) => 503,
+        SegmulError::Artifact { .. }
+        | SegmulError::Eval(_)
+        | SegmulError::Stats(_)
+        | SegmulError::Store { .. }
+        | SegmulError::Io(_) => 500,
+    }
+}
+
+/// The total `SegmulError → (status, error body)` wire mapping:
+/// `{"error": {"kind": "...", "status": N, "detail": "..."}}`.
+pub fn error_wire(e: &SegmulError) -> (u16, Json) {
+    let status = status_of(e);
+    let body = obj(vec![(
+        "error",
+        obj(vec![
+            ("kind", Json::from(e.kind())),
+            ("status", Json::from(status as u64)),
+            ("detail", Json::from(e.to_string().as_str())),
+        ]),
+    )]);
+    (status, body)
+}
+
+/// Metric fields shared by eval responses and sweep stream rows. The
+/// encoding mirrors `report::sweep::sweep_json` so a served answer is
+/// field-for-field comparable with the CLI sweep report.
+pub fn metrics_json(m: &ErrorMetrics) -> Json {
+    let mean_ber = m.mean_ber();
+    obj(vec![
+        ("n", Json::from(m.n as u64)),
+        ("samples", Json::from(m.samples)),
+        ("er", Json::from(m.er)),
+        ("med_signed", Json::from(m.med_signed)),
+        ("med_abs", Json::from(m.med_abs)),
+        ("mae", Json::from(m.mae)),
+        ("nmed", Json::from(m.nmed)),
+        ("mred", Json::from(m.mred)),
+        ("mean_ber", if mean_ber.is_nan() { Json::Null } else { Json::from(mean_ber) }),
+    ])
+}
+
+/// One answered job as a response body / stream row.
+pub fn outcome_json(o: &SweepOutcome, backend: &str) -> Result<Json, SegmulError> {
+    let m = o.metrics()?;
+    Ok(obj(vec![
+        ("design", o.job.design.to_json()),
+        ("name", Json::from(o.job.design.name().as_str())),
+        ("metrics", metrics_json(&m)),
+        ("source", Json::from(o.source())),
+        ("cached", Json::from(o.cached)),
+        ("backend", Json::from(backend)),
+        ("wall_ms", Json::from(o.wall().as_secs_f64() * 1e3)),
+    ]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::WorkSpec;
+
+    fn eval_body(design: &str, workload: &str) -> String {
+        format!(r#"{{"design": {design}, "workload": {workload}}}"#)
+    }
+
+    #[test]
+    fn parses_a_full_eval_request() {
+        let body = eval_body(
+            r#"{"family":"segmented","n":8,"t":3,"fix":true}"#,
+            r#"{"kind":"mc","samples":50000,"seed":"18446744073709551615"}"#,
+        );
+        let req = parse_eval(body.as_bytes(), 0).unwrap();
+        assert_eq!(req.job.design, MultiplierSpec::Segmented { n: 8, t: 3, fix: true });
+        match req.job.spec {
+            WorkSpec::MonteCarlo { samples, seed } => {
+                assert_eq!(samples, 50_000);
+                assert_eq!(seed, u64::MAX, "string-encoded seeds survive above 2^53");
+            }
+            other => panic!("expected MC, got {other:?}"),
+        }
+        assert!(req.deadline.is_none());
+    }
+
+    #[test]
+    fn session_seed_fills_in_when_absent() {
+        let body = eval_body(r#"{"family":"accurate","n":8}"#, r#"{"kind":"mc","samples":10}"#);
+        let req = parse_eval(body.as_bytes(), 77).unwrap();
+        match req.job.spec {
+            WorkSpec::MonteCarlo { seed, .. } => assert_eq!(seed, 77),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn deadline_is_extracted() {
+        let body = r#"{"design": {"family":"accurate","n":4}, "workload": {"kind":"exhaustive"}, "deadline_ms": 250}"#;
+        let req = parse_eval(body.as_bytes(), 0).unwrap();
+        assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn typed_4xx_for_malformed_eval_bodies() {
+        let kind_status = |body: &str| {
+            let e = parse_eval(body.as_bytes(), 0).unwrap_err();
+            (e.kind(), status_of(&e))
+        };
+        // Structural garbage: serve-kind 400s.
+        assert_eq!(kind_status("not json"), ("serve", 400));
+        assert_eq!(kind_status("[1,2]"), ("serve", 400));
+        assert_eq!(kind_status("{}"), ("serve", 400));
+        assert_eq!(kind_status(r#"{"design": 5, "workload": {"kind":"exhaustive"}}"#), ("serve", 400));
+        assert_eq!(
+            kind_status(&eval_body(r#"{"family":"warp","n":8}"#, r#"{"kind":"exhaustive"}"#)),
+            ("serve", 400)
+        );
+        assert_eq!(
+            kind_status(&eval_body(r#"{"family":"accurate","n":8}"#, r#"{"kind":"turbo"}"#)),
+            ("serve", 400)
+        );
+        assert_eq!(
+            kind_status(&eval_body(
+                r#"{"family":"accurate","n":8}"#,
+                r#"{"kind":"mc","samples":-3}"#
+            )),
+            ("serve", 400)
+        );
+        // Domain validation keeps its own typed kinds, still 400.
+        assert_eq!(
+            kind_status(&eval_body(
+                r#"{"family":"segmented","n":8,"t":9,"fix":false}"#,
+                r#"{"kind":"exhaustive"}"#
+            )),
+            ("spec", 400)
+        );
+        assert_eq!(
+            kind_status(&eval_body(
+                r#"{"family":"accurate","n":8}"#,
+                r#"{"kind":"mc","samples":0}"#
+            )),
+            ("workload", 400)
+        );
+    }
+
+    #[test]
+    fn sweep_defaults_and_overrides() {
+        let req = parse_sweep(b"", 1000).unwrap();
+        assert_eq!(req.designs.name(), "paper");
+        assert_eq!(req.bitwidths, vec![4, 8]);
+        assert_eq!(req.mc_samples, 1000);
+        assert!(!req.force_mc && req.seed.is_none() && req.deadline.is_none());
+        let req = parse_sweep(
+            br#"{"designs":"all","bitwidths":[8],"samples":500,"mc":true,"seed":9,"deadline_ms":100}"#,
+            1000,
+        )
+        .unwrap();
+        assert_eq!(req.designs.name(), "all");
+        assert_eq!((req.mc_samples, req.seed), (500, Some(9)));
+        assert!(req.force_mc);
+        assert_eq!(req.deadline, Some(Duration::from_millis(100)));
+        assert!(parse_sweep(br#"{"designs":"nope"}"#, 1).is_err());
+        assert!(parse_sweep(br#"{"bitwidths":[]}"#, 1).is_err());
+        assert!(parse_sweep(br#"{"bitwidths":"x"}"#, 1).is_err());
+        assert!(parse_sweep(br#"{"mc":"yes"}"#, 1).is_err());
+    }
+
+    #[test]
+    fn error_mapping_is_total_and_typed() {
+        let cases = [
+            (SegmulError::serve(429, "budget"), 429, "serve"),
+            (SegmulError::serve(503, "draining"), 503, "serve"),
+            (SegmulError::serve(504, "deadline"), 504, "serve"),
+            (SegmulError::config("x"), 400, "config"),
+            (SegmulError::spec("d", "r"), 400, "spec"),
+            (SegmulError::workload("w"), 400, "workload"),
+            (SegmulError::backend("b"), 503, "backend"),
+            (SegmulError::artifact("p", "r"), 500, "artifact"),
+            (SegmulError::Eval("e".into()), 500, "eval"),
+            (SegmulError::stats("s"), 500, "stats"),
+            (SegmulError::store("p", "r"), 500, "store"),
+            (SegmulError::Io("i".into()), 500, "io"),
+        ];
+        for (e, status, kind) in cases {
+            let (s, body) = error_wire(&e);
+            assert_eq!(s, status, "{e}");
+            let err = body.get("error").unwrap();
+            assert_eq!(err.get("kind").unwrap().as_str(), Some(kind));
+            assert_eq!(err.get("status").unwrap().as_u64(), Some(status as u64));
+            assert!(err.get("detail").unwrap().as_str().is_some());
+        }
+    }
+}

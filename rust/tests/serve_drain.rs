@@ -1,0 +1,165 @@
+//! Graceful drain and deadline enforcement: in-flight work completes
+//! after a shutdown request while new work gets typed 503s, and expired
+//! deadlines surface as typed 504s (headline or in-band) without ever
+//! hanging a client or the server.
+
+use std::time::Duration;
+
+use segmul::api::BackendChoice;
+use segmul::serve::metrics::metric_value;
+use segmul::serve::{client, ServeConfig, Server};
+use segmul::util::json::Json;
+
+fn boot() -> Server {
+    Server::start(ServeConfig {
+        workers: Some(2),
+        backend: BackendChoice::Cpu,
+        default_deadline: Duration::from_secs(120),
+        ..ServeConfig::default()
+    })
+    .expect("server startup")
+}
+
+/// A drain requested mid-sweep lets the sweep finish (it was admitted
+/// before the drain) while late arrivals get typed 503s.
+#[test]
+fn shutdown_completes_inflight_sweep_and_rejects_new_work() {
+    let server = boot();
+    let addr = server.addr();
+
+    // A sweep heavy enough to span many engine cycles (one grid point
+    // per cycle) and to still be in flight while the drain checks below
+    // run: the client thread blocks until the stream completes.
+    let sweeper = std::thread::spawn(move || {
+        client::post_json(
+            addr,
+            "/v1/sweep",
+            &Json::parse(r#"{"designs":"paper","bitwidths":[8],"mc":true,"samples":5000000,"seed":5}"#)
+                .unwrap(),
+        )
+    });
+    std::thread::sleep(Duration::from_millis(50));
+
+    let down = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    assert_eq!(down.status, 200);
+    assert_eq!(down.json().unwrap().get("status").and_then(Json::as_str), Some("draining"));
+    assert!(server.draining());
+
+    // Health flips to draining; new work is refused with a typed 503.
+    let health = client::get(addr, "/healthz").unwrap();
+    assert_eq!(health.status, 503);
+    assert_eq!(health.json().unwrap().get("status").and_then(Json::as_str), Some("draining"));
+    let late = client::post_json(
+        addr,
+        "/v1/eval",
+        &Json::parse(
+            r#"{"design":{"family":"accurate","n":8},
+                "workload":{"kind":"mc","samples":1000,"seed":1}}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(late.status, 503, "{}", late.text());
+    let err = late.json().unwrap();
+    assert_eq!(err.get("error").unwrap().get("kind").and_then(Json::as_str), Some("serve"));
+
+    // The in-flight sweep still streams to completion.
+    let sweep = sweeper.join().unwrap().unwrap();
+    assert_eq!(sweep.status, 200);
+    let lines = sweep.json_lines().unwrap();
+    let trailer = lines.last().expect("stream trailer");
+    assert_eq!(
+        trailer.get("status").and_then(Json::as_str),
+        Some("complete"),
+        "drain must not abort admitted work: {trailer:?}"
+    );
+    let total = trailer.get("total").unwrap().as_u64().unwrap();
+    assert_eq!(trailer.get("done").unwrap().as_u64(), Some(total));
+    assert!(total >= 2, "paper grid at n=8 has multiple points");
+
+    let summary = server.join();
+    assert_eq!(
+        summary.telemetry.jobs_completed, total,
+        "every admitted grid point ran; the rejected eval never reached the engine"
+    );
+    assert!(summary.metrics_doc.contains("serve_draining 1"));
+}
+
+#[test]
+fn begin_drain_via_handle_stops_the_server() {
+    let server = boot();
+    let addr = server.addr();
+    assert!(!server.draining());
+    server.begin_drain();
+    assert!(server.draining());
+    // While the drain is settling, a late client gets a typed 503; once
+    // the idle engine and acceptor have exited (which can be immediate —
+    // the queue is empty), the connection is refused instead.
+    if let Ok(health) = client::get(addr, "/healthz") {
+        assert_eq!(health.status, 503);
+    }
+    let summary = server.join();
+    assert_eq!(summary.telemetry.jobs_completed, 0);
+}
+
+/// An eval whose deadline expires before the engine answers gets a
+/// typed 504 and is cancelled, never evaluated on the client's behalf.
+#[test]
+fn eval_deadline_expires_as_typed_504() {
+    let server = boot();
+    let addr = server.addr();
+
+    let resp = client::post_json(
+        addr,
+        "/v1/eval",
+        &Json::parse(
+            r#"{"design":{"family":"segmented","n":16,"t":5,"fix":true},
+                "workload":{"kind":"mc","samples":2000000,"seed":2},
+                "deadline_ms":1}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.text());
+    let err = resp.json().unwrap();
+    let err = err.get("error").unwrap();
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("serve"));
+    assert_eq!(err.get("status").and_then(Json::as_u64), Some(504));
+    assert!(err.get("detail").and_then(Json::as_str).unwrap().contains("deadline"));
+
+    let doc = client::get(addr, "/metrics").unwrap().text();
+    let timeouts: u64 = metric_value(&doc, "serve_deadline_timeouts").unwrap().parse().unwrap();
+    assert!(timeouts >= 1);
+
+    let _ = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    let summary = server.join();
+    assert!(summary.requests_total >= 3);
+}
+
+/// A sweep deadline fires after the 200 head is committed, so it is
+/// delivered in-band: a typed 504 error row terminates the stream.
+#[test]
+fn sweep_deadline_is_delivered_in_band() {
+    let server = boot();
+    let addr = server.addr();
+
+    let resp = client::post_json(
+        addr,
+        "/v1/sweep",
+        &Json::parse(
+            r#"{"designs":"paper","bitwidths":[16],"mc":true,"samples":2000000,"deadline_ms":1}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(resp.status, 200, "the head is already committed when the deadline fires");
+    let lines = resp.json_lines().unwrap();
+    let last = lines.last().expect("in-band error row");
+    let err = last.get("error").expect("typed error row");
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("serve"));
+    assert_eq!(err.get("status").and_then(Json::as_u64), Some(504));
+    assert!(err.get("detail").and_then(Json::as_str).unwrap().contains("grid points"));
+
+    let _ = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    server.join();
+}

@@ -1,0 +1,171 @@
+//! Loopback smoke for `segmul serve`: every endpoint answers, coalesced
+//! bursts share pool dispatches, and a served eval is bit-identical to
+//! the same job run directly through an [`api::Session`].
+
+use std::time::Duration;
+
+use segmul::api::{BackendChoice, EvalJob, Session};
+use segmul::serve::metrics::metric_value;
+use segmul::serve::{client, ServeConfig, Server};
+use segmul::util::json::Json;
+
+fn boot() -> Server {
+    Server::start(ServeConfig {
+        workers: Some(2),
+        backend: BackendChoice::Cpu,
+        default_deadline: Duration::from_secs(60),
+        ..ServeConfig::default()
+    })
+    .expect("server startup")
+}
+
+fn eval_body(samples: u64, seed: u64) -> Json {
+    Json::parse(&format!(
+        r#"{{"design":{{"family":"segmented","n":8,"t":3,"fix":true}},
+            "workload":{{"kind":"mc","samples":{samples},"seed":{seed}}}}}"#
+    ))
+    .unwrap()
+}
+
+#[test]
+fn every_endpoint_answers() {
+    let server = boot();
+    let addr = server.addr();
+
+    let health = client::get(addr, "/healthz").unwrap();
+    assert_eq!(health.status, 200);
+    let body = health.json().unwrap();
+    assert_eq!(body.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(body.get("backend").and_then(Json::as_str), Some("cpu"));
+
+    let designs = client::get(addr, "/v1/designs").unwrap();
+    assert_eq!(designs.status, 200);
+    let rows = match designs.json().unwrap().get("designs") {
+        Some(Json::Arr(rows)) => rows.clone(),
+        other => panic!("expected designs array, got {other:?}"),
+    };
+    assert!(!rows.is_empty(), "registry must expose example designs");
+    for row in &rows {
+        assert!(row.get("design").is_some() && row.get("name").is_some());
+    }
+    assert!(
+        rows.iter().any(|r| r.get("family").and_then(Json::as_str) == Some("segmented")),
+        "paper family missing from /v1/designs"
+    );
+
+    let eval = client::post_json(addr, "/v1/eval", &eval_body(40_000, 11)).unwrap();
+    assert_eq!(eval.status, 200, "{}", eval.text());
+    let row = eval.json().unwrap();
+    assert_eq!(row.get("backend").and_then(Json::as_str), Some("cpu"));
+    assert_eq!(row.get("source").and_then(Json::as_str), Some("simulated"));
+    assert!(row.get("metrics").unwrap().get("er").unwrap().as_f64().unwrap() > 0.0);
+
+    // n=4 is under the exhaustive threshold: a small deterministic grid.
+    let sweep = client::post_json(
+        addr,
+        "/v1/sweep",
+        &Json::parse(r#"{"designs":"paper","bitwidths":[4]}"#).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(sweep.status, 200);
+    assert_eq!(
+        sweep.header("transfer-encoding").map(str::to_ascii_lowercase).as_deref(),
+        Some("chunked")
+    );
+    let lines = sweep.json_lines().unwrap();
+    assert!(lines.len() >= 2, "stream must carry rows plus a trailer");
+    let trailer = lines.last().unwrap();
+    assert_eq!(trailer.get("status").and_then(Json::as_str), Some("complete"));
+    let total = trailer.get("total").unwrap().as_u64().unwrap();
+    assert_eq!(trailer.get("done").unwrap().as_u64(), Some(total));
+    assert_eq!(lines.len() as u64, total + 1);
+    for line in &lines[..lines.len() - 1] {
+        let row = line.get("row").expect("stream row");
+        assert_eq!(row.get("backend").and_then(Json::as_str), Some("cpu"));
+        assert!(row.get("metrics").unwrap().get("mae").unwrap().as_f64().is_some());
+    }
+
+    let scrape = client::get(addr, "/metrics").unwrap();
+    assert_eq!(scrape.status, 200);
+    let doc = scrape.text();
+    assert_eq!(metric_value(&doc, "serve_backend").as_deref(), Some("cpu"));
+    assert_eq!(metric_value(&doc, "serve_draining").as_deref(), Some("0"));
+    let total: u64 = metric_value(&doc, "serve_requests_total").unwrap().parse().unwrap();
+    assert!(total >= 4);
+    assert!(metric_value(&doc, "session_jobs_completed").is_some());
+
+    let down = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    assert_eq!(down.status, 200);
+    let summary = server.join();
+    assert_eq!(summary.backend, "cpu");
+    assert!(summary.requests_total >= 5);
+    assert!(summary.metrics_doc.contains("serve_backend cpu"));
+}
+
+/// Identical concurrent requests must not each cost a pool dispatch:
+/// the coalescer (or, across engine cycles, the session cache) answers
+/// them from one evaluation, and every client sees the same bits.
+#[test]
+fn identical_burst_coalesces_and_answers_identically() {
+    let server = boot();
+    let addr = server.addr();
+
+    let burst = 8;
+    let handles: Vec<_> = (0..burst)
+        .map(|_| {
+            std::thread::spawn(move || client::post_json(addr, "/v1/eval", &eval_body(60_000, 99)))
+        })
+        .collect();
+    let mut bodies: Vec<Json> = Vec::new();
+    for handle in handles {
+        let resp = handle.join().unwrap().unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.text());
+        bodies.push(resp.json().unwrap());
+    }
+    // All clients got byte-for-byte the same metrics (only `cached` and
+    // `wall_ms` legitimately differ between a dispatch and a cache hit).
+    let reference = bodies[0].get("metrics").unwrap().to_string_compact();
+    for body in &bodies {
+        assert_eq!(body.get("metrics").unwrap().to_string_compact(), reference);
+    }
+
+    let doc = client::get(addr, "/metrics").unwrap().text();
+    let requests: u64 = metric_value(&doc, "serve_coalesce_requests").unwrap().parse().unwrap();
+    let dispatched: u64 =
+        metric_value(&doc, "serve_coalesce_dispatched").unwrap().parse().unwrap();
+    assert_eq!(requests, burst);
+    // Whether the burst landed in one engine cycle (one coalesced group)
+    // or spread across cycles (cache hits after the first), exactly one
+    // pool dispatch happened.
+    assert_eq!(dispatched, 1, "identical burst must evaluate once, not {dispatched} times");
+    let ratio: f64 = metric_value(&doc, "serve_coalesce_ratio").unwrap().parse().unwrap();
+    assert!(ratio >= burst as f64 - 1e-9);
+
+    // Bit-identity with the offline path: the same job through a direct
+    // session produces exactly the served numbers.
+    let mut session = Session::builder()
+        .workers(2)
+        .backend(BackendChoice::Cpu)
+        .build()
+        .unwrap();
+    let direct = session
+        .run_outcome(&EvalJob::mc(8, 3, true, 60_000, 99))
+        .unwrap();
+    let m = direct.metrics().unwrap();
+    let served = bodies[0].get("metrics").unwrap();
+    let exact = |field: &str| served.get(field).unwrap().as_f64().unwrap();
+    assert_eq!(exact("er"), m.er, "served ER diverged from direct evaluation");
+    assert_eq!(exact("mae"), m.mae as f64);
+    assert_eq!(exact("med_abs"), m.med_abs);
+    assert_eq!(exact("med_signed"), m.med_signed);
+    assert_eq!(exact("nmed"), m.nmed);
+    assert_eq!(exact("mred"), m.mred);
+    assert_eq!(served.get("samples").unwrap().as_u64(), Some(m.samples));
+
+    let _ = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    let summary = server.join();
+    assert_eq!(
+        summary.telemetry.jobs_evaluated, 1,
+        "the engine must have evaluated the burst exactly once"
+    );
+}

@@ -1,0 +1,162 @@
+//! Malformed-request battery: every hostile payload gets a typed 4xx
+//! JSON error — the server never panics, never hangs, and stays healthy
+//! for the next well-formed request.
+
+use std::time::Duration;
+
+use segmul::api::BackendChoice;
+use segmul::serve::{client, ServeConfig, Server};
+use segmul::util::json::Json;
+
+fn boot() -> Server {
+    Server::start(ServeConfig {
+        workers: Some(2),
+        backend: BackendChoice::Cpu,
+        default_deadline: Duration::from_secs(60),
+        ..ServeConfig::default()
+    })
+    .expect("server startup")
+}
+
+/// Assert a typed error response: expected status, JSON body with an
+/// `error` object whose `status` echoes the HTTP status.
+fn assert_typed_error(resp: &client::Response, status: u16, kind: &str) {
+    assert_eq!(resp.status, status, "body: {}", resp.text());
+    let err = resp
+        .json()
+        .unwrap_or_else(|_| panic!("error body is not JSON: {:?}", resp.text()));
+    let err = err.get("error").expect("error object");
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some(kind));
+    assert_eq!(err.get("status").and_then(Json::as_u64), Some(status as u64));
+    assert!(err.get("detail").and_then(Json::as_str).is_some());
+}
+
+#[test]
+fn malformed_requests_get_typed_4xx_and_the_server_survives() {
+    let server = boot();
+    let addr = server.addr();
+
+    // --- wire-level garbage ------------------------------------------------
+    let raw = |bytes: &[u8]| client::send_bytes(addr, bytes).unwrap();
+    assert_typed_error(&raw(b""), 400, "serve");
+    assert_typed_error(&raw(b"GET /healthz HT"), 400, "serve");
+    assert_typed_error(&raw(b"NONSENSE\r\n\r\n"), 400, "serve");
+    assert_typed_error(&raw(b"GET /healthz HTTP/3.0\r\n\r\n"), 400, "serve");
+    assert_typed_error(&raw(b"GET healthz HTTP/1.1\r\n\r\n"), 400, "serve");
+    assert_typed_error(
+        &raw(b"POST /v1/eval HTTP/1.1\r\nContent-Length: nope\r\n\r\n"),
+        400,
+        "serve",
+    );
+    // Declared body larger than sent: truncated, typed 400.
+    assert_typed_error(
+        &raw(b"POST /v1/eval HTTP/1.1\r\nContent-Length: 50\r\n\r\n{}"),
+        400,
+        "serve",
+    );
+    // Oversized payload refused from the declared length alone (413).
+    assert_typed_error(
+        &raw(b"POST /v1/eval HTTP/1.1\r\nContent-Length: 99999999\r\n\r\n"),
+        413,
+        "serve",
+    );
+    // Chunked request bodies are not supported.
+    assert_typed_error(
+        &raw(b"POST /v1/eval HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n0\r\n\r\n"),
+        400,
+        "serve",
+    );
+    // Header bomb past max_head: typed 431.
+    let mut bomb = b"GET /healthz HTTP/1.1\r\n".to_vec();
+    bomb.extend(vec![b'a'; 9001]);
+    assert_typed_error(&raw(&bomb), 431, "serve");
+    // Pipelined garbage after a complete request is never interpreted
+    // (Connection: close); the first request still answers.
+    let pipelined =
+        raw(b"GET /healthz HTTP/1.1\r\n\r\nGARBAGE MORE GARBAGE\r\nContent-Length: -1\r\n\r\n");
+    assert_eq!(pipelined.status, 200, "{}", pipelined.text());
+
+    // --- routing -----------------------------------------------------------
+    assert_typed_error(&client::get(addr, "/nope").unwrap(), 404, "serve");
+    assert_typed_error(&client::get(addr, "/v1/evaluate").unwrap(), 404, "serve");
+    assert_typed_error(&client::get(addr, "/v1/eval").unwrap(), 405, "serve");
+    assert_typed_error(&client::get(addr, "/v1/sweep").unwrap(), 405, "serve");
+    assert_typed_error(
+        &client::post_bytes(addr, "/healthz", b"{}").unwrap(),
+        405,
+        "serve",
+    );
+    assert_typed_error(
+        &client::request(addr, "DELETE", "/metrics", None).unwrap(),
+        405,
+        "serve",
+    );
+
+    // --- body-level garbage on /v1/eval -------------------------------------
+    let post = |body: &[u8]| client::post_bytes(addr, "/v1/eval", body).unwrap();
+    assert_typed_error(&post(b"not json"), 400, "serve");
+    assert_typed_error(&post(b"\xff\xfe\x00"), 400, "serve");
+    assert_typed_error(&post(b"[1,2,3]"), 400, "serve");
+    assert_typed_error(&post(b"{}"), 400, "serve");
+    assert_typed_error(&post(br#"{"design": "segmented", "workload": {"kind":"exhaustive"}}"#), 400, "serve");
+    assert_typed_error(
+        &post(br#"{"design": {"family":"warp","n":8}, "workload": {"kind":"exhaustive"}}"#),
+        400,
+        "serve",
+    );
+    assert_typed_error(
+        &post(br#"{"design": {"family":"accurate","n":8}, "workload": {"kind":"turbo"}}"#),
+        400,
+        "serve",
+    );
+    assert_typed_error(
+        &post(br#"{"design": {"family":"accurate","n":8}, "workload": {"kind":"mc"}}"#),
+        400,
+        "serve",
+    );
+    assert_typed_error(
+        &post(br#"{"design": {"family":"accurate","n":8}, "workload": {"kind":"mc","samples":-4}}"#),
+        400,
+        "serve",
+    );
+    // Domain validation keeps its own typed kinds (still 400).
+    assert_typed_error(
+        &post(br#"{"design": {"family":"segmented","n":8,"t":9,"fix":false}, "workload": {"kind":"exhaustive"}}"#),
+        400,
+        "spec",
+    );
+    assert_typed_error(
+        &post(br#"{"design": {"family":"accurate","n":8}, "workload": {"kind":"mc","samples":0}}"#),
+        400,
+        "workload",
+    );
+
+    // --- body-level garbage on /v1/sweep ------------------------------------
+    let sweep = |body: &[u8]| client::post_bytes(addr, "/v1/sweep", body).unwrap();
+    assert_typed_error(&sweep(b"not json"), 400, "serve");
+    assert_typed_error(&sweep(br#"{"bitwidths":[]}"#), 400, "serve");
+    assert_typed_error(&sweep(br#"{"bitwidths":"wide"}"#), 400, "serve");
+    assert_typed_error(&sweep(br#"{"mc":"yes"}"#), 400, "serve");
+    assert_typed_error(&sweep(br#"{"designs":["paper"]}"#), 400, "serve");
+    assert_typed_error(&sweep(br#"{"deadline_ms":"soon"}"#), 400, "serve");
+
+    // --- the server is still healthy after the battery ----------------------
+    let health = client::get(addr, "/healthz").unwrap();
+    assert_eq!(health.status, 200);
+    let eval = client::post_json(
+        addr,
+        "/v1/eval",
+        &Json::parse(
+            r#"{"design":{"family":"segmented","n":8,"t":2,"fix":true},
+                "workload":{"kind":"mc","samples":20000,"seed":3}}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(eval.status, 200, "{}", eval.text());
+
+    let _ = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    let summary = server.join();
+    assert_eq!(summary.telemetry.jobs_completed, 1, "garbage must never reach the engine");
+    assert!(summary.requests_total >= 30);
+}
