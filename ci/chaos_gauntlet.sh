@@ -1,0 +1,82 @@
+#!/usr/bin/env bash
+# Chaos gauntlet: prove the fault-injection robustness guarantees
+# end-to-end, against the real binary.
+#
+#   1. Fault storm — a store-backed sweep run under an aggressive
+#      SEGMUL_FAULTS plan (I/O failures, blob corruption, journal-append
+#      failures, lease contention, worker panics) must complete, report
+#      its injections, and write reports byte-identical to a fault-free
+#      reference run: injected faults are slower, never wrong.
+#   2. Fleet kill-and-heal — `segmul fleet` supervising two sharded
+#      workers over one store, with shard 0 SIGKILLed at spawn, must
+#      restart the victim, drain both shards, and merge to the
+#      reference bytes.
+#
+# All runs use --deterministic-report so sweep.csv + BENCH_sweep.json
+# carry no wall-clock fields and can be compared with `cmp`.
+#
+# Usage: ci/chaos_gauntlet.sh   (from the repo root; needs a release
+# build — set SEGMUL to override the binary path, SAMPLES/DESIGNS to
+# resize the workload, SEGMUL_CHAOS to override the storm plan).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+SEGMUL="${SEGMUL:-target/release/segmul}"
+SAMPLES="${SAMPLES:-2000000}"
+DESIGNS="${DESIGNS:-paper}"
+CHAOS="${SEGMUL_CHAOS:-store.read:p=0.1,store.write:p=0.1,store.corrupt:p=0.1,journal.append:p=0.1,lease.claim:p=0.1,worker.panic:p=0.02}"
+WORK="$(mktemp -d)"
+trap 'rm -rf "$WORK"' EXIT
+
+sweep() {
+    "$SEGMUL" sweep --designs "$DESIGNS" --mc --samples "$SAMPLES" --seed 42 \
+        --deterministic-report "$@"
+}
+
+echo "== reference: fault-free, no store, 2 workers =="
+sweep --workers 2 --results "$WORK/ref" | tee "$WORK/ref.log"
+
+echo "== fault storm: store-backed sweep under SEGMUL_FAULTS=$CHAOS =="
+SEGMUL_FAULTS="$CHAOS" SEGMUL_FAULT_SEED=3405691582 \
+    sweep --workers 2 --store "$WORK/store" --results "$WORK/chaos" | tee "$WORK/chaos.log"
+grep -q "faults_injected:" "$WORK/chaos.log" || {
+    echo "FAIL: the chaos plan never fired (no faults_injected line)"
+    exit 1
+}
+cmp "$WORK/ref/sweep.csv" "$WORK/chaos/sweep.csv"
+cmp "$WORK/ref/BENCH_sweep.json" "$WORK/chaos/BENCH_sweep.json"
+echo "PASS: storm run reports are byte-identical to the fault-free reference"
+
+echo "== fleet: two supervised shards over one store; shard 0 SIGKILLed at spawn =="
+"$SEGMUL" fleet --shards 2 --designs "$DESIGNS" --mc --samples "$SAMPLES" --seed 42 \
+    --workers 2 --store "$WORK/fstore" --results "$WORK/fleet" >"$WORK/fleet.log" 2>&1 &
+FLEET=$!
+SHARD_PID=""
+for _ in $(seq 1 600); do
+    SHARD_PID=$(sed -n 's|^fleet: shard 0/2 pid \([0-9][0-9]*\) up (restart #0).*|\1|p' "$WORK/fleet.log" | head -n 1)
+    [ -n "$SHARD_PID" ] && break
+    kill -0 "$FLEET" 2>/dev/null || break
+    sleep 0.05
+done
+if [ -n "$SHARD_PID" ] && kill -9 "$SHARD_PID" 2>/dev/null; then
+    echo "SIGKILLed shard 0 (pid $SHARD_PID)"
+    EXPECT_RESTART=1
+else
+    echo "shard 0 finished before the kill landed"
+    EXPECT_RESTART=0
+fi
+wait "$FLEET"
+cat "$WORK/fleet.log"
+if [ "$EXPECT_RESTART" -eq 1 ]; then
+    grep -q "restart #1" "$WORK/fleet.log" || {
+        echo "FAIL: the killed shard was never restarted"
+        exit 1
+    }
+fi
+grep -q "merge complete" "$WORK/fleet.log" || {
+    echo "FAIL: the fleet never ran its merge pass"
+    exit 1
+}
+cmp "$WORK/ref/sweep.csv" "$WORK/fleet/sweep.csv"
+cmp "$WORK/ref/BENCH_sweep.json" "$WORK/fleet/BENCH_sweep.json"
+echo "PASS: the healed fleet merged to the reference bytes"

@@ -1,0 +1,81 @@
+//! Cost of the fault-injection seams on the zero-fault fast path.
+//!
+//! Every store/journal/worker/backend seam consults the session's
+//! [`FaultInjector`] on the hot path. This bench prices that in two
+//! configurations against the same cold-evaluation workload:
+//!
+//! * **disabled** — the default everyone runs: `fire()` is a single
+//!   armed-flag load and returns immediately;
+//! * **armed, quiescent** — a `p=0` plan over every hot seam, the
+//!   worst case that still never fires: each `fire()` pays the full
+//!   per-site counter bump and deterministic RNG draw.
+//!
+//! Bit-identity between the two configurations is asserted before
+//! anything is timed; the summary writes `BENCH_fault.json` with
+//! `fault_overhead_ratio` (armed-vs-disabled throughput ratio, ~1.0
+//! when the seams are free) for the CI bench-regression gate.
+
+use std::sync::Arc;
+
+use segmul::api::{BackendChoice, EvalJob, Session};
+use segmul::bench::{bench, section, speedup, Summary};
+use segmul::fault::FaultInjector;
+use segmul::util::threadpool::default_workers;
+
+/// Every hot seam armed, none of them ever firing.
+const QUIESCENT: &str = "store.read:p=0,store.write:p=0,journal.append:p=0,worker.panic:p=0,backend.fail:p=0";
+
+fn session(faults: Arc<FaultInjector>, workers: usize) -> Session {
+    Session::builder()
+        .workers(workers)
+        .backend(BackendChoice::Cpu)
+        .cache(false) // measure the evaluation path, not the in-memory cache
+        .faults(faults)
+        .build()
+        .expect("session startup")
+}
+
+fn main() {
+    let workers = default_workers().expect("invalid SEGMUL_WORKERS").max(2);
+    let job = EvalJob::mc(8, 3, true, 1 << 14, 42);
+
+    let mut disabled = session(Arc::new(FaultInjector::disabled()), workers);
+    let armed_plan = Arc::new(FaultInjector::parse(QUIESCENT, 0x5EED).expect("valid quiescent plan"));
+    let mut armed = session(armed_plan.clone(), workers);
+
+    // A quiescent plan must be invisible in the answers before it is
+    // allowed to be invisible in the timings.
+    let base = disabled.run(&job).expect("disabled run");
+    let under_seams = armed.run(&job).expect("armed run");
+    assert_eq!(base.stats, under_seams.stats, "a p=0 plan changed the answer");
+    assert_eq!(base.stats.sum_red.to_bits(), under_seams.stats.sum_red.to_bits(), "sum_red bits diverged");
+
+    section(&format!("fault-seam overhead ({workers} workers, cache disabled)"));
+    let s_disabled = bench("cold eval, injector disabled", Some(1.0), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= disabled.run(&job).unwrap().stats.err_count;
+        }
+        acc
+    });
+    let s_armed = bench("cold eval, armed p=0 plan", Some(1.0), |iters| {
+        let mut acc = 0u64;
+        for _ in 0..iters {
+            acc ^= armed.run(&job).unwrap().stats.err_count;
+        }
+        acc
+    });
+    assert_eq!(armed_plan.total_injected(), 0, "a p=0 plan must never fire");
+
+    // > 1 would mean the armed seams are somehow faster; ~1.0 is the
+    // target, and the gate floor catches the fast path growing a cost.
+    let ratio = speedup(&s_armed, &s_disabled);
+    let overhead_pct = (1.0 / ratio - 1.0) * 100.0;
+    println!();
+    println!("armed-vs-disabled throughput ratio      : {ratio:>9.3}x");
+    println!("zero-fault fast-path overhead           : {overhead_pct:>8.2} %");
+
+    let mut summary = Summary::new("fault");
+    summary.metric("fault_overhead_ratio", ratio);
+    summary.write().expect("write bench summary");
+}

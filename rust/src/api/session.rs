@@ -2,12 +2,14 @@
 //! pool, the result cache, and the telemetry of one evaluation campaign.
 
 use std::path::PathBuf;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::{
     AnalyticMode, Answer, ChunkEvent, ChunkPlan, CpuBackend, EvalBackend, EvalJob, JobResult,
     PjrtBackend, SweepGrid, SweepOutcome, SweepRunner,
 };
+use crate::fault::FaultInjector;
 use crate::multiplier::{DispatchClass, MultiplierSpec};
 use crate::store::ResultStore;
 use crate::util::threadpool::default_workers;
@@ -81,6 +83,15 @@ pub struct SessionTelemetry {
     /// Store degradations recovered from: resumed or discarded chunk
     /// journals and corrupt blobs demoted to re-evaluation.
     pub store_recoveries: u64,
+    /// Transient failures recovered by a retry — the pool's per-chunk
+    /// self-healing loop plus the store's lease-wait episodes.
+    pub retries: u64,
+    /// Retry episodes that exhausted their budget and surfaced the error
+    /// (or degraded to evaluating without lease exclusion).
+    pub gave_up: u64,
+    /// Faults deliberately injected by the active [`FaultInjector`] plan
+    /// (always 0 with injection disabled — the production state).
+    pub faults_injected: u64,
     pub pairs_evaluated: u64,
     /// Backend constructions since startup — stays at `workers` for the
     /// session's lifetime (the persistent-pool contract).
@@ -146,6 +157,7 @@ pub struct SessionBuilder {
     store_wait: Option<Duration>,
     seed: u64,
     progress: Option<ProgressCallback>,
+    faults: Option<Arc<FaultInjector>>,
 }
 
 impl SessionBuilder {
@@ -160,6 +172,7 @@ impl SessionBuilder {
             store_wait: None,
             seed: 0,
             progress: None,
+            faults: None,
         }
     }
 
@@ -240,6 +253,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Use an explicit fault-injection plan instead of the environment's
+    /// (`SEGMUL_FAULTS`). The same injector is threaded through the pool
+    /// workers and the store seams, so
+    /// [`SessionTelemetry::faults_injected`] is one process-wide account.
+    pub fn faults(mut self, faults: Arc<FaultInjector>) -> Self {
+        self.faults = Some(faults);
+        self
+    }
+
     /// Spawn the persistent pool and produce the session. Each worker
     /// thread constructs its backend exactly once, here; every job the
     /// session ever runs reuses them.
@@ -257,18 +279,23 @@ impl SessionBuilder {
             Some(f) => f,
             None => self.backend.into_factory(),
         };
-        let mut runner = SweepRunner::new(factory, workers)
+        let faults = match self.faults {
+            Some(f) => f,
+            None => FaultInjector::from_env()?,
+        };
+        let mut runner = SweepRunner::new_with_faults(factory, workers, faults.clone())
             .map_err(|e| SegmulError::Backend(e.to_string()))?;
         runner.set_cache_enabled(self.cache);
         runner.set_analytic_mode(self.analytic);
         if let Some(dir) = self.store {
-            runner.set_store(ResultStore::open(dir)?);
+            runner.set_store(ResultStore::open_with_faults(dir, faults.clone())?);
         }
         if let Some(wait) = self.store_wait {
             runner.set_store_wait(wait);
         }
         Ok(Session {
             runner,
+            faults,
             seed: self.seed,
             progress: self.progress,
             jobs_completed: 0,
@@ -300,6 +327,7 @@ impl SessionBuilder {
 /// ```
 pub struct Session {
     runner: SweepRunner,
+    faults: Arc<FaultInjector>,
     seed: u64,
     progress: Option<ProgressCallback>,
     jobs_completed: u64,
@@ -366,6 +394,22 @@ impl Session {
         self.runner.store()
     }
 
+    /// The session's fault-injection plan (disabled in production).
+    pub fn faults(&self) -> &Arc<FaultInjector> {
+        &self.faults
+    }
+
+    /// Transient failures recovered by a retry, across the pool's
+    /// per-chunk loop and the store's lease waits.
+    pub fn retries(&self) -> u64 {
+        self.runner.pool().retry_counters().retries() + self.runner.lease_retry_counters().retries()
+    }
+
+    /// Retry episodes that exhausted their budget.
+    pub fn gave_up(&self) -> u64 {
+        self.runner.pool().retry_counters().gave_up() + self.runner.lease_retry_counters().gave_up()
+    }
+
     /// The configured answer-source policy.
     pub fn analytic_mode(&self) -> AnalyticMode {
         self.runner.analytic_mode()
@@ -385,6 +429,9 @@ impl Session {
             analytic_answers: self.runner.analytic_answers,
             store_hits: self.runner.store_hits,
             store_recoveries: self.runner.store_recoveries,
+            retries: self.retries(),
+            gave_up: self.gave_up(),
+            faults_injected: self.faults.total_injected(),
             pairs_evaluated: self.pairs_evaluated,
             backend_builds: self.backend_builds(),
             workers: self.workers(),

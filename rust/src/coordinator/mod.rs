@@ -56,4 +56,4 @@ pub use job::{EvalJob, JobKey, JobResult, SpecKey, WorkSpec};
 pub use pool::WorkerPool;
 pub use service::{EvalService, ServiceTelemetry};
 pub use sharded::{run_job_sharded, ChunkEvent};
-pub use sweep::{AnalyticMode, Answer, Shard, SweepGrid, SweepOutcome, SweepRunner};
+pub use sweep::{analytic_outcome, AnalyticMode, Answer, Shard, SweepGrid, SweepOutcome, SweepRunner};

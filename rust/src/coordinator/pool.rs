@@ -21,17 +21,19 @@
 //! `pool_size()` builds, which is the facade's per-worker-per-session
 //! contract (`tests/api_facade.rs` proves it with a counting factory).
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::error::metrics::ErrorStats;
 use crate::error::stream::OrderedMerger;
 use crate::error::SegmulError;
+use crate::fault::{FaultInjector, FaultSite, RetryCounters, RetryPolicy};
 use crate::multiplier::DispatchClass;
 
 use super::backend::EvalBackend;
@@ -66,6 +68,49 @@ enum Request {
     Shutdown,
 }
 
+/// Evaluate one chunk with the worker's self-healing loop: fault seams
+/// fire first (injected hangs and delays only stall; injected panics and
+/// backend failures are *real* failures taking the real recovery path),
+/// then the evaluation runs under `catch_unwind` so a panicking backend
+/// kills the attempt, not the worker thread. Failed attempts retry under
+/// [`RetryPolicy::chunk`] — the chunk's inputs were filled before the
+/// loop and a retry re-evaluates exactly the same pairs, so a recovered
+/// chunk is bit-identical to a first-try one. An exhausted budget
+/// surfaces the error to the merge, which fails the job loudly: degraded
+/// never means silently wrong.
+///
+/// `AssertUnwindSafe` is a judgment call: the injected panic fires before
+/// the backend is touched, and the real backends keep no partial state
+/// across `eval_design` calls (the CPU backend is stateless per batch;
+/// PJRT buffers are rebuilt per call).
+fn eval_chunk_resilient(
+    backend: &mut Box<dyn EvalBackend>,
+    shared: &ActiveJob,
+    a: &[u64],
+    b: &[u64],
+    faults: &FaultInjector,
+    retry: &RetryCounters,
+) -> Result<ErrorStats> {
+    RetryPolicy::chunk().run(retry, |_attempt| {
+        if faults.fire(FaultSite::WorkerHang) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        if faults.fire(FaultSite::WorkerDelay) {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        catch_unwind(AssertUnwindSafe(|| {
+            if faults.fire(FaultSite::WorkerPanic) {
+                panic!("injected worker panic");
+            }
+            if faults.fire(FaultSite::BackendFail) {
+                return Err(anyhow!("injected transient backend failure"));
+            }
+            backend.eval_design(&shared.job.design, a, b)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("worker panicked evaluating a chunk (caught)")))
+    })
+}
+
 /// A pool of long-lived executor threads, each owning one backend for the
 /// pool's whole lifetime. Jobs are sharded **across** the pool (intra-job
 /// parallelism with a deterministic merge); for a pool scheduling whole
@@ -79,18 +124,37 @@ pub struct WorkerPool {
     batch: usize,
     backend_name: &'static str,
     builds: Arc<AtomicU64>,
+    faults: Arc<FaultInjector>,
+    retry: Arc<RetryCounters>,
 }
 
 impl WorkerPool {
     /// Spawn `workers` executor threads. `factory` runs once in each
     /// worker's thread; startup fails if any backend fails to build.
+    /// Fault injection is taken from the environment (`SEGMUL_FAULTS`);
+    /// use [`Self::start_with_faults`] to pass an explicit injector.
     pub fn start<F>(factory: F, workers: usize) -> Result<WorkerPool>
+    where
+        F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
+    {
+        Self::start_with_faults(factory, workers, FaultInjector::from_env()?)
+    }
+
+    /// [`Self::start`] with an explicit fault injector shared by every
+    /// worker (the session wires the same injector through the store and
+    /// the pool so telemetry aggregates one account of injected faults).
+    pub fn start_with_faults<F>(
+        factory: F,
+        workers: usize,
+        faults: Arc<FaultInjector>,
+    ) -> Result<WorkerPool>
     where
         F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
     {
         let workers = workers.max(1);
         let factory = Arc::new(factory);
         let builds = Arc::new(AtomicU64::new(0));
+        let retry = Arc::new(RetryCounters::new());
         let (ready_tx, ready_rx) = channel::<Result<(usize, &'static str)>>();
         let mut txs = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
@@ -99,6 +163,8 @@ impl WorkerPool {
             let factory = factory.clone();
             let builds = builds.clone();
             let ready_tx = ready_tx.clone();
+            let faults = faults.clone();
+            let retry = retry.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("segmul-pool-{i}"))
                 .spawn(move || {
@@ -148,7 +214,14 @@ impl WorkerPool {
                                         break;
                                     }
                                     shared.plan.fill(id, &mut a, &mut b);
-                                    let r = backend.eval_design(&shared.job.design, &a, &b);
+                                    let r = eval_chunk_resilient(
+                                        &mut backend,
+                                        &shared,
+                                        &a,
+                                        &b,
+                                        &faults,
+                                        &retry,
+                                    );
                                     if results.send((id, r)).is_err() {
                                         break; // job decided; stop early
                                     }
@@ -176,7 +249,17 @@ impl WorkerPool {
             batch = b;
             backend_name = name;
         }
-        Ok(WorkerPool { txs, handles, batch, backend_name, builds })
+        Ok(WorkerPool { txs, handles, batch, backend_name, builds, faults, retry })
+    }
+
+    /// The fault injector shared by every worker (disabled unless armed).
+    pub fn faults(&self) -> &Arc<FaultInjector> {
+        &self.faults
+    }
+
+    /// Retry accounting for the workers' per-chunk self-healing loop.
+    pub fn retry_counters(&self) -> &Arc<RetryCounters> {
+        &self.retry
     }
 
     /// Number of executor threads.
@@ -556,5 +639,47 @@ mod tests {
         let pool = WorkerPool::start(cpu_factory(), 2).unwrap();
         let _ = pool.run_job(&EvalJob::mc(4, 1, false, 100, 1)).unwrap();
         drop(pool); // must not hang
+    }
+
+    #[test]
+    fn injected_worker_faults_recover_bit_identically() {
+        // Panics, transient backend failures and scheduling delays all
+        // fire — and the recovered result is still bit-identical to the
+        // sequential driver, because a retried chunk re-evaluates exactly
+        // the same input pairs.
+        let job = EvalJob::mc(8, 3, true, 300_000, 11);
+        let want = sequential(&job);
+        let faults = Arc::new(
+            FaultInjector::parse(
+                "worker.panic:first=2,backend.fail:every=5,worker.delay:every=3",
+                0xFA11,
+            )
+            .unwrap(),
+        );
+        let pool = WorkerPool::start_with_faults(cpu_factory(), 3, faults.clone()).unwrap();
+        let got = pool.run_job(&job).unwrap();
+        assert_eq!(got.stats, want.stats);
+        assert_eq!(got.stats.sum_red.to_bits(), want.stats.sum_red.to_bits());
+        assert_eq!(got.batches, want.batches);
+        assert!(faults.total_injected() > 0, "faults must actually fire");
+        assert!(faults.injected(FaultSite::WorkerPanic) >= 2);
+        assert!(pool.retry_counters().retries() > 0, "recovery goes through the retry loop");
+        assert_eq!(pool.retry_counters().gave_up(), 0);
+    }
+
+    #[test]
+    fn exhausted_retries_fail_the_job_but_never_the_workers() {
+        // Every attempt panics: the retry budget exhausts and the job
+        // fails loudly — but each panic was caught, so the worker
+        // threads survive and keep answering.
+        let faults = Arc::new(FaultInjector::parse("worker.panic:p=1", 7).unwrap());
+        let pool = WorkerPool::start_with_faults(cpu_factory(), 2, faults.clone()).unwrap();
+        let job = EvalJob::mc(8, 3, true, 50_000, 1);
+        let err = pool.run_job(&job).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
+        assert!(pool.retry_counters().gave_up() > 0);
+        assert!(faults.total_injected() >= 4, "max_attempts panics before giving up");
+        // A dead worker could not answer this probe round trip.
+        pool.preflight(&job).unwrap();
     }
 }

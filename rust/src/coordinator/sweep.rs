@@ -24,6 +24,7 @@
 //! the zero-dispatch mode for million-config design-space queries.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
@@ -32,8 +33,9 @@ use crate::config::Config;
 use crate::error::analytic::{analytic_stats, AnalyticStats};
 use crate::error::metrics::{ErrorMetrics, ErrorStats};
 use crate::error::SegmulError;
+use crate::fault::{FaultInjector, RetryCounters, RetryPolicy};
 use crate::multiplier::DesignSet;
-use crate::store::{Claim, ResultStore, StoreKey, StoredResult};
+use crate::store::{Claim, LeaseGuard, ResultStore, StoreKey, StoredResult};
 
 use super::backend::EvalBackend;
 use super::job::{EvalJob, JobKey, JobResult, WorkSpec};
@@ -269,6 +271,23 @@ impl SweepOutcome {
     }
 }
 
+/// The closed-form answer for `job` under the `--analytic auto` rules,
+/// when its design has an **exact** registered model: validated, O(1),
+/// and — crucially — requiring no worker pool at all. This is the
+/// degraded-mode answer path of `segmul serve`: a panic storm or backend
+/// failure burst takes the pool down, but analytic-eligible requests
+/// keep answering from closed forms.
+pub fn analytic_outcome(job: &EvalJob) -> Option<SweepOutcome> {
+    job.validate().ok()?;
+    let start = Instant::now();
+    let stats = analytic_stats(&job.design).filter(|s| s.exact)?;
+    Some(SweepOutcome {
+        job: job.clone(),
+        answer: Answer::Analytic { stats, wall: start.elapsed() },
+        cached: false,
+    })
+}
+
 /// Sweep executor: the persistent shard pool + the result cache.
 ///
 /// Workers are spawned once per runner and hold their backend across
@@ -286,6 +305,9 @@ pub struct SweepRunner {
     /// How long to wait on another process's lease before evaluating
     /// without exclusion (the duplicate is then deduped at blob commit).
     store_wait: Duration,
+    /// Retry accounting for the store/lease layer (the pool's chunk
+    /// loop keeps its own: [`WorkerPool::retry_counters`]).
+    retry: Arc<RetryCounters>,
     /// Jobs served from the cache (no evaluation).
     pub cache_hits: u64,
     /// Jobs actually evaluated.
@@ -301,24 +323,46 @@ pub struct SweepRunner {
 
 impl SweepRunner {
     /// Spawn the persistent pool (`workers` threads; `factory` runs once
-    /// in each worker's thread).
+    /// in each worker's thread). Fault injection follows the environment
+    /// (`SEGMUL_FAULTS`); [`Self::new_with_faults`] takes an explicit
+    /// injector.
     pub fn new<F>(factory: F, workers: usize) -> Result<Self>
     where
         F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
     {
+        Self::new_with_faults(factory, workers, FaultInjector::from_env()?)
+    }
+
+    /// [`Self::new`] with an explicit fault injector for the pool (share
+    /// the same injector with [`ResultStore::open_with_faults`] so one
+    /// account covers every seam).
+    pub fn new_with_faults<F>(
+        factory: F,
+        workers: usize,
+        faults: Arc<FaultInjector>,
+    ) -> Result<Self>
+    where
+        F: Fn() -> Result<Box<dyn EvalBackend>> + Send + Sync + 'static,
+    {
         Ok(SweepRunner {
-            pool: WorkerPool::start(factory, workers)?,
+            pool: WorkerPool::start_with_faults(factory, workers, faults)?,
             cache_enabled: true,
             cache: HashMap::new(),
             analytic: AnalyticMode::default(),
             store: None,
             store_wait: Duration::from_secs(600),
+            retry: Arc::new(RetryCounters::new()),
             cache_hits: 0,
             jobs_evaluated: 0,
             analytic_answers: 0,
             store_hits: 0,
             store_recoveries: 0,
         })
+    }
+
+    /// Retry accounting for this runner's store/lease layer.
+    pub fn lease_retry_counters(&self) -> &RetryCounters {
+        &self.retry
     }
 
     pub fn workers(&self) -> usize {
@@ -491,41 +535,77 @@ impl SweepRunner {
             self.store_hits += 1;
             return Ok(self.outcome_from_store(job, key, hit));
         }
-        // Claim the key's lease; while another live process holds it,
-        // poll for that process's commit instead of duplicating the
-        // evaluation.
-        let deadline = Instant::now() + self.store_wait;
-        let mut guard = None;
-        loop {
-            match self.store.as_ref().expect("store-backed path").claim(&skey) {
-                Ok(Claim::Acquired(g)) => {
-                    guard = Some(g);
-                    break;
-                }
+        // Claim the key's lease under the typed lease retry policy: a
+        // busy holder and a transient lease I/O failure both back off
+        // with bounded, deterministically jittered delays and re-poll
+        // for the holder's committed blob, the whole episode capped by
+        // `store_wait`. Past the budget this process evaluates without
+        // exclusion — correct either way, the lease only prevents
+        // duplicated work (the duplicate dedups at blob commit).
+        enum LeaseWait {
+            Acquired(LeaseGuard),
+            Committed(StoredResult),
+            /// The lease layer itself kept failing (broken leases dir,
+            /// exhausted transient-fault budget): proceed unprotected
+            /// after a *small* bounded number of claim retries — never
+            /// the full `store_wait`.
+            Unprotected(SegmulError),
+        }
+        let counters = self.retry.clone();
+        let mut claim_errors = 0u32;
+        let wait = RetryPolicy::lease(self.store_wait).run(&counters, |_attempt| {
+            let claim = match self.store.as_ref() {
+                Some(s) => s.claim(&skey),
+                None => Err(SegmulError::store(skey.address(), "store detached mid-run")),
+            };
+            match claim {
+                Ok(Claim::Acquired(g)) => Ok(LeaseWait::Acquired(g)),
                 Ok(Claim::Busy) => {
-                    if let Some(hit) = self.store_probe(&skey) {
-                        self.store_hits += 1;
-                        return Ok(self.outcome_from_store(job, key, hit));
+                    claim_errors = 0;
+                    match self.store_probe(&skey) {
+                        Some(hit) => Ok(LeaseWait::Committed(hit)),
+                        None => Err(SegmulError::store(
+                            skey.address(),
+                            "lease busy: waiting for the holder's commit",
+                        )),
                     }
-                    if Instant::now() >= deadline {
-                        eprintln!(
-                            "warning: lease wait for key {} expired; evaluating without exclusion",
-                            skey.address()
-                        );
-                        break;
-                    }
-                    std::thread::sleep(Duration::from_millis(25));
                 }
                 Err(e) => {
-                    eprintln!("warning: lease unavailable ({e}); evaluating without exclusion");
-                    break;
+                    claim_errors += 1;
+                    if claim_errors >= 4 {
+                        Ok(LeaseWait::Unprotected(e))
+                    } else {
+                        Err(e)
+                    }
                 }
+            }
+        });
+        let mut guard = None;
+        match wait {
+            Ok(LeaseWait::Acquired(g)) => guard = Some(g),
+            Ok(LeaseWait::Committed(hit)) => {
+                self.store_hits += 1;
+                return Ok(self.outcome_from_store(job, key, hit));
+            }
+            Ok(LeaseWait::Unprotected(e)) => {
+                eprintln!(
+                    "warning: lease for key {} unavailable ({e}); evaluating without exclusion",
+                    skey.address()
+                );
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: lease wait for key {} gave up ({e}); evaluating without exclusion",
+                    skey.address()
+                );
             }
         }
         // Resume from the key's checkpointed chunk prefix (empty for a
         // fresh key) and journal every newly merged chunk, in merge
         // order, behind the cursor.
-        let store = self.store.as_ref().expect("store-backed path");
+        let Some(store) = self.store.as_ref() else {
+            return Err(SegmulError::store(skey.address(), "store detached mid-run").into());
+        };
         let journal = store.recover_journal(&skey);
         if !journal.chunks.is_empty() || journal.discarded_bytes > 0 {
             self.store_recoveries += 1;
@@ -821,6 +901,42 @@ mod tests {
         let c = second.run(&job).unwrap();
         assert!(c.cached);
         assert_eq!(second.cache_hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn analytic_outcome_serves_exact_models_without_a_pool() {
+        // The serve degraded path: closed-form answers with no workers.
+        let job = EvalJob::new(MultiplierSpec::Truncated { n: 8, k: 4 }, WorkSpec::Exhaustive);
+        let out = analytic_outcome(&job).unwrap();
+        assert_eq!(out.source(), "analytic");
+        assert!(!out.cached);
+        assert_eq!(out.analytic().unwrap().wce, 49);
+        // Estimate-only families and invalid designs are refused.
+        assert!(analytic_outcome(&EvalJob::exhaustive(6, 3, true)).is_none());
+        let bad = EvalJob::new(MultiplierSpec::Kulkarni { n: 12 }, WorkSpec::Exhaustive);
+        assert!(analytic_outcome(&bad).is_none());
+    }
+
+    #[test]
+    fn busy_lease_waits_with_retries_then_degrades_to_unprotected_eval() {
+        let dir =
+            std::env::temp_dir().join(format!("segmul-lease-wait-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let job = EvalJob::mc(8, 4, true, 60_000, 5);
+        let mut runner = SweepRunner::new(cpu_factory(), 1).unwrap();
+        runner.set_store(ResultStore::open(&dir).unwrap());
+        runner.set_store_wait(Duration::from_millis(120));
+        // A live foreign holder (pid 1: the namespace init, never ours)
+        // pins the lease and never commits.
+        let skey = StoreKey::new(&job, "cpu", runner.pool().batch());
+        let lease = runner.store().unwrap().lease_path(&skey);
+        std::fs::write(&lease, "1\n").unwrap();
+        let out = runner.run(&job).unwrap();
+        assert_eq!(runner.jobs_evaluated, 1, "must degrade to unprotected evaluation");
+        assert!(out.result().is_some());
+        assert!(runner.lease_retry_counters().retries() > 0, "waiting goes through retries");
+        assert_eq!(runner.lease_retry_counters().gave_up(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

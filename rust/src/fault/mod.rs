@@ -1,0 +1,394 @@
+//! Deterministic fault injection: the chaos seams behind every recovery
+//! path in the stack.
+//!
+//! A [`FaultInjector`] is parsed from a compact spec (usually the
+//! `SEGMUL_FAULTS` environment variable) and threaded by `Arc` into the
+//! store (blob/journal/lease I/O), the worker pool (panics, hangs,
+//! delayed chunks, transient backend failures), and the serve engine
+//! thread. Each instrumented site calls [`FaultInjector::fire`] at the
+//! moment the real operation would run; a `true` answer makes the seam
+//! simulate the failure (short write, EIO, panic, …) instead.
+//!
+//! Two properties make injected chaos usable in CI:
+//!
+//! * **Determinism.** Every decision is a pure function of
+//!   `(seed, site, per-site attempt index)` via [`Xoshiro256::stream`] —
+//!   no wall clock, no global RNG. The same spec + seed over the same
+//!   work replays the same fault schedule.
+//! * **Accounting.** Every injected fault increments a per-site counter
+//!   ([`FaultInjector::injected`]), surfaced through session telemetry
+//!   and `/metrics`, so tests can assert both that faults actually fired
+//!   *and* that the final statistics stayed bit-identical.
+//!
+//! Spec grammar (comma-separated `site:trigger` entries):
+//!
+//! ```text
+//! SEGMUL_FAULTS="store.write:p=0.05,worker.panic:after=3,backend.fail:every=7"
+//! ```
+//!
+//! Triggers: `p=<f64>` fires each attempt with probability *p*;
+//! `after=<n>` fires exactly once, on the *n*-th attempt (one-shot, so a
+//! self-healing system can be observed recovering); `every=<n>` fires on
+//! every *n*-th attempt; `first=<n>` fires on each of the first *n*
+//! attempts (a bounded storm that ends deterministically).
+//!
+//! The zero-fault fast path is one branch on a plain `bool` — benches
+//! gate it at <2% overhead (`fault_overhead_ratio`).
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
+
+pub mod retry;
+
+pub use retry::{RetryCounters, RetryPolicy};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::SegmulError;
+use crate::util::rng::Xoshiro256;
+
+/// The instrumented failure sites, one per recovery path under test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Blob load: the read fails with a simulated EIO (typed `Store`
+    /// error → counted miss, the job re-evaluates).
+    StoreRead,
+    /// Blob commit: the tmp write is torn short and errors (the commit
+    /// fails with a warning; the answer in memory stays correct).
+    StoreWrite,
+    /// Blob commit: the tmp file is written whole but one byte is
+    /// damaged before the rename — the seal check catches it on the next
+    /// load (recovery counted, job re-evaluated).
+    StoreCorrupt,
+    /// Journal checkpoint append: the line is torn mid-write and the
+    /// writer disables, exactly like a disk-full — resumability degrades
+    /// to an earlier prefix, correctness is unaffected.
+    JournalAppend,
+    /// Lease claim I/O error: the claimant retries, then proceeds
+    /// without exclusion (duplicate work, never a wrong answer).
+    LeaseClaim,
+    /// Worker thread panics mid-chunk (caught, retried in-worker).
+    WorkerPanic,
+    /// Worker stalls for a bounded interval before evaluating.
+    WorkerHang,
+    /// Worker delays a chunk briefly (reordering pressure on the merge).
+    WorkerDelay,
+    /// Transient `EvalBackend` failure (retried under [`RetryPolicy`]).
+    BackendFail,
+    /// Serve engine thread panics mid-cycle (caught by the supervisor,
+    /// which answers stranded clients with typed 500s and restarts).
+    EnginePanic,
+}
+
+const N_SITES: usize = 10;
+
+/// All sites, in stable order, paired with their spec names.
+pub const SITES: [(FaultSite, &str); N_SITES] = [
+    (FaultSite::StoreRead, "store.read"),
+    (FaultSite::StoreWrite, "store.write"),
+    (FaultSite::StoreCorrupt, "store.corrupt"),
+    (FaultSite::JournalAppend, "journal.append"),
+    (FaultSite::LeaseClaim, "lease.claim"),
+    (FaultSite::WorkerPanic, "worker.panic"),
+    (FaultSite::WorkerHang, "worker.hang"),
+    (FaultSite::WorkerDelay, "worker.delay"),
+    (FaultSite::BackendFail, "backend.fail"),
+    (FaultSite::EnginePanic, "engine.panic"),
+];
+
+impl FaultSite {
+    /// The spec / telemetry name of this site.
+    pub fn name(self) -> &'static str {
+        SITES[self as usize].1
+    }
+
+    fn from_name(name: &str) -> Option<FaultSite> {
+        SITES.iter().find(|(_, n)| *n == name).map(|(s, _)| *s)
+    }
+}
+
+/// When an armed site fires, as a function of its 1-based attempt index.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Trigger {
+    /// Independent probability per attempt (deterministic draw).
+    Prob(f64),
+    /// Exactly once, on the n-th attempt.
+    After(u64),
+    /// On every n-th attempt.
+    Every(u64),
+    /// On each of the first n attempts.
+    First(u64),
+}
+
+impl Trigger {
+    fn parse(text: &str) -> Result<Trigger, String> {
+        let (key, value) = text
+            .split_once('=')
+            .ok_or_else(|| format!("trigger {text:?} is not key=value"))?;
+        match key {
+            "p" => {
+                let p: f64 =
+                    value.parse().map_err(|e| format!("bad probability {value:?}: {e}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("probability {p} outside [0, 1]"));
+                }
+                Ok(Trigger::Prob(p))
+            }
+            "after" | "every" | "first" => {
+                let n: u64 = value.parse().map_err(|e| format!("bad count {value:?}: {e}"))?;
+                if n == 0 {
+                    return Err(format!("{key} requires a count >= 1"));
+                }
+                Ok(match key {
+                    "after" => Trigger::After(n),
+                    "every" => Trigger::Every(n),
+                    _ => Trigger::First(n),
+                })
+            }
+            _ => Err(format!("unknown trigger {key:?} (want p/after/every/first)")),
+        }
+    }
+}
+
+/// The armed fault plan plus per-site attempt / injection accounting.
+///
+/// Cheap to consult when disarmed (one bool branch), deterministic when
+/// armed. Shared by `Arc` across the session, store, pool, and serve
+/// engine so one plan accounts for the whole process.
+#[derive(Debug)]
+pub struct FaultInjector {
+    armed: bool,
+    seed: u64,
+    plan: [Option<Trigger>; N_SITES],
+    attempts: [AtomicU64; N_SITES],
+    injected: [AtomicU64; N_SITES],
+}
+
+impl Default for FaultInjector {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl FaultInjector {
+    /// An injector with no armed sites — the production fast path.
+    pub fn disabled() -> FaultInjector {
+        FaultInjector {
+            armed: false,
+            seed: 0,
+            plan: [None; N_SITES],
+            attempts: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Parse a `site:trigger,site:trigger` spec (see module docs).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultInjector, SegmulError> {
+        let mut plan: [Option<Trigger>; N_SITES] = [None; N_SITES];
+        let mut any = false;
+        for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+            let (site_name, trigger_text) = entry.split_once(':').ok_or_else(|| {
+                SegmulError::config(format!("fault entry {entry:?} is not site:trigger"))
+            })?;
+            let site = FaultSite::from_name(site_name.trim()).ok_or_else(|| {
+                let known: Vec<&str> = SITES.iter().map(|(_, n)| *n).collect();
+                SegmulError::config(format!(
+                    "unknown fault site {site_name:?} (known: {})",
+                    known.join(", ")
+                ))
+            })?;
+            let trigger = Trigger::parse(trigger_text.trim()).map_err(|e| {
+                SegmulError::config(format!("fault entry {entry:?}: {e}"))
+            })?;
+            if plan[site as usize].is_some() {
+                return Err(SegmulError::config(format!(
+                    "fault site {site_name:?} specified twice"
+                )));
+            }
+            plan[site as usize] = Some(trigger);
+            any = true;
+        }
+        Ok(FaultInjector {
+            armed: any,
+            seed,
+            plan,
+            attempts: std::array::from_fn(|_| AtomicU64::new(0)),
+            injected: std::array::from_fn(|_| AtomicU64::new(0)),
+        })
+    }
+
+    /// Build from `SEGMUL_FAULTS` / `SEGMUL_FAULT_SEED` (unset or empty
+    /// spec → disabled; a malformed spec is a typed `Config` error, never
+    /// silently ignored).
+    pub fn from_env() -> Result<Arc<FaultInjector>, SegmulError> {
+        let spec = std::env::var("SEGMUL_FAULTS").unwrap_or_default();
+        if spec.trim().is_empty() {
+            return Ok(Arc::new(FaultInjector::disabled()));
+        }
+        let seed = match std::env::var("SEGMUL_FAULT_SEED") {
+            Ok(s) => s.trim().parse().map_err(|e| {
+                SegmulError::config(format!("bad SEGMUL_FAULT_SEED {s:?}: {e}"))
+            })?,
+            Err(_) => 0x5EED,
+        };
+        Ok(Arc::new(FaultInjector::parse(&spec, seed)?))
+    }
+
+    /// Whether any site is armed (the bench-gated fast-path branch).
+    pub fn armed(&self) -> bool {
+        self.armed
+    }
+
+    /// Whether this specific site is armed (seams that need setup work
+    /// before simulating a failure check this first).
+    pub fn site_armed(&self, site: FaultSite) -> bool {
+        self.armed && self.plan[site as usize].is_some()
+    }
+
+    /// Consult the plan at an instrumented site: counts the attempt and
+    /// answers whether the seam must simulate a failure now. Decisions
+    /// are deterministic in `(seed, site, attempt index)`.
+    pub fn fire(&self, site: FaultSite) -> bool {
+        if !self.armed {
+            return false;
+        }
+        let i = site as usize;
+        let Some(trigger) = self.plan[i] else { return false };
+        let attempt = self.attempts[i].fetch_add(1, Ordering::Relaxed) + 1;
+        let hit = match trigger {
+            Trigger::Prob(p) => {
+                // One deterministic draw per (seed, site, attempt).
+                let salt = (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+                Xoshiro256::stream(self.seed ^ salt, attempt).next_f64() < p
+            }
+            Trigger::After(n) => attempt == n,
+            Trigger::Every(n) => attempt % n == 0,
+            Trigger::First(n) => attempt <= n,
+        };
+        if hit {
+            self.injected[i].fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Injected-fault count for one site.
+    pub fn injected(&self, site: FaultSite) -> u64 {
+        self.injected[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Attempts observed at one site (fired or not) — lets tests prove a
+    /// seam was actually consulted.
+    pub fn attempts(&self, site: FaultSite) -> u64 {
+        self.attempts[site as usize].load(Ordering::Relaxed)
+    }
+
+    /// Total injected faults across all sites.
+    pub fn total_injected(&self) -> u64 {
+        self.injected.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// `(site name, injected count)` for every site that fired at least
+    /// once — the telemetry / chaos-report view.
+    pub fn counters(&self) -> Vec<(&'static str, u64)> {
+        SITES
+            .iter()
+            .filter_map(|&(site, name)| {
+                let n = self.injected(site);
+                (n > 0).then_some((name, n))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn disabled_never_fires_and_counts_nothing() {
+        let f = FaultInjector::disabled();
+        assert!(!f.armed());
+        for &(site, _) in &SITES {
+            for _ in 0..100 {
+                assert!(!f.fire(site));
+            }
+            assert_eq!(f.injected(site), 0);
+        }
+        assert_eq!(f.total_injected(), 0);
+        assert!(f.counters().is_empty());
+    }
+
+    #[test]
+    fn spec_round_trips_every_trigger_kind() {
+        let f = FaultInjector::parse(
+            "store.write:p=0.5, worker.panic:after=3, backend.fail:every=2, engine.panic:first=4",
+            7,
+        )
+        .unwrap();
+        assert!(f.armed());
+        assert!(f.site_armed(FaultSite::StoreWrite));
+        assert!(!f.site_armed(FaultSite::StoreRead));
+        // after=3: exactly one firing, on the third attempt.
+        let fires: Vec<bool> = (0..6).map(|_| f.fire(FaultSite::WorkerPanic)).collect();
+        assert_eq!(fires, [false, false, true, false, false, false]);
+        assert_eq!(f.injected(FaultSite::WorkerPanic), 1);
+        // every=2: attempts 2, 4, 6.
+        let fires: Vec<bool> = (0..6).map(|_| f.fire(FaultSite::BackendFail)).collect();
+        assert_eq!(fires, [false, true, false, true, false, true]);
+        // first=4: attempts 1..=4 all fire, then the storm ends.
+        let fires: Vec<bool> = (0..6).map(|_| f.fire(FaultSite::EnginePanic)).collect();
+        assert_eq!(fires, [true, true, true, true, false, false]);
+        assert_eq!(f.total_injected(), 1 + 3 + 4 + f.injected(FaultSite::StoreWrite));
+    }
+
+    #[test]
+    fn probability_is_deterministic_in_seed_and_attempt() {
+        let run = |seed| {
+            let f = FaultInjector::parse("store.read:p=0.3", seed).unwrap();
+            (0..1000).map(|_| f.fire(FaultSite::StoreRead)).collect::<Vec<bool>>()
+        };
+        let a = run(42);
+        assert_eq!(a, run(42), "same seed replays the same schedule");
+        assert_ne!(a, run(43), "different seeds differ");
+        let hits = a.iter().filter(|&&h| h).count();
+        assert!((150..450).contains(&hits), "p=0.3 over 1000 attempts fired {hits} times");
+    }
+
+    #[test]
+    fn p_zero_is_consulted_but_never_fires() {
+        let f = FaultInjector::parse("backend.fail:p=0", 1).unwrap();
+        assert!(f.armed(), "armed plan exercises the seam even at p=0");
+        for _ in 0..50 {
+            assert!(!f.fire(FaultSite::BackendFail));
+        }
+        assert_eq!(f.attempts(FaultSite::BackendFail), 50);
+        assert_eq!(f.injected(FaultSite::BackendFail), 0);
+    }
+
+    #[test]
+    fn malformed_specs_are_typed_config_errors() {
+        for bad in [
+            "store.write",              // no trigger
+            "nope.site:p=0.1",          // unknown site
+            "store.write:p=1.5",        // probability out of range
+            "store.write:after=0",      // zero count
+            "store.write:when=3",       // unknown trigger key
+            "store.write:p=0.1,store.write:p=0.2", // duplicate site
+        ] {
+            let err = FaultInjector::parse(bad, 0).unwrap_err();
+            assert_eq!(err.kind(), "config", "{bad:?} -> {err}");
+        }
+    }
+
+    #[test]
+    fn counters_report_only_fired_sites() {
+        let f = FaultInjector::parse("worker.hang:first=2,lease.claim:after=99", 0).unwrap();
+        f.fire(FaultSite::WorkerHang);
+        f.fire(FaultSite::WorkerHang);
+        f.fire(FaultSite::LeaseClaim);
+        assert_eq!(f.counters(), vec![("worker.hang", 2)]);
+        assert_eq!(f.total_injected(), 2);
+    }
+}

@@ -1,0 +1,205 @@
+//! Typed retry: bounded exponential backoff with deterministic jitter.
+//!
+//! One policy type replaces the ad-hoc sleep loops that grew around
+//! transient failures (the store's 25 ms lease poll, in-worker chunk
+//! retries after a caught panic or an injected backend failure). A
+//! [`RetryPolicy`] is a pure value — attempts bounded, per-attempt delay
+//! exponential from `base` and capped at `cap`, the whole episode capped
+//! by a wall-clock `budget` — and its jitter is drawn from
+//! [`Xoshiro256::stream`] of `(seed, attempt)`, so a replayed chaos run
+//! waits the same schedule it waited the first time.
+//!
+//! Accounting flows through [`RetryCounters`]: `retries` counts every
+//! backoff actually taken, `gave_up` counts episodes that exhausted their
+//! attempt or time budget. Both surface in `SessionTelemetry` and
+//! `/metrics`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Xoshiro256;
+
+/// Shared retry accounting (one per pool / runner, aggregated into
+/// session telemetry).
+#[derive(Debug, Default)]
+pub struct RetryCounters {
+    /// Backoffs taken (each is one re-attempt of a failed operation).
+    pub retries: AtomicU64,
+    /// Episodes that exhausted the policy and surfaced their error.
+    pub gave_up: AtomicU64,
+}
+
+impl RetryCounters {
+    pub fn new() -> RetryCounters {
+        RetryCounters::default()
+    }
+
+    pub fn retries(&self) -> u64 {
+        self.retries.load(Ordering::Relaxed)
+    }
+
+    pub fn gave_up(&self) -> u64 {
+        self.gave_up.load(Ordering::Relaxed)
+    }
+}
+
+/// Bounded exponential backoff with deterministic jitter.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Maximum attempts per episode (>= 1; the first attempt counts).
+    pub max_attempts: u32,
+    /// Delay before the second attempt; doubles per attempt thereafter.
+    pub base: Duration,
+    /// Per-attempt delay ceiling.
+    pub cap: Duration,
+    /// Wall-clock budget for the whole episode; an attempt whose backoff
+    /// would overrun it gives up instead.
+    pub budget: Duration,
+    /// Jitter stream seed (deterministic; never the wall clock).
+    pub seed: u64,
+}
+
+impl RetryPolicy {
+    /// In-worker chunk retry: a few fast attempts, so a transient
+    /// backend failure or caught panic never costs more than a blink,
+    /// while a persistent failure still surfaces promptly.
+    pub fn chunk() -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: 4,
+            base: Duration::from_millis(1),
+            cap: Duration::from_millis(20),
+            budget: Duration::from_secs(2),
+            seed: 0xC4C4,
+        }
+    }
+
+    /// Lease poll-for-commit: patient, capped waits replacing the old
+    /// fixed 25 ms spin; `budget` is the session's `store_wait`.
+    pub fn lease(budget: Duration) -> RetryPolicy {
+        RetryPolicy {
+            max_attempts: u32::MAX,
+            base: Duration::from_millis(5),
+            cap: Duration::from_millis(250),
+            budget,
+            seed: 0x1EA5E,
+        }
+    }
+
+    /// The delay taken after failed attempt `attempt` (1-based):
+    /// `base * 2^(attempt-1)` capped at `cap`, scaled by a deterministic
+    /// jitter factor in `[0.5, 1.0)` drawn from `(seed, attempt)`.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let exp = self
+            .base
+            .saturating_mul(1u32 << (attempt - 1).min(20))
+            .min(self.cap);
+        let jitter = 0.5 + 0.5 * Xoshiro256::stream(self.seed, attempt as u64).next_f64();
+        exp.mul_f64(jitter)
+    }
+
+    /// Run `op` under this policy. `op` receives the 1-based attempt
+    /// index; the first failure whose next backoff would exceed the
+    /// attempt or time budget is returned as-is (typed, never wrapped).
+    pub fn run<T, E>(
+        &self,
+        counters: &RetryCounters,
+        mut op: impl FnMut(u32) -> Result<T, E>,
+    ) -> Result<T, E> {
+        let start = Instant::now();
+        let mut attempt = 1u32;
+        loop {
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    let delay = self.backoff(attempt);
+                    if attempt >= self.max_attempts || start.elapsed() + delay > self.budget {
+                        counters.gave_up.fetch_add(1, Ordering::Relaxed);
+                        return Err(e);
+                    }
+                    counters.retries.fetch_add(1, Ordering::Relaxed);
+                    std::thread::sleep(delay);
+                    attempt += 1;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_capped_and_jittered() {
+        let p = RetryPolicy {
+            max_attempts: 10,
+            base: Duration::from_millis(4),
+            cap: Duration::from_millis(32),
+            budget: Duration::from_secs(60),
+            seed: 9,
+        };
+        for attempt in 1..=8 {
+            let d = p.backoff(attempt);
+            assert_eq!(d, p.backoff(attempt), "deterministic per (seed, attempt)");
+            let exp = Duration::from_millis(4).saturating_mul(1 << (attempt - 1)).min(p.cap);
+            assert!(d >= exp.mul_f64(0.5) && d < exp, "attempt {attempt}: {d:?} vs exp {exp:?}");
+        }
+        // Deep attempts never overflow the shift.
+        assert!(p.backoff(200) <= p.cap);
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures_and_counts_retries() {
+        let p = RetryPolicy {
+            base: Duration::from_micros(10),
+            cap: Duration::from_micros(50),
+            ..RetryPolicy::chunk()
+        };
+        let c = RetryCounters::new();
+        let out: Result<u32, &str> =
+            p.run(&c, |attempt| if attempt < 3 { Err("transient") } else { Ok(attempt) });
+        assert_eq!(out, Ok(3));
+        assert_eq!(c.retries(), 2);
+        assert_eq!(c.gave_up(), 0);
+    }
+
+    #[test]
+    fn exhausting_attempts_surfaces_the_error_and_counts_give_up() {
+        let p = RetryPolicy {
+            max_attempts: 3,
+            base: Duration::from_micros(10),
+            cap: Duration::from_micros(50),
+            budget: Duration::from_secs(5),
+            seed: 1,
+        };
+        let c = RetryCounters::new();
+        let mut calls = 0u32;
+        let out: Result<(), &str> = p.run(&c, |_| {
+            calls += 1;
+            Err("persistent")
+        });
+        assert_eq!(out, Err("persistent"));
+        assert_eq!(calls, 3);
+        assert_eq!(c.retries(), 2);
+        assert_eq!(c.gave_up(), 1);
+    }
+
+    #[test]
+    fn time_budget_caps_the_episode() {
+        let p = RetryPolicy {
+            max_attempts: u32::MAX,
+            base: Duration::from_millis(30),
+            cap: Duration::from_millis(30),
+            budget: Duration::from_millis(1),
+            seed: 2,
+        };
+        let c = RetryCounters::new();
+        let start = Instant::now();
+        let out: Result<(), &str> = p.run(&c, |_| Err("slow"));
+        assert_eq!(out, Err("slow"));
+        assert!(start.elapsed() < Duration::from_millis(500), "gave up without the long sleep");
+        assert_eq!(c.gave_up(), 1);
+    }
+}

@@ -31,6 +31,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod error;
+pub mod fault;
 pub mod multiplier;
 pub mod netlist;
 pub mod report;

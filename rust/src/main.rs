@@ -19,6 +19,10 @@
 //!   serve    — HTTP evaluation service (typed /v1/eval + /v1/sweep,
 //!              request coalescing, admission control, latency telemetry,
 //!              graceful drain)
+//!   fleet    — self-healing supervisor for store-backed sharded sweeps:
+//!              spawns N `sweep --shard i/N` workers over one store,
+//!              restarts crashes with backoff, reclaims dead leases,
+//!              kills wedged shards, and merges when every shard drains
 //!   estimate — probability-propagation ER/MED estimates (no simulation)
 //!
 //! Global options: --artifacts DIR, --results DIR, --config FILE,
@@ -350,6 +354,21 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         session.workers(),
         session.backend_builds()
     );
+    // Chaos-run accounting: when a fault plan is armed (SEGMUL_FAULTS)
+    // or any retry fired, print greppable one-line summaries so the
+    // chaos gauntlet can assert faults actually flowed through the run.
+    if telemetry.faults_injected > 0 {
+        let by_site: Vec<String> = session
+            .faults()
+            .counters()
+            .iter()
+            .map(|(site, n)| format!("{site}={n}"))
+            .collect();
+        println!("faults_injected: {} ({})", telemetry.faults_injected, by_site.join(", "));
+    }
+    if telemetry.retries > 0 || telemetry.gave_up > 0 {
+        println!("retries: {} recovered, {} gave up", telemetry.retries, telemetry.gave_up);
+    }
     if session.analytic_answers() > 0 {
         println!(
             "analytic: {} of {} configs answered in closed form (O(1), no simulation){}",
@@ -573,6 +592,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.opt_u64("deadline-ms")?.unwrap_or(30_000).max(1),
         ),
         limits: Default::default(),
+        faults: None,
     };
     install_drain_signals();
     let server = Server::start(serve_cfg)?;
@@ -598,6 +618,223 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Store-progress heartbeat for wedge detection: `(files, bytes)` over
+/// the store's committed blobs and journals. Any shard that is actually
+/// working appends journal checkpoints or commits blobs, so a fleet
+/// whose heartbeat is frozen while children run is wedged, not slow.
+fn store_progress(root: &std::path::Path) -> (u64, u64) {
+    let mut files = 0u64;
+    let mut bytes = 0u64;
+    for sub in ["blobs", "journal"] {
+        let Ok(entries) = std::fs::read_dir(root.join(sub)) else { continue };
+        for entry in entries.flatten() {
+            if let Ok(meta) = entry.metadata() {
+                files += 1;
+                bytes += meta.len();
+            }
+        }
+    }
+    (files, bytes)
+}
+
+/// One supervised sweep worker: the child process (when running), how
+/// often it has been restarted, and the backoff gate for the respawn.
+struct ShardSlot {
+    child: Option<std::process::Child>,
+    restarts: u32,
+    backoff_until: Option<std::time::Instant>,
+    done: bool,
+}
+
+/// Self-healing fleet supervisor for store-backed sharded sweeps.
+///
+/// Spawns `--shards N` child processes, each running
+/// `segmul sweep --shard i/N --store DIR --resume --deterministic-report`
+/// against one shared store, and supervises them until the grid drains:
+///
+/// - a shard that exits nonzero has its dead leases reclaimed and is
+///   restarted with exponential backoff, up to `--max-restarts` times;
+/// - a fleet whose store heartbeat (committed blobs + journal bytes)
+///   freezes for `--wedge-secs` while children run is presumed wedged:
+///   every live child is killed, leases are reclaimed, and the shards
+///   restart from their checkpoints;
+/// - when every shard drains, a merge-only pass re-runs the full grid
+///   against the warm store (zero duplicate evaluations) and writes the
+///   canonical deterministic report.
+///
+/// Restarts are safe because the store is the source of truth: committed
+/// results are content-addressed, journals replay to the longest valid
+/// prefix, and `--shard` ownership is disjoint by canonical job key —
+/// so a heal never duplicates or reorders work and the merged report is
+/// byte-identical to a crash-free run.
+fn cmd_fleet(args: &Args) -> Result<()> {
+    use std::process::{Command, Stdio};
+    use std::time::{Duration, Instant};
+    let cfg = load_config(args)?;
+    let shards = args.req_u32("shards")? as usize;
+    if shards == 0 {
+        bail!("--shards 0: the fleet needs at least one worker process");
+    }
+    let Some(store_dir) = args.opt("store").map(PathBuf::from) else {
+        bail!("fleet requires --store DIR (shards coordinate through the shared store)");
+    };
+    let max_restarts = args.opt_u64("max-restarts")?.unwrap_or(3) as u32;
+    let wedge_secs = args.opt_u64("wedge-secs")?.unwrap_or(120).max(1);
+    // Open (and thereby create) the store up front so every child can be
+    // spawned with --resume from the first launch onward. The supervisor
+    // itself never injects faults — a SEGMUL_FAULTS chaos plan is for
+    // the worker processes (which inherit the environment), not for the
+    // healing machinery.
+    let store = segmul::store::ResultStore::open_with_faults(
+        &store_dir,
+        std::sync::Arc::new(segmul::fault::FaultInjector::disabled()),
+    )?;
+    let exe = std::env::current_exe()?;
+    // Grid and backend options forwarded verbatim to every worker and to
+    // the merge pass, so all of them see the same canonical job keys.
+    let mut forwarded: Vec<String> = Vec::new();
+    for opt in ["n", "designs", "samples", "seed", "workers", "backend", "analytic", "config", "artifacts"] {
+        if let Some(v) = args.opt(opt) {
+            forwarded.push(format!("--{opt}"));
+            forwarded.push(v.to_string());
+        }
+    }
+    if args.flag("mc") {
+        forwarded.push("--mc".to_string());
+    }
+    let spawn_shard = |i: usize| -> std::io::Result<std::process::Child> {
+        Command::new(&exe)
+            .arg("sweep")
+            .args(&forwarded)
+            .arg("--store")
+            .arg(&store_dir)
+            .arg("--resume")
+            .arg("--shard")
+            .arg(format!("{i}/{shards}"))
+            .arg("--deterministic-report")
+            .arg("--results")
+            .arg(cfg.results_dir.join(format!("shard-{i}")))
+            .stdout(Stdio::null())
+            .spawn()
+    };
+    println!("fleet: {shards} shards over store {store_dir:?} (max {max_restarts} restarts/shard, wedge after {wedge_secs} s)");
+    let mut slots: Vec<ShardSlot> = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let child = spawn_shard(i)?;
+        // The pid line is machine-readable on purpose: the kill-and-heal
+        // tests parse it to murder a live shard mid-sweep.
+        println!("fleet: shard {i}/{shards} pid {} up (restart #0)", child.id());
+        slots.push(ShardSlot { child: Some(child), restarts: 0, backoff_until: None, done: false });
+    }
+    let mut total_restarts = 0u32;
+    let mut wedge_kills = 0u32;
+    let mut leases_reclaimed = 0usize;
+    let mut last_progress = store_progress(store.root());
+    let mut progress_at = Instant::now();
+    let mut fatal: Option<String> = None;
+    loop {
+        let mut all_done = true;
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if slot.done {
+                continue;
+            }
+            all_done = false;
+            match &mut slot.child {
+                Some(child) => match child.try_wait()? {
+                    Some(status) if status.success() => {
+                        slot.child = None;
+                        slot.done = true;
+                        println!("fleet: shard {i}/{shards} drained");
+                    }
+                    Some(status) => {
+                        slot.child = None;
+                        if slot.restarts >= max_restarts {
+                            fatal = Some(format!(
+                                "fleet: shard {i}/{shards} failed {} times (last: {status}); giving up",
+                                slot.restarts + 1
+                            ));
+                            break;
+                        }
+                        slot.restarts += 1;
+                        total_restarts += 1;
+                        leases_reclaimed += store.reclaim_dead_leases();
+                        let delay = Duration::from_millis(250u64 << slot.restarts.min(5));
+                        slot.backoff_until = Some(Instant::now() + delay);
+                        eprintln!(
+                            "warning: fleet shard {i}/{shards} exited ({status}); restart #{} in {} ms",
+                            slot.restarts,
+                            delay.as_millis()
+                        );
+                    }
+                    None => {}
+                },
+                None => {
+                    if slot.backoff_until.is_none_or(|t| Instant::now() >= t) {
+                        slot.backoff_until = None;
+                        let child = spawn_shard(i)?;
+                        println!("fleet: shard {i}/{shards} pid {} up (restart #{})", child.id(), slot.restarts);
+                        slot.child = Some(child);
+                    }
+                }
+            }
+        }
+        if let Some(msg) = fatal.take() {
+            for slot in slots.iter_mut() {
+                if let Some(child) = &mut slot.child {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                }
+            }
+            bail!(msg);
+        }
+        if all_done {
+            break;
+        }
+        // Wedge detection: children are alive but the store heartbeat is
+        // frozen past the deadline — kill the live shards and let the
+        // restart path resume them from their checkpoints.
+        let progress = store_progress(store.root());
+        if progress != last_progress {
+            last_progress = progress;
+            progress_at = Instant::now();
+        } else if progress_at.elapsed() >= Duration::from_secs(wedge_secs) {
+            for (i, slot) in slots.iter_mut().enumerate() {
+                if let Some(child) = &mut slot.child {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    slot.child = None;
+                    slot.backoff_until = Some(Instant::now() + Duration::from_millis(250));
+                    wedge_kills += 1;
+                    eprintln!("warning: fleet shard {i}/{shards} wedged (no store progress in {wedge_secs} s); killed");
+                }
+            }
+            leases_reclaimed += store.reclaim_dead_leases();
+            progress_at = Instant::now();
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    leases_reclaimed += store.reclaim_dead_leases();
+    println!(
+        "fleet: all {shards} shards drained ({total_restarts} restarts, {wedge_kills} wedge kills, \
+         {leases_reclaimed} leases reclaimed); running merge pass"
+    );
+    let status = Command::new(&exe)
+        .arg("sweep")
+        .args(&forwarded)
+        .arg("--store")
+        .arg(&store_dir)
+        .arg("--resume")
+        .arg("--deterministic-report")
+        .arg("--results")
+        .arg(&cfg.results_dir)
+        .status()?;
+    if !status.success() {
+        bail!("fleet: merge pass failed ({status})");
+    }
+    println!("fleet: merge complete; report written to {:?}", cfg.results_dir);
+    Ok(())
+}
+
 fn cmd_estimate(args: &Args) -> Result<()> {
     let n = args.req_u32("n")?;
     let t = args.opt_u32("t")?.unwrap_or(n / 2);
@@ -610,7 +847,7 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 }
 
 fn usage() -> &'static str {
-    "usage: segmul <eval|sweep|lower|hw|figures|serve|estimate> [options]
+    "usage: segmul <eval|sweep|lower|hw|figures|serve|fleet|estimate> [options]
   eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
   sweep    [--n N] [--mc] [--designs paper|accurate|baselines|oracle|netlist|all]
            [--workers W] [--samples S] [--seed S] [--results DIR] [--require-pjrt]
@@ -637,6 +874,15 @@ fn usage() -> &'static str {
             typed 429 past the in-flight budget, 503 while draining, 504 past a
             request deadline; graceful drain on SIGINT/SIGTERM or POST
             /v1/shutdown)
+  fleet    --shards N --store DIR [--n N] [--mc] [--designs SET] [--samples S]
+           [--seed S] [--workers W] [--results DIR] [--max-restarts R]
+           [--wedge-secs T]
+           (self-healing supervisor for sharded sweeps: spawns N
+            `sweep --shard i/N` workers over one shared store, restarts
+            crashed shards with exponential backoff after reclaiming their
+            dead leases, kills shards wedged past T seconds of zero store
+            progress, and runs a merge-only pass for the canonical report
+            once every shard drains — byte-identical to a crash-free run)
   estimate --n N [--t T]"
 }
 
@@ -649,6 +895,7 @@ fn run() -> Result<()> {
         Some("hw") => cmd_hw(&args),
         Some("figures") => cmd_figures(&args),
         Some("serve") => cmd_serve(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("estimate") => cmd_estimate(&args),
         Some("help") | None => {
             println!("{}", usage());

@@ -164,6 +164,8 @@ fn dechunk(mut rest: &[u8]) -> Result<Vec<u8>, SegmulError> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]

@@ -258,6 +258,8 @@ impl<'a> ChunkedWriter<'a> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use std::net::{TcpListener, TcpStream};
 

@@ -33,6 +33,11 @@ pub struct ServerMetrics {
     pub rejected_503: AtomicU64,
     /// Requests whose deadline expired before the engine answered.
     pub deadline_timeouts: AtomicU64,
+    /// Engine-thread panics caught by the supervisor (each one restarts
+    /// the session; stranded requests got typed 500s).
+    pub engine_restarts: AtomicU64,
+    /// Answers served in closed form while the pool was degraded.
+    pub degraded_answers: AtomicU64,
     /// Eval requests answered (the coalesce numerator).
     pub coalesce_requests: AtomicU64,
     /// Pool evaluations actually dispatched for them (the denominator):
@@ -69,7 +74,7 @@ impl ServerMetrics {
 
     /// Record one request's wall latency.
     pub fn record_latency(&self, ms: f64) {
-        let mut ring = self.latencies_ms.lock().unwrap();
+        let mut ring = super::lock_clean(&self.latencies_ms);
         if ring.len() < LATENCY_RING {
             ring.push(ms);
         } else {
@@ -89,8 +94,8 @@ impl ServerMetrics {
 
     /// (p50, p90, p99) of the recorded latencies, in ms (NaN when empty).
     pub fn latency_percentiles(&self) -> (f64, f64, f64) {
-        let mut v = self.latencies_ms.lock().unwrap().clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut v = super::lock_clean(&self.latencies_ms).clone();
+        v.sort_by(f64::total_cmp);
         (percentile(&v, 0.50), percentile(&v, 0.90), percentile(&v, 0.99))
     }
 
@@ -116,6 +121,7 @@ impl ServerMetrics {
         session: &SessionTelemetry,
         backend: &str,
         draining: bool,
+        degraded: bool,
         queue_depth: usize,
     ) -> String {
         let (p50, p90, p99) = self.latency_percentiles();
@@ -130,6 +136,7 @@ impl ServerMetrics {
         let f3 = |v: f64| if v.is_nan() { "NaN".to_string() } else { format!("{v:.3}") };
         line("serve_backend", backend.to_string());
         line("serve_draining", u64::from(draining).to_string());
+        line("serve_degraded", u64::from(degraded).to_string());
         line("serve_queue_depth", queue_depth.to_string());
         line("serve_requests_total", load(&self.requests_total).to_string());
         line("serve_responses_2xx", load(&self.responses_2xx).to_string());
@@ -138,6 +145,8 @@ impl ServerMetrics {
         line("serve_rejected_429", load(&self.rejected_429).to_string());
         line("serve_rejected_503", load(&self.rejected_503).to_string());
         line("serve_deadline_timeouts", load(&self.deadline_timeouts).to_string());
+        line("serve_engine_restarts", load(&self.engine_restarts).to_string());
+        line("serve_degraded_answers", load(&self.degraded_answers).to_string());
         line("serve_coalesce_requests", load(&self.coalesce_requests).to_string());
         line("serve_coalesce_dispatched", load(&self.coalesce_dispatched).to_string());
         line("serve_coalesce_ratio", f3(self.coalesce_ratio()));
@@ -157,6 +166,9 @@ impl ServerMetrics {
         line("session_analytic_answers", session.analytic_answers.to_string());
         line("session_store_hits", session.store_hits.to_string());
         line("session_store_recoveries", session.store_recoveries.to_string());
+        line("session_retries", session.retries.to_string());
+        line("session_gave_up", session.gave_up.to_string());
+        line("session_faults_injected", session.faults_injected.to_string());
         line("session_pairs_evaluated", session.pairs_evaluated.to_string());
         line("session_backend_builds", session.backend_builds.to_string());
         line("session_workers", session.workers.to_string());
@@ -174,6 +186,8 @@ pub fn metric_value(doc: &str, key: &str) -> Option<String> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     #[test]
@@ -226,12 +240,17 @@ mod tests {
         m.observe_response(200);
         m.record_latency(3.0);
         m.record_queue_depth(2);
-        let doc = m.render(&SessionTelemetry::default(), "cpu", false, 0);
+        let doc = m.render(&SessionTelemetry::default(), "cpu", false, true, 0);
         assert_eq!(metric_value(&doc, "serve_backend").as_deref(), Some("cpu"));
         assert_eq!(metric_value(&doc, "serve_requests_total").as_deref(), Some("1"));
         assert_eq!(metric_value(&doc, "serve_latency_p99_ms").as_deref(), Some("3.000"));
         assert_eq!(metric_value(&doc, "serve_queue_depth_le_2").as_deref(), Some("1"));
         assert_eq!(metric_value(&doc, "session_workers").as_deref(), Some("0"));
+        assert_eq!(metric_value(&doc, "serve_degraded").as_deref(), Some("1"));
+        assert_eq!(metric_value(&doc, "serve_engine_restarts").as_deref(), Some("0"));
+        assert_eq!(metric_value(&doc, "serve_degraded_answers").as_deref(), Some("0"));
+        assert_eq!(metric_value(&doc, "session_retries").as_deref(), Some("0"));
+        assert_eq!(metric_value(&doc, "session_faults_injected").as_deref(), Some("0"));
         // Prefix keys must not shadow longer keys.
         assert_eq!(metric_value(&doc, "serve_queue_depth").as_deref(), Some("0"));
     }

@@ -36,6 +36,21 @@
 //! are enforced on the connection thread (`recv_timeout` on the reply
 //! channel → typed 504) and propagated to the engine through a
 //! cancellation flag so abandoned work is skipped, not evaluated.
+//!
+//! ## Supervision and graceful degradation
+//!
+//! The engine thread runs under a supervisor: a panic inside a cycle
+//! (including one injected via the `engine.panic` fault site) is caught,
+//! stranded requests get typed 500s through their dropped reply
+//! channels, and the session is rebuilt — the server never dies from an
+//! engine panic. Separately, a burst of pool-side failures (worker
+//! panic storms, backend faults) flips the server into **degraded
+//! mode**: requests whose design has an exact closed-form error model
+//! are answered analytically with a `degraded: true` wire flag, other
+//! requests get typed 503s, and the first non-analytic request of each
+//! cycle probes the pool so the server returns to healthy on its own.
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 pub mod client;
 pub mod coalesce;
@@ -46,17 +61,19 @@ pub mod wire;
 
 use std::collections::VecDeque;
 use std::net::{SocketAddr, TcpListener};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Sender, SyncSender};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::api::{BackendChoice, Session, SessionTelemetry};
 use crate::config::Config;
-use crate::coordinator::{AnalyticMode, EvalJob, SweepOutcome};
+use crate::coordinator::{analytic_outcome, AnalyticMode, EvalJob, SweepOutcome};
 use crate::error::SegmulError;
+use crate::fault::{FaultInjector, FaultSite};
 
 use self::http::Limits;
 use self::metrics::ServerMetrics;
@@ -86,6 +103,11 @@ pub struct ServeConfig {
     /// Deadline applied to requests that don't carry `deadline_ms`.
     pub default_deadline: Duration,
     pub limits: Limits,
+    /// Fault-injection plan shared with the session (tests and chaos
+    /// runs; `None` falls back to `SEGMUL_FAULTS`). The supervisor
+    /// re-threads the same plan into rebuilt sessions so one-shot
+    /// triggers stay one-shot across restarts.
+    pub faults: Option<Arc<FaultInjector>>,
 }
 
 impl Default for ServeConfig {
@@ -103,14 +125,28 @@ impl Default for ServeConfig {
             max_inflight: 64,
             default_deadline: Duration::from_secs(30),
             limits: Limits::default(),
+            faults: None,
         }
     }
 }
 
+/// Poison-safe lock: an engine panic is exactly what the supervisor
+/// recovers from, and every guarded structure here (work queue,
+/// telemetry snapshot, latency ring) stays internally consistent across
+/// an unwind — so a poisoned mutex is business as usual, not a reason
+/// to spread the panic to connection threads.
+pub(crate) fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// A reply to one eval request: the answered outcome plus whether it
+/// was served in degraded (closed-form-only) mode.
+pub(crate) type EvalReply = Result<(SweepOutcome, bool), SegmulError>;
+
 /// One queued eval request.
 pub(crate) struct EvalWork {
     pub job: EvalJob,
-    pub reply: SyncSender<Result<SweepOutcome, SegmulError>>,
+    pub reply: SyncSender<EvalReply>,
     pub cancelled: Arc<AtomicBool>,
 }
 
@@ -127,9 +163,10 @@ pub(crate) enum Work {
     Sweep(SweepWork),
 }
 
-/// Engine → connection-thread stream events for `/v1/sweep`.
+/// Engine → connection-thread stream events for `/v1/sweep`. The `Row`
+/// flag marks degraded (closed-form-only) answers.
 pub(crate) enum SweepEvent {
-    Row(Box<SweepOutcome>),
+    Row(Box<SweepOutcome>, bool),
     Failed(SegmulError),
     Done,
 }
@@ -142,6 +179,10 @@ pub(crate) struct Shared {
     pub queue: Mutex<VecDeque<Work>>,
     pub ready: Condvar,
     pub draining: AtomicBool,
+    /// Degraded mode: the pool is unhealthy (failure burst or a panic
+    /// the supervisor is recovering from); only closed-form-eligible
+    /// requests are answered until a probe succeeds.
+    pub degraded: AtomicBool,
     pub engine_done: AtomicBool,
     pub conn_active: AtomicUsize,
     /// Backend identity, published by the engine at startup — served in
@@ -161,6 +202,7 @@ impl Shared {
             queue: Mutex::new(VecDeque::new()),
             ready: Condvar::new(),
             draining: AtomicBool::new(false),
+            degraded: AtomicBool::new(false),
             engine_done: AtomicBool::new(false),
             conn_active: AtomicUsize::new(0),
             backend: OnceLock::new(),
@@ -183,7 +225,7 @@ impl Shared {
                 "server is draining; in-flight work completes but no new work is admitted",
             ));
         }
-        let mut q = self.queue.lock().unwrap();
+        let mut q = lock_clean(&self.queue);
         if q.len() >= self.cfg.max_inflight {
             return Err(SegmulError::serve(
                 429,
@@ -197,7 +239,7 @@ impl Shared {
     }
 
     pub fn queue_depth(&self) -> usize {
-        self.queue.lock().unwrap().len()
+        lock_clean(&self.queue).len()
     }
 }
 
@@ -232,23 +274,13 @@ impl Server {
         let addr = listener
             .local_addr()
             .map_err(|e| SegmulError::serve(500, format!("cannot resolve bound address: {e}")))?;
-        let mut builder = Session::builder()
-            .backend(cfg.backend.clone())
-            .seed(cfg.seed)
-            .analytic(cfg.analytic);
-        if let Some(w) = cfg.workers {
-            builder = builder.workers(w);
-        }
-        if let Some(dir) = &cfg.store {
-            builder = builder.store(dir.clone());
-        }
-        let session = builder.build()?;
+        let session = build_session(&cfg)?;
         let shared = Arc::new(Shared::new(cfg));
         // Publish identity before any thread runs, so the CLI can print
         // the backend deterministically right after start().
         let _ = shared.backend.set(session.backend_name());
         let _ = shared.batch.set(session.batch());
-        *shared.telemetry.lock().unwrap() = session.telemetry();
+        *lock_clean(&shared.telemetry) = session.telemetry();
         let engine = {
             let shared = shared.clone();
             std::thread::Builder::new()
@@ -301,9 +333,10 @@ impl Server {
         {
             std::thread::sleep(Duration::from_millis(10));
         }
-        let telemetry = self.shared.telemetry.lock().unwrap().clone();
+        let telemetry = lock_clean(&self.shared.telemetry).clone();
         let backend = self.shared.backend_name().to_string();
-        let metrics_doc = self.shared.metrics.render(&telemetry, &backend, true, 0);
+        let degraded = self.shared.degraded.load(Ordering::SeqCst);
+        let metrics_doc = self.shared.metrics.render(&telemetry, &backend, true, degraded, 0);
         ServeSummary {
             requests_total: self.shared.metrics.requests_total.load(Ordering::Relaxed),
             telemetry,
@@ -313,17 +346,121 @@ impl Server {
     }
 }
 
+/// Build the engine's [`Session`] from the server configuration. Called
+/// at startup and again by the supervisor after an engine panic.
+fn build_session(cfg: &ServeConfig) -> Result<Session, SegmulError> {
+    let mut builder = Session::builder()
+        .backend(cfg.backend.clone())
+        .seed(cfg.seed)
+        .analytic(cfg.analytic);
+    if let Some(w) = cfg.workers {
+        builder = builder.workers(w);
+    }
+    if let Some(dir) = &cfg.store {
+        builder = builder.store(dir.clone());
+    }
+    if let Some(f) = &cfg.faults {
+        builder = builder.faults(f.clone());
+    }
+    builder.build()
+}
+
+/// The engine supervisor: runs [`engine_cycles`] under `catch_unwind`
+/// and rebuilds the session after a panic instead of letting the server
+/// die. A panic drops the in-flight batch — every stranded reply sender
+/// closes, which the connection threads surface as typed 500s — and
+/// flips the server into degraded mode until the rebuilt pool answers a
+/// probe. While a rebuild itself fails, queued work is answered in
+/// closed form where possible so the service keeps limping, not hanging.
+fn engine_loop(shared: &Arc<Shared>, session: Session) {
+    let mut live = Some(session);
+    loop {
+        match live.take() {
+            Some(session) => {
+                if catch_unwind(AssertUnwindSafe(|| engine_cycles(shared, session))).is_ok() {
+                    return; // clean drain exit; engine_done is set
+                }
+                shared.metrics.engine_restarts.fetch_add(1, Ordering::Relaxed);
+                shared.degraded.store(true, Ordering::SeqCst);
+                eprintln!("warning: serve engine panicked; rebuilding the session");
+            }
+            None => match build_session(&shared.cfg) {
+                Ok(session) => live = Some(session),
+                Err(e) => {
+                    eprintln!("warning: serve engine rebuild failed ({e}); retrying");
+                    degraded_cycle(shared);
+                    if shared.draining.load(Ordering::SeqCst) && shared.queue_depth() == 0 {
+                        shared.engine_done.store(true, Ordering::SeqCst);
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+            },
+        }
+    }
+}
+
+/// Pool-health tracking for degraded-mode transitions: a short burst of
+/// consecutive pool-side failures (worker panics that exhausted their
+/// retries, backend faults) degrades the server; any successful pool
+/// answer restores it.
+struct EngineHealth {
+    pool_failures: u32,
+}
+
+impl EngineHealth {
+    /// Consecutive pool-side failures before the server degrades.
+    const DEGRADE_AFTER: u32 = 2;
+
+    fn new() -> EngineHealth {
+        EngineHealth { pool_failures: 0 }
+    }
+
+    fn record_ok(&mut self, shared: &Shared) {
+        self.pool_failures = 0;
+        if shared.degraded.swap(false, Ordering::SeqCst) {
+            eprintln!("serve: pool answered a probe; leaving degraded mode");
+        }
+    }
+
+    fn record_failure(&mut self, shared: &Shared, e: &SegmulError) {
+        if !matches!(e.kind(), "eval" | "backend") {
+            return; // client-caused errors say nothing about pool health
+        }
+        self.pool_failures += 1;
+        if self.pool_failures >= Self::DEGRADE_AFTER
+            && !shared.degraded.swap(true, Ordering::SeqCst)
+        {
+            eprintln!(
+                "warning: serve degraded after {} consecutive pool failures ({e}); \
+                 answering closed-form-eligible requests only",
+                self.pool_failures
+            );
+        }
+    }
+}
+
+/// The typed rejection for non-analytic work while degraded.
+fn degraded_error() -> SegmulError {
+    SegmulError::serve(
+        503,
+        "evaluation pool is degraded; only designs with exact closed-form error models \
+         are answered until the pool recovers",
+    )
+}
+
 /// The engine: the only thread that touches the [`Session`]. Drains the
 /// queue in batches, coalesces eval requests, advances sweeps one grid
 /// point at a time, and exits once draining is requested and the queue
-/// is empty.
-fn engine_loop(shared: &Arc<Shared>, mut session: Session) {
+/// is empty. Panics propagate to the supervisor in [`engine_loop`].
+fn engine_cycles(shared: &Arc<Shared>, mut session: Session) {
     let _ = shared.backend.set(session.backend_name());
     let _ = shared.batch.set(session.batch());
-    *shared.telemetry.lock().unwrap() = session.telemetry();
+    *lock_clean(&shared.telemetry) = session.telemetry();
+    let mut health = EngineHealth::new();
     loop {
         let batch: Vec<Work> = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock_clean(&shared.queue);
             loop {
                 if !q.is_empty() {
                     break q.drain(..).collect();
@@ -332,11 +469,18 @@ fn engine_loop(shared: &Arc<Shared>, mut session: Session) {
                     shared.engine_done.store(true, Ordering::SeqCst);
                     return;
                 }
-                let (guard, _) =
-                    shared.ready.wait_timeout(q, Duration::from_millis(50)).unwrap();
-                q = guard;
+                q = match shared.ready.wait_timeout(q, Duration::from_millis(50)) {
+                    Ok((guard, _)) => guard,
+                    Err(poisoned) => poisoned.into_inner().0,
+                };
             }
         };
+        // The engine-panic seam fires with the batch drained and no lock
+        // held: the dropped reply senders become typed 500s and the
+        // supervisor restarts the session.
+        if session.faults().fire(FaultSite::EnginePanic) {
+            panic!("injected engine panic");
+        }
         let mut evals: Vec<EvalWork> = Vec::new();
         let mut sweeps: Vec<SweepWork> = Vec::new();
         for work in batch {
@@ -353,16 +497,45 @@ fn engine_loop(shared: &Arc<Shared>, mut session: Session) {
                 }
             }
         }
-        run_evals(shared, &mut session, &evals);
-        run_sweeps(shared, &mut session, sweeps);
-        *shared.telemetry.lock().unwrap() = session.telemetry();
+        run_evals(shared, &mut session, &evals, &mut health);
+        run_sweeps(shared, &mut session, sweeps, &mut health);
+        *lock_clean(&shared.telemetry) = session.telemetry();
     }
+}
+
+/// Answer one job with the pool healthy-path, updating health tracking.
+fn pool_answer(
+    shared: &Shared,
+    session: &mut Session,
+    health: &mut EngineHealth,
+    job: &EvalJob,
+) -> EvalReply {
+    match session.run_outcome(job) {
+        Ok(o) => {
+            health.record_ok(shared);
+            Ok((o, false))
+        }
+        Err(e) => {
+            health.record_failure(shared, &e);
+            Err(e)
+        }
+    }
+}
+
+/// Answer one job while degraded: closed-form if eligible; otherwise the
+/// caller decides between probing the pool and a typed 503.
+fn closed_form_answer(shared: &Shared, job: &EvalJob) -> Option<EvalReply> {
+    let o = analytic_outcome(job)?;
+    shared.metrics.degraded_answers.fetch_add(1, Ordering::Relaxed);
+    Some(Ok((o, true)))
 }
 
 /// Plan and dispatch one drained batch of eval requests: exact-key
 /// duplicates share a single evaluation, groups of one coalesce class
-/// run consecutively.
-fn run_evals(shared: &Arc<Shared>, session: &mut Session, evals: &[EvalWork]) {
+/// run consecutively. While degraded, analytic-eligible groups are
+/// answered in closed form and the first non-analytic group probes the
+/// pool (recovering the server if it succeeds); the rest get typed 503s.
+fn run_evals(shared: &Arc<Shared>, session: &mut Session, evals: &[EvalWork], health: &mut EngineHealth) {
     if evals.is_empty() {
         return;
     }
@@ -371,13 +544,25 @@ fn run_evals(shared: &Arc<Shared>, session: &mut Session, evals: &[EvalWork]) {
     let jobs: Vec<EvalJob> = evals.iter().map(|e| e.job.clone()).collect();
     let plan = coalesce::plan(&jobs, backend, batch_size);
     shared.metrics.coalesce_requests.fetch_add(evals.len() as u64, Ordering::Relaxed);
+    let mut probed = false;
     for group in plan.groups {
         // Skip work every waiter has abandoned (deadline expiry).
         if group.requests.iter().all(|&i| evals[i].cancelled.load(Ordering::SeqCst)) {
             continue;
         }
-        let result = session.run_outcome(&group.job);
-        if let Ok(o) = &result {
+        let result: EvalReply = if shared.degraded.load(Ordering::SeqCst) {
+            match closed_form_answer(shared, &group.job) {
+                Some(r) => r,
+                None if !probed => {
+                    probed = true;
+                    pool_answer(shared, session, health, &group.job)
+                }
+                None => Err(degraded_error()),
+            }
+        } else {
+            pool_answer(shared, session, health, &group.job)
+        };
+        if let Ok((o, _)) = &result {
             // A pool dispatch happened only for fresh simulated answers;
             // cache/store/analytic answers amortize like merged requests.
             if o.source() == "simulated" && !o.cached {
@@ -391,16 +576,28 @@ fn run_evals(shared: &Arc<Shared>, session: &mut Session, evals: &[EvalWork]) {
 }
 
 /// Advance each live sweep by one grid point; unfinished sweeps go back
-/// to the queue so interactive evals interleave with long grids.
-fn run_sweeps(shared: &Arc<Shared>, session: &mut Session, sweeps: Vec<SweepWork>) {
+/// to the queue so interactive evals interleave with long grids. While
+/// degraded, grid points are answered in closed form where eligible and
+/// the sweep fails typed on the first point that needs the pool.
+fn run_sweeps(
+    shared: &Arc<Shared>,
+    session: &mut Session,
+    sweeps: Vec<SweepWork>,
+    health: &mut EngineHealth,
+) {
     for mut sweep in sweeps {
         let Some(job) = sweep.jobs.pop_front() else {
             let _ = sweep.events.send(SweepEvent::Done);
             continue;
         };
-        match session.run_outcome(&job) {
-            Ok(outcome) => {
-                if sweep.events.send(SweepEvent::Row(Box::new(outcome))).is_err() {
+        let result: EvalReply = if shared.degraded.load(Ordering::SeqCst) {
+            closed_form_answer(shared, &job).unwrap_or_else(|| Err(degraded_error()))
+        } else {
+            pool_answer(shared, session, health, &job)
+        };
+        match result {
+            Ok((outcome, degraded)) => {
+                if sweep.events.send(SweepEvent::Row(Box::new(outcome), degraded)).is_err() {
                     continue; // client gone: drop the sweep
                 }
                 if sweep.jobs.is_empty() {
@@ -408,12 +605,60 @@ fn run_sweeps(shared: &Arc<Shared>, session: &mut Session, sweeps: Vec<SweepWork
                 } else {
                     // Re-enqueue directly: the sweep was already admitted
                     // once and must be able to finish during a drain.
-                    let mut q = shared.queue.lock().unwrap();
+                    let mut q = lock_clean(&shared.queue);
                     q.push_back(Work::Sweep(sweep));
                 }
             }
             Err(e) => {
                 let _ = sweep.events.send(SweepEvent::Failed(e));
+            }
+        }
+    }
+}
+
+/// One queue drain with no session at all (the supervisor could not
+/// rebuild yet): closed-form-eligible work is still answered — flagged
+/// degraded — and everything else fails typed instead of hanging until
+/// its deadline.
+fn degraded_cycle(shared: &Arc<Shared>) {
+    let batch: Vec<Work> = {
+        let mut q = lock_clean(&shared.queue);
+        q.drain(..).collect()
+    };
+    for work in batch {
+        match work {
+            Work::Eval(e) => {
+                if e.cancelled.load(Ordering::SeqCst) {
+                    continue;
+                }
+                let reply =
+                    closed_form_answer(shared, &e.job).unwrap_or_else(|| Err(degraded_error()));
+                let _ = e.reply.send(reply);
+            }
+            Work::Sweep(mut s) => {
+                if s.cancelled.load(Ordering::SeqCst) {
+                    continue;
+                }
+                // Answer the whole remaining grid now: analytic points
+                // stream out flagged degraded, the first pool-needing
+                // point fails the sweep typed.
+                loop {
+                    let Some(job) = s.jobs.pop_front() else {
+                        let _ = s.events.send(SweepEvent::Done);
+                        break;
+                    };
+                    match closed_form_answer(shared, &job) {
+                        Some(Ok((o, d))) => {
+                            if s.events.send(SweepEvent::Row(Box::new(o), d)).is_err() {
+                                break; // client gone
+                            }
+                        }
+                        _ => {
+                            let _ = s.events.send(SweepEvent::Failed(degraded_error()));
+                            break;
+                        }
+                    }
+                }
             }
         }
     }
@@ -487,6 +732,8 @@ pub fn install_drain_signals() {}
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::util::json::Json;
 

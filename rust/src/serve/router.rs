@@ -74,9 +74,16 @@ fn write_error(stream: &mut TcpStream, e: &SegmulError) -> u16 {
 
 fn healthz(shared: &Arc<Shared>, stream: &mut TcpStream) -> u16 {
     let draining = shared.draining.load(Ordering::SeqCst);
+    let degraded = shared.degraded.load(Ordering::SeqCst);
     let status = if draining { 503 } else { 200 };
+    let state = match (draining, degraded) {
+        (true, _) => "draining",
+        (false, true) => "degraded",
+        (false, false) => "ok",
+    };
     let body = obj(vec![
-        ("status", Json::from(if draining { "draining" } else { "ok" })),
+        ("status", Json::from(state)),
+        ("degraded", Json::from(degraded)),
         ("backend", Json::from(shared.backend_name())),
     ]);
     let _ = http::write_json(stream, status, &body);
@@ -99,11 +106,12 @@ fn designs(stream: &mut TcpStream) -> u16 {
 }
 
 fn metrics_doc(shared: &Arc<Shared>, stream: &mut TcpStream) -> u16 {
-    let telemetry = shared.telemetry.lock().unwrap().clone();
+    let telemetry = super::lock_clean(&shared.telemetry).clone();
     let doc = shared.metrics.render(
         &telemetry,
         shared.backend_name(),
         shared.draining.load(Ordering::SeqCst),
+        shared.degraded.load(Ordering::SeqCst),
         shared.queue_depth(),
     );
     let _ = http::write_response(stream, 200, "text/plain; charset=utf-8", doc.as_bytes());
@@ -130,7 +138,7 @@ fn eval(shared: &Arc<Shared>, stream: &mut TcpStream, req: &Request) -> u16 {
         return write_error(stream, &e);
     }
     match answer.recv_timeout(deadline) {
-        Ok(Ok(outcome)) => match wire::outcome_json(&outcome, shared.backend_name()) {
+        Ok(Ok((outcome, degraded))) => match wire::outcome_json(&outcome, shared.backend_name(), degraded) {
             Ok(body) => {
                 let _ = http::write_json(stream, 200, &body);
                 200
@@ -188,9 +196,9 @@ fn sweep(shared: &Arc<Shared>, stream: &mut TcpStream, req: &Request) -> u16 {
     loop {
         let remaining = deadline.saturating_sub(start.elapsed());
         match rows.recv_timeout(remaining) {
-            Ok(SweepEvent::Row(outcome)) => {
+            Ok(SweepEvent::Row(outcome, degraded)) => {
                 done += 1;
-                let line = match wire::outcome_json(&outcome, shared.backend_name()) {
+                let line = match wire::outcome_json(&outcome, shared.backend_name(), degraded) {
                     Ok(row) => obj(vec![
                         ("row", row),
                         ("done", Json::from(done)),

@@ -213,8 +213,11 @@ pub fn metrics_json(m: &ErrorMetrics) -> Json {
     ])
 }
 
-/// One answered job as a response body / stream row.
-pub fn outcome_json(o: &SweepOutcome, backend: &str) -> Result<Json, SegmulError> {
+/// One answered job as a response body / stream row. `degraded` marks a
+/// closed-form answer served while the evaluation pool was unhealthy —
+/// still exact (only `--analytic auto`-eligible designs are answered
+/// that way), but flagged so clients can tell the service was limping.
+pub fn outcome_json(o: &SweepOutcome, backend: &str, degraded: bool) -> Result<Json, SegmulError> {
     let m = o.metrics()?;
     Ok(obj(vec![
         ("design", o.job.design.to_json()),
@@ -222,6 +225,7 @@ pub fn outcome_json(o: &SweepOutcome, backend: &str) -> Result<Json, SegmulError
         ("metrics", metrics_json(&m)),
         ("source", Json::from(o.source())),
         ("cached", Json::from(o.cached)),
+        ("degraded", Json::from(degraded)),
         ("backend", Json::from(backend)),
         ("wall_ms", Json::from(o.wall().as_secs_f64() * 1e3)),
     ]))
@@ -229,6 +233,8 @@ pub fn outcome_json(o: &SweepOutcome, backend: &str) -> Result<Json, SegmulError
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::coordinator::WorkSpec;
 

@@ -181,6 +181,8 @@ pub(crate) fn decode(text: &str, key: &StoreKey) -> Result<StoredResult, String>
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::coordinator::EvalJob;
 

@@ -21,9 +21,11 @@
 use std::fs;
 use std::io::{Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::error::metrics::ErrorStats;
 use crate::error::SegmulError;
+use crate::fault::{FaultInjector, FaultSite};
 use crate::util::json::{obj, Json};
 
 use super::blob::{seal, stats_from_json, stats_to_json, unseal};
@@ -103,10 +105,15 @@ pub struct JournalWriter {
     file: fs::File,
     path: PathBuf,
     failed: bool,
+    faults: Arc<FaultInjector>,
 }
 
 impl JournalWriter {
-    pub(crate) fn open(path: PathBuf, valid_len: u64) -> Result<JournalWriter, SegmulError> {
+    pub(crate) fn open(
+        path: PathBuf,
+        valid_len: u64,
+        faults: Arc<FaultInjector>,
+    ) -> Result<JournalWriter, SegmulError> {
         let wrap = |e: std::io::Error| SegmulError::store(path.display().to_string(), e.to_string());
         let mut file = fs::OpenOptions::new()
             .create(true)
@@ -119,7 +126,7 @@ impl JournalWriter {
         // records.
         file.set_len(valid_len).map_err(wrap)?;
         file.seek(SeekFrom::End(0)).map_err(wrap)?;
-        Ok(JournalWriter { file, path, failed: false })
+        Ok(JournalWriter { file, path, failed: false, faults })
     }
 
     /// Append the checkpoint line for `chunk_id` (callers append in
@@ -129,6 +136,19 @@ impl JournalWriter {
             return;
         }
         let line = encode_line(chunk_id, stats);
+        if self.faults.fire(FaultSite::JournalAppend) {
+            // Torn append: half the line reaches the disk, then the
+            // writer disables like any real write failure. Recovery
+            // discards the torn tail; resumability degrades to the
+            // prefix already on disk, correctness is unaffected.
+            let _ = self.file.write_all(&line.as_bytes()[..line.len() / 2]);
+            eprintln!(
+                "warning: chunk journal {} disabled: injected torn append",
+                self.path.display()
+            );
+            self.failed = true;
+            return;
+        }
         if let Err(e) = self.file.write_all(line.as_bytes()) {
             eprintln!("warning: chunk journal {} disabled: {e}", self.path.display());
             self.failed = true;
@@ -138,6 +158,8 @@ impl JournalWriter {
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     fn stats(i: u64) -> ErrorStats {

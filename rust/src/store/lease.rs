@@ -6,15 +6,22 @@
 //! Losers report [`Claim::Busy`] and poll for the winner's blob commit
 //! instead of duplicating the evaluation.
 //!
-//! Stale-lease eviction: a lease whose recorded pid is provably dead
-//! (no `/proc/<pid>` on Linux) is *renamed away* to a unique tombstone —
-//! renames of one source path succeed for exactly one evictor — deleted,
-//! and the claim retried. An unreadable lease (a claimant between
-//! `create_new` and its pid write, or a non-Linux host where liveness
-//! cannot be probed) is conservatively treated as live; the caller's
-//! wait timeout bounds the damage to one duplicated evaluation, which
-//! the keyed blob commit then dedups — correctness never depends on the
-//! lease.
+//! Stale-lease eviction is **single-winner**: an evictor must first
+//! create an `O_EXCL` eviction marker (`<key>.evict`) next to the lease,
+//! then *re-verify* the holder is still dead before removing the lease,
+//! then remove the marker. The marker serializes racing evictors, and
+//! the re-verify closes the stale-observation race: without it, a second
+//! evictor acting on an old "holder is dead" observation could evict a
+//! lease freshly re-created by a live claimant (claimants create leases
+//! with `create_new`, which cannot overwrite — the path can only change
+//! inside the marker's critical section, so the re-verified remove is
+//! sound). A marker left by a crashed evictor is itself liveness-checked
+//! and cleaned up, so a key can never wedge. An unreadable lease (a
+//! claimant between `create_new` and its pid write, or a non-Linux host
+//! where liveness cannot be probed) is conservatively treated as live;
+//! the caller's wait timeout bounds the damage to one duplicated
+//! evaluation, which the keyed blob commit then dedups — correctness
+//! never depends on the lease.
 
 use std::fs;
 use std::io::{self, Write};
@@ -46,9 +53,23 @@ impl Drop for LeaseGuard {
     }
 }
 
+/// Provable process death: only a missing `/proc/<pid>` on Linux says
+/// yes; anywhere liveness cannot be probed is conservatively "alive".
+fn pid_is_dead(pid: u32) -> bool {
+    #[cfg(target_os = "linux")]
+    {
+        !Path::new(&format!("/proc/{pid}")).exists()
+    }
+    #[cfg(not(target_os = "linux"))]
+    {
+        let _ = pid;
+        false
+    }
+}
+
 /// Is the recorded holder provably dead? Only a parseable pid with no
 /// live process says yes; everything else is conservatively "alive".
-fn holder_is_dead(lease: &Path) -> bool {
+pub(crate) fn holder_is_dead(lease: &Path) -> bool {
     let pid = match fs::read_to_string(lease) {
         Ok(text) => match text.trim().parse::<u32>() {
             Ok(pid) => pid,
@@ -61,13 +82,19 @@ fn holder_is_dead(lease: &Path) -> bool {
         // this process (or a pid-reused corpse); treat as stale.
         return true;
     }
-    #[cfg(target_os = "linux")]
-    {
-        !Path::new(&format!("/proc/{pid}")).exists()
-    }
-    #[cfg(not(target_os = "linux"))]
-    {
-        false
+    pid_is_dead(pid)
+}
+
+/// Was this eviction marker abandoned by a crashed evictor? Unlike
+/// [`holder_is_dead`], our own pid means a *live* evictor thread of this
+/// very process mid-protocol — never abandoned.
+fn marker_is_abandoned(marker: &Path) -> bool {
+    match fs::read_to_string(marker) {
+        Ok(text) => match text.trim().parse::<u32>() {
+            Ok(pid) => pid != std::process::id() && pid_is_dead(pid),
+            Err(_) => false,
+        },
+        Err(_) => false,
     }
 }
 
@@ -85,14 +112,10 @@ pub(crate) fn claim(path: &Path) -> Result<Claim, SegmulError> {
                 if !holder_is_dead(path) {
                     return Ok(Claim::Busy);
                 }
-                // Evict: rename the corpse to a unique tombstone. Exactly
-                // one racing evictor's rename succeeds; everyone retries
-                // the atomic create either way.
-                let tomb =
-                    path.with_extension(format!("stale.{}", std::process::id()));
-                if fs::rename(path, &tomb).is_ok() {
-                    let _ = fs::remove_file(&tomb);
-                }
+                // Evict under the single-winner marker protocol, then
+                // retry the atomic create whether or not we were the
+                // winning evictor.
+                let _ = evict(path);
             }
             Err(e) => {
                 return Err(SegmulError::store(path.display().to_string(), e.to_string()))
@@ -102,8 +125,42 @@ pub(crate) fn claim(path: &Path) -> Result<Claim, SegmulError> {
     Ok(Claim::Busy)
 }
 
+/// Single-winner eviction of a dead holder's lease. Returns `true` iff
+/// *this* caller removed the lease.
+///
+/// Protocol: atomically create the `O_EXCL` eviction marker (losers back
+/// off), **re-verify** the holder is still dead — the observation that
+/// motivated this call may predate a win-and-reclaim by someone else —
+/// and only then remove the lease. Claimants create leases with
+/// `create_new`, which cannot replace an existing file, so between the
+/// re-verify and the remove the lease path cannot change hands: the
+/// remove provably deletes the corpse that was re-verified.
+pub(crate) fn evict(path: &Path) -> bool {
+    let marker = path.with_extension("evict");
+    match fs::OpenOptions::new().write(true).create_new(true).open(&marker) {
+        Ok(mut f) => {
+            let _ = writeln!(f, "{}", std::process::id());
+            let evicted = holder_is_dead(path) && fs::remove_file(path).is_ok();
+            let _ = fs::remove_file(&marker);
+            evicted
+        }
+        Err(e) if e.kind() == io::ErrorKind::AlreadyExists => {
+            // Another evictor holds the marker: let it finish. A marker
+            // whose recorded evictor is itself dead (an evictor crashed
+            // mid-protocol) is cleaned up so the key cannot wedge.
+            if marker_is_abandoned(&marker) {
+                let _ = fs::remove_file(&marker);
+            }
+            false
+        }
+        Err(_) => false,
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
 
     fn tmplease(tag: &str) -> PathBuf {
@@ -146,5 +203,59 @@ mod tests {
         let path = tmplease("garbage");
         fs::write(&path, "not-a-pid\n").unwrap();
         assert!(matches!(claim(&path).unwrap(), Claim::Busy));
+    }
+
+    /// The race this protocol exists for: many evictors observing the
+    /// same dead holder race to evict — exactly one may win.
+    #[test]
+    fn concurrent_evictors_have_a_single_winner() {
+        for round in 0..20 {
+            let path = tmplease(&format!("race{round}"));
+            fs::write(&path, "4294967295\n").unwrap();
+            let wins: usize = std::thread::scope(|s| {
+                let handles: Vec<_> =
+                    (0..8).map(|_| s.spawn(|| usize::from(evict(&path)))).collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum()
+            });
+            assert_eq!(wins, 1, "round {round}: exactly one evictor removes the corpse");
+            assert!(!path.exists());
+        }
+    }
+
+    /// A stale "holder is dead" observation must never evict a lease
+    /// freshly re-created by a live claimant: the re-verify inside the
+    /// marker section refuses.
+    #[test]
+    fn eviction_reverifies_and_spares_a_recreated_live_lease() {
+        let path = tmplease("fresh");
+        fs::write(&path, "4294967295\n").unwrap();
+        assert!(evict(&path), "first evictor removes the corpse");
+        // A live claimant from another process re-creates the lease (pid
+        // 1 is the namespace init — always alive, never ours).
+        fs::write(&path, "1\n").unwrap();
+        // A second evictor still acting on the stale observation must
+        // leave the live holder alone.
+        assert!(!evict(&path));
+        assert!(path.exists(), "the live lease survives the stale evictor");
+    }
+
+    /// A marker abandoned by a crashed evictor is cleaned up instead of
+    /// wedging the key forever.
+    #[test]
+    fn abandoned_eviction_marker_is_cleaned_up() {
+        let path = tmplease("wedge");
+        fs::write(&path, "4294967295\n").unwrap();
+        let marker = path.with_extension("evict");
+        fs::write(&marker, "4294967295\n").unwrap();
+        // First attempt observes the foreign marker: backs off, but
+        // clears the dead evictor's marker.
+        assert!(!evict(&path));
+        assert!(!marker.exists(), "dead evictor's marker must be cleared");
+        // The retry (as the claim loop would) now wins normally.
+        assert!(evict(&path));
+        match claim(&path).unwrap() {
+            Claim::Acquired(g) => g.release(),
+            Claim::Busy => panic!("evicted key must be claimable"),
+        }
     }
 }

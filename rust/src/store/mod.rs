@@ -31,6 +31,15 @@
 //! operand multiset depends on the backend's chunk-to-stream layout, so
 //! a *persistent* key must pin both — two runners only share blobs when
 //! their chunk plans are identical.
+//!
+//! **Fault seams**: every store I/O class (blob read, blob commit,
+//! journal append, lease claim) consults the process-wide
+//! [`FaultInjector`] before touching the filesystem, so chaos runs can
+//! deterministically exercise the exact recovery paths above — torn
+//! commits, corrupted-then-sealed blobs, disabled journals, unavailable
+//! leases — and prove answers stay bit-identical (see `fault/`).
+
+#![warn(clippy::unwrap_used, clippy::expect_used)]
 
 mod blob;
 mod journal;
@@ -39,9 +48,11 @@ mod lease;
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::coordinator::{EvalJob, JobResult, SpecKey};
 use crate::error::SegmulError;
+use crate::fault::{FaultInjector, FaultSite};
 use crate::util::json::{obj, Json};
 
 pub use blob::StoredResult;
@@ -125,12 +136,23 @@ impl StoreKey {
 /// directory scans, so a million-blob store costs nothing until read.
 pub struct ResultStore {
     root: PathBuf,
+    faults: Arc<FaultInjector>,
 }
 
 impl ResultStore {
     /// Open (creating if needed) the store rooted at `root`. Refuses a
-    /// directory written by a different [`STORE_SCHEMA`].
+    /// directory written by a different [`STORE_SCHEMA`]. Fault seams
+    /// are armed from `SEGMUL_FAULTS` (disabled when unset).
     pub fn open(root: impl Into<PathBuf>) -> Result<ResultStore, SegmulError> {
+        Self::open_with_faults(root, FaultInjector::from_env()?)
+    }
+
+    /// [`Self::open`] with an explicit fault plan (a session threads its
+    /// own injector through so one plan accounts for the whole process).
+    pub fn open_with_faults(
+        root: impl Into<PathBuf>,
+        faults: Arc<FaultInjector>,
+    ) -> Result<ResultStore, SegmulError> {
         let root = root.into();
         for sub in ["blobs", "journal", "leases", "tmp"] {
             let dir = root.join(sub);
@@ -158,7 +180,12 @@ impl ResultStore {
                 return Err(SegmulError::store(sentinel.display().to_string(), e.to_string()))
             }
         }
-        Ok(ResultStore { root })
+        Ok(ResultStore { root, faults })
+    }
+
+    /// The fault plan this store consults (for telemetry aggregation).
+    pub fn faults(&self) -> &Arc<FaultInjector> {
+        &self.faults
     }
 
     pub fn root(&self) -> &Path {
@@ -185,6 +212,12 @@ impl ResultStore {
     /// callers treat it as a miss and re-evaluate.
     pub fn load(&self, key: &StoreKey) -> Result<Option<StoredResult>, SegmulError> {
         let path = self.blob_path(key);
+        if self.faults.fire(FaultSite::StoreRead) {
+            return Err(SegmulError::store(
+                path.display().to_string(),
+                "injected read fault (EIO)",
+            ));
+        }
         let text = match fs::read_to_string(&path) {
             Ok(t) => t,
             Err(e) if e.kind() == io::ErrorKind::NotFound => return Ok(None),
@@ -205,7 +238,28 @@ impl ResultStore {
             .join("tmp")
             .join(format!("{}.{}.tmp", key.address(), std::process::id()));
         let path = self.blob_path(key);
-        fs::write(&tmp, text.as_bytes())
+        if self.faults.fire(FaultSite::StoreWrite) {
+            // Torn short write: leave a truncated tmp file behind (never
+            // renamed into blobs/, so readers cannot see it) and fail the
+            // commit — the caller's answer in memory stays correct.
+            let _ = fs::write(&tmp, &text.as_bytes()[..text.len() / 2]);
+            return Err(SegmulError::store(
+                path.display().to_string(),
+                "commit failed: injected short write (EIO)",
+            ));
+        }
+        let bytes = if self.faults.fire(FaultSite::StoreCorrupt) {
+            // Silent media corruption: the commit "succeeds" but one
+            // content byte is damaged — the blob's seal check must catch
+            // it on the next load (counted recovery, job re-evaluated).
+            let mut damaged = text.clone().into_bytes();
+            let mid = damaged.len() / 2;
+            damaged[mid] ^= 0x20;
+            damaged
+        } else {
+            text.into_bytes()
+        };
+        fs::write(&tmp, &bytes)
             .and_then(|_| fs::rename(&tmp, &path))
             .map_err(|e| {
                 SegmulError::store(path.display().to_string(), format!("commit failed: {e}"))
@@ -230,18 +284,52 @@ impl ResultStore {
         key: &StoreKey,
         valid_len: u64,
     ) -> Result<JournalWriter, SegmulError> {
-        JournalWriter::open(self.journal_path(key), valid_len)
+        JournalWriter::open(self.journal_path(key), valid_len, self.faults.clone())
     }
 
     /// Try to claim the evaluation lease for `key` (multi-process mutual
     /// exclusion). See [`lease`] for the protocol.
     pub fn claim(&self, key: &StoreKey) -> Result<Claim, SegmulError> {
-        lease::claim(&self.lease_path(key))
+        let path = self.lease_path(key);
+        if self.faults.fire(FaultSite::LeaseClaim) {
+            return Err(SegmulError::store(
+                path.display().to_string(),
+                "injected lease I/O fault (EIO)",
+            ));
+        }
+        lease::claim(&path)
+    }
+
+    /// Sweep the lease directory and evict every lease whose recorded
+    /// holder is provably dead (single-winner per lease — safe to run
+    /// concurrently with claimants and other reclaimers). Returns the
+    /// number of leases this call evicted. The fleet supervisor runs
+    /// this between shard restarts so a SIGKILLed shard's keys free up
+    /// immediately instead of waiting for a claimant's probe.
+    pub fn reclaim_dead_leases(&self) -> usize {
+        let dir = self.root.join("leases");
+        let entries = match fs::read_dir(&dir) {
+            Ok(entries) => entries,
+            Err(_) => return 0,
+        };
+        let mut evicted = 0;
+        for entry in entries.flatten() {
+            let path = entry.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("lease") {
+                continue;
+            }
+            if lease::holder_is_dead(&path) && lease::evict(&path) {
+                evicted += 1;
+            }
+        }
+        evicted
     }
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(clippy::unwrap_used, clippy::expect_used)]
+
     use super::*;
     use crate::coordinator::WorkSpec;
     use crate::multiplier::MultiplierSpec;

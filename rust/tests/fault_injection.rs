@@ -1,0 +1,93 @@
+//! End-to-end deterministic fault injection through the session facade.
+//!
+//! The contract under test: an armed [`FaultInjector`] makes the stack
+//! *slower but never wrong*. Injected store/journal/lease/worker faults
+//! are recovered by the typed retry layer (or degrade a durability
+//! feature with a warning), the final answers stay bit-identical to a
+//! fault-free run, and every injection and retry is counted in the
+//! session telemetry. Unrecoverable storms surface as typed errors —
+//! never a panic, never a hang, never a silently wrong answer.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use segmul::api::{BackendChoice, EvalJob, Session};
+use segmul::fault::{FaultInjector, FaultSite};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("segmul-faultinj-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn session(store: Option<&PathBuf>, faults: Option<Arc<FaultInjector>>) -> Session {
+    let mut b = Session::builder().workers(2).backend(BackendChoice::Cpu).seed(42);
+    if let Some(dir) = store {
+        b = b.store(dir.clone());
+    }
+    if let Some(f) = faults {
+        b = b.faults(f);
+    }
+    b.build().expect("session startup")
+}
+
+fn jobs() -> Vec<EvalJob> {
+    vec![
+        EvalJob::mc(8, 3, true, 150_000, 9),
+        EvalJob::mc(8, 5, false, 150_000, 9),
+        EvalJob::mc(10, 4, true, 150_000, 9),
+    ]
+}
+
+/// A chaos-rate plan over every store/worker seam leaves a store-backed
+/// sweep bit-identical to a clean run, with the injections and the
+/// recovering retries both counted.
+#[test]
+fn chaotic_store_backed_sweep_is_bit_identical_to_a_clean_run() {
+    let clean = session(None, None).run_jobs(&jobs(), |_, _, _| {}).expect("clean run");
+    let dir = tmp_dir("chaos");
+    let spec = "store.read:p=0.4,store.write:p=0.4,store.corrupt:p=0.4,\
+                journal.append:p=0.5,worker.panic:p=0.1,lease.claim:p=0.4";
+    let faults = Arc::new(FaultInjector::parse(spec, 0xC0FFEE).expect("valid plan"));
+    let mut chaotic = session(Some(&dir), Some(faults.clone()));
+    let got = chaotic.run_jobs(&jobs(), |_, _, _| {}).expect("chaotic run must still complete");
+    assert_eq!(got.len(), clean.len());
+    for (g, c) in got.iter().zip(&clean) {
+        let (gs, cs) = (&g.result().expect("simulated").stats, &c.result().expect("simulated").stats);
+        assert_eq!(gs, cs, "{}: chaos changed the answer", g.job.design.name());
+        assert_eq!(gs.sum_red.to_bits(), cs.sum_red.to_bits(), "{}: sum_red bits", g.job.design.name());
+    }
+    assert!(faults.total_injected() > 0, "the chaos plan never fired");
+    let t = chaotic.telemetry();
+    assert_eq!(t.faults_injected, faults.total_injected(), "telemetry must mirror the injector");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `after=n` one-shot triggers fire exactly once; the single injected
+/// commit failure is invisible in the answers, and a later fault-free
+/// session converges on the bit-identical result through the same store.
+#[test]
+fn one_shot_store_write_fault_fires_once_and_recovers() {
+    let dir = tmp_dir("oneshot");
+    let job = EvalJob::mc(8, 3, true, 120_000, 11);
+    let faults = Arc::new(FaultInjector::parse("store.write:after=1", 7).expect("valid plan"));
+    let r1 = session(Some(&dir), Some(faults.clone())).run(&job).expect("run under one-shot fault");
+    assert_eq!(faults.injected(FaultSite::StoreWrite), 1, "one-shot must fire exactly once");
+    assert_eq!(faults.counters(), vec![("store.write", 1)]);
+    let r2 = session(Some(&dir), None).run(&job).expect("clean follow-up run");
+    assert_eq!(r1.stats, r2.stats);
+    assert_eq!(r1.stats.sum_red.to_bits(), r2.stats.sum_red.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A worker-panic storm past the retry budget is a typed eval error with
+/// the exhausted retries counted — the process neither hangs nor dies.
+#[test]
+fn unrecoverable_panic_storm_is_a_typed_error_with_gave_up_counted() {
+    let faults = Arc::new(FaultInjector::parse("worker.panic:p=1", 3).expect("valid plan"));
+    let mut s = session(None, Some(faults.clone()));
+    let err = s.run(&EvalJob::mc(8, 3, true, 50_000, 5)).expect_err("p=1 must exhaust the budget");
+    assert_eq!(err.kind(), "eval", "panic storms surface as typed eval errors: {err}");
+    assert!(s.gave_up() > 0, "the exhausted retry episode must be counted");
+    assert!(faults.total_injected() >= 2, "every panicked attempt counts as an injection");
+}

@@ -1,0 +1,115 @@
+//! Kill-and-heal properties of the `segmul fleet` supervisor, against
+//! the real binary.
+//!
+//! * A shard SIGKILLed mid-sweep is restarted from its store
+//!   checkpoints, the fleet drains, and the merged report is
+//!   byte-identical to an uninterrupted no-store reference run.
+//! * A shard that crashes past `--max-restarts` makes the fleet kill
+//!   the survivors and exit nonzero with a typed "giving up" error —
+//!   it never hangs and never burns restarts forever.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+
+const BIN: &str = env!("CARGO_BIN_EXE_segmul");
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("segmul-fleet-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).expect("tmp dir");
+    dir
+}
+
+/// The grid both runs share; small enough for CI, big enough that a
+/// freshly spawned shard is still working when the kill lands.
+const GRID: &[&str] =
+    &["--designs", "paper", "--n", "8", "--mc", "--samples", "1500000", "--seed", "42", "--workers", "2"];
+
+#[test]
+fn fleet_heals_a_killed_shard_and_merges_to_reference_bytes() {
+    let work = tmp("heal");
+
+    // Uninterrupted no-store reference.
+    let ref_dir = work.join("ref");
+    let status = Command::new(BIN)
+        .arg("sweep")
+        .args(GRID)
+        .args(["--deterministic-report", "--results"])
+        .arg(&ref_dir)
+        .stdout(Stdio::null())
+        .status()
+        .expect("reference sweep");
+    assert!(status.success(), "reference sweep failed");
+
+    // The fleet: two supervised shards over one store. Shard 0 is
+    // SIGKILLed the moment its pid line appears — mid-startup or
+    // mid-sweep, either way the supervisor must restart and heal it.
+    let fleet_dir = work.join("fleet");
+    let mut fleet = Command::new(BIN)
+        .args(["fleet", "--shards", "2"])
+        .args(GRID)
+        .args(["--max-restarts", "3", "--wedge-secs", "300", "--store"])
+        .arg(work.join("store"))
+        .arg("--results")
+        .arg(&fleet_dir)
+        .stdout(Stdio::piped())
+        .spawn()
+        .expect("fleet spawn");
+    let reader = BufReader::new(fleet.stdout.take().expect("piped stdout"));
+    let mut killed = false;
+    let mut saw_restart = false;
+    let mut log = Vec::new();
+    for line in reader.lines() {
+        let line = line.expect("fleet stdout");
+        if !killed {
+            if let Some(pid) = line
+                .strip_prefix("fleet: shard 0/2 pid ")
+                .and_then(|rest| rest.split_whitespace().next())
+                .and_then(|p| p.parse::<u32>().ok())
+            {
+                let _ = Command::new("sh").arg("-c").arg(format!("kill -9 {pid}")).status();
+                killed = true;
+            }
+        }
+        if line.contains("(restart #1)") {
+            saw_restart = true;
+        }
+        log.push(line);
+    }
+    let status = fleet.wait().expect("fleet exit");
+    let log = log.join("\n");
+    assert!(status.success(), "fleet failed:\n{log}");
+    assert!(killed, "shard 0's pid line never appeared:\n{log}");
+    assert!(saw_restart, "the killed shard was never restarted:\n{log}");
+    assert!(log.contains("merge complete"), "missing merge pass:\n{log}");
+
+    // The healed, merged report is byte-identical to the reference.
+    for report in ["sweep.csv", "BENCH_sweep.json"] {
+        let want = std::fs::read(ref_dir.join(report)).expect("reference report");
+        let got = std::fs::read(fleet_dir.join(report)).expect("fleet report");
+        assert_eq!(got, want, "{report}: fleet merge diverged from the reference bytes");
+    }
+    let _ = std::fs::remove_dir_all(&work);
+}
+
+#[test]
+fn fleet_gives_up_after_max_restarts_with_a_typed_error() {
+    let work = tmp("fatal");
+    // Every child inherits a worker-panic storm that exhausts its retry
+    // budget, so each shard attempt exits nonzero almost immediately.
+    let out = Command::new(BIN)
+        .args(["fleet", "--shards", "1"])
+        .args(["--designs", "paper", "--n", "8", "--mc", "--samples", "100000", "--seed", "1"])
+        .args(["--workers", "2", "--max-restarts", "1", "--store"])
+        .arg(work.join("store"))
+        .arg("--results")
+        .arg(work.join("results"))
+        .env("SEGMUL_FAULTS", "worker.panic:p=1")
+        .output()
+        .expect("fleet run");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(!out.status.success(), "an unhealable fleet must exit nonzero\n{stderr}");
+    assert!(stderr.contains("giving up"), "missing typed give-up error:\n{stderr}");
+    let _ = std::fs::remove_dir_all(&work);
+}

@@ -1,0 +1,157 @@
+//! Supervision and graceful degradation of `segmul serve` under
+//! deterministic fault injection.
+//!
+//! Two contracts:
+//! * an engine panic strands its in-flight requests with **typed 500s**
+//!   (never a hang, never a dead server) and the supervisor restarts the
+//!   session, after which the server answers normally;
+//! * a worker-panic storm flips the server into degraded mode, where
+//!   analytic-eligible requests keep answering in closed form with the
+//!   `degraded: true` wire flag while non-eligible work gets typed 503s,
+//!   and a successful pool probe returns the server to healthy — all of
+//!   it proven end-to-end through a clean drain.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use segmul::api::BackendChoice;
+use segmul::fault::FaultInjector;
+use segmul::serve::metrics::metric_value;
+use segmul::serve::{client, ServeConfig, Server};
+use segmul::util::json::Json;
+
+fn boot_with(faults: &str) -> Server {
+    Server::start(ServeConfig {
+        workers: Some(2),
+        backend: BackendChoice::Cpu,
+        default_deadline: Duration::from_secs(120),
+        faults: Some(Arc::new(FaultInjector::parse(faults, 0xFA11).expect("valid fault plan"))),
+        ..ServeConfig::default()
+    })
+    .expect("server startup")
+}
+
+fn segmented_eval() -> Json {
+    Json::parse(
+        r#"{"design":{"family":"segmented","n":8,"t":3,"fix":true},
+            "workload":{"kind":"mc","samples":20000,"seed":1}}"#,
+    )
+    .expect("valid request")
+}
+
+fn accurate_eval() -> Json {
+    Json::parse(
+        r#"{"design":{"family":"accurate","n":8},
+            "workload":{"kind":"mc","samples":20000,"seed":1}}"#,
+    )
+    .expect("valid request")
+}
+
+/// An injected engine panic strands the first request with a typed 500;
+/// the supervisor restarts the engine (counted in `/metrics`) and the
+/// very next request is answered by the rebuilt session.
+#[test]
+fn engine_panic_is_a_typed_500_and_the_supervisor_restarts() {
+    let server = boot_with("engine.panic:after=1");
+    let addr = server.addr();
+
+    let first = client::post_json(addr, "/v1/eval", &segmented_eval()).unwrap();
+    assert_eq!(first.status, 500, "{}", first.text());
+    let err = first.json().unwrap();
+    let err = err.get("error").expect("typed error body");
+    assert_eq!(err.get("kind").and_then(Json::as_str), Some("serve"));
+    assert!(
+        err.get("detail").and_then(Json::as_str).unwrap().contains("engine exited"),
+        "unhelpful detail: {err:?}"
+    );
+
+    // The one-shot trigger is spent; the rebuilt engine answers (the
+    // post-panic degraded flag clears on this first successful probe).
+    let second = client::post_json(addr, "/v1/eval", &segmented_eval()).unwrap();
+    assert_eq!(second.status, 200, "{}", second.text());
+    let body = second.json().unwrap();
+    assert_eq!(body.get("degraded").and_then(Json::as_bool), Some(false));
+
+    let doc = client::get(addr, "/metrics").unwrap().text();
+    let restarts: u64 = metric_value(&doc, "serve_engine_restarts").unwrap().parse().unwrap();
+    assert!(restarts >= 1, "the supervisor restart must be counted:\n{doc}");
+
+    let _ = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    let summary = server.join();
+    assert!(summary.requests_total >= 2);
+}
+
+/// The acceptance storm: with every pool evaluation panicking, the
+/// server degrades after two consecutive pool failures, keeps answering
+/// analytic-eligible evals and sweeps in closed form (flagged
+/// `degraded: true`), 503s non-eligible work, recovers through a pool
+/// probe once the storm passes, and drains cleanly.
+#[test]
+fn worker_panic_storm_degrades_to_closed_form_and_recovers() {
+    // `first=8` arms exactly two full retry budgets (4 attempts each):
+    // evals 1 and 2 exhaust theirs and fail; the recovery probe (attempt
+    // 9) succeeds.
+    let server = boot_with("worker.panic:first=8");
+    let addr = server.addr();
+
+    // Two consecutive pool failures: typed eval errors, and the second
+    // one flips the server into degraded mode.
+    for i in 0..2 {
+        let resp = client::post_json(addr, "/v1/eval", &segmented_eval()).unwrap();
+        assert_eq!(resp.status, 500, "storm eval {i}: {}", resp.text());
+        let err = resp.json().unwrap();
+        assert_eq!(
+            err.get("error").unwrap().get("kind").and_then(Json::as_str),
+            Some("eval"),
+            "storm failures are typed pool errors"
+        );
+    }
+    let health = client::get(addr, "/healthz").unwrap();
+    assert_eq!(health.status, 200, "degraded is not draining: the server still serves");
+    assert_eq!(health.json().unwrap().get("status").and_then(Json::as_str), Some("degraded"));
+    assert_eq!(health.json().unwrap().get("degraded").and_then(Json::as_bool), Some(true));
+
+    // Analytic-eligible evals keep answering, in closed form, flagged.
+    let resp = client::post_json(addr, "/v1/eval", &accurate_eval()).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.text());
+    let body = resp.json().unwrap();
+    assert_eq!(body.get("degraded").and_then(Json::as_bool), Some(true));
+    assert_eq!(body.get("source").and_then(Json::as_str), Some("analytic"));
+
+    // A whole analytic-eligible sweep streams to completion, every row
+    // flagged, without ever touching the dead pool.
+    let sweep = client::post_json(
+        addr,
+        "/v1/sweep",
+        &Json::parse(r#"{"designs":"accurate","bitwidths":[8],"mc":true,"samples":20000}"#).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(sweep.status, 200);
+    let lines = sweep.json_lines().unwrap();
+    let trailer = lines.last().expect("stream trailer");
+    assert_eq!(trailer.get("status").and_then(Json::as_str), Some("complete"), "{trailer:?}");
+    let rows: Vec<&Json> = lines.iter().filter_map(|l| l.get("row")).collect();
+    assert!(!rows.is_empty(), "the degraded sweep must still produce rows");
+    for row in rows {
+        assert_eq!(row.get("degraded").and_then(Json::as_bool), Some(true), "{row:?}");
+    }
+
+    // The storm has passed (the `first=8` budget is spent): the next
+    // non-analytic eval doubles as the recovery probe and succeeds.
+    let probe = client::post_json(addr, "/v1/eval", &segmented_eval()).unwrap();
+    assert_eq!(probe.status, 200, "{}", probe.text());
+    assert_eq!(probe.json().unwrap().get("degraded").and_then(Json::as_bool), Some(false));
+    let health = client::get(addr, "/healthz").unwrap();
+    assert_eq!(health.json().unwrap().get("status").and_then(Json::as_str), Some("ok"));
+
+    let doc = client::get(addr, "/metrics").unwrap().text();
+    let degraded_answers: u64 = metric_value(&doc, "serve_degraded_answers").unwrap().parse().unwrap();
+    assert!(degraded_answers >= 2, "closed-form answers must be counted:\n{doc}");
+    assert_eq!(metric_value(&doc, "serve_degraded").as_deref(), Some("0"), "recovered");
+
+    // The acceptance drain: the server never hung and never died.
+    let _ = client::post_json(addr, "/v1/shutdown", &Json::Obj(Default::default())).unwrap();
+    let summary = server.join();
+    assert!(summary.requests_total >= 6);
+    assert!(summary.metrics_doc.contains("serve_draining 1"));
+}
