@@ -1,0 +1,58 @@
+//! Bench: the `segmul tune` autotuner over the full paper grid.
+//!
+//! Measures one complete tune call — grid enumeration, closed-form error
+//! answers for every point (`AnalyticMode::Require`: zero pool
+//! dispatches), the FPGA technology join over the generated netlists,
+//! the Pareto frontier, and winner selection. This is the interactive
+//! cost a `segmul tune --budget 'mred<=1e-3'` user pays.
+//!
+//! Writes `BENCH_tune.json`:
+//!   - `tune_grid_ms`        — wall ms per full-grid tune (informational,
+//!                             lower is better)
+//!   - `tune_grid_points`    — candidate count (exact gate: 120)
+//!   - `tune_frontier_points`— non-dominated count (floor gate: >= 1)
+//!   - `tune_points_per_s`   — candidate throughput (absolute floor)
+
+use segmul::api::{AnalyticMode, Session};
+use segmul::bench::{bench, section, Summary};
+use segmul::tune::{tune, Budget, TuneQuery};
+
+fn main() {
+    let query = TuneQuery::new(Budget::parse("mred<=1e-3").unwrap()).hw_vectors(128);
+    let mut session = Session::builder()
+        .workers(1)
+        .analytic(AnalyticMode::Require)
+        .build()
+        .unwrap();
+    // Correctness preconditions for the numbers below: the whole grid
+    // answers in closed form and produces a winner + frontier.
+    let first = tune(&mut session, &query).unwrap();
+    assert_eq!(first.jobs_evaluated, 0, "require mode must not dispatch the pool");
+    assert!(first.winner().is_some(), "the accurate point is always feasible");
+    assert!(!first.frontier().is_empty());
+    let grid_points = first.points.len();
+    let frontier_points = first.frontier().len();
+
+    section(&format!(
+        "tune autotuner — {grid_points} grid points, target {}",
+        first.target.name()
+    ));
+    let r = bench("full paper grid tune (closed form)", Some(grid_points as f64), |iters| {
+        let mut acc = 0usize;
+        for _ in 0..iters {
+            acc += tune(&mut session, &query).unwrap().frontier().len();
+        }
+        acc
+    });
+
+    let mut summary = Summary::new("tune");
+    summary
+        .metric("tune_grid_ms", r.ns_per_iter / 1e6)
+        .metric("tune_grid_points", grid_points as f64)
+        .metric("tune_frontier_points", frontier_points as f64)
+        .metric("tune_points_per_s", grid_points as f64 / (r.ns_per_iter * 1e-9));
+    match summary.write() {
+        Ok(path) => println!("\nwrote {path:?}"),
+        Err(e) => println!("\nsummary not written: {e}"),
+    }
+}

@@ -33,6 +33,7 @@ enum Workload {
 }
 
 impl JobBuilder {
+    /// A builder for `design` with no workload chosen yet.
     pub fn new(design: MultiplierSpec) -> Self {
         JobBuilder { design, workload: None, seed: 0 }
     }

@@ -71,8 +71,11 @@ pub enum ProgressEvent {
 /// Aggregate session counters.
 #[derive(Clone, Debug, Default)]
 pub struct SessionTelemetry {
+    /// Jobs completed (any answer source).
     pub jobs_completed: u64,
+    /// Jobs answered from the in-memory result cache.
     pub cache_hits: u64,
+    /// Jobs actually evaluated on the pool.
     pub jobs_evaluated: u64,
     /// Jobs answered from the analytic model registry — no pool
     /// dispatch, counted separately from `cache_hits`.
@@ -92,10 +95,12 @@ pub struct SessionTelemetry {
     /// Faults deliberately injected by the active [`FaultInjector`] plan
     /// (always 0 with injection disabled — the production state).
     pub faults_injected: u64,
+    /// Operand pairs evaluated.
     pub pairs_evaluated: u64,
     /// Backend constructions since startup — stays at `workers` for the
     /// session's lifetime (the persistent-pool contract).
     pub backend_builds: u64,
+    /// Worker threads in the pool.
     pub workers: usize,
     /// Kernel tier per evaluated design (union over the pool's workers,
     /// name-sorted): [`DispatchClass::Batched`] for a true batch kernel,
@@ -147,6 +152,29 @@ type ProgressCallback = Box<dyn Fn(ProgressEvent) + Send + Sync>;
 pub type BackendFactory = Box<dyn Fn() -> anyhow::Result<Box<dyn EvalBackend>> + Send + Sync>;
 
 /// Builder for [`Session`].
+///
+/// # Example
+///
+/// A single-worker session with the analytic fast path: the paper-grid
+/// point below is answered in closed form, so the pool is never
+/// dispatched.
+///
+/// ```
+/// use segmul::api::{AnalyticMode, MultiplierSpec, Session};
+///
+/// let mut session = Session::builder()
+///     .workers(1)
+///     .analytic(AnalyticMode::Require)
+///     .build()?;
+/// let job = session
+///     .job(MultiplierSpec::Segmented { n: 8, t: 4, fix: true })
+///     .exhaustive()
+///     .build()?;
+/// let metrics = session.run_outcome(&job)?.metrics()?;
+/// assert!(metrics.mred > 0.0);
+/// assert_eq!(session.jobs_evaluated(), 0); // closed form, zero dispatches
+/// # Ok::<(), segmul::error::SegmulError>(())
+/// ```
 pub struct SessionBuilder {
     workers: Option<usize>,
     backend: BackendChoice,
@@ -335,6 +363,7 @@ pub struct Session {
 }
 
 impl Session {
+    /// A [`SessionBuilder`] with defaults.
     pub fn builder() -> SessionBuilder {
         SessionBuilder::new()
     }
@@ -365,10 +394,12 @@ impl Session {
         self.runner.pool().batch()
     }
 
+    /// Jobs answered from the in-memory result cache.
     pub fn cache_hits(&self) -> u64 {
         self.runner.cache_hits
     }
 
+    /// Jobs actually evaluated on the pool.
     pub fn jobs_evaluated(&self) -> u64 {
         self.runner.jobs_evaluated
     }
@@ -421,6 +452,7 @@ impl Session {
         self.runner.pool().kernel_dispatch()
     }
 
+    /// Aggregate telemetry snapshot.
     pub fn telemetry(&self) -> SessionTelemetry {
         SessionTelemetry {
             jobs_completed: self.jobs_completed,

@@ -28,14 +28,18 @@ fn budget() -> Duration {
 /// One benchmark result.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Benchmark label.
     pub name: String,
+    /// Iterations executed inside the timed window.
     pub iters: u64,
+    /// Mean wall-clock nanoseconds per iteration.
     pub ns_per_iter: f64,
     /// Optional items processed per iteration (for throughput lines).
     pub items_per_iter: Option<f64>,
 }
 
 impl BenchResult {
+    /// Print the human-readable result line (time/iter + optional throughput).
     pub fn report(&self) {
         let thr = match self.items_per_iter {
             Some(items) => {
@@ -134,6 +138,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Start an empty summary for bench `bench`.
     pub fn new(bench: &str) -> Self {
         Summary { bench: bench.to_string(), metrics: Vec::new() }
     }
@@ -144,6 +149,7 @@ impl Summary {
         self
     }
 
+    /// The summary as its `BENCH_*.json` object (`bench` name + `metrics` map).
     pub fn to_json(&self) -> Json {
         obj(vec![
             ("bench", Json::from(self.bench.as_str())),
@@ -171,6 +177,7 @@ impl Summary {
 /// One bench-gate verdict.
 #[derive(Clone, Debug)]
 pub struct GateCheck {
+    /// Metric name from the committed baseline.
     pub metric: String,
     /// Baseline value (the committed reference).
     pub baseline: f64,
@@ -180,6 +187,7 @@ pub struct GateCheck {
     pub floor: f64,
     /// Whether this metric fails the workflow (informational otherwise).
     pub gated: bool,
+    /// `true` when the measured value is at or above the floor.
     pub pass: bool,
 }
 

@@ -82,6 +82,7 @@ impl Config {
         }
     }
 
+    /// Build a config from a parsed TOML document (missing keys keep defaults).
     pub fn from_doc(doc: &TomlDoc) -> Config {
         let mut c = Config::default();
         if let Some(s) = doc.get_str("paths", "artifacts") {

@@ -7,10 +7,15 @@ use anyhow::{anyhow, bail, Result};
 /// A TOML value (subset).
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// A boolean.
     Bool(bool),
+    /// An array of values.
     Array(Vec<TomlValue>),
 }
 
@@ -18,10 +23,12 @@ pub enum TomlValue {
 /// live under the empty-string section.
 #[derive(Clone, Debug, Default)]
 pub struct TomlDoc {
+    /// Parsed sections (top-level keys live under `""`).
     pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
 }
 
 impl TomlDoc {
+    /// Parse the minimal TOML subset used by `segmul.toml`.
     pub fn parse(src: &str) -> Result<TomlDoc> {
         let mut doc = TomlDoc::default();
         let mut section = String::new();
@@ -51,10 +58,12 @@ impl TomlDoc {
         Ok(doc)
     }
 
+    /// Raw value at `[section] key`.
     pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
         self.sections.get(section)?.get(key)
     }
 
+    /// String value at `[section] key`.
     pub fn get_str(&self, section: &str, key: &str) -> Option<&str> {
         match self.get(section, key)? {
             TomlValue::Str(s) => Some(s),
@@ -62,6 +71,7 @@ impl TomlDoc {
         }
     }
 
+    /// Integer value at `[section] key`.
     pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
         match self.get(section, key)? {
             TomlValue::Int(v) => Some(*v),
@@ -69,6 +79,7 @@ impl TomlDoc {
         }
     }
 
+    /// Float value at `[section] key`.
     pub fn get_float(&self, section: &str, key: &str) -> Option<f64> {
         match self.get(section, key)? {
             TomlValue::Float(v) => Some(*v),
@@ -77,6 +88,7 @@ impl TomlDoc {
         }
     }
 
+    /// Boolean value at `[section] key`.
     pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
         match self.get(section, key)? {
             TomlValue::Bool(v) => Some(*v),
@@ -84,6 +96,7 @@ impl TomlDoc {
         }
     }
 
+    /// Integer-array value at `[section] key`.
     pub fn get_int_array(&self, section: &str, key: &str) -> Option<Vec<i64>> {
         match self.get(section, key)? {
             TomlValue::Array(items) => items

@@ -87,6 +87,7 @@ pub struct CpuBackend {
 }
 
 impl CpuBackend {
+    /// A CPU backend with the default 2^16 batch size.
     pub fn new() -> Self {
         Self { batch: 1 << 16, designs: HashMap::new(), dispatch: BTreeMap::new() }
     }
@@ -168,14 +169,17 @@ pub struct PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Load the artifact manifest under `artifacts_dir` and wrap it.
     pub fn load(artifacts_dir: &Path) -> Result<Self> {
         Ok(Self::from_runtime(Runtime::load(artifacts_dir)?))
     }
 
+    /// Wrap an already-loaded runtime.
     pub fn from_runtime(runtime: Runtime) -> Self {
         Self { runtime, dispatch: BTreeMap::new() }
     }
 
+    /// The underlying PJRT runtime.
     pub fn runtime(&self) -> &Runtime {
         &self.runtime
     }

@@ -25,6 +25,7 @@ pub struct Convergence {
 }
 
 impl Convergence {
+    /// A policy targeting `target_rel_stderr` with the default 2^12-sample minimum.
     pub fn new(target_rel_stderr: f64) -> Self {
         Self { target_rel_stderr, min_samples: 1 << 12 }
     }

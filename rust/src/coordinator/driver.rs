@@ -58,6 +58,7 @@ pub struct ChunkPlan {
 }
 
 impl ChunkPlan {
+    /// Plan `job` into backend-batch-sized chunks.
     pub fn new(job: &EvalJob, batch: usize) -> Self {
         let n = job.n();
         let chunk = (batch.max(1)) as u64;
@@ -75,6 +76,7 @@ impl ChunkPlan {
         ChunkPlan { n, spec: job.spec.clone(), chunk, total, n_chunks: total.div_ceil(chunk) }
     }
 
+    /// Total chunks in the plan.
     pub fn n_chunks(&self) -> u64 {
         self.n_chunks
     }

@@ -27,6 +27,7 @@ pub enum WorkSpec {
 pub struct EvalJob {
     /// The multiplier design under evaluation.
     pub design: MultiplierSpec,
+    /// The workload (exhaustive / Monte-Carlo / adaptive).
     pub spec: WorkSpec,
 }
 
@@ -43,6 +44,7 @@ pub struct JobKey {
     /// [`MultiplierSpec::canonical`]): specs computing the same product
     /// function share one entry.
     pub design: MultiplierSpec,
+    /// Hashable image of the workload.
     pub spec: SpecKey,
 }
 
@@ -50,12 +52,16 @@ pub struct JobKey {
 /// exact f64 bit pattern).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub enum SpecKey {
+    /// All `2^{2n}` input pairs.
     Exhaustive,
+    /// Sampled workload, keyed by its exact budget and seed.
     MonteCarlo { samples: u64, seed: u64 },
+    /// Adaptive workload (`target_bits` = the f64 target's bit pattern).
     Adaptive { max_samples: u64, seed: u64, target_bits: u64 },
 }
 
 impl EvalJob {
+    /// Pair `design` with `spec`; bounds are checked at [`Self::validate`].
     pub fn new(design: MultiplierSpec, spec: WorkSpec) -> Self {
         EvalJob { design, spec }
     }
@@ -100,6 +106,7 @@ impl EvalJob {
         JobKey { design: self.design.canonical(), spec }
     }
 
+    /// Typed validation of the bounds every driver path relies on.
     pub fn validate(&self) -> Result<(), SegmulError> {
         self.design.validate()?;
         match &self.spec {
@@ -131,10 +138,13 @@ impl EvalJob {
 /// Completed job output.
 #[derive(Clone, Debug)]
 pub struct JobResult {
+    /// The job as evaluated.
     pub job: EvalJob,
+    /// Accumulated error statistics.
     pub stats: ErrorStats,
     /// Backend that executed the job ("cpu" / "pjrt").
     pub backend: &'static str,
+    /// Wall time of the evaluation.
     pub wall: Duration,
     /// Backend batch executions performed.
     pub batches: u64,

@@ -35,10 +35,15 @@ use super::job::{EvalJob, JobResult};
 /// Aggregated service counters.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceTelemetry {
+    /// Jobs completed successfully.
     pub jobs_completed: u64,
+    /// Jobs that surfaced an error.
     pub jobs_failed: u64,
+    /// Operand pairs evaluated.
     pub pairs_evaluated: u64,
+    /// Backend batch executions.
     pub batches_executed: u64,
+    /// Cumulative busy time across workers.
     pub busy: Duration,
 }
 
@@ -174,6 +179,7 @@ impl EvalService {
         self.submit(job).wait()
     }
 
+    /// Snapshot of the aggregated counters.
     pub fn telemetry(&self) -> ServiceTelemetry {
         self.telemetry.lock().unwrap().clone()
     }

@@ -59,6 +59,7 @@ pub enum AnalyticMode {
 }
 
 impl AnalyticMode {
+    /// The CLI name (`--analytic off|auto|require`).
     pub fn name(&self) -> &'static str {
         match self {
             AnalyticMode::Off => "off",
@@ -208,7 +209,9 @@ impl SweepGrid {
 /// registry.
 #[derive(Clone, Debug)]
 pub enum Answer {
+    /// A pool-evaluated (or cache-served) result.
     Simulated(JobResult),
+    /// A closed-form answer from the analytic registry.
     Analytic {
         stats: AnalyticStats,
         /// Time spent computing the model (microseconds — the bench
@@ -223,6 +226,7 @@ pub struct SweepOutcome {
     /// The job as requested by the grid (cache canonicalization may have
     /// served it from an equivalent config's entry).
     pub job: EvalJob,
+    /// The answer and its source (simulated, analytic, or store).
     pub answer: Answer,
     /// Served from the result cache (always `false` for analytic
     /// answers — those are counted in [`SweepRunner::analytic_answers`]).
@@ -365,6 +369,7 @@ impl SweepRunner {
         &self.retry
     }
 
+    /// Worker threads in the pool.
     pub fn workers(&self) -> usize {
         self.pool.pool_size()
     }
@@ -384,6 +389,7 @@ impl SweepRunner {
         self.analytic = mode;
     }
 
+    /// The current answer-source policy.
     pub fn analytic_mode(&self) -> AnalyticMode {
         self.analytic
     }

@@ -70,34 +70,42 @@ pub enum SegmulError {
 }
 
 impl SegmulError {
+    /// A [`SegmulError::Config`].
     pub fn config(msg: impl Into<String>) -> Self {
         SegmulError::Config(msg.into())
     }
 
+    /// A [`SegmulError::Spec`] for `design`.
     pub fn spec(design: impl Into<String>, reason: impl Into<String>) -> Self {
         SegmulError::Spec { design: design.into(), reason: reason.into() }
     }
 
+    /// A [`SegmulError::Workload`].
     pub fn workload(msg: impl Into<String>) -> Self {
         SegmulError::Workload(msg.into())
     }
 
+    /// A [`SegmulError::Backend`].
     pub fn backend(msg: impl Into<String>) -> Self {
         SegmulError::Backend(msg.into())
     }
 
+    /// A [`SegmulError::Artifact`] at `path`.
     pub fn artifact(path: impl Into<String>, reason: impl Into<String>) -> Self {
         SegmulError::Artifact { path: path.into(), reason: reason.into() }
     }
 
+    /// A [`SegmulError::Stats`].
     pub fn stats(msg: impl Into<String>) -> Self {
         SegmulError::Stats(msg.into())
     }
 
+    /// A [`SegmulError::Store`] at `path`.
     pub fn store(path: impl Into<String>, reason: impl Into<String>) -> Self {
         SegmulError::Store { path: path.into(), reason: reason.into() }
     }
 
+    /// A [`SegmulError::Serve`] carrying its HTTP status.
     pub fn serve(status: u16, reason: impl Into<String>) -> Self {
         SegmulError::Serve { status, reason: reason.into() }
     }

@@ -33,6 +33,7 @@ pub struct ErrorStats {
 }
 
 impl ErrorStats {
+    /// Empty accumulator for `n`-bit operands.
     pub fn new(n: u32) -> Self {
         assert!(n >= 1 && n <= 32);
         Self {
@@ -176,7 +177,9 @@ impl ErrorStats {
 /// The derived metric set of §III-B.
 #[derive(Clone, Debug)]
 pub struct ErrorMetrics {
+    /// Operand bit-width.
     pub n: u32,
+    /// Input pairs the metrics were computed over.
     pub samples: u64,
     /// Arithmetic error rate (Eq. 3).
     pub er: f64,

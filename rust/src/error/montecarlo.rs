@@ -72,6 +72,7 @@ impl AliasTable {
     }
 
     #[inline]
+    /// Draw one operand (alias method, O(1)).
     pub fn sample(&self, rng: &mut Xoshiro256) -> u64 {
         let k = self.prob.len() as u64;
         let col = rng.next_below(k) as usize;
@@ -86,17 +87,23 @@ impl AliasTable {
 /// MC evaluation configuration.
 #[derive(Clone, Debug)]
 pub struct McConfig {
+    /// Total samples.
     pub samples: u64,
+    /// Base RNG seed.
     pub seed: u64,
     /// Samples per independent RNG stream (chunk) — fixes the reproducible
     /// decomposition of the sample space.
     pub chunk: u64,
+    /// Operand-`a` distribution.
     pub dist_a: InputDist,
+    /// Operand-`b` distribution.
     pub dist_b: InputDist,
+    /// Worker threads for the chunked parallel path.
     pub workers: usize,
 }
 
 impl McConfig {
+    /// Uniform operands: `samples` draws seeded with `seed`.
     pub fn uniform(samples: u64, seed: u64) -> Self {
         Self {
             samples,

@@ -22,7 +22,9 @@
 /// Probability lattice for an (n, t) configuration under uniform inputs.
 #[derive(Clone, Debug)]
 pub struct ProbLattice {
+    /// Operand bit-width.
     pub n: u32,
+    /// Splitting point.
     pub t: u32,
     /// `ps[j][i] = ρ̂(Ŝ_i^j)`, i ∈ [0, n] (index n is the carry-out bit).
     pub ps: Vec<Vec<f64>>,

@@ -49,6 +49,7 @@ fn eval_block(
 }
 
 impl<'m> BatchAccumulator<'m> {
+    /// An accumulator driving `m` over L1-sized blocks.
     pub fn new(m: &'m dyn BatchMultiplier) -> Self {
         let n = m.n();
         Self {
@@ -132,6 +133,7 @@ pub struct OrderedMerger {
 }
 
 impl OrderedMerger {
+    /// A merger for `n`-bit stats starting at chunk 0.
     pub fn new(n: u32) -> Self {
         Self { total: ErrorStats::new(n), next: 0, pending: BTreeMap::new() }
     }

@@ -30,14 +30,17 @@ pub struct RetryCounters {
 }
 
 impl RetryCounters {
+    /// Fresh zeroed counters.
     pub fn new() -> RetryCounters {
         RetryCounters::default()
     }
 
+    /// Backoffs taken so far.
     pub fn retries(&self) -> u64 {
         self.retries.load(Ordering::Relaxed)
     }
 
+    /// Episodes that exhausted the policy.
     pub fn gave_up(&self) -> u64 {
         self.gave_up.load(Ordering::Relaxed)
     }

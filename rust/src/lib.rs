@@ -17,14 +17,15 @@
 //! Library users start at the [`api`] facade: design-agnostic
 //! [`api::MultiplierSpec`]s, builder-configured [`api::Session`]s over a
 //! persistent worker pool, typed [`api::SegmulError`]s, and streaming
-//! progress callbacks.
+//! progress callbacks. The [`tune`] module layers the accuracy-budget
+//! autotuner and Pareto explorer on top of a session.
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
-
+//! See `README.md` for the crate map and quickstart, `DESIGN.md` for the
+//! experiment index, and `EXPERIMENTS.md` for paper-vs-measured results.
+#![warn(missing_docs)]
 
 pub mod api;
 pub mod bench;
@@ -39,4 +40,5 @@ pub mod runtime;
 pub mod serve;
 pub mod store;
 pub mod tech;
+pub mod tune;
 pub mod util;

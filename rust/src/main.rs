@@ -13,12 +13,17 @@
 //!   lower    — emit lowered PJRT modules for every registry design
 //!              (schema-v2 manifest; enables full `--designs all` sweeps
 //!              on the PJRT backend with zero CPU fallbacks)
+//!   tune     — accuracy-budget autotuner: find the cheapest configuration
+//!              meeting `--budget mred<=X|nmed<=X|wce<=X|psnr>=X` on the
+//!              FPGA or ASIC model, writing the Pareto frontier to
+//!              pareto.csv (closed-form answers by default: zero
+//!              simulation on the paper grid)
 //!   hw       — hardware figures (FPGA + ASIC models) for one config
 //!   figures  — regenerate paper artifacts (fig2|mae|fig3a|fig3b|probprop|
-//!              headline|seqcomb|all) into the results directory
-//!   serve    — HTTP evaluation service (typed /v1/eval + /v1/sweep,
-//!              request coalescing, admission control, latency telemetry,
-//!              graceful drain)
+//!              headline|seqcomb|pareto|all) into the results directory
+//!   serve    — HTTP evaluation service (typed /v1/eval + /v1/sweep +
+//!              /v1/tune, request coalescing, admission control, latency
+//!              telemetry, graceful drain)
 //!   fleet    — self-healing supervisor for store-backed sharded sweeps:
 //!              spawns N `sweep --shard i/N` workers over one store,
 //!              restarts crashes with backoff, reclaims dead leases,
@@ -485,6 +490,122 @@ fn cmd_lower(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Autotune: answer "what is the cheapest configuration within this
+/// accuracy budget?" over a candidate grid. Error metrics flow through
+/// the session's answer-source ladder (closed forms by default —
+/// `--analytic require` — so the paper grid tunes with zero pool
+/// dispatches; `--store` adds the persistent result store as a source),
+/// hardware cost comes from the FPGA/ASIC models, and the full
+/// non-dominated frontier lands in `results/pareto.csv`.
+fn cmd_tune(args: &Args) -> Result<()> {
+    use segmul::tune::{tune, Budget, TechTarget, TuneQuery};
+    let cfg = load_config(args)?;
+    let Some(budget) = args.opt("budget") else {
+        bail!("tune requires --budget EXPR (mred<=X | nmed<=X | wce<=X | psnr>=X)");
+    };
+    let budget = Budget::parse(budget)?;
+    let target = match args.opt("target") {
+        Some(s) => TechTarget::parse(s)?,
+        None => TechTarget::Fpga,
+    };
+    let bitwidths = match args.opt_u32("n")? {
+        Some(n) => vec![n],
+        None => cfg.sweep_bitwidths.clone(),
+    };
+    let designs = match args.opt("designs") {
+        Some(s) => DesignSet::parse(s)?,
+        None => DesignSet::Paper,
+    };
+    let fix = if args.flag("fix") {
+        Some(true)
+    } else {
+        match args.opt("fix") {
+            Some("true") => Some(true),
+            Some("false") => Some(false),
+            Some("both") | None => None,
+            Some(other) => bail!("--fix expects true|false|both, got {other:?}"),
+        }
+    };
+    let analytic = match args.opt("analytic") {
+        Some(s) => AnalyticMode::parse(s)?,
+        None => AnalyticMode::Require,
+    };
+    let workers = workers_from(args, &cfg)?;
+    let store_dir = args.opt("store").map(PathBuf::from);
+    let mut session =
+        make_session(backend_choice(args, &cfg)?, &cfg, workers, analytic, store_dir)?;
+    let query = TuneQuery::new(budget)
+        .target(target)
+        .bitwidths(bitwidths)
+        .designs(designs)
+        .fix(fix)
+        .workload(cfg.exhaustive_max_n, cfg.mc_samples)
+        .hw_vectors(cfg.hw_vectors)
+        .hw_seed(cfg.seed);
+    println!(
+        "tune: {} over {} candidates (designs={}, n ∈ {:?}, target {}, analytic {})",
+        query.budget.canonical(),
+        query.specs().len(),
+        query.designs.name(),
+        query.bitwidths,
+        query.target.name(),
+        analytic.name()
+    );
+    let result = tune(&mut session, &query)?;
+    match result.winner() {
+        Some(w) => {
+            println!("\nwinner: {}", w.spec.name());
+            println!(
+                "  error: ER={:.6}  NMED={:.3e}  MRED={:.3e}  WCE={}  (satisfies {})",
+                w.metrics.er,
+                w.metrics.nmed,
+                w.metrics.mred,
+                w.metrics.mae,
+                result.budget.canonical()
+            );
+            match &w.hw {
+                Some(h) => println!(
+                    "  {:<5}: latency {:.2} ns (period {:.3} ns), resource {:.1}, power {:.4} mW",
+                    query.target.name(),
+                    h.latency_ns,
+                    h.period_ns,
+                    h.resource,
+                    h.total_power_mw()
+                ),
+                None => {
+                    println!("  (family has no gate-level mapping: error-only winner)")
+                }
+            }
+        }
+        None => println!(
+            "\nno feasible configuration: none of the {} candidates meets {}",
+            result.points.len(),
+            result.budget.canonical()
+        ),
+    }
+    let frontier = result.frontier_table();
+    println!(
+        "\nPareto frontier ({} of {} points non-dominated):",
+        frontier.rows.len(),
+        result.points.len()
+    );
+    println!("{}", frontier.to_text());
+    let pareto_path = cfg.results_dir.join("pareto.csv");
+    frontier.write(&pareto_path)?;
+    println!(
+        "{} points in {:.2} s ({} analytic, {} store hits, {} cache hits, {} evaluated{})",
+        result.points.len(),
+        result.wall.as_secs_f64(),
+        result.analytic_answers,
+        result.store_hits,
+        result.cache_hits,
+        result.jobs_evaluated,
+        if result.jobs_evaluated == 0 { " — zero pool dispatches" } else { "" }
+    );
+    println!("wrote {pareto_path:?}");
+    Ok(())
+}
+
 fn cmd_hw(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let n = args.req_u32("n")?;
@@ -557,6 +678,11 @@ fn cmd_figures(args: &Args) -> Result<()> {
         let t = report::seqcomb(&cfg)?;
         println!("{}", t.to_text());
     }
+    if run("pareto", which) {
+        println!("== tune trade-off scatter (E10) ==");
+        let t = report::pareto_fig(&cfg)?;
+        println!("{}", t.to_text());
+    }
     println!("CSV written to {:?}", cfg.results_dir);
     Ok(())
 }
@@ -601,7 +727,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // /metrics, and every eval response) — scripts assert on this line
     // instead of scraping the stderr fallback note.
     println!("backend: {}", server.backend_name());
-    println!("endpoints: GET /healthz /v1/designs /metrics | POST /v1/eval /v1/sweep /v1/shutdown");
+    println!(
+        "endpoints: GET /healthz /v1/designs /metrics | POST /v1/eval /v1/sweep /v1/tune /v1/shutdown"
+    );
     println!("drain: SIGINT/SIGTERM or POST /v1/shutdown");
     let summary = server.join();
     let t = &summary.telemetry;
@@ -847,7 +975,7 @@ fn cmd_estimate(args: &Args) -> Result<()> {
 }
 
 fn usage() -> &'static str {
-    "usage: segmul <eval|sweep|lower|hw|figures|serve|fleet|estimate> [options]
+    "usage: segmul <eval|sweep|tune|lower|hw|figures|serve|fleet|estimate> [options]
   eval     --n N [--t T] [--fix] [--mc|--exhaustive] [--samples S] [--backend cpu|pjrt]
   sweep    [--n N] [--mc] [--designs paper|accurate|baselines|oracle|netlist|all]
            [--workers W] [--samples S] [--seed S] [--results DIR] [--require-pjrt]
@@ -862,14 +990,26 @@ fn usage() -> &'static str {
             slice of the grid so N processes share one store with zero duplicate
             evaluations; --deterministic-report omits wall-clock fields so
             reports byte-compare across runs)
+  tune     --budget 'mred<=X|nmed<=X|wce<=X|psnr>=X' [--target fpga|asic]
+           [--n N] [--designs SET] [--fix true|false|both] [--workers W]
+           [--analytic off|auto|require] [--store DIR] [--samples S]
+           [--hw-vectors V] [--seed S] [--results DIR]
+           (accuracy-budget autotuner: prints the cheapest configuration
+            meeting the budget with its predicted error + latency/area/power,
+            and writes the non-dominated error × latency × resource × power
+            frontier to pareto.csv; --analytic defaults to require, so the
+            paper grid is answered in closed form with zero simulation —
+            quote the budget so the shell keeps the <= intact)
   lower    [--n N] [--designs SET] [--batch B] [--artifacts DIR]
            (emit lowered PJRT modules; default: the full sweep grid, batch 8192)
   hw       --n N [--t T] [--hw-vectors V]
-  figures  [fig2|mae|fig3a|fig3b|probprop|headline|seqcomb|all] [--results DIR]
+  figures  [fig2|mae|fig3a|fig3b|probprop|headline|seqcomb|pareto|all]
+           [--results DIR]
   serve    [--addr HOST:PORT] [--workers W] [--backend cpu|pjrt] [--store DIR]
            [--analytic off|auto|require] [--max-inflight K] [--deadline-ms D]
-           (HTTP evaluation service, default 127.0.0.1:8787: POST /v1/eval and
-            /v1/sweep (chunked ndjson stream), GET /healthz /v1/designs /metrics;
+           (HTTP evaluation service, default 127.0.0.1:8787: POST /v1/eval,
+            /v1/sweep (chunked ndjson stream), and /v1/tune (budget in, winner +
+            Pareto frontier out), GET /healthz /v1/designs /metrics;
             identical concurrent requests coalesce into one pool evaluation,
             typed 429 past the in-flight budget, 503 while draining, 504 past a
             request deadline; graceful drain on SIGINT/SIGTERM or POST
@@ -891,6 +1031,7 @@ fn run() -> Result<()> {
     match args.subcommand.as_deref() {
         Some("eval") => cmd_eval(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("tune") => cmd_tune(&args),
         Some("lower") => cmd_lower(&args),
         Some("hw") => cmd_hw(&args),
         Some("figures") => cmd_figures(&args),

@@ -20,7 +20,9 @@ use super::Multiplier;
 /// dropped (no compensation). `k = 0` is exact.
 #[derive(Clone, Copy, Debug)]
 pub struct TruncatedMul {
+    /// Operand bit-width.
     pub n: u32,
+    /// Truncated columns (partial-product bits in columns `< k` dropped).
     pub k: u32,
 }
 
@@ -50,8 +52,11 @@ impl Multiplier for TruncatedMul {
 /// columns `< vbl`. `(0, 0)` is exact; `(0, k)` equals [`TruncatedMul`].
 #[derive(Clone, Copy, Debug)]
 pub struct BrokenArrayMul {
+    /// Operand bit-width.
     pub n: u32,
+    /// Horizontal break level (rows dropped).
     pub hbl: u32,
+    /// Vertical break level (columns dropped).
     pub vbl: u32,
 }
 
@@ -81,6 +86,7 @@ impl Multiplier for BrokenArrayMul {
 /// piecewise-linear log/antilog. Exact when both operands are powers of two.
 #[derive(Clone, Copy, Debug)]
 pub struct MitchellLog {
+    /// Operand bit-width.
     pub n: u32,
 }
 
@@ -117,6 +123,7 @@ impl Multiplier for MitchellLog {
 /// `n` must be a power of two.
 #[derive(Clone, Copy, Debug)]
 pub struct Kulkarni2x2 {
+    /// Operand bit-width.
     pub n: u32,
 }
 

@@ -40,6 +40,7 @@ pub enum DispatchClass {
 }
 
 impl DispatchClass {
+    /// Report name of the tier.
     pub fn name(&self) -> &'static str {
         match self {
             DispatchClass::Batched => "batched",

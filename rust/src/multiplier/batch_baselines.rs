@@ -256,6 +256,7 @@ pub struct BitSlicedBitLevel {
 }
 
 impl BitSlicedBitLevel {
+    /// A bit-sliced oracle for `(n, t, fix)` (asserts `n <= 32`, `t < n`).
     pub fn new(n: u32, t: u32, fix: bool) -> Self {
         assert!(n >= 1 && n <= 32, "BitSlicedBitLevel supports 1 <= n <= 32");
         assert!(t < n, "splitting point must satisfy 0 <= t < n");

@@ -64,12 +64,16 @@ pub trait Multiplier: Sync {
 /// carry chain segmented at bit `t` (t = 0 degenerates to accurate).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SegmentedSeqMul {
+    /// Operand bit-width.
     pub n: u32,
+    /// Splitting point (`0` = accurate).
     pub t: u32,
+    /// Compensate by fixing the segmented carry to 1.
     pub fix_to_1: bool,
 }
 
 impl SegmentedSeqMul {
+    /// A segmented multiplier (asserts `n <= 32`, `t < n`).
     pub fn new(n: u32, t: u32, fix_to_1: bool) -> Self {
         assert!(n >= 1 && n <= 32, "SegmentedSeqMul supports 1 <= n <= 32");
         assert!(t < n, "splitting point must satisfy 0 <= t < n");
@@ -104,6 +108,7 @@ impl Multiplier for SegmentedSeqMul {
 /// The accurate reference multiplier.
 #[derive(Clone, Copy, Debug)]
 pub struct AccurateMul {
+    /// Operand bit-width.
     pub n: u32,
 }
 

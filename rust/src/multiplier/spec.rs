@@ -447,6 +447,7 @@ pub struct NetlistMul {
 }
 
 impl NetlistMul {
+    /// A cycle-accurate netlist evaluator for `(n, t, fix)`.
     pub fn new(n: u32, t: u32, fix: bool) -> Self {
         NetlistMul { c: seq_mult(n, t, fix && t >= 1), fix }
     }
@@ -500,6 +501,7 @@ pub enum DesignSet {
 }
 
 impl DesignSet {
+    /// The CLI name (`--designs ...`).
     pub fn name(&self) -> &'static str {
         match self {
             DesignSet::Paper => "paper",

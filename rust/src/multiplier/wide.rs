@@ -18,15 +18,19 @@ pub struct U512 {
 }
 
 impl U512 {
+    /// The zero value.
     pub const ZERO: U512 = U512 { limbs: [0; LIMBS] };
+    /// The one value.
     pub const ONE: U512 = {
         let mut l = [0u64; LIMBS];
         l[0] = 1;
         U512 { limbs: l }
     };
+    /// The all-ones value.
     pub const MAX: U512 = U512 { limbs: [u64::MAX; LIMBS] };
 
     #[inline]
+    /// Widen a `u64`.
     pub fn from_u64(v: u64) -> Self {
         let mut l = [0u64; LIMBS];
         l[0] = v;
@@ -34,6 +38,7 @@ impl U512 {
     }
 
     #[inline]
+    /// Widen a `u128`.
     pub fn from_u128(v: u128) -> Self {
         let mut l = [0u64; LIMBS];
         l[0] = v as u64;
@@ -42,11 +47,13 @@ impl U512 {
     }
 
     #[inline]
+    /// Limb `i` (little-endian).
     pub fn limb(&self, i: usize) -> u64 {
         self.limbs[i]
     }
 
     #[inline]
+    /// Whether every limb is zero.
     pub fn is_zero(&self) -> bool {
         self.limbs.iter().all(|&l| l == 0)
     }
@@ -93,6 +100,7 @@ impl U512 {
     }
 
     #[inline]
+    /// Modular addition (wraps at 2^512).
     pub fn wrapping_add(&self, rhs: &Self) -> Self {
         let mut out = [0u64; LIMBS];
         let mut carry = 0u64;
@@ -106,6 +114,7 @@ impl U512 {
     }
 
     #[inline]
+    /// Modular subtraction (wraps at 2^512).
     pub fn wrapping_sub(&self, rhs: &Self) -> Self {
         let mut out = [0u64; LIMBS];
         let mut borrow = 0u64;
@@ -119,6 +128,7 @@ impl U512 {
     }
 
     #[inline]
+    /// Left shift by `sh` bits (zero-fill).
     pub fn shl(&self, sh: u32) -> Self {
         if sh >= 512 {
             return Self::ZERO;
@@ -140,6 +150,7 @@ impl U512 {
     }
 
     #[inline]
+    /// Logical right shift by `sh` bits.
     pub fn shr(&self, sh: u32) -> Self {
         if sh >= 512 {
             return Self::ZERO;
@@ -197,6 +208,7 @@ impl U512 {
         acc
     }
 
+    /// Hexadecimal rendering (debug/report use).
     pub fn to_hex(&self) -> String {
         let top = ((self.bits().max(1) + 63) / 64) as usize;
         let mut s = String::new();

@@ -25,7 +25,9 @@ use super::{pack_bits_u512, unpack_bits_u512};
 
 /// A generated sequential multiplier with its interface map.
 pub struct SeqMultCircuit {
+    /// The generated netlist.
     pub nl: Netlist,
+    /// Operand bit-width.
     pub n: u32,
     /// Splitting point; 0 = accurate (no segmentation hardware).
     pub t: u32,

@@ -12,18 +12,26 @@ pub struct Net(pub u32);
 /// Combinational gate kinds (2-input unless noted).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum GateKind {
+    /// Inverter (1-input).
     Not,
+    /// AND.
     And,
+    /// OR.
     Or,
+    /// XOR.
     Xor,
+    /// NAND.
     Nand,
+    /// NOR.
     Nor,
+    /// XNOR.
     Xnor,
     /// 2:1 multiplexer: `sel ? b : a` (inputs ordered `[a, b, sel]`).
     Mux,
 }
 
 impl GateKind {
+    /// Number of inputs the gate takes.
     pub fn fanin(&self) -> usize {
         match self {
             GateKind::Not => 1,
@@ -36,6 +44,7 @@ impl GateKind {
 /// What drives a net.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Driver {
+    /// A constant 0/1 net.
     Const(bool),
     /// Primary input (index into the input list).
     Input(u32),
@@ -50,8 +59,11 @@ pub enum Driver {
 /// is modeled by the simulator's reset).
 #[derive(Clone, Debug)]
 pub struct FlipFlop {
+    /// Output (Q) net.
     pub q: Net,
+    /// Data (D) input net.
     pub d: Net,
+    /// Instance name.
     pub name: String,
 }
 
@@ -60,6 +72,7 @@ pub struct FlipFlop {
 /// models for critical-path reasoning.
 #[derive(Clone, Debug)]
 pub struct CarryChain {
+    /// Chain name.
     pub name: String,
     /// Per-bit carry-out nets (chain length = couts.len()).
     pub couts: Vec<Net>,
@@ -72,17 +85,24 @@ pub struct CarryChain {
 /// An immutable, levelized netlist.
 #[derive(Clone, Debug)]
 pub struct Netlist {
+    /// Circuit name.
     pub name: String,
+    /// Per-net driver, indexed by net id.
     pub drivers: Vec<Driver>,
+    /// Primary-input nets, in declaration order.
     pub inputs: Vec<Net>,
+    /// Named primary outputs.
     pub outputs: Vec<(String, Net)>,
+    /// Flip-flops, in declaration order.
     pub ffs: Vec<FlipFlop>,
+    /// Tagged carry chains.
     pub carry_chains: Vec<CarryChain>,
     /// Gate nets in topological (levelized) order.
     pub topo: Vec<Net>,
 }
 
 impl Netlist {
+    /// Combinational gates in the netlist.
     pub fn gate_count(&self) -> usize {
         self.drivers
             .iter()
@@ -90,6 +110,7 @@ impl Netlist {
             .count()
     }
 
+    /// Flip-flops in the netlist.
     pub fn ff_count(&self) -> usize {
         self.ffs.len()
     }
@@ -131,6 +152,7 @@ impl Netlist {
             .collect()
     }
 
+    /// The net driving primary output `name`.
     pub fn find_output(&self, name: &str) -> Option<Net> {
         self.outputs
             .iter()
@@ -151,6 +173,7 @@ pub struct NetlistBuilder {
 }
 
 impl NetlistBuilder {
+    /// An empty builder for circuit `name`.
     pub fn new(name: &str) -> Self {
         Self {
             name: name.to_string(),
@@ -169,10 +192,12 @@ impl NetlistBuilder {
         net
     }
 
+    /// A constant-`v` net.
     pub fn constant(&mut self, v: bool) -> Net {
         self.push(Driver::Const(v))
     }
 
+    /// A fresh primary input.
     pub fn input(&mut self) -> Net {
         let idx = self.inputs.len() as u32;
         let net = self.push(Driver::Input(idx));
@@ -185,6 +210,7 @@ impl NetlistBuilder {
         (0..width).map(|_| self.input()).collect()
     }
 
+    /// A gate of `kind` over `ins` (fanin-checked).
     pub fn gate(&mut self, kind: GateKind, ins: &[Net]) -> Net {
         assert_eq!(ins.len(), kind.fanin(), "{kind:?} fanin mismatch");
         for n in ins {
@@ -193,15 +219,19 @@ impl NetlistBuilder {
         self.push(Driver::Gate { kind, ins: ins.to_vec() })
     }
 
+    /// `!a`
     pub fn not(&mut self, a: Net) -> Net {
         self.gate(GateKind::Not, &[a])
     }
+    /// `a & b`
     pub fn and2(&mut self, a: Net, b: Net) -> Net {
         self.gate(GateKind::And, &[a, b])
     }
+    /// `a | b`
     pub fn or2(&mut self, a: Net, b: Net) -> Net {
         self.gate(GateKind::Or, &[a, b])
     }
+    /// `a ^ b`
     pub fn xor2(&mut self, a: Net, b: Net) -> Net {
         self.gate(GateKind::Xor, &[a, b])
     }
@@ -221,10 +251,12 @@ impl NetlistBuilder {
         q
     }
 
+    /// A vector of flip-flops named `name[i]`, LSB first.
     pub fn ff_bus(&mut self, name: &str, width: u32) -> Vec<Net> {
         (0..width).map(|i| self.ff(&format!("{name}[{i}]"))).collect()
     }
 
+    /// Connect flip-flop output `q`'s data input to `d`.
     pub fn connect_ff(&mut self, q: Net, d: Net) {
         let idx = match self.drivers[q.0 as usize] {
             Driver::Ff(i) => i as usize,
@@ -234,6 +266,7 @@ impl NetlistBuilder {
         self.ff_d_pending[idx] = Some(d);
     }
 
+    /// Declare `net` as primary output `name`.
     pub fn output(&mut self, name: &str, net: Net) {
         self.outputs.push((name.to_string(), net));
     }
@@ -244,6 +277,7 @@ impl NetlistBuilder {
         self.drivers[net.0 as usize].clone()
     }
 
+    /// Tag `couts` (LSB first) as carry chain `name` for the tech models.
     pub fn tag_carry_chain(&mut self, name: &str, couts: &[Net]) {
         self.carry_chains.push(CarryChain {
             name: name.to_string(),

@@ -61,6 +61,7 @@ pub fn eval_comb(nl: &Netlist, inputs: &[u64], ff_state: &[u64]) -> Vec<u64> {
 
 /// Cycle-accurate sequential simulator with toggle counting.
 pub struct SeqSim<'a> {
+    /// The netlist under simulation.
     pub nl: &'a Netlist,
     /// Current FF state (one word per FF; 64 vectors).
     pub state: Vec<u64>,
@@ -76,6 +77,7 @@ pub struct SeqSim<'a> {
 }
 
 impl<'a> SeqSim<'a> {
+    /// A simulator with cleared state, values, and toggle counts.
     pub fn new(nl: &'a Netlist) -> Self {
         Self {
             nl,

@@ -2,25 +2,32 @@
 
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
+
+use crate::util::fsio::write_atomic;
 
 /// An in-memory table with a header row.
 #[derive(Clone, Debug, Default)]
 pub struct Table {
+    /// Column names.
     pub header: Vec<String>,
+    /// Data rows (stringified cells).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// An empty table with `header` columns.
     pub fn new(header: &[&str]) -> Self {
         Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row.
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "row width mismatch");
         self.rows.push(cells);
     }
 
+    /// Render as CSV text (header + rows).
     pub fn to_csv(&self) -> String {
         let mut out = String::new();
         out.push_str(&self.header.join(","));
@@ -59,11 +66,12 @@ impl Table {
         out
     }
 
+    /// Write the CSV rendering atomically (tmp + rename, so a crash or a
+    /// concurrent reader never sees a torn file). I/O failures surface as
+    /// typed [`crate::error::SegmulError::Io`] through the anyhow result.
     pub fn write(&self, path: &Path) -> Result<()> {
-        if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        std::fs::write(path, self.to_csv()).with_context(|| format!("writing {path:?}"))
+        write_atomic(path, self.to_csv().as_bytes())?;
+        Ok(())
     }
 }
 

@@ -121,8 +121,11 @@ fn hw_row(n: u32, variant: &str, resource_name: &str, h: &HwFigures) -> Vec<Stri
 
 /// Result pair for one bit-width of the hardware sweep.
 pub struct HwPair {
+    /// Operand bit-width.
     pub n: u32,
+    /// The accurate reference's figures.
     pub accurate: HwFigures,
+    /// The approximate design's figures.
     pub approx: HwFigures,
 }
 
@@ -298,15 +301,33 @@ pub fn seqcomb(cfg: &Config) -> Result<Table> {
     Ok(table)
 }
 
+/// E10 / tune: the accuracy × latency trade-off scatter behind `segmul
+/// tune` — every paper-grid point at the hardware bit-widths, answered
+/// in closed form (zero simulation), with the non-dominated set flagged
+/// in the `frontier` column. The budget columns use the headline
+/// MRED ≤ 1e-3 target; the frontier itself is budget-independent.
+pub fn pareto_fig(cfg: &Config) -> Result<Table> {
+    use crate::api::Session;
+    use crate::coordinator::AnalyticMode;
+    use crate::tune::{tune, Budget, TuneQuery};
+    let query = TuneQuery::new(Budget::mred(1e-3))
+        .bitwidths(cfg.hw_bitwidths.clone())
+        .workload(cfg.exhaustive_max_n, cfg.mc_samples)
+        .hw_vectors(cfg.hw_vectors)
+        .hw_seed(cfg.seed);
+    let mut session = Session::builder().workers(1).analytic(AnalyticMode::Require).build()?;
+    let result = tune(&mut session, &query)?;
+    let table = result.points_table();
+    table.write(&cfg.results_dir.join("pareto_tradeoff.csv"))?;
+    Ok(table)
+}
+
 /// Write a markdown snippet summarizing a table (used by EXPERIMENTS.md
 /// regeneration).
 pub fn write_markdown(path: &Path, title: &str, table: &Table) -> Result<()> {
     let mut md = format!("## {title}\n\n```\n{}\n```\n", table.to_text());
     md.push('\n');
-    if let Some(parent) = path.parent() {
-        std::fs::create_dir_all(parent)?;
-    }
-    std::fs::write(path, md)?;
+    crate::util::fsio::write_atomic(path, md.as_bytes())?;
     Ok(())
 }
 
@@ -358,6 +379,16 @@ mod tests {
         for pair in hw_sweep(&cfg, false) {
             assert!(pair.approx.latency_ns < pair.accurate.latency_ns, "n={}", pair.n);
         }
+    }
+
+    #[test]
+    fn pareto_fig_scatter_flags_a_frontier() {
+        let cfg = tiny_cfg();
+        let t = pareto_fig(&cfg).unwrap();
+        assert_eq!(t.rows.len(), 24, "paper grid at n=4,8: 2n points each");
+        let fcol = t.header.iter().position(|h| h == "frontier").unwrap();
+        assert!(t.rows.iter().any(|r| r[fcol] == "true"));
+        assert!(cfg.results_dir.join("pareto_tradeoff.csv").exists());
     }
 
     #[test]

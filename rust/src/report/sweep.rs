@@ -78,8 +78,11 @@ pub fn sweep_table(outcomes: &[SweepOutcome], deterministic: bool) -> Result<Tab
 
 /// Aggregate run facts for the JSON summary.
 pub struct SweepRunInfo {
+    /// Worker threads used.
     pub workers: usize,
+    /// Grid points served from the in-memory cache.
     pub cache_hits: u64,
+    /// Grid points actually evaluated.
     pub jobs_evaluated: u64,
     /// Grid points served by closed-form analytic models instead of
     /// simulation (counted separately from `cache_hits`).
@@ -87,7 +90,9 @@ pub struct SweepRunInfo {
     /// Grid points answered from the persistent result store's committed
     /// blobs (counted separately from `cache_hits`).
     pub store_hits: u64,
+    /// Total sweep wall time.
     pub wall: Duration,
+    /// Backend name.
     pub backend: String,
     /// Kernel-dispatch audit: `(design name, dispatch class name)` per
     /// evaluated design (`batched` / `pjrt` / `scalar`), so the shipped
@@ -191,11 +196,10 @@ pub fn write_sweep_reports(
     outcomes: &[SweepOutcome],
     info: &SweepRunInfo,
 ) -> Result<(PathBuf, PathBuf)> {
-    std::fs::create_dir_all(results_dir)?;
     let csv_path = results_dir.join("sweep.csv");
     sweep_table(outcomes, info.deterministic)?.write(&csv_path)?;
     let json_path = results_dir.join("BENCH_sweep.json");
-    std::fs::write(&json_path, sweep_json(outcomes, info)?.to_string_pretty())?;
+    crate::util::fsio::write_atomic(&json_path, sweep_json(outcomes, info)?.to_string_pretty().as_bytes())?;
     Ok((csv_path, json_path))
 }
 

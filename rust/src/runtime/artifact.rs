@@ -39,6 +39,7 @@ pub enum ModuleKind {
 }
 
 impl ModuleKind {
+    /// Parse a manifest `kind` field.
     pub fn parse(s: &str) -> Result<Self, String> {
         match s {
             "stats" => Ok(ModuleKind::Stats),
@@ -51,7 +52,9 @@ impl ModuleKind {
 /// One AOT-lowered HLO module (legacy, segmented family only).
 #[derive(Clone, Debug)]
 pub struct ModuleSpec {
+    /// Module name (manifest key).
     pub name: String,
+    /// Stats or prod variant.
     pub kind: ModuleKind,
     /// Operand bit-width the module was lowered for.
     pub n: u32,
@@ -67,6 +70,7 @@ pub struct ModuleSpec {
 /// program computing `design`'s approximate products over a static batch.
 #[derive(Clone, Debug)]
 pub struct LoweredSpec {
+    /// Module name (manifest key).
     pub name: String,
     /// The registry design this module computes.
     pub design: MultiplierSpec,
@@ -81,9 +85,11 @@ pub struct LoweredSpec {
 /// Parsed `manifest.json`.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// The artifacts directory the manifest was loaded from.
     pub dir: PathBuf,
     /// Manifest schema version (1 = legacy HLO-only, 2 adds `lowered`).
     pub schema: u64,
+    /// Static batch size shared by every module.
     pub batch: usize,
     /// Legacy HLO modules (may be empty in a `segmul lower` manifest).
     pub modules: Vec<ModuleSpec>,

@@ -26,9 +26,13 @@ use super::lower::{LoweredExec, Program};
 /// Execution telemetry for one runtime instance.
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
+    /// Module executions performed.
     pub executions: u64,
+    /// Operand pairs evaluated.
     pub pairs_evaluated: u64,
+    /// Cumulative execution wall time.
     pub exec_time: Duration,
+    /// Cumulative compile/load wall time.
     pub compile_time: Duration,
 }
 
@@ -129,6 +133,7 @@ impl Runtime {
         v
     }
 
+    /// Whether a legacy module for `(n, kind)` is loaded.
     pub fn has(&self, n: u32, kind: ModuleKind) -> bool {
         self.modules.contains_key(&(n, kind))
     }

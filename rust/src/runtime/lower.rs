@@ -55,18 +55,27 @@ pub type Reg = u32;
 pub enum Op {
     /// Broadcast an immediate into every lane.
     Const(u64),
+    /// Lane-wise wrapping multiply.
     Mul(Reg, Reg),
+    /// Lane-wise wrapping add.
     Add(Reg, Reg),
+    /// Lane-wise wrapping subtract.
     Sub(Reg, Reg),
+    /// Lane-wise bitwise AND.
     And(Reg, Reg),
+    /// Lane-wise bitwise OR.
     Or(Reg, Reg),
+    /// Lane-wise bitwise XOR.
     Xor(Reg, Reg),
     /// Shift by a lowering-time immediate (`imm < 64`).
     Shl(Reg, u32),
+    /// Shift right by a lowering-time immediate (`imm < 64`).
     Shr(Reg, u32),
     /// Shift by a lane-wise register amount (masked `& 63`).
     Shlv(Reg, Reg),
+    /// Shift right by a lane-wise register amount (masked `& 63`).
     Shrv(Reg, Reg),
+    /// Lane-wise bitwise NOT.
     Not(Reg),
     /// Two's-complement negation — turns a 0/1 lane into a 0/all-ones mask.
     Neg(Reg),
@@ -81,7 +90,9 @@ pub enum Op {
 pub struct Program {
     /// Operand bit-width the module was lowered for (operands `< 2^n`).
     pub n: u32,
+    /// Straight-line ops in execution order.
     pub ops: Vec<Op>,
+    /// Register holding the per-lane result.
     pub ret: Reg,
 }
 
@@ -491,11 +502,13 @@ pub struct LoweredExec {
 }
 
 impl LoweredExec {
+    /// An executor with scratch registers sized for `prog`.
     pub fn new(prog: Program) -> Self {
         let slots = (2 + prog.ops.len()) * TILE;
         LoweredExec { prog, regs: vec![0; slots] }
     }
 
+    /// The program this executor runs.
     pub fn program(&self) -> &Program {
         &self.prog
     }

@@ -15,6 +15,7 @@ use crate::util::json::Json;
 /// A fully read response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// HTTP status code.
     pub status: u16,
     /// Header name (lowercased) / value pairs.
     pub headers: Vec<(String, String)>,
@@ -23,15 +24,18 @@ pub struct Response {
 }
 
 impl Response {
+    /// First header value for `name` (case-insensitive).
     pub fn header(&self, name: &str) -> Option<&str> {
         let name = name.to_ascii_lowercase();
         self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
     }
 
+    /// Body as UTF-8 text (lossy).
     pub fn text(&self) -> String {
         String::from_utf8_lossy(&self.body).into_owned()
     }
 
+    /// Body parsed as JSON (typed error otherwise).
     pub fn json(&self) -> Result<Json, SegmulError> {
         Json::parse(&self.text())
             .map_err(|e| SegmulError::Io(format!("response body is not JSON: {e}")))

@@ -43,7 +43,9 @@ pub fn class_key(job: &EvalJob, backend: &str, batch: usize) -> String {
 /// the drained batch) of every request it answers.
 #[derive(Clone, Debug)]
 pub struct Group {
+    /// The job to dispatch once.
     pub job: EvalJob,
+    /// Indexes (into the drained batch) of the requests it answers.
     pub requests: Vec<usize>,
 }
 

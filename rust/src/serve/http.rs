@@ -38,11 +38,13 @@ impl Default for Limits {
 /// One parsed request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Request method (uppercase).
     pub method: String,
     /// Path only (any `?query` suffix is split off and ignored).
     pub path: String,
     /// Header name (lowercased) / value pairs, in arrival order.
     pub headers: Vec<(String, String)>,
+    /// Raw body bytes.
     pub body: Vec<u8>,
 }
 

@@ -23,9 +23,13 @@ const LATENCY_RING: usize = 4096;
 /// Aggregate server counters, shared by every connection thread.
 #[derive(Default)]
 pub struct ServerMetrics {
+    /// Requests accepted for processing.
     pub requests_total: AtomicU64,
+    /// 2xx responses sent.
     pub responses_2xx: AtomicU64,
+    /// 4xx responses sent.
     pub responses_4xx: AtomicU64,
+    /// 5xx responses sent.
     pub responses_5xx: AtomicU64,
     /// Admission rejections: in-flight budget exhausted.
     pub rejected_429: AtomicU64,

@@ -5,7 +5,9 @@
 //! workload to `/v1/eval` and get the same [`crate::error::ErrorMetrics`]
 //! a local `segmul sweep` would compute — bit-identically, through the
 //! same session layers (result cache, analytic registry, persistent
-//! store).
+//! store). `/v1/tune` runs the [`crate::tune`] autotuner the same way:
+//! an accuracy budget in, the winning configuration and Pareto frontier
+//! out, with identical concurrent queries coalesced into one run.
 //!
 //! ## Architecture
 //!
@@ -87,7 +89,9 @@ pub struct ServeConfig {
     pub addr: String,
     /// Worker threads for the session pool (`None`: session default).
     pub workers: Option<usize>,
+    /// Evaluation backend for the engine session.
     pub backend: BackendChoice,
+    /// Answer-source policy for the engine session.
     pub analytic: AnalyticMode,
     /// Persistent result store directory, if any.
     pub store: Option<PathBuf>,
@@ -102,6 +106,7 @@ pub struct ServeConfig {
     pub max_inflight: usize,
     /// Deadline applied to requests that don't carry `deadline_ms`.
     pub default_deadline: Duration,
+    /// Request-size limits.
     pub limits: Limits,
     /// Fault-injection plan shared with the session (tests and chaos
     /// runs; `None` falls back to `SEGMUL_FAULTS`). The supervisor
@@ -158,9 +163,25 @@ pub(crate) struct SweepWork {
     pub cancelled: Arc<AtomicBool>,
 }
 
+/// A reply to one tune request: the autotuner's full result plus the
+/// degraded flag (always `false` today — tune work is rejected, not
+/// degraded, while the pool is unhealthy — kept for wire symmetry with
+/// eval answers).
+pub(crate) type TuneReply = Result<(Box<crate::tune::TuneResult>, bool), SegmulError>;
+
+/// One queued tune request. Identical concurrent queries (by
+/// [`crate::tune::TuneQuery::canonical`]) coalesce into one autotuner
+/// run whose result every waiter shares.
+pub(crate) struct TuneWork {
+    pub query: crate::tune::TuneQuery,
+    pub reply: SyncSender<TuneReply>,
+    pub cancelled: Arc<AtomicBool>,
+}
+
 pub(crate) enum Work {
     Eval(EvalWork),
     Sweep(SweepWork),
+    Tune(TuneWork),
 }
 
 /// Engine → connection-thread stream events for `/v1/sweep`. The `Row`
@@ -246,8 +267,11 @@ impl Shared {
 /// Drain summary returned by [`Server::join`].
 #[derive(Clone, Debug)]
 pub struct ServeSummary {
+    /// Final session telemetry.
     pub telemetry: SessionTelemetry,
+    /// Total requests accepted over the server's life.
     pub requests_total: u64,
+    /// Backend that served the run.
     pub backend: String,
     /// The final `/metrics` document.
     pub metrics_doc: String,
@@ -483,6 +507,7 @@ fn engine_cycles(shared: &Arc<Shared>, mut session: Session) {
         }
         let mut evals: Vec<EvalWork> = Vec::new();
         let mut sweeps: Vec<SweepWork> = Vec::new();
+        let mut tunes: Vec<TuneWork> = Vec::new();
         for work in batch {
             match work {
                 Work::Eval(e) => {
@@ -495,9 +520,15 @@ fn engine_cycles(shared: &Arc<Shared>, mut session: Session) {
                         sweeps.push(s);
                     }
                 }
+                Work::Tune(t) => {
+                    if !t.cancelled.load(Ordering::SeqCst) {
+                        tunes.push(t);
+                    }
+                }
             }
         }
         run_evals(shared, &mut session, &evals, &mut health);
+        run_tunes(shared, &mut session, tunes, &mut health);
         run_sweeps(shared, &mut session, sweeps, &mut health);
         *lock_clean(&shared.telemetry) = session.telemetry();
     }
@@ -575,6 +606,54 @@ fn run_evals(shared: &Arc<Shared>, session: &mut Session, evals: &[EvalWork], he
     }
 }
 
+/// Answer the drained tune requests, coalescing identical queries (by
+/// canonical identity) into one autotuner run. The tuner itself goes
+/// through the session's answer-source ladder, so its grid points hit
+/// the same cache/store/analytic layers an eval would. While degraded,
+/// tune work is rejected with a typed 503 — a tuning decision spanning
+/// a whole grid should not be made from a limping pool.
+fn run_tunes(
+    shared: &Arc<Shared>,
+    session: &mut Session,
+    tunes: Vec<TuneWork>,
+    health: &mut EngineHealth,
+) {
+    if tunes.is_empty() {
+        return;
+    }
+    let mut groups: Vec<(String, Vec<TuneWork>)> = Vec::new();
+    for work in tunes {
+        let key = work.query.canonical();
+        match groups.iter_mut().find(|(k, _)| *k == key) {
+            Some((_, members)) => members.push(work),
+            None => groups.push((key, vec![work])),
+        }
+    }
+    for (_, members) in groups {
+        if members.iter().all(|w| w.cancelled.load(Ordering::SeqCst)) {
+            continue;
+        }
+        shared.metrics.coalesce_requests.fetch_add(members.len() as u64, Ordering::Relaxed);
+        let result: TuneReply = if shared.degraded.load(Ordering::SeqCst) {
+            Err(degraded_error())
+        } else {
+            match crate::tune::tune(session, &members[0].query) {
+                Ok(r) => {
+                    health.record_ok(shared);
+                    Ok((Box::new(r), false))
+                }
+                Err(e) => {
+                    health.record_failure(shared, &e);
+                    Err(e)
+                }
+            }
+        };
+        for w in &members {
+            let _ = w.reply.send(result.clone());
+        }
+    }
+}
+
 /// Advance each live sweep by one grid point; unfinished sweeps go back
 /// to the queue so interactive evals interleave with long grids. While
 /// degraded, grid points are answered in closed form where eligible and
@@ -634,6 +713,13 @@ fn degraded_cycle(shared: &Arc<Shared>) {
                 let reply =
                     closed_form_answer(shared, &e.job).unwrap_or_else(|| Err(degraded_error()));
                 let _ = e.reply.send(reply);
+            }
+            Work::Tune(t) => {
+                if t.cancelled.load(Ordering::SeqCst) {
+                    continue;
+                }
+                // A grid-wide tuning decision needs a healthy pool.
+                let _ = t.reply.send(Err(degraded_error()));
             }
             Work::Sweep(mut s) => {
                 if s.cancelled.load(Ordering::SeqCst) {
@@ -728,6 +814,7 @@ pub fn install_drain_signals() {
 }
 
 #[cfg(not(unix))]
+/// No-op on non-Unix targets.
 pub fn install_drain_signals() {}
 
 #[cfg(test)]

@@ -7,6 +7,7 @@
 //! | GET    | `/metrics`     | —                   | text `key value` counters         |
 //! | POST   | `/v1/eval`     | design + workload   | one answered job (JSON)           |
 //! | POST   | `/v1/sweep`    | grid request        | chunked ndjson stream             |
+//! | POST   | `/v1/tune`     | budget + grid       | winner + Pareto frontier (JSON)   |
 //! | POST   | `/v1/shutdown` | —                   | `{"status":"draining"}`           |
 //!
 //! Every error path funnels through [`wire::error_wire`], so the full
@@ -26,7 +27,7 @@ use crate::multiplier::MultiplierSpec;
 use crate::util::json::{obj, Json};
 
 use super::http::{self, ChunkedWriter, Request};
-use super::{wire, EvalWork, Shared, SweepEvent, SweepWork, Work};
+use super::{wire, EvalWork, Shared, SweepEvent, SweepWork, TuneWork, Work};
 
 /// Serve one connection: parse, dispatch, record latency + status.
 pub(crate) fn handle(shared: &Arc<Shared>, mut stream: TcpStream) {
@@ -57,9 +58,10 @@ fn serve_one(shared: &Arc<Shared>, stream: &mut TcpStream) -> u16 {
         ("GET", "/metrics") => metrics_doc(shared, stream),
         ("POST", "/v1/eval") => eval(shared, stream, &req),
         ("POST", "/v1/sweep") => sweep(shared, stream, &req),
+        ("POST", "/v1/tune") => tune(shared, stream, &req),
         ("POST", "/v1/shutdown") => shutdown(shared, stream),
         (m, p @ ("/healthz" | "/v1/designs" | "/metrics" | "/v1/eval" | "/v1/sweep"
-        | "/v1/shutdown")) => {
+        | "/v1/tune" | "/v1/shutdown")) => {
             write_error(stream, &SegmulError::serve(405, format!("method {m} not allowed on {p}")))
         }
         (_, p) => write_error(stream, &SegmulError::serve(404, format!("no route {p:?}"))),
@@ -154,6 +156,50 @@ fn eval(shared: &Arc<Shared>, stream: &mut TcpStream, req: &Request) -> u16 {
                 &SegmulError::serve(
                     504,
                     format!("deadline of {} ms elapsed before the engine answered", deadline.as_millis()),
+                ),
+            )
+        }
+        Err(RecvTimeoutError::Disconnected) => {
+            write_error(stream, &SegmulError::serve(500, "engine exited before answering"))
+        }
+    }
+}
+
+fn tune(shared: &Arc<Shared>, stream: &mut TcpStream, req: &Request) -> u16 {
+    let parsed = match wire::parse_tune(
+        &req.body,
+        shared.cfg.mc_samples,
+        shared.cfg.exhaustive_max_n,
+        shared.cfg.seed,
+    ) {
+        Ok(p) => p,
+        Err(e) => return write_error(stream, &e),
+    };
+    let deadline = parsed.deadline.unwrap_or(shared.cfg.default_deadline);
+    let (reply, answer) = sync_channel(1);
+    let cancelled = Arc::new(AtomicBool::new(false));
+    let work = TuneWork { query: parsed.query, reply, cancelled: cancelled.clone() };
+    if let Err(e) = shared.admit(Work::Tune(work)) {
+        return write_error(stream, &e);
+    }
+    match answer.recv_timeout(deadline) {
+        Ok(Ok((result, degraded))) => {
+            let body = wire::tune_json(&result, shared.backend_name(), degraded);
+            let _ = http::write_json(stream, 200, &body);
+            200
+        }
+        Ok(Err(e)) => write_error(stream, &e),
+        Err(RecvTimeoutError::Timeout) => {
+            cancelled.store(true, Ordering::SeqCst);
+            shared.metrics.deadline_timeouts.fetch_add(1, Ordering::Relaxed);
+            write_error(
+                stream,
+                &SegmulError::serve(
+                    504,
+                    format!(
+                        "deadline of {} ms elapsed before the tuner answered",
+                        deadline.as_millis()
+                    ),
                 ),
             )
         }

@@ -23,18 +23,36 @@ use crate::util::json::{obj, Json};
 /// per-request deadline.
 #[derive(Clone, Debug)]
 pub struct EvalRequest {
+    /// The design + workload to evaluate.
     pub job: crate::coordinator::EvalJob,
+    /// Per-request deadline (`None`: server default).
     pub deadline: Option<Duration>,
 }
 
 /// One `/v1/sweep` request: a design-set grid streamed back as ndjson.
 #[derive(Clone, Debug)]
 pub struct SweepRequest {
+    /// Design families to sweep.
     pub designs: DesignSet,
+    /// Bit-widths to sweep.
     pub bitwidths: Vec<u32>,
+    /// MC sample budget per point.
     pub mc_samples: u64,
+    /// Force Monte-Carlo even at exhaustive-feasible widths.
     pub force_mc: bool,
+    /// RNG seed (`None`: server default).
     pub seed: Option<u64>,
+    /// Per-request deadline (`None`: server default).
+    pub deadline: Option<Duration>,
+}
+
+/// One `/v1/tune` request: an accuracy budget plus grid constraints,
+/// answered with the winner and the Pareto frontier.
+#[derive(Clone, Debug)]
+pub struct TuneRequest {
+    /// The autotuner query (budget, target, grid constraints).
+    pub query: crate::tune::TuneQuery,
+    /// Per-request deadline (`None`: server default).
     pub deadline: Option<Duration>,
 }
 
@@ -70,6 +88,28 @@ fn opt_u64(j: &Json, field: &str) -> Result<Option<u64>, SegmulError> {
 
 fn deadline_of(j: &Json) -> Result<Option<Duration>, SegmulError> {
     Ok(opt_u64(j, "deadline_ms")?.map(Duration::from_millis))
+}
+
+/// A `bitwidths` array field, shared by `/v1/sweep` and `/v1/tune`.
+fn bitwidths_of(j: &Json, default: Vec<u32>) -> Result<Vec<u32>, SegmulError> {
+    match j.get("bitwidths") {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Arr(a)) => {
+            let mut out = Vec::with_capacity(a.len());
+            for v in a {
+                let n = v
+                    .as_u64()
+                    .and_then(|n| u32::try_from(n).ok())
+                    .ok_or_else(|| bad("field 'bitwidths' must be an array of integers"))?;
+                out.push(n);
+            }
+            if out.is_empty() {
+                return Err(bad("field 'bitwidths' must not be empty"));
+            }
+            Ok(out)
+        }
+        Some(_) => Err(bad("field 'bitwidths' must be an array of integers")),
+    }
 }
 
 /// Parse a `/v1/eval` body:
@@ -132,24 +172,7 @@ pub fn parse_sweep(body: &[u8], default_samples: u64) -> Result<SweepRequest, Se
         Some(Json::Str(s)) => DesignSet::parse(s)?,
         Some(_) => return Err(bad("field 'designs' must be a design-set name string")),
     };
-    let bitwidths = match j.get("bitwidths") {
-        None | Some(Json::Null) => vec![4, 8],
-        Some(Json::Arr(a)) => {
-            let mut out = Vec::with_capacity(a.len());
-            for v in a {
-                let n = v
-                    .as_u64()
-                    .and_then(|n| u32::try_from(n).ok())
-                    .ok_or_else(|| bad("field 'bitwidths' must be an array of integers"))?;
-                out.push(n);
-            }
-            if out.is_empty() {
-                return Err(bad("field 'bitwidths' must not be empty"));
-            }
-            out
-        }
-        Some(_) => return Err(bad("field 'bitwidths' must be an array of integers")),
-    };
+    let bitwidths = bitwidths_of(&j, vec![4, 8])?;
     Ok(SweepRequest {
         designs,
         bitwidths,
@@ -162,6 +185,74 @@ pub fn parse_sweep(body: &[u8], default_samples: u64) -> Result<SweepRequest, Se
         seed: opt_u64(&j, "seed")?,
         deadline: deadline_of(&j)?,
     })
+}
+
+/// Parse a `/v1/tune` body:
+/// `{"budget":"mred<=1e-3","target":"fpga","designs":"paper",
+///   "bitwidths":[4,8],"fix":true,"samples":N,"hw_vectors":V,"seed":S,
+///   "deadline_ms":D}` — everything but `budget` is optional; the
+/// defaults mirror `segmul tune` with the server's configured workload
+/// split, over a small `[4, 8]` grid (state `bitwidths` for the full
+/// paper grid). Budget grammar errors keep their typed `config` kind
+/// (still 400 on the wire).
+pub fn parse_tune(
+    body: &[u8],
+    default_samples: u64,
+    exhaustive_max_n: u32,
+    default_seed: u64,
+) -> Result<TuneRequest, SegmulError> {
+    use crate::tune::{Budget, TechTarget, TuneQuery};
+    let j = parse_body(body)?;
+    if !matches!(j, Json::Obj(_)) {
+        return Err(bad("request body must be a JSON object"));
+    }
+    let budget = j.get("budget").and_then(Json::as_str).ok_or_else(|| {
+        bad("missing string field 'budget' (mred<=X | nmed<=X | wce<=X | psnr>=X)")
+    })?;
+    let budget = Budget::parse(budget)?;
+    let target = match j.get("target") {
+        None | Some(Json::Null) => TechTarget::Fpga,
+        Some(Json::Str(s)) => TechTarget::parse(s)?,
+        Some(_) => return Err(bad("field 'target' must be \"fpga\" or \"asic\"")),
+    };
+    let designs = match j.get("designs") {
+        None | Some(Json::Null) => DesignSet::Paper,
+        Some(Json::Str(s)) => DesignSet::parse(s)?,
+        Some(_) => return Err(bad("field 'designs' must be a design-set name string")),
+    };
+    let fix = match j.get("fix") {
+        None | Some(Json::Null) => None,
+        Some(Json::Bool(b)) => Some(*b),
+        Some(Json::Str(s)) if s == "both" => None,
+        Some(_) => return Err(bad("field 'fix' must be a boolean or \"both\"")),
+    };
+    let mut query = TuneQuery::new(budget)
+        .target(target)
+        .designs(designs)
+        .bitwidths(bitwidths_of(&j, vec![4, 8])?)
+        .fix(fix)
+        .workload(exhaustive_max_n, opt_u64(&j, "samples")?.unwrap_or(default_samples))
+        .hw_seed(opt_u64(&j, "seed")?.unwrap_or(default_seed));
+    if let Some(v) = opt_u64(&j, "hw_vectors")? {
+        query = query.hw_vectors(v);
+    }
+    query.validate()?;
+    Ok(TuneRequest { query, deadline: deadline_of(&j)? })
+}
+
+/// A tune answer as a response body: the library result's JSON image
+/// plus the backend identity and the degraded flag every answer-bearing
+/// response carries.
+pub fn tune_json(r: &crate::tune::TuneResult, backend: &str, degraded: bool) -> Json {
+    match r.to_json() {
+        Json::Obj(mut m) => {
+            m.insert("backend".to_string(), Json::from(backend));
+            m.insert("degraded".to_string(), Json::from(degraded));
+            m.insert("wall_ms".to_string(), Json::from(r.wall.as_secs_f64() * 1e3));
+            Json::Obj(m)
+        }
+        other => other,
+    }
 }
 
 /// The total `SegmulError → HTTP status` mapping. Client-caused classes
@@ -340,6 +431,48 @@ mod tests {
         assert!(parse_sweep(br#"{"bitwidths":[]}"#, 1).is_err());
         assert!(parse_sweep(br#"{"bitwidths":"x"}"#, 1).is_err());
         assert!(parse_sweep(br#"{"mc":"yes"}"#, 1).is_err());
+    }
+
+    #[test]
+    fn tune_defaults_and_overrides() {
+        use crate::tune::{BudgetMetric, TechTarget};
+        let req = parse_tune(br#"{"budget":"mred<=1e-3"}"#, 1000, 12, 7).unwrap();
+        assert_eq!(req.query.budget.metric, BudgetMetric::Mred);
+        assert_eq!(req.query.budget.max, 1e-3);
+        assert_eq!(req.query.target, TechTarget::Fpga);
+        assert_eq!(req.query.bitwidths, vec![4, 8]);
+        assert_eq!(req.query.mc_samples, 1000);
+        assert_eq!(req.query.hw_seed, 7);
+        assert!(req.query.fix.is_none() && req.deadline.is_none());
+        let req = parse_tune(
+            br#"{"budget":"psnr>=40","target":"asic","designs":"paper",
+                 "bitwidths":[8],"fix":true,"samples":500,"hw_vectors":64,
+                 "seed":9,"deadline_ms":250}"#,
+            1000,
+            12,
+            7,
+        )
+        .unwrap();
+        assert_eq!(req.query.budget.psnr_db, Some(40.0));
+        assert_eq!(req.query.target, TechTarget::Asic);
+        assert_eq!(req.query.bitwidths, vec![8]);
+        assert_eq!(req.query.fix, Some(true));
+        assert_eq!((req.query.mc_samples, req.query.hw_vectors, req.query.hw_seed), (500, 64, 9));
+        assert_eq!(req.deadline, Some(Duration::from_millis(250)));
+    }
+
+    #[test]
+    fn tune_rejections_are_typed_400s() {
+        let kind_status = |body: &[u8]| {
+            let e = parse_tune(body, 1000, 12, 0).unwrap_err();
+            (e.kind(), status_of(&e))
+        };
+        assert_eq!(kind_status(b"{}"), ("serve", 400));
+        assert_eq!(kind_status(br#"{"budget":"er<=1"}"#), ("config", 400));
+        assert_eq!(kind_status(br#"{"budget":"mred<=1e-3","target":"gpu"}"#), ("config", 400));
+        assert_eq!(kind_status(br#"{"budget":"mred<=1e-3","fix":"maybe"}"#), ("serve", 400));
+        assert_eq!(kind_status(br#"{"budget":"mred<=1e-3","bitwidths":[]}"#), ("serve", 400));
+        assert_eq!(kind_status(br#"{"budget":"mred<=1e-3","bitwidths":[40]}"#), ("spec", 400));
     }
 
     #[test]

@@ -28,6 +28,7 @@ use super::{fnv1a64, StoreKey, STORE_SCHEMA};
 /// backend name; the job itself is supplied by the requester).
 #[derive(Clone, Debug, PartialEq)]
 pub struct StoredResult {
+    /// The committed error statistics.
     pub stats: ErrorStats,
     /// Backend batch executions performed by the original run.
     pub batches: u64,

@@ -88,6 +88,7 @@ pub struct StoreKey {
 }
 
 impl StoreKey {
+    /// The canonical key for `job` under `backend` with batch size `batch`.
     pub fn new(job: &EvalJob, backend: &str, batch: usize) -> StoreKey {
         let key = job.key();
         // u64 fields (seeds especially) are serialized as decimal strings:
@@ -188,6 +189,7 @@ impl ResultStore {
         &self.faults
     }
 
+    /// The store's root directory.
     pub fn root(&self) -> &Path {
         &self.root
     }

@@ -16,23 +16,36 @@ use super::HwFigures;
 /// Per-cell characterization.
 #[derive(Clone, Copy, Debug)]
 pub struct Cell {
+    /// Cell area, µm².
     pub area_um2: f64,
+    /// Propagation delay, ps.
     pub delay_ps: f64,
+    /// Switching energy per output toggle, fJ.
     pub energy_fj: f64,
+    /// Leakage power, nW.
     pub leakage_nw: f64,
 }
 
 /// The cell library (45 nm-class constants).
 #[derive(Clone, Debug)]
 pub struct AsicModel {
+    /// Inverter.
     pub inv: Cell,
+    /// 2-input AND.
     pub and2: Cell,
+    /// 2-input OR.
     pub or2: Cell,
+    /// 2-input XOR.
     pub xor2: Cell,
+    /// 2-input NAND.
     pub nand2: Cell,
+    /// 2-input NOR.
     pub nor2: Cell,
+    /// 2-input XNOR.
     pub xnor2: Cell,
+    /// 2:1 multiplexer.
     pub mux2: Cell,
+    /// D flip-flop.
     pub dff: Cell,
     /// Clock-to-Q + setup charged on every register-to-register path.
     pub ff_overhead_ps: f64,
@@ -64,6 +77,7 @@ impl Default for AsicModel {
 }
 
 impl AsicModel {
+    /// The characterized cell for `kind`.
     pub fn cell(&self, kind: GateKind) -> Cell {
         match kind {
             GateKind::Not => self.inv,
@@ -200,8 +214,11 @@ impl DelayModel for AsicModel {
 /// ASIC evaluation report (Fig. 3b axes).
 #[derive(Clone, Debug)]
 pub struct AsicReport {
+    /// The common hardware figures.
     pub figures: HwFigures,
+    /// Standard cells instantiated.
     pub cells: usize,
+    /// Critical combinational path, ps.
     pub crit_path_ps: f64,
 }
 

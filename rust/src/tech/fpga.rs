@@ -157,9 +157,13 @@ impl DelayModel for FpgaDelay<'_> {
 /// FPGA evaluation report (Fig. 3a axes).
 #[derive(Clone, Debug)]
 pub struct FpgaReport {
+    /// The common hardware figures.
     pub figures: HwFigures,
+    /// LUTs used.
     pub luts: usize,
+    /// CARRY4 blocks used.
     pub carry4s: usize,
+    /// Critical combinational path, ps.
     pub crit_path_ps: f64,
 }
 

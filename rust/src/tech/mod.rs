@@ -41,6 +41,7 @@ pub struct HwFigures {
 }
 
 impl HwFigures {
+    /// Dynamic + static power, mW.
     pub fn total_power_mw(&self) -> f64 {
         self.dyn_power_mw + self.static_power_mw
     }

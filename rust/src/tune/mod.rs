@@ -1,0 +1,959 @@
+//! The accuracy-budget autotuner and Pareto explorer (`segmul tune`).
+//!
+//! The paper's contribution is accuracy *configurability*: the split
+//! point `t` trades error for carry-chain latency. This module closes
+//! the loop — instead of hand-picking `(design, n, t, fix)`, callers
+//! state an accuracy budget ([`Budget`]: `mred <= x`, `nmed <= x`,
+//! `wce <= x`, or a PSNR target mapped to MRED) and the tuner returns
+//! the cheapest configuration meeting it plus the full accuracy ×
+//! latency × area/power Pareto frontier.
+//!
+//! **Answer-source ladder** (the invariant: never evaluate the same
+//! point twice, and never dispatch the pool when a model can answer):
+//! every grid point's error metrics flow through
+//! [`crate::api::Session::run_outcome`], so the session's configured
+//! [`crate::coordinator::AnalyticMode`] decides the source —
+//! closed-form registry models first (`require` answers the full paper
+//! grid with **zero** pool dispatches), then the in-memory cache and
+//! the persistent [`crate::store::ResultStore`] when attached, and only
+//! then simulation on the worker pool. Hardware cost comes from the
+//! [`crate::tech`] FPGA/ASIC models over the generated gate-level
+//! netlist, with the paper's power-fairness convention: approximate
+//! points are power-evaluated at the accurate design's pinned clock
+//! while latency keeps each point's own achievable period.
+//!
+//! **Frontier definition**: a candidate is on the frontier iff no other
+//! candidate is at least as good in *every* objective (budget-metric
+//! error, latency, resource, total power) and strictly better in one —
+//! computed by [`pareto_frontier`], which the property suite
+//! cross-checks against brute force.
+//!
+//! ```
+//! use segmul::api::{AnalyticMode, Session};
+//! use segmul::tune::{tune, Budget, TuneQuery};
+//!
+//! // "Cheapest FPGA config with MRED at or below 1e-2, n = 8."
+//! let query = TuneQuery::new(Budget::parse("mred<=1e-2")?)
+//!     .bitwidths(vec![8])
+//!     .hw_vectors(64);
+//! let mut session = Session::builder()
+//!     .workers(1)
+//!     .analytic(AnalyticMode::Require) // closed forms: zero dispatches
+//!     .build()?;
+//! let result = tune(&mut session, &query)?;
+//! let best = result.winner().expect("the accurate point is always feasible");
+//! assert!(best.feasible);
+//! assert_eq!(session.jobs_evaluated(), 0); // nothing simulated
+//! # Ok::<(), segmul::api::SegmulError>(())
+//! ```
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::api::Session;
+use crate::error::metrics::ErrorMetrics;
+use crate::error::SegmulError;
+use crate::multiplier::{DesignSet, MultiplierSpec};
+use crate::netlist::generators::seq_mult::seq_mult;
+use crate::report::csv::{f, Table};
+use crate::tech::{measure_activity, AsicModel, FpgaModel, HwFigures};
+use crate::util::json::{obj, Json};
+
+/// Which error metric an accuracy budget bounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BudgetMetric {
+    /// Mean relative error distance (paper Eq. 8).
+    Mred,
+    /// Normalized mean error distance (paper Eq. 7).
+    Nmed,
+    /// Worst-case (maximum absolute) error.
+    Wce,
+}
+
+impl BudgetMetric {
+    /// Canonical lower-case name (`mred` / `nmed` / `wce`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BudgetMetric::Mred => "mred",
+            BudgetMetric::Nmed => "nmed",
+            BudgetMetric::Wce => "wce",
+        }
+    }
+
+    /// Extract this metric's value from a derived metric set.
+    pub fn value_of(&self, m: &ErrorMetrics) -> f64 {
+        match self {
+            BudgetMetric::Mred => m.mred,
+            BudgetMetric::Nmed => m.nmed,
+            BudgetMetric::Wce => m.mae as f64,
+        }
+    }
+}
+
+/// A parsed accuracy budget: "`metric` must not exceed `max`".
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Budget {
+    /// The bounded metric.
+    pub metric: BudgetMetric,
+    /// Inclusive upper bound on the metric.
+    pub max: f64,
+    /// When the budget was stated as a PSNR target (`psnr>=30`), the
+    /// original dB figure — kept for display; `metric`/`max` carry the
+    /// derived MRED bound.
+    pub psnr_db: Option<f64>,
+}
+
+impl Budget {
+    /// An MRED budget (`mred <= max`).
+    pub fn mred(max: f64) -> Budget {
+        Budget { metric: BudgetMetric::Mred, max, psnr_db: None }
+    }
+
+    /// An NMED budget (`nmed <= max`).
+    pub fn nmed(max: f64) -> Budget {
+        Budget { metric: BudgetMetric::Nmed, max, psnr_db: None }
+    }
+
+    /// A worst-case-error budget (`wce <= max`).
+    pub fn wce(max: f64) -> Budget {
+        Budget { metric: BudgetMetric::Wce, max, psnr_db: None }
+    }
+
+    /// Map a PSNR target (dB) to an MRED budget: treating MRED as the
+    /// relative RMS error proxy of the multiplier output, a signal
+    /// quality of `P` dB requires a relative error at or below
+    /// `10^(-P/20)` (e.g. 60 dB → MRED ≤ 1e-3).
+    pub fn from_psnr(db: f64) -> Budget {
+        Budget {
+            metric: BudgetMetric::Mred,
+            max: 10f64.powf(-db / 20.0),
+            psnr_db: Some(db),
+        }
+    }
+
+    /// Parse a budget expression: `mred<=1e-3`, `nmed<=0.01`,
+    /// `wce<=4096`, or `psnr>=30` (mapped through [`Budget::from_psnr`]).
+    /// A bare `=` is accepted in place of `<=` / `>=`. Anything else is a
+    /// typed [`SegmulError::Config`].
+    pub fn parse(s: &str) -> Result<Budget, SegmulError> {
+        let text: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        let bad = || {
+            SegmulError::config(format!(
+                "unparsable budget {s:?} (expected mred<=X, nmed<=X, wce<=X, or psnr>=X)"
+            ))
+        };
+        let (name, op, value) = ["<=", ">=", "="]
+            .iter()
+            .find_map(|op| text.split_once(op).map(|(a, b)| (a, *op, b)))
+            .ok_or_else(bad)?;
+        let value: f64 = value.parse().map_err(|_| bad())?;
+        if !value.is_finite() || value < 0.0 {
+            return Err(SegmulError::config(format!(
+                "budget bound {value} must be finite and non-negative"
+            )));
+        }
+        match (name, op) {
+            ("mred", "<=") | ("mred", "=") => Ok(Budget::mred(value)),
+            ("nmed", "<=") | ("nmed", "=") => Ok(Budget::nmed(value)),
+            ("wce", "<=") | ("wce", "=") => Ok(Budget::wce(value)),
+            ("psnr", ">=") | ("psnr", "=") => Ok(Budget::from_psnr(value)),
+            _ => Err(bad()),
+        }
+    }
+
+    /// Does a metric set satisfy this budget?
+    pub fn admits(&self, m: &ErrorMetrics) -> bool {
+        self.metric.value_of(m) <= self.max
+    }
+
+    /// Canonical display / coalesce form, e.g. `mred<=0.001` or
+    /// `psnr>=30 (mred<=0.0316...)`.
+    pub fn canonical(&self) -> String {
+        match self.psnr_db {
+            Some(db) => format!("psnr>={db} ({}<={})", self.metric.name(), self.max),
+            None => format!("{}<={}", self.metric.name(), self.max),
+        }
+    }
+}
+
+/// The hardware technology a tune query optimizes for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TechTarget {
+    /// The Xilinx-7-series-class FPGA model (LUTs as the resource).
+    #[default]
+    Fpga,
+    /// The 45 nm-class ASIC model (µm² as the resource).
+    Asic,
+}
+
+impl TechTarget {
+    /// Canonical lower-case name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TechTarget::Fpga => "fpga",
+            TechTarget::Asic => "asic",
+        }
+    }
+
+    /// Parse a CLI / wire name.
+    pub fn parse(s: &str) -> Result<TechTarget, SegmulError> {
+        match s.trim() {
+            "fpga" => Ok(TechTarget::Fpga),
+            "asic" => Ok(TechTarget::Asic),
+            other => {
+                Err(SegmulError::config(format!("unknown target {other:?} (fpga|asic)")))
+            }
+        }
+    }
+}
+
+/// One autotuning request: an accuracy budget plus grid constraints.
+///
+/// Defaults match the paper's evaluation: the full segmented grid
+/// ([`DesignSet::Paper`]) over `n ∈ {4, 8, 16, 32}`, both fix modes,
+/// FPGA target. Constructed with [`TuneQuery::new`] and narrowed with
+/// the builder-style setters.
+///
+/// ```
+/// use segmul::tune::{Budget, TechTarget, TuneQuery};
+///
+/// let q = TuneQuery::new(Budget::parse("psnr>=40")?)
+///     .target(TechTarget::Asic)
+///     .bitwidths(vec![8, 16])
+///     .fix(Some(true)); // only fix-to-1 configurations
+/// assert_eq!(q.specs().len(), 8 + 16); // t in 0..n, one fix mode each
+/// # Ok::<(), segmul::api::SegmulError>(())
+/// ```
+#[derive(Clone, Debug)]
+pub struct TuneQuery {
+    /// The accuracy budget candidate points must satisfy.
+    pub budget: Budget,
+    /// Hardware technology whose latency/area/power joins the frontier.
+    pub target: TechTarget,
+    /// Candidate operand bit-widths.
+    pub bitwidths: Vec<u32>,
+    /// Candidate design family set.
+    pub designs: DesignSet,
+    /// Restrict the segmented family to one fix mode (`None`: both).
+    pub fix: Option<bool>,
+    /// Largest `n` evaluated exhaustively when a point must simulate.
+    pub exhaustive_max_n: u32,
+    /// Monte-Carlo budget for simulated points above that.
+    pub mc_samples: u64,
+    /// Random-vector count for switching-activity (power) estimation.
+    pub hw_vectors: u64,
+    /// Seed for the activity vectors (error-metric seeds come from the
+    /// session, keeping tune answers store-key-compatible with sweeps).
+    pub hw_seed: u64,
+}
+
+impl TuneQuery {
+    /// A query with the default paper grid (see the type docs).
+    pub fn new(budget: Budget) -> TuneQuery {
+        TuneQuery {
+            budget,
+            target: TechTarget::Fpga,
+            bitwidths: vec![4, 8, 16, 32],
+            designs: DesignSet::Paper,
+            fix: None,
+            exhaustive_max_n: 12,
+            mc_samples: 1 << 20,
+            hw_vectors: 1024,
+            hw_seed: 0x5E6_0001,
+        }
+    }
+
+    /// Set the hardware target.
+    pub fn target(mut self, target: TechTarget) -> Self {
+        self.target = target;
+        self
+    }
+
+    /// Set the candidate bit-widths.
+    pub fn bitwidths(mut self, bitwidths: Vec<u32>) -> Self {
+        self.bitwidths = bitwidths;
+        self
+    }
+
+    /// Set the candidate design family set.
+    pub fn designs(mut self, designs: DesignSet) -> Self {
+        self.designs = designs;
+        self
+    }
+
+    /// Constrain the fix-to-1 mode (`None`: keep both).
+    pub fn fix(mut self, fix: Option<bool>) -> Self {
+        self.fix = fix;
+        self
+    }
+
+    /// Set the simulated-point workload split (exhaustive cutoff, MC
+    /// samples above it).
+    pub fn workload(mut self, exhaustive_max_n: u32, mc_samples: u64) -> Self {
+        self.exhaustive_max_n = exhaustive_max_n;
+        self.mc_samples = mc_samples;
+        self
+    }
+
+    /// Set the switching-activity vector count for power estimation.
+    pub fn hw_vectors(mut self, vectors: u64) -> Self {
+        self.hw_vectors = vectors;
+        self
+    }
+
+    /// Set the activity-vector seed.
+    pub fn hw_seed(mut self, seed: u64) -> Self {
+        self.hw_seed = seed;
+        self
+    }
+
+    /// The candidate grid, in deterministic order: the design set at
+    /// each bit-width, filtered by the fix constraint.
+    pub fn specs(&self) -> Vec<MultiplierSpec> {
+        let mut out = Vec::new();
+        for &n in &self.bitwidths {
+            for spec in self.designs.specs(n) {
+                if let Some(want) = self.fix {
+                    if spec.fix_mode().is_some_and(|fx| fx != want) {
+                        continue;
+                    }
+                }
+                out.push(spec);
+            }
+        }
+        out
+    }
+
+    /// Validate the grid constraints (typed errors, checked before any
+    /// evaluation starts).
+    pub fn validate(&self) -> Result<(), SegmulError> {
+        if self.bitwidths.is_empty() {
+            return Err(SegmulError::config("tune query has no bit-widths"));
+        }
+        if self.mc_samples == 0 {
+            return Err(SegmulError::config("tune mc_samples must be positive"));
+        }
+        if self.hw_vectors == 0 {
+            return Err(SegmulError::config("tune hw_vectors must be positive"));
+        }
+        for spec in self.specs() {
+            spec.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Canonical identity string: two queries with equal strings request
+    /// identical work (the serve layer's coalesce key for `/v1/tune`).
+    pub fn canonical(&self) -> String {
+        let widths: Vec<String> = self.bitwidths.iter().map(|n| n.to_string()).collect();
+        format!(
+            "tune|{}|{}|{}|n={}|fix={}|exh={}|mc={}|hwv={}|hws={}",
+            self.budget.canonical(),
+            self.target.name(),
+            self.designs.name(),
+            widths.join(","),
+            self.fix.map(|f| f.to_string()).unwrap_or_else(|| "both".into()),
+            self.exhaustive_max_n,
+            self.mc_samples,
+            self.hw_vectors,
+            self.hw_seed,
+        )
+    }
+}
+
+/// One explored configuration: error metrics, budget verdict, hardware
+/// join, answer provenance, and frontier membership.
+#[derive(Clone, Debug)]
+pub struct ParetoPoint {
+    /// The design configuration.
+    pub spec: MultiplierSpec,
+    /// Its error metric set (whichever source answered).
+    pub metrics: ErrorMetrics,
+    /// The budget metric's value for this point.
+    pub budget_value: f64,
+    /// Whether the point satisfies the query's budget.
+    pub feasible: bool,
+    /// Answer source: `"analytic"` or `"simulated"` (store and cache
+    /// hits are simulated answers served without re-evaluation).
+    pub source: &'static str,
+    /// Served from the in-memory cache or the persistent store.
+    pub cached: bool,
+    /// Technology estimates for the designs with a gate-level mapping
+    /// (the segmented family and the accurate reference); `None` for
+    /// families without a netlist generator, which then compete on
+    /// error alone and never enter the hardware frontier.
+    pub hw: Option<HwFigures>,
+    /// On the non-dominated (error × latency × resource × power) set.
+    pub frontier: bool,
+}
+
+impl ParetoPoint {
+    /// The point's objective vector (minimize every coordinate), when
+    /// it has a hardware mapping.
+    fn objectives(&self) -> Option<Vec<f64>> {
+        self.hw.as_ref().map(|h| {
+            vec![self.budget_value, h.latency_ns, h.resource, h.total_power_mw()]
+        })
+    }
+
+    /// JSON image (wire / report form).
+    pub fn to_json(&self, winner: bool) -> Json {
+        let mut fields = vec![
+            ("design", Json::from(self.spec.name().as_str())),
+            ("family", Json::from(self.spec.family())),
+            ("n", Json::from(self.spec.n() as u64)),
+        ];
+        if let Some(t) = self.spec.split_point() {
+            fields.push(("t", Json::from(t as u64)));
+        }
+        if let Some(fix) = self.spec.fix_mode() {
+            fields.push(("fix", Json::from(fix)));
+        }
+        fields.extend([
+            ("er", Json::from(self.metrics.er)),
+            ("nmed", Json::from(self.metrics.nmed)),
+            ("mred", Json::from(self.metrics.mred)),
+            ("wce", Json::from(self.metrics.mae)),
+            ("budget_value", Json::from(self.budget_value)),
+            ("feasible", Json::from(self.feasible)),
+            ("source", Json::from(self.source)),
+            ("cached", Json::from(self.cached)),
+            ("frontier", Json::from(self.frontier)),
+            ("winner", Json::from(winner)),
+        ]);
+        let hw = match &self.hw {
+            Some(h) => obj(vec![
+                ("latency_ns", Json::from(h.latency_ns)),
+                ("period_ns", Json::from(h.period_ns)),
+                ("resource", Json::from(h.resource)),
+                ("ffs", Json::from(h.ffs as u64)),
+                ("dyn_power_mw", Json::from(h.dyn_power_mw)),
+                ("total_power_mw", Json::from(h.total_power_mw())),
+            ]),
+            None => Json::Null,
+        };
+        fields.push(("hw", hw));
+        obj(fields)
+    }
+}
+
+/// The autotuner's answer: every explored point (frontier flagged), the
+/// winning configuration, and the answer-source accounting for this
+/// call.
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    /// The budget the query stated.
+    pub budget: Budget,
+    /// The hardware target the cost objectives came from.
+    pub target: TechTarget,
+    /// Every explored point, in deterministic grid order.
+    pub points: Vec<ParetoPoint>,
+    /// Index (into `points`) of the winning configuration, when any
+    /// point is feasible.
+    pub winner: Option<usize>,
+    /// Wall time of the whole tune call.
+    pub wall: Duration,
+    /// Points answered from closed forms (this call).
+    pub analytic_answers: u64,
+    /// Points answered from the persistent store (this call).
+    pub store_hits: u64,
+    /// Points answered from the in-memory cache (this call).
+    pub cache_hits: u64,
+    /// Points that dispatched the worker pool (this call).
+    pub jobs_evaluated: u64,
+}
+
+impl TuneResult {
+    /// The winning point: the cheapest feasible configuration.
+    pub fn winner(&self) -> Option<&ParetoPoint> {
+        self.winner.map(|i| &self.points[i])
+    }
+
+    /// The non-dominated points, in grid order.
+    pub fn frontier(&self) -> Vec<&ParetoPoint> {
+        self.points.iter().filter(|p| p.frontier).collect()
+    }
+
+    /// Count of budget-satisfying points.
+    pub fn feasible_count(&self) -> usize {
+        self.points.iter().filter(|p| p.feasible).count()
+    }
+
+    fn point_row(&self, i: usize, p: &ParetoPoint) -> Vec<String> {
+        let dash = || "-".to_string();
+        let hw = p.hw.as_ref();
+        vec![
+            p.spec.name(),
+            p.spec.n().to_string(),
+            p.spec.split_point().map(|t| t.to_string()).unwrap_or_else(dash),
+            p.spec.fix_mode().map(|fx| fx.to_string()).unwrap_or_else(dash),
+            f(p.metrics.er),
+            f(p.metrics.nmed),
+            f(p.metrics.mred),
+            p.metrics.mae.to_string(),
+            f(p.budget_value),
+            p.feasible.to_string(),
+            hw.map(|h| f(h.latency_ns)).unwrap_or_else(dash),
+            hw.map(|h| f(h.period_ns)).unwrap_or_else(dash),
+            hw.map(|h| f(h.resource)).unwrap_or_else(dash),
+            hw.map(|h| f(h.total_power_mw())).unwrap_or_else(dash),
+            p.source.to_string(),
+            (self.winner == Some(i)).to_string(),
+        ]
+    }
+
+    fn table_header() -> &'static [&'static str] {
+        &[
+            "design", "n", "t", "fix", "er", "nmed", "mred", "wce", "budget_value", "feasible",
+            "latency_ns", "period_ns", "resource", "total_power_mw", "source", "winner",
+        ]
+    }
+
+    /// The non-dominated set as a table — the `results/pareto.csv`
+    /// payload (every row is on the frontier; the winner is flagged).
+    pub fn frontier_table(&self) -> Table {
+        let mut t = Table::new(Self::table_header());
+        for (i, p) in self.points.iter().enumerate() {
+            if p.frontier {
+                t.row(self.point_row(i, p));
+            }
+        }
+        t
+    }
+
+    /// Every explored point as a table (the Pareto scatter: frontier
+    /// membership in the `frontier` column).
+    pub fn points_table(&self) -> Table {
+        let mut t = Table::new(&[
+            "design", "n", "t", "fix", "er", "nmed", "mred", "wce", "budget_value", "feasible",
+            "latency_ns", "period_ns", "resource", "total_power_mw", "source", "winner",
+            "frontier",
+        ]);
+        for (i, p) in self.points.iter().enumerate() {
+            let mut row = self.point_row(i, p);
+            row.push(p.frontier.to_string());
+            t.row(row);
+        }
+        t
+    }
+
+    /// JSON image: budget echo, winner, frontier, and source accounting
+    /// (the `/v1/tune` response body).
+    pub fn to_json(&self) -> Json {
+        let frontier: Vec<Json> = self
+            .points
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.frontier)
+            .map(|(i, p)| p.to_json(self.winner == Some(i)))
+            .collect();
+        obj(vec![
+            ("budget", Json::from(self.budget.canonical().as_str())),
+            ("budget_metric", Json::from(self.budget.metric.name())),
+            ("budget_max", Json::from(self.budget.max)),
+            ("target", Json::from(self.target.name())),
+            ("points", Json::from(self.points.len() as u64)),
+            ("feasible", Json::from(self.feasible_count() as u64)),
+            (
+                "winner",
+                match self.winner {
+                    Some(i) => self.points[i].to_json(true),
+                    None => Json::Null,
+                },
+            ),
+            ("frontier", Json::Arr(frontier)),
+            ("analytic_answers", Json::from(self.analytic_answers)),
+            ("store_hits", Json::from(self.store_hits)),
+            ("cache_hits", Json::from(self.cache_hits)),
+            ("jobs_evaluated", Json::from(self.jobs_evaluated)),
+        ])
+    }
+}
+
+/// `a` dominates `b`: at least as good (≤, minimizing) in every
+/// objective, strictly better in one. Any NaN coordinate disqualifies
+/// `a` from dominating.
+fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x.is_nan() || x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// The non-dominated mask of a set of objective vectors (all the same
+/// arity, every coordinate minimized): `out[i]` is `true` iff no other
+/// vector dominates vector `i`. Duplicate vectors are all kept (none
+/// strictly beats its twin). A vector containing NaN is never on the
+/// frontier and never eliminates another. O(n²) pairwise — exact, and
+/// the property suite cross-checks it against an independent
+/// brute-force at small sizes.
+pub fn pareto_frontier(objectives: &[Vec<f64>]) -> Vec<bool> {
+    let mut mask = vec![true; objectives.len()];
+    for (i, a) in objectives.iter().enumerate() {
+        if a.iter().any(|v| v.is_nan()) {
+            mask[i] = false;
+            continue;
+        }
+        for (j, b) in objectives.iter().enumerate() {
+            if i != j && dominates(b, a) {
+                mask[i] = false;
+                break;
+            }
+        }
+    }
+    mask
+}
+
+/// The gate-level mapping of a spec, for the technology join: the
+/// segmented family (word-level, bit-level oracle, and netlist forms
+/// all map to the same generated circuit) and the accurate reference
+/// (`t = 0`). `None` for the related-work baselines — the repo carries
+/// no netlist generators for them.
+fn netlist_params(spec: &MultiplierSpec) -> Option<(u32, u32, bool)> {
+    match *spec {
+        MultiplierSpec::Segmented { n, t, fix }
+        | MultiplierSpec::BitLevel { n, t, fix }
+        | MultiplierSpec::Netlist { n, t, fix } => {
+            // The zero-bit LSP adder cannot raise the compensated carry:
+            // fix is meaningless at t = 0 and the generator rejects it.
+            Some((n, t, fix && t >= 1))
+        }
+        MultiplierSpec::Accurate { n } => Some((n, 0, false)),
+        _ => None,
+    }
+}
+
+/// Per-call hardware estimator with the accurate-period pin cache (the
+/// paper's power-fairness convention, shared with
+/// [`crate::report::figures::hw_sweep`]).
+struct HwEstimator {
+    target: TechTarget,
+    vectors: u64,
+    seed: u64,
+    base_period: HashMap<u32, f64>,
+}
+
+impl HwEstimator {
+    fn new(query: &TuneQuery) -> HwEstimator {
+        HwEstimator {
+            target: query.target,
+            vectors: query.hw_vectors,
+            seed: query.hw_seed,
+            base_period: HashMap::new(),
+        }
+    }
+
+    fn evaluate(&self, n: u32, t: u32, fix: bool, pin: Option<f64>) -> HwFigures {
+        let c = seq_mult(n, t, fix);
+        let act = measure_activity(&c, self.vectors, self.seed ^ n as u64, fix);
+        let cycles = n + 1;
+        match self.target {
+            TechTarget::Fpga => FpgaModel::default().evaluate(&c.nl, &act, cycles, pin).figures,
+            TechTarget::Asic => AsicModel::default().evaluate(&c.nl, &act, cycles, pin).figures,
+        }
+    }
+
+    /// The accurate design's minimum period at `n` (computed once per
+    /// bit-width; every approximate point's power clock pins to it).
+    fn accurate_period(&mut self, n: u32) -> f64 {
+        if let Some(&p) = self.base_period.get(&n) {
+            return p;
+        }
+        let p = self.evaluate(n, 0, false, None).period_ns;
+        self.base_period.insert(n, p);
+        p
+    }
+
+    fn estimate(&mut self, spec: &MultiplierSpec) -> Option<HwFigures> {
+        let (n, t, fix) = netlist_params(spec)?;
+        if n < 2 {
+            return None; // the generator needs a two-bit datapath
+        }
+        if t == 0 {
+            // The accurate baseline itself: its own minimum period.
+            return Some(self.evaluate(n, 0, false, None));
+        }
+        let pin = self.accurate_period(n);
+        let mut fig = self.evaluate(n, t, fix, Some(pin));
+        // Power was billed at the pinned common clock; latency keeps the
+        // point's own achievable period.
+        fig.latency_ns = (n + 1) as f64 * fig.period_ns;
+        Some(fig)
+    }
+}
+
+/// Winner ordering among feasible points: hardware-mapped points beat
+/// unmapped ones; within the mapped set, minimize latency, then
+/// resource, then total power, then the budget metric. Without any
+/// mapped candidate (error-only families), minimize the budget metric,
+/// then ER. NaN orders last throughout.
+fn better_winner(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    fn lex(a: &[f64], b: &[f64]) -> std::cmp::Ordering {
+        for (x, y) in a.iter().zip(b) {
+            let ord = x
+                .partial_cmp(y)
+                .unwrap_or_else(|| x.is_nan().cmp(&y.is_nan()));
+            if ord != std::cmp::Ordering::Equal {
+                return ord;
+            }
+        }
+        std::cmp::Ordering::Equal
+    }
+    match (&a.hw, &b.hw) {
+        (Some(ha), Some(hb)) => {
+            lex(
+                &[ha.latency_ns, ha.resource, ha.total_power_mw(), a.budget_value],
+                &[hb.latency_ns, hb.resource, hb.total_power_mw(), b.budget_value],
+            ) == std::cmp::Ordering::Less
+        }
+        (Some(_), None) => true,
+        (None, Some(_)) => false,
+        (None, None) => {
+            lex(&[a.budget_value, a.metrics.er], &[b.budget_value, b.metrics.er])
+                == std::cmp::Ordering::Less
+        }
+    }
+}
+
+/// Run the autotuner: enumerate the query's grid, answer error metrics
+/// through the session's answer-source ladder (analytic → cache/store →
+/// simulate), join the technology estimates, mark the non-dominated
+/// frontier, and pick the cheapest feasible configuration. See the
+/// module docs for the guarantees; the session's
+/// [`crate::coordinator::AnalyticMode`] decides how much (if anything)
+/// is simulated.
+pub fn tune(session: &mut Session, query: &TuneQuery) -> Result<TuneResult, SegmulError> {
+    let start = Instant::now();
+    query.validate()?;
+    let (analytic0, store0, cache0, eval0) = (
+        session.analytic_answers(),
+        session.store_hits(),
+        session.cache_hits(),
+        session.jobs_evaluated(),
+    );
+    let mut hw = HwEstimator::new(query);
+    let mut points: Vec<ParetoPoint> = Vec::new();
+    for spec in query.specs() {
+        let builder = session.job(spec);
+        let job = if spec.n() <= query.exhaustive_max_n {
+            builder.exhaustive().build()?
+        } else {
+            builder.monte_carlo(query.mc_samples).build()?
+        };
+        let outcome = session.run_outcome(&job)?;
+        let metrics = outcome.metrics()?;
+        let budget_value = query.budget.metric.value_of(&metrics);
+        points.push(ParetoPoint {
+            spec,
+            budget_value,
+            feasible: query.budget.admits(&metrics),
+            source: outcome.source(),
+            cached: outcome.cached,
+            hw: hw.estimate(&spec),
+            metrics,
+            frontier: false,
+        });
+    }
+    // Frontier over the hardware-mapped subset (mixed objective arity
+    // has no domination order); unmapped points never enter it.
+    let mapped: Vec<usize> =
+        (0..points.len()).filter(|&i| points[i].hw.is_some()).collect();
+    let objectives: Vec<Vec<f64>> = mapped
+        .iter()
+        .map(|&i| points[i].objectives().expect("mapped point has objectives"))
+        .collect();
+    for (k, on) in pareto_frontier(&objectives).into_iter().enumerate() {
+        points[mapped[k]].frontier = on;
+    }
+    let winner = points
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.feasible)
+        .fold(None::<usize>, |best, (i, p)| match best {
+            Some(b) if !better_winner(p, &points[b]) => Some(b),
+            _ => Some(i),
+        });
+    Ok(TuneResult {
+        budget: query.budget,
+        target: query.target,
+        points,
+        winner,
+        wall: start.elapsed(),
+        analytic_answers: session.analytic_answers() - analytic0,
+        store_hits: session.store_hits() - store0,
+        cache_hits: session.cache_hits() - cache0,
+        jobs_evaluated: session.jobs_evaluated() - eval0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::AnalyticMode;
+
+    fn fast_query(budget: Budget) -> TuneQuery {
+        TuneQuery::new(budget).bitwidths(vec![8]).hw_vectors(64)
+    }
+
+    fn analytic_session() -> Session {
+        Session::builder()
+            .workers(1)
+            .analytic(AnalyticMode::Require)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn budget_grammar() {
+        let b = Budget::parse("mred<=1e-3").unwrap();
+        assert_eq!(b.metric, BudgetMetric::Mred);
+        assert_eq!(b.max, 1e-3);
+        assert_eq!(Budget::parse(" nmed <= 0.01 ").unwrap().metric, BudgetMetric::Nmed);
+        assert_eq!(Budget::parse("wce=4096").unwrap().max, 4096.0);
+        let p = Budget::parse("psnr>=60").unwrap();
+        assert_eq!(p.metric, BudgetMetric::Mred);
+        assert!((p.max - 1e-3).abs() < 1e-12, "{}", p.max);
+        assert_eq!(p.psnr_db, Some(60.0));
+        for bad in ["mred>=1", "psnr<=30", "er<=0.5", "mred<=x", "mred<=-1", ""] {
+            assert_eq!(Budget::parse(bad).unwrap_err().kind(), "config", "{bad}");
+        }
+    }
+
+    #[test]
+    fn frontier_keeps_non_dominated_and_drops_dominated() {
+        let objs = vec![
+            vec![1.0, 5.0], // frontier
+            vec![5.0, 1.0], // frontier
+            vec![2.0, 2.0], // frontier (incomparable with both)
+            vec![5.0, 5.0], // dominated by all three
+            vec![1.0, 5.0], // duplicate of 0: kept
+            vec![f64::NAN, 0.0], // NaN: never on the frontier
+        ];
+        assert_eq!(pareto_frontier(&objs), vec![true, true, true, false, true, false]);
+        assert!(pareto_frontier(&[]).is_empty());
+    }
+
+    #[test]
+    fn tune_paper_grid_is_simulation_free_and_consistent() {
+        let mut s = analytic_session();
+        let r = tune(&mut s, &fast_query(Budget::mred(1e-3))).unwrap();
+        assert_eq!(r.points.len(), 16, "n=8 paper grid: t in 0..8 x fix");
+        assert_eq!(r.jobs_evaluated, 0, "require mode must not dispatch");
+        assert_eq!(r.analytic_answers as usize + r.cache_hits as usize, r.points.len());
+        // Every point got a hardware join; the frontier is non-empty and
+        // mutually consistent with the flags.
+        assert!(r.points.iter().all(|p| p.hw.is_some()));
+        assert!(!r.frontier().is_empty());
+        // The accurate point (t=0) is always feasible, so there is a winner.
+        let w = r.winner().expect("winner");
+        assert!(w.feasible);
+        assert!(w.budget_value <= 1e-3);
+        // Winner latency: no other feasible point is strictly faster.
+        let wl = w.hw.as_ref().unwrap().latency_ns;
+        for p in r.points.iter().filter(|p| p.feasible) {
+            assert!(p.hw.as_ref().unwrap().latency_ns >= wl - 1e-9);
+        }
+    }
+
+    #[test]
+    fn looser_budget_never_raises_winner_latency() {
+        let mut s = analytic_session();
+        let tight = tune(&mut s, &fast_query(Budget::mred(1e-4))).unwrap();
+        let loose = tune(&mut s, &fast_query(Budget::mred(1e-1))).unwrap();
+        let lt = tight.winner().unwrap().hw.as_ref().unwrap().latency_ns;
+        let ll = loose.winner().unwrap().hw.as_ref().unwrap().latency_ns;
+        assert!(ll <= lt + 1e-9, "loose {ll} vs tight {lt}");
+        assert!(loose.feasible_count() >= tight.feasible_count());
+    }
+
+    #[test]
+    fn fix_constraint_filters_the_grid() {
+        let q = fast_query(Budget::mred(1.0)).fix(Some(true));
+        // t=0 has fix=false and fix=true variants; the filter keeps 8.
+        assert_eq!(q.specs().len(), 8);
+        assert!(q.specs().iter().all(|s| s.fix_mode() == Some(true)));
+    }
+
+    #[test]
+    fn error_only_families_tune_without_hardware() {
+        let mut s = analytic_session();
+        let q = TuneQuery::new(Budget::nmed(0.5))
+            .designs(DesignSet::Baselines)
+            .bitwidths(vec![8]);
+        let r = tune(&mut s, &q).unwrap();
+        assert!(!r.points.is_empty());
+        assert!(r.points.iter().all(|p| p.hw.is_none()));
+        assert!(r.frontier().is_empty(), "no hardware mapping, no frontier");
+        // Degenerate winner: minimal budget-metric value among feasible.
+        let w = r.winner().expect("all baselines admit nmed<=0.5");
+        for p in r.points.iter().filter(|p| p.feasible) {
+            assert!(w.budget_value <= p.budget_value + 1e-12);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_yields_no_winner() {
+        let mut s = analytic_session();
+        // A bound below zero admits nothing (parse rejects it, so build
+        // the Budget directly to reach the no-winner path).
+        let q = fast_query(Budget {
+            metric: BudgetMetric::Wce,
+            max: -1.0,
+            psnr_db: None,
+        });
+        let r = tune(&mut s, &q).unwrap();
+        assert_eq!(r.feasible_count(), 0);
+        assert!(r.winner().is_none());
+        assert!(!r.frontier().is_empty(), "frontier is budget-independent");
+    }
+
+    #[test]
+    fn result_tables_and_json_are_consistent() {
+        let mut s = analytic_session();
+        let r = tune(&mut s, &fast_query(Budget::mred(1e-2))).unwrap();
+        let ft = r.frontier_table();
+        assert_eq!(ft.rows.len(), r.frontier().len());
+        let winner_col = ft.header.iter().position(|h| h == "winner").unwrap();
+        let pt = r.points_table();
+        assert_eq!(pt.rows.len(), r.points.len());
+        let j = r.to_json();
+        assert_eq!(j.get("points").unwrap().as_u64(), Some(r.points.len() as u64));
+        assert_eq!(
+            j.get("frontier").unwrap().as_arr().unwrap().len(),
+            r.frontier().len()
+        );
+        assert_eq!(j.get("jobs_evaluated").unwrap().as_u64(), Some(0));
+        // The winner appears in the JSON and (when on the frontier) in
+        // the frontier table exactly once.
+        assert!(j.get("winner").unwrap().get("design").is_some());
+        let winners = ft.rows.iter().filter(|row| row[winner_col] == "true").count();
+        assert!(winners <= 1);
+    }
+
+    #[test]
+    fn query_canonical_is_stable_identity() {
+        let a = fast_query(Budget::mred(1e-3));
+        let b = fast_query(Budget::mred(1e-3));
+        assert_eq!(a.canonical(), b.canonical());
+        assert_ne!(
+            a.canonical(),
+            fast_query(Budget::mred(2e-3)).canonical()
+        );
+        assert_ne!(a.canonical(), a.clone().target(TechTarget::Asic).canonical());
+    }
+
+    #[test]
+    fn invalid_queries_are_typed_errors() {
+        let e = TuneQuery::new(Budget::mred(1.0)).bitwidths(vec![]).validate().unwrap_err();
+        assert_eq!(e.kind(), "config");
+        let e = TuneQuery::new(Budget::mred(1.0)).bitwidths(vec![40]).validate().unwrap_err();
+        assert_eq!(e.kind(), "spec");
+    }
+}

@@ -10,9 +10,13 @@ use anyhow::{anyhow, bail, Result};
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The first bare argument (`segmul <subcommand>`).
     pub subcommand: Option<String>,
+    /// Bare arguments after the subcommand.
     pub positional: Vec<String>,
+    /// `--name value` pairs (last occurrence wins).
     pub options: BTreeMap<String, String>,
+    /// Bare `--name` switches.
     pub flags: Vec<String>,
 }
 
@@ -43,18 +47,22 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse `std::env::args`.
     pub fn from_env() -> Result<Args> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Whether bare switch `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// The value of `--name value`, if present.
     pub fn opt(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// `--name` parsed as `u64` (typed config error on garbage).
     pub fn opt_u64(&self, name: &str) -> Result<Option<u64>> {
         self.opt(name)
             .map(|v| {
@@ -65,10 +73,12 @@ impl Args {
             .transpose()
     }
 
+    /// `--name` parsed as `u32`.
     pub fn opt_u32(&self, name: &str) -> Result<Option<u32>> {
         Ok(self.opt_u64(name)?.map(|v| v as u32))
     }
 
+    /// `--name` parsed as `f64`.
     pub fn opt_f64(&self, name: &str) -> Result<Option<f64>> {
         self.opt(name)
             .map(|v| v.parse::<f64>().map_err(|_| anyhow!("--{name} expects a float, got {v:?}")))

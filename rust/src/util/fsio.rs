@@ -1,0 +1,86 @@
+//! Atomic file writes: the tmp + rename idiom of the result store
+//! (`crate::store`), shared so report writers never leave a torn file.
+//!
+//! Invariant: a reader at `path` sees either the previous complete
+//! contents or the new complete contents — never a prefix. The bytes are
+//! first written to a process-unique sibling under the same directory
+//! (same filesystem, so the rename cannot degrade to a copy), then
+//! [`std::fs::rename`]d into place, which POSIX guarantees is atomic.
+
+use std::path::Path;
+
+use crate::error::SegmulError;
+
+/// Write `bytes` to `path` atomically (tmp sibling + rename), creating
+/// parent directories as needed. Failures are typed [`SegmulError::Io`]
+/// naming the destination; the destination is never left truncated —
+/// at worst an orphaned `.tmp` sibling remains, which a retry overwrites.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<(), SegmulError> {
+    let parent = path.parent().filter(|p| !p.as_os_str().is_empty());
+    if let Some(dir) = parent {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            SegmulError::Io(format!("creating {}: {e}", dir.display()))
+        })?;
+    }
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| SegmulError::Io(format!("{}: not a file path", path.display())))?;
+    let mut tmp_name = file_name.to_os_string();
+    tmp_name.push(format!(".{}.tmp", std::process::id()));
+    let tmp = path.with_file_name(tmp_name);
+    std::fs::write(&tmp, bytes)
+        .and_then(|_| std::fs::rename(&tmp, path))
+        .map_err(|e| {
+            // Never leave the torn tmp behind on failure.
+            let _ = std::fs::remove_file(&tmp);
+            SegmulError::Io(format!("writing {}: {e}", path.display()))
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("segmul-fsio-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn writes_and_overwrites_through_rename() {
+        let dir = tmpdir("basic");
+        let path = dir.join("nested").join("out.csv");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        // No tmp siblings survive a successful write.
+        let leftovers: Vec<_> = std::fs::read_dir(path.parent().unwrap())
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn failure_is_typed_io_and_leaves_no_tmp() {
+        let dir = tmpdir("fail");
+        std::fs::create_dir_all(&dir).unwrap();
+        // Destination is a directory: the rename must fail.
+        let path = dir.join("blocked");
+        std::fs::create_dir_all(&path).unwrap();
+        let e = write_atomic(&path, b"x").unwrap_err();
+        assert_eq!(e.kind(), "io");
+        assert!(e.to_string().contains("blocked"), "{e}");
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

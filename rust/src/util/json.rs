@@ -12,17 +12,26 @@ use std::fmt;
 /// is deterministic — handy for golden tests.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`
     Null,
+    /// `true` / `false`
     Bool(bool),
+    /// Any number (f64 — integers above 2^53 may round).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (keys sorted).
     Obj(BTreeMap<String, Json>),
 }
 
 #[derive(Debug)]
+/// Parse failure with its byte position.
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset in the source.
     pub pos: usize,
 }
 
@@ -35,6 +44,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse one JSON document (trailing garbage is an error).
     pub fn parse(src: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: src.as_bytes(), i: 0 };
         p.ws();
@@ -48,6 +58,7 @@ impl Json {
 
     // -- typed accessors -------------------------------------------------
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -55,6 +66,7 @@ impl Json {
         }
     }
 
+    /// The value as an exact `u64`, if this is a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|f| {
             if f >= 0.0 && f.fract() == 0.0 && f <= u64::MAX as f64 {
@@ -65,6 +77,7 @@ impl Json {
         })
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -72,6 +85,7 @@ impl Json {
         }
     }
 
+    /// The boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -79,6 +93,7 @@ impl Json {
         }
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -86,6 +101,7 @@ impl Json {
         }
     }
 
+    /// Object field `key`, if present.
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),

@@ -3,6 +3,7 @@
 //! lightweight property-testing helper.
 
 pub mod cli;
+pub mod fsio;
 pub mod json;
 pub mod prop;
 pub mod rng;

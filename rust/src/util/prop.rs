@@ -9,7 +9,9 @@ use super::rng::Xoshiro256;
 
 /// A deterministic case driver: `n_cases` random trials from `seed`.
 pub struct Cases {
+    /// Base seed; every case derives its own stream from it.
     pub seed: u64,
+    /// Number of cases to run.
     pub n_cases: usize,
 }
 
@@ -20,6 +22,7 @@ impl Default for Cases {
 }
 
 impl Cases {
+    /// A driver with explicit seed and case count.
     pub fn new(seed: u64, n_cases: usize) -> Self {
         Self { seed, n_cases }
     }

@@ -44,6 +44,7 @@ impl Xoshiro256 {
     }
 
     #[inline]
+    /// Next 64 uniformly random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)

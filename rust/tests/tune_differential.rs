@@ -1,0 +1,241 @@
+//! Differential + property validation of the `tune` autotuner.
+//!
+//! Property tier — `pareto_frontier` is cross-checked against an
+//! independent brute-force implementation of the domination definition
+//! on randomized small objective sets (ties, duplicates, and NaN
+//! coordinates included): the returned mask must be exactly the set of
+//! non-dominated NaN-free points, which makes it both mutually
+//! non-dominated and complete.
+//!
+//! Differential tier — on the exact-model families (the related-work
+//! baselines and the accurate reference at exhaustive bit-widths) a
+//! tune answered entirely in closed form (`--analytic require`, zero
+//! pool dispatches) must agree with the same tune answered by
+//! store-backed simulation: same grid, same winner, same frontier
+//! membership, per-point metrics bit-consistent. A second store-backed
+//! run must answer every point from disk without re-evaluating.
+
+use segmul::api::{AnalyticMode, DesignSet, Session};
+use segmul::tune::{pareto_frontier, tune, Budget, TuneQuery, TuneResult};
+use segmul::util::prop::Cases;
+
+// ---------------------------------------------------------------------
+// Property tier: pareto_frontier vs brute force
+// ---------------------------------------------------------------------
+
+/// The mathematical definition, written independently of the library
+/// code: `a` dominates `b` iff `a` is NaN-free, `a ≤ b` in every
+/// objective, and `a < b` in at least one.
+fn brute_dominates(a: &[f64], b: &[f64]) -> bool {
+    if a.iter().any(|v| v.is_nan()) {
+        return false;
+    }
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if !(x <= y) && !y.is_nan() {
+            return false;
+        }
+        if *x < *y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Brute-force frontier: every NaN-free point no other point dominates.
+fn brute_frontier(objectives: &[Vec<f64>]) -> Vec<bool> {
+    (0..objectives.len())
+        .map(|i| {
+            !objectives[i].iter().any(|v| v.is_nan())
+                && !objectives
+                    .iter()
+                    .enumerate()
+                    .any(|(j, b)| j != i && brute_dominates(b, &objectives[i]))
+        })
+        .collect()
+}
+
+#[test]
+fn frontier_matches_brute_force_on_random_sets() {
+    Cases::new(0x7A_0E70, 400).run(|rng, _| {
+        let n_points = rng.next_below(13) as usize;
+        let dims = 1 + rng.next_below(4) as usize;
+        // Coordinates from a small discrete set force ties and exact
+        // duplicates; a sprinkling of NaN exercises the disqualification
+        // rule on both sides of the comparison.
+        let objectives: Vec<Vec<f64>> = (0..n_points)
+            .map(|_| {
+                (0..dims)
+                    .map(|_| {
+                        if rng.next_below(8) == 0 {
+                            f64::NAN
+                        } else {
+                            rng.next_below(4) as f64
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+
+        let mask = pareto_frontier(&objectives);
+        assert_eq!(mask, brute_frontier(&objectives), "objectives: {objectives:?}");
+
+        // Mutual non-domination within the returned frontier.
+        for (i, a) in objectives.iter().enumerate() {
+            for (j, b) in objectives.iter().enumerate() {
+                if i != j && mask[i] && mask[j] {
+                    assert!(
+                        !brute_dominates(a, b),
+                        "frontier point {a:?} dominates frontier point {b:?}"
+                    );
+                }
+            }
+        }
+        // Completeness: every non-dominated NaN-free input is kept.
+        for (i, a) in objectives.iter().enumerate() {
+            let nan_free = !a.iter().any(|v| v.is_nan());
+            let undominated = !objectives
+                .iter()
+                .enumerate()
+                .any(|(j, b)| j != i && brute_dominates(b, a));
+            if nan_free && undominated {
+                assert!(mask[i], "non-dominated point {a:?} dropped from the frontier");
+            }
+        }
+    });
+}
+
+#[test]
+fn frontier_edge_cases() {
+    // Empty input, exact duplicates (both kept), and an all-NaN point.
+    assert!(pareto_frontier(&[]).is_empty());
+    let twins = vec![vec![1.0, 2.0], vec![1.0, 2.0], vec![2.0, 3.0]];
+    assert_eq!(pareto_frontier(&twins), vec![true, true, false]);
+    assert_eq!(pareto_frontier(&[vec![f64::NAN]]), vec![false]);
+    // A NaN point must not eliminate a finite one it "beats" elsewhere.
+    let mixed = vec![vec![0.0, f64::NAN], vec![5.0, 5.0]];
+    assert_eq!(pareto_frontier(&mixed), vec![false, true]);
+}
+
+// ---------------------------------------------------------------------
+// Differential tier: analytic require vs store-backed simulation
+// ---------------------------------------------------------------------
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    if b == 0.0 {
+        a.abs()
+    } else {
+        (a - b).abs() / b.abs()
+    }
+}
+
+/// The two answer paths must describe the same grid identically: the
+/// exact models make per-point metrics bit-consistent, so feasibility,
+/// frontier membership, and the winning spec all coincide.
+fn assert_tunes_agree(ana: &TuneResult, sim: &TuneResult) {
+    assert_eq!(ana.points.len(), sim.points.len());
+    for (a, s) in ana.points.iter().zip(&sim.points) {
+        let name = a.spec.name();
+        assert_eq!(a.spec, s.spec, "grid order diverged");
+        assert!(
+            (a.metrics.er - s.metrics.er).abs() < 1e-12,
+            "{name}: ER {} vs {}",
+            a.metrics.er,
+            s.metrics.er
+        );
+        assert!(
+            (a.metrics.med_abs - s.metrics.med_abs).abs() < 1e-6 * (1.0 + s.metrics.med_abs),
+            "{name}: MED {} vs {}",
+            a.metrics.med_abs,
+            s.metrics.med_abs
+        );
+        assert_eq!(a.metrics.mae, s.metrics.mae, "{name}: WCE");
+        assert!(
+            rel_err(a.metrics.mred, s.metrics.mred) < 1e-5,
+            "{name}: MRED {} vs {}",
+            a.metrics.mred,
+            s.metrics.mred
+        );
+        assert_eq!(a.feasible, s.feasible, "{name}: feasibility flipped");
+        assert_eq!(a.frontier, s.frontier, "{name}: frontier membership flipped");
+        assert_eq!(a.hw.is_some(), s.hw.is_some(), "{name}: technology join diverged");
+    }
+    assert_eq!(
+        ana.winner().map(|p| p.spec),
+        sim.winner().map(|p| p.spec),
+        "the two answer paths crowned different winners"
+    );
+}
+
+#[test]
+fn analytic_tune_matches_store_backed_simulation_on_exact_families() {
+    let dir = std::env::temp_dir()
+        .join(format!("segmul-tune-diff-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    for designs in [DesignSet::Baselines, DesignSet::Accurate] {
+        // A budget wide enough that the exact families stay feasible on
+        // both paths with margin (no threshold within 1e-6 of a value).
+        let query = TuneQuery::new(Budget::mred(0.5))
+            .bitwidths(vec![4, 8])
+            .designs(designs)
+            .hw_vectors(64);
+
+        let mut fast = Session::builder()
+            .workers(1)
+            .analytic(AnalyticMode::Require)
+            .build()
+            .unwrap();
+        let ana = tune(&mut fast, &query).unwrap();
+        assert_eq!(ana.jobs_evaluated, 0, "require mode must not dispatch the pool");
+        assert_eq!(ana.analytic_answers, ana.points.len() as u64);
+        assert!(ana.winner().is_some(), "{}: wide budget must admit a winner", designs.name());
+
+        let mut stored = Session::builder()
+            .workers(2)
+            .store(&dir)
+            .build()
+            .unwrap();
+        let sim = tune(&mut stored, &query).unwrap();
+        assert_eq!(sim.analytic_answers, 0);
+        assert_eq!(sim.jobs_evaluated, sim.points.len() as u64, "cold store evaluates everything");
+
+        assert_tunes_agree(&ana, &sim);
+
+        // Warm pass in a fresh process-independent session: every answer
+        // comes off disk, nothing is re-evaluated, and the result is
+        // unchanged — the ladder's "slower, never wrong" contract.
+        let mut warm = Session::builder()
+            .workers(2)
+            .store(&dir)
+            .build()
+            .unwrap();
+        let replay = tune(&mut warm, &query).unwrap();
+        assert_eq!(replay.jobs_evaluated, 0, "warm store must answer without the pool");
+        assert_eq!(replay.store_hits, replay.points.len() as u64);
+        assert_tunes_agree(&sim, &replay);
+    }
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn tight_budget_agrees_across_answer_paths() {
+    // Near the threshold the two paths must still agree on which points
+    // pass: the exact models differ by < 1e-12, far inside the margin
+    // between any baseline's MRED and this cutoff.
+    let query = TuneQuery::new(Budget::parse("mred<=1e-2").unwrap())
+        .bitwidths(vec![8])
+        .designs(DesignSet::Baselines)
+        .hw_vectors(64);
+    let mut fast = Session::builder()
+        .workers(1)
+        .analytic(AnalyticMode::Require)
+        .build()
+        .unwrap();
+    let mut slow = Session::builder().workers(2).build().unwrap();
+    let ana = tune(&mut fast, &query).unwrap();
+    let sim = tune(&mut slow, &query).unwrap();
+    assert_eq!(ana.feasible_count(), sim.feasible_count());
+    assert_tunes_agree(&ana, &sim);
+}
